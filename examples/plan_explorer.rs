@@ -1,0 +1,94 @@
+//! Plan explorer: sweep all four evaluation models × batch sizes across
+//! both platforms, printing Pareto frontiers, recommendations and the
+//! baseline comparison — the "what should I deploy?" workflow.
+//!
+//!     cargo run --release --example plan_explorer [-- <model>]
+
+use funcpipe::baselines::{evaluate_baseline, BaselineKind};
+use funcpipe::model::{merge_layers, zoo, MergeCriterion};
+use funcpipe::planner::{pareto_front, recommend, sweep, CoOptimizer, DEFAULT_WEIGHTS};
+use funcpipe::platform::pricing::{C5_9XLARGE, R7_2XLARGE};
+use funcpipe::platform::PlatformSpec;
+use funcpipe::util::humansize::{secs, usd};
+use funcpipe::util::table::Table;
+
+fn main() {
+    let filter = std::env::args().nth(1);
+    for platform in [PlatformSpec::aws_lambda(), PlatformSpec::alibaba_fc()] {
+        let vm = if platform.name == "aws-lambda" {
+            C5_9XLARGE
+        } else {
+            R7_2XLARGE
+        };
+        for name in zoo::MODEL_NAMES {
+            if let Some(f) = &filter {
+                if !name.contains(f.as_str()) {
+                    continue;
+                }
+            }
+            let zoo_m = zoo::by_name(name, &platform).unwrap();
+            let model = merge_layers(&zoo_m, 8, MergeCriterion::Compute);
+            for gb in [64usize, 256] {
+                let mut t = Table::new(format!(
+                    "{name} @ {} — batch {gb}",
+                    platform.name
+                ))
+                .header(["configuration", "workers", "t_iter", "c_iter"]);
+
+                let mut best_baseline: Option<f64> = None;
+                for kind in BaselineKind::ALL {
+                    if let Some(r) =
+                        evaluate_baseline(kind, &zoo_m, &platform, gb, vm)
+                    {
+                        best_baseline = Some(
+                            best_baseline
+                                .map_or(r.t_iter, |b: f64| b.min(r.t_iter)),
+                        );
+                        t.row([
+                            kind.name().to_string(),
+                            r.n_workers.to_string(),
+                            secs(r.t_iter),
+                            usd(r.c_iter),
+                        ]);
+                    }
+                }
+
+                let opt = CoOptimizer::new(&model, &platform);
+                let points = sweep(&DEFAULT_WEIGHTS, |w| {
+                    opt.solve(gb / zoo::MICRO_BATCH, w)
+                        .map(|(plan, perf, _)| (plan, perf))
+                });
+                let front = pareto_front(&points);
+                let rec = recommend(&front);
+                for p in &front {
+                    let marker = rec
+                        .as_ref()
+                        .filter(|r| r.plan == p.plan)
+                        .map(|_| " <- recommended")
+                        .unwrap_or("");
+                    t.row([
+                        format!(
+                            "FuncPipe {}{marker}",
+                            p.plan.describe(&model, &platform)
+                        ),
+                        p.plan.n_workers().to_string(),
+                        secs(p.perf.t_iter),
+                        usd(p.perf.c_iter),
+                    ]);
+                }
+                if let (Some(b), Some(r)) = (best_baseline, &rec) {
+                    t.row([
+                        format!(
+                            "=> speedup vs best baseline: {:.2}x",
+                            b / r.perf.t_iter
+                        ),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                    ]);
+                }
+                t.print();
+            }
+        }
+    }
+}

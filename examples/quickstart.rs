@@ -1,0 +1,60 @@
+//! Quickstart: the FuncPipe public API in ~40 lines.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Loads a zoo model, co-optimizes partition + resources for AWS Lambda,
+//! prints the Pareto sweep and the recommended configuration, then
+//! cross-checks the prediction with the discrete-event simulator.
+
+use funcpipe::collective::SyncAlgorithm;
+use funcpipe::model::{merge_layers, zoo, MergeCriterion};
+use funcpipe::pipeline::simulate_iteration;
+use funcpipe::planner::{recommend, sweep, CoOptimizer, DEFAULT_WEIGHTS};
+use funcpipe::platform::PlatformSpec;
+
+fn main() {
+    // 1. pick a platform and a model (Table 1 of the paper)
+    let platform = PlatformSpec::aws_lambda();
+    let model = merge_layers(
+        &zoo::amoebanet_d18(&platform),
+        8,
+        MergeCriterion::Compute, // §4: merge to keep the MIQP tractable
+    );
+
+    // 2. co-optimize partition + data parallelism + memory tiers (§3.4)
+    let global_batch = 64;
+    let n_micro = global_batch / zoo::MICRO_BATCH;
+    let optimizer = CoOptimizer::new(&model, &platform);
+    let points = sweep(&DEFAULT_WEIGHTS, |w| {
+        optimizer.solve(n_micro, w).map(|(plan, perf, _)| (plan, perf))
+    });
+
+    println!("Pareto sweep for AmoebaNet-D18, batch {global_batch}:");
+    for p in &points {
+        println!(
+            "  α={:?}  {}  -> {:.2} s/iter, ${:.5}/iter",
+            p.weights,
+            p.plan.describe(&model, &platform),
+            p.perf.t_iter,
+            p.perf.c_iter
+        );
+    }
+
+    // 3. the paper's δ≥0.8 recommendation rule (§5.1)
+    let rec = recommend(&points).expect("a feasible plan exists");
+    println!("\nrecommended: {}", rec.plan.describe(&model, &platform));
+
+    // 4. validate the closed-form prediction with the DES (Table 3)
+    let sim = simulate_iteration(
+        &model,
+        &platform,
+        &rec.plan,
+        SyncAlgorithm::PipelinedScatterReduce,
+    );
+    println!(
+        "predicted {:.2} s/iter vs simulated {:.2} s/iter ({:.1}% error)",
+        rec.perf.t_iter,
+        sim.t_iter,
+        (rec.perf.t_iter - sim.t_iter).abs() / sim.t_iter * 100.0
+    );
+}

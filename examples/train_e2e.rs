@@ -1,0 +1,73 @@
+//! End-to-end training: the full three-layer stack on a real workload.
+//!
+//!     make artifacts && cargo run --release --example train_e2e
+//!
+//! Python (JAX + Pallas) has already AOT-compiled the staged transformer
+//! to HLO text; this binary drives a **real pipelined training run**: one
+//! thread per serverless "function", activations and gradients relayed
+//! through the in-process object store (with per-worker bandwidth
+//! throttling), intra-stage pipelined scatter-reduce, SGD through the AOT
+//! executables, checkpoint/restart on function-lifetime expiry — and logs
+//! the loss curve. Results are recorded in EXPERIMENTS.md.
+
+use funcpipe::collective::SyncAlgorithm;
+use funcpipe::trainer::{train, TrainConfig};
+
+fn main() {
+    funcpipe::util::logging::init();
+    let steps: usize = std::env::var("FUNCPIPE_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+
+    let mut cfg = TrainConfig::new("artifacts");
+    cfg.dp = 2; // two replicas per stage -> pipelined scatter-reduce
+    cfg.mu = 2; // μ micro-batches per worker per iteration
+    cfg.steps = steps;
+    cfg.lr = 0.2;
+    cfg.sync_alg = SyncAlgorithm::PipelinedScatterReduce;
+    // 40 MB/s per worker + 2 ms storage latency: a scaled-down Lambda
+    cfg.throttle = Some((40.0e6, 0.002));
+    // short lifetime so the Function Manager's checkpoint/restart path
+    // runs several times during the demo (15 min on real Lambda)
+    cfg.lifetime_s = 20.0;
+    cfg.checkpoint_margin_s = 1.0;
+
+    println!(
+        "training the AOT transformer: {} stages x dp={} ({} workers), \
+         {} steps, global batch {}",
+        4,
+        cfg.dp,
+        4 * cfg.dp,
+        cfg.steps,
+        cfg.global_batch(4)
+    );
+
+    let report = train(&cfg).expect("training run");
+
+    println!("\nloss curve (every 10th step):");
+    for log in report.logs.iter().step_by(10) {
+        println!("  step {:>4}  loss {:.4}", log.step, log.loss);
+    }
+    let last = report.logs.last().unwrap();
+    println!("  step {:>4}  loss {:.4}", last.step, last.loss);
+    println!(
+        "\nfirst loss {:.4} (ln V = {:.4}), final loss {:.4}",
+        report.first_loss(),
+        (256f32).ln(),
+        report.last_loss()
+    );
+    println!(
+        "mean iteration {:.1} ms | wall {:.1} s | {} function restarts | \
+         store ops: {} puts / {} gets",
+        report.mean_iter_s() * 1e3,
+        report.wall_s,
+        report.restarts,
+        report.store_put_gets.0,
+        report.store_put_gets.1
+    );
+    assert!(
+        report.last_loss() < report.first_loss(),
+        "loss must decrease over the run"
+    );
+}

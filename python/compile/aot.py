@@ -1,0 +1,251 @@
+"""AOT lowering: JAX stages -> HLO *text* artifacts for the rust runtime.
+
+Python runs exactly once (``make artifacts``); after that the rust binary is
+self-contained. Interchange is HLO **text**, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Per pipeline stage we emit:
+  stage<i>_fwd.hlo.txt    fwd(params..., x[, targets]) -> (y,)
+  stage<i>_bwd.hlo.txt    bwd(params..., x[, targets][, gy])
+                              -> (grads..., gx[, loss])
+  stage<i>_sgd.hlo.txt    sgd(params..., grads..., lr) -> (params'...)
+  stage<i>_merge2.hlo.txt merge(a_flat, b_flat) -> (sum,)   [pallas kernel]
+
+plus ``manifest.json`` describing every artifact: parameter layout (name,
+shape, element count, byte offsets in flattening order), I/O shapes and the
+argument order of each entry point — everything the rust loader
+(`runtime/artifact.rs`) needs to drive the executables without touching
+python.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ModelConfig, StageSpec, build_stages, merge_two, sgd_step
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def kept_args(lowered) -> list:
+    """Indices of entry arguments the lowering kept.
+
+    jax.jit prunes arguments that do not influence the outputs (e.g. a
+    bias whose VJP needs only the cotangent); the rust runtime must feed
+    exactly the kept ones, so the manifest records this mapping.
+    """
+    idx = lowered._lowering.compile_args.get("kept_var_idx")
+    return sorted(idx)
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _param_sds(stage: StageSpec) -> List[jax.ShapeDtypeStruct]:
+    return [_sds(shape) for _, shape in stage.param_specs]
+
+
+def _input_sds(stage: StageSpec) -> jax.ShapeDtypeStruct:
+    dt = jnp.int32 if stage.input_dtype == "i32" else jnp.float32
+    return _sds(stage.input_shape, dt)
+
+
+def lower_stage(stage: StageSpec, cfg: ModelConfig, out_dir: str,
+                idx: int) -> dict:
+    """Lower fwd/bwd/sgd/merge2 for one stage; return its manifest entry."""
+    n_params = len(stage.param_specs)
+    p_sds = _param_sds(stage)
+    x_sds = _input_sds(stage)
+    B, T = cfg.micro_batch, cfg.seq_len
+    tgt_sds = _sds((B, T), jnp.int32)
+    gy_sds = _sds(stage.output_shape)
+
+    files = {}
+
+    # ---- forward -----------------------------------------------------
+    if stage.kind == "head":
+        def fwd_flat(*args):
+            params = list(args[:n_params])
+            x, targets = args[n_params], args[n_params + 1]
+            return (stage.fwd(params, x, targets),)
+        fwd_args = p_sds + [x_sds, tgt_sds]
+    else:
+        def fwd_flat(*args):
+            params = list(args[:n_params])
+            x = args[n_params]
+            return (stage.fwd(params, x),)
+        fwd_args = p_sds + [x_sds]
+    kept = {}
+    files["fwd"] = f"stage{idx}_fwd.hlo.txt"
+    lowered = jax.jit(fwd_flat).lower(*fwd_args)
+    kept["fwd"] = kept_args(lowered)
+    _write(out_dir, files["fwd"], to_hlo_text(lowered))
+
+    # ---- backward ----------------------------------------------------
+    if stage.kind == "head":
+        def bwd_flat(*args):
+            params = list(args[:n_params])
+            x, targets = args[n_params], args[n_params + 1]
+            grads, gx, loss = stage.bwd(params, x, targets)
+            return tuple(grads) + (gx, loss)
+        bwd_args = p_sds + [x_sds, tgt_sds]
+    elif stage.kind == "embed":
+        def bwd_flat(*args):
+            params = list(args[:n_params])
+            x, gy = args[n_params], args[n_params + 1]
+            grads, _ = stage.bwd(params, x, gy)
+            return tuple(grads)
+        bwd_args = p_sds + [x_sds, gy_sds]
+    else:
+        def bwd_flat(*args):
+            params = list(args[:n_params])
+            x, gy = args[n_params], args[n_params + 1]
+            grads, gx = stage.bwd(params, x, gy)
+            return tuple(grads) + (gx,)
+        bwd_args = p_sds + [x_sds, gy_sds]
+    files["bwd"] = f"stage{idx}_bwd.hlo.txt"
+    lowered = jax.jit(bwd_flat).lower(*bwd_args)
+    kept["bwd"] = kept_args(lowered)
+    _write(out_dir, files["bwd"], to_hlo_text(lowered))
+
+    # ---- sgd update ----------------------------------------------------
+    def sgd_flat(*args):
+        params = list(args[:n_params])
+        grads = list(args[n_params:2 * n_params])
+        lr = args[2 * n_params]
+        return tuple(sgd_step(params, grads, lr))
+    files["sgd"] = f"stage{idx}_sgd.hlo.txt"
+    lowered = jax.jit(sgd_flat).lower(*(p_sds + p_sds + [_sds(())]))
+    kept["sgd"] = kept_args(lowered)
+    _write(out_dir, files["sgd"], to_hlo_text(lowered))
+
+    # ---- pairwise gradient merge (scatter-reduce inner op) -------------
+    flat = stage.flat_param_size
+    def merge_flat(a, b):
+        return (merge_two(a, b),)
+    files["merge2"] = f"stage{idx}_merge2.hlo.txt"
+    lowered = jax.jit(merge_flat).lower(_sds((flat,)), _sds((flat,)))
+    kept["merge2"] = kept_args(lowered)
+    _write(out_dir, files["merge2"], to_hlo_text(lowered))
+
+    return {
+        "index": idx,
+        "name": stage.name,
+        "kind": stage.kind,
+        "params": [
+            {"name": n, "shape": list(s), "numel": _numel(s)}
+            for n, s in stage.param_specs
+        ],
+        "flat_param_size": flat,
+        "input_shape": list(stage.input_shape),
+        "input_dtype": stage.input_dtype,
+        "output_shape": list(stage.output_shape),
+        "files": files,
+        "kept_args": kept,
+    }
+
+
+def _numel(shape: Sequence[int]) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+def _write(out_dir: str, name: str, text: str) -> None:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name} ({len(text)//1024} KiB)")
+
+
+def dump_init_params(cfg: ModelConfig, out_dir: str, seed: int) -> List[str]:
+    """Serialize deterministic initial parameters as raw little-endian f32.
+
+    One file per stage, tensors concatenated in param_specs order; the rust
+    loader slices them back out using the manifest offsets.
+    """
+    import numpy as np
+
+    names = []
+    rng = jax.random.PRNGKey(seed)
+    for idx, stage in enumerate(build_stages(cfg)):
+        rng, sub = jax.random.split(rng)
+        params = stage.init(sub)
+        flat = np.concatenate(
+            [np.asarray(p, dtype=np.float32).reshape(-1) for p in params]
+        )
+        name = f"stage{idx}_init.f32"
+        flat.tofile(os.path.join(out_dir, name))
+        names.append(name)
+        print(f"  wrote {name} ({flat.nbytes//1024} KiB)")
+    return names
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(legacy) ignored if --out-dir given")
+    ap.add_argument("--vocab", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=64)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--d-ff", type=int, default=256)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--n-layers", type=int, default=2)
+    ap.add_argument("--n-block-stages", type=int, default=2)
+    ap.add_argument("--micro-batch", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=42)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None and args.out_dir == "../artifacts":
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg = ModelConfig(
+        vocab=args.vocab, d_model=args.d_model, n_heads=args.n_heads,
+        d_ff=args.d_ff, seq_len=args.seq_len, n_layers=args.n_layers,
+        n_block_stages=args.n_block_stages, micro_batch=args.micro_batch,
+    )
+    stages = build_stages(cfg)
+    print(f"lowering {len(stages)} stages "
+          f"({cfg.param_count()/1e6:.2f}M params) -> {out_dir}")
+
+    entries = [lower_stage(s, cfg, out_dir, i) for i, s in enumerate(stages)]
+    inits = dump_init_params(cfg, out_dir, args.seed)
+    for e, init_name in zip(entries, inits):
+        e["files"]["init"] = init_name
+
+    manifest = {
+        "format_version": 1,
+        "config": dataclasses.asdict(cfg),
+        "n_stages": len(stages),
+        "total_params": cfg.param_count(),
+        "stages": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(stages)} stages)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,258 @@
+"""L1 Pallas kernel: fused linear layer  y = act(x @ w + b).
+
+This is the compute hot-spot of the transformer MLP (and the QKV/output
+projections). The paper trains on CPU-only serverless functions with
+PyTorch; we re-express the hot-spot for a TPU-style memory hierarchy:
+
+  * the grid tiles M (rows) and N (cols) so each program instance owns one
+    (BM, BN) output tile resident in VMEM;
+  * the contraction dimension K is streamed in BK-sized blocks through a
+    VMEM accumulator (float32), which is the MXU-friendly schedule
+    (HBM -> VMEM double-buffering is expressed by the BlockSpec index_map);
+  * bias add + activation are fused into the epilogue so the tile never
+    round-trips to HBM between matmul and activation.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the rust runtime
+executes byte-identically. Real-TPU tile-size/VMEM estimates live in
+DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile sizes. On a real TPU these map to the 128x128
+# systolic array; on CPU (interpret mode) they only affect the loop
+# structure, not correctness.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, activation: str,
+                   n_k: int):
+    """One (BM, BN) output tile; grid = (M/BM, N/BN, K/BK).
+
+    The K axis is the innermost (fastest varying) grid dimension, so the
+    float32 accumulator in VMEM scratch carries across K steps.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU: bf16/f32 inputs, f32 accumulate.
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        y = acc_ref[...] + b_ref[...]
+        if activation == "gelu":
+            y = jax.nn.gelu(y)
+        elif activation == "relu":
+            y = jnp.maximum(y, 0.0)
+        elif activation != "none":
+            raise ValueError(f"unknown activation {activation!r}")
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of `dim` that is <= preferred (keeps the grid exact)."""
+    if dim <= preferred:
+        return dim
+    for cand in range(preferred, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "bm", "bn", "bk")
+)
+def fused_linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: str = "none",
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
+) -> jax.Array:
+    """act(x @ w + b) with a tiled Pallas kernel.
+
+    x: (M, K)   w: (K, N)   b: (N,)   -> (M, N)
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    bm = bm or _pick_block(m, DEFAULT_BM)
+    bn = bn or _pick_block(n, DEFAULT_BN)
+    bk = bk or _pick_block(k, DEFAULT_BK)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shapes ({m},{k},{n}) not divisible by blocks ({bm},{bk},{bn})"
+    )
+    n_k = k // bk
+
+    grid = (m // bm, n // bn, n_k)
+    kernel = functools.partial(_linear_kernel, activation=activation, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[
+            pl.MemoryRef(
+                jax.core.ShapedArray((bm, bn), jnp.float32), pl.ANY
+            )
+        ],
+        interpret=True,
+    )(x, w, b)
+
+
+# Some jax versions expose scratch differently; provide a robust wrapper
+# that falls back to carrying the accumulator in the output ref.
+def _linear_kernel_noscratch(x_ref, w_ref, b_ref, o_ref, *, activation: str,
+                             n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        y = o_ref[...] + b_ref[...]
+        if activation == "gelu":
+            y = jax.nn.gelu(y)
+        elif activation == "relu":
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "bm", "bn", "bk"))
+def fused_linear_noscratch(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: str = "none",
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
+) -> jax.Array:
+    """Variant that accumulates in the output ref (no scratch memory).
+
+    Functionally identical to `fused_linear`; used where the jax version's
+    scratch-shape API is unavailable, and as the lowering target in model.py
+    (one less VMEM buffer, same schedule).
+    """
+    m, k = x.shape
+    _, n = w.shape
+    bm = bm or _pick_block(m, DEFAULT_BM)
+    bn = bn or _pick_block(n, DEFAULT_BN)
+    bk = bk or _pick_block(k, DEFAULT_BK)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    n_k = k // bk
+    kernel = functools.partial(
+        _linear_kernel_noscratch, activation=activation, n_k=n_k
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper.
+#
+# JAX cannot auto-differentiate through a multi-K-step pallas_call (the
+# program_id-indexed accumulator has no jvp rule), so the backward pass is
+# supplied explicitly — and itself runs on the same tiled kernel:
+#     z  = x@w + b
+#     dz = gy * act'(z)
+#     dx = dz @ w.T      dw = x.T @ dz      db = sum(dz, axis=0)
+# z is rematerialized in the backward (no residual activations), matching
+# the stage-level remat strategy of model.py.
+# ---------------------------------------------------------------------------
+
+
+def _matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain tiled matmul via the fused kernel (zero bias, no activation)."""
+    zeros = jnp.zeros((b.shape[1],), a.dtype)
+    return fused_linear_noscratch(a, b, zeros, activation="none")
+
+
+def _act_grad(z: jax.Array, gy: jax.Array, activation: str) -> jax.Array:
+    if activation == "none":
+        return gy
+    if activation == "relu":
+        return jnp.where(z > 0, gy, 0.0)
+    if activation == "gelu":
+        _, vjp = jax.vjp(jax.nn.gelu, z)
+        (dz,) = vjp(gy)
+        return dz
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear_ad(x: jax.Array, w: jax.Array, b: jax.Array,
+                    activation: str = "none") -> jax.Array:
+    """Differentiable act(x @ w + b); fwd and bwd both on the Pallas kernel."""
+    return fused_linear_noscratch(x, w, b, activation=activation)
+
+
+def _fused_linear_fwd(x, w, b, activation):
+    y = fused_linear_noscratch(x, w, b, activation=activation)
+    return y, (x, w, b)
+
+
+def _fused_linear_bwd(activation, res, gy):
+    x, w, b = res
+    z = fused_linear_noscratch(x, w, b, activation="none")  # remat
+    dz = _act_grad(z, gy, activation)
+    dx = _matmul(dz, w.T)
+    dw = _matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+fused_linear_ad.defvjp(_fused_linear_fwd, _fused_linear_bwd)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set for one program instance.
+
+    x-tile + w-tile + bias-tile + out/acc-tile (+ double-buffer factor 2 on
+    the streamed inputs). Used by DESIGN.md's roofline estimate and by the
+    block-shape sweep in python/tests/test_kernel.py::test_vmem_budget.
+    """
+    stream = 2 * (bm * bk + bk * bn) * dtype_bytes  # double-buffered
+    resident = (bm * bn) * 4 + bn * dtype_bytes     # f32 accumulator + bias
+    return stream + resident

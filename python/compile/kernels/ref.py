@@ -1,0 +1,36 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth against which python/tests/test_kernel.py checks
+the kernels (exact schedule-independent math, no pallas involved).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_linear_ref(x: jax.Array, w: jax.Array, b: jax.Array,
+                     activation: str = "none") -> jax.Array:
+    """act(x @ w + b), computed directly."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    if activation == "gelu":
+        y = jax.nn.gelu(y)
+    elif activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y.astype(x.dtype)
+
+
+def grad_merge_ref(splits: jax.Array, average: bool = False) -> jax.Array:
+    """Sum (or mean) of k gradient splits along axis 0."""
+    acc = jnp.sum(splits.astype(jnp.float32), axis=0)
+    if average:
+        acc = acc / splits.shape[0]
+    return acc.astype(splits.dtype)
+
+
+def sgd_apply_ref(params: jax.Array, grads: jax.Array,
+                  lr: jax.Array) -> jax.Array:
+    return params - lr * grads

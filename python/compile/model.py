@@ -1,0 +1,350 @@
+"""L2: the JAX model — a GPT-style transformer LM split into pipeline stages.
+
+FuncPipe partitions a layered model across serverless workers (§3.2). Here
+the model is expressed as an explicit list of *stages*, each with its own
+parameter list and pure `fwd` / `bwd` functions, so that `aot.py` can lower
+every stage to a standalone HLO-text executable that the rust coordinator
+places on a worker:
+
+  stage 0        : embedding       (tokens  -> hidden)
+  stage 1..G     : transformer-block groups (hidden -> hidden)
+  stage G+1      : head            (hidden, targets -> scalar loss)
+
+Backward functions use `jax.vjp` over the stage forward, i.e. activations
+are *rematerialized* inside the stage (GPipe-style): a worker only ever
+stores the stage input it received from storage, never interior
+activations, matching the paper's memory model (constraint (3b)).
+
+The MLP inside each block calls the L1 Pallas kernel
+(`kernels.fused_linear`), so the kernel lowers into the same HLO the rust
+runtime executes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_linear import fused_linear_ad
+from .kernels.grad_merge import grad_merge, sgd_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyperparameters for the staged transformer."""
+
+    vocab: int = 256
+    d_model: int = 64
+    n_heads: int = 4
+    d_ff: int = 256
+    seq_len: int = 32
+    n_layers: int = 2
+    n_block_stages: int = 2  # how many stages the blocks are grouped into
+    micro_batch: int = 4
+
+    def __post_init__(self):
+        assert self.d_model % self.n_heads == 0
+        assert self.n_layers % self.n_block_stages == 0
+
+    @property
+    def layers_per_stage(self) -> int:
+        return self.n_layers // self.n_block_stages
+
+    @property
+    def n_stages(self) -> int:
+        return self.n_block_stages + 2
+
+    def param_count(self) -> int:
+        total = 0
+        for stage in build_stages(self):
+            total += stage.flat_param_size
+        return total
+
+
+ParamSpecs = List[Tuple[str, Tuple[int, ...]]]
+Params = List[jax.Array]
+
+
+def _numel(shape: Tuple[int, ...]) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+@dataclasses.dataclass
+class StageSpec:
+    """One pipeline stage: parameter layout + pure fwd/bwd callables.
+
+    fwd(params, x[, targets]) -> y (or scalar loss for the head)
+    bwd(params, x[, targets], gy) -> (grads, gx)  — head returns loss too.
+    """
+
+    name: str
+    kind: str  # "embed" | "blocks" | "head"
+    param_specs: ParamSpecs
+    init: Callable[[jax.Array], Params]
+    fwd: Callable[..., jax.Array]
+    bwd: Callable[..., Tuple]
+    # static I/O shapes (per micro-batch), used by aot.py + the manifest
+    input_shape: Tuple[int, ...] = ()
+    input_dtype: str = "f32"
+    output_shape: Tuple[int, ...] = ()
+
+    @property
+    def flat_param_size(self) -> int:
+        return sum(_numel(s) for _, s in self.param_specs)
+
+
+# ---------------------------------------------------------------------------
+# layer math
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x: jax.Array, g: jax.Array, b: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def _attention(x: jax.Array, wq, bq, wk, bk, wv, bv, wo, bo,
+               n_heads: int) -> jax.Array:
+    """Causal multi-head self-attention. x: (B, T, D)."""
+    B, T, D = x.shape
+    H = n_heads
+    Dh = D // H
+
+    def proj(w, b):
+        return (x @ w + b).reshape(B, T, H, Dh).transpose(0, 2, 1, 3)
+
+    q, k, v = proj(wq, bq), proj(wk, bk), proj(wv, bv)
+    att = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(Dh).astype(x.dtype)
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    att = jnp.where(mask, att, jnp.finfo(x.dtype).min)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhts,bhsd->bhtd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(B, T, D)
+    return out @ wo + bo
+
+
+def _mlp(x: jax.Array, w1, b1, w2, b2) -> jax.Array:
+    """Transformer MLP on the L1 Pallas kernel (the compute hot-spot)."""
+    B, T, D = x.shape
+    flat = x.reshape(B * T, D)
+    h = fused_linear_ad(flat, w1, b1, "gelu")
+    y = fused_linear_ad(h, w2, b2, "none")
+    return y.reshape(B, T, D)
+
+
+def _block(x: jax.Array, p: Dict[str, jax.Array], n_heads: int) -> jax.Array:
+    h = x + _attention(
+        _layer_norm(x, p["ln1_g"], p["ln1_b"]),
+        p["wq"], p["bq"], p["wk"], p["bk"], p["wv"], p["bv"],
+        p["wo"], p["bo"], n_heads,
+    )
+    h = h + _mlp(
+        _layer_norm(h, p["ln2_g"], p["ln2_b"]),
+        p["w1"], p["b1"], p["w2"], p["b2"],
+    )
+    return h
+
+
+_BLOCK_PARAM_NAMES = [
+    "ln1_g", "ln1_b", "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+    "ln2_g", "ln2_b", "w1", "b1", "w2", "b2",
+]
+
+
+def _block_param_specs(cfg: ModelConfig, prefix: str) -> ParamSpecs:
+    D, F = cfg.d_model, cfg.d_ff
+    shapes = {
+        "ln1_g": (D,), "ln1_b": (D,),
+        "wq": (D, D), "bq": (D,), "wk": (D, D), "bk": (D,),
+        "wv": (D, D), "bv": (D,), "wo": (D, D), "bo": (D,),
+        "ln2_g": (D,), "ln2_b": (D,),
+        "w1": (D, F), "b1": (F,), "w2": (F, D), "b2": (D,),
+    }
+    return [(f"{prefix}.{n}", shapes[n]) for n in _BLOCK_PARAM_NAMES]
+
+
+def _init_from_specs(specs: ParamSpecs, rng: jax.Array) -> Params:
+    params = []
+    keys = jax.random.split(rng, len(specs))
+    for (name, shape), key in zip(specs, keys):
+        base = name.rsplit(".", 1)[-1]
+        if base in ("ln1_g", "ln2_g", "lnf_g"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif len(shape) == 1:
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            params.append(
+                0.02 * jax.random.normal(key, shape, jnp.float32)
+            )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# stage builders
+# ---------------------------------------------------------------------------
+
+
+def _embed_stage(cfg: ModelConfig) -> StageSpec:
+    B, T, D, V = cfg.micro_batch, cfg.seq_len, cfg.d_model, cfg.vocab
+    specs: ParamSpecs = [("tok_emb", (V, D)), ("pos_emb", (T, D))]
+
+    def fwd(params: Params, tokens: jax.Array) -> jax.Array:
+        tok_emb, pos_emb = params
+        return tok_emb[tokens] + pos_emb[None, :, :]
+
+    def bwd(params: Params, tokens: jax.Array, gh: jax.Array):
+        _, vjp = jax.vjp(lambda p: fwd(p, tokens), params)
+        (grads,) = vjp(gh)
+        return grads, jnp.zeros((), jnp.float32)  # no upstream gx
+
+    def init(rng: jax.Array) -> Params:
+        k1, k2 = jax.random.split(rng)
+        return [
+            0.02 * jax.random.normal(k1, (V, D), jnp.float32),
+            0.01 * jax.random.normal(k2, (T, D), jnp.float32),
+        ]
+
+    return StageSpec(
+        name="embed", kind="embed", param_specs=specs, init=init,
+        fwd=fwd, bwd=bwd,
+        input_shape=(B, T), input_dtype="i32", output_shape=(B, T, D),
+    )
+
+
+def _blocks_stage(cfg: ModelConfig, idx: int) -> StageSpec:
+    B, T, D = cfg.micro_batch, cfg.seq_len, cfg.d_model
+    nl = cfg.layers_per_stage
+    specs: ParamSpecs = []
+    for l in range(nl):
+        specs += _block_param_specs(cfg, f"l{l}")
+    per_block = len(_BLOCK_PARAM_NAMES)
+
+    def fwd(params: Params, x: jax.Array) -> jax.Array:
+        h = x
+        for l in range(nl):
+            chunk = params[l * per_block:(l + 1) * per_block]
+            p = dict(zip(_BLOCK_PARAM_NAMES, chunk))
+            h = _block(h, p, cfg.n_heads)
+        return h
+
+    def bwd(params: Params, x: jax.Array, gy: jax.Array):
+        _, vjp = jax.vjp(fwd, params, x)
+        grads, gx = vjp(gy)
+        return grads, gx
+
+    def init(rng: jax.Array) -> Params:
+        return _init_from_specs(specs, rng)
+
+    return StageSpec(
+        name=f"blocks{idx}", kind="blocks", param_specs=specs, init=init,
+        fwd=fwd, bwd=bwd,
+        input_shape=(B, T, D), output_shape=(B, T, D),
+    )
+
+
+def _head_stage(cfg: ModelConfig) -> StageSpec:
+    B, T, D, V = cfg.micro_batch, cfg.seq_len, cfg.d_model, cfg.vocab
+    specs: ParamSpecs = [
+        ("lnf_g", (D,)), ("lnf_b", (D,)), ("w_out", (D, V)), ("b_out", (V,)),
+    ]
+
+    def fwd(params: Params, x: jax.Array, targets: jax.Array) -> jax.Array:
+        lnf_g, lnf_b, w_out, b_out = params
+        h = _layer_norm(x, lnf_g, lnf_b)
+        logits = h @ w_out + b_out  # (B, T, V)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+        return jnp.mean(nll)
+
+    def bwd(params: Params, x: jax.Array, targets: jax.Array):
+        loss, vjp = jax.vjp(lambda p, xx: fwd(p, xx, targets), params, x)
+        grads, gx = vjp(jnp.ones((), jnp.float32))
+        return grads, gx, loss
+
+    def init(rng: jax.Array) -> Params:
+        k1, _ = jax.random.split(rng)
+        return [
+            jnp.ones((D,), jnp.float32),
+            jnp.zeros((D,), jnp.float32),
+            0.02 * jax.random.normal(k1, (D, V), jnp.float32),
+            jnp.zeros((V,), jnp.float32),
+        ]
+
+    return StageSpec(
+        name="head", kind="head", param_specs=specs, init=init,
+        fwd=fwd, bwd=bwd,
+        input_shape=(B, T, D), output_shape=(),
+    )
+
+
+def build_stages(cfg: ModelConfig) -> List[StageSpec]:
+    """All pipeline stages of the model, in order."""
+    stages = [_embed_stage(cfg)]
+    stages += [_blocks_stage(cfg, i) for i in range(cfg.n_block_stages)]
+    stages.append(_head_stage(cfg))
+    return stages
+
+
+# ---------------------------------------------------------------------------
+# reference full-model step (for python tests: stage-composed == monolithic)
+# ---------------------------------------------------------------------------
+
+
+def full_forward_loss(cfg: ModelConfig, all_params: List[Params],
+                      tokens: jax.Array, targets: jax.Array) -> jax.Array:
+    """Monolithic forward pass composing all stages (oracle for tests)."""
+    stages = build_stages(cfg)
+    h = stages[0].fwd(all_params[0], tokens)
+    for s, p in zip(stages[1:-1], all_params[1:-1]):
+        h = s.fwd(p, h)
+    return stages[-1].fwd(all_params[-1], h, targets)
+
+
+def staged_backward(cfg: ModelConfig, all_params: List[Params],
+                    tokens: jax.Array, targets: jax.Array):
+    """Runs the staged fwd+bwd exactly as the rust pipeline will.
+
+    Returns (loss, grads per stage). Used as the test oracle that the
+    stage-wise vjp chaining reproduces jax.grad of the monolithic model.
+    """
+    stages = build_stages(cfg)
+    acts = [None] * len(stages)  # stage inputs
+    acts[0] = tokens
+    h = stages[0].fwd(all_params[0], tokens)
+    for i, (s, p) in enumerate(zip(stages[1:-1], all_params[1:-1]), start=1):
+        acts[i] = h
+        h = s.fwd(p, h)
+    acts[-1] = h
+
+    grads = [None] * len(stages)
+    grads[-1], gx, loss = stages[-1].bwd(all_params[-1], acts[-1], targets)
+    for i in range(len(stages) - 2, 0, -1):
+        grads[i], gx = stages[i].bwd(all_params[i], acts[i], gx)
+    grads[0], _ = stages[0].bwd(all_params[0], tokens, gx)
+    return loss, grads
+
+
+# ---------------------------------------------------------------------------
+# stage-level auxiliary computations lowered by aot.py
+# ---------------------------------------------------------------------------
+
+
+def sgd_step(params: Params, grads: Params, lr: jax.Array) -> Params:
+    """p <- p - lr*g per tensor, through the L1 sgd_apply kernel."""
+    out = []
+    for p, g in zip(params, grads):
+        flat = sgd_apply(p.reshape(-1), g.reshape(-1), lr)
+        out.append(flat.reshape(p.shape))
+    return out
+
+
+def merge_two(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Merge two flattened gradient splits (scatter-reduce inner op)."""
+    return grad_merge(jnp.stack([a, b]), average=False)

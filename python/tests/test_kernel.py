@@ -1,0 +1,166 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes/blocks/dtypes; assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.fused_linear import (
+    fused_linear,
+    fused_linear_ad,
+    fused_linear_noscratch,
+    vmem_bytes,
+)
+from compile.kernels.grad_merge import grad_merge, sgd_apply
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("activation", ["none", "relu", "gelu"])
+@pytest.mark.parametrize("impl", [fused_linear, fused_linear_noscratch])
+def test_fused_linear_matches_ref(activation, impl):
+    x, w, b = _rand(0, (64, 96)), _rand(1, (96, 48)), _rand(2, (48,))
+    y = impl(x, w, b, activation=activation, bm=32, bn=16, bk=32)
+    assert_allclose(
+        np.asarray(y),
+        np.asarray(ref.fused_linear_ref(x, w, b, activation)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bm_pow=st.integers(2, 5),
+    bn_pow=st.integers(2, 5),
+    bk_pow=st.integers(2, 5),
+    m_mult=st.integers(1, 3),
+    n_mult=st.integers(1, 3),
+    k_mult=st.integers(1, 3),
+    activation=st.sampled_from(["none", "relu", "gelu"]),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_linear_shape_block_sweep(
+    bm_pow, bn_pow, bk_pow, m_mult, n_mult, k_mult, activation, seed
+):
+    """Property: for every valid (shape, block) combination the tiled kernel
+    is numerically identical to the untiled reference."""
+    bm, bn, bk = 2**bm_pow, 2**bn_pow, 2**bk_pow
+    m, n, k = bm * m_mult, bn * n_mult, bk * k_mult
+    key = jax.random.PRNGKey(seed)
+    kx, kw, kb = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    b = jax.random.normal(kb, (n,), jnp.float32)
+    y = fused_linear_noscratch(x, w, b, activation=activation,
+                               bm=bm, bn=bn, bk=bk)
+    assert_allclose(
+        np.asarray(y),
+        np.asarray(ref.fused_linear_ref(x, w, b, activation)),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_fused_linear_default_blocks_nondivisible_dims():
+    """_pick_block must find exact divisors for awkward sizes."""
+    x, w, b = _rand(3, (12, 20)), _rand(4, (20, 28)), _rand(5, (28,))
+    y = fused_linear_noscratch(x, w, b, activation="gelu")
+    assert_allclose(np.asarray(y),
+                    np.asarray(ref.fused_linear_ref(x, w, b, "gelu")),
+                    rtol=1e-5, atol=1e-5)
+
+
+def test_fused_linear_rejects_bad_blocks():
+    x, w, b = _rand(0, (64, 64)), _rand(1, (64, 64)), _rand(2, (64,))
+    with pytest.raises(AssertionError):
+        fused_linear_noscratch(x, w, b, bm=48, bn=64, bk=64)
+
+
+@pytest.mark.parametrize("activation", ["none", "relu", "gelu"])
+def test_fused_linear_ad_gradients(activation):
+    """custom_vjp backward == jax.grad of the pure-jnp reference."""
+    x, w, b = _rand(7, (32, 48)), _rand(8, (48, 16)), _rand(9, (16,))
+
+    def loss_kernel(x, w, b):
+        return jnp.sum(fused_linear_ad(x, w, b, activation) ** 2)
+
+    def loss_ref(x, w, b):
+        return jnp.sum(ref.fused_linear_ref(x, w, b, activation) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, r in zip(gk, gr):
+        assert_allclose(np.asarray(a), np.asarray(r), rtol=5e-4, atol=5e-4)
+
+
+def test_vmem_budget_mxu_tiles():
+    """The default MXU-aligned tiling fits a 16 MiB VMEM with double
+    buffering — the DESIGN.md roofline claim."""
+    assert vmem_bytes(128, 128, 128) <= 16 * 1024 * 1024
+    # and the largest tile that still fits:
+    assert vmem_bytes(256, 256, 512) <= 16 * 1024 * 1024
+    assert vmem_bytes(1024, 1024, 1024) > 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# grad_merge / sgd_apply
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(2, 8),
+    n_blocks=st.integers(1, 4),
+    bn=st.sampled_from([64, 256, 1024]),
+    average=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_grad_merge_sweep(k, n_blocks, bn, average, seed):
+    n = bn * n_blocks
+    s = jax.random.normal(jax.random.PRNGKey(seed), (k, n), jnp.float32)
+    got = grad_merge(s, bn=bn, average=average)
+    want = ref.grad_merge_ref(s, average=average)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_grad_merge_odd_length():
+    s = _rand(11, (3, 999))
+    assert_allclose(np.asarray(grad_merge(s)),
+                    np.asarray(ref.grad_merge_ref(s)), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([128, 1000, 4096, 5000]),
+    lr=st.floats(1e-4, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_sgd_apply_sweep(n, lr, seed):
+    kp, kg = jax.random.split(jax.random.PRNGKey(seed))
+    p = jax.random.normal(kp, (n,), jnp.float32)
+    g = jax.random.normal(kg, (n,), jnp.float32)
+    got = sgd_apply(p, g, jnp.float32(lr))
+    assert_allclose(np.asarray(got),
+                    np.asarray(ref.sgd_apply_ref(p, g, jnp.float32(lr))),
+                    rtol=1e-6, atol=1e-6)
+
+
+def test_grad_merge_is_linear():
+    """Merge(a) + Merge(b) == Merge(a + b) — linearity invariant the
+    scatter-reduce algorithms rely on for split/merge order independence."""
+    a, b = _rand(20, (4, 512)), _rand(21, (4, 512))
+    lhs = grad_merge(a) + grad_merge(b)
+    rhs = grad_merge(a + b)
+    assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-5, atol=1e-5)

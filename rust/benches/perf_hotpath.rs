@@ -1,0 +1,74 @@
+//! Micro-benchmarks of the L3 hot paths (EXPERIMENTS.md §Perf):
+//! planner solve, perf-model evaluation, DES iteration, schedule build,
+//! max-min allocator, and the real threaded collectives over an
+//! in-process store.
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use funcpipe::collective::sim::{simulate_pipelined_scatter_reduce, simulate_scatter_reduce};
+use funcpipe::collective::{pipelined::pipelined_scatter_reduce, scatter_reduce::scatter_reduce};
+use funcpipe::model::{merge_layers, zoo, MergeCriterion, Plan};
+use funcpipe::pipeline::{build_schedule, simulate_iteration};
+use funcpipe::planner::{CoOptimizer, PerfModel};
+use funcpipe::platform::network::BandwidthModel;
+use funcpipe::platform::{MemStore, ObjectStore, PlatformSpec};
+
+fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<44} {:>12.3} µs/iter   ({iters} iters)", per * 1e6);
+}
+
+fn main() {
+    let p = PlatformSpec::aws_lambda();
+    let m = merge_layers(&zoo::amoebanet_d36(&p), 8, MergeCriterion::Compute);
+    let plan = Plan { cuts: vec![2, 5], dp: 4, stage_tiers: vec![7, 7, 7], n_micro_global: 16 };
+    let pm = PerfModel::new(&m, &p);
+
+    time("perf_model::evaluate", 20_000, || {
+        std::hint::black_box(pm.evaluate(&plan));
+    });
+    time("schedule::build (3 stages, d=4, mu=4)", 5_000, || {
+        std::hint::black_box(build_schedule(&plan));
+    });
+    time("pipeline DES iteration", 200, || {
+        std::hint::black_box(simulate_iteration(&m, &p, &plan,
+            funcpipe::collective::SyncAlgorithm::PipelinedScatterReduce));
+    });
+    time("co-optimizer solve (L=8, batch 64)", 5, || {
+        let opt = CoOptimizer::new(&m, &p);
+        std::hint::black_box(opt.solve(16, (1.0, 2e-4)));
+    });
+    let net = BandwidthModel::uniform(8, 70.0e6, 0.04);
+    time("flowsim scatter-reduce n=8", 200, || {
+        std::hint::black_box(simulate_scatter_reduce(8, 300e6, &net));
+    });
+    time("flowsim pipelined scatter-reduce n=8", 200, || {
+        std::hint::black_box(simulate_pipelined_scatter_reduce(8, 300e6, &net));
+    });
+
+    // real threaded collectives, 4 workers x 1M f32
+    for (name, pipelined) in [("real scatter-reduce 4x1M f32", false),
+                              ("real pipelined scatter-reduce 4x1M f32", true)] {
+        time(name, 5, || {
+            let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+            let handles: Vec<_> = (0..4).map(|rank| {
+                let store = store.clone();
+                std::thread::spawn(move || {
+                    let mut g = vec![rank as f32; 1_000_000];
+                    if pipelined {
+                        pipelined_scatter_reduce(&store, "b", 0, rank, 4, &mut g, None, Duration::from_secs(30)).unwrap();
+                    } else {
+                        scatter_reduce(&store, "b", 0, rank, 4, &mut g, None, Duration::from_secs(30)).unwrap();
+                    }
+                })
+            }).collect();
+            for h in handles { h.join().unwrap(); }
+        });
+    }
+}

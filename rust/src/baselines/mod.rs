@@ -1,0 +1,257 @@
+//! The §5.1 baselines: LambdaML, HybridPS and their gradient-accumulation
+//! variants, with the resource-allocation strategies the paper describes
+//! and analytic iteration-time/cost models consistent with the FuncPipe
+//! performance model (same compute profiles, same bandwidth substrate).
+
+use crate::collective::{ps_sync_time, sync_time, SyncAlgorithm};
+use crate::model::zoo::MICRO_BATCH;
+use crate::model::ModelProfile;
+use crate::platform::pricing::VmType;
+use crate::platform::PlatformSpec;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaselineKind {
+    /// Pure serverless DP: max memory tier, max local batch (LambdaML).
+    LambdaML,
+    /// Hybrid parameter-server (Cirrus-style): same workers + a VM PS.
+    HybridPS,
+    /// LambdaML + gradient accumulation at batch 1: same worker count,
+    /// minimum memory that fits.
+    LambdaMLGA,
+    /// HybridPS + gradient accumulation.
+    HybridPSGA,
+}
+
+impl BaselineKind {
+    pub const ALL: [BaselineKind; 4] = [
+        BaselineKind::LambdaML,
+        BaselineKind::HybridPS,
+        BaselineKind::LambdaMLGA,
+        BaselineKind::HybridPSGA,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BaselineKind::LambdaML => "LambdaML",
+            BaselineKind::HybridPS => "HybridPS",
+            BaselineKind::LambdaMLGA => "LambdaML-GA",
+            BaselineKind::HybridPSGA => "HybridPS-GA",
+        }
+    }
+
+    fn uses_ps(&self) -> bool {
+        matches!(self, BaselineKind::HybridPS | BaselineKind::HybridPSGA)
+    }
+
+    fn uses_ga(&self) -> bool {
+        matches!(self, BaselineKind::LambdaMLGA | BaselineKind::HybridPSGA)
+    }
+}
+
+/// Evaluated baseline configuration.
+#[derive(Debug, Clone)]
+pub struct BaselineResult {
+    pub kind: BaselineKind,
+    pub n_workers: usize,
+    pub tier: usize,
+    pub local_batch: usize,
+    pub t_iter: f64,
+    pub c_iter: f64,
+    pub compute_s: f64,
+    pub sync_s: f64,
+}
+
+impl BaselineResult {
+    pub fn throughput(&self, global_batch: usize) -> f64 {
+        global_batch as f64 / self.t_iter
+    }
+}
+
+/// Memory needed by a DP worker training the *whole* model with `local`
+/// samples per iteration — same accounting as constraint (3b) with one
+/// stage covering all layers.
+fn dp_worker_mem_bytes(
+    model: &ModelProfile,
+    platform: &PlatformSpec,
+    local: usize,
+    n_workers: usize,
+) -> u64 {
+    let act_per_sample = model.total_act_bytes() / MICRO_BATCH as u64;
+    let copies = if n_workers == 1 { 2 } else { 4 };
+    act_per_sample * local as u64
+        + copies * model.total_param_bytes()
+        + platform.base_mem_mb * 1024 * 1024
+}
+
+/// GA variant: only one accumulation micro-step (batch 1) resident.
+fn ga_worker_mem_bytes(
+    model: &ModelProfile,
+    platform: &PlatformSpec,
+    n_workers: usize,
+) -> u64 {
+    dp_worker_mem_bytes(model, platform, 1, n_workers)
+}
+
+/// Largest local batch that fits on `tier` (0 if even batch-1 OOMs).
+pub fn max_local_batch(
+    model: &ModelProfile,
+    platform: &PlatformSpec,
+    tier: usize,
+    global_batch: usize,
+    n_workers: usize,
+) -> usize {
+    let cap = platform.tier(tier).mem_bytes();
+    let mut best = 0;
+    for local in 1..=global_batch {
+        if dp_worker_mem_bytes(model, platform, local, n_workers) <= cap {
+            best = local;
+        } else {
+            break;
+        }
+    }
+    best
+}
+
+/// Evaluate a baseline on (model, platform, global batch). Returns `None`
+/// when no feasible configuration exists (the OOM failures §5.1 reports).
+pub fn evaluate_baseline(
+    kind: BaselineKind,
+    model: &ModelProfile,
+    platform: &PlatformSpec,
+    global_batch: usize,
+    ps_vm: VmType,
+) -> Option<BaselineResult> {
+    let tier = platform.max_tier();
+
+    // LambdaML strategy: max memory, max local batch => fewest workers.
+    // Find the smallest worker count n (dividing the batch) whose local
+    // batch fits.
+    let mut chosen: Option<(usize, usize)> = None; // (n, local)
+    for n in divisors(global_batch) {
+        let local = global_batch / n;
+        if dp_worker_mem_bytes(model, platform, local, n)
+            <= platform.tier(tier).mem_bytes()
+        {
+            chosen = Some((n, local));
+            break; // divisors ascending => fewest workers first
+        }
+    }
+    let (n, local) = chosen?;
+
+    // GA variants keep the worker count but shrink memory to the
+    // batch-1 footprint and allocate the smallest tier that fits.
+    let (tier, eff_speed_tier) = if kind.uses_ga() {
+        let need = ga_worker_mem_bytes(model, platform, n);
+        let t = (0..platform.n_tiers())
+            .find(|&j| platform.tier(j).mem_bytes() >= need)?;
+        (t, t)
+    } else {
+        (tier, tier)
+    };
+
+    // compute: per-sample forward+backward at the worker's tier
+    let per_micro =
+        model.total_fwd_s(eff_speed_tier) + model.total_bwd_s(eff_speed_tier);
+    let per_sample = per_micro / MICRO_BATCH as f64;
+    let beta = if n > 1 { platform.beta } else { 1.0 };
+    let compute_s = beta * per_sample * local as f64;
+
+    // sync: full-model gradients among n workers
+    let w = platform.effective_bandwidth(tier, n);
+    let grad_bytes = model.total_param_bytes() as f64;
+    let sync_s = if n == 1 {
+        0.0
+    } else if kind.uses_ps() {
+        ps_sync_time(grad_bytes, n, w, ps_vm.bandwidth_bps, 0.01)
+    } else {
+        sync_time(
+            SyncAlgorithm::ScatterReduce,
+            grad_bytes,
+            n,
+            w,
+            platform.storage.latency_s,
+        )
+    };
+
+    let t_iter = compute_s + sync_s;
+    let mem_gb = platform.tier(tier).mem_gb() * n as f64;
+    let mut c_iter = platform.price_per_gb_s * mem_gb * t_iter;
+    if kind.uses_ps() && n > 1 {
+        c_iter += ps_vm.cost(t_iter);
+    }
+    Some(BaselineResult {
+        kind,
+        n_workers: n,
+        tier,
+        local_batch: local,
+        t_iter,
+        c_iter,
+        compute_s,
+        sync_s,
+    })
+}
+
+fn divisors(n: usize) -> Vec<usize> {
+    (1..=n).filter(|d| n % d == 0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::platform::pricing::C5_9XLARGE;
+
+    #[test]
+    fn lambda_ml_small_batch_single_worker() {
+        // bs 16 fits on one 10 GB worker for ResNet101 => no sync time
+        let p = PlatformSpec::aws_lambda();
+        let m = zoo::resnet101(&p);
+        let r = evaluate_baseline(BaselineKind::LambdaML, &m, &p, 16, C5_9XLARGE)
+            .unwrap();
+        assert_eq!(r.n_workers, 1);
+        assert_eq!(r.sync_s, 0.0);
+    }
+
+    #[test]
+    fn big_model_big_batch_needs_many_workers_and_syncs() {
+        let p = PlatformSpec::aws_lambda();
+        let m = zoo::amoebanet_d36(&p);
+        let r = evaluate_baseline(BaselineKind::LambdaML, &m, &p, 256, C5_9XLARGE)
+            .unwrap();
+        assert!(r.n_workers > 4, "{r:?}");
+        // Fig 1(a): communication dominates compute for D36
+        assert!(r.sync_s > r.compute_s, "{r:?}");
+    }
+
+    #[test]
+    fn ga_uses_less_memory_but_more_time() {
+        let p = PlatformSpec::aws_lambda();
+        let m = zoo::amoebanet_d18(&p);
+        let base = evaluate_baseline(BaselineKind::LambdaML, &m, &p, 64, C5_9XLARGE)
+            .unwrap();
+        let ga =
+            evaluate_baseline(BaselineKind::LambdaMLGA, &m, &p, 64, C5_9XLARGE)
+                .unwrap();
+        assert!(ga.tier < base.tier);
+        assert!(ga.t_iter > base.t_iter);
+        assert_eq!(ga.n_workers, base.n_workers);
+    }
+
+    #[test]
+    fn hybrid_ps_server_bottleneck_at_scale() {
+        // §5.2 third observation: PS lags LambdaML for big models/batches
+        let p = PlatformSpec::aws_lambda();
+        let m = zoo::bert_large(&p);
+        let ps = evaluate_baseline(BaselineKind::HybridPS, &m, &p, 256, C5_9XLARGE)
+            .unwrap();
+        let sr = evaluate_baseline(BaselineKind::LambdaML, &m, &p, 256, C5_9XLARGE)
+            .unwrap();
+        assert!(ps.n_workers > 8);
+        assert!(ps.sync_s > sr.sync_s * 0.8, "ps {ps:?} vs sr {sr:?}");
+    }
+
+    #[test]
+    fn divisors_ascending() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+    }
+}

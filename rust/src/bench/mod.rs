@@ -1,0 +1,570 @@
+//! Figure/table regeneration harness — one function per table AND figure
+//! of the paper's evaluation (§5). Each prints the same rows/series the
+//! paper reports; `cargo bench` wraps these with timing, and
+//! `funcpipe fig <id>` runs them directly. DESIGN.md §5 maps ids→modules.
+
+use crate::baselines::{evaluate_baseline, BaselineKind};
+use crate::collective::{self, SyncAlgorithm};
+use crate::model::{merge_layers, zoo, MergeCriterion, ModelProfile, Plan};
+use crate::pipeline::simulate::simulate_iteration_noisy;
+use crate::planner::bayes::BayesOpt;
+use crate::planner::tpdmp::Tpdmp;
+use crate::planner::{
+    pareto_front, recommend, sweep, CoOptimizer, PerfModel, SweepPoint,
+    DEFAULT_WEIGHTS,
+};
+use crate::platform::network::BandwidthModel;
+use crate::platform::pricing::{C5_9XLARGE, P3_2XLARGE, R7_2XLARGE};
+use crate::platform::PlatformSpec;
+use crate::util::humansize::{secs, usd};
+use crate::util::table::{pct_change, speedup, Table};
+
+fn model_for(name: &str, platform: &PlatformSpec, layers: usize) -> ModelProfile {
+    merge_layers(
+        &zoo::by_name(name, platform).expect("zoo model"),
+        layers,
+        MergeCriterion::Compute,
+    )
+}
+
+fn funcpipe_sweep(
+    model: &ModelProfile,
+    platform: &PlatformSpec,
+    global_batch: usize,
+) -> Vec<SweepPoint> {
+    let opt = CoOptimizer::new(model, platform);
+    let n_micro = global_batch / zoo::MICRO_BATCH;
+    sweep(&DEFAULT_WEIGHTS, |w| {
+        opt.solve(n_micro, w).map(|(plan, perf, _)| (plan, perf))
+    })
+}
+
+/// Fig. 1: (a) LambdaML's communication bottleneck on AmoebaNet-D36 with
+/// 8 workers; (b) three configurations (TPDMP=B1, Bayes=B2, FuncPipe).
+pub fn fig1() {
+    let p = PlatformSpec::aws_lambda();
+    let m = zoo::amoebanet_d36(&p);
+
+    let mut t = Table::new(
+        "Fig 1(a) — LambdaML on AmoebaNet-D36, 8 workers (per iteration)",
+    )
+    .header(["local batch", "computation", "communication", "comm/comp"]);
+    for (gb, n) in [(64usize, 8usize), (256, 8)] {
+        // force 8 workers as in the figure
+        let local = gb / n;
+        let tier = p.max_tier();
+        let per_micro = m.total_fwd_s(tier) + m.total_bwd_s(tier);
+        let compute = p.beta * per_micro * local as f64 / zoo::MICRO_BATCH as f64;
+        let comm = collective::sync_time(
+            SyncAlgorithm::ScatterReduce,
+            m.total_param_bytes() as f64,
+            n,
+            p.effective_bandwidth(tier, n),
+            p.storage.latency_s,
+        );
+        t.row([
+            local.to_string(),
+            secs(compute),
+            secs(comm),
+            format!("{:.2}", comm / compute),
+        ]);
+    }
+    t.print();
+
+    let mb = merge_layers(&m, 8, MergeCriterion::Compute);
+    let alpha = (1.0, 2e-4);
+    let gb = 64;
+    let n_micro = gb / zoo::MICRO_BATCH;
+    let b1 = Tpdmp::new(&mb, &p).solve(n_micro, alpha);
+    let b2 = BayesOpt::new(&mb, &p).solve(n_micro, alpha);
+    let fp = CoOptimizer::new(&mb, &p).solve(n_micro, alpha);
+    let mut t = Table::new("Fig 1(b) — optimized configurations, D36 batch 64")
+        .header(["config", "iter time", "iter cost"]);
+    if let Some((_, perf)) = &b1 {
+        t.row(["B1 (TPDMP)".to_string(), secs(perf.t_iter), usd(perf.c_iter)]);
+    }
+    if let Some((_, perf)) = &b2 {
+        t.row(["B2 (Bayes)".to_string(), secs(perf.t_iter), usd(perf.c_iter)]);
+    }
+    if let Some((_, perf, _)) = &fp {
+        t.row(["FuncPipe".to_string(), secs(perf.t_iter), usd(perf.c_iter)]);
+    }
+    t.print();
+}
+
+/// Fig. 5: overall performance — 4 models × batch {16, 64, 256},
+/// FuncPipe Pareto points + recommendation vs the four baselines.
+pub fn fig5() {
+    let p = PlatformSpec::aws_lambda();
+    for name in zoo::MODEL_NAMES {
+        let zoo_m = zoo::by_name(name, &p).unwrap();
+        let m = model_for(name, &p, 8);
+        for gb in [16usize, 64, 256] {
+            let mut t = Table::new(format!(
+                "Fig 5 — {name}, global batch {gb} (AWS)"
+            ))
+            .header(["design", "t_iter", "c_iter", "vs best baseline"]);
+            let mut best_base: Option<f64> = None;
+            for kind in BaselineKind::ALL {
+                if let Some(r) =
+                    evaluate_baseline(kind, &zoo_m, &p, gb, C5_9XLARGE)
+                {
+                    best_base = Some(
+                        best_base.map_or(r.t_iter, |b: f64| b.min(r.t_iter)),
+                    );
+                    t.row([
+                        kind.name().to_string(),
+                        secs(r.t_iter),
+                        usd(r.c_iter),
+                        String::new(),
+                    ]);
+                } else {
+                    t.row([
+                        kind.name().to_string(),
+                        "OOM".into(),
+                        String::new(),
+                        String::new(),
+                    ]);
+                }
+            }
+            let points = funcpipe_sweep(&m, &p, gb);
+            let front = pareto_front(&points);
+            let rec = recommend(&front);
+            for pt in &front {
+                let is_rec =
+                    rec.as_ref().map(|r| r.plan == pt.plan).unwrap_or(false);
+                let cmp = if is_rec {
+                    best_base
+                        .map(|b| speedup(b, pt.perf.t_iter))
+                        .unwrap_or_default()
+                } else {
+                    String::new()
+                };
+                t.row([
+                    if is_rec {
+                        "FuncPipe (recommended)".to_string()
+                    } else {
+                        format!(
+                            "FuncPipe (α2={})",
+                            pt.weights.1
+                        )
+                    },
+                    secs(pt.perf.t_iter),
+                    usd(pt.perf.c_iter),
+                    cmp,
+                ]);
+            }
+            t.print();
+        }
+    }
+}
+
+/// Fig. 6: training-time breakdown (computation / pipeline flush /
+/// synchronization).
+pub fn fig6() {
+    let p = PlatformSpec::aws_lambda();
+    let cases = [
+        ("bert-large", 16usize),
+        ("resnet101", 64),
+        ("bert-large", 64),
+        ("amoebanet-d36", 64),
+    ];
+    for (name, gb) in cases {
+        let zoo_m = zoo::by_name(name, &p).unwrap();
+        let m = model_for(name, &p, 8);
+        let mut t = Table::new(format!("Fig 6 — breakdown, {name} batch {gb}"))
+            .header(["design", "compute", "flush", "sync", "total"]);
+        let points = funcpipe_sweep(&m, &p, gb);
+        for pt in pareto_front(&points) {
+            t.row([
+                format!("FuncPipe α2={}", pt.weights.1),
+                secs(pt.perf.compute_s),
+                secs(pt.perf.flush_s),
+                secs(pt.perf.sync_s),
+                secs(pt.perf.t_iter),
+            ]);
+        }
+        for kind in [BaselineKind::LambdaML, BaselineKind::HybridPS] {
+            if let Some(r) = evaluate_baseline(kind, &zoo_m, &p, gb, C5_9XLARGE)
+            {
+                t.row([
+                    kind.name().to_string(),
+                    secs(r.compute_s),
+                    "-".to_string(),
+                    secs(r.sync_s),
+                    secs(r.t_iter),
+                ]);
+            }
+        }
+        t.print();
+    }
+}
+
+/// Fig. 7: scalability — normalized throughput vs total allocated memory
+/// as the global batch grows, FuncPipe vs LambdaML.
+pub fn fig7() {
+    let p = PlatformSpec::aws_lambda();
+    for name in ["amoebanet-d18", "amoebanet-d36"] {
+        let zoo_m = zoo::by_name(name, &p).unwrap();
+        let m = model_for(name, &p, 8);
+        let mut t = Table::new(format!("Fig 7 — scalability, {name}"))
+            .header([
+                "global batch",
+                "design",
+                "total mem (GB)",
+                "throughput (samples/s)",
+                "normalized",
+            ]);
+        let mut norm: Option<f64> = None;
+        for gb in [32usize, 64, 128, 256, 512, 1024] {
+            if let Some(r) = evaluate_baseline(
+                BaselineKind::LambdaML,
+                &zoo_m,
+                &p,
+                gb,
+                C5_9XLARGE,
+            ) {
+                let thr = r.throughput(gb);
+                let n0 = *norm.get_or_insert(thr);
+                t.row([
+                    gb.to_string(),
+                    "LambdaML".into(),
+                    format!(
+                        "{:.0}",
+                        r.n_workers as f64 * p.tier(r.tier).mem_gb()
+                    ),
+                    format!("{thr:.2}"),
+                    format!("{:.2}", thr / n0),
+                ]);
+            }
+            let points = funcpipe_sweep(&m, &p, gb);
+            if let Some(rec) = recommend(&points) {
+                let thr = rec.perf.throughput(gb);
+                let n0 = *norm.get_or_insert(thr);
+                t.row([
+                    gb.to_string(),
+                    "FuncPipe".into(),
+                    format!("{:.0}", rec.perf.total_mem_gb),
+                    format!("{thr:.2}"),
+                    format!("{:.2}", thr / n0),
+                ]);
+            }
+        }
+        t.print();
+    }
+}
+
+/// Fig. 8: pipelined vs non-pipelined scatter-reduce as the data-parallel
+/// degree grows (D18, 3-stage plan) — training throughput and sync time.
+pub fn fig8() {
+    let p = PlatformSpec::aws_lambda();
+    let m = model_for("amoebanet-d18", &p, 6);
+    // the recommended 3-stage shape from §5.5 (d starts at 2)
+    let cuts = vec![1usize, 3];
+    let tiers = vec![p.max_tier(); 3];
+    let mut t = Table::new(
+        "Fig 8 — scatter-reduce: pipelined vs plain (D18, 3 stages)",
+    )
+    .header([
+        "dp",
+        "sync plain (model)",
+        "sync piped (model)",
+        "sync plain (flowsim)",
+        "sync piped (flowsim)",
+        "sync cut",
+        "throughput gain",
+    ]);
+    for dp in [2usize, 4, 8, 16, 32] {
+        let plan = Plan {
+            cuts: cuts.clone(),
+            dp,
+            stage_tiers: tiers.clone(),
+            n_micro_global: 8 * dp, // batch grows with dp (§5.5)
+        };
+        let pm_plain =
+            PerfModel::new(&m, &p).with_sync(SyncAlgorithm::ScatterReduce);
+        let pm_piped = PerfModel::new(&m, &p);
+        let perf_plain = pm_plain.evaluate(&plan);
+        let perf_piped = pm_piped.evaluate(&plan);
+
+        // flow-level simulation of the biggest stage's sync
+        let (lo, hi) = plan.stage_ranges(m.n_layers())[2];
+        let grad = m.range_param_bytes(lo, hi) as f64;
+        let w = p.effective_bandwidth(p.max_tier(), plan.n_workers());
+        let net = BandwidthModel::uniform(dp, w, p.storage.latency_s);
+        let sim_plain =
+            collective::sim::simulate_scatter_reduce(dp, grad, &net);
+        let sim_piped =
+            collective::sim::simulate_pipelined_scatter_reduce(dp, grad, &net);
+
+        t.row([
+            dp.to_string(),
+            secs(perf_plain.sync_s),
+            secs(perf_piped.sync_s),
+            secs(sim_plain),
+            secs(sim_piped),
+            pct_change(perf_plain.sync_s, perf_piped.sync_s),
+            // throughput gain = t_plain / t_piped
+            speedup(perf_plain.t_iter, perf_piped.t_iter),
+        ]);
+    }
+    t.print();
+}
+
+/// Fig. 9 + §5.6: co-optimization vs TPDMP vs Bayes (batch 64), with
+/// solution times.
+pub fn fig9() {
+    let p = PlatformSpec::aws_lambda();
+    let alpha_list = DEFAULT_WEIGHTS;
+    let mut solve_times = (0.0f64, 0.0f64, 0.0f64);
+    for name in zoo::MODEL_NAMES {
+        let m = model_for(name, &p, 8);
+        let n_micro = 64 / zoo::MICRO_BATCH;
+        let mut t = Table::new(format!("Fig 9 — co-opt comparison, {name} batch 64"))
+            .header(["optimizer", "weights α2", "t_iter", "c_iter"]);
+        for alpha in alpha_list {
+            let t0 = std::time::Instant::now();
+            if let Some((_, perf, _)) =
+                CoOptimizer::new(&m, &p).solve(n_micro, alpha)
+            {
+                t.row([
+                    "FuncPipe".to_string(),
+                    format!("{}", alpha.1),
+                    secs(perf.t_iter),
+                    usd(perf.c_iter),
+                ]);
+            }
+            solve_times.0 += t0.elapsed().as_secs_f64();
+
+            let t0 = std::time::Instant::now();
+            if let Some((_, perf)) = Tpdmp::new(&m, &p).solve(n_micro, alpha) {
+                t.row([
+                    "TPDMP".to_string(),
+                    format!("{}", alpha.1),
+                    secs(perf.t_iter),
+                    usd(perf.c_iter),
+                ]);
+            }
+            solve_times.1 += t0.elapsed().as_secs_f64();
+
+            let t0 = std::time::Instant::now();
+            if let Some((_, perf)) = BayesOpt::new(&m, &p).solve(n_micro, alpha)
+            {
+                t.row([
+                    "Bayes".to_string(),
+                    format!("{}", alpha.1),
+                    secs(perf.t_iter),
+                    usd(perf.c_iter),
+                ]);
+            }
+            solve_times.2 += t0.elapsed().as_secs_f64();
+        }
+        t.print();
+    }
+    let n = (zoo::MODEL_NAMES.len() * alpha_list.len()) as f64;
+    let mut t = Table::new("§5.6 — average solution time per configuration")
+        .header(["optimizer", "avg solve time"]);
+    t.row(["FuncPipe (B&B)".to_string(), secs(solve_times.0 / n)]);
+    t.row(["TPDMP (grid)".to_string(), secs(solve_times.1 / n)]);
+    t.row(["Bayes (100 rounds)".to_string(), secs(solve_times.2 / n)]);
+    t.print();
+}
+
+/// Fig. 10: Alibaba Cloud — shared 10 Gb/s OSS cap; ResNet101 & D36 at
+/// batch 64/256; HybridPS is the strongest baseline there (§5.7).
+pub fn fig10() {
+    let p = PlatformSpec::alibaba_fc();
+    for name in ["resnet101", "amoebanet-d36"] {
+        let zoo_m = zoo::by_name(name, &p).unwrap();
+        let m = model_for(name, &p, 8);
+        for gb in [64usize, 256] {
+            let mut t = Table::new(format!(
+                "Fig 10 — Alibaba FC, {name} batch {gb}"
+            ))
+            .header(["design", "t_iter", "c_iter"]);
+            for kind in BaselineKind::ALL {
+                if let Some(r) =
+                    evaluate_baseline(kind, &zoo_m, &p, gb, R7_2XLARGE)
+                {
+                    t.row([
+                        kind.name().to_string(),
+                        secs(r.t_iter),
+                        usd(r.c_iter),
+                    ]);
+                }
+            }
+            let points = funcpipe_sweep(&m, &p, gb);
+            if let Some(rec) = recommend(&points) {
+                t.row([
+                    "FuncPipe (recommended)".to_string(),
+                    secs(rec.perf.t_iter),
+                    usd(rec.perf.c_iter),
+                ]);
+            }
+            t.print();
+        }
+    }
+}
+
+/// Fig. 11: iteration time/cost as function bandwidth scales 1×..20×,
+/// plus the GPU reference points.
+pub fn fig11() {
+    for name in zoo::MODEL_NAMES {
+        let mut t = Table::new(format!(
+            "Fig 11 — bandwidth sweep, {name} batch 64"
+        ))
+        .header(["bandwidth", "design", "t_iter", "c_iter"]);
+        for scale in [1.0f64, 2.0, 4.0, 8.0, 20.0] {
+            let p = PlatformSpec::aws_lambda().with_bandwidth_scale(scale);
+            let zoo_m = zoo::by_name(name, &p).unwrap();
+            let m = model_for(name, &p, 8);
+            if let Some(r) = evaluate_baseline(
+                BaselineKind::LambdaML,
+                &zoo_m,
+                &p,
+                64,
+                C5_9XLARGE,
+            ) {
+                t.row([
+                    format!("{scale}x"),
+                    "LambdaML".into(),
+                    secs(r.t_iter),
+                    usd(r.c_iter),
+                ]);
+            }
+            let points = funcpipe_sweep(&m, &p, 64);
+            if let Some(rec) = recommend(&points) {
+                t.row([
+                    format!("{scale}x"),
+                    "FuncPipe".into(),
+                    secs(rec.perf.t_iter),
+                    usd(rec.perf.c_iter),
+                ]);
+            }
+        }
+        // GPU reference points: V100 VM + (announced) GPU function pricing.
+        // A V100 processes ~20x the samples/s of a 6-vCPU function for
+        // these models (paper: per-sample cost gap "tens of times").
+        let p = PlatformSpec::aws_lambda();
+        let zoo_m = zoo::by_name(name, &p).unwrap();
+        let per_micro =
+            zoo_m.total_fwd_s(p.max_tier()) + zoo_m.total_bwd_s(p.max_tier());
+        let gpu_t = per_micro * (64 / zoo::MICRO_BATCH) as f64 / 20.0;
+        t.row([
+            "—".into(),
+            "VM GPU (V100, grad-accum)".into(),
+            secs(gpu_t),
+            usd(P3_2XLARGE.cost(gpu_t)),
+        ]);
+        t.row([
+            "—".into(),
+            "GPU function (est.)".into(),
+            secs(gpu_t * 1.1),
+            usd(P3_2XLARGE.cost(gpu_t) * 1.3),
+        ]);
+        t.print();
+    }
+}
+
+/// Table 3: performance-model prediction error, validated against the
+/// discrete-event simulator on the recommended plans.
+pub fn table3() {
+    let p = PlatformSpec::aws_lambda();
+    let mut t = Table::new(
+        "Table 3 — perf-model vs DES prediction error (t_iter)",
+    )
+    .header(["model", "bs16", "bs64", "bs256", "average"]);
+    let mut grand = Vec::new();
+    for name in zoo::MODEL_NAMES {
+        let m = model_for(name, &p, 8);
+        let mut row = vec![name.to_string()];
+        let mut errs = Vec::new();
+        for gb in [16usize, 64, 256] {
+            // average over every Pareto-sweep plan (single-worker plans
+            // match the DES trivially; multi-stage/multi-dp ones are the
+            // interesting prediction targets)
+            let points = funcpipe_sweep(&m, &p, gb);
+            if points.is_empty() {
+                row.push("-".into());
+                continue;
+            }
+            let mut cell_errs = Vec::new();
+            for (i, pt) in points.iter().enumerate() {
+                // jittered DES = "measured" (σ=15% bandwidth variation,
+                // the phenomenon the paper blames for its errors)
+                let sim = simulate_iteration_noisy(
+                    &m,
+                    &p,
+                    &pt.plan,
+                    SyncAlgorithm::PipelinedScatterReduce,
+                    Some((0xBEEF ^ (gb as u64) << 8 ^ i as u64, 0.15)),
+                );
+                cell_errs.push(
+                    (pt.perf.t_iter - sim.t_iter).abs() / sim.t_iter * 100.0,
+                );
+            }
+            let err =
+                cell_errs.iter().sum::<f64>() / cell_errs.len() as f64;
+            errs.push(err);
+            grand.push(err);
+            row.push(format!("{err:.1}%"));
+        }
+        row.push(format!(
+            "{:.1}%",
+            errs.iter().sum::<f64>() / errs.len().max(1) as f64
+        ));
+        t.row(row);
+    }
+    t.row(vec![
+        "average".to_string(),
+        String::new(),
+        String::new(),
+        String::new(),
+        format!(
+            "{:.1}%",
+            grand.iter().sum::<f64>() / grand.len().max(1) as f64
+        ),
+    ]);
+    t.print();
+}
+
+/// Quick sanity used by tests: the headline Fig 5 comparison for one case.
+pub fn headline_comparison(
+    name: &str,
+    gb: usize,
+) -> Option<(f64, f64, f64, f64)> {
+    let p = PlatformSpec::aws_lambda();
+    let zoo_m = zoo::by_name(name, &p)?;
+    let m = model_for(name, &p, 8);
+    let base = evaluate_baseline(BaselineKind::LambdaML, &zoo_m, &p, gb, C5_9XLARGE)?;
+    let rec = recommend(&funcpipe_sweep(&m, &p, gb))?;
+    Some((base.t_iter, base.c_iter, rec.perf.t_iter, rec.perf.c_iter))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_speedup_in_paper_band() {
+        // Fig 5: 1.3x-2.2x speedup and cost reduction vs LambdaML on the
+        // larger models/batches — check the *shape*: FuncPipe faster and
+        // cheaper on D36/BERT at batch 256.
+        for name in ["amoebanet-d36", "bert-large"] {
+            let (bt, bc, ft, fc) = headline_comparison(name, 256).unwrap();
+            let sp = bt / ft;
+            assert!(sp > 1.2, "{name}: speedup only {sp:.2}");
+            assert!(fc < bc, "{name}: cost {fc} !< {bc}");
+        }
+    }
+
+    #[test]
+    fn small_batch_is_comparable() {
+        // Fig 5 second observation: at batch 16 existing designs are
+        // already cost-efficient; FuncPipe should be comparable (not
+        // dramatically cheaper).
+        let (_, bc, _, fc) = headline_comparison("resnet101", 16).unwrap();
+        assert!(fc <= bc * 1.25, "FuncPipe {fc} ≫ LambdaML {bc}");
+    }
+
+}

@@ -1,0 +1,172 @@
+//! Closed-form synchronization times — eqs. (1) and (2) of §3.3 plus the
+//! parameter-server formula used by the HybridPS baseline model.
+
+/// Which synchronization algorithm a stage's replicas use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncAlgorithm {
+    /// LambdaML's 3-phase storage scatter-reduce (eq. (1)).
+    ScatterReduce,
+    /// FuncPipe's pipelined scatter-reduce (eq. (2)).
+    PipelinedScatterReduce,
+}
+
+impl SyncAlgorithm {
+    /// The (γ, δ) parameters of eq. (9): `t_s = γ·s/W + δ·t_lat`.
+    ///
+    /// Pipelined: γ=2, δ=2+n. Non-pipelined (from eq. (1)): γ=3−2/n, δ=4.
+    pub fn gamma_delta(&self, n: usize) -> (f64, f64) {
+        match self {
+            SyncAlgorithm::PipelinedScatterReduce => (2.0, 2.0 + n as f64),
+            SyncAlgorithm::ScatterReduce => {
+                (3.0 - 2.0 / n as f64, 4.0)
+            }
+        }
+    }
+}
+
+/// Synchronization time of `grad_bytes` among `n` workers of per-worker
+/// bandwidth `w_bps` via `alg`, with storage latency `t_lat`.
+///
+/// `n == 1` needs no synchronization and returns 0.
+pub fn sync_time(
+    alg: SyncAlgorithm,
+    grad_bytes: f64,
+    n: usize,
+    w_bps: f64,
+    t_lat: f64,
+) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let (gamma, delta) = alg.gamma_delta(n);
+    gamma * grad_bytes / w_bps + delta * t_lat
+}
+
+/// Server-side aggregation throughput: deserializing + merging each
+/// replica's gradients burdens the single VM (§5.2 "the server node in
+/// this centralized structure can be heavily burdened") — this is why
+/// HybridPS falls behind LambdaML at scale despite its fat NIC.
+pub const PS_SERVER_PROC_BPS: f64 = 1.0e9;
+
+/// Parameter-server synchronization (HybridPS): all `n` workers upload
+/// gradients to the VM and download updated parameters. The wall time is
+/// bounded by either the worker NIC (`2·s/w`) or the server NIC carrying
+/// all replicas (`2·s·n/w_ps`), plus the server-side aggregation time and
+/// two round trips.
+pub fn ps_sync_time(
+    grad_bytes: f64,
+    n: usize,
+    w_worker_bps: f64,
+    w_server_bps: f64,
+    rtt: f64,
+) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    let worker_bound = 2.0 * grad_bytes / w_worker_bps;
+    let server_bound = 2.0 * grad_bytes * n as f64 / w_server_bps;
+    let server_proc = if n > 1 {
+        grad_bytes * n as f64 / PS_SERVER_PROC_BPS
+    } else {
+        0.0
+    };
+    worker_bound.max(server_bound) + server_proc + 2.0 * rtt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: f64 = 1.0e6;
+
+    #[test]
+    fn paper_example_280mb_8_workers() {
+        // §3.3: "synchronizing a 280 MB model among 8 workers [at 70 MB/s]
+        // can be reduced by 27%, from 11 s to 8 s" (transfer time only).
+        let s = 280.0 * MB;
+        let w = 70.0 * MB;
+        let plain = sync_time(SyncAlgorithm::ScatterReduce, s, 8, w, 0.0);
+        let piped =
+            sync_time(SyncAlgorithm::PipelinedScatterReduce, s, 8, w, 0.0);
+        assert!((plain - 11.0).abs() < 0.01, "plain {plain}");
+        assert!((piped - 8.0).abs() < 0.01, "piped {piped}");
+        let cut = 1.0 - piped / plain;
+        assert!((cut - 0.27).abs() < 0.01, "reduction {cut}");
+    }
+
+    #[test]
+    fn pipelined_always_fast_er_in_transfer() {
+        for n in 2..64 {
+            let a = sync_time(SyncAlgorithm::ScatterReduce, 1e8, n, 7e7, 0.0);
+            let b = sync_time(
+                SyncAlgorithm::PipelinedScatterReduce,
+                1e8,
+                n,
+                7e7,
+                0.0,
+            );
+            // at n=2 the transfer terms coincide (3-2/2 == 2); strictly
+            // better from n=3 on
+            if n == 2 {
+                assert!((b - a).abs() < 1e-9, "n=2: {b} vs {a}");
+            } else {
+                assert!(b < a, "n={n}: {b} !< {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_latency_grows_with_n() {
+        // eq. (2): δ = 2+n — latency term scales with workers, but stays
+        // far below the transfer term for realistic sizes (§3.3).
+        let t = |n| {
+            sync_time(SyncAlgorithm::PipelinedScatterReduce, 280.0 * MB, n, 70.0 * MB, 0.04)
+        };
+        assert!(t(16) > t(8));
+        let transfer = 2.0 * 280.0 / 70.0;
+        assert!(t(16) - transfer < 1.0); // latency portion < 1 s
+    }
+
+    #[test]
+    fn max_theoretical_reduction_is_one_third() {
+        // (1) -> (2): transfer drops from 3−2/n to 2; as n→∞ the cut
+        // approaches 1/3 (§5.5 "up to 33%").
+        let cut = |n: usize| {
+            let a = sync_time(SyncAlgorithm::ScatterReduce, 1e9, n, 1e8, 0.0);
+            let b = sync_time(
+                SyncAlgorithm::PipelinedScatterReduce,
+                1e9,
+                n,
+                1e8,
+                0.0,
+            );
+            1.0 - b / a
+        };
+        assert!(cut(1024) > 0.33);
+        assert!(cut(1024) < 0.334);
+        assert!(cut(2) < cut(32));
+    }
+
+    #[test]
+    fn single_worker_needs_no_sync() {
+        assert_eq!(
+            sync_time(SyncAlgorithm::PipelinedScatterReduce, 1e9, 1, 1e6, 1.0),
+            0.0
+        );
+    }
+
+    #[test]
+    fn ps_server_becomes_bottleneck() {
+        // few workers: worker NIC bound; many: server NIC + aggregation
+        let few = ps_sync_time(1e8, 2, 7e7, 1.25e9, 0.0);
+        let few_expected = 2.0 * 1e8 / 7e7 + 2.0 * 1e8 / PS_SERVER_PROC_BPS;
+        assert!((few - few_expected).abs() < 1e-6, "{few} vs {few_expected}");
+        let many = ps_sync_time(1e8, 64, 7e7, 1.25e9, 0.0);
+        let many_expected = 2.0 * 1e8 * 64.0 / 1.25e9
+            + 64.0 * 1e8 / PS_SERVER_PROC_BPS;
+        assert!((many - many_expected).abs() < 1e-6);
+        assert!(many > few);
+        // per-worker sync time grows with n — the paper's scaling pain
+        assert!(many / 64.0 > few / 64.0);
+    }
+}

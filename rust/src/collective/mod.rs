@@ -1,0 +1,105 @@
+//! Storage-based communication collectives (§3.3).
+//!
+//! Serverless functions cannot open sockets to each other; every transfer
+//! is relayed through object storage. This module implements the paper's
+//! synchronization algorithms in three mutually-validating forms:
+//!
+//! * **analytic** — the closed-form times of eqs. (1)/(2) used inside the
+//!   planner's performance model;
+//! * **simulated** — flow schedules on the max-min-fair [`FlowSim`]
+//!   network, used by Fig. 8 / Table 3 reproductions;
+//! * **real** — threaded implementations over an [`ObjectStore`] that move
+//!   actual `f32` gradients, used by the end-to-end trainer.
+//!
+//! The three agree by construction and by test (`collective_equiv.rs`).
+//!
+//! [`FlowSim`]: crate::platform::FlowSim
+//! [`ObjectStore`]: crate::platform::ObjectStore
+
+pub mod analytic;
+pub mod parameter_server;
+pub mod pipelined;
+pub mod scatter_reduce;
+pub mod sendrecv;
+pub mod sim;
+
+pub use analytic::{ps_sync_time, sync_time, SyncAlgorithm};
+
+/// Serialize f32 gradients little-endian (the wire format of every
+/// storage object; matches the artifacts' raw `.f32` convention).
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_f32s(bytes: &[u8]) -> Vec<f32> {
+    assert_eq!(bytes.len() % 4, 0, "byte length {} not 4-aligned", bytes.len());
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Contiguous near-equal split ranges of a length-`n` vector into `k`
+/// parts: the first `n % k` parts get one extra element.
+pub fn split_ranges(n: usize, k: usize) -> Vec<(usize, usize)> {
+    assert!(k >= 1);
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut lo = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    out
+}
+
+/// Elementwise in-place accumulate: `acc += delta`.
+pub fn add_assign(acc: &mut [f32], delta: &[f32]) {
+    assert_eq!(acc.len(), delta.len());
+    for (a, d) in acc.iter_mut().zip(delta) {
+        *a += d;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_roundtrip() {
+        let xs = vec![0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&xs)), xs);
+    }
+
+    #[test]
+    fn split_ranges_cover_exactly() {
+        for n in [1usize, 7, 100, 1023] {
+            for k in [1usize, 2, 3, 8] {
+                let r = split_ranges(n, k);
+                assert_eq!(r.len(), k);
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r[k - 1].1, n);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+                let sizes: Vec<usize> = r.iter().map(|(a, b)| b - a).collect();
+                let max = sizes.iter().max().unwrap();
+                let min = sizes.iter().min().unwrap();
+                assert!(max - min <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn add_assign_adds() {
+        let mut a = vec![1.0f32, 2.0];
+        add_assign(&mut a, &[0.5, -2.0]);
+        assert_eq!(a, vec![1.5, 0.0]);
+    }
+}

@@ -1,0 +1,122 @@
+//! Centralized parameter-server synchronization — the communication core
+//! of the HybridPS baseline (Cirrus-style, §2.2/§5.1). A dedicated server
+//! thread (standing in for the VM) aggregates worker gradients and
+//! publishes the merged result.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::scatter_reduce::{native_merge, MergeFn};
+use super::{bytes_to_f32s, f32s_to_bytes};
+use crate::platform::ObjectStore;
+
+fn push_key(group: &str, round: u64, from: usize) -> String {
+    format!("{group}/ps/r{round}/push/f{from}")
+}
+
+fn merged_key(group: &str, round: u64) -> String {
+    format!("{group}/ps/r{round}/merged")
+}
+
+/// Worker side: push local gradients, wait for the merged result.
+pub fn ps_sync_worker(
+    store: &Arc<dyn ObjectStore>,
+    group: &str,
+    round: u64,
+    rank: usize,
+    grads: &mut [f32],
+    timeout: Duration,
+) -> Result<()> {
+    store
+        .put(&push_key(group, round, rank), f32s_to_bytes(grads))
+        .context("ps push")?;
+    let merged = store
+        .get_blocking(&merged_key(group, round), timeout)
+        .context("ps pull")?;
+    grads.copy_from_slice(&bytes_to_f32s(&merged));
+    Ok(())
+}
+
+/// Server side: gather `n` pushes, merge, publish. Returns the merged
+/// gradient (the real PS would also apply the optimizer step here).
+pub fn ps_sync_server(
+    store: &Arc<dyn ObjectStore>,
+    group: &str,
+    round: u64,
+    n: usize,
+    len: usize,
+    merge: Option<&MergeFn>,
+    timeout: Duration,
+) -> Result<Vec<f32>> {
+    let native: &MergeFn = &native_merge;
+    let merge = merge.unwrap_or(native);
+    let mut acc = vec![0.0f32; len];
+    for rank in 0..n {
+        let bytes = store
+            .get_blocking(&push_key(group, round, rank), timeout)
+            .context("ps gather")?;
+        merge(&mut acc, &bytes_to_f32s(&bytes));
+        store.delete(&push_key(group, round, rank));
+    }
+    store
+        .put(&merged_key(group, round), f32s_to_bytes(&acc))
+        .context("ps publish")?;
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::MemStore;
+
+    #[test]
+    fn ps_roundtrip_sums_gradients() {
+        let n = 5;
+        let len = 33;
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let server = {
+            let store = store.clone();
+            std::thread::spawn(move || {
+                ps_sync_server(&store, "g", 0, n, len, None, Duration::from_secs(10)).unwrap()
+            })
+        };
+        let mut workers = Vec::new();
+        for rank in 0..n {
+            let store = store.clone();
+            workers.push(std::thread::spawn(move || {
+                let mut g = vec![(rank + 1) as f32; len];
+                ps_sync_worker(&store, "g", 0, rank, &mut g, Duration::from_secs(10)).unwrap();
+                g
+            }));
+        }
+        let merged = server.join().unwrap();
+        let want = (1..=n).sum::<usize>() as f32;
+        assert!(merged.iter().all(|&x| (x - want).abs() < 1e-5));
+        for w in workers {
+            let g = w.join().unwrap();
+            assert!(g.iter().all(|&x| (x - want).abs() < 1e-5));
+        }
+    }
+
+    #[test]
+    fn server_consumes_pushes() {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let server = {
+            let store = store.clone();
+            std::thread::spawn(move || {
+                ps_sync_server(&store, "h", 1, 2, 4, None, Duration::from_secs(10)).unwrap()
+            })
+        };
+        for rank in 0..2 {
+            let store = store.clone();
+            std::thread::spawn(move || {
+                let mut g = vec![1.0f32; 4];
+                ps_sync_worker(&store, "h", 1, rank, &mut g, Duration::from_secs(10)).unwrap();
+            });
+        }
+        server.join().unwrap();
+        assert!(store.list("h/ps/r1/push").is_empty());
+    }
+}

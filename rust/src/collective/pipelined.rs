@@ -1,0 +1,232 @@
+//! FuncPipe's **pipelined scatter-reduce** (§3.3, Fig. 4(b)) — the paper's
+//! second contribution, real implementation over an [`ObjectStore`].
+//!
+//! The 3-phase algorithm wastes bandwidth because phase-1 uploads and
+//! phase-2 downloads are serial; this version runs them in duplex:
+//!
+//! * step 1:          worker *i* uploads split *i+1*;
+//! * step k (2..n−1): worker *i* uploads split *i+k* **while** downloading
+//!                    split *i* uploaded by worker *i−(k−1)* at step k−1;
+//! * step n:          worker *i* downloads split *i* from worker *i+1*.
+//!
+//! (indices mod n). Each worker then owns the fully-merged split *i* and
+//! the final exchange (upload merged split, fetch the others) completes
+//! the all-reduce. Transfer time drops from `3·s/w − 2s/(n·w)` to `2·s/w`
+//! — eq. (1) vs eq. (2).
+//!
+//! Duplex is realized with a dedicated uploader thread per worker: uploads
+//! of steps 1..n−1 are queued in order while the caller thread performs
+//! the (blocking) downloads and merges, so uplink and downlink genuinely
+//! overlap in the real path just as in the flow model.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::scatter_reduce::{native_merge, MergeFn};
+use super::{bytes_to_f32s, f32s_to_bytes, split_ranges};
+use crate::platform::ObjectStore;
+
+fn key(group: &str, round: u64, split: usize, from: usize) -> String {
+    format!("{group}/r{round}/ps{split}/f{from}")
+}
+
+fn merged_key(group: &str, round: u64, split: usize) -> String {
+    format!("{group}/r{round}/m{split}")
+}
+
+/// Pipelined scatter-reduce. Blocking; on return `grads` holds the
+/// elementwise sum across all `n` replicas.
+pub fn pipelined_scatter_reduce(
+    store: &Arc<dyn ObjectStore>,
+    group: &str,
+    round: u64,
+    rank: usize,
+    n: usize,
+    grads: &mut [f32],
+    merge: Option<&MergeFn>,
+    timeout: Duration,
+) -> Result<()> {
+    assert!(rank < n);
+    if n == 1 {
+        return Ok(());
+    }
+    let ranges = split_ranges(grads.len(), n);
+    let native: &MergeFn = &native_merge;
+    let merge = merge.unwrap_or(native);
+
+    // Uploader thread: streams the n-1 uploads of steps 1..=n-1 in order,
+    // concurrently with the downloads below (the duplex).
+    let (tx, rx) = mpsc::channel::<(String, Vec<u8>)>();
+    let up_store = store.clone();
+    let uploader = std::thread::spawn(move || -> Result<()> {
+        while let Ok((k, data)) = rx.recv() {
+            up_store.put(&k, data).context("pipelined upload")?;
+        }
+        Ok(())
+    });
+    for k in 1..n {
+        let split = (rank + k) % n;
+        let (lo, hi) = ranges[split];
+        tx.send((
+            key(group, round, split, rank),
+            f32s_to_bytes(&grads[lo..hi]),
+        ))
+        .expect("uploader alive");
+    }
+    drop(tx);
+
+    // Downloads of steps 2..=n: merge foreign copies of our split while
+    // the uploader drains.
+    let (mylo, myhi) = ranges[rank];
+    let mut merged = grads[mylo..myhi].to_vec();
+    for k in 2..=n {
+        let src = (rank + n - (k - 1)) % n;
+        let bytes = store
+            .get_blocking(&key(group, round, rank, src), timeout)
+            .context("pipelined download")?;
+        merge(&mut merged, &bytes_to_f32s(&bytes));
+    }
+    uploader
+        .join()
+        .expect("uploader panicked")
+        .context("uploader failed")?;
+
+    // Final exchange (same as phase 3 of the baseline).
+    store
+        .put(&merged_key(group, round, rank), f32s_to_bytes(&merged))
+        .context("merged upload")?;
+    grads[mylo..myhi].copy_from_slice(&merged);
+    for j in 0..n {
+        if j == rank {
+            continue;
+        }
+        let bytes = store
+            .get_blocking(&merged_key(group, round, j), timeout)
+            .context("merged download")?;
+        let (lo, hi) = ranges[j];
+        grads[lo..hi].copy_from_slice(&bytes_to_f32s(&bytes));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{MemStore, ThrottledStore};
+
+    fn run_n(n: usize, len: usize) -> Vec<Vec<f32>> {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let store = store.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut grads: Vec<f32> =
+                    (0..len).map(|i| ((rank + 1) * (i + 1)) as f32).collect();
+                pipelined_scatter_reduce(
+                    &store,
+                    "pg",
+                    0,
+                    rank,
+                    n,
+                    &mut grads,
+                    None,
+                    Duration::from_secs(10),
+                )
+                .unwrap();
+                grads
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn all_workers_get_the_sum() {
+        for n in [2usize, 3, 5, 8] {
+            let len = 97;
+            let results = run_n(n, len);
+            let expect: Vec<f32> = (0..len)
+                .map(|i| {
+                    (0..n).map(|r| ((r + 1) * (i + 1)) as f32).sum::<f32>()
+                })
+                .collect();
+            for (r, res) in results.iter().enumerate() {
+                assert_eq!(res, &expect, "rank {r} of n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_with_plain_scatter_reduce() {
+        use crate::collective::scatter_reduce::scatter_reduce;
+        let n = 4;
+        let len = 64;
+        let mk = |rank: usize| -> Vec<f32> {
+            (0..len).map(|i| ((rank * 31 + i * 7) % 13) as f32).collect()
+        };
+        let store_a: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let store_b: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let mut ha = Vec::new();
+        let mut hb = Vec::new();
+        for rank in 0..n {
+            let (sa, sb) = (store_a.clone(), store_b.clone());
+            let (ga, gb) = (mk(rank), mk(rank));
+            ha.push(std::thread::spawn(move || {
+                let mut g = ga;
+                scatter_reduce(&sa, "a", 0, rank, n, &mut g, None, Duration::from_secs(10)).unwrap();
+                g
+            }));
+            hb.push(std::thread::spawn(move || {
+                let mut g = gb;
+                pipelined_scatter_reduce(&sb, "b", 0, rank, n, &mut g, None, Duration::from_secs(10)).unwrap();
+                g
+            }));
+        }
+        let ra: Vec<_> = ha.into_iter().map(|h| h.join().unwrap()).collect();
+        let rb: Vec<_> = hb.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(ra, rb);
+    }
+
+    /// The wall-clock benefit exists in the *real* implementation too:
+    /// with symmetric per-worker throttling, duplex beats serial phases.
+    #[test]
+    fn pipelined_is_faster_on_throttled_store() {
+        use crate::collective::scatter_reduce::scatter_reduce;
+        let n = 4;
+        let len = 40_000; // 160 KB per worker
+        let bw = 2.0e6; // 2 MB/s each direction
+        let run = |pipelined: bool| -> f64 {
+            let inner: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+            let start = std::time::Instant::now();
+            let mut handles = Vec::new();
+            for rank in 0..n {
+                let store: Arc<dyn ObjectStore> = Arc::new(ThrottledStore::new(
+                    inner.clone(),
+                    bw,
+                    bw,
+                    Duration::from_millis(1),
+                ));
+                handles.push(std::thread::spawn(move || {
+                    let mut g = vec![rank as f32; len];
+                    if pipelined {
+                        pipelined_scatter_reduce(&store, "t", 0, rank, n, &mut g, None, Duration::from_secs(30)).unwrap();
+                    } else {
+                        scatter_reduce(&store, "t", 0, rank, n, &mut g, None, Duration::from_secs(30)).unwrap();
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            start.elapsed().as_secs_f64()
+        };
+        let t_plain = run(false);
+        let t_piped = run(true);
+        assert!(
+            t_piped < t_plain,
+            "pipelined {t_piped:.3}s !< plain {t_plain:.3}s"
+        );
+    }
+}

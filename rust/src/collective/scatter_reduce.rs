@@ -1,0 +1,217 @@
+//! LambdaML's 3-phase storage-based scatter-reduce (Fig. 4(a)) — the
+//! baseline algorithm, real implementation over an [`ObjectStore`].
+//!
+//! Every replica of a stage calls [`scatter_reduce`] with its local
+//! gradient vector; all return the elementwise sum. Phases:
+//!   1. upload the n−1 splits owned by other workers;
+//!   2. download the n−1 foreign copies of the own split and merge;
+//!   3. upload the merged split, download the other merged splits.
+//!
+//! Keys embed (group, round, phase, split, sender) so concurrent rounds
+//! and stages never collide — the paper's filename-metadata scheme (§4).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::{add_assign, bytes_to_f32s, f32s_to_bytes, split_ranges};
+use crate::platform::ObjectStore;
+
+/// Merge operator: `acc += delta`. Injected so the trainer can route the
+/// reduction through the AOT `merge2` executable (L1 Pallas kernel).
+pub type MergeFn<'a> = dyn Fn(&mut [f32], &[f32]) + 'a;
+
+pub(crate) fn native_merge(acc: &mut [f32], delta: &[f32]) {
+    add_assign(acc, delta);
+}
+
+fn key(group: &str, round: u64, phase: u8, split: usize, from: usize) -> String {
+    format!("{group}/r{round}/p{phase}/s{split}/f{from}")
+}
+
+/// Non-pipelined (LambdaML) scatter-reduce. Blocking; returns when this
+/// worker holds the full summed gradient in `grads`.
+pub fn scatter_reduce(
+    store: &Arc<dyn ObjectStore>,
+    group: &str,
+    round: u64,
+    rank: usize,
+    n: usize,
+    grads: &mut [f32],
+    merge: Option<&MergeFn>,
+    timeout: Duration,
+) -> Result<()> {
+    assert!(rank < n);
+    if n == 1 {
+        return Ok(());
+    }
+    let ranges = split_ranges(grads.len(), n);
+    let native: &MergeFn = &native_merge;
+    let merge = merge.unwrap_or(native);
+
+    // phase 1: upload foreign splits
+    for j in 0..n {
+        if j == rank {
+            continue;
+        }
+        let (lo, hi) = ranges[j];
+        store
+            .put(&key(group, round, 1, j, rank), f32s_to_bytes(&grads[lo..hi]))
+            .context("phase-1 upload")?;
+    }
+
+    // phase 2: merge foreign copies of our own split
+    let (mylo, myhi) = ranges[rank];
+    let mut merged = grads[mylo..myhi].to_vec();
+    for j in 0..n {
+        if j == rank {
+            continue;
+        }
+        let bytes = store
+            .get_blocking(&key(group, round, 1, rank, j), timeout)
+            .context("phase-2 download")?;
+        let delta = bytes_to_f32s(&bytes);
+        merge(&mut merged, &delta);
+    }
+
+    // phase 3: publish merged split, gather the others
+    store
+        .put(&key(group, round, 3, rank, rank), f32s_to_bytes(&merged))
+        .context("phase-3 upload")?;
+    grads[mylo..myhi].copy_from_slice(&merged);
+    for j in 0..n {
+        if j == rank {
+            continue;
+        }
+        let bytes = store
+            .get_blocking(&key(group, round, 3, j, j), timeout)
+            .context("phase-3 download")?;
+        let (lo, hi) = ranges[j];
+        grads[lo..hi].copy_from_slice(&bytes_to_f32s(&bytes));
+    }
+    Ok(())
+}
+
+/// Remove this round's objects (called by rank 0 after a barrier, or lazily
+/// by the Function Manager's garbage collection).
+pub fn cleanup(store: &Arc<dyn ObjectStore>, group: &str, round: u64) {
+    for k in store.list(&format!("{group}/r{round}/")) {
+        store.delete(&k);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::MemStore;
+
+    fn run_n(n: usize, len: usize) -> Vec<Vec<f32>> {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let store = store.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut grads: Vec<f32> =
+                    (0..len).map(|i| (rank * len + i) as f32).collect();
+                scatter_reduce(
+                    &store,
+                    "g",
+                    0,
+                    rank,
+                    n,
+                    &mut grads,
+                    None,
+                    Duration::from_secs(10),
+                )
+                .unwrap();
+                grads
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn all_workers_get_the_sum() {
+        for n in [2usize, 3, 4, 8] {
+            let len = 103; // not divisible by n
+            let results = run_n(n, len);
+            let expect: Vec<f32> = (0..len)
+                .map(|i| {
+                    (0..n).map(|r| (r * len + i) as f32).sum::<f32>()
+                })
+                .collect();
+            for (r, res) in results.iter().enumerate() {
+                assert_eq!(res, &expect, "rank {r} of n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_is_identity() {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let mut g = vec![1.0f32, 2.0];
+        scatter_reduce(&store, "g", 0, 0, 1, &mut g, None, Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(g, vec![1.0, 2.0]);
+        assert_eq!(store.total_bytes(), 0);
+    }
+
+    #[test]
+    fn rounds_do_not_collide() {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let mut handles = Vec::new();
+        for round in 0..3u64 {
+            for rank in 0..2usize {
+                let store = store.clone();
+                handles.push(std::thread::spawn(move || {
+                    let mut g = vec![(round as f32) + 1.0; 10];
+                    scatter_reduce(
+                        &store,
+                        "g",
+                        round,
+                        rank,
+                        2,
+                        &mut g,
+                        None,
+                        Duration::from_secs(10),
+                    )
+                    .unwrap();
+                    (round, g)
+                }));
+            }
+        }
+        for h in handles {
+            let (round, g) = h.join().unwrap();
+            let want = 2.0 * (round as f32 + 1.0);
+            assert!(g.iter().all(|&x| (x - want).abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn cleanup_removes_round_objects() {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let _ = {
+            let store = store.clone();
+            let t0 = std::thread::spawn({
+                let store = store.clone();
+                move || {
+                    let mut g = vec![1.0f32; 8];
+                    scatter_reduce(&store, "x", 5, 0, 2, &mut g, None, Duration::from_secs(10)).unwrap();
+                }
+            });
+            let t1 = std::thread::spawn({
+                let store = store.clone();
+                move || {
+                    let mut g = vec![2.0f32; 8];
+                    scatter_reduce(&store, "x", 5, 1, 2, &mut g, None, Duration::from_secs(10)).unwrap();
+                }
+            });
+            t0.join().unwrap();
+            t1.join().unwrap();
+        };
+        assert!(store.total_bytes() > 0);
+        cleanup(&store, "x", 5);
+        assert_eq!(store.total_bytes(), 0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Inter-stage activation/gradient transfer via storage — the *upload* /
+//! *download* pipeline tasks of §3.2. Partition boundaries exchange
+//! per-micro-batch tensors through uniquely-keyed objects.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::{bytes_to_f32s, f32s_to_bytes};
+use crate::platform::ObjectStore;
+
+/// Key for the activation flowing stage→stage+1 (forward) or the gradient
+/// flowing stage→stage−1 (backward) of micro-batch `mb` in round `round`.
+/// `replica` disambiguates data-parallel lanes.
+pub fn boundary_key(
+    dir: &str,
+    round: u64,
+    from_stage: usize,
+    replica: usize,
+    mb: usize,
+) -> String {
+    format!("act/{dir}/r{round}/s{from_stage}/d{replica}/mb{mb}")
+}
+
+/// Upload a boundary tensor.
+pub fn send(
+    store: &Arc<dyn ObjectStore>,
+    key: &str,
+    data: &[f32],
+) -> Result<()> {
+    store.put(key, f32s_to_bytes(data)).context("send")
+}
+
+/// Blocking receive of a boundary tensor.
+pub fn recv(
+    store: &Arc<dyn ObjectStore>,
+    key: &str,
+    timeout: Duration,
+) -> Result<Vec<f32>> {
+    let bytes = store.get_blocking(key, timeout).context("recv")?;
+    Ok(bytes_to_f32s(&bytes))
+}
+
+/// Receive then delete (boundary tensors are consumed exactly once, so the
+/// store does not grow over training).
+pub fn recv_consume(
+    store: &Arc<dyn ObjectStore>,
+    key: &str,
+    timeout: Duration,
+) -> Result<Vec<f32>> {
+    let v = recv(store, key, timeout)?;
+    store.delete(key);
+    Ok(v)
+}
+
+/// Raw-bytes variants for non-f32 payloads (int32 token batches).
+pub fn send_bytes(
+    store: &Arc<dyn ObjectStore>,
+    key: &str,
+    data: Vec<u8>,
+) -> Result<()> {
+    store.put(key, data).context("send_bytes")
+}
+
+pub fn recv_bytes_consume(
+    store: &Arc<dyn ObjectStore>,
+    key: &str,
+    timeout: Duration,
+) -> Result<Vec<u8>> {
+    let bytes = store.get_blocking(key, timeout).context("recv_bytes")?;
+    store.delete(key);
+    Ok(bytes.as_ref().clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::MemStore;
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let k = boundary_key("fwd", 3, 1, 0, 2);
+        send(&store, &k, &[1.0, -2.0, 3.5]).unwrap();
+        let got = recv(&store, &k, Duration::from_secs(1)).unwrap();
+        assert_eq!(got, vec![1.0, -2.0, 3.5]);
+    }
+
+    #[test]
+    fn consume_deletes() {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        send(&store, "k", &[7.0]).unwrap();
+        let got = recv_consume(&store, "k", Duration::from_secs(1)).unwrap();
+        assert_eq!(got, vec![7.0]);
+        assert!(store.get("k").is_none());
+    }
+
+    #[test]
+    fn keys_distinguish_direction_round_replica() {
+        let keys = [
+            boundary_key("fwd", 0, 1, 0, 0),
+            boundary_key("bwd", 0, 1, 0, 0),
+            boundary_key("fwd", 1, 1, 0, 0),
+            boundary_key("fwd", 0, 2, 0, 0),
+            boundary_key("fwd", 0, 1, 1, 0),
+            boundary_key("fwd", 0, 1, 0, 1),
+        ];
+        for i in 0..keys.len() {
+            for j in (i + 1)..keys.len() {
+                assert_ne!(keys[i], keys[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let s2 = store.clone();
+        let consumer = std::thread::spawn(move || {
+            recv_consume(&s2, "late", Duration::from_secs(5)).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        send(&store, "late", &[42.0]).unwrap();
+        assert_eq!(consumer.join().unwrap(), vec![42.0]);
+    }
+}

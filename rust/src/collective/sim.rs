@@ -1,0 +1,228 @@
+//! Flow-level simulations of the synchronization algorithms on the
+//! max-min-fair network — the "measured" counterpart to the closed forms
+//! in [`analytic`](super::analytic). Used by the Fig. 8 reproduction and
+//! by Table 3's model-accuracy check.
+
+use crate::platform::network::{BandwidthModel, Dir, FlowSim};
+
+/// LambdaML's 3-phase scatter-reduce (Fig. 4(a)) as a flow schedule.
+///
+/// Phase 1: each worker uploads its n−1 foreign splits (concurrently on
+/// its uplink). Phase 2 starts only after the relevant upload exists;
+/// download of split i from worker j depends on j's phase-1 upload of
+/// split i. Uploads and downloads of one worker do NOT overlap across
+/// phases — the serialization the paper identifies as the inefficiency —
+/// which we enforce with cross-phase dependencies.
+pub fn simulate_scatter_reduce(
+    n: usize,
+    grad_bytes: f64,
+    model: &BandwidthModel,
+) -> f64 {
+    assert!(n >= 2);
+    let split = grad_bytes / n as f64;
+    let mut sim = FlowSim::new(model.clone());
+
+    // phase 1 uploads: up1[i][j] = worker i uploads split j (j != i)
+    let mut up1 = vec![vec![usize::MAX; n]; n];
+    for i in 0..n {
+        for j in 0..n {
+            if j != i {
+                up1[i][j] = sim.add_flow(i, Dir::Up, split, 0.0);
+            }
+        }
+    }
+    // phase 2 downloads: worker i downloads split i from each j != i,
+    // gated on ALL of i's phase-1 uploads (phases are serial per worker).
+    let mut down2 = vec![vec![usize::MAX; n]; n];
+    for i in 0..n {
+        let mut gate: Vec<usize> =
+            (0..n).filter(|&j| j != i).map(|j| up1[i][j]).collect();
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let mut deps = gate.clone();
+            deps.push(up1[j][i]); // the data must exist
+            down2[i][j] = sim.add_flow_after(i, Dir::Down, split, deps, 0.0);
+        }
+        gate.clear();
+    }
+    // phase 3: upload merged split i (after all phase-2 downloads),
+    // then download all other merged splits.
+    let mut up3 = vec![usize::MAX; n];
+    for i in 0..n {
+        let deps: Vec<usize> =
+            (0..n).filter(|&j| j != i).map(|j| down2[i][j]).collect();
+        up3[i] = sim.add_flow_after(i, Dir::Up, split, deps, 0.0);
+    }
+    for i in 0..n {
+        for j in 0..n {
+            if j != i {
+                sim.add_flow_after(i, Dir::Down, split, vec![up3[j], up3[i]], 0.0);
+            }
+        }
+    }
+    sim.run()
+}
+
+/// FuncPipe's pipelined scatter-reduce (Fig. 4(b), §3.3) as a flow
+/// schedule: at step k worker i uploads split i+k while downloading its
+/// own split uploaded by worker i−(k−1) at step k−1 — duplex.
+pub fn simulate_pipelined_scatter_reduce(
+    n: usize,
+    grad_bytes: f64,
+    model: &BandwidthModel,
+) -> f64 {
+    assert!(n >= 2);
+    let split = grad_bytes / n as f64;
+    let mut sim = FlowSim::new(model.clone());
+
+    // uploads: up[i][k] for steps k = 1..=n-1 (upload split (i+k) mod n),
+    // serialized on worker i's uplink in step order.
+    let mut up = vec![vec![usize::MAX; n]; n];
+    for i in 0..n {
+        let mut prev: Option<usize> = None;
+        for k in 1..n {
+            let deps = prev.map(|p| vec![p]).unwrap_or_default();
+            let id = if deps.is_empty() {
+                sim.add_flow(i, Dir::Up, split, 0.0)
+            } else {
+                sim.add_flow_after(i, Dir::Up, split, deps, 0.0)
+            };
+            up[i][k] = id;
+            prev = Some(id);
+        }
+    }
+    // downloads: at step k (2..=n) worker i downloads split i uploaded by
+    // worker (i - (k-1)) mod n at step k-1; serialized on i's downlink.
+    let mut last = vec![usize::MAX; n];
+    for i in 0..n {
+        let mut prev: Option<usize> = None;
+        for k in 2..=n {
+            let src = (i + n - (k - 1)) % n;
+            let mut deps = vec![up[src][k - 1]];
+            if let Some(p) = prev {
+                deps.push(p);
+            }
+            let id = sim.add_flow_after(i, Dir::Down, split, deps, 0.0);
+            prev = Some(id);
+            last[i] = id;
+        }
+    }
+    // phase 3 (unchanged by the pipelining): upload merged split, then
+    // fetch the n-1 other merged splits.
+    let mut up3 = vec![usize::MAX; n];
+    for i in 0..n {
+        up3[i] = sim.add_flow_after(i, Dir::Up, split, vec![last[i]], 0.0);
+    }
+    for i in 0..n {
+        for j in 0..n {
+            if j != i {
+                sim.add_flow_after(i, Dir::Down, split, vec![up3[j]], 0.0);
+            }
+        }
+    }
+    sim.run()
+}
+
+/// HybridPS synchronization: workers push gradients directly to a VM
+/// parameter server (worker index `n` in the model) and pull updated
+/// parameters back.
+pub fn simulate_parameter_server(
+    n: usize,
+    grad_bytes: f64,
+    model: &BandwidthModel,
+) -> f64 {
+    assert!(model.n_workers() >= n + 1, "need server as worker n");
+    let server = n;
+    let mut sim = FlowSim::new(model.clone());
+    let ups: Vec<usize> = (0..n)
+        .map(|i| sim.add_direct_flow_after(i, server, grad_bytes, vec![], 0.0))
+        .collect();
+    // server applies update after all pushes, then each worker pulls.
+    for i in 0..n {
+        sim.add_direct_flow_after(server, i, grad_bytes, ups.clone(), 0.0);
+    }
+    sim.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::analytic::{
+        ps_sync_time, sync_time, SyncAlgorithm,
+    };
+
+    const MB: f64 = 1.0e6;
+
+    fn storage_model(n: usize, w: f64, lat: f64) -> BandwidthModel {
+        BandwidthModel::uniform(n, w, lat)
+    }
+
+    #[test]
+    fn plain_matches_eq1() {
+        for n in [2usize, 4, 8] {
+            let model = storage_model(n, 70.0 * MB, 0.0);
+            let sim_t = simulate_scatter_reduce(n, 280.0 * MB, &model);
+            let formula =
+                sync_time(SyncAlgorithm::ScatterReduce, 280.0 * MB, n, 70.0 * MB, 0.0);
+            let err = (sim_t - formula).abs() / formula;
+            assert!(err < 0.12, "n={n}: sim {sim_t} vs eq(1) {formula}");
+        }
+    }
+
+    #[test]
+    fn pipelined_matches_eq2() {
+        for n in [2usize, 4, 8, 16] {
+            let model = storage_model(n, 70.0 * MB, 0.0);
+            let sim_t =
+                simulate_pipelined_scatter_reduce(n, 280.0 * MB, &model);
+            let formula = sync_time(
+                SyncAlgorithm::PipelinedScatterReduce,
+                280.0 * MB,
+                n,
+                70.0 * MB,
+                0.0,
+            );
+            let err = (sim_t - formula).abs() / formula;
+            assert!(err < 0.12, "n={n}: sim {sim_t} vs eq(2) {formula}");
+        }
+    }
+
+    #[test]
+    fn pipelined_beats_plain_in_sim() {
+        for n in [4usize, 8, 16] {
+            let model = storage_model(n, 70.0 * MB, 0.02);
+            let a = simulate_scatter_reduce(n, 300.0 * MB, &model);
+            let b = simulate_pipelined_scatter_reduce(n, 300.0 * MB, &model);
+            assert!(b < a, "n={n}: pipelined {b} !< plain {a}");
+        }
+    }
+
+    #[test]
+    fn ps_matches_formula_when_server_bound() {
+        let n = 16;
+        let mut model = storage_model(n + 1, 70.0 * MB, 0.0);
+        model.up_bps[n] = 1.25e9;
+        model.down_bps[n] = 1.25e9;
+        let sim_t = simulate_parameter_server(n, 100.0 * MB, &model);
+        // the flow sim models transfers only; subtract the analytic
+        // server-side aggregation term before comparing
+        let agg = n as f64 * 100.0 * MB
+            / crate::collective::analytic::PS_SERVER_PROC_BPS;
+        let formula = ps_sync_time(100.0 * MB, n, 70.0 * MB, 1.25e9, 0.0) - agg;
+        let err = (sim_t - formula).abs() / formula;
+        assert!(err < 0.15, "sim {sim_t} vs formula {formula}");
+    }
+
+    #[test]
+    fn aggregate_cap_slows_scatter_reduce() {
+        let n = 8;
+        let free = storage_model(n, 100.0 * MB, 0.0);
+        let capped = storage_model(n, 100.0 * MB, 0.0)
+            .with_aggregate_cap(200.0 * MB);
+        let a = simulate_pipelined_scatter_reduce(n, 100.0 * MB, &free);
+        let b = simulate_pipelined_scatter_reduce(n, 100.0 * MB, &capped);
+        assert!(b > a * 1.5, "cap should slow things: {a} vs {b}");
+    }
+}

@@ -1,0 +1,179 @@
+//! JSON experiment configuration: everything the CLI accepts can also be
+//! given as a config file (`funcpipe plan --config exp.json`), the
+//! "config system" a downstream user drives sweeps with.
+
+use anyhow::{bail, Context, Result};
+
+use crate::collective::SyncAlgorithm;
+use crate::model::{zoo, MergeCriterion, ModelProfile};
+use crate::platform::PlatformSpec;
+use crate::util::json::Json;
+
+/// A fully-resolved experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub model: String,
+    pub platform: String,
+    pub global_batch: usize,
+    pub micro_batch: usize,
+    pub merge_layers: usize,
+    pub merge_criterion: MergeCriterion,
+    pub sync_alg: SyncAlgorithm,
+    pub bandwidth_scale: f64,
+    pub weights: Vec<(f64, f64)>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            model: "amoebanet-d18".into(),
+            platform: "aws-lambda".into(),
+            global_batch: 64,
+            micro_batch: zoo::MICRO_BATCH,
+            merge_layers: 8,
+            merge_criterion: MergeCriterion::Compute,
+            sync_alg: SyncAlgorithm::PipelinedScatterReduce,
+            bandwidth_scale: 1.0,
+            weights: crate::planner::DEFAULT_WEIGHTS.to_vec(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing config JSON")?;
+        let mut cfg = Self::default();
+        if let Some(v) = j.get("model") {
+            cfg.model = v.as_str().context("model must be a string")?.into();
+        }
+        if let Some(v) = j.get("platform") {
+            cfg.platform = v.as_str().context("platform string")?.into();
+        }
+        if let Some(v) = j.get("global_batch") {
+            cfg.global_batch = v.as_usize().context("global_batch")?;
+        }
+        if let Some(v) = j.get("micro_batch") {
+            cfg.micro_batch = v.as_usize().context("micro_batch")?;
+        }
+        if let Some(v) = j.get("merge_layers") {
+            cfg.merge_layers = v.as_usize().context("merge_layers")?;
+        }
+        if let Some(v) = j.get("merge_criterion") {
+            cfg.merge_criterion = match v.as_str() {
+                Some("compute") => MergeCriterion::Compute,
+                Some("params") => MergeCriterion::ParamSize,
+                Some("activations") => MergeCriterion::ActivationSize,
+                other => bail!("unknown merge_criterion {other:?}"),
+            };
+        }
+        if let Some(v) = j.get("sync") {
+            cfg.sync_alg = match v.as_str() {
+                Some("pipelined") => SyncAlgorithm::PipelinedScatterReduce,
+                Some("scatter-reduce") => SyncAlgorithm::ScatterReduce,
+                other => bail!("unknown sync {other:?}"),
+            };
+        }
+        if let Some(v) = j.get("bandwidth_scale") {
+            cfg.bandwidth_scale = v.as_f64().context("bandwidth_scale")?;
+        }
+        if let Some(v) = j.get("weights") {
+            cfg.weights = v
+                .as_arr()
+                .context("weights array")?
+                .iter()
+                .map(|pair| -> Result<(f64, f64)> {
+                    let a = pair.as_arr().context("weight pair")?;
+                    Ok((
+                        a[0].as_f64().context("w0")?,
+                        a[1].as_f64().context("w1")?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.global_batch == 0 || self.micro_batch == 0 {
+            bail!("batch sizes must be positive");
+        }
+        if self.global_batch % self.micro_batch != 0 {
+            bail!(
+                "global_batch {} not divisible by micro_batch {}",
+                self.global_batch,
+                self.micro_batch
+            );
+        }
+        if self.merge_layers == 0 {
+            bail!("merge_layers must be >= 1");
+        }
+        self.resolve_platform()?;
+        Ok(())
+    }
+
+    pub fn resolve_platform(&self) -> Result<PlatformSpec> {
+        let p = match self.platform.as_str() {
+            "aws-lambda" | "aws" => PlatformSpec::aws_lambda(),
+            "alibaba-fc" | "alibaba" => PlatformSpec::alibaba_fc(),
+            "local" | "local-sim" => PlatformSpec::local_sim(),
+            other => bail!("unknown platform {other:?}"),
+        };
+        Ok(p.with_bandwidth_scale(self.bandwidth_scale))
+    }
+
+    pub fn resolve_model(&self, platform: &PlatformSpec) -> Result<ModelProfile> {
+        let m = zoo::by_name(&self.model, platform)
+            .with_context(|| format!("unknown model {:?}", self.model))?;
+        Ok(crate::model::merge_layers(
+            &m,
+            self.merge_layers,
+            self.merge_criterion,
+        ))
+    }
+
+    pub fn n_micro_global(&self) -> usize {
+        self.global_batch / self.micro_batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ExperimentConfig::from_json_text(
+            r#"{"model": "bert-large", "platform": "alibaba",
+                "global_batch": 256, "merge_layers": 6,
+                "merge_criterion": "params", "sync": "scatter-reduce",
+                "bandwidth_scale": 4.0, "weights": [[1, 0], [1, 0.001]]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.model, "bert-large");
+        assert_eq!(cfg.weights.len(), 2);
+        let p = cfg.resolve_platform().unwrap();
+        assert_eq!(p.name, "alibaba-fc");
+        let m = cfg.resolve_model(&p).unwrap();
+        assert_eq!(m.n_layers(), 6);
+    }
+
+    #[test]
+    fn defaults_are_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(ExperimentConfig::from_json_text(r#"{"global_batch": 0}"#)
+            .is_err());
+        assert!(ExperimentConfig::from_json_text(
+            r#"{"platform": "azure"}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json_text(
+            r#"{"global_batch": 10, "micro_batch": 4}"#
+        )
+        .is_err());
+    }
+}

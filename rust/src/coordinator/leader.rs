@@ -1,0 +1,156 @@
+//! The leader: launches the worker "functions", runs the monitor daemon,
+//! aggregates the training report (§3.1's startup flow, with the
+//! Partition/Resource Optimizer applied beforehand by the caller).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::worker::{run_worker, IterMsg, WorkerCtx};
+use crate::platform::MemStore;
+use crate::runtime::Manifest;
+use crate::trainer::{IterLog, TrainConfig, TrainReport};
+
+/// Run a full training job: one thread per worker (stage × replica).
+pub fn run_training(
+    cfg: &TrainConfig,
+    store: Arc<MemStore>,
+) -> Result<TrainReport> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)
+        .context("loading artifacts (run `make artifacts`?)")?;
+    let n_stages = manifest.n_stages;
+    if cfg.dp == 0 || cfg.mu == 0 || cfg.steps == 0 {
+        bail!("dp, mu and steps must be positive");
+    }
+
+    let start = Instant::now();
+    let (tx, rx) = mpsc::channel::<IterMsg>();
+
+    let mut handles = Vec::new();
+    for stage_idx in 0..n_stages {
+        for replica in 0..cfg.dp {
+            let ctx = WorkerCtx {
+                cfg: cfg.clone(),
+                stage_idx,
+                replica,
+                base_store: store.clone() as Arc<dyn crate::platform::ObjectStore>,
+                monitor: (stage_idx == n_stages - 1).then(|| tx.clone()),
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("worker-s{stage_idx}r{replica}"))
+                    .spawn(move || run_worker(ctx))
+                    .context("spawning worker")?,
+            );
+        }
+    }
+    drop(tx);
+
+    // ---- monitor daemon: aggregate per-step losses across replicas ----
+    let mut step_losses: Vec<Vec<f32>> = vec![Vec::new(); cfg.steps];
+    let mut step_done_at: Vec<Option<f64>> = vec![None; cfg.steps];
+    while let Ok(msg) = rx.recv() {
+        step_losses[msg.step].push(msg.loss);
+        if step_losses[msg.step].len() == cfg.dp {
+            step_done_at[msg.step] = Some(start.elapsed().as_secs_f64());
+            log::info!(
+                "step {:>4}  loss {:.4}",
+                msg.step,
+                step_losses[msg.step].iter().sum::<f32>() / cfg.dp as f32
+            );
+        }
+    }
+
+    let mut restarts = 0usize;
+    for h in handles {
+        restarts += h
+            .join()
+            .map_err(|_| anyhow::anyhow!("worker panicked"))??;
+    }
+
+    // build logs with per-iteration durations
+    let mut logs = Vec::with_capacity(cfg.steps);
+    let mut prev_t = 0.0f64;
+    for step in 0..cfg.steps {
+        let losses = &step_losses[step];
+        if losses.is_empty() {
+            bail!("no loss recorded for step {step}");
+        }
+        let t = step_done_at[step].unwrap_or(prev_t);
+        logs.push(IterLog {
+            step,
+            loss: losses.iter().sum::<f32>() / losses.len() as f32,
+            iter_s: (t - prev_t).max(0.0),
+        });
+        prev_t = t;
+    }
+
+    Ok(TrainReport {
+        logs,
+        restarts,
+        wall_s: start.elapsed().as_secs_f64(),
+        store_put_gets: (0, 0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn single_worker_pipeline_trains() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let mut cfg = TrainConfig::new(dir);
+        cfg.steps = 12;
+        cfg.mu = 2;
+        cfg.lr = 0.2;
+        let report = crate::trainer::train(&cfg).unwrap();
+        assert_eq!(report.logs.len(), 12);
+        assert!(
+            report.last_loss() < report.first_loss(),
+            "loss did not fall: {} -> {}",
+            report.first_loss(),
+            report.last_loss()
+        );
+    }
+
+    #[test]
+    fn data_parallel_training_matches_loss_trajectory_shape() {
+        let Some(dir) = artifacts() else {
+            return;
+        };
+        let mut cfg = TrainConfig::new(dir);
+        cfg.steps = 6;
+        cfg.dp = 2;
+        cfg.mu = 1;
+        let report = crate::trainer::train(&cfg).unwrap();
+        assert_eq!(report.logs.len(), 6);
+        assert!(report.last_loss() < report.first_loss());
+    }
+
+    #[test]
+    fn lifetime_forces_checkpoint_restart() {
+        let Some(dir) = artifacts() else {
+            return;
+        };
+        let mut cfg = TrainConfig::new(dir);
+        cfg.steps = 6;
+        cfg.mu = 1;
+        cfg.lifetime_s = 0.05; // force a restart almost every step
+        cfg.checkpoint_margin_s = 0.04;
+        let report = crate::trainer::train(&cfg).unwrap();
+        assert!(report.restarts > 0, "no restarts happened");
+        assert!(report.last_loss() < report.first_loss() + 0.5);
+    }
+}

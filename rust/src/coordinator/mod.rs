@@ -1,0 +1,14 @@
+//! The L3 coordinator: leader/worker topology for real pipelined training
+//! over storage-relayed communication (§3.1's runtime components).
+//!
+//! * [`leader`] — launches one thread per serverless "function" (worker),
+//!   owns the monitor daemon, collects the training report;
+//! * [`worker`] — the per-worker loop: GPipe-ordered forward/backward over
+//!   the AOT stage executables, boundary send/recv, (pipelined)
+//!   scatter-reduce sync, SGD update, and the Function-Manager
+//!   checkpoint/restart cycle before lifetime expiry.
+
+pub mod leader;
+pub mod worker;
+
+pub use leader::run_training;

@@ -1,0 +1,263 @@
+//! One serverless worker: executes its stage's share of every iteration.
+//!
+//! The loop follows the §3.2 schedule: μ forward micro-batches (download
+//! input → compute → upload output), then μ backward micro-batches in
+//! reverse order, then intra-stage scatter-reduce (if d > 1) and the SGD
+//! update through the AOT executable. Uploads run on a background
+//! uploader thread so uplink and compute/downlink overlap — the paper's
+//! Task-Executor DAG, specialized to the fixed GPipe order.
+//!
+//! The Function Manager half lives here too: after each iteration the
+//! worker checks its remaining lifetime and, if below the margin,
+//! checkpoints its parameters to storage, "restarts" (new generation,
+//! cold-start sleep), and restores — exercising the §3.1-step-8 path that
+//! real platforms force every 15 minutes.
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::collective::pipelined::pipelined_scatter_reduce;
+use crate::collective::scatter_reduce::scatter_reduce;
+use crate::collective::sendrecv::{
+    boundary_key, recv_consume, send,
+};
+use crate::collective::SyncAlgorithm;
+use crate::platform::function::FunctionInstance;
+use crate::platform::{ObjectStore, ThrottledStore};
+use crate::runtime::{Manifest, Runtime};
+use crate::trainer::data::Corpus;
+use crate::trainer::TrainConfig;
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Message from the head worker to the monitor.
+pub struct IterMsg {
+    pub step: usize,
+    pub loss: f32,
+    pub replica: usize,
+}
+
+pub struct WorkerCtx {
+    pub cfg: TrainConfig,
+    pub stage_idx: usize,
+    pub replica: usize,
+    pub base_store: Arc<dyn ObjectStore>,
+    pub monitor: Option<Sender<IterMsg>>,
+}
+
+/// Entry point of a worker thread. Returns the number of
+/// checkpoint/restart cycles performed.
+pub fn run_worker(ctx: WorkerCtx) -> Result<usize> {
+    let cfg = &ctx.cfg;
+    // per-worker throttled view of the shared bucket (its own "NIC")
+    let store: Arc<dyn ObjectStore> = match cfg.throttle {
+        Some((bps, lat)) => Arc::new(ThrottledStore::new(
+            ctx.base_store.clone(),
+            bps,
+            bps,
+            Duration::from_secs_f64(lat),
+        )),
+        None => ctx.base_store.clone(),
+    };
+
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let rt = Arc::new(Runtime::cpu()?);
+    let entry = &manifest.stages[ctx.stage_idx];
+    let mut stage = rt.load_stage(&manifest, entry)?;
+    let n_stages = manifest.n_stages;
+    let is_first = ctx.stage_idx == 0;
+    let is_last = ctx.stage_idx == n_stages - 1;
+    let corpus = Corpus::new(
+        manifest.vocab,
+        manifest.seq_len,
+        manifest.micro_batch,
+        cfg.seed,
+    );
+
+    let mut func = FunctionInstance::launch(
+        ctx.stage_idx * cfg.dp + ctx.replica,
+        ctx.stage_idx,
+        ctx.replica,
+        0,
+        cfg.lifetime_s,
+    );
+    func.mark_running();
+    let mut restarts = 0usize;
+
+    let grad_len = stage.entry.flat_param_size;
+    let lr_scale = 1.0 / (cfg.mu * cfg.dp) as f32;
+
+    for step in 0..cfg.steps {
+        let round = step as u64;
+        let mut grads_acc = vec![0.0f32; grad_len];
+        // saved inputs for the backward passes (stage-level remat keeps
+        // only the boundary input per micro-batch, §3.2 memory model)
+        let mut saved_f32: Vec<Vec<f32>> = Vec::with_capacity(cfg.mu);
+        let mut saved_tok: Vec<Vec<i32>> = Vec::with_capacity(cfg.mu);
+        let mut losses = 0.0f32;
+
+        // ---- forward wave ------------------------------------------------
+        for mb in 0..cfg.mu {
+            if is_first {
+                let (tokens, _) = corpus.batch(step, ctx.replica, mb);
+                let out = stage.fwd_tokens(&tokens).context("embed fwd")?;
+                send(
+                    &store,
+                    &boundary_key("fwd", round, 0, ctx.replica, mb),
+                    &out,
+                )?;
+                saved_tok.push(tokens);
+            } else {
+                let x = recv_consume(
+                    &store,
+                    &boundary_key("fwd", round, ctx.stage_idx - 1, ctx.replica, mb),
+                    RECV_TIMEOUT,
+                )?;
+                if is_last {
+                    // loss computed in backward; save input only
+                    saved_f32.push(x);
+                } else {
+                    let out = stage.fwd_acts(&x).context("blocks fwd")?;
+                    send(
+                        &store,
+                        &boundary_key("fwd", round, ctx.stage_idx, ctx.replica, mb),
+                        &out,
+                    )?;
+                    saved_f32.push(x);
+                }
+            }
+        }
+
+        // ---- backward wave (reverse micro order) ------------------------
+        for mb in (0..cfg.mu).rev() {
+            if is_last {
+                let (_, targets) = corpus.batch(step, ctx.replica, mb);
+                let x = &saved_f32[mb];
+                let (g, gx, loss) =
+                    stage.bwd_loss(x, &targets).context("head bwd")?;
+                crate::collective::add_assign(&mut grads_acc, &g);
+                losses += loss;
+                if n_stages > 1 {
+                    send(
+                        &store,
+                        &boundary_key("bwd", round, ctx.stage_idx, ctx.replica, mb),
+                        &gx,
+                    )?;
+                }
+            } else {
+                let gy = recv_consume(
+                    &store,
+                    &boundary_key("bwd", round, ctx.stage_idx + 1, ctx.replica, mb),
+                    RECV_TIMEOUT,
+                )?;
+                if is_first {
+                    let g = stage
+                        .bwd_tokens(&saved_tok[mb], &gy)
+                        .context("embed bwd")?;
+                    crate::collective::add_assign(&mut grads_acc, &g);
+                } else {
+                    let (g, gx) = stage
+                        .bwd_acts(&saved_f32[mb], &gy)
+                        .context("blocks bwd")?;
+                    crate::collective::add_assign(&mut grads_acc, &g);
+                    send(
+                        &store,
+                        &boundary_key("bwd", round, ctx.stage_idx, ctx.replica, mb),
+                        &gx,
+                    )?;
+                }
+            }
+        }
+
+        // ---- intra-stage sync (scatter-reduce over the d replicas) -------
+        if cfg.dp > 1 {
+            let group = format!("sync/s{}", ctx.stage_idx);
+            // route the merge through the AOT merge2 executable (the L1
+            // Pallas grad_merge kernel) when split sizes allow; fall back
+            // to the native add for partial splits.
+            let merge = |acc: &mut [f32], delta: &[f32]| {
+                if acc.len() == grad_len {
+                    if let Ok(merged) = stage.merge_grads(acc, delta) {
+                        acc.copy_from_slice(&merged);
+                        return;
+                    }
+                }
+                crate::collective::add_assign(acc, delta);
+            };
+            match cfg.sync_alg {
+                SyncAlgorithm::PipelinedScatterReduce => pipelined_scatter_reduce(
+                    &store,
+                    &group,
+                    round,
+                    ctx.replica,
+                    cfg.dp,
+                    &mut grads_acc,
+                    Some(&merge),
+                    RECV_TIMEOUT,
+                )?,
+                SyncAlgorithm::ScatterReduce => scatter_reduce(
+                    &store,
+                    &group,
+                    round,
+                    ctx.replica,
+                    cfg.dp,
+                    &mut grads_acc,
+                    Some(&merge),
+                    RECV_TIMEOUT,
+                )?,
+            }
+            // garbage-collect an older round's sync objects (safe: all
+            // replicas have passed round-2's barrier to reach here)
+            if step >= 2 && ctx.replica == 0 {
+                crate::collective::scatter_reduce::cleanup(
+                    &store,
+                    &group,
+                    round - 2,
+                );
+            }
+        }
+
+        // ---- SGD update through the AOT executable ------------------------
+        for g in grads_acc.iter_mut() {
+            *g *= lr_scale;
+        }
+        stage.sgd_step(&grads_acc, cfg.lr).context("sgd")?;
+
+        // ---- monitor ------------------------------------------------------
+        if is_last {
+            if let Some(tx) = &ctx.monitor {
+                let _ = tx.send(IterMsg {
+                    step,
+                    loss: losses / cfg.mu as f32,
+                    replica: ctx.replica,
+                });
+            }
+        }
+
+        // ---- Function Manager: lifetime check ----------------------------
+        if func.should_checkpoint(cfg.checkpoint_margin_s) {
+            let key = format!("ckpt/s{}/r{}", ctx.stage_idx, ctx.replica);
+            store.put(&key, crate::collective::f32s_to_bytes(&stage.flat_params()))?;
+            func.restart();
+            // cold start of the replacement container
+            std::thread::sleep(Duration::from_millis(10));
+            let bytes = store
+                .get_blocking(&key, RECV_TIMEOUT)
+                .context("checkpoint restore")?;
+            stage.set_flat_params(&crate::collective::bytes_to_f32s(&bytes))?;
+            func.mark_running();
+            restarts += 1;
+            log::info!(
+                "worker s{}r{} restarted (generation {})",
+                ctx.stage_idx,
+                ctx.replica,
+                func.generation
+            );
+        }
+        let _ = Instant::now();
+    }
+    Ok(restarts)
+}

@@ -1,0 +1,31 @@
+//! # FuncPipe
+//!
+//! A pipelined serverless framework for fast and cost-efficient training of
+//! deep learning models — reproduction of Liu et al., *Proc. ACM Meas.
+//! Anal. Comput. Syst.* 6(3):47, 2022 (DOI 10.1145/3570607).
+//!
+//! Architecture (three layers, python never on the hot path):
+//! * **L3 (this crate)** — the rust coordinator: serverless-platform
+//!   substrate, pipeline scheduler, storage-based collectives including the
+//!   paper's pipelined scatter-reduce, the MIQP partition/resource
+//!   co-optimizer, profiler, function manager and trainer.
+//! * **L2** — `python/compile/model.py`: staged transformer fwd/bwd in JAX,
+//!   AOT-lowered once to HLO text in `artifacts/`.
+//! * **L1** — `python/compile/kernels/`: Pallas kernels (fused linear,
+//!   gradient merge) called from L2.
+//!
+//! See DESIGN.md for the module inventory and the experiment index.
+
+pub mod baselines;
+pub mod bench;
+pub mod collective;
+pub mod config;
+pub mod coordinator;
+pub mod model;
+pub mod pipeline;
+pub mod planner;
+pub mod platform;
+pub mod profiler;
+pub mod runtime;
+pub mod trainer;
+pub mod util;

@@ -1,0 +1,139 @@
+//! Per-layer profile — the quantities the *Model Profiler* gathers (§3.1
+//! step 3) and the §3.4 notation table consumes.
+
+/// One model layer's measured/derived characteristics.
+///
+/// Compute times are *per micro-batch* and indexed by memory-tier: entry
+/// `j` is the time on a worker with `PlatformSpec::tiers[j]` resources
+/// (`T_fc^{i,j}` / `T_bc^{i,j}` in the paper).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerProfile {
+    pub name: String,
+    /// Parameter bytes `s_i`.
+    pub param_bytes: u64,
+    /// Activation memory per micro-batch `a_i` (bytes).
+    pub act_bytes: u64,
+    /// Output (boundary activation) bytes per micro-batch `o_i`.
+    pub out_bytes: u64,
+    /// Gradient bytes flowing to the previous layer per micro-batch `g_i`.
+    pub grad_bytes: u64,
+    /// Forward compute seconds per micro-batch, per memory tier.
+    pub fwd_s: Vec<f64>,
+    /// Backward compute seconds per micro-batch, per memory tier.
+    pub bwd_s: Vec<f64>,
+}
+
+impl LayerProfile {
+    /// Scale all compute times by `f` (used when calibrating profiles).
+    pub fn scale_compute(&mut self, f: f64) {
+        for t in self.fwd_s.iter_mut().chain(self.bwd_s.iter_mut()) {
+            *t *= f;
+        }
+    }
+}
+
+/// A profiled model: ordered layers plus bookkeeping.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelProfile {
+    pub name: String,
+    pub layers: Vec<LayerProfile>,
+}
+
+impl ModelProfile {
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn total_param_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.param_bytes).sum()
+    }
+
+    pub fn total_act_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.act_bytes).sum()
+    }
+
+    /// Total forward compute time at tier `j` (one micro-batch).
+    pub fn total_fwd_s(&self, tier: usize) -> f64 {
+        self.layers.iter().map(|l| l.fwd_s[tier]).sum()
+    }
+
+    pub fn total_bwd_s(&self, tier: usize) -> f64 {
+        self.layers.iter().map(|l| l.bwd_s[tier]).sum()
+    }
+
+    /// Param bytes of the contiguous layer range `[lo, hi]` inclusive —
+    /// the hat/tilde accumulation of §3.4 over one partition.
+    pub fn range_param_bytes(&self, lo: usize, hi: usize) -> u64 {
+        self.layers[lo..=hi].iter().map(|l| l.param_bytes).sum()
+    }
+
+    pub fn range_act_bytes(&self, lo: usize, hi: usize) -> u64 {
+        self.layers[lo..=hi].iter().map(|l| l.act_bytes).sum()
+    }
+
+    pub fn range_fwd_s(&self, lo: usize, hi: usize, tier: usize) -> f64 {
+        self.layers[lo..=hi].iter().map(|l| l.fwd_s[tier]).sum()
+    }
+
+    pub fn range_bwd_s(&self, lo: usize, hi: usize, tier: usize) -> f64 {
+        self.layers[lo..=hi].iter().map(|l| l.bwd_s[tier]).sum()
+    }
+
+    /// Validate internal consistency (tier vector lengths line up, sizes
+    /// are nonzero where they must be).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.layers.is_empty() {
+            return Err("model has no layers".into());
+        }
+        let n_tiers = self.layers[0].fwd_s.len();
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.fwd_s.len() != n_tiers || l.bwd_s.len() != n_tiers {
+                return Err(format!("layer {i} tier-vector length mismatch"));
+            }
+            if l.fwd_s.iter().chain(l.bwd_s.iter()).any(|&t| t < 0.0) {
+                return Err(format!("layer {i} has negative compute time"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(p: u64, f: f64) -> LayerProfile {
+        LayerProfile {
+            name: "l".into(),
+            param_bytes: p,
+            act_bytes: 10,
+            out_bytes: 5,
+            grad_bytes: 5,
+            fwd_s: vec![f, f / 2.0],
+            bwd_s: vec![2.0 * f, f],
+        }
+    }
+
+    #[test]
+    fn totals_and_ranges() {
+        let m = ModelProfile {
+            name: "m".into(),
+            layers: vec![layer(100, 1.0), layer(200, 2.0), layer(300, 3.0)],
+        };
+        assert_eq!(m.total_param_bytes(), 600);
+        assert_eq!(m.range_param_bytes(1, 2), 500);
+        assert!((m.total_fwd_s(0) - 6.0).abs() < 1e-12);
+        assert!((m.range_bwd_s(0, 1, 1) - 3.0).abs() < 1e-12);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_mismatch() {
+        let mut m = ModelProfile {
+            name: "m".into(),
+            layers: vec![layer(1, 1.0)],
+        };
+        m.layers[0].bwd_s = vec![1.0];
+        assert!(m.validate().is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! Layer merging (§4): for models with many layers the MIQP is too slow,
+//! so adjacent layers are merged into `target` super-layers before
+//! optimization. The paper offers three criteria — balance by computation
+//! time, parameter size, or activation size — and reports that balancing
+//! computation works best (it is the default everywhere here too).
+
+use crate::model::layer::{LayerProfile, ModelProfile};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeCriterion {
+    /// Balance summed forward+backward compute time (paper's choice).
+    Compute,
+    /// Balance summed parameter size.
+    ParamSize,
+    /// Balance summed activation size.
+    ActivationSize,
+}
+
+fn weight(l: &LayerProfile, c: MergeCriterion) -> f64 {
+    match c {
+        // tier 0 as the balancing reference — ratios are tier-invariant
+        MergeCriterion::Compute => l.fwd_s[0] + l.bwd_s[0],
+        MergeCriterion::ParamSize => l.param_bytes as f64,
+        MergeCriterion::ActivationSize => l.act_bytes as f64,
+    }
+}
+
+/// Merge `model` into at most `target` super-layers, balancing `criterion`.
+///
+/// Greedy block assignment: walk layers accumulating weight; close the
+/// current block once it reaches `total/target`, while never leaving more
+/// layers than remaining blocks. Merged quantities: sizes and compute
+/// times add; the boundary output/grad sizes are those of the block's last
+/// layer (partition boundaries can only fall between super-layers).
+pub fn merge_layers(
+    model: &ModelProfile,
+    target: usize,
+    criterion: MergeCriterion,
+) -> ModelProfile {
+    assert!(target >= 1);
+    let l = model.layers.len();
+    if l <= target {
+        return model.clone();
+    }
+    let weights: Vec<f64> =
+        model.layers.iter().map(|x| weight(x, criterion)).collect();
+    let total: f64 = weights.iter().sum();
+
+    // Greedy with dynamic re-targeting: each block aims for
+    // remaining_total / remaining_blocks, and a layer is included only if
+    // that brings the block closer to its target (subject to leaving at
+    // least one layer per remaining block).
+    let mut blocks: Vec<(usize, usize)> = Vec::with_capacity(target);
+    let mut start = 0usize;
+    let mut remaining = total;
+    let mut i = 0usize;
+    while blocks.len() < target - 1 {
+        let blocks_left = target - blocks.len();
+        let goal = remaining / blocks_left as f64;
+        let mut acc = weights[i];
+        let mut end = i;
+        loop {
+            let layers_left_after = l - (end + 1);
+            if layers_left_after <= blocks_left - 1 {
+                break; // must leave one layer per remaining block
+            }
+            let next = weights[end + 1];
+            // include next layer only if it brings us closer to goal
+            if (acc + next - goal).abs() < (acc - goal).abs() {
+                end += 1;
+                acc += next;
+            } else {
+                break;
+            }
+        }
+        blocks.push((start, end));
+        remaining -= acc;
+        start = end + 1;
+        i = start;
+    }
+    blocks.push((start, l - 1));
+
+    let n_tiers = model.layers[0].fwd_s.len();
+    let merged = blocks
+        .iter()
+        .enumerate()
+        .map(|(bi, &(lo, hi))| {
+            let mut fwd_s = vec![0.0; n_tiers];
+            let mut bwd_s = vec![0.0; n_tiers];
+            let mut param = 0u64;
+            let mut act = 0u64;
+            for l in &model.layers[lo..=hi] {
+                param += l.param_bytes;
+                act += l.act_bytes;
+                for j in 0..n_tiers {
+                    fwd_s[j] += l.fwd_s[j];
+                    bwd_s[j] += l.bwd_s[j];
+                }
+            }
+            let last = &model.layers[hi];
+            let first = &model.layers[lo];
+            LayerProfile {
+                name: format!("{}/m{}[{}..{}]", model.name, bi, lo, hi),
+                param_bytes: param,
+                act_bytes: act,
+                out_bytes: last.out_bytes,
+                grad_bytes: first.grad_bytes,
+                fwd_s,
+                bwd_s,
+            }
+        })
+        .collect();
+
+    ModelProfile { name: model.name.clone(), layers: merged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::platform::PlatformSpec;
+
+    #[test]
+    fn merge_preserves_totals() {
+        let p = PlatformSpec::aws_lambda();
+        let m = zoo::amoebanet_d36(&p);
+        for target in [4, 8, 12] {
+            let merged = merge_layers(&m, target, MergeCriterion::Compute);
+            assert_eq!(merged.n_layers(), target);
+            assert_eq!(merged.total_param_bytes(), m.total_param_bytes());
+            assert_eq!(merged.total_act_bytes(), m.total_act_bytes());
+            for j in 0..p.n_tiers() {
+                assert!(
+                    (merged.total_fwd_s(j) - m.total_fwd_s(j)).abs() < 1e-9
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn merge_balances_compute() {
+        let p = PlatformSpec::aws_lambda();
+        let m = zoo::bert_large(&p);
+        let merged = merge_layers(&m, 8, MergeCriterion::Compute);
+        let times: Vec<f64> =
+            merged.layers.iter().map(|l| l.fwd_s[0] + l.bwd_s[0]).collect();
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        // balanced within 2.5x (BERT's embedding layer skews one block)
+        assert!(max / min < 2.5, "imbalance {max}/{min}");
+    }
+
+    #[test]
+    fn merge_noop_when_small() {
+        let p = PlatformSpec::aws_lambda();
+        let m = zoo::resnet101(&p);
+        let same = merge_layers(&m, 100, MergeCriterion::ParamSize);
+        assert_eq!(same, m);
+    }
+
+    #[test]
+    fn merge_by_params_balances_params() {
+        let p = PlatformSpec::aws_lambda();
+        let m = zoo::resnet101(&p);
+        let merged = merge_layers(&m, 6, MergeCriterion::ParamSize);
+        let sizes: Vec<f64> =
+            merged.layers.iter().map(|l| l.param_bytes as f64).collect();
+        let max = sizes.iter().cloned().fold(0.0, f64::max);
+        let min = sizes.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min < 3.0, "imbalance {sizes:?}");
+    }
+
+    #[test]
+    fn merged_boundaries_use_edge_layers() {
+        let p = PlatformSpec::aws_lambda();
+        let m = zoo::resnet101(&p);
+        let merged = merge_layers(&m, 4, MergeCriterion::Compute);
+        // each merged layer's out_bytes equals its last member's
+        assert_eq!(
+            merged.layers.last().unwrap().out_bytes,
+            m.layers.last().unwrap().out_bytes
+        );
+    }
+}

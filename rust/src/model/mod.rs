@@ -1,0 +1,11 @@
+//! Model metadata: per-layer profiles, the evaluation model zoo (Table 1),
+//! layer merging (§4 "MIQP solution") and partition-plan representation.
+
+pub mod layer;
+pub mod merge;
+pub mod partition;
+pub mod zoo;
+
+pub use layer::{LayerProfile, ModelProfile};
+pub use merge::{merge_layers, MergeCriterion};
+pub use partition::{Plan, PlanError};

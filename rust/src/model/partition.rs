@@ -1,0 +1,293 @@
+//! Partition plan: the joint decision variable of §3.4 — where to cut the
+//! model (`x_i`), the data-parallel degree (`d` / `y_k`), and the memory
+//! tier of each stage's workers (`m_i` / `z_{i,j}`).
+
+use thiserror::Error;
+
+use crate::model::layer::ModelProfile;
+use crate::platform::PlatformSpec;
+
+/// A complete training configuration for one model on one platform.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Plan {
+    /// Sorted cut positions: `i` ∈ `cuts` means a boundary after layer `i`
+    /// (0-based; valid range `0..L-1`). `cuts.len()+1` stages.
+    pub cuts: Vec<usize>,
+    /// Data-parallel degree `d` (uniform across stages, §3.4.1).
+    pub dp: usize,
+    /// Memory tier index per stage (length = number of stages).
+    pub stage_tiers: Vec<usize>,
+    /// Total number of micro-batches `M` = global batch / micro-batch size.
+    pub n_micro_global: usize,
+}
+
+#[derive(Debug, Error, PartialEq)]
+pub enum PlanError {
+    #[error("cuts must be strictly increasing and < L-1 (L={l}): {cuts:?}")]
+    BadCuts { cuts: Vec<usize>, l: usize },
+    #[error("stage_tiers length {got} != number of stages {want}")]
+    TierLen { got: usize, want: usize },
+    #[error("tier index {tier} out of range ({n_tiers} tiers)")]
+    BadTier { tier: usize, n_tiers: usize },
+    #[error("dp degree {dp} does not divide micro-batch count {m}")]
+    BadDp { dp: usize, m: usize },
+    #[error(
+        "stage {stage} needs {need_mb} MB but tier provides {have_mb} MB"
+    )]
+    OutOfMemory { stage: usize, need_mb: u64, have_mb: u64 },
+}
+
+impl Plan {
+    /// Single-stage plan (pure data parallelism / LambdaML shape).
+    pub fn data_parallel(dp: usize, tier: usize, n_micro_global: usize) -> Self {
+        Self { cuts: vec![], dp, stage_tiers: vec![tier], n_micro_global }
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.cuts.len() + 1
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_stages() * self.dp
+    }
+
+    /// Micro-batches per worker `μ = M / d`.
+    pub fn mu(&self) -> usize {
+        self.n_micro_global / self.dp
+    }
+
+    /// Inclusive layer ranges `[(lo, hi)]` per stage.
+    pub fn stage_ranges(&self, n_layers: usize) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.n_stages());
+        let mut lo = 0;
+        for &c in &self.cuts {
+            out.push((lo, c));
+            lo = c + 1;
+        }
+        out.push((lo, n_layers - 1));
+        out
+    }
+
+    /// Stage index that layer `i` belongs to.
+    pub fn stage_of(&self, layer: usize) -> usize {
+        self.cuts.iter().filter(|&&c| c < layer).count()
+    }
+
+    /// Total allocated memory across all workers in GB (`c_mem`, eq. (5)).
+    pub fn total_mem_gb(&self, platform: &PlatformSpec) -> f64 {
+        self.stage_tiers
+            .iter()
+            .map(|&j| platform.tier(j).mem_gb())
+            .sum::<f64>()
+            * self.dp as f64
+    }
+
+    /// Memory demand of one worker of `stage` in bytes — constraint (3b):
+    /// `μ·â + ŝ·(4 − 2·[d==1]) + s_0`.
+    pub fn stage_mem_bytes(
+        &self,
+        model: &ModelProfile,
+        platform: &PlatformSpec,
+        stage: usize,
+    ) -> u64 {
+        let ranges = self.stage_ranges(model.n_layers());
+        let (lo, hi) = ranges[stage];
+        let act = model.range_act_bytes(lo, hi);
+        let params = model.range_param_bytes(lo, hi);
+        let sync_copies = if self.dp == 1 { 2 } else { 4 };
+        (self.mu() as u64) * act
+            + params * sync_copies
+            + platform.base_mem_mb * 1024 * 1024
+    }
+
+    /// Full validation against the model and platform.
+    pub fn validate(
+        &self,
+        model: &ModelProfile,
+        platform: &PlatformSpec,
+    ) -> Result<(), PlanError> {
+        let l = model.n_layers();
+        let increasing =
+            self.cuts.windows(2).all(|w| w[0] < w[1]);
+        if !increasing || self.cuts.iter().any(|&c| c + 1 >= l) {
+            return Err(PlanError::BadCuts { cuts: self.cuts.clone(), l });
+        }
+        if self.stage_tiers.len() != self.n_stages() {
+            return Err(PlanError::TierLen {
+                got: self.stage_tiers.len(),
+                want: self.n_stages(),
+            });
+        }
+        for &t in &self.stage_tiers {
+            if t >= platform.n_tiers() {
+                return Err(PlanError::BadTier {
+                    tier: t,
+                    n_tiers: platform.n_tiers(),
+                });
+            }
+        }
+        if self.dp == 0 || self.n_micro_global % self.dp != 0 {
+            return Err(PlanError::BadDp {
+                dp: self.dp,
+                m: self.n_micro_global,
+            });
+        }
+        for s in 0..self.n_stages() {
+            let need = self.stage_mem_bytes(model, platform, s);
+            let have = platform.tier(self.stage_tiers[s]).mem_bytes();
+            if need > have {
+                return Err(PlanError::OutOfMemory {
+                    stage: s,
+                    need_mb: need / (1024 * 1024),
+                    have_mb: have / (1024 * 1024),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Human-readable summary ("[0..7]@4096 | [8..23]@10240, d=2, μ=8").
+    pub fn describe(&self, model: &ModelProfile, platform: &PlatformSpec) -> String {
+        let ranges = self.stage_ranges(model.n_layers());
+        let stages: Vec<String> = ranges
+            .iter()
+            .zip(&self.stage_tiers)
+            .map(|(&(lo, hi), &t)| {
+                format!("[{lo}..{hi}]@{}MB", platform.tier(t).mem_mb)
+            })
+            .collect();
+        format!(
+            "{} | d={} μ={} workers={}",
+            stages.join(" | "),
+            self.dp,
+            self.mu(),
+            self.n_workers()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::platform::PlatformSpec;
+
+    fn setup() -> (ModelProfile, PlatformSpec) {
+        let p = PlatformSpec::aws_lambda();
+        let m = zoo::resnet101(&p);
+        (m, p)
+    }
+
+    #[test]
+    fn stage_ranges_cover_all_layers() {
+        let plan = Plan {
+            cuts: vec![3, 9],
+            dp: 2,
+            stage_tiers: vec![0, 1, 2],
+            n_micro_global: 8,
+        };
+        let ranges = plan.stage_ranges(24);
+        assert_eq!(ranges, vec![(0, 3), (4, 9), (10, 23)]);
+        assert_eq!(plan.n_workers(), 6);
+        assert_eq!(plan.mu(), 4);
+        assert_eq!(plan.stage_of(0), 0);
+        assert_eq!(plan.stage_of(4), 1);
+        assert_eq!(plan.stage_of(23), 2);
+    }
+
+    #[test]
+    fn validation_rejects_bad_cuts() {
+        let (m, p) = setup();
+        let plan = Plan {
+            cuts: vec![9, 3],
+            dp: 1,
+            stage_tiers: vec![7, 7, 7],
+            n_micro_global: 4,
+        };
+        assert!(matches!(
+            plan.validate(&m, &p),
+            Err(PlanError::BadCuts { .. })
+        ));
+        let plan2 = Plan {
+            cuts: vec![23],
+            dp: 1,
+            stage_tiers: vec![7, 7],
+            n_micro_global: 4,
+        };
+        assert!(matches!(
+            plan2.validate(&m, &p),
+            Err(PlanError::BadCuts { .. })
+        ));
+    }
+
+    #[test]
+    fn validation_rejects_dp_mismatch() {
+        let (m, p) = setup();
+        let plan = Plan {
+            cuts: vec![],
+            dp: 3,
+            stage_tiers: vec![7],
+            n_micro_global: 4,
+        };
+        assert!(matches!(plan.validate(&m, &p), Err(PlanError::BadDp { .. })));
+    }
+
+    #[test]
+    fn memory_constraint_3b() {
+        let (m, p) = setup();
+        // whole ResNet101 on one 512 MB worker with 16 micro-batches: OOM
+        let plan = Plan {
+            cuts: vec![],
+            dp: 1,
+            stage_tiers: vec![0],
+            n_micro_global: 16,
+        };
+        assert!(matches!(
+            plan.validate(&m, &p),
+            Err(PlanError::OutOfMemory { .. })
+        ));
+        // but on the 10 GB tier it fits (170 MB params * 2 + acts)
+        let plan = Plan {
+            cuts: vec![],
+            dp: 1,
+            stage_tiers: vec![7],
+            n_micro_global: 4,
+        };
+        plan.validate(&m, &p).unwrap();
+    }
+
+    #[test]
+    fn dp_adds_sync_memory() {
+        let (m, p) = setup();
+        let mk = |dp| Plan {
+            cuts: vec![],
+            dp,
+            stage_tiers: vec![7],
+            n_micro_global: 8,
+        };
+        // d=1: 2 copies (params+grads); d=2: 4 copies (+serialization),
+        // but μ halves so activations shrink
+        let m1 = mk(1).stage_mem_bytes(&m, &p, 0);
+        let m2 = mk(2).stage_mem_bytes(&m, &p, 0);
+        let params = m.total_param_bytes();
+        let act = m.total_act_bytes();
+        let s0 = p.base_mem_mb * 1024 * 1024;
+        assert_eq!(m1, 8 * act + 2 * params + s0);
+        assert_eq!(m2, 4 * act + 4 * params + s0);
+    }
+
+    #[test]
+    fn describe_contains_tiers() {
+        let (m, p) = setup();
+        let plan = Plan {
+            cuts: vec![11],
+            dp: 2,
+            stage_tiers: vec![3, 7],
+            n_micro_global: 8,
+        };
+        let d = plan.describe(&m, &p);
+        assert!(d.contains("3072MB"), "{d}");
+        assert!(d.contains("10240MB"), "{d}");
+        assert!(d.contains("d=2"), "{d}");
+    }
+}

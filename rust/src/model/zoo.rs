@@ -1,0 +1,334 @@
+//! The evaluation model zoo — analytic layer profiles for the four models
+//! of Table 1, calibrated to the paper's published numbers:
+//!
+//! | model         | params (MB) | act/sample (MB) |
+//! |---------------|-------------|------------------|
+//! | ResNet101     |  170        | 198              |
+//! | AmoebaNet-D18 |  476        | 432              |
+//! | AmoebaNet-D36 |  900        | 697              |
+//! | BERT-Large    | 1153        | 263              |
+//!
+//! Compute-time calibration anchor: Fig. 1(a) — AmoebaNet-D36 takes ~6 s
+//! of compute per iteration at local batch 8 on a max-memory Lambda
+//! worker. Other models are scaled by parameter count with
+//! architecture-specific factors.
+//!
+//! Layer *shape* matters for the partitioner, so profiles encode the
+//! architectural skews: CNNs have activation-heavy early layers and
+//! parameter-heavy late layers; BERT is uniform blocks with a fat
+//! embedding; AmoebaNet cells are roughly homogeneous with reduction
+//! cells at 1/3 and 2/3 depth.
+
+use crate::model::layer::{LayerProfile, ModelProfile};
+use crate::platform::PlatformSpec;
+
+const MB: f64 = 1.0e6;
+
+/// Micro-batch size used throughout the evaluation (§5.1).
+pub const MICRO_BATCH: usize = 4;
+
+/// Names accepted by [`by_name`].
+pub const MODEL_NAMES: [&str; 4] =
+    ["resnet101", "amoebanet-d18", "amoebanet-d36", "bert-large"];
+
+pub fn by_name(name: &str, platform: &PlatformSpec) -> Option<ModelProfile> {
+    match name.to_ascii_lowercase().as_str() {
+        "resnet101" => Some(resnet101(platform)),
+        "amoebanet-d18" | "amoebanetd18" | "d18" => Some(amoebanet_d18(platform)),
+        "amoebanet-d36" | "amoebanetd36" | "d36" => Some(amoebanet_d36(platform)),
+        "bert-large" | "bert" => Some(bert_large(platform)),
+        _ => None,
+    }
+}
+
+/// Compute-time vector across tiers for a layer whose per-micro-batch time
+/// on a 1-vCPU reference worker is `ref_s`. Parallel speedup saturates:
+/// a function's training threads stop scaling past ~4 effective vCPUs
+/// (PyTorch CPU training observed behaviour).
+fn tier_times(platform: &PlatformSpec, ref_s: f64) -> Vec<f64> {
+    platform
+        .tiers
+        .iter()
+        .map(|t| {
+            let speed = effective_speed(t.compute_speed);
+            ref_s / speed
+        })
+        .collect()
+}
+
+fn effective_speed(vcpus: f64) -> f64 {
+    // Amdahl-style saturation: serial fraction ~12%.
+    let p = 0.88;
+    let v = vcpus.max(0.2);
+    1.0 / ((1.0 - p) + p / v)
+}
+
+struct Shape {
+    /// fraction of params in layer i (normalized later)
+    param_w: Vec<f64>,
+    /// fraction of activation memory
+    act_w: Vec<f64>,
+    /// fraction of compute
+    comp_w: Vec<f64>,
+    /// boundary output sizes relative to act of that layer
+    out_frac: Vec<f64>,
+}
+
+/// Build a model profile from totals + per-layer weight shapes.
+fn build(
+    name: &str,
+    platform: &PlatformSpec,
+    total_param_mb: f64,
+    total_act_mb_per_sample: f64,
+    total_fwd_s_ref: f64, // full fwd pass, one micro-batch, 1-vCPU ref
+    bwd_ratio: f64,
+    shape: Shape,
+) -> ModelProfile {
+    let l = shape.param_w.len();
+    let norm = |w: &[f64]| {
+        let s: f64 = w.iter().sum();
+        w.iter().map(|x| x / s).collect::<Vec<f64>>()
+    };
+    let pw = norm(&shape.param_w);
+    let aw = norm(&shape.act_w);
+    let cw = norm(&shape.comp_w);
+
+    let layers = (0..l)
+        .map(|i| {
+            let param_bytes = (total_param_mb * MB * pw[i]) as u64;
+            // a_i is per *micro-batch* in our convention
+            let act_bytes = (total_act_mb_per_sample
+                * MICRO_BATCH as f64
+                * MB
+                * aw[i]) as u64;
+            let out_bytes =
+                ((act_bytes as f64) * shape.out_frac[i]).max(64.0) as u64;
+            let fwd_ref = total_fwd_s_ref * cw[i];
+            LayerProfile {
+                name: format!("{name}/l{i}"),
+                param_bytes,
+                act_bytes,
+                out_bytes,
+                grad_bytes: out_bytes, // dL/dx has the output's shape
+                fwd_s: tier_times(platform, fwd_ref),
+                bwd_s: tier_times(platform, fwd_ref * bwd_ratio),
+            }
+        })
+        .collect();
+    let m = ModelProfile { name: name.to_string(), layers };
+    debug_assert!(m.validate().is_ok());
+    m
+}
+
+/// Geometric ramp helper: w_i = r^i.
+fn ramp(l: usize, r: f64) -> Vec<f64> {
+    (0..l).map(|i| r.powi(i as i32)).collect()
+}
+
+/// ResNet101 (170 MB params, 198 MB act/sample): early conv layers are
+/// activation-heavy/parameter-light, later blocks the reverse. 24 merged
+/// layers (the §4 merge keeps compute balanced — so compute weights are
+/// near-uniform by construction).
+pub fn resnet101(platform: &PlatformSpec) -> ModelProfile {
+    let l = 24;
+    build(
+        "resnet101",
+        platform,
+        170.0,
+        198.0,
+        // ResNet101 ~7.8 GFLOPs fwd @224px; CIFAR-scale inputs are ~10x
+        // cheaper; calibrated: ~0.55 s per micro-batch on 1 vCPU ref.
+        0.55,
+        2.0,
+        Shape {
+            param_w: ramp(l, 1.22),           // params grow with depth
+            act_w: ramp(l, 1.0 / 1.18),       // activations shrink
+            comp_w: vec![1.0; l],             // merge balanced compute
+            out_frac: (0..l)
+                .map(|i| if i % 6 == 5 { 0.5 } else { 0.9 })
+                .collect(),
+        },
+    )
+}
+
+fn amoebanet(
+    name: &str,
+    platform: &PlatformSpec,
+    cells: usize,
+    param_mb: f64,
+    act_mb: f64,
+    fwd_ref: f64,
+) -> ModelProfile {
+    // normal cells with reduction cells at 1/3 and 2/3 depth
+    let l = cells;
+    let mut act_w = vec![1.0; l];
+    let mut out_frac = vec![0.85; l];
+    for i in 0..l {
+        if i == l / 3 || i == 2 * l / 3 {
+            out_frac[i] = 0.45; // reduction cell halves spatial dims
+        }
+        let section = if i < l / 3 { 0 } else if i < 2 * l / 3 { 1 } else { 2 };
+        act_w[i] = match section {
+            0 => 1.6,
+            1 => 1.0,
+            _ => 0.6,
+        };
+    }
+    build(
+        name,
+        platform,
+        param_mb,
+        act_mb,
+        fwd_ref,
+        2.1,
+        Shape {
+            param_w: ramp(l, 1.08),
+            act_w,
+            comp_w: vec![1.0; l],
+            out_frac,
+        },
+    )
+}
+
+/// AmoebaNet-D18 (476 MB params, 432 MB act/sample), 18 normal cells.
+pub fn amoebanet_d18(platform: &PlatformSpec) -> ModelProfile {
+    amoebanet("amoebanet-d18", platform, 18, 476.0, 432.0, 1.6)
+}
+
+/// AmoebaNet-D36 (900 MB params, 697 MB act/sample), 36 normal cells.
+///
+/// Calibration: Fig. 1(a) — compute ≈ 6 s/iter at local batch 8 (2 micro-
+/// batches of 4) on the 10 GB tier (≈5.8 effective vCPU → speed≈3.9):
+/// fwd+bwd ref ≈ 6/2*3.9 ≈ 11.7 s per micro-batch ⇒ fwd_ref ≈ 3.8 s.
+pub fn amoebanet_d36(platform: &PlatformSpec) -> ModelProfile {
+    amoebanet("amoebanet-d36", platform, 36, 900.0, 697.0, 3.8)
+}
+
+/// BERT-Large (1153 MB params, 263 MB act/sample): 24 uniform transformer
+/// blocks + embedding layer (31 MB vocab table dominates params of l0).
+pub fn bert_large(platform: &PlatformSpec) -> ModelProfile {
+    let l = 25;
+    let mut param_w = vec![1.0; l];
+    param_w[0] = 2.8; // embeddings ≈ 31M params vs ~12.6M per block
+    let mut act_w = vec![1.0; l];
+    act_w[0] = 0.4;
+    let mut comp_w = vec![1.0; l];
+    comp_w[0] = 0.25; // embedding lookup is cheap
+    build(
+        "bert-large",
+        platform,
+        1153.0,
+        263.0,
+        3.1,
+        2.0,
+        Shape {
+            param_w,
+            act_w,
+            comp_w,
+            out_frac: vec![0.12; l], // (T, H) boundary tensor ≪ act memory
+        },
+    )
+}
+
+/// The small AOT transformer actually trained end-to-end (examples/),
+/// profiled analytically here for planner tests; the real profiler
+/// measures it through PJRT.
+pub fn tiny_transformer(platform: &PlatformSpec, n_stages: usize) -> ModelProfile {
+    let l = n_stages.max(3);
+    build(
+        "tiny-transformer",
+        platform,
+        2.0,
+        1.0,
+        0.004,
+        2.0,
+        Shape {
+            param_w: vec![1.0; l],
+            act_w: vec![1.0; l],
+            comp_w: vec![1.0; l],
+            out_frac: vec![0.8; l],
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_sizes_match() {
+        let p = PlatformSpec::aws_lambda();
+        let cases = [
+            (resnet101(&p), 170.0, 198.0),
+            (amoebanet_d18(&p), 476.0, 432.0),
+            (amoebanet_d36(&p), 900.0, 697.0),
+            (bert_large(&p), 1153.0, 263.0),
+        ];
+        for (m, params_mb, act_mb) in cases {
+            let got_p = m.total_param_bytes() as f64 / MB;
+            let got_a =
+                m.total_act_bytes() as f64 / MB / MICRO_BATCH as f64;
+            assert!(
+                (got_p - params_mb).abs() / params_mb < 0.01,
+                "{}: params {got_p} vs {params_mb}",
+                m.name
+            );
+            assert!(
+                (got_a - act_mb).abs() / act_mb < 0.01,
+                "{}: act {got_a} vs {act_mb}",
+                m.name
+            );
+            m.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn compute_times_decrease_with_tier() {
+        let p = PlatformSpec::aws_lambda();
+        let m = amoebanet_d36(&p);
+        for l in &m.layers {
+            for w in l.fwd_s.windows(2) {
+                assert!(w[1] <= w[0] + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn fig1a_compute_calibration() {
+        // Fig 1(a): AmoebaNet-D36 computation ~6 s/iteration with local
+        // batch 8 on a max-memory worker.
+        let p = PlatformSpec::aws_lambda();
+        let m = amoebanet_d36(&p);
+        let top = p.max_tier();
+        let per_micro = m.total_fwd_s(top) + m.total_bwd_s(top);
+        let iter_s = per_micro * (8 / MICRO_BATCH) as f64;
+        assert!(
+            (4.0..9.0).contains(&iter_s),
+            "calibration off: {iter_s} s/iter"
+        );
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        let p = PlatformSpec::aws_lambda();
+        for n in MODEL_NAMES {
+            assert!(by_name(n, &p).is_some(), "{n}");
+        }
+        assert!(by_name("nope", &p).is_none());
+    }
+
+    #[test]
+    fn bert_embedding_is_param_heavy() {
+        let p = PlatformSpec::aws_lambda();
+        let m = bert_large(&p);
+        assert!(m.layers[0].param_bytes > m.layers[1].param_bytes * 2);
+    }
+
+    #[test]
+    fn resnet_activations_shrink_with_depth() {
+        let p = PlatformSpec::aws_lambda();
+        let m = resnet101(&p);
+        assert!(m.layers[0].act_bytes > m.layers[23].act_bytes * 4);
+        assert!(m.layers[23].param_bytes > m.layers[0].param_bytes * 4);
+    }
+}

@@ -1,0 +1,19 @@
+//! The FuncPipe training pipeline (§3.2): GPipe-style micro-batch
+//! schedule with *communication as a pipeline stage* overlapped with
+//! computation.
+//!
+//! * [`task`] — the task DAG vocabulary shared by the simulator and the
+//!   real executor (Fwd/Bwd compute, boundary Upload/Download, Sync);
+//! * [`schedule`] — builds the §3.2 schedule for a [`Plan`];
+//! * [`simulate`] — discrete-event execution of a schedule on the
+//!   bandwidth-shared platform model ("measured" side of Table 3).
+//!
+//! [`Plan`]: crate::model::Plan
+
+pub mod schedule;
+pub mod simulate;
+pub mod task;
+
+pub use schedule::build_schedule;
+pub use simulate::{simulate_iteration, SimResult};
+pub use task::{Schedule, Task, TaskKind};

@@ -1,0 +1,257 @@
+//! Builds the §3.2 schedule: all micro-batches traverse every stage
+//! forward, then return in reverse order for backward; boundary transfers
+//! are explicit tasks chained per channel so the executor/simulator can
+//! overlap them with compute (the paper's communication-as-a-stage).
+
+use crate::model::Plan;
+use crate::pipeline::task::{Schedule, Task, TaskKind};
+
+/// Build the one-iteration task DAG for `plan`.
+///
+/// Per replica lane r (0..d) and stage s, with μ micro-batches per worker:
+///   F(s,m)  deps: F(s,m−1), FD(s,m) (if s>0)
+///   FU(s,m) deps: F(s,m), FU(s,m−1)                       (s < S−1)
+///   FD(s,m) deps: FU(s−1,m), FD(s,m−1)                    (s > 0)
+///   B(s,m)  deps: B(s,prev), F(s,μ−1), BD(s,m) (if s<S−1)
+///     — backward runs in *reverse* micro order (GPipe §3.2 (ii))
+///   BU(s,m) deps: B(s,m), BU(s,prev)                      (s > 0)
+///   BD(s,m) deps: BU(s+1,m), BD(s,prev)                   (s < S−1)
+///   SYNC(s) deps: B(s, last) of this replica              (d > 1)
+pub fn build_schedule(plan: &Plan) -> Schedule {
+    let s_cnt = plan.n_stages();
+    let d = plan.dp;
+    let mu = plan.mu();
+    let mut tasks: Vec<Task> = Vec::new();
+
+    // task id lookup tables per replica: [stage][mb]
+    let idx = |tbl: &Vec<Vec<Vec<usize>>>, r: usize, s: usize, m: usize| tbl[r][s][m];
+    let mut f = vec![vec![vec![usize::MAX; mu]; s_cnt]; d];
+    let mut fu = vec![vec![vec![usize::MAX; mu]; s_cnt]; d];
+    let mut fd = vec![vec![vec![usize::MAX; mu]; s_cnt]; d];
+    let mut b = vec![vec![vec![usize::MAX; mu]; s_cnt]; d];
+    let mut bu = vec![vec![vec![usize::MAX; mu]; s_cnt]; d];
+    let mut bd = vec![vec![vec![usize::MAX; mu]; s_cnt]; d];
+
+    let push = |tasks: &mut Vec<Task>,
+                    worker: usize,
+                    replica: usize,
+                    kind: TaskKind,
+                    deps: Vec<usize>|
+     -> usize {
+        let id = tasks.len();
+        tasks.push(Task { id, worker, replica, kind, deps });
+        id
+    };
+
+    for r in 0..d {
+        // ---- forward wave: stage-major then micro (ids increase along
+        // dependencies automatically)
+        for s in 0..s_cnt {
+            let w = s * d + r;
+            for m in 0..mu {
+                if s > 0 {
+                    let mut deps = vec![idx(&fu, r, s - 1, m)];
+                    if m > 0 {
+                        deps.push(idx(&fd, r, s, m - 1));
+                    }
+                    fd[r][s][m] = push(
+                        &mut tasks,
+                        w,
+                        r,
+                        TaskKind::FwdDownload { stage: s, mb: m },
+                        deps,
+                    );
+                }
+                let mut deps = Vec::new();
+                if m > 0 {
+                    deps.push(idx(&f, r, s, m - 1));
+                }
+                if s > 0 {
+                    deps.push(idx(&fd, r, s, m));
+                }
+                f[r][s][m] = push(
+                    &mut tasks,
+                    w,
+                    r,
+                    TaskKind::FwdCompute { stage: s, mb: m },
+                    deps,
+                );
+                if s < s_cnt - 1 {
+                    let mut deps = vec![idx(&f, r, s, m)];
+                    if m > 0 {
+                        deps.push(idx(&fu, r, s, m - 1));
+                    }
+                    fu[r][s][m] = push(
+                        &mut tasks,
+                        w,
+                        r,
+                        TaskKind::FwdUpload { stage: s, mb: m },
+                        deps,
+                    );
+                }
+            }
+        }
+
+        // ---- backward wave: reverse stage order, reverse micro order
+        for s in (0..s_cnt).rev() {
+            let w = s * d + r;
+            let order: Vec<usize> = (0..mu).rev().collect();
+            for (k, &m) in order.iter().enumerate() {
+                if s < s_cnt - 1 {
+                    let mut deps = vec![idx(&bu, r, s + 1, m)];
+                    if k > 0 {
+                        deps.push(idx(&bd, r, s, order[k - 1]));
+                    }
+                    bd[r][s][m] = push(
+                        &mut tasks,
+                        w,
+                        r,
+                        TaskKind::BwdDownload { stage: s, mb: m },
+                        deps,
+                    );
+                }
+                let mut deps = vec![idx(&f, r, s, mu - 1)];
+                if k > 0 {
+                    deps.push(idx(&b, r, s, order[k - 1]));
+                }
+                if s < s_cnt - 1 {
+                    deps.push(idx(&bd, r, s, m));
+                }
+                b[r][s][m] = push(
+                    &mut tasks,
+                    w,
+                    r,
+                    TaskKind::BwdCompute { stage: s, mb: m },
+                    deps,
+                );
+                if s > 0 {
+                    let mut deps = vec![idx(&b, r, s, m)];
+                    if k > 0 {
+                        deps.push(idx(&bu, r, s, order[k - 1]));
+                    }
+                    bu[r][s][m] = push(
+                        &mut tasks,
+                        w,
+                        r,
+                        TaskKind::BwdUpload { stage: s, mb: m },
+                        deps,
+                    );
+                }
+            }
+        }
+    }
+
+    // ---- per-stage sync after each replica's last backward (m = 0)
+    if d > 1 {
+        for s in 0..s_cnt {
+            for r in 0..d {
+                let w = s * d + r;
+                let deps = vec![idx(&b, r, s, 0)];
+                push(&mut tasks, w, r, TaskKind::Sync { stage: s }, deps);
+            }
+        }
+    }
+
+    let sched = Schedule { tasks, n_stages: s_cnt, dp: d, mu };
+    debug_assert!(sched.validate().is_ok(), "{:?}", sched.validate());
+    sched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Plan;
+    use crate::pipeline::task::TaskKind;
+
+    fn plan(s: usize, d: usize, m: usize) -> Plan {
+        Plan {
+            cuts: (0..s - 1).collect(),
+            dp: d,
+            stage_tiers: vec![0; s],
+            n_micro_global: m,
+        }
+    }
+
+    #[test]
+    fn counts_are_right() {
+        // S stages, d replicas, μ micros:
+        //   compute: 2·S·d·μ ; fwd comm: 2·(S-1)·d·μ ; bwd comm same;
+        //   sync: S·d (if d>1)
+        let sched = build_schedule(&plan(3, 2, 8)); // μ = 4
+        let s = 3;
+        let d = 2;
+        let mu = 4;
+        let expect = 2 * s * d * mu + 2 * 2 * (s - 1) * d * mu + s * d;
+        assert_eq!(sched.tasks.len(), expect);
+        sched.validate().unwrap();
+    }
+
+    #[test]
+    fn no_sync_when_dp1() {
+        let sched = build_schedule(&plan(2, 1, 4));
+        assert!(!sched
+            .tasks
+            .iter()
+            .any(|t| matches!(t.kind, TaskKind::Sync { .. })));
+        sched.validate().unwrap();
+    }
+
+    #[test]
+    fn backward_is_reverse_order() {
+        let sched = build_schedule(&plan(2, 1, 4));
+        let bwd: Vec<usize> = sched
+            .tasks
+            .iter()
+            .filter_map(|t| match t.kind {
+                TaskKind::BwdCompute { stage: 1, mb } => Some(mb),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(bwd, vec![3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn forward_download_waits_for_upload() {
+        let sched = build_schedule(&plan(2, 1, 2));
+        for t in &sched.tasks {
+            if let TaskKind::FwdDownload { stage, mb } = t.kind {
+                let dep_ok = t.deps.iter().any(|&d| {
+                    matches!(
+                        sched.tasks[d].kind,
+                        TaskKind::FwdUpload { stage: s2, mb: m2 }
+                            if s2 + 1 == stage && m2 == mb
+                    )
+                });
+                assert!(dep_ok, "{t:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_stage_has_no_transfers() {
+        let sched = build_schedule(&plan(1, 2, 4));
+        assert!(sched.tasks.iter().all(|t| matches!(
+            t.kind,
+            TaskKind::FwdCompute { .. }
+                | TaskKind::BwdCompute { .. }
+                | TaskKind::Sync { .. }
+        )));
+    }
+
+    #[test]
+    fn replicas_are_disjoint_workers() {
+        let sched = build_schedule(&plan(2, 2, 4));
+        for t in &sched.tasks {
+            let (s, _) = match t.kind {
+                TaskKind::FwdCompute { stage, mb }
+                | TaskKind::BwdCompute { stage, mb }
+                | TaskKind::FwdUpload { stage, mb }
+                | TaskKind::FwdDownload { stage, mb }
+                | TaskKind::BwdUpload { stage, mb }
+                | TaskKind::BwdDownload { stage, mb } => (stage, mb),
+                TaskKind::Sync { stage } => (stage, 0),
+            };
+            assert_eq!(t.worker, s * 2 + t.replica);
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Task DAG vocabulary for one training iteration.
+//!
+//! Workers are numbered `stage * dp + replica`. Each task belongs to one
+//! worker; dependencies encode both data availability (upload before
+//! download) and per-channel serialization (a worker's uplink sends in
+//! schedule order), exactly the DAG the paper's *Task Executor* threads
+//! consume (§4 "Pipeline task overlap").
+
+/// What a task does. `mb` is the micro-batch index within the worker's
+/// share (0..μ).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Forward compute of micro-batch `mb` on `stage`.
+    FwdCompute { stage: usize, mb: usize },
+    /// Backward compute (includes the stage-internal rematerialization).
+    BwdCompute { stage: usize, mb: usize },
+    /// Upload stage output (activation) toward `stage+1`.
+    FwdUpload { stage: usize, mb: usize },
+    /// Download the previous stage's output into `stage`.
+    FwdDownload { stage: usize, mb: usize },
+    /// Upload the gradient toward `stage-1`.
+    BwdUpload { stage: usize, mb: usize },
+    /// Download the next stage's gradient into `stage`.
+    BwdDownload { stage: usize, mb: usize },
+    /// Intra-stage gradient synchronization across the dp replicas.
+    Sync { stage: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: usize,
+    /// Flat worker id = stage * dp + replica.
+    pub worker: usize,
+    pub replica: usize,
+    pub kind: TaskKind,
+    pub deps: Vec<usize>,
+}
+
+/// A complete one-iteration schedule.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub tasks: Vec<Task>,
+    pub n_stages: usize,
+    pub dp: usize,
+    pub mu: usize,
+}
+
+impl Schedule {
+    pub fn n_workers(&self) -> usize {
+        self.n_stages * self.dp
+    }
+
+    /// Tasks of one worker in creation (= execution) order.
+    pub fn worker_tasks(&self, worker: usize) -> Vec<&Task> {
+        self.tasks.iter().filter(|t| t.worker == worker).collect()
+    }
+
+    /// Sanity: the DAG is acyclic with edges only to lower ids (by
+    /// construction), every dep exists, and every worker's compute tasks
+    /// are serialized by a dependency chain.
+    pub fn validate(&self) -> Result<(), String> {
+        for t in &self.tasks {
+            for &d in &t.deps {
+                if d >= t.id {
+                    return Err(format!(
+                        "task {} depends on later task {}",
+                        t.id, d
+                    ));
+                }
+            }
+        }
+        // per-worker: each compute task (after the first) must depend
+        // (directly) on the previous compute task of that worker
+        for w in 0..self.n_workers() {
+            let computes: Vec<&Task> = self
+                .tasks
+                .iter()
+                .filter(|t| {
+                    t.worker == w
+                        && matches!(
+                            t.kind,
+                            TaskKind::FwdCompute { .. }
+                                | TaskKind::BwdCompute { .. }
+                        )
+                })
+                .collect();
+            for pair in computes.windows(2) {
+                if !pair[1].deps.contains(&pair[0].id) {
+                    return Err(format!(
+                        "worker {w}: compute {} not chained to {}",
+                        pair[1].id, pair[0].id
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,275 @@
+//! Bayesian-optimization baseline (§5.1/§5.6): CherryPick-style black-box
+//! search over the joint (partition, d, tiers) space.
+//!
+//! Gaussian process surrogate (RBF kernel, Cholesky solve — implemented
+//! here since no linear-algebra crate is available offline) + expected
+//! improvement acquisition, optimized by candidate sampling. As in the
+//! paper, configurations are scored with the performance model rather than
+//! live measurements, and infeasible decodes (OOM) receive a penalty —
+//! which is exactly why Bayes over-provisions: feasible-but-expensive
+//! regions look safe (§5.6's observed cost inefficiency).
+
+use crate::model::{ModelProfile, Plan};
+use crate::planner::perf_model::{PerfModel, PlanPerf};
+use crate::platform::PlatformSpec;
+use crate::util::rng::Rng;
+
+pub struct BayesOpt<'a> {
+    pub perf: PerfModel<'a>,
+    pub dp_options: Vec<usize>,
+    pub init_rounds: usize,
+    pub total_rounds: usize,
+    pub candidates_per_round: usize,
+    pub seed: u64,
+}
+
+impl<'a> BayesOpt<'a> {
+    pub fn new(model: &'a ModelProfile, platform: &'a PlatformSpec) -> Self {
+        Self {
+            perf: PerfModel::new(model, platform),
+            dp_options: vec![1, 2, 4, 8, 16, 32],
+            init_rounds: 20,
+            total_rounds: 100, // paper: 100 rounds
+            candidates_per_round: 256,
+            seed: 0xBA4E5,
+        }
+    }
+
+    fn dims(&self) -> usize {
+        // [d] + [cut indicator per boundary] + [tier per layer]
+        let l = self.perf.model.n_layers();
+        1 + (l - 1) + l
+    }
+
+    /// Decode a point in [0,1]^dims into a Plan (may be invalid).
+    fn decode(&self, x: &[f64], n_micro_global: usize) -> Plan {
+        let l = self.perf.model.n_layers();
+        let p = self.perf.platform;
+        let di = ((x[0] * self.dp_options.len() as f64) as usize)
+            .min(self.dp_options.len() - 1);
+        let dp = self.dp_options[di];
+        let cuts: Vec<usize> =
+            (0..l - 1).filter(|&i| x[1 + i] >= 0.5).collect();
+        // stage tier = tier channel of the stage's first layer
+        let tier_of = |layer: usize| -> usize {
+            ((x[l + layer] * p.n_tiers() as f64) as usize)
+                .min(p.n_tiers() - 1)
+        };
+        let mut stage_tiers = Vec::with_capacity(cuts.len() + 1);
+        let mut lo = 0usize;
+        for &c in &cuts {
+            stage_tiers.push(tier_of(lo));
+            lo = c + 1;
+        }
+        stage_tiers.push(tier_of(lo));
+        Plan { cuts, dp, stage_tiers, n_micro_global }
+    }
+
+    /// Objective with OOM penalty.
+    fn score(&self, plan: &Plan, alpha: (f64, f64)) -> f64 {
+        let m = self.perf.model;
+        let p = self.perf.platform;
+        if plan.validate(m, p).is_err() {
+            return PENALTY;
+        }
+        let perf = self.perf.evaluate(plan);
+        alpha.0 * perf.c_iter + alpha.1 * perf.t_iter
+    }
+
+    /// Run the optimization; returns the best feasible plan found (None if
+    /// every round decoded to OOM — the failure mode §5.1 reports).
+    pub fn solve(
+        &self,
+        n_micro_global: usize,
+        alpha: (f64, f64),
+    ) -> Option<(Plan, PlanPerf)> {
+        let mut rng = Rng::new(self.seed);
+        let dims = self.dims();
+        let mut xs: Vec<Vec<f64>> = Vec::new();
+        let mut ys: Vec<f64> = Vec::new();
+        let mut best: Option<(f64, Plan)> = None;
+
+        for round in 0..self.total_rounds {
+            let x = if round < self.init_rounds || ys.is_empty() {
+                (0..dims).map(|_| rng.next_f64()).collect::<Vec<f64>>()
+            } else {
+                self.propose(&xs, &ys, &mut rng)
+            };
+            let plan = self.decode(&x, n_micro_global);
+            let y = self.score(&plan, alpha);
+            if y < PENALTY
+                && best.as_ref().map(|(b, _)| y < *b).unwrap_or(true)
+            {
+                best = Some((y, plan));
+            }
+            xs.push(x);
+            ys.push(y.min(PENALTY));
+        }
+        best.map(|(_, plan)| {
+            let perf = self.perf.evaluate(&plan);
+            (plan, perf)
+        })
+    }
+
+    /// GP-EI proposal: fit a GP on (xs, ys-normalized), sample candidates,
+    /// return the candidate with maximum expected improvement.
+    fn propose(&self, xs: &[Vec<f64>], ys: &[f64], rng: &mut Rng) -> Vec<f64> {
+        let n = xs.len();
+        let dims = self.dims();
+        // normalize y
+        let mean = ys.iter().sum::<f64>() / n as f64;
+        let std = (ys.iter().map(|y| (y - mean).powi(2)).sum::<f64>()
+            / n as f64)
+            .sqrt()
+            .max(1e-9);
+        let yn: Vec<f64> = ys.iter().map(|y| (y - mean) / std).collect();
+        let y_best = yn.iter().cloned().fold(f64::INFINITY, f64::min);
+
+        // kernel matrix with jitter
+        let ell = 0.35 * (dims as f64).sqrt();
+        let k = |a: &[f64], b: &[f64]| -> f64 {
+            let d2: f64 =
+                a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+            (-d2 / (2.0 * ell * ell)).exp()
+        };
+        let mut kmat = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                kmat[i * n + j] =
+                    k(&xs[i], &xs[j]) + if i == j { 1e-6 } else { 0.0 };
+            }
+        }
+        let chol = cholesky(&kmat, n);
+        let alpha_vec = chol_solve(&chol, n, &yn);
+
+        let mut best_x: Option<Vec<f64>> = None;
+        let mut best_ei = f64::NEG_INFINITY;
+        for _ in 0..self.candidates_per_round {
+            let cand: Vec<f64> =
+                (0..dims).map(|_| rng.next_f64()).collect();
+            let kv: Vec<f64> = xs.iter().map(|x| k(x, &cand)).collect();
+            let mu: f64 =
+                kv.iter().zip(&alpha_vec).map(|(a, b)| a * b).sum();
+            // predictive variance: k(x,x) - k_v^T K^-1 k_v
+            let v = chol_forward(&chol, n, &kv);
+            let var = (1.0 - v.iter().map(|x| x * x).sum::<f64>()).max(1e-12);
+            let sigma = var.sqrt();
+            let z = (y_best - mu) / sigma;
+            let ei = sigma * (z * norm_cdf(z) + norm_pdf(z));
+            if ei > best_ei {
+                best_ei = ei;
+                best_x = Some(cand);
+            }
+        }
+        best_x.unwrap_or_else(|| (0..dims).map(|_| rng.next_f64()).collect())
+    }
+}
+
+const PENALTY: f64 = 1e6;
+
+/// Lower-triangular Cholesky factor of an n×n SPD matrix (row-major);
+/// the diagonal is clamped at 1e-12 so jittered kernel matrices never
+/// produce NaNs.
+fn cholesky(a: &[f64], n: usize) -> Vec<f64> {
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                l[i * n + j] = sum.max(1e-12).sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    l
+}
+
+/// Solve L L^T x = b.
+fn chol_solve(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let y = chol_forward(l, n, b);
+    // back substitution with L^T
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in (i + 1)..n {
+            sum -= l[k * n + i] * x[k];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+    x
+}
+
+/// Forward substitution: solve L y = b.
+fn chol_forward(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[i * n + k] * y[k];
+        }
+        y[i] = sum / l[i * n + i];
+    }
+    y
+}
+
+fn norm_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Φ(z) via Abramowitz–Stegun 7.1.26 erf approximation.
+fn norm_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+            - 0.284496736)
+            * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{merge_layers, zoo, MergeCriterion};
+
+    #[test]
+    fn erf_and_cdf_sane() {
+        assert!((erf(0.0)).abs() < 1e-9);
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!(norm_cdf(3.0) > 0.99);
+        assert!(norm_cdf(-3.0) < 0.01);
+    }
+
+    #[test]
+    fn cholesky_solves_spd() {
+        // A = [[4,2],[2,3]]
+        let a = vec![4.0, 2.0, 2.0, 3.0];
+        let l = cholesky(&a, 2);
+        let x = chol_solve(&l, 2, &[8.0, 7.0]);
+        // A x = b -> x = [1.25, 1.5]
+        assert!((x[0] - 1.25).abs() < 1e-9, "{x:?}");
+        assert!((x[1] - 1.5).abs() < 1e-9, "{x:?}");
+    }
+
+    #[test]
+    fn finds_feasible_plan() {
+        let p = PlatformSpec::aws_lambda();
+        let m = merge_layers(&zoo::amoebanet_d18(&p), 6, MergeCriterion::Compute);
+        let b = BayesOpt::new(&m, &p);
+        let (plan, perf) = b.solve(16, (1.0, 2e-4)).unwrap();
+        plan.validate(&m, &p).unwrap();
+        assert!(perf.t_iter.is_finite());
+    }
+}

@@ -1,0 +1,215 @@
+//! Direct solver over the paper's binary decision variables — the
+//! stand-in for Gurobi on the §3.4 program (App. C's MIQP after
+//! linearization has exactly this solution set; see DESIGN.md §7).
+//!
+//! Variables: `x_i ∈ {0,1}` (cut after layer i), `y_k` one-hot over the
+//! data-parallel options, `z_{i,j}` one-hot memory tier per layer with the
+//! consistency constraint (3c) (`m_i = m_{i−1}` unless `x_{i−1}=1`).
+//! The solver enumerates assignments in variable order x₁, z₁, x₂, z₂, …
+//! with constraint propagation: (3c) forces `z` inside a stage, (3b)
+//! prunes infeasible prefixes, and an admissible objective bound prunes
+//! the rest. Exact, but slower than [`optimizer`](super::optimizer) —
+//! used to certify it (they must return identical optima).
+
+use crate::model::{ModelProfile, Plan};
+use crate::planner::perf_model::PerfModel;
+use crate::platform::PlatformSpec;
+
+/// Result of a MIQP solve.
+#[derive(Debug, Clone)]
+pub struct MiqpSolution {
+    pub plan: Plan,
+    pub objective: f64,
+    pub nodes: u64,
+}
+
+pub struct MiqpSolver<'a> {
+    pub perf: PerfModel<'a>,
+    pub dp_options: Vec<usize>,
+}
+
+impl<'a> MiqpSolver<'a> {
+    pub fn new(model: &'a ModelProfile, platform: &'a PlatformSpec) -> Self {
+        Self {
+            perf: PerfModel::new(model, platform),
+            dp_options: vec![1, 2, 4, 8, 16, 32],
+        }
+    }
+
+    pub fn solve(
+        &self,
+        n_micro_global: usize,
+        alpha: (f64, f64),
+    ) -> Option<MiqpSolution> {
+        let m = self.perf.model;
+        let _p = self.perf.platform;
+        let l = m.n_layers();
+        let mut nodes = 0u64;
+        let mut best: Option<(f64, Plan)> = None;
+
+        // enumerate y (one-hot over d)
+        for &d in &self.dp_options {
+            if d == 0 || n_micro_global % d != 0 {
+                continue;
+            }
+            // enumerate x and z jointly, layer by layer. State: current
+            // stage start and its tier (z is constant within a stage by
+            // (3c)).
+            let mut x = vec![false; l.saturating_sub(1)];
+            self.enumerate(
+                0,
+                None,
+                &mut x,
+                &mut Vec::new(),
+                d,
+                n_micro_global,
+                alpha,
+                &mut best,
+                &mut nodes,
+            );
+        }
+        best.map(|(objective, plan)| MiqpSolution { plan, objective, nodes })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn enumerate(
+        &self,
+        layer: usize,
+        cur_tier: Option<(usize, usize)>, // (stage start layer, tier)
+        x: &mut Vec<bool>,
+        tiers: &mut Vec<usize>,
+        d: usize,
+        n_micro_global: usize,
+        alpha: (f64, f64),
+        best: &mut Option<(f64, Plan)>,
+        nodes: &mut u64,
+    ) {
+        let m = self.perf.model;
+        let p = self.perf.platform;
+        let l = m.n_layers();
+        *nodes += 1;
+
+        // choose z for `layer`: free at a stage start, forced otherwise
+        let tier_choices: Vec<usize> = match cur_tier {
+            None => (0..p.n_tiers()).collect(),
+            Some((_, t)) => vec![t],
+        };
+        for tier in tier_choices {
+            let stage_start = cur_tier.map(|(s, _)| s).unwrap_or(layer);
+            // (3b) check on the stage prefix [stage_start..=layer]
+            let mu = n_micro_global / d;
+            let act = m.range_act_bytes(stage_start, layer);
+            let params = m.range_param_bytes(stage_start, layer);
+            let copies = if d == 1 { 2 } else { 4 };
+            let need = (mu as u64) * act
+                + params * copies
+                + p.base_mem_mb * 1024 * 1024;
+            if need > p.tier(tier).mem_bytes() {
+                continue;
+            }
+
+            if layer == l - 1 {
+                // complete assignment — close final stage
+                tiers.push(tier);
+                let cuts: Vec<usize> = (0..l - 1).filter(|&i| x[i]).collect();
+                let plan = Plan {
+                    cuts,
+                    dp: d,
+                    stage_tiers: tiers.clone(),
+                    n_micro_global,
+                };
+                if plan.validate(m, p).is_ok() {
+                    let perf = self.perf.evaluate(&plan);
+                    let j = alpha.0 * perf.c_iter + alpha.1 * perf.t_iter;
+                    if best.as_ref().map(|(b, _)| j < *b).unwrap_or(true) {
+                        *best = Some((j, plan));
+                    }
+                }
+                tiers.pop();
+                continue;
+            }
+
+            // branch on x[layer]
+            for cut in [true, false] {
+                x[layer] = cut;
+                if cut {
+                    tiers.push(tier);
+                    self.enumerate(
+                        layer + 1,
+                        None,
+                        x,
+                        tiers,
+                        d,
+                        n_micro_global,
+                        alpha,
+                        best,
+                        nodes,
+                    );
+                    tiers.pop();
+                } else {
+                    self.enumerate(
+                        layer + 1,
+                        Some((stage_start, tier)),
+                        x,
+                        tiers,
+                        d,
+                        n_micro_global,
+                        alpha,
+                        best,
+                        nodes,
+                    );
+                }
+                x[layer] = false;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{merge_layers, zoo, MergeCriterion};
+    use crate::planner::optimizer::CoOptimizer;
+
+    /// The two exact solvers must agree — this certifies the B&B.
+    #[test]
+    fn miqp_certifies_branch_and_bound() {
+        let p = PlatformSpec::aws_lambda();
+        for name in ["resnet101", "bert-large"] {
+            let m = merge_layers(
+                &zoo::by_name(name, &p).unwrap(),
+                5,
+                MergeCriterion::Compute,
+            );
+            let alpha = (1.0, 1e-4);
+            let mut opt = CoOptimizer::new(&m, &p);
+            opt.dp_options = vec![1, 2, 4];
+            let mut miqp = MiqpSolver::new(&m, &p);
+            miqp.dp_options = vec![1, 2, 4];
+
+            let (_, perf, _) = opt.solve(8, alpha).unwrap();
+            let j_bb = alpha.0 * perf.c_iter + alpha.1 * perf.t_iter;
+            let sol = miqp.solve(8, alpha).unwrap();
+            assert!(
+                (sol.objective - j_bb).abs() < 1e-9 * j_bb.max(1.0),
+                "{name}: miqp {} vs b&b {}",
+                sol.objective,
+                j_bb
+            );
+        }
+    }
+
+    #[test]
+    fn miqp_respects_memory() {
+        let p = PlatformSpec::aws_lambda();
+        let m = merge_layers(
+            &zoo::amoebanet_d36(&p),
+            4,
+            MergeCriterion::Compute,
+        );
+        let mut s = MiqpSolver::new(&m, &p);
+        s.dp_options = vec![1, 2];
+        let sol = s.solve(8, (1.0, 1e-4)).unwrap();
+        sol.plan.validate(&m, &p).unwrap();
+    }
+}

@@ -1,0 +1,33 @@
+//! §3.4: co-optimization of model partition and resource allocation.
+//!
+//! * [`perf_model`] — the closed-form iteration time/cost model
+//!   (§3.4.2 + App. B) shared by every optimizer below;
+//! * [`optimizer`] — FuncPipe's exact branch-and-bound co-optimizer over
+//!   (partition, data-parallel degree, per-stage memory tier);
+//! * [`miqp`] — a direct solver over the paper's binary decision variables
+//!   (x_i, y_k, z_{i,j}); replaces Gurobi (DESIGN.md §7), cross-checks
+//!   [`optimizer`];
+//! * [`tpdmp`] — the TPDMP baseline (§5.6): throughput-maximal partition
+//!   under fixed resources + grid search over allocations;
+//! * [`bayes`] — Bayesian-optimization baseline: GP + expected improvement
+//!   over the joint encoded space;
+//! * [`pareto`] — weight sweep, Pareto frontier and the paper's δ≥0.8
+//!   recommendation rule.
+
+pub mod bayes;
+pub mod miqp;
+pub mod optimizer;
+pub mod pareto;
+pub mod perf_model;
+pub mod tpdmp;
+
+pub use optimizer::{CoOptimizer, SolveStats};
+pub use pareto::{pareto_front, recommend, sweep, SweepPoint};
+pub use perf_model::{PerfModel, PlanPerf};
+
+/// Weight pairs (α1 cost-weight, α2 time-weight) tracing the Pareto
+/// frontier. The paper's magnitudes (1, 2^16…) are tied to its internal
+/// cost unit; re-expressed here for $-and-seconds so the four points
+/// produce distinct speed/cost trade-offs on every zoo model.
+pub const DEFAULT_WEIGHTS: [(f64, f64); 4] =
+    [(1.0, 0.0), (1.0, 2e-5), (1.0, 2e-4), (1.0, 2e-3)];

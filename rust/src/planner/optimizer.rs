@@ -1,0 +1,490 @@
+//! FuncPipe's co-optimizer: exact branch-and-bound over the joint space of
+//! partition boundaries × data-parallel degree × per-stage memory tiers,
+//! minimizing the weighted objective (3a) under the memory constraints
+//! (3b). Solves the same program as the paper's MIQP (§3.4/App. C) — see
+//! DESIGN.md §7 for why B&B replaces Gurobi here — and is certified
+//! against the direct binary-variable solver in [`miqp`](super::miqp).
+//!
+//! Search structure: for each admissible `d`, stages are built left to
+//! right by DFS; each node fixes one more stage (its end layer + tier).
+//! Pruning:
+//!  * **feasibility** — constraint (3b) per stage;
+//!  * **bound** — an admissible lower bound on the objective of any
+//!    completion: committed compute/memory + remaining layers at their
+//!    per-layer fastest tier and cheapest memory (`J_lb ≤ J` because
+//!    `t_iter ≥ t_f + t_b^1 ≥ Σ(fwd+bwd)` and β, comm, (μ−1) lags ≥ 0).
+
+use std::time::Instant;
+
+use crate::model::{ModelProfile, Plan};
+use crate::planner::perf_model::{PerfModel, PlanPerf};
+use crate::platform::PlatformSpec;
+
+/// Solver telemetry (§5.6 reports solution times; we report node counts
+/// too).
+#[derive(Debug, Clone, Default)]
+pub struct SolveStats {
+    pub nodes: u64,
+    pub pruned_bound: u64,
+    pub pruned_memory: u64,
+    pub leaves: u64,
+    pub solve_time_s: f64,
+}
+
+/// The co-optimizer.
+pub struct CoOptimizer<'a> {
+    pub perf: PerfModel<'a>,
+    /// Candidate data-parallel degrees (`D` in §3.4.1).
+    pub dp_options: Vec<usize>,
+    /// Hard cap on DFS nodes (anytime behaviour; never hit in practice
+    /// for merged models, L ≤ 24).
+    pub node_budget: u64,
+}
+
+impl<'a> CoOptimizer<'a> {
+    pub fn new(model: &'a ModelProfile, platform: &'a PlatformSpec) -> Self {
+        Self {
+            perf: PerfModel::new(model, platform),
+            dp_options: vec![1, 2, 4, 8, 16, 32],
+            node_budget: 50_000_000,
+        }
+    }
+
+    /// Minimize `alpha.0·c_iter + alpha.1·t_iter` for a global batch of
+    /// `n_micro_global` micro-batches. Returns the best feasible plan.
+    pub fn solve(
+        &self,
+        n_micro_global: usize,
+        alpha: (f64, f64),
+    ) -> Option<(Plan, PlanPerf, SolveStats)> {
+        let start = Instant::now();
+        let mut stats = SolveStats::default();
+        let mut best: Option<(f64, Plan)> = None;
+
+        let m = self.perf.model;
+        let p = self.perf.platform;
+        let l = m.n_layers();
+
+        // per-layer minimum compute (fastest tier) for the bound
+        let fastest_tier = (0..p.n_tiers())
+            .max_by(|&a, &b| {
+                p.tier(a)
+                    .compute_speed
+                    .partial_cmp(&p.tier(b).compute_speed)
+                    .unwrap()
+            })
+            .unwrap();
+        let min_layer_s: Vec<f64> = (0..l)
+            .map(|i| m.layers[i].fwd_s[fastest_tier] + m.layers[i].bwd_s[fastest_tier])
+            .collect();
+        // suffix sums of the per-layer minima
+        let mut suffix_min_s = vec![0.0; l + 1];
+        for i in (0..l).rev() {
+            suffix_min_s[i] = suffix_min_s[i + 1] + min_layer_s[i];
+        }
+        // per-layer minimum fwd/bwd lag contributions (fastest tier) for
+        // the (μ-1)·Δ part of the bound: every remaining layer ends up in
+        // some stage, so Δ_f ≥ its fwd time (suffix max).
+        let mut suffix_max_fwd = vec![0.0f64; l + 1];
+        let mut suffix_max_bwd = vec![0.0f64; l + 1];
+        for i in (0..l).rev() {
+            suffix_max_fwd[i] =
+                suffix_max_fwd[i + 1].max(m.layers[i].fwd_s[fastest_tier]);
+            suffix_max_bwd[i] =
+                suffix_max_bwd[i + 1].max(m.layers[i].bwd_s[fastest_tier]);
+        }
+
+        for &d in &self.dp_options {
+            if d == 0 || n_micro_global % d != 0 {
+                continue;
+            }
+            let mu = n_micro_global / d;
+            if mu == 0 {
+                continue;
+            }
+            // per-layer minimal feasible tier memory (GB) given (μ, d):
+            // some stage must hold layer i, and that stage needs at least
+            // the memory layer i alone requires — suffix max is a valid
+            // bound on the remaining layers' largest stage allocation.
+            let copies = if d == 1 { 2u64 } else { 4u64 };
+            let mut suffix_min_gb = vec![0.0f64; l + 1];
+            let mut infeasible_d = false;
+            for i in (0..l).rev() {
+                let need = (mu as u64) * m.layers[i].act_bytes
+                    + copies * m.layers[i].param_bytes
+                    + p.base_mem_mb * 1024 * 1024;
+                let tier_gb = p
+                    .tiers
+                    .iter()
+                    .filter(|t| t.mem_bytes() >= need)
+                    .map(|t| t.mem_gb())
+                    .fold(f64::INFINITY, f64::min);
+                if !tier_gb.is_finite() {
+                    infeasible_d = true; // a single layer cannot fit: skip d
+                    break;
+                }
+                suffix_min_gb[i] = suffix_min_gb[i + 1].max(tier_gb);
+            }
+            if infeasible_d {
+                continue;
+            }
+            let mut ctx = Dfs {
+                opt: self,
+                d,
+                mu,
+                n_micro_global,
+                alpha,
+                suffix_min_s: &suffix_min_s,
+                suffix_max_fwd: &suffix_max_fwd,
+                suffix_max_bwd: &suffix_max_bwd,
+                suffix_min_gb: &suffix_min_gb,
+                cuts: Vec::new(),
+                tiers: Vec::new(),
+                committed_s: 0.0,
+                committed_gb: 0.0,
+                max_fc: 0.0,
+                max_bc: 0.0,
+                committed_comm: 0.0,
+                sync_lb: 0.0,
+                stats: &mut stats,
+                best: &mut best,
+            };
+            ctx.go(0);
+        }
+
+        stats.solve_time_s = start.elapsed().as_secs_f64();
+        best.map(|(_, plan)| {
+            let perf = self.perf.evaluate(&plan);
+            (plan, perf, stats)
+        })
+    }
+
+    /// Convenience: solve for every weight pair; returns deduped plans.
+    pub fn solve_weights(
+        &self,
+        n_micro_global: usize,
+        weights: &[(f64, f64)],
+    ) -> Vec<(Plan, PlanPerf)> {
+        let mut out: Vec<(Plan, PlanPerf)> = Vec::new();
+        for &w in weights {
+            if let Some((plan, perf, _)) = self.solve(n_micro_global, w) {
+                if !out.iter().any(|(p, _)| *p == plan) {
+                    out.push((plan, perf));
+                }
+            }
+        }
+        out
+    }
+}
+
+struct Dfs<'b, 'a> {
+    opt: &'b CoOptimizer<'a>,
+    d: usize,
+    mu: usize,
+    n_micro_global: usize,
+    alpha: (f64, f64),
+    suffix_min_s: &'b [f64],
+    suffix_max_fwd: &'b [f64],
+    suffix_max_bwd: &'b [f64],
+    suffix_min_gb: &'b [f64],
+    cuts: Vec<usize>,
+    tiers: Vec<usize>,
+    committed_s: f64,
+    committed_gb: f64,
+    /// max committed per-stage fwd/bwd compute (for the (μ-1)·Δ bound)
+    max_fc: f64,
+    max_bc: f64,
+    /// Σ over committed boundaries of their minimum transfer time
+    committed_comm: f64,
+    /// max over committed stages of their minimum sync time (d > 1)
+    sync_lb: f64,
+    stats: &'b mut SolveStats,
+    best: &'b mut Option<(f64, Plan)>,
+}
+
+impl Dfs<'_, '_> {
+    /// Extend the partial plan whose next unassigned layer is `lo`.
+    fn go(&mut self, lo: usize) {
+        let m = self.opt.perf.model;
+        let p = self.opt.perf.platform;
+        let l = m.n_layers();
+        self.stats.nodes += 1;
+        if self.stats.nodes > self.opt.node_budget {
+            return;
+        }
+
+        if lo == l {
+            // complete plan: exact evaluation
+            self.stats.leaves += 1;
+            let plan = Plan {
+                cuts: self.cuts.clone(),
+                dp: self.d,
+                stage_tiers: self.tiers.clone(),
+                n_micro_global: self.n_micro_global,
+            };
+            debug_assert!(plan.validate(m, p).is_ok());
+            let (t_iter, c_iter) = self.opt.perf.quick(&plan);
+            let j = self.alpha.0 * c_iter + self.alpha.1 * t_iter;
+            if self.best.as_ref().map(|(b, _)| j < *b).unwrap_or(true) {
+                *self.best = Some((j, plan));
+            }
+            return;
+        }
+
+        // bound: committed + optimistic remainder.
+        // t_iter ≥ t_f + max_s t_b^s ≥ Σ(fc+bc) + (μ-1)(Δ_f + Δ_b), and
+        // Δ_f ≥ max(max committed stage fwd, any remaining layer's
+        // fastest-tier fwd) (likewise backward).
+        if let Some((jbest, _)) = self.best.as_ref() {
+            let delta_f = self.max_fc.max(self.suffix_max_fwd[lo]);
+            let delta_b = self.max_bc.max(self.suffix_max_bwd[lo]);
+            // β applies to every completion that has communication: any
+            // partial with a committed stage (plus remaining layers) has
+            // >= 2 stages, and any d > 1 plan syncs — admissible either way
+            let beta_lb = if self.d > 1 || !self.tiers.is_empty() {
+                p.beta
+            } else {
+                1.0
+            };
+            // compute is β-scaled; committed boundary transfers and the
+            // largest committed stage's sync add on top (both appear in
+            // t_f / max_s(t_b+t_s) regardless of later choices)
+            let t_lb = beta_lb
+                * (self.committed_s
+                    + self.suffix_min_s[lo]
+                    + (self.mu as f64 - 1.0) * (delta_f + delta_b))
+                + self.committed_comm
+                + self.sync_lb;
+            let gb_lb = self.committed_gb + self.suffix_min_gb[lo];
+            let c_lb =
+                p.price_per_gb_s * (self.d as f64) * gb_lb * t_lb;
+            let j_lb = self.alpha.0 * c_lb + self.alpha.1 * t_lb;
+            if j_lb >= *jbest {
+                self.stats.pruned_bound += 1;
+                return;
+            }
+        }
+
+        // branch: this stage covers [lo..=hi] on tier j. Try larger tiers
+        // first (good incumbents early: feasible + fast).
+        for hi in lo..l {
+            for j in (0..p.n_tiers()).rev() {
+                // feasibility (3b)
+                let act = m.range_act_bytes(lo, hi);
+                let params = m.range_param_bytes(lo, hi);
+                let sync_copies = if self.d == 1 { 2 } else { 4 };
+                let need = (self.mu as u64) * act
+                    + params * sync_copies
+                    + p.base_mem_mb * 1024 * 1024;
+                if need > p.tier(j).mem_bytes() {
+                    self.stats.pruned_memory += 1;
+                    continue; // smaller tiers will also fail
+                }
+                let stage_fwd = m.range_fwd_s(lo, hi, j);
+                let stage_bwd = m.range_bwd_s(lo, hi, j);
+                let stage_gb = p.tier(j).mem_gb();
+                let (old_fc, old_bc) = (self.max_fc, self.max_bc);
+                let (old_comm, old_sync) = (self.committed_comm, self.sync_lb);
+
+                // admissible comm contribution of the boundary after `hi`
+                // (raw best-tier bandwidth ≥ any effective bandwidth)
+                let w_best = p
+                    .tiers
+                    .iter()
+                    .map(|t| t.bandwidth_bps)
+                    .fold(0.0f64, f64::max);
+                if hi < l - 1 {
+                    let o = m.layers[hi].out_bytes as f64;
+                    let g = m.layers[hi + 1].grad_bytes as f64;
+                    self.committed_comm += 2.0 * (o + g) / w_best
+                        + 4.0 * p.storage.latency_s;
+                    self.cuts.push(hi);
+                }
+                if self.d > 1 {
+                    // t_iter ≥ ... + t_s of this stage; its tier is known,
+                    // raw tier bandwidth ≥ effective → admissible
+                    let sync = crate::collective::sync_time(
+                        self.opt.perf.sync_alg,
+                        m.range_param_bytes(lo, hi) as f64,
+                        self.d,
+                        p.tier(j).bandwidth_bps,
+                        p.storage.latency_s,
+                    );
+                    self.sync_lb = self.sync_lb.max(sync);
+                }
+                self.tiers.push(j);
+                self.committed_s += stage_fwd + stage_bwd;
+                self.committed_gb += stage_gb;
+                self.max_fc = self.max_fc.max(stage_fwd);
+                self.max_bc = self.max_bc.max(stage_bwd);
+
+                self.go(hi + 1);
+
+                self.max_fc = old_fc;
+                self.max_bc = old_bc;
+                self.committed_gb -= stage_gb;
+                self.committed_s -= stage_fwd + stage_bwd;
+                self.tiers.pop();
+                self.sync_lb = old_sync;
+                self.committed_comm = old_comm;
+                if hi < l - 1 {
+                    self.cuts.pop();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{merge_layers, zoo, MergeCriterion};
+
+    #[test]
+    fn finds_feasible_optimal_plan() {
+        let p = PlatformSpec::aws_lambda();
+        let m0 = zoo::amoebanet_d18(&p);
+        let m = merge_layers(&m0, 6, MergeCriterion::Compute);
+        let opt = CoOptimizer::new(&m, &p);
+        let (plan, perf, stats) = opt.solve(16, (1.0, 2e-4)).unwrap();
+        plan.validate(&m, &p).unwrap();
+        assert!(perf.t_iter > 0.0);
+        assert!(stats.leaves > 0);
+        assert!(stats.solve_time_s < 60.0);
+    }
+
+    #[test]
+    fn cost_only_weight_prefers_cheap_plans() {
+        let p = PlatformSpec::aws_lambda();
+        let m = merge_layers(
+            &zoo::resnet101(&p),
+            6,
+            MergeCriterion::Compute,
+        );
+        let opt = CoOptimizer::new(&m, &p);
+        let (_, cheap, _) = opt.solve(16, (1.0, 0.0)).unwrap();
+        let (_, fast, _) = opt.solve(16, (0.0, 1.0)).unwrap();
+        assert!(cheap.c_iter <= fast.c_iter + 1e-12);
+        assert!(fast.t_iter <= cheap.t_iter + 1e-12);
+    }
+
+    #[test]
+    fn beats_pure_data_parallelism_on_big_models() {
+        // the headline claim: co-optimized pipeline beats the LambdaML
+        // shape (max-memory pure DP) on large models
+        let p = PlatformSpec::aws_lambda();
+        let m = merge_layers(
+            &zoo::amoebanet_d36(&p),
+            8,
+            MergeCriterion::Compute,
+        );
+        let opt = CoOptimizer::new(&m, &p);
+        let (plan, perf, _) = opt.solve(16, (1.0, 2e-4)).unwrap();
+        // compare with best feasible pure-DP plan at max tier
+        let pm = PerfModel::new(&m, &p);
+        let mut best_dp = f64::INFINITY;
+        for d in [1usize, 2, 4, 8, 16] {
+            if 16 % d != 0 {
+                continue;
+            }
+            let cand = Plan {
+                cuts: vec![],
+                dp: d,
+                stage_tiers: vec![p.max_tier()],
+                n_micro_global: 16,
+            };
+            if cand.validate(&m, &p).is_ok() {
+                best_dp = best_dp.min(pm.evaluate(&cand).t_iter);
+            }
+        }
+        assert!(
+            perf.t_iter < best_dp,
+            "co-opt {} !< best pure dp {}",
+            perf.t_iter,
+            best_dp
+        );
+        assert!(plan.n_stages() > 1, "expected pipeline: {plan:?}");
+    }
+
+    #[test]
+    fn exhaustive_small_case_agrees() {
+        // brute force over ALL plans for a tiny model and check B&B
+        // returns the same optimum
+        let p = PlatformSpec::aws_lambda();
+        let m = merge_layers(
+            &zoo::resnet101(&p),
+            4,
+            MergeCriterion::Compute,
+        );
+        let mut opt = CoOptimizer::new(&m, &p);
+        opt.dp_options = vec![1, 2, 4];
+        let alpha = (1.0, 1e-4);
+        let (plan, perf, _) = opt.solve(8, alpha).unwrap();
+        let j_bb = alpha.0 * perf.c_iter + alpha.1 * perf.t_iter;
+
+        let pm = PerfModel::new(&m, &p);
+        let mut j_brute = f64::INFINITY;
+        let l = m.n_layers();
+        // enumerate all 2^(l-1) cut sets × tiers × d
+        for mask in 0u32..(1 << (l - 1)) {
+            let cuts: Vec<usize> =
+                (0..l - 1).filter(|&i| mask & (1 << i) != 0).collect();
+            let s = cuts.len() + 1;
+            let mut tier_idx = vec![0usize; s];
+            loop {
+                for &d in &[1usize, 2, 4] {
+                    if 8 % d != 0 {
+                        continue;
+                    }
+                    let plan = Plan {
+                        cuts: cuts.clone(),
+                        dp: d,
+                        stage_tiers: tier_idx.clone(),
+                        n_micro_global: 8,
+                    };
+                    if plan.validate(&m, &p).is_ok() {
+                        let perf = pm.evaluate(&plan);
+                        let j =
+                            alpha.0 * perf.c_iter + alpha.1 * perf.t_iter;
+                        if j < j_brute {
+                            j_brute = j;
+                        }
+                    }
+                }
+                // increment tier_idx (odometer)
+                let mut k = 0;
+                loop {
+                    tier_idx[k] += 1;
+                    if tier_idx[k] < p.n_tiers() {
+                        break;
+                    }
+                    tier_idx[k] = 0;
+                    k += 1;
+                    if k == s {
+                        break;
+                    }
+                }
+                if k == s {
+                    break;
+                }
+            }
+        }
+        assert!(
+            (j_bb - j_brute).abs() < 1e-9 * j_brute.max(1.0),
+            "B&B {j_bb} vs brute {j_brute} (plan {plan:?})"
+        );
+    }
+
+    #[test]
+    fn respects_dp_divisibility() {
+        let p = PlatformSpec::aws_lambda();
+        let m = merge_layers(
+            &zoo::resnet101(&p),
+            4,
+            MergeCriterion::Compute,
+        );
+        let opt = CoOptimizer::new(&m, &p);
+        let (plan, _, _) = opt.solve(6, (1.0, 1e-4)).unwrap();
+        assert!(6 % plan.dp == 0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Weight sweep → Pareto frontier → recommendation (§5.1 "Recommendation").
+//!
+//! Each (α1, α2) pair yields one Pareto-optimal configuration; FuncPipe
+//! then recommends the fastest configuration whose efficiency
+//! `δ = (t_mc/t_p − 1) / (c_p/c_mc − 1) ≥ 0.8`, where (t_mc, c_mc) is the
+//! minimum-cost configuration (weights (1, 0)).
+
+use crate::model::Plan;
+use crate::planner::perf_model::PlanPerf;
+
+/// One evaluated configuration in a sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub plan: Plan,
+    pub perf: PlanPerf,
+    pub weights: (f64, f64),
+}
+
+/// Run a solver closure for each weight pair; dedupes identical plans.
+pub fn sweep<F>(weights: &[(f64, f64)], mut solve: F) -> Vec<SweepPoint>
+where
+    F: FnMut((f64, f64)) -> Option<(Plan, PlanPerf)>,
+{
+    let mut out: Vec<SweepPoint> = Vec::new();
+    for &w in weights {
+        if let Some((plan, perf)) = solve(w) {
+            if !out.iter().any(|p| p.plan == plan) {
+                out.push(SweepPoint { plan, perf, weights: w });
+            }
+        }
+    }
+    out
+}
+
+/// Pareto-filter on (t_iter, c_iter): keep points not dominated by any
+/// other (strictly better in one dimension, no worse in the other).
+pub fn pareto_front(points: &[SweepPoint]) -> Vec<SweepPoint> {
+    points
+        .iter()
+        .filter(|a| {
+            !points.iter().any(|b| {
+                (b.perf.t_iter < a.perf.t_iter - 1e-12
+                    && b.perf.c_iter <= a.perf.c_iter + 1e-12)
+                    || (b.perf.c_iter < a.perf.c_iter - 1e-12
+                        && b.perf.t_iter <= a.perf.t_iter + 1e-12)
+            })
+        })
+        .cloned()
+        .collect()
+}
+
+/// The paper's recommendation rule over a sweep (must contain the
+/// minimum-cost point, i.e. weights (1,0) should be in the sweep).
+pub fn recommend(points: &[SweepPoint]) -> Option<SweepPoint> {
+    let mc = points
+        .iter()
+        .min_by(|a, b| a.perf.c_iter.partial_cmp(&b.perf.c_iter).unwrap())?;
+    let (t_mc, c_mc) = (mc.perf.t_iter, mc.perf.c_iter);
+    let mut cands: Vec<&SweepPoint> = points
+        .iter()
+        .filter(|p| {
+            let dt = t_mc / p.perf.t_iter - 1.0;
+            let dc = p.perf.c_iter / c_mc - 1.0;
+            if dc <= 1e-12 {
+                // no extra cost: always efficient
+                true
+            } else {
+                dt / dc >= 0.8
+            }
+        })
+        .collect();
+    cands.sort_by(|a, b| a.perf.t_iter.partial_cmp(&b.perf.t_iter).unwrap());
+    cands.first().map(|p| (*p).clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(t: f64, c: f64) -> SweepPoint {
+        SweepPoint {
+            plan: Plan {
+                cuts: vec![],
+                dp: 1,
+                stage_tiers: vec![(t * 10.0) as usize % 8],
+                n_micro_global: (c * 1000.0) as usize + 1,
+            },
+            perf: PlanPerf {
+                t_iter: t,
+                c_iter: c,
+                t_fwd: t / 2.0,
+                t_bwd_sync: t / 2.0,
+                compute_s: t * 0.6,
+                flush_s: t * 0.3,
+                sync_s: t * 0.1,
+                total_mem_gb: 1.0,
+            },
+            weights: (1.0, 0.0),
+        }
+    }
+
+    #[test]
+    fn pareto_removes_dominated() {
+        let pts = vec![pt(10.0, 1.0), pt(5.0, 2.0), pt(12.0, 3.0), pt(4.0, 4.0)];
+        let front = pareto_front(&pts);
+        let ts: Vec<f64> = front.iter().map(|p| p.perf.t_iter).collect();
+        assert!(ts.contains(&10.0));
+        assert!(ts.contains(&5.0));
+        assert!(ts.contains(&4.0));
+        assert!(!ts.contains(&12.0)); // dominated by (5, 2)
+    }
+
+    #[test]
+    fn recommend_prefers_efficient_speedups() {
+        // mc = (10s, $1); candidate A: 5s at $2 → δ = (10/5-1)/(2/1-1) = 1
+        // ≥ 0.8 — recommended; candidate B: 8s at $3 → δ = 0.125 — no.
+        let pts = vec![pt(10.0, 1.0), pt(5.0, 2.0), pt(8.0, 3.0)];
+        let rec = recommend(&pts).unwrap();
+        assert_eq!(rec.perf.t_iter, 5.0);
+    }
+
+    #[test]
+    fn recommend_falls_back_to_min_cost() {
+        // the only faster point is wildly inefficient
+        let pts = vec![pt(10.0, 1.0), pt(9.5, 10.0)];
+        let rec = recommend(&pts).unwrap();
+        assert_eq!(rec.perf.t_iter, 10.0);
+    }
+
+    #[test]
+    fn sweep_dedupes() {
+        let mut calls = 0;
+        let pts = sweep(&[(1.0, 0.0), (1.0, 1.0)], |_| {
+            calls += 1;
+            Some((
+                Plan {
+                    cuts: vec![],
+                    dp: 1,
+                    stage_tiers: vec![0],
+                    n_micro_global: 4,
+                },
+                pt(1.0, 1.0).perf,
+            ))
+        });
+        assert_eq!(calls, 2);
+        assert_eq!(pts.len(), 1);
+    }
+}

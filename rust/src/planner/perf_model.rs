@@ -1,0 +1,364 @@
+//! The closed-form pipeline performance model of §3.4.2 and Appendix B:
+//! given a [`Plan`], predict iteration time `t_iter` (eq. (7)) and cost
+//! `c_iter` (eq. (6)).
+//!
+//! Because partition boundaries can only fall between (merged) layers,
+//! every per-layer quantity with a hat/tilde accumulator in the paper is
+//! evaluated here directly per *stage* — numerically identical, and it
+//! keeps `evaluate` allocation-free on the planner's hot path.
+
+use crate::collective::{sync_time, SyncAlgorithm};
+use crate::model::{ModelProfile, Plan};
+use crate::platform::PlatformSpec;
+
+/// Evaluated performance of one plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanPerf {
+    /// Iteration wall time, seconds (eq. (7)).
+    pub t_iter: f64,
+    /// Iteration cost, dollars (eq. (6)).
+    pub c_iter: f64,
+    /// Forward-pipeline completion time `t_f`.
+    pub t_fwd: f64,
+    /// `max_i (t_b^i + t_s^i)`.
+    pub t_bwd_sync: f64,
+    /// Breakdown for Fig. 6: pure compute | pipeline flush (bubbles +
+    /// boundary transfers) | intra-stage synchronization.
+    pub compute_s: f64,
+    pub flush_s: f64,
+    pub sync_s: f64,
+    /// Total allocated memory, GB (`c_mem` of eq. (5), already × d).
+    pub total_mem_gb: f64,
+}
+
+impl PlanPerf {
+    /// Training throughput in samples/second for a given global batch.
+    pub fn throughput(&self, global_batch: usize) -> f64 {
+        global_batch as f64 / self.t_iter
+    }
+}
+
+/// The performance model, parameterized by model profile + platform +
+/// sync algorithm (γ, δ in eq. (9)).
+#[derive(Debug, Clone)]
+pub struct PerfModel<'a> {
+    pub model: &'a ModelProfile,
+    pub platform: &'a PlatformSpec,
+    pub sync_alg: SyncAlgorithm,
+}
+
+impl<'a> PerfModel<'a> {
+    pub fn new(model: &'a ModelProfile, platform: &'a PlatformSpec) -> Self {
+        Self {
+            model,
+            platform,
+            sync_alg: SyncAlgorithm::PipelinedScatterReduce,
+        }
+    }
+
+    pub fn with_sync(mut self, alg: SyncAlgorithm) -> Self {
+        self.sync_alg = alg;
+        self
+    }
+
+    /// Fast path for optimizer inner loops: only (t_iter, c_iter), one
+    /// model pass, no breakdown (the breakdown needs a second
+    /// communication-free pass).
+    pub fn quick(&self, plan: &Plan) -> (f64, f64) {
+        let (t_iter, _, _) = self.eval_inner(plan, false);
+        let total_mem_gb = plan.total_mem_gb(self.platform);
+        let c_iter = self.platform.price_per_gb_s * total_mem_gb * t_iter;
+        (t_iter, c_iter)
+    }
+
+    /// Full evaluation (assumes `plan.validate()` passed).
+    pub fn evaluate(&self, plan: &Plan) -> PlanPerf {
+        let full = self.eval_inner(plan, false);
+        let nocomm = self.eval_inner(plan, true);
+        let compute_s = nocomm.0;
+        let t_iter_nosync = full.2;
+        let t_iter = full.0;
+        let flush_s = (t_iter_nosync - compute_s).max(0.0);
+        let sync_s = (t_iter - t_iter_nosync).max(0.0);
+
+        let total_mem_gb = plan.total_mem_gb(self.platform);
+        let c_iter = self.platform.price_per_gb_s * total_mem_gb * t_iter;
+        PlanPerf {
+            t_iter,
+            c_iter,
+            t_fwd: full.1,
+            t_bwd_sync: t_iter - full.1,
+            compute_s,
+            flush_s,
+            sync_s,
+            total_mem_gb,
+        }
+    }
+
+    /// Returns (t_iter, t_f, t_iter_without_sync).
+    ///
+    /// `compute_only`: zero out communication (infinite bandwidth, zero
+    /// latency, β=1) — used for the Fig. 6 breakdown.
+    fn eval_inner(&self, plan: &Plan, compute_only: bool) -> (f64, f64, f64) {
+        let m = self.model;
+        let p = self.platform;
+        let ranges = plan.stage_ranges(m.n_layers());
+        let s_cnt = ranges.len();
+        let mu = plan.mu() as f64;
+        let n_workers = plan.n_workers();
+        let t_lat = if compute_only { 0.0 } else { p.storage.latency_s };
+        // β applies only when compute overlaps communication
+        let has_comm = !compute_only && (s_cnt > 1 || plan.dp > 1);
+        let beta = if has_comm { p.beta } else { 1.0 };
+
+        let bw = |tier: usize| -> f64 {
+            if compute_only {
+                f64::INFINITY
+            } else {
+                p.effective_bandwidth(tier, n_workers)
+            }
+        };
+
+        // per-stage compute times (one micro-batch)
+        let mut fc = Vec::with_capacity(s_cnt);
+        let mut bc = Vec::with_capacity(s_cnt);
+        for (s, &(lo, hi)) in ranges.iter().enumerate() {
+            let j = plan.stage_tiers[s];
+            fc.push(beta * m.range_fwd_s(lo, hi, j));
+            bc.push(beta * m.range_bwd_s(lo, hi, j));
+        }
+
+        // boundary transfer times: boundary b sits between stage b and b+1
+        let nb = s_cnt - 1;
+        let mut fu = vec![0.0; nb];
+        let mut fd = vec![0.0; nb];
+        let mut bu = vec![0.0; nb];
+        let mut bd = vec![0.0; nb];
+        for b in 0..nb {
+            let out_bytes = m.layers[ranges[b].1].out_bytes as f64;
+            let grad_bytes = m.layers[ranges[b + 1].0].grad_bytes as f64;
+            fu[b] = out_bytes / bw(plan.stage_tiers[b]) + t_lat;
+            fd[b] = out_bytes / bw(plan.stage_tiers[b + 1]) + t_lat;
+            bu[b] = grad_bytes / bw(plan.stage_tiers[b + 1]) + t_lat;
+            bd[b] = grad_bytes / bw(plan.stage_tiers[b]) + t_lat;
+        }
+
+        // ---- forward: t_f = t_f^0 + (μ-1)·Δ_f ---------------------------
+        let t_f0: f64 = fc.iter().sum::<f64>()
+            + fu.iter().sum::<f64>()
+            + fd.iter().sum::<f64>();
+        let delta_f = fc
+            .iter()
+            .chain(fu.iter())
+            .chain(fd.iter())
+            .cloned()
+            .fold(0.0, f64::max);
+        let t_f = t_f0 + (mu - 1.0) * delta_f;
+
+        // ---- backward (App. B): t_b^s per stage --------------------------
+        // suffix sums/maxes over stages >= s
+        let mut t_iter_max = f64::NEG_INFINITY;
+        let mut t_iter_nosync_max = f64::NEG_INFINITY;
+        for s in 0..s_cnt {
+            let mut sum = 0.0;
+            let mut delta_b: f64 = 0.0;
+            for s2 in s..s_cnt {
+                sum += bc[s2];
+                delta_b = delta_b.max(bc[s2]);
+            }
+            for b in s..nb {
+                sum += bu[b] + bd[b];
+                delta_b = delta_b.max(bu[b]).max(bd[b]);
+            }
+            let t_b = sum + (mu - 1.0) * delta_b;
+
+            // sync of this stage's replicas (eq. (9))
+            let t_s = if compute_only || plan.dp == 1 {
+                0.0
+            } else {
+                let (lo, hi) = ranges[s];
+                sync_time(
+                    self.sync_alg,
+                    m.range_param_bytes(lo, hi) as f64,
+                    plan.dp,
+                    bw(plan.stage_tiers[s]),
+                    p.storage.latency_s,
+                )
+            };
+            t_iter_max = t_iter_max.max(t_b + t_s);
+            t_iter_nosync_max = t_iter_nosync_max.max(t_b);
+        }
+
+        (t_f + t_iter_max, t_f, t_f + t_iter_nosync_max)
+    }
+
+    /// The weighted objective (3a): `α1·c_iter + α2·t_iter`.
+    pub fn objective(&self, plan: &Plan, alpha: (f64, f64)) -> f64 {
+        let perf = self.evaluate(plan);
+        alpha.0 * perf.c_iter + alpha.1 * perf.t_iter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn fixture() -> (ModelProfile, PlatformSpec) {
+        let p = PlatformSpec::aws_lambda();
+        (zoo::amoebanet_d18(&p), p)
+    }
+
+    fn plan_1w(m: &ModelProfile) -> Plan {
+        let _ = m;
+        Plan { cuts: vec![], dp: 1, stage_tiers: vec![7], n_micro_global: 4 }
+    }
+
+    #[test]
+    fn single_worker_has_no_comm() {
+        let (m, p) = fixture();
+        let pm = PerfModel::new(&m, &p);
+        let perf = pm.evaluate(&plan_1w(&m));
+        assert!(perf.sync_s == 0.0);
+        assert!(perf.flush_s.abs() < 1e-9);
+        // t_iter == μ * (fwd+bwd) at top tier
+        let per_micro = m.total_fwd_s(7) + m.total_bwd_s(7);
+        assert!((perf.t_iter - 4.0 * per_micro).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dp_adds_sync_time() {
+        let (m, p) = fixture();
+        let pm = PerfModel::new(&m, &p);
+        let dp1 = pm.evaluate(&Plan {
+            cuts: vec![],
+            dp: 1,
+            stage_tiers: vec![7],
+            n_micro_global: 8,
+        });
+        let dp2 = pm.evaluate(&Plan {
+            cuts: vec![],
+            dp: 2,
+            stage_tiers: vec![7],
+            n_micro_global: 8,
+        });
+        assert_eq!(dp1.sync_s, 0.0);
+        assert!(dp2.sync_s > 1.0, "sync {:.2}", dp2.sync_s);
+        // dp halves μ so compute halves
+        assert!((dp2.compute_s - dp1.compute_s / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pipelined_sync_beats_plain() {
+        let (m, p) = fixture();
+        let plan = Plan {
+            cuts: vec![8],
+            dp: 4,
+            stage_tiers: vec![7, 7],
+            n_micro_global: 16,
+        };
+        let piped = PerfModel::new(&m, &p).evaluate(&plan);
+        let plain = PerfModel::new(&m, &p)
+            .with_sync(SyncAlgorithm::ScatterReduce)
+            .evaluate(&plan);
+        assert!(piped.t_iter < plain.t_iter);
+        assert!(piped.sync_s < plain.sync_s);
+    }
+
+    #[test]
+    fn partitioning_reduces_sync_vs_data_parallel() {
+        // the paper's key insight: partition => smaller per-stage grads
+        // => less sync traffic than pure DP
+        let (m, p) = fixture();
+        let pm = PerfModel::new(&m, &p);
+        let pure_dp = Plan {
+            cuts: vec![],
+            dp: 4,
+            stage_tiers: vec![7; 1],
+            n_micro_global: 16,
+        };
+        let pipe = Plan {
+            cuts: vec![5, 11],
+            dp: 4,
+            stage_tiers: vec![7, 7, 7],
+            n_micro_global: 16,
+        };
+        let a = pm.evaluate(&pure_dp);
+        let b = pm.evaluate(&pipe);
+        assert!(b.sync_s < a.sync_s, "{} !< {}", b.sync_s, a.sync_s);
+    }
+
+    #[test]
+    fn mu_scaling_is_linear_in_micro_batches() {
+        let (m, p) = fixture();
+        let pm = PerfModel::new(&m, &p);
+        let mk = |mm: usize| Plan {
+            cuts: vec![8],
+            dp: 1,
+            stage_tiers: vec![7, 7],
+            n_micro_global: mm,
+        };
+        let a = pm.evaluate(&mk(4));
+        let b = pm.evaluate(&mk(8));
+        // t grows by (μb-μa)·(Δf + Δb) — strictly increasing, sub-2x
+        assert!(b.t_iter > a.t_iter);
+        assert!(b.t_iter < 2.0 * a.t_iter);
+    }
+
+    #[test]
+    fn cost_matches_eq6() {
+        let (m, p) = fixture();
+        let pm = PerfModel::new(&m, &p);
+        let plan = Plan {
+            cuts: vec![8],
+            dp: 2,
+            stage_tiers: vec![3, 7],
+            n_micro_global: 8,
+        };
+        let perf = pm.evaluate(&plan);
+        let mem_gb = 2.0 * (3072.0 + 10240.0) / 1024.0;
+        assert!((perf.total_mem_gb - mem_gb).abs() < 1e-9);
+        assert!(
+            (perf.c_iter - p.price_per_gb_s * mem_gb * perf.t_iter).abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn breakdown_sums_to_t_iter() {
+        let (m, p) = fixture();
+        let pm = PerfModel::new(&m, &p);
+        let plan = Plan {
+            cuts: vec![5, 11],
+            dp: 2,
+            stage_tiers: vec![4, 5, 7],
+            n_micro_global: 16,
+        };
+        let perf = pm.evaluate(&plan);
+        let total = perf.compute_s + perf.flush_s + perf.sync_s;
+        assert!(
+            (total - perf.t_iter).abs() < 1e-6,
+            "{total} vs {}",
+            perf.t_iter
+        );
+    }
+
+    #[test]
+    fn bigger_tier_is_faster_per_stage() {
+        let (m, p) = fixture();
+        let pm = PerfModel::new(&m, &p);
+        let lo = pm.evaluate(&Plan {
+            cuts: vec![8],
+            dp: 1,
+            stage_tiers: vec![4, 4],
+            n_micro_global: 8,
+        });
+        let hi = pm.evaluate(&Plan {
+            cuts: vec![8],
+            dp: 1,
+            stage_tiers: vec![7, 7],
+            n_micro_global: 8,
+        });
+        assert!(hi.t_iter < lo.t_iter);
+    }
+}

@@ -1,0 +1,166 @@
+//! TPDMP baseline (§5.6): the throughput-maximal graph-partition algorithm
+//! of Tarnawski et al. assumes a *fixed* set of workers with fixed
+//! resources; to use it in the serverless setting the paper grid-searches
+//! the resource allocation and, for each allocation, asks TPDMP for the
+//! partition that maximizes throughput (minimizes `t_iter`), then keeps
+//! the grid point minimizing the objective (3).
+//!
+//! The gap to FuncPipe's co-optimizer is structural: TPDMP optimizes the
+//! partition for *time only* and cannot trade a stage's tier against its
+//! neighbours' — which is exactly what Fig. 9 demonstrates.
+
+use crate::model::{ModelProfile, Plan};
+use crate::planner::perf_model::{PerfModel, PlanPerf};
+use crate::platform::PlatformSpec;
+
+/// Grid-search wrapper around throughput-maximal partitioning.
+pub struct Tpdmp<'a> {
+    pub perf: PerfModel<'a>,
+    pub dp_options: Vec<usize>,
+}
+
+impl<'a> Tpdmp<'a> {
+    pub fn new(model: &'a ModelProfile, platform: &'a PlatformSpec) -> Self {
+        Self {
+            perf: PerfModel::new(model, platform),
+            dp_options: vec![1, 2, 4, 8, 16, 32],
+        }
+    }
+
+    /// For a fixed (d, uniform tier): the partition minimizing `t_iter`.
+    /// DFS with memory pruning (the tier is fixed so the space is just the
+    /// cut set; L ≤ 24 keeps this fast with bounding on committed time).
+    pub fn best_partition_fixed_resources(
+        &self,
+        d: usize,
+        tier: usize,
+        n_micro_global: usize,
+    ) -> Option<(Plan, PlanPerf)> {
+        let m = self.perf.model;
+        let _p = self.perf.platform;
+        let l = m.n_layers();
+        if n_micro_global % d != 0 {
+            return None;
+        }
+        let mu = n_micro_global / d;
+
+        let mut best: Option<(f64, Plan)> = None;
+        let mut cuts: Vec<usize> = Vec::new();
+        // DFS over cut positions; evaluate complete cut sets.
+        fn go(
+            lo: usize,
+            l: usize,
+            cuts: &mut Vec<usize>,
+            ctx: &Tpdmp,
+            d: usize,
+            tier: usize,
+            mu: usize,
+            n_micro_global: usize,
+            best: &mut Option<(f64, Plan)>,
+        ) {
+            let m = ctx.perf.model;
+            let p = ctx.perf.platform;
+            for hi in lo..l {
+                // stage [lo..=hi] feasibility on the fixed tier
+                let act = m.range_act_bytes(lo, hi);
+                let params = m.range_param_bytes(lo, hi);
+                let copies = if d == 1 { 2 } else { 4 };
+                let need = (mu as u64) * act
+                    + params * copies
+                    + p.base_mem_mb * 1024 * 1024;
+                if need > p.tier(tier).mem_bytes() {
+                    // extending hi only grows memory: stop
+                    break;
+                }
+                if hi == l - 1 {
+                    let plan = Plan {
+                        cuts: cuts.clone(),
+                        dp: d,
+                        stage_tiers: vec![tier; cuts.len() + 1],
+                        n_micro_global,
+                    };
+                    let t = ctx.perf.evaluate(&plan).t_iter;
+                    if best.as_ref().map(|(b, _)| t < *b).unwrap_or(true) {
+                        *best = Some((t, plan));
+                    }
+                } else {
+                    cuts.push(hi);
+                    go(hi + 1, l, cuts, ctx, d, tier, mu, n_micro_global, best);
+                    cuts.pop();
+                }
+            }
+        }
+        go(0, l, &mut cuts, self, d, tier, mu, n_micro_global, &mut best);
+        best.map(|(_, plan)| {
+            let perf = self.perf.evaluate(&plan);
+            (plan, perf)
+        })
+    }
+
+    /// Full TPDMP baseline: grid over (d, tier), throughput-max partition
+    /// each, select by objective (3a).
+    pub fn solve(
+        &self,
+        n_micro_global: usize,
+        alpha: (f64, f64),
+    ) -> Option<(Plan, PlanPerf)> {
+        let p = self.perf.platform;
+        let mut best: Option<(f64, Plan, PlanPerf)> = None;
+        for &d in &self.dp_options {
+            if d == 0 || n_micro_global % d != 0 {
+                continue;
+            }
+            for tier in 0..p.n_tiers() {
+                if let Some((plan, perf)) =
+                    self.best_partition_fixed_resources(d, tier, n_micro_global)
+                {
+                    let j = alpha.0 * perf.c_iter + alpha.1 * perf.t_iter;
+                    if best.as_ref().map(|(b, _, _)| j < *b).unwrap_or(true) {
+                        best = Some((j, plan, perf));
+                    }
+                }
+            }
+        }
+        best.map(|(_, plan, perf)| (plan, perf))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{merge_layers, zoo, MergeCriterion};
+    use crate::planner::optimizer::CoOptimizer;
+
+    #[test]
+    fn produces_feasible_plans() {
+        let p = PlatformSpec::aws_lambda();
+        let m = merge_layers(&zoo::amoebanet_d18(&p), 6, MergeCriterion::Compute);
+        let t = Tpdmp::new(&m, &p);
+        let (plan, perf) = t.solve(16, (1.0, 2e-4)).unwrap();
+        plan.validate(&m, &p).unwrap();
+        assert!(perf.t_iter > 0.0);
+        // uniform tier by construction
+        assert!(plan.stage_tiers.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn co_optimizer_never_worse_than_tpdmp() {
+        // FuncPipe's search space strictly contains TPDMP's, so for equal
+        // objectives J(co-opt) <= J(TPDMP) — Fig. 9's premise.
+        let p = PlatformSpec::aws_lambda();
+        for name in ["amoebanet-d18", "bert-large"] {
+            let m = merge_layers(
+                &zoo::by_name(name, &p).unwrap(),
+                6,
+                MergeCriterion::Compute,
+            );
+            let alpha = (1.0, 2e-4);
+            let (_, tp) = Tpdmp::new(&m, &p).solve(16, alpha).unwrap();
+            let (_, co, _) =
+                CoOptimizer::new(&m, &p).solve(16, alpha).unwrap();
+            let j_t = alpha.0 * tp.c_iter + alpha.1 * tp.t_iter;
+            let j_c = alpha.0 * co.c_iter + alpha.1 * co.t_iter;
+            assert!(j_c <= j_t + 1e-12, "{name}: {j_c} > {j_t}");
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Serverless function instance lifecycle.
+//!
+//! Functions have bounded lifetimes (15 min on Lambda); FuncPipe's
+//! *Function Manager* checkpoints and restarts workers before expiry
+//! (§3.1, step 8). This module tracks per-instance lifecycle state for
+//! both the simulator and the real-execution coordinator.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FunctionState {
+    /// Cold-starting (container being provisioned).
+    Starting,
+    /// Executing user code.
+    Running,
+    /// Persisted state and exited voluntarily (before timeout).
+    Checkpointed,
+    /// Hit the platform lifetime limit.
+    Expired,
+}
+
+/// One running serverless function ("worker" in the paper).
+#[derive(Debug, Clone)]
+pub struct FunctionInstance {
+    pub id: usize,
+    /// Pipeline stage this worker serves.
+    pub stage: usize,
+    /// Data-parallel replica index within the stage.
+    pub replica: usize,
+    /// Memory tier index into `PlatformSpec::tiers`.
+    pub tier: usize,
+    pub state: FunctionState,
+    /// Generation counter: bumped on each checkpoint/restart cycle.
+    pub generation: u32,
+    started: Instant,
+    lifetime_s: f64,
+}
+
+impl FunctionInstance {
+    pub fn launch(
+        id: usize,
+        stage: usize,
+        replica: usize,
+        tier: usize,
+        lifetime_s: f64,
+    ) -> Self {
+        Self {
+            id,
+            stage,
+            replica,
+            tier,
+            state: FunctionState::Starting,
+            generation: 0,
+            started: Instant::now(),
+            lifetime_s,
+        }
+    }
+
+    pub fn mark_running(&mut self) {
+        self.state = FunctionState::Running;
+    }
+
+    pub fn age_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    pub fn remaining_s(&self) -> f64 {
+        (self.lifetime_s - self.age_s()).max(0.0)
+    }
+
+    /// Should the Function Manager checkpoint now? Uses a safety margin so
+    /// the checkpoint upload completes before the platform kills us.
+    pub fn should_checkpoint(&self, margin_s: f64) -> bool {
+        self.state == FunctionState::Running && self.remaining_s() <= margin_s
+    }
+
+    pub fn expired(&self) -> bool {
+        self.remaining_s() <= 0.0
+    }
+
+    /// Restart as a fresh instance (new container, same role).
+    pub fn restart(&mut self) {
+        self.generation += 1;
+        self.started = Instant::now();
+        self.state = FunctionState::Starting;
+    }
+
+    /// Unique key prefix for this worker's objects in storage.
+    pub fn key_prefix(&self) -> String {
+        format!("w{}/s{}/r{}", self.id, self.stage, self.replica)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut f = FunctionInstance::launch(0, 1, 0, 3, 0.05);
+        assert_eq!(f.state, FunctionState::Starting);
+        f.mark_running();
+        assert!(!f.expired());
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        assert!(f.expired());
+        assert!(f.should_checkpoint(0.01));
+        f.restart();
+        assert_eq!(f.generation, 1);
+        assert_eq!(f.state, FunctionState::Starting);
+        assert!(!f.expired());
+    }
+
+    #[test]
+    fn checkpoint_margin() {
+        let mut f = FunctionInstance::launch(0, 0, 0, 0, 100.0);
+        f.mark_running();
+        assert!(!f.should_checkpoint(1.0));
+        assert!(f.should_checkpoint(200.0));
+    }
+
+    #[test]
+    fn key_prefix_is_unique_per_role() {
+        let a = FunctionInstance::launch(1, 2, 0, 0, 10.0);
+        let b = FunctionInstance::launch(1, 2, 1, 0, 10.0);
+        assert_ne!(a.key_prefix(), b.key_prefix());
+    }
+}

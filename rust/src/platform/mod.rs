@@ -1,0 +1,24 @@
+//! Serverless-platform substrate.
+//!
+//! The paper's testbeds are AWS Lambda + S3 and Alibaba Function Compute +
+//! OSS. Neither is reachable here, so this module reproduces exactly the
+//! knobs FuncPipe's design depends on (DESIGN.md §3):
+//!
+//!   * memory tiers and the tier→(vCPU share, bandwidth) maps,
+//!   * GB-second pricing,
+//!   * storage access latency `t_lat` and (for OSS) an aggregate
+//!     concurrent-bandwidth cap,
+//!   * function lifetime (checkpoint/restart) and cold-start latency,
+//!   * per-worker bandwidth degradation as worker count grows (§5.4).
+
+pub mod function;
+pub mod network;
+pub mod pricing;
+pub mod storage;
+pub mod tiers;
+
+pub use function::{FunctionInstance, FunctionState};
+pub use network::{BandwidthModel, FlowSim};
+pub use pricing::CostModel;
+pub use storage::{MemStore, ObjectStore, ThrottledStore};
+pub use tiers::{MemoryTier, PlatformSpec, StorageSpec};

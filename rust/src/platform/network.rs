@@ -1,0 +1,457 @@
+//! Bandwidth sharing model: per-worker uplink/downlink capacities plus an
+//! optional aggregate storage-side cap (Alibaba OSS, §5.7), allocated
+//! max-min fairly among concurrent transfers (progressive filling).
+//!
+//! This is the substrate under both the collective simulations (§3.3) and
+//! the pipeline discrete-event simulator; the closed-form performance
+//! model (§3.4.2) is validated against it in Table 3's reproduction.
+
+/// Direction of a transfer relative to the worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dir {
+    Up,
+    Down,
+}
+
+/// Static description of the network around a set of workers.
+#[derive(Debug, Clone)]
+pub struct BandwidthModel {
+    /// Per-worker uplink capacity, bytes/s.
+    pub up_bps: Vec<f64>,
+    /// Per-worker downlink capacity, bytes/s.
+    pub down_bps: Vec<f64>,
+    /// Aggregate cap across *all* transfers (storage-side NIC), bytes/s.
+    pub aggregate_cap_bps: Option<f64>,
+    /// Per-operation storage access latency, seconds.
+    pub latency_s: f64,
+}
+
+impl BandwidthModel {
+    /// Uniform-bandwidth model for `n` workers.
+    pub fn uniform(n: usize, bps: f64, latency_s: f64) -> Self {
+        Self {
+            up_bps: vec![bps; n],
+            down_bps: vec![bps; n],
+            aggregate_cap_bps: None,
+            latency_s,
+        }
+    }
+
+    pub fn with_aggregate_cap(mut self, cap: f64) -> Self {
+        self.aggregate_cap_bps = Some(cap);
+        self
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.up_bps.len()
+    }
+}
+
+/// Max-min fair rate allocation by progressive filling.
+///
+/// `flows[i]` is the list of (worker, dir) link endpoints the flow
+/// occupies — one endpoint for worker↔storage transfers, two for direct
+/// worker↔VM transfers (HybridPS). Returns bytes/s for each flow.
+/// Constraints: each worker's up/down link and the optional aggregate cap.
+pub fn max_min_rates(model: &BandwidthModel, flows: &[Vec<(usize, Dir)>]) -> Vec<f64> {
+    let nf = flows.len();
+    let mut rates = vec![0.0f64; nf];
+    if nf == 0 {
+        return rates;
+    }
+
+    // Build constraint list: (capacity, member flow indices)
+    let mut constraints: Vec<(f64, Vec<usize>)> = Vec::new();
+    for w in 0..model.n_workers() {
+        let ups: Vec<usize> = (0..nf)
+            .filter(|&i| flows[i].contains(&(w, Dir::Up)))
+            .collect();
+        if !ups.is_empty() {
+            constraints.push((model.up_bps[w], ups));
+        }
+        let downs: Vec<usize> = (0..nf)
+            .filter(|&i| flows[i].contains(&(w, Dir::Down)))
+            .collect();
+        if !downs.is_empty() {
+            constraints.push((model.down_bps[w], downs));
+        }
+    }
+    if let Some(cap) = model.aggregate_cap_bps {
+        constraints.push((cap, (0..nf).collect()));
+    }
+
+    let mut active = vec![true; nf];
+    let mut used: Vec<f64> = vec![0.0; constraints.len()];
+    let mut n_active = nf;
+
+    while n_active > 0 {
+        // find the bottleneck: smallest equal increment that saturates a
+        // constraint containing at least one active flow
+        let mut best_inc = f64::INFINITY;
+        for (ci, (cap, members)) in constraints.iter().enumerate() {
+            let k = members.iter().filter(|&&i| active[i]).count();
+            if k == 0 {
+                continue;
+            }
+            let inc = (cap - used[ci]) / k as f64;
+            if inc < best_inc {
+                best_inc = inc;
+            }
+        }
+        if !best_inc.is_finite() {
+            break; // no binding constraint: unbounded (shouldn't happen)
+        }
+        let best_inc = best_inc.max(0.0);
+
+        // raise all active flows by best_inc
+        for i in 0..nf {
+            if active[i] {
+                rates[i] += best_inc;
+            }
+        }
+        for (ci, (_, members)) in constraints.iter().enumerate() {
+            let k = members.iter().filter(|&&i| active[i]).count();
+            used[ci] += best_inc * k as f64;
+        }
+
+        // freeze flows in saturated constraints
+        let mut froze = false;
+        for (ci, (cap, members)) in constraints.iter().enumerate() {
+            if used[ci] >= cap - 1e-9 {
+                for &i in members {
+                    if active[i] {
+                        active[i] = false;
+                        n_active -= 1;
+                        froze = true;
+                    }
+                }
+            }
+        }
+        if !froze {
+            break; // numerical safety
+        }
+    }
+    rates
+}
+
+/// Continuous-time flow simulator with dependencies.
+///
+/// Flows are added with either an absolute ready time or a dependency list
+/// (they start `latency_s` after the last dependency finishes — modelling
+/// `t_lat` per storage operation). `run()` advances time, re-running the
+/// max-min allocation whenever the active set changes, and records each
+/// flow's finish time.
+pub struct FlowSim {
+    model: BandwidthModel,
+    flows: Vec<FlowState>,
+}
+
+struct FlowState {
+    endpoints: Vec<(usize, Dir)>,
+    bytes: f64,
+    remaining: f64,
+    /// Absolute ready time (for root flows) — refined as deps complete.
+    ready: f64,
+    deps: Vec<usize>,
+    extra_delay: f64,
+    finish: Option<f64>,
+}
+
+impl FlowSim {
+    pub fn new(model: BandwidthModel) -> Self {
+        Self { model, flows: Vec::new() }
+    }
+
+    /// Flow with no dependencies, ready at `ready` (storage latency is
+    /// added automatically).
+    pub fn add_flow(&mut self, worker: usize, dir: Dir, bytes: f64, ready: f64) -> usize {
+        self.add(vec![(worker, dir)], bytes, ready, Vec::new(), 0.0)
+    }
+
+    /// Flow that starts `latency` after all `deps` finish.
+    pub fn add_flow_after(
+        &mut self,
+        worker: usize,
+        dir: Dir,
+        bytes: f64,
+        deps: Vec<usize>,
+        extra_delay: f64,
+    ) -> usize {
+        self.add(vec![(worker, dir)], bytes, 0.0, deps, extra_delay)
+    }
+
+    /// Direct worker→worker flow (occupies src uplink AND dst downlink) —
+    /// the HybridPS worker↔VM path.
+    pub fn add_direct_flow_after(
+        &mut self,
+        src: usize,
+        dst: usize,
+        bytes: f64,
+        deps: Vec<usize>,
+        ready: f64,
+    ) -> usize {
+        self.add(vec![(src, Dir::Up), (dst, Dir::Down)], bytes, ready, deps, 0.0)
+    }
+
+    fn add(
+        &mut self,
+        endpoints: Vec<(usize, Dir)>,
+        bytes: f64,
+        ready: f64,
+        deps: Vec<usize>,
+        extra_delay: f64,
+    ) -> usize {
+        for &(w, _) in &endpoints {
+            assert!(w < self.model.n_workers());
+        }
+        let id = self.flows.len();
+        self.flows.push(FlowState {
+            endpoints,
+            bytes: bytes.max(0.0),
+            remaining: bytes.max(0.0),
+            ready: ready + self.model.latency_s,
+            deps,
+            extra_delay,
+            finish: None,
+        });
+        id
+    }
+
+    /// Simulate to completion of all flows; returns the makespan.
+    pub fn run(&mut self) -> f64 {
+        let n = self.flows.len();
+        let mut resolved_ready: Vec<Option<f64>> = (0..n)
+            .map(|i| {
+                if self.flows[i].deps.is_empty() {
+                    Some(self.flows[i].ready)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let mut t = 0.0f64;
+        let mut done = 0usize;
+        let mut makespan = 0.0f64;
+
+        while done < n {
+            // active set: ready and unfinished
+            let active: Vec<usize> = (0..n)
+                .filter(|&i| {
+                    self.flows[i].finish.is_none()
+                        && resolved_ready[i].map(|r| r <= t + 1e-12).unwrap_or(false)
+                })
+                .collect();
+
+            // zero-byte active flows complete instantly
+            let mut finished_now = Vec::new();
+            for &i in &active {
+                if self.flows[i].remaining <= 1e-9 {
+                    self.flows[i].finish = Some(t);
+                    finished_now.push(i);
+                }
+            }
+            if !finished_now.is_empty() {
+                done += finished_now.len();
+                makespan = makespan.max(t);
+                Self::resolve_deps(
+                    &self.flows,
+                    &mut resolved_ready,
+                    &finished_now,
+                    self.model.latency_s,
+                );
+                continue;
+            }
+
+            // next activation among not-yet-ready flows with known ready
+            let next_ready = (0..n)
+                .filter(|&i| self.flows[i].finish.is_none())
+                .filter_map(|i| resolved_ready[i])
+                .filter(|&r| r > t + 1e-12)
+                .fold(f64::INFINITY, f64::min);
+
+            if active.is_empty() {
+                assert!(
+                    next_ready.is_finite(),
+                    "deadlock: {} unfinished flows but none ready",
+                    n - done
+                );
+                t = next_ready;
+                continue;
+            }
+
+            let pairs: Vec<Vec<(usize, Dir)>> = active
+                .iter()
+                .map(|&i| self.flows[i].endpoints.clone())
+                .collect();
+            let rates = max_min_rates(&self.model, &pairs);
+
+            // earliest completion among active flows at these rates
+            let mut dt = f64::INFINITY;
+            for (k, &i) in active.iter().enumerate() {
+                if rates[k] > 1e-12 {
+                    dt = dt.min(self.flows[i].remaining / rates[k]);
+                }
+            }
+            if next_ready.is_finite() {
+                dt = dt.min(next_ready - t);
+            }
+            assert!(dt.is_finite(), "no progress possible");
+
+            // advance
+            for (k, &i) in active.iter().enumerate() {
+                self.flows[i].remaining -= rates[k] * dt;
+            }
+            t += dt;
+
+            let newly: Vec<usize> = active
+                .iter()
+                .copied()
+                .filter(|&i| self.flows[i].remaining <= 1e-6)
+                .collect();
+            for &i in &newly {
+                self.flows[i].remaining = 0.0;
+                self.flows[i].finish = Some(t);
+            }
+            if !newly.is_empty() {
+                done += newly.len();
+                makespan = makespan.max(t);
+                Self::resolve_deps(
+                    &self.flows,
+                    &mut resolved_ready,
+                    &newly,
+                    self.model.latency_s,
+                );
+            }
+        }
+        makespan
+    }
+
+    fn resolve_deps(
+        flows: &[FlowState],
+        resolved_ready: &mut [Option<f64>],
+        _finished: &[usize],
+        latency: f64,
+    ) {
+        for i in 0..flows.len() {
+            if resolved_ready[i].is_some() || flows[i].deps.is_empty() {
+                continue;
+            }
+            let mut all = true;
+            let mut latest: f64 = 0.0;
+            for &d in &flows[i].deps {
+                match flows[d].finish {
+                    Some(f) => latest = latest.max(f),
+                    None => {
+                        all = false;
+                        break;
+                    }
+                }
+            }
+            if all {
+                resolved_ready[i] =
+                    Some(latest + flows[i].extra_delay + latency);
+            }
+        }
+    }
+
+    pub fn finish_time(&self, id: usize) -> f64 {
+        self.flows[id].finish.expect("flow not finished; call run() first")
+    }
+
+    pub fn bytes(&self, id: usize) -> f64 {
+        self.flows[id].bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-6 * b.abs().max(1.0)
+    }
+
+    #[test]
+    fn single_flow_time_is_bytes_over_bw() {
+        let m = BandwidthModel::uniform(1, 100.0, 0.0);
+        let mut sim = FlowSim::new(m);
+        let f = sim.add_flow(0, Dir::Up, 1000.0, 0.0);
+        sim.run();
+        assert!(close(sim.finish_time(f), 10.0));
+    }
+
+    #[test]
+    fn uplink_shared_fairly() {
+        let m = BandwidthModel::uniform(1, 100.0, 0.0);
+        let mut sim = FlowSim::new(m);
+        let a = sim.add_flow(0, Dir::Up, 500.0, 0.0);
+        let b = sim.add_flow(0, Dir::Up, 500.0, 0.0);
+        sim.run();
+        // two equal flows share 100 B/s: each finishes at 10 s
+        assert!(close(sim.finish_time(a), 10.0));
+        assert!(close(sim.finish_time(b), 10.0));
+    }
+
+    #[test]
+    fn duplex_links_are_independent() {
+        // The core assumption behind pipelined scatter-reduce (§3.3):
+        // uplink and downlink proceed simultaneously.
+        let m = BandwidthModel::uniform(1, 100.0, 0.0);
+        let mut sim = FlowSim::new(m);
+        let up = sim.add_flow(0, Dir::Up, 1000.0, 0.0);
+        let down = sim.add_flow(0, Dir::Down, 1000.0, 0.0);
+        sim.run();
+        assert!(close(sim.finish_time(up), 10.0));
+        assert!(close(sim.finish_time(down), 10.0));
+    }
+
+    #[test]
+    fn aggregate_cap_binds() {
+        let m = BandwidthModel::uniform(4, 100.0, 0.0).with_aggregate_cap(200.0);
+        let mut sim = FlowSim::new(m);
+        let ids: Vec<usize> =
+            (0..4).map(|w| sim.add_flow(w, Dir::Up, 500.0, 0.0)).collect();
+        sim.run();
+        // 4 flows share 200 B/s aggregate → 50 B/s each → 10 s
+        for id in ids {
+            assert!(close(sim.finish_time(id), 10.0));
+        }
+    }
+
+    #[test]
+    fn dependencies_and_latency() {
+        let m = BandwidthModel::uniform(2, 100.0, 0.5);
+        let mut sim = FlowSim::new(m);
+        let a = sim.add_flow(0, Dir::Up, 100.0, 0.0); // ready 0.5, done 1.5
+        let b = sim.add_flow_after(1, Dir::Down, 100.0, vec![a], 0.0);
+        sim.run();
+        assert!(close(sim.finish_time(a), 1.5));
+        // b starts at 1.5 + 0.5 latency, takes 1 s
+        assert!(close(sim.finish_time(b), 3.0));
+    }
+
+    #[test]
+    fn max_min_heterogeneous() {
+        let m = BandwidthModel {
+            up_bps: vec![100.0, 10.0],
+            down_bps: vec![100.0, 100.0],
+            aggregate_cap_bps: None,
+            latency_s: 0.0,
+        };
+        let rates = max_min_rates(
+            &m,
+            &[vec![(0, Dir::Up)], vec![(1, Dir::Up)]],
+        );
+        assert!(close(rates[0], 100.0));
+        assert!(close(rates[1], 10.0));
+    }
+
+    #[test]
+    fn zero_byte_flows_finish_at_ready() {
+        let m = BandwidthModel::uniform(1, 100.0, 0.25);
+        let mut sim = FlowSim::new(m);
+        let f = sim.add_flow(0, Dir::Up, 0.0, 1.0);
+        sim.run();
+        assert!(close(sim.finish_time(f), 1.25));
+    }
+}

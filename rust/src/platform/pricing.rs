@@ -1,0 +1,91 @@
+//! Monetary cost accounting (eq. (5)/(6) and the baselines' VM costs).
+
+use super::tiers::PlatformSpec;
+
+/// Cost model: serverless functions bill allocated-GB × seconds; VMs (used
+/// by the HybridPS baseline's parameter server) bill per hour.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub price_per_gb_s: f64,
+}
+
+impl CostModel {
+    pub fn from_platform(p: &PlatformSpec) -> Self {
+        Self { price_per_gb_s: p.price_per_gb_s }
+    }
+
+    /// Cost of `n_workers` functions of `mem_mb` each running `secs`.
+    pub fn function_cost(&self, mem_mb: u64, n_workers: usize, secs: f64) -> f64 {
+        self.price_per_gb_s * (mem_mb as f64 / 1024.0) * n_workers as f64 * secs
+    }
+
+    /// Eq. (6): c_iter = P * t_iter * c_mem, where c_mem is the summed
+    /// allocated memory (GB) of all workers.
+    pub fn iteration_cost(&self, total_mem_gb: f64, t_iter: f64) -> f64 {
+        self.price_per_gb_s * total_mem_gb * t_iter
+    }
+}
+
+/// VM instance types used by the HybridPS baseline (§5.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VmType {
+    pub name: &'static str,
+    pub price_per_hour: f64,
+    /// NIC bandwidth in bytes/s.
+    pub bandwidth_bps: f64,
+}
+
+/// c5.9xlarge: the PS host on AWS (10 Gb/s guaranteed, $1.53/h).
+pub const C5_9XLARGE: VmType = VmType {
+    name: "c5.9xlarge",
+    price_per_hour: 1.53,
+    bandwidth_bps: 10.0e9 / 8.0,
+};
+
+/// r7.2xlarge-equivalent: the PS host on Alibaba.
+pub const R7_2XLARGE: VmType = VmType {
+    name: "r7.2xlarge",
+    price_per_hour: 1.05,
+    bandwidth_bps: 10.0e9 / 8.0,
+};
+
+/// p3.2xlarge (V100) — the GPU comparison point in Fig. 11.
+pub const P3_2XLARGE: VmType = VmType {
+    name: "p3.2xlarge",
+    price_per_hour: 3.06,
+    bandwidth_bps: 10.0e9 / 8.0,
+};
+
+impl VmType {
+    pub fn cost(&self, secs: f64) -> f64 {
+        self.price_per_hour / 3600.0 * secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::tiers::PlatformSpec;
+
+    #[test]
+    fn function_cost_scales_linearly() {
+        let m = CostModel::from_platform(&PlatformSpec::aws_lambda());
+        let c1 = m.function_cost(1024, 1, 10.0);
+        let c2 = m.function_cost(2048, 2, 10.0);
+        assert!((c2 - 4.0 * c1).abs() < 1e-12);
+        // 1 GB for 1s at AWS price:
+        assert!((m.function_cost(1024, 1, 1.0) - 0.0000166667).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iteration_cost_is_eq6() {
+        let m = CostModel { price_per_gb_s: 2e-5 };
+        // 8 workers x 4 GB for 3 s
+        assert!((m.iteration_cost(32.0, 3.0) - 2e-5 * 32.0 * 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn vm_cost() {
+        assert!((C5_9XLARGE.cost(3600.0) - 1.53).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,253 @@
+//! Object storage for the real-execution path.
+//!
+//! FuncPipe functions cannot talk to each other directly; every byte is
+//! relayed through object storage (§2.1). `MemStore` is the in-process
+//! equivalent of an S3 bucket: blocking `get` with condition-variable
+//! wake-ups plays the role of the paper's "workers periodically query the
+//! bucket" polling (§4) without the poll latency. `ThrottledStore` wraps a
+//! store with per-handle uplink/downlink rate limits + access latency so
+//! the wall-clock behaviour of the e2e trainer resembles a serverless
+//! worker's 70 MB/s world (scaled up so demos finish quickly).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+/// S3/OSS-like blob interface. Keys are flat strings; metadata (sender,
+/// step, micro-batch id) is encoded in the key like the paper does (§4).
+pub trait ObjectStore: Send + Sync {
+    /// Upload an object (overwrites).
+    fn put(&self, key: &str, data: Vec<u8>) -> Result<()>;
+
+    /// Non-blocking fetch.
+    fn get(&self, key: &str) -> Option<Arc<Vec<u8>>>;
+
+    /// Blocking fetch with timeout — the download side of send/recv.
+    fn get_blocking(&self, key: &str, timeout: Duration) -> Result<Arc<Vec<u8>>>;
+
+    /// Delete an object (idempotent).
+    fn delete(&self, key: &str);
+
+    /// List keys with a prefix (used by sync barriers and the monitor).
+    fn list(&self, prefix: &str) -> Vec<String>;
+
+    /// Total bytes currently stored (tests/metrics).
+    fn total_bytes(&self) -> u64;
+}
+
+#[derive(Default)]
+struct StoreInner {
+    map: HashMap<String, Arc<Vec<u8>>>,
+    puts: u64,
+    gets: u64,
+}
+
+/// In-memory object store shared by all workers in a process.
+pub struct MemStore {
+    inner: Mutex<StoreInner>,
+    cond: Condvar,
+}
+
+impl Default for MemStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MemStore {
+    pub fn new() -> Self {
+        Self { inner: Mutex::new(StoreInner::default()), cond: Condvar::new() }
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.puts, g.gets)
+    }
+}
+
+impl ObjectStore for MemStore {
+    fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        g.puts += 1;
+        g.map.insert(key.to_string(), Arc::new(data));
+        drop(g);
+        self.cond.notify_all();
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+        let mut g = self.inner.lock().unwrap();
+        g.gets += 1;
+        g.map.get(key).cloned()
+    }
+
+    fn get_blocking(&self, key: &str, timeout: Duration) -> Result<Arc<Vec<u8>>> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(v) = g.map.get(key).cloned() {
+                g.gets += 1;
+                return Ok(v);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("get_blocking timed out waiting for {key:?}");
+            }
+            let (guard, res) = self
+                .cond
+                .wait_timeout(g, deadline - now)
+                .unwrap();
+            g = guard;
+            if res.timed_out() && !g.map.contains_key(key) {
+                bail!("get_blocking timed out waiting for {key:?}");
+            }
+        }
+    }
+
+    fn delete(&self, key: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.map.remove(key);
+    }
+
+    fn list(&self, prefix: &str) -> Vec<String> {
+        let g = self.inner.lock().unwrap();
+        let mut keys: Vec<String> = g
+            .map
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect();
+        keys.sort();
+        keys
+    }
+
+    fn total_bytes(&self) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.map.values().map(|v| v.len() as u64).sum()
+    }
+}
+
+/// Per-worker throttled view of a store: sleeps `len/bandwidth + latency`
+/// on put (uplink) and on the fetch side of get (downlink), emulating the
+/// per-function bandwidth limit. One handle per worker so transfers from
+/// different workers proceed concurrently like real NICs.
+pub struct ThrottledStore {
+    inner: Arc<dyn ObjectStore>,
+    pub uplink_bps: f64,
+    pub downlink_bps: f64,
+    pub latency: Duration,
+}
+
+impl ThrottledStore {
+    pub fn new(
+        inner: Arc<dyn ObjectStore>,
+        uplink_bps: f64,
+        downlink_bps: f64,
+        latency: Duration,
+    ) -> Self {
+        Self { inner, uplink_bps, downlink_bps, latency }
+    }
+
+    fn transfer_sleep(&self, bytes: usize, bps: f64) {
+        if bps.is_finite() && bps > 0.0 {
+            let secs = bytes as f64 / bps;
+            std::thread::sleep(
+                self.latency + Duration::from_secs_f64(secs),
+            );
+        } else {
+            std::thread::sleep(self.latency);
+        }
+    }
+}
+
+impl ObjectStore for ThrottledStore {
+    fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
+        self.transfer_sleep(data.len(), self.uplink_bps);
+        self.inner.put(key, data)
+    }
+
+    fn get(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+        let v = self.inner.get(key)?;
+        self.transfer_sleep(v.len(), self.downlink_bps);
+        Some(v)
+    }
+
+    fn get_blocking(&self, key: &str, timeout: Duration) -> Result<Arc<Vec<u8>>> {
+        let v = self.inner.get_blocking(key, timeout)?;
+        self.transfer_sleep(v.len(), self.downlink_bps);
+        Ok(v)
+    }
+
+    fn delete(&self, key: &str) {
+        self.inner.delete(key)
+    }
+
+    fn list(&self, prefix: &str) -> Vec<String> {
+        self.inner.list(prefix)
+    }
+
+    fn total_bytes(&self) -> u64 {
+        self.inner.total_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let s = MemStore::new();
+        s.put("a/b", vec![1, 2, 3]).unwrap();
+        assert_eq!(*s.get("a/b").unwrap(), vec![1, 2, 3]);
+        assert!(s.get("missing").is_none());
+        assert_eq!(s.total_bytes(), 3);
+    }
+
+    #[test]
+    fn blocking_get_wakes_on_put() {
+        let s = Arc::new(MemStore::new());
+        let s2 = s.clone();
+        let t = std::thread::spawn(move || {
+            s2.get_blocking("late", Duration::from_secs(5)).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        s.put("late", vec![9]).unwrap();
+        assert_eq!(*t.join().unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn blocking_get_times_out() {
+        let s = MemStore::new();
+        let err = s.get_blocking("never", Duration::from_millis(40));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn list_and_delete() {
+        let s = MemStore::new();
+        s.put("grad/0/1", vec![0]).unwrap();
+        s.put("grad/0/2", vec![0]).unwrap();
+        s.put("act/0", vec![0]).unwrap();
+        assert_eq!(s.list("grad/"), vec!["grad/0/1", "grad/0/2"]);
+        s.delete("grad/0/1");
+        assert_eq!(s.list("grad/").len(), 1);
+    }
+
+    #[test]
+    fn throttled_store_delays() {
+        let inner = Arc::new(MemStore::new());
+        let t = ThrottledStore::new(
+            inner,
+            1_000_000.0, // 1 MB/s
+            f64::INFINITY,
+            Duration::from_millis(0),
+        );
+        let start = Instant::now();
+        t.put("x", vec![0u8; 100_000]).unwrap(); // 0.1s at 1 MB/s
+        let dt = start.elapsed().as_secs_f64();
+        assert!(dt >= 0.09, "upload not throttled: {dt}");
+    }
+}

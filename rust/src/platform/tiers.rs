@@ -1,0 +1,236 @@
+//! Memory tiers and platform presets (AWS Lambda, Alibaba Function
+//! Compute), calibrated to the constants the paper reports (§2.1, §5.1).
+
+/// One configurable memory size with its derived resources.
+///
+/// On real platforms "users decide the memory allocation; other resources
+/// like CPU and network bandwidth are allocated accordingly" (§2.1) — so a
+/// tier is the single resource knob everywhere in FuncPipe.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryTier {
+    /// Allocated memory in MB (binary MB, as billed).
+    pub mem_mb: u64,
+    /// Sustained per-function bandwidth, bytes/s, each direction.
+    pub bandwidth_bps: f64,
+    /// Relative compute speed (1.0 == one reference vCPU).
+    pub compute_speed: f64,
+}
+
+impl MemoryTier {
+    pub fn mem_bytes(&self) -> u64 {
+        self.mem_mb * 1024 * 1024
+    }
+
+    pub fn mem_gb(&self) -> f64 {
+        self.mem_mb as f64 / 1024.0
+    }
+}
+
+/// Cloud-storage behaviour relevant to storage-relayed communication.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StorageSpec {
+    /// Access latency per operation, seconds (`t_lat`; ~40 ms on S3).
+    pub latency_s: f64,
+    /// Aggregate concurrent bandwidth cap in bytes/s (OSS: 10 Gb/s for a
+    /// normal customer, §5.1). `None` == effectively unlimited (S3).
+    pub aggregate_cap_bps: Option<f64>,
+}
+
+/// Everything the planner/simulator needs to know about a platform.
+#[derive(Debug, Clone)]
+pub struct PlatformSpec {
+    pub name: String,
+    pub tiers: Vec<MemoryTier>,
+    /// $ per GB-second of allocated function memory.
+    pub price_per_gb_s: f64,
+    pub storage: StorageSpec,
+    /// Maximum function lifetime in seconds (15 min on Lambda).
+    pub function_lifetime_s: f64,
+    /// Cold-start latency when launching a function, seconds.
+    pub cold_start_s: f64,
+    /// Base memory consumed by the framework on each worker, MB (`s_0`).
+    pub base_mem_mb: u64,
+    /// Average compute slowdown when compute and communication overlap
+    /// (`β ≥ 1` in eq. (8); measured by the Model Profiler).
+    pub beta: f64,
+    /// Per-worker bandwidth degradation slope with total worker count
+    /// (§5.4: co-scheduled functions share host NICs). Effective
+    /// bandwidth = W * max(floor, 1 - slope*(n-1)).
+    pub contention_slope: f64,
+    pub contention_floor: f64,
+}
+
+impl PlatformSpec {
+    /// AWS Lambda + S3 (§5.1): 10 GB memory cap, ~70 MB/s function
+    /// bandwidth, unlimited aggregate S3 bandwidth, $/GB-s pricing.
+    pub fn aws_lambda() -> Self {
+        // One vCPU per 1769 MB (AWS documentation); bandwidth ramps with
+        // memory and saturates at the measured ~70 MB/s [36, 70].
+        let mems = [512u64, 1024, 2048, 3072, 4096, 6144, 8192, 10240];
+        let tiers = mems
+            .iter()
+            .map(|&m| MemoryTier {
+                mem_mb: m,
+                bandwidth_bps: 70.0e6 * (m as f64 / 1769.0).min(1.0),
+                compute_speed: m as f64 / 1769.0,
+            })
+            .collect();
+        Self {
+            name: "aws-lambda".into(),
+            tiers,
+            price_per_gb_s: 0.0000166667,
+            storage: StorageSpec { latency_s: 0.040, aggregate_cap_bps: None },
+            function_lifetime_s: 900.0,
+            cold_start_s: 1.5,
+            base_mem_mb: 300,
+            beta: 1.15,
+            contention_slope: 0.008,
+            contention_floor: 0.45,
+        }
+    }
+
+    /// Alibaba Function Compute + OSS (§5.1, §5.7): 32 GB memory cap and a
+    /// 10 Gb/s *aggregate* OSS bandwidth limit shared by all workers.
+    pub fn alibaba_fc() -> Self {
+        let mems = [512u64, 1024, 2048, 4096, 8192, 16384, 32768];
+        let tiers = mems
+            .iter()
+            .map(|&m| MemoryTier {
+                mem_mb: m,
+                bandwidth_bps: 100.0e6 * (m as f64 / 2048.0).min(1.0),
+                compute_speed: m as f64 / 1769.0,
+            })
+            .collect();
+        Self {
+            name: "alibaba-fc".into(),
+            tiers,
+            price_per_gb_s: 0.000016384,
+            storage: StorageSpec {
+                latency_s: 0.030,
+                aggregate_cap_bps: Some(10.0e9 / 8.0), // 10 Gb/s
+            },
+            function_lifetime_s: 86_400.0,
+            cold_start_s: 1.0,
+            base_mem_mb: 300,
+            beta: 1.15,
+            contention_slope: 0.006,
+            contention_floor: 0.5,
+        }
+    }
+
+    /// A "local" platform used by the real-execution trainer and tests:
+    /// generous bandwidth, tiny latency, short lifetime so the
+    /// checkpoint/restart path is exercised quickly.
+    pub fn local_sim() -> Self {
+        let mems = [512u64, 1024, 2048, 4096];
+        let tiers = mems
+            .iter()
+            .map(|&m| MemoryTier {
+                mem_mb: m,
+                bandwidth_bps: 400.0e6,
+                compute_speed: 1.0,
+            })
+            .collect();
+        Self {
+            name: "local-sim".into(),
+            tiers,
+            price_per_gb_s: 0.0000166667,
+            storage: StorageSpec { latency_s: 0.0005, aggregate_cap_bps: None },
+            function_lifetime_s: 20.0,
+            cold_start_s: 0.01,
+            base_mem_mb: 0,
+            beta: 1.05,
+            contention_slope: 0.0,
+            contention_floor: 1.0,
+        }
+    }
+
+    /// Scale every tier's bandwidth by `factor` (Fig. 11's 1×..20× sweep).
+    pub fn with_bandwidth_scale(mut self, factor: f64) -> Self {
+        for t in &mut self.tiers {
+            t.bandwidth_bps *= factor;
+        }
+        self
+    }
+
+    pub fn tier(&self, idx: usize) -> &MemoryTier {
+        &self.tiers[idx]
+    }
+
+    pub fn n_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+
+    pub fn max_tier(&self) -> usize {
+        self.tiers.len() - 1
+    }
+
+    pub fn max_mem_mb(&self) -> u64 {
+        self.tiers.iter().map(|t| t.mem_mb).max().unwrap_or(0)
+    }
+
+    /// Effective per-worker bandwidth with `n` workers active (§5.4).
+    pub fn effective_bandwidth(&self, tier: usize, n_workers: usize) -> f64 {
+        let w = self.tiers[tier].bandwidth_bps;
+        let factor = (1.0 - self.contention_slope * (n_workers.saturating_sub(1)) as f64)
+            .max(self.contention_floor);
+        let per = w * factor;
+        match self.storage.aggregate_cap_bps {
+            Some(cap) if n_workers > 0 => per.min(cap / n_workers as f64),
+            _ => per,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aws_tier_constants_match_paper() {
+        let p = PlatformSpec::aws_lambda();
+        assert_eq!(p.tiers.len(), 8); // §5.1: 8 discrete choices
+        assert_eq!(p.max_mem_mb(), 10240); // 10 GB cap
+        let top = p.tier(p.max_tier());
+        assert!((top.bandwidth_bps - 70.0e6).abs() < 1.0); // ~70 MB/s
+        assert!((p.function_lifetime_s - 900.0).abs() < 1e-9); // 15 min
+    }
+
+    #[test]
+    fn bandwidth_monotone_in_memory() {
+        let p = PlatformSpec::aws_lambda();
+        for w in p.tiers.windows(2) {
+            assert!(w[0].bandwidth_bps <= w[1].bandwidth_bps);
+            assert!(w[0].compute_speed < w[1].compute_speed);
+        }
+    }
+
+    #[test]
+    fn alibaba_has_aggregate_cap() {
+        let p = PlatformSpec::alibaba_fc();
+        assert_eq!(p.max_mem_mb(), 32768); // 32 GB cap
+        let cap = p.storage.aggregate_cap_bps.unwrap();
+        assert!((cap - 1.25e9).abs() < 1.0); // 10 Gb/s
+        // with many workers, the cap binds:
+        let few = p.effective_bandwidth(p.max_tier(), 2);
+        let many = p.effective_bandwidth(p.max_tier(), 64);
+        assert!(many < few);
+        assert!(many <= cap / 64.0 + 1.0);
+    }
+
+    #[test]
+    fn contention_reduces_bandwidth() {
+        let p = PlatformSpec::aws_lambda();
+        let alone = p.effective_bandwidth(7, 1);
+        let crowded = p.effective_bandwidth(7, 32);
+        assert!(crowded < alone);
+        assert!(crowded >= alone * p.contention_floor - 1.0);
+    }
+
+    #[test]
+    fn bandwidth_scaling() {
+        let p = PlatformSpec::aws_lambda().with_bandwidth_scale(20.0);
+        let top = p.tier(p.max_tier());
+        assert!((top.bandwidth_bps - 1.4e9).abs() < 10.0);
+    }
+}

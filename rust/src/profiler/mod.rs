@@ -1,0 +1,189 @@
+//! The Model Profiler (§3.1 step 3): measures per-stage compute times at
+//! each memory tier through the real PJRT path, plus the storage
+//! substrate's latency/bandwidth — producing a [`ModelProfile`] that the
+//! Partition/Resource Optimizer consumes, exactly the startup flow of the
+//! paper.
+//!
+//! On this testbed all tiers share the host CPU, so tier times are derived
+//! by measuring the reference execution and scaling by the tier's
+//! effective speed (the same Amdahl model the zoo uses) — the measured
+//! part is the *relative layer weights*, which is what partitioning needs.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::model::{LayerProfile, ModelProfile};
+use crate::platform::{ObjectStore, PlatformSpec};
+use crate::runtime::{Manifest, Runtime};
+use crate::trainer::data::Corpus;
+
+/// Measured storage characteristics.
+#[derive(Debug, Clone)]
+pub struct StorageProfile {
+    pub latency_s: f64,
+    pub bandwidth_bps: f64,
+}
+
+/// Profile the artifacts' stages by running fwd/bwd through PJRT.
+pub fn profile_stages(
+    artifacts_dir: &std::path::Path,
+    platform: &PlatformSpec,
+    reps: usize,
+) -> Result<ModelProfile> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    let rt = Arc::new(Runtime::cpu()?);
+    let corpus = Corpus::new(
+        manifest.vocab,
+        manifest.seq_len,
+        manifest.micro_batch,
+        1234,
+    );
+    let (tokens, targets) = corpus.batch(0, 0, 0);
+
+    let amdahl = |vcpus: f64| -> f64 {
+        let p = 0.88;
+        1.0 / ((1.0 - p) + p / vcpus.max(0.2))
+    };
+
+    let mut layers = Vec::new();
+    let mut h: Vec<f32> = Vec::new();
+    for (i, entry) in manifest.stages.iter().enumerate() {
+        let stage = rt.load_stage(&manifest, entry)?;
+        let is_first = i == 0;
+        let is_last = i == manifest.n_stages - 1;
+
+        // measure fwd
+        let x_in = h.clone();
+        let mut fwd_t = f64::INFINITY;
+        let mut out: Vec<f32> = Vec::new();
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            out = if is_first {
+                stage.fwd_tokens(&tokens)?
+            } else if is_last {
+                vec![stage.fwd_loss(&x_in, &targets)?]
+            } else {
+                stage.fwd_acts(&x_in)?
+            };
+            fwd_t = fwd_t.min(t0.elapsed().as_secs_f64());
+        }
+
+        // measure bwd
+        let gy = vec![1e-3f32; out.len()];
+        let mut bwd_t = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            if is_first {
+                let _ = stage.bwd_tokens(&tokens, &gy)?;
+            } else if is_last {
+                let _ = stage.bwd_loss(&x_in, &targets)?;
+            } else {
+                let _ = stage.bwd_acts(&x_in, &gy)?;
+            }
+            bwd_t = bwd_t.min(t0.elapsed().as_secs_f64());
+        }
+
+        let out_bytes = if is_last { 64 } else { (out.len() * 4) as u64 };
+        let act_bytes = (entry
+            .input_shape
+            .iter()
+            .product::<usize>()
+            .max(out.len())
+            * 4) as u64;
+        layers.push(LayerProfile {
+            name: entry.name.clone(),
+            param_bytes: (entry.flat_param_size * 4) as u64,
+            act_bytes,
+            out_bytes,
+            grad_bytes: act_bytes,
+            fwd_s: platform
+                .tiers
+                .iter()
+                .map(|t| fwd_t / amdahl(t.compute_speed) * amdahl(1.0))
+                .collect(),
+            bwd_s: platform
+                .tiers
+                .iter()
+                .map(|t| bwd_t / amdahl(t.compute_speed) * amdahl(1.0))
+                .collect(),
+        });
+        if !is_last {
+            h = out;
+        }
+    }
+    Ok(ModelProfile { name: "aot-transformer".into(), layers })
+}
+
+/// Measure the storage substrate: latency from small objects, bandwidth
+/// from a large one.
+pub fn profile_storage(store: &Arc<dyn ObjectStore>) -> Result<StorageProfile> {
+    // latency: median of small put+get round trips
+    let mut lats = Vec::new();
+    for i in 0..9 {
+        let key = format!("probe/lat/{i}");
+        let t0 = Instant::now();
+        store.put(&key, vec![0u8; 64])?;
+        let _ = store.get_blocking(&key, Duration::from_secs(5))?;
+        lats.push(t0.elapsed().as_secs_f64() / 2.0);
+        store.delete(&key);
+    }
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let latency_s = lats[lats.len() / 2];
+
+    // bandwidth: 4 MB object
+    let payload = vec![7u8; 4 << 20];
+    let t0 = Instant::now();
+    store.put("probe/bw", payload)?;
+    let up = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let _ = store.get_blocking("probe/bw", Duration::from_secs(30))?;
+    let down = t1.elapsed().as_secs_f64();
+    store.delete("probe/bw");
+    let bandwidth_bps =
+        (4u64 << 20) as f64 / ((up + down) / 2.0 - latency_s).max(1e-9);
+    Ok(StorageProfile { latency_s, bandwidth_bps })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{MemStore, ThrottledStore};
+    use std::path::PathBuf;
+
+    #[test]
+    fn profiles_real_artifacts() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let p = PlatformSpec::aws_lambda();
+        let prof = profile_stages(&dir, &p, 2).unwrap();
+        prof.validate().unwrap();
+        assert!(prof.n_layers() >= 3);
+        for l in &prof.layers {
+            assert!(l.fwd_s[0] > 0.0);
+            assert!(l.fwd_s[0] >= l.fwd_s[p.max_tier()]);
+        }
+    }
+
+    #[test]
+    fn storage_profile_recovers_throttle() {
+        let inner = Arc::new(MemStore::new());
+        let store: Arc<dyn ObjectStore> = Arc::new(ThrottledStore::new(
+            inner,
+            50.0e6, // 50 MB/s
+            50.0e6,
+            Duration::from_millis(5),
+        ));
+        let sp = profile_storage(&store).unwrap();
+        assert!(
+            (sp.bandwidth_bps - 50.0e6).abs() / 50.0e6 < 0.5,
+            "bw {:.1} MB/s",
+            sp.bandwidth_bps / 1e6
+        );
+        assert!(sp.latency_s > 0.003, "lat {}", sp.latency_s);
+    }
+}

@@ -1,0 +1,238 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. See aot.py's module docstring for the file inventory.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One parameter tensor's layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub numel: usize,
+}
+
+/// One pipeline stage's artifacts.
+#[derive(Debug, Clone)]
+pub struct StageEntry {
+    pub index: usize,
+    pub name: String,
+    /// "embed" | "blocks" | "head"
+    pub kind: String,
+    pub params: Vec<ParamSpec>,
+    pub flat_param_size: usize,
+    pub input_shape: Vec<usize>,
+    pub input_dtype: String,
+    pub output_shape: Vec<usize>,
+    pub fwd_file: String,
+    pub bwd_file: String,
+    pub sgd_file: String,
+    pub merge2_file: String,
+    pub init_file: String,
+    /// Entry-argument indices each executable kept (jax.jit prunes args
+    /// that cannot affect the outputs - see aot.py `kept_args`).
+    pub fwd_kept: Vec<usize>,
+    pub bwd_kept: Vec<usize>,
+    pub sgd_kept: Vec<usize>,
+    pub merge2_kept: Vec<usize>,
+}
+
+fn kept_vec(entry: &Json, key: &str) -> Result<Vec<usize>> {
+    Ok(entry
+        .field("kept_args")?
+        .field_arr(key)?
+        .iter()
+        .map(|x| x.as_usize().unwrap_or(usize::MAX))
+        .collect())
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub n_stages: usize,
+    pub total_params: usize,
+    pub micro_batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub stages: Vec<StageEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let cfg = j.field("config")?;
+        let mut stages = Vec::new();
+        for e in j.field_arr("stages")? {
+            let files = e.field("files")?;
+            let params = e
+                .field_arr("params")?
+                .iter()
+                .map(|p| -> Result<ParamSpec> {
+                    Ok(ParamSpec {
+                        name: p.field_str("name")?.to_string(),
+                        shape: p
+                            .field_arr("shape")?
+                            .iter()
+                            .map(|x| x.as_usize().unwrap_or(0))
+                            .collect(),
+                        numel: p.field_usize("numel")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            stages.push(StageEntry {
+                index: e.field_usize("index")?,
+                name: e.field_str("name")?.to_string(),
+                kind: e.field_str("kind")?.to_string(),
+                params,
+                flat_param_size: e.field_usize("flat_param_size")?,
+                input_shape: e
+                    .field_arr("input_shape")?
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect(),
+                input_dtype: e.field_str("input_dtype")?.to_string(),
+                output_shape: e
+                    .field_arr("output_shape")?
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect(),
+                fwd_file: files.field_str("fwd")?.to_string(),
+                bwd_file: files.field_str("bwd")?.to_string(),
+                sgd_file: files.field_str("sgd")?.to_string(),
+                merge2_file: files.field_str("merge2")?.to_string(),
+                init_file: files.field_str("init")?.to_string(),
+                fwd_kept: kept_vec(e, "fwd")?,
+                bwd_kept: kept_vec(e, "bwd")?,
+                sgd_kept: kept_vec(e, "sgd")?,
+                merge2_kept: kept_vec(e, "merge2")?,
+            });
+        }
+        let m = Self {
+            dir,
+            n_stages: j.field_usize("n_stages")?,
+            total_params: j.field_usize("total_params")?,
+            micro_batch: cfg.field_usize("micro_batch")?,
+            seq_len: cfg.field_usize("seq_len")?,
+            vocab: cfg.field_usize("vocab")?,
+            d_model: cfg.field_usize("d_model")?,
+            stages,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.stages.len() != self.n_stages {
+            bail!(
+                "manifest stage count mismatch: {} vs {}",
+                self.stages.len(),
+                self.n_stages
+            );
+        }
+        let total: usize = self.stages.iter().map(|s| s.flat_param_size).sum();
+        if total != self.total_params {
+            bail!("param total mismatch: {} vs {}", total, self.total_params);
+        }
+        for s in &self.stages {
+            let sum: usize = s.params.iter().map(|p| p.numel).sum();
+            if sum != s.flat_param_size {
+                bail!("stage {} param sizes inconsistent", s.index);
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a stage's initial parameters (raw little-endian f32), split
+    /// into per-tensor vectors in spec order.
+    pub fn load_init_params(&self, stage: &StageEntry) -> Result<Vec<Vec<f32>>> {
+        let path = self.dir.join(&stage.init_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != 4 * stage.flat_param_size {
+            bail!(
+                "init file {} has {} bytes, want {}",
+                stage.init_file,
+                bytes.len(),
+                4 * stage.flat_param_size
+            );
+        }
+        let flat: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut out = Vec::with_capacity(stage.params.len());
+        let mut off = 0;
+        for p in &stage.params {
+            out.push(flat[off..off + p.numel].to_vec());
+            off += p.numel;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("artifacts/ missing; run `make artifacts`");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.n_stages >= 3);
+        assert_eq!(m.stages[0].kind, "embed");
+        assert_eq!(m.stages.last().unwrap().kind, "head");
+        for s in &m.stages {
+            assert!(dir.join(&s.fwd_file).exists());
+            assert!(dir.join(&s.bwd_file).exists());
+            assert!(dir.join(&s.sgd_file).exists());
+            assert!(dir.join(&s.merge2_file).exists());
+        }
+    }
+
+    #[test]
+    fn init_params_split_correctly() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let s = &m.stages[0];
+        let params = m.load_init_params(s).unwrap();
+        assert_eq!(params.len(), s.params.len());
+        for (p, spec) in params.iter().zip(&s.params) {
+            assert_eq!(p.len(), spec.numel);
+        }
+        // embedding init is non-degenerate
+        let flat: f32 = params[0].iter().map(|x| x.abs()).sum();
+        assert!(flat > 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        let tmp = std::env::temp_dir().join("funcpipe_bad_manifest");
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(
+            tmp.join("manifest.json"),
+            r#"{"n_stages": 2, "total_params": 0, "config": {"micro_batch": 1,
+                "seq_len": 1, "vocab": 1, "d_model": 1}, "stages": []}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&tmp).is_err());
+    }
+}

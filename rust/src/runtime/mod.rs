@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
+//! the request path — python is never involved after `make artifacts`.
+//!
+//! * [`artifact`] — `manifest.json` parsing + raw `.f32` initial params;
+//! * [`stage`] — a loaded stage: fwd/bwd/sgd/merge2 executables plus
+//!   the parameter tensors, with flat-vector views for the collectives.
+
+pub mod artifact;
+pub mod stage;
+
+pub use artifact::{Manifest, ParamSpec, StageEntry};
+pub use stage::{Runtime, StageExec};

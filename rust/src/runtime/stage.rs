@@ -1,0 +1,342 @@
+//! Loaded pipeline stages: HLO text → PJRT executable → typed execution
+//! helpers. Mirrors /opt/xla-example/load_hlo (text interchange — see
+//! aot.py for why serialized protos are rejected by xla_extension 0.5.1).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::artifact::{Manifest, StageEntry};
+
+/// Process-wide PJRT CPU client (one per process; stages share it).
+pub struct Runtime {
+    pub client: PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: PjRtClient::cpu().context("PJRT CPU client")? })
+    }
+
+    fn load_exe(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Load all of a stage's executables + initial parameters.
+    pub fn load_stage(
+        self: &Arc<Self>,
+        manifest: &Manifest,
+        entry: &StageEntry,
+    ) -> Result<StageExec> {
+        let dir = &manifest.dir;
+        Ok(StageExec {
+            entry: entry.clone(),
+            micro_batch: manifest.micro_batch,
+            seq_len: manifest.seq_len,
+            fwd: self.load_exe(&dir.join(&entry.fwd_file))?,
+            bwd: self.load_exe(&dir.join(&entry.bwd_file))?,
+            sgd: self.load_exe(&dir.join(&entry.sgd_file))?,
+            merge2: self.load_exe(&dir.join(&entry.merge2_file))?,
+            params: manifest.load_init_params(entry)?,
+        })
+    }
+}
+
+/// A stage resident on one worker: executables + live parameters.
+pub struct StageExec {
+    pub entry: StageEntry,
+    pub micro_batch: usize,
+    pub seq_len: usize,
+    fwd: PjRtLoadedExecutable,
+    bwd: PjRtLoadedExecutable,
+    sgd: PjRtLoadedExecutable,
+    merge2: PjRtLoadedExecutable,
+    /// Parameter tensors (f32, row-major) in manifest order.
+    pub params: Vec<Vec<f32>>,
+}
+
+fn lit_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, bytes)
+        .context("building f32 literal")
+}
+
+fn lit_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, bytes)
+        .context("building i32 literal")
+}
+
+impl StageExec {
+    fn param_literals(&self) -> Result<Vec<Literal>> {
+        self.entry
+            .params
+            .iter()
+            .zip(&self.params)
+            .map(|(spec, data)| lit_f32(data, &spec.shape))
+            .collect()
+    }
+
+    fn run(
+        exe: &PjRtLoadedExecutable,
+        args: Vec<Literal>,
+        kept: &[usize],
+    ) -> Result<Vec<Literal>> {
+        // keep only the entry arguments the lowering retained (aot.py
+        // records jax.jit's dead-argument pruning in the manifest)
+        let args: Vec<Literal> = args
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| kept.contains(i))
+            .map(|(_, l)| l)
+            .collect();
+        let out = exe.execute::<Literal>(&args).context("execute")?;
+        let lit = out[0][0].to_literal_sync().context("to_literal")?;
+        lit.to_tuple().context("detuple")
+    }
+
+    /// Forward for a non-head stage: input activations (or tokens for the
+    /// embed stage are passed via `fwd_tokens`) → output activations.
+    pub fn fwd_acts(&self, x: &[f32]) -> Result<Vec<f32>> {
+        if self.entry.kind == "embed" {
+            bail!("embed stage takes tokens; use fwd_tokens");
+        }
+        let mut args = self.param_literals()?;
+        args.push(lit_f32(x, &self.entry.input_shape)?);
+        let out = Self::run(&self.fwd, args, &self.entry.fwd_kept)?;
+        out[0].to_vec::<f32>().context("fwd output")
+    }
+
+    /// Forward for the embed stage.
+    pub fn fwd_tokens(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let mut args = self.param_literals()?;
+        args.push(lit_i32(tokens, &self.entry.input_shape)?);
+        let out = Self::run(&self.fwd, args, &self.entry.fwd_kept)?;
+        out[0].to_vec::<f32>().context("embed output")
+    }
+
+    /// Forward for the head stage → scalar loss.
+    pub fn fwd_loss(&self, x: &[f32], targets: &[i32]) -> Result<f32> {
+        let mut args = self.param_literals()?;
+        args.push(lit_f32(x, &self.entry.input_shape)?);
+        args.push(lit_i32(targets, &[self.micro_batch, self.seq_len])?);
+        let out = Self::run(&self.fwd, args, &self.entry.fwd_kept)?;
+        Ok(out[0].to_vec::<f32>().context("loss")?[0])
+    }
+
+    /// Backward of a blocks stage: (x, gy) → (flat grads, gx).
+    pub fn bwd_acts(&self, x: &[f32], gy: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut args = self.param_literals()?;
+        args.push(lit_f32(x, &self.entry.input_shape)?);
+        args.push(lit_f32(gy, &self.entry.output_shape)?);
+        let out = Self::run(&self.bwd, args, &self.entry.bwd_kept)?;
+        let n = self.entry.params.len();
+        let grads = flatten_grads(&out[..n])?;
+        let gx = out[n].to_vec::<f32>().context("gx")?;
+        Ok((grads, gx))
+    }
+
+    /// Backward of the embed stage: (tokens, gy) → flat grads.
+    pub fn bwd_tokens(&self, tokens: &[i32], gy: &[f32]) -> Result<Vec<f32>> {
+        let mut args = self.param_literals()?;
+        args.push(lit_i32(tokens, &self.entry.input_shape)?);
+        args.push(lit_f32(gy, &self.entry.output_shape)?);
+        let out = Self::run(&self.bwd, args, &self.entry.bwd_kept)?;
+        flatten_grads(&out[..self.entry.params.len()])
+    }
+
+    /// Backward of the head stage: (x, targets) → (flat grads, gx, loss).
+    pub fn bwd_loss(
+        &self,
+        x: &[f32],
+        targets: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let mut args = self.param_literals()?;
+        args.push(lit_f32(x, &self.entry.input_shape)?);
+        args.push(lit_i32(targets, &[self.micro_batch, self.seq_len])?);
+        let out = Self::run(&self.bwd, args, &self.entry.bwd_kept)?;
+        let n = self.entry.params.len();
+        let grads = flatten_grads(&out[..n])?;
+        let gx = out[n].to_vec::<f32>().context("gx")?;
+        let loss = out[n + 1].to_vec::<f32>().context("loss")?[0];
+        Ok((grads, gx, loss))
+    }
+
+    /// SGD update: `params ← params − lr·grads` through the AOT executable
+    /// (L1 `sgd_apply` kernel). `flat_grads` in manifest order.
+    pub fn sgd_step(&mut self, flat_grads: &[f32], lr: f32) -> Result<()> {
+        if flat_grads.len() != self.entry.flat_param_size {
+            bail!(
+                "grad size {} != {}",
+                flat_grads.len(),
+                self.entry.flat_param_size
+            );
+        }
+        let mut args = self.param_literals()?;
+        let mut off = 0;
+        for spec in &self.entry.params {
+            args.push(lit_f32(&flat_grads[off..off + spec.numel], &spec.shape)?);
+            off += spec.numel;
+        }
+        args.push(lit_f32(&[lr], &[])?);
+        let out = Self::run(&self.sgd, args, &self.entry.sgd_kept)?;
+        for (i, spec) in self.entry.params.iter().enumerate() {
+            let updated = out[i].to_vec::<f32>().context("updated param")?;
+            debug_assert_eq!(updated.len(), spec.numel);
+            self.params[i] = updated;
+        }
+        Ok(())
+    }
+
+    /// Pairwise gradient merge through the AOT `merge2` executable (the
+    /// L1 Pallas `grad_merge` kernel): `a + b`.
+    pub fn merge_grads(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let n = self.entry.flat_param_size;
+        if a.len() != n || b.len() != n {
+            bail!("merge sizes {}/{} != {}", a.len(), b.len(), n);
+        }
+        let args = vec![lit_f32(a, &[n])?, lit_f32(b, &[n])?];
+        let out = Self::run(&self.merge2, args, &self.entry.merge2_kept)?;
+        out[0].to_vec::<f32>().context("merged")
+    }
+
+    /// Flatten current params (for checkpointing / sync).
+    pub fn flat_params(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.entry.flat_param_size);
+        for p in &self.params {
+            out.extend_from_slice(p);
+        }
+        out
+    }
+
+    /// Restore params from a flat vector (checkpoint restore).
+    pub fn set_flat_params(&mut self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.entry.flat_param_size {
+            bail!("param size {} != {}", flat.len(), self.entry.flat_param_size);
+        }
+        let mut off = 0;
+        for (i, spec) in self.entry.params.iter().enumerate() {
+            self.params[i].copy_from_slice(&flat[off..off + spec.numel]);
+            off += spec.numel;
+        }
+        Ok(())
+    }
+}
+
+fn flatten_grads(lits: &[Literal]) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    for l in lits {
+        out.extend(l.to_vec::<f32>().context("grad tensor")?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<Manifest> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(&d).unwrap())
+    }
+
+    #[test]
+    fn full_stage_roundtrip_through_pjrt() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = Arc::new(Runtime::cpu().unwrap());
+        let embed = rt.load_stage(&m, &m.stages[0]).unwrap();
+        let blocks = rt.load_stage(&m, &m.stages[1]).unwrap();
+        let head = rt.load_stage(&m, m.stages.last().unwrap()).unwrap();
+
+        let b = m.micro_batch;
+        let t = m.seq_len;
+        let tokens: Vec<i32> = (0..b * t).map(|i| (i % m.vocab) as i32).collect();
+        let targets: Vec<i32> =
+            (0..b * t).map(|i| ((i + 1) % m.vocab) as i32).collect();
+
+        // forward chain
+        let h0 = embed.fwd_tokens(&tokens).unwrap();
+        assert_eq!(h0.len(), b * t * m.d_model);
+        let mut h = h0.clone();
+        for s in 1..m.n_stages - 1 {
+            let stage = rt.load_stage(&m, &m.stages[s]).unwrap();
+            h = stage.fwd_acts(&h).unwrap();
+        }
+        let loss = head.fwd_loss(&h, &targets).unwrap();
+        // random init → loss ≈ ln(vocab)
+        let expect = (m.vocab as f32).ln();
+        assert!(
+            (loss - expect).abs() < 1.0,
+            "loss {loss} vs ln(V) {expect}"
+        );
+
+        // backward chain on the last micro-batch
+        let (g_head, gx, loss2) = head.bwd_loss(&h, &targets).unwrap();
+        assert_eq!(g_head.len(), head.entry.flat_param_size);
+        assert!((loss2 - loss).abs() < 1e-5);
+        let (g_blocks, gx2) = blocks.bwd_acts(&h0, &gx).unwrap();
+        assert_eq!(g_blocks.len(), blocks.entry.flat_param_size);
+        let g_embed = embed.bwd_tokens(&tokens, &gx2).unwrap();
+        assert_eq!(g_embed.len(), embed.entry.flat_param_size);
+        assert!(g_embed.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn sgd_and_merge_executables_work() {
+        let Some(m) = manifest() else {
+            return;
+        };
+        let rt = Arc::new(Runtime::cpu().unwrap());
+        let mut head = rt.load_stage(&m, m.stages.last().unwrap()).unwrap();
+        let n = head.entry.flat_param_size;
+
+        // merge2 == elementwise add
+        let a = vec![1.5f32; n];
+        let b: Vec<f32> = (0..n).map(|i| (i % 7) as f32).collect();
+        let merged = head.merge_grads(&a, &b).unwrap();
+        for i in 0..n {
+            assert!((merged[i] - (1.5 + (i % 7) as f32)).abs() < 1e-6);
+        }
+
+        // sgd: p' = p - lr*g
+        let before = head.flat_params();
+        let grads = vec![2.0f32; n];
+        head.sgd_step(&grads, 0.1).unwrap();
+        let after = head.flat_params();
+        for i in 0..n {
+            assert!((after[i] - (before[i] - 0.2)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn set_flat_params_roundtrip() {
+        let Some(m) = manifest() else {
+            return;
+        };
+        let rt = Arc::new(Runtime::cpu().unwrap());
+        let mut s = rt.load_stage(&m, &m.stages[0]).unwrap();
+        let flat: Vec<f32> =
+            (0..s.entry.flat_param_size).map(|i| i as f32 * 0.5).collect();
+        s.set_flat_params(&flat).unwrap();
+        assert_eq!(s.flat_params(), flat);
+    }
+}

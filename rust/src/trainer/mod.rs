@@ -1,0 +1,106 @@
+//! End-to-end training driver: configuration, synthetic corpus and the
+//! public `train()` entry point that the examples and CLI call. The
+//! distributed execution itself lives in [`coordinator`](crate::coordinator).
+
+pub mod data;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::collective::SyncAlgorithm;
+use crate::coordinator::leader::run_training;
+use crate::platform::MemStore;
+
+/// Configuration for a real training run over the AOT artifacts.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub artifacts_dir: PathBuf,
+    /// Data-parallel degree (uniform across stages, §3.4.1).
+    pub dp: usize,
+    /// Micro-batches per worker per iteration (μ).
+    pub mu: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// Per-worker storage throttle: (bytes/s, latency seconds). `None` =
+    /// full speed (pure-compute runs).
+    pub throttle: Option<(f64, f64)>,
+    /// Simulated function lifetime; workers checkpoint+restart when their
+    /// remaining lifetime drops below the margin (§3.1 step 8).
+    pub lifetime_s: f64,
+    pub checkpoint_margin_s: f64,
+    pub sync_alg: SyncAlgorithm,
+}
+
+impl TrainConfig {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Self {
+        Self {
+            artifacts_dir: artifacts_dir.into(),
+            dp: 1,
+            mu: 2,
+            steps: 20,
+            lr: 0.2,
+            seed: 7,
+            throttle: None,
+            lifetime_s: f64::INFINITY,
+            checkpoint_margin_s: 2.0,
+            sync_alg: SyncAlgorithm::PipelinedScatterReduce,
+        }
+    }
+
+    pub fn global_batch(&self, micro_batch: usize) -> usize {
+        self.dp * self.mu * micro_batch
+    }
+}
+
+/// One iteration's record (written by the monitor daemon).
+#[derive(Debug, Clone)]
+pub struct IterLog {
+    pub step: usize,
+    pub loss: f32,
+    pub iter_s: f64,
+}
+
+/// Result of a training run.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub logs: Vec<IterLog>,
+    pub restarts: usize,
+    pub wall_s: f64,
+    pub store_put_gets: (u64, u64),
+}
+
+impl TrainReport {
+    pub fn first_loss(&self) -> f32 {
+        self.logs.first().map(|l| l.loss).unwrap_or(f32::NAN)
+    }
+
+    pub fn last_loss(&self) -> f32 {
+        self.logs.last().map(|l| l.loss).unwrap_or(f32::NAN)
+    }
+
+    pub fn mean_iter_s(&self) -> f64 {
+        if self.logs.is_empty() {
+            return 0.0;
+        }
+        self.logs.iter().map(|l| l.iter_s).sum::<f64>() / self.logs.len() as f64
+    }
+}
+
+/// Train the AOT transformer across simulated serverless workers.
+pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
+    let store = Arc::new(MemStore::new());
+    let mut report = run_training(cfg, store.clone())?;
+    report.store_put_gets = store.stats();
+    Ok(report)
+}
+
+/// Variant with a caller-provided store (tests inject throttled stores).
+pub fn train_with_store(
+    cfg: &TrainConfig,
+    store: Arc<MemStore>,
+) -> Result<TrainReport> {
+    run_training(cfg, store)
+}

@@ -1,0 +1,75 @@
+//! Byte/second/dollar formatting helpers for logs and bench tables.
+
+/// Format a byte count with binary units ("3.2 GiB").
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Megabytes (SI, as the paper uses) to bytes.
+pub const fn mb(n: u64) -> u64 {
+    n * 1_000_000
+}
+
+/// Mebibytes to bytes (function memory tiers are binary MB).
+pub const fn mib(n: u64) -> u64 {
+    n * 1024 * 1024
+}
+
+/// Format a duration in seconds adaptively ("431 ms", "12.3 s", "2.1 min").
+pub fn secs(t: f64) -> String {
+    if t < 1e-3 {
+        format!("{:.1} µs", t * 1e6)
+    } else if t < 1.0 {
+        format!("{:.1} ms", t * 1e3)
+    } else if t < 120.0 {
+        format!("{t:.2} s")
+    } else {
+        format!("{:.1} min", t / 60.0)
+    }
+}
+
+/// Format a dollar amount ("$0.00412").
+pub fn usd(x: f64) -> String {
+    if x >= 0.01 {
+        format!("${x:.4}")
+    } else {
+        format!("${x:.6}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2048), "2.00 KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn seconds_ranges() {
+        assert!(secs(0.0000005).contains("µs"));
+        assert!(secs(0.02).contains("ms"));
+        assert!(secs(5.0).contains("s"));
+        assert!(secs(600.0).contains("min"));
+    }
+
+    #[test]
+    fn mb_mib() {
+        assert_eq!(mb(70), 70_000_000);
+        assert_eq!(mib(1), 1_048_576);
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared substrates: deterministic RNG, JSON, statistics, logging,
+//! human-readable units, table rendering and a mini property-testing
+//! harness.
+//!
+//! These exist because the offline registry carries none of the usual
+//! crates (serde, rand, proptest, criterion); see DESIGN.md §3.
+
+pub mod humansize;
+pub mod json;
+pub mod logging;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,207 @@
+//! Mini property-based testing harness (proptest is unavailable offline).
+//!
+//! A property runs against `N` generated cases from a deterministic RNG; on
+//! failure the harness re-runs a bounded shrink loop that retries with
+//! "smaller" cases drawn from the failing case's neighborhood, then panics
+//! with the smallest failing case's debug representation and the seed to
+//! reproduce.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 128, seed: 0xF00D, max_shrink_iters: 200 }
+    }
+}
+
+/// A generator produces a value from the RNG; `shrink` proposes smaller
+/// candidates (default: none).
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Run `prop` against `cases` generated values. Panics on failure with the
+/// minimal (post-shrink) counterexample.
+pub fn check<G, F>(gen: &G, prop: F)
+where
+    G: Gen,
+    F: Fn(&G::Value) -> bool,
+{
+    check_with(Config::default(), gen, prop)
+}
+
+pub fn check_with<G, F>(cfg: Config, gen: &G, prop: F)
+where
+    G: Gen,
+    F: Fn(&G::Value) -> bool,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let value = gen.generate(&mut rng);
+        if prop(&value) {
+            continue;
+        }
+        // shrink
+        let mut smallest = value.clone();
+        let mut iters = 0;
+        'outer: loop {
+            for cand in gen.shrink(&smallest) {
+                iters += 1;
+                if iters > cfg.max_shrink_iters {
+                    break 'outer;
+                }
+                if !prop(&cand) {
+                    smallest = cand;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed at case {case} (seed {:#x})\n\
+             original: {value:?}\nshrunk:   {smallest:?}",
+            cfg.seed
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// common generators
+// ---------------------------------------------------------------------------
+
+/// Uniform usize in [lo, hi].
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Gen for UsizeRange {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Rng) -> usize {
+        rng.gen_range(self.0 as u64, self.1 as u64 + 1) as usize
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform f64 in [lo, hi).
+pub struct F64Range(pub f64, pub f64);
+
+impl Gen for F64Range {
+    type Value = f64;
+
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.uniform(self.0, self.1)
+    }
+
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mid = (self.0 + v) / 2.0;
+        if (*v - self.0).abs() > 1e-9 {
+            vec![self.0, mid]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Vector of `len` values from an inner generator; shrinks by halving length.
+pub struct VecOf<G: Gen> {
+    pub inner: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<G::Value> {
+        let n = rng.gen_range(self.min_len as u64, self.max_len as u64 + 1)
+            as usize;
+        (0..n).map(|_| self.inner.generate(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            let half = self.min_len.max(v.len() / 2);
+            out.push(v[..half].to_vec());
+            out.push(v[1..].to_vec());
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairOf<A: Gen, B: Gen>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, (a, b): &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(a)
+            .into_iter()
+            .map(|a2| (a2, b.clone()))
+            .collect();
+        out.extend(self.1.shrink(b).into_iter().map(|b2| (a.clone(), b2)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(&UsizeRange(1, 100), |&n| n >= 1 && n <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrunk_case() {
+        check(&UsizeRange(0, 1000), |&n| n < 500);
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        check(
+            &VecOf { inner: F64Range(0.0, 1.0), min_len: 2, max_len: 10 },
+            |v| v.len() >= 2 && v.len() <= 10 && v.iter().all(|x| *x < 1.0),
+        );
+    }
+
+    #[test]
+    fn pair_generator() {
+        check(&PairOf(UsizeRange(0, 5), F64Range(-1.0, 1.0)), |(n, x)| {
+            *n <= 5 && x.abs() <= 1.0
+        });
+    }
+}

@@ -1,0 +1,124 @@
+//! Paper-style ASCII table rendering for the bench harness: every figure /
+//! table reproduction prints rows through this module so output is uniform
+//! and diffable.
+
+/// A simple column-aligned table.
+#[derive(Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Self {
+        Self { title: title.into(), header: Vec::new(), rows: Vec::new() }
+    }
+
+    pub fn header<I, S>(mut self, cols: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.header = cols.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn row<I, S>(&mut self, cols: I)
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.rows.push(cols.into_iter().map(Into::into).collect());
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self
+            .header
+            .len()
+            .max(self.rows.iter().map(Vec::len).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "+\n";
+        let fmt_row = |cols: &[String]| -> String {
+            let mut line = String::new();
+            for (i, w) in widths.iter().enumerate() {
+                let cell = cols.get(i).map(String::as_str).unwrap_or("");
+                line.push_str(&format!("| {cell:<w$} "));
+            }
+            line.push_str("|\n");
+            line
+        };
+        out.push_str(&sep);
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header));
+            out.push_str(&sep);
+        }
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out.push_str(&sep);
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format helper: "1.85x" speedup strings.
+pub fn speedup(base: f64, new: f64) -> String {
+    if new <= 0.0 {
+        return "inf".into();
+    }
+    format!("{:.2}x", base / new)
+}
+
+/// Format helper: "-23.5%" change strings (negative = reduction).
+pub fn pct_change(base: f64, new: f64) -> String {
+    if base.abs() < 1e-12 {
+        return "n/a".into();
+    }
+    format!("{:+.1}%", (new - base) / base * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo").header(["name", "value"]);
+        t.row(["alpha", "1"]);
+        t.row(["b", "10000"]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("| alpha | 1     |"));
+        assert!(s.contains("| b     | 10000 |"));
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(speedup(2.0, 1.0), "2.00x");
+        assert_eq!(pct_change(100.0, 77.0), "-23.0%");
+    }
+}

@@ -1,0 +1,111 @@
+//! The three faces of every collective agree: analytic closed form,
+//! flow-level simulation, and the real threaded implementation.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use funcpipe::collective::sim::{
+    simulate_pipelined_scatter_reduce, simulate_scatter_reduce,
+};
+use funcpipe::collective::{
+    pipelined::pipelined_scatter_reduce, scatter_reduce::scatter_reduce,
+    sync_time, SyncAlgorithm,
+};
+use funcpipe::platform::network::BandwidthModel;
+use funcpipe::platform::{MemStore, ObjectStore};
+
+#[test]
+fn analytic_vs_flowsim_across_sizes() {
+    for n in [2usize, 4, 8, 16] {
+        for mb in [50.0e6, 280.0e6, 1000.0e6] {
+            let net = BandwidthModel::uniform(n, 70.0e6, 0.0);
+            let sim = simulate_pipelined_scatter_reduce(n, mb, &net);
+            let formula = sync_time(
+                SyncAlgorithm::PipelinedScatterReduce, mb, n, 70.0e6, 0.0,
+            );
+            let err = (sim - formula).abs() / formula;
+            assert!(err < 0.15, "n={n} s={mb}: {sim} vs {formula}");
+
+            let sim = simulate_scatter_reduce(n, mb, &net);
+            let formula =
+                sync_time(SyncAlgorithm::ScatterReduce, mb, n, 70.0e6, 0.0);
+            let err = (sim - formula).abs() / formula;
+            assert!(err < 0.15, "plain n={n} s={mb}: {sim} vs {formula}");
+        }
+    }
+}
+
+#[test]
+fn real_implementations_agree_bitwise() {
+    // plain and pipelined must produce the identical all-reduced vector
+    for n in [2usize, 3, 4, 6] {
+        let len = 10_000 + n; // non-divisible
+        let gen = |rank: usize| -> Vec<f32> {
+            (0..len).map(|i| ((rank * 7919 + i * 13) % 101) as f32).collect()
+        };
+        let mut results = Vec::new();
+        for pipelined in [false, true] {
+            let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+            let handles: Vec<_> = (0..n)
+                .map(|rank| {
+                    let store = store.clone();
+                    let mut g = gen(rank);
+                    std::thread::spawn(move || {
+                        if pipelined {
+                            pipelined_scatter_reduce(
+                                &store, "x", 0, rank, n, &mut g, None,
+                                Duration::from_secs(30),
+                            )
+                            .unwrap();
+                        } else {
+                            scatter_reduce(
+                                &store, "x", 0, rank, n, &mut g, None,
+                                Duration::from_secs(30),
+                            )
+                            .unwrap();
+                        }
+                        g
+                    })
+                })
+                .collect();
+            let out: Vec<Vec<f32>> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            // all ranks identical
+            for r in &out[1..] {
+                assert_eq!(r, &out[0]);
+            }
+            results.push(out[0].clone());
+        }
+        assert_eq!(results[0], results[1], "plain != pipelined at n={n}");
+    }
+}
+
+#[test]
+fn sum_matches_scalar_reference() {
+    let n = 5;
+    let len = 257;
+    let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+    let handles: Vec<_> = (0..n)
+        .map(|rank| {
+            let store = store.clone();
+            std::thread::spawn(move || {
+                let mut g: Vec<f32> =
+                    (0..len).map(|i| (rank * len + i) as f32 * 0.25).collect();
+                pipelined_scatter_reduce(
+                    &store, "s", 9, rank, n, &mut g, None,
+                    Duration::from_secs(30),
+                )
+                .unwrap();
+                g
+            })
+        })
+        .collect();
+    let out = handles
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .collect::<Vec<_>>();
+    for i in 0..len {
+        let want: f32 = (0..n).map(|r| (r * len + i) as f32 * 0.25).sum();
+        assert!((out[0][i] - want).abs() < 1e-3, "i={i}");
+    }
+}

@@ -1,0 +1,75 @@
+//! Cross-module integration: config -> planner -> simulator -> tables.
+
+use funcpipe::config::ExperimentConfig;
+use funcpipe::planner::{pareto_front, recommend, sweep, CoOptimizer};
+
+#[test]
+fn config_to_plan_to_recommendation() {
+    let cfg = ExperimentConfig::from_json_text(
+        r#"{"model": "amoebanet-d18", "global_batch": 64, "merge_layers": 6}"#,
+    )
+    .unwrap();
+    let platform = cfg.resolve_platform().unwrap();
+    let model = cfg.resolve_model(&platform).unwrap();
+    let opt = CoOptimizer::new(&model, &platform);
+    let points = sweep(&cfg.weights, |w| {
+        opt.solve(cfg.n_micro_global(), w).map(|(p, perf, _)| (p, perf))
+    });
+    assert!(!points.is_empty());
+    let front = pareto_front(&points);
+    assert!(!front.is_empty());
+    let rec = recommend(&front).unwrap();
+    rec.plan.validate(&model, &platform).unwrap();
+    // the recommendation is on the frontier
+    assert!(front.iter().any(|p| p.plan == rec.plan));
+}
+
+#[test]
+fn alibaba_aggregate_cap_changes_plans() {
+    // with a shared 10 Gb/s OSS cap, large-dp plans lose value (§5.7)
+    let mk = |platform: &str| {
+        let cfg = ExperimentConfig::from_json_text(&format!(
+            r#"{{"model": "amoebanet-d36", "platform": "{platform}",
+                "global_batch": 256, "merge_layers": 6}}"#
+        ))
+        .unwrap();
+        let p = cfg.resolve_platform().unwrap();
+        let m = cfg.resolve_model(&p).unwrap();
+        let opt = CoOptimizer::new(&m, &p);
+        let (_plan, perf, _) = opt.solve(cfg.n_micro_global(), (1.0, 2e-4)).unwrap();
+        perf
+    };
+    let aws = mk("aws");
+    let ali = mk("alibaba");
+    assert!(aws.t_iter > 0.0 && ali.t_iter > 0.0);
+}
+
+#[test]
+fn weights_trace_monotone_tradeoffs() {
+    // larger time-weight never yields a slower plan
+    let cfg = ExperimentConfig::default();
+    let platform = cfg.resolve_platform().unwrap();
+    let model = cfg.resolve_model(&platform).unwrap();
+    let opt = CoOptimizer::new(&model, &platform);
+    let mut prev_t = f64::INFINITY;
+    for w in [(1.0, 0.0), (1.0, 2e-4), (1.0, 2e-2), (0.0, 1.0)] {
+        let (_, perf, _) = opt.solve(cfg.n_micro_global(), w).unwrap();
+        assert!(
+            perf.t_iter <= prev_t + 1e-9,
+            "time-weight {w:?} gave slower plan: {} > {prev_t}",
+            perf.t_iter
+        );
+        prev_t = perf.t_iter;
+    }
+}
+
+#[test]
+fn headline_shape_funcpipe_vs_lambdaml() {
+    // Fig 5 shape: growing advantage with model size and batch
+    let small = funcpipe::bench::headline_comparison("resnet101", 64).unwrap();
+    let large = funcpipe::bench::headline_comparison("bert-large", 256).unwrap();
+    let sp_small = small.0 / small.2;
+    let sp_large = large.0 / large.2;
+    assert!(sp_large > sp_small, "speedup should grow: {sp_small} -> {sp_large}");
+    assert!(sp_large > 1.3, "paper band is 1.3x-2.2x, got {sp_large:.2}");
+}

@@ -1,0 +1,103 @@
+//! Pipeline DES vs closed-form model across a plan grid — the substance
+//! behind Table 3 (model accuracy).
+
+use funcpipe::collective::SyncAlgorithm;
+use funcpipe::model::{merge_layers, zoo, MergeCriterion, Plan};
+use funcpipe::pipeline::{build_schedule, simulate_iteration};
+use funcpipe::planner::PerfModel;
+use funcpipe::platform::PlatformSpec;
+
+#[test]
+fn model_within_20pct_of_sim_across_grid() {
+    let p = PlatformSpec::aws_lambda();
+    for name in ["resnet101", "bert-large"] {
+        let m = merge_layers(
+            &zoo::by_name(name, &p).unwrap(),
+            6,
+            MergeCriterion::Compute,
+        );
+        let pm = PerfModel::new(&m, &p);
+        let mut checked = 0;
+        for cuts in [vec![], vec![2], vec![1, 3]] {
+            for dp in [1usize, 2, 4] {
+                let s = cuts.len() + 1;
+                let plan = Plan {
+                    cuts: cuts.clone(),
+                    dp,
+                    stage_tiers: vec![p.max_tier(); s],
+                    n_micro_global: 8 * dp,
+                };
+                if plan.validate(&m, &p).is_err() {
+                    continue;
+                }
+                let sim = simulate_iteration(
+                    &m, &p, &plan, SyncAlgorithm::PipelinedScatterReduce,
+                );
+                let perf = pm.evaluate(&plan);
+                let err = (sim.t_iter - perf.t_iter).abs() / sim.t_iter;
+                assert!(
+                    err < 0.20,
+                    "{name} {plan:?}: sim {} model {} err {err:.3}",
+                    sim.t_iter,
+                    perf.t_iter
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked >= 4, "{name}: too few feasible plans");
+    }
+}
+
+#[test]
+fn schedule_scales_with_all_dimensions() {
+    for s in [1usize, 2, 4] {
+        for d in [1usize, 2] {
+            for mu in [1usize, 4] {
+                let plan = Plan {
+                    cuts: (0..s - 1).collect(),
+                    dp: d,
+                    stage_tiers: vec![0; s],
+                    n_micro_global: mu * d,
+                };
+                let sched = build_schedule(&plan);
+                sched.validate().unwrap();
+                assert_eq!(sched.n_workers(), s * d);
+                // every worker computes 2*mu tasks
+                for w in 0..sched.n_workers() {
+                    let computes = sched
+                        .worker_tasks(w)
+                        .iter()
+                        .filter(|t| {
+                            matches!(
+                                t.kind,
+                                funcpipe::pipeline::TaskKind::FwdCompute { .. }
+                                    | funcpipe::pipeline::TaskKind::BwdCompute { .. }
+                            )
+                        })
+                        .count();
+                    assert_eq!(computes, 2 * mu);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelining_amortizes_micro_batches() {
+    // t(2µ) << 2*t(µ) for multi-stage plans (the point of the pipeline)
+    let p = PlatformSpec::aws_lambda();
+    let m = merge_layers(
+        &zoo::amoebanet_d18(&p),
+        6,
+        MergeCriterion::Compute,
+    );
+    let mk = |mm: usize| Plan {
+        cuts: vec![1, 3],
+        dp: 1,
+        stage_tiers: vec![p.max_tier(); 3],
+        n_micro_global: mm,
+    };
+    let t4 = simulate_iteration(&m, &p, &mk(4), SyncAlgorithm::PipelinedScatterReduce).t_iter;
+    let t8 = simulate_iteration(&m, &p, &mk(8), SyncAlgorithm::PipelinedScatterReduce).t_iter;
+    assert!(t8 < 1.7 * t4, "no pipelining amortization: {t4} -> {t8}");
+}

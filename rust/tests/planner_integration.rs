@@ -1,0 +1,72 @@
+//! Planner end-to-end: optimizer vs baselines vs MIQP certification on
+//! every zoo model.
+
+use funcpipe::model::{merge_layers, zoo, MergeCriterion};
+use funcpipe::planner::bayes::BayesOpt;
+use funcpipe::planner::miqp::MiqpSolver;
+use funcpipe::planner::tpdmp::Tpdmp;
+use funcpipe::planner::CoOptimizer;
+use funcpipe::platform::PlatformSpec;
+
+#[test]
+fn optimizer_dominates_baseline_searchers_on_objective() {
+    let p = PlatformSpec::aws_lambda();
+    let alpha = (1.0, 2e-4);
+    for name in zoo::MODEL_NAMES {
+        let m = merge_layers(
+            &zoo::by_name(name, &p).unwrap(),
+            6,
+            MergeCriterion::Compute,
+        );
+        let (_, co, _) = CoOptimizer::new(&m, &p).solve(16, alpha).unwrap();
+        let j_co = alpha.0 * co.c_iter + alpha.1 * co.t_iter;
+        if let Some((_, tp)) = Tpdmp::new(&m, &p).solve(16, alpha) {
+            let j = alpha.0 * tp.c_iter + alpha.1 * tp.t_iter;
+            assert!(j_co <= j + 1e-12, "{name}: co {j_co} > tpdmp {j}");
+        }
+        if let Some((_, by)) = BayesOpt::new(&m, &p).solve(16, alpha) {
+            let j = alpha.0 * by.c_iter + alpha.1 * by.t_iter;
+            assert!(j_co <= j + 1e-9, "{name}: co {j_co} > bayes {j}");
+        }
+    }
+}
+
+#[test]
+fn miqp_certifies_all_models_small() {
+    let p = PlatformSpec::aws_lambda();
+    let alpha = (1.0, 1e-4);
+    for name in zoo::MODEL_NAMES {
+        let m = merge_layers(
+            &zoo::by_name(name, &p).unwrap(),
+            4,
+            MergeCriterion::Compute,
+        );
+        let mut co = CoOptimizer::new(&m, &p);
+        co.dp_options = vec![1, 2];
+        let mut miqp = MiqpSolver::new(&m, &p);
+        miqp.dp_options = vec![1, 2];
+        let (_, perf, _) = co.solve(8, alpha).unwrap();
+        let j_co = alpha.0 * perf.c_iter + alpha.1 * perf.t_iter;
+        let sol = miqp.solve(8, alpha).unwrap();
+        assert!(
+            (sol.objective - j_co).abs() < 1e-9 * j_co.max(1.0),
+            "{name}: {} vs {}",
+            sol.objective,
+            j_co
+        );
+    }
+}
+
+#[test]
+fn solution_times_are_minute_level() {
+    // §5.6: minute-level solution time; ours should be far under
+    let p = PlatformSpec::aws_lambda();
+    let m = merge_layers(
+        &zoo::bert_large(&p),
+        12,
+        MergeCriterion::Compute,
+    );
+    let t0 = std::time::Instant::now();
+    let (_, _, stats) = CoOptimizer::new(&m, &p).solve(64, (1.0, 2e-4)).unwrap();
+    assert!(t0.elapsed().as_secs_f64() < 120.0, "{stats:?}");
+}

@@ -1,0 +1,180 @@
+//! Property-based tests on the coordinator-side invariants, using the
+//! in-tree quickcheck harness (proptest is unavailable offline).
+
+use funcpipe::collective::split_ranges;
+use funcpipe::model::{merge_layers, zoo, MergeCriterion, Plan};
+use funcpipe::pipeline::build_schedule;
+use funcpipe::planner::PerfModel;
+use funcpipe::platform::network::{max_min_rates, BandwidthModel, Dir};
+use funcpipe::platform::PlatformSpec;
+use funcpipe::util::quickcheck::{check, check_with, Config, Gen, PairOf, UsizeRange};
+use funcpipe::util::rng::Rng;
+
+/// Generator for random valid plans on a merged zoo model.
+struct PlanGen {
+    l: usize,
+    n_tiers: usize,
+}
+
+impl Gen for PlanGen {
+    type Value = Plan;
+
+    fn generate(&self, rng: &mut Rng) -> Plan {
+        let n_cuts = rng.index(self.l.min(4));
+        let mut cuts: Vec<usize> = (0..n_cuts)
+            .map(|_| rng.index(self.l - 1))
+            .collect();
+        cuts.sort_unstable();
+        cuts.dedup();
+        let s = cuts.len() + 1;
+        let dp = [1usize, 2, 4][rng.index(3)];
+        Plan {
+            cuts,
+            dp,
+            stage_tiers: (0..s).map(|_| rng.index(self.n_tiers)).collect(),
+            n_micro_global: dp * (1 + rng.index(8)),
+        }
+    }
+
+    fn shrink(&self, v: &Plan) -> Vec<Plan> {
+        let mut out = Vec::new();
+        if !v.cuts.is_empty() {
+            let mut p = v.clone();
+            p.cuts.pop();
+            p.stage_tiers.pop();
+            out.push(p);
+        }
+        if v.dp > 1 {
+            let mut p = v.clone();
+            p.n_micro_global /= p.dp;
+            p.dp = 1;
+            out.push(p);
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_schedule_dag_is_valid_for_all_plans() {
+    let p = PlatformSpec::aws_lambda();
+    let m = merge_layers(&zoo::resnet101(&p), 8, MergeCriterion::Compute);
+    check_with(
+        Config { cases: 200, ..Config::default() },
+        &PlanGen { l: m.n_layers(), n_tiers: p.n_tiers() },
+        |plan| build_schedule(plan).validate().is_ok(),
+    );
+}
+
+#[test]
+fn prop_perf_model_outputs_positive_and_consistent() {
+    let p = PlatformSpec::aws_lambda();
+    let m = merge_layers(&zoo::bert_large(&p), 8, MergeCriterion::Compute);
+    let pm = PerfModel::new(&m, &p);
+    check_with(
+        Config { cases: 300, ..Config::default() },
+        &PlanGen { l: m.n_layers(), n_tiers: p.n_tiers() },
+        |plan| {
+            let perf = pm.evaluate(plan);
+            perf.t_iter > 0.0
+                && perf.c_iter > 0.0
+                && perf.t_iter.is_finite()
+                && (perf.compute_s + perf.flush_s + perf.sync_s - perf.t_iter)
+                    .abs()
+                    < 1e-6 * perf.t_iter
+        },
+    );
+}
+
+#[test]
+fn prop_more_bandwidth_never_hurts() {
+    let p1 = PlatformSpec::aws_lambda();
+    let p4 = PlatformSpec::aws_lambda().with_bandwidth_scale(4.0);
+    let m = merge_layers(&zoo::amoebanet_d18(&p1), 8, MergeCriterion::Compute);
+    let pm1 = PerfModel::new(&m, &p1);
+    let pm4 = PerfModel::new(&m, &p4);
+    check_with(
+        Config { cases: 200, ..Config::default() },
+        &PlanGen { l: m.n_layers(), n_tiers: p1.n_tiers() },
+        |plan| pm4.evaluate(plan).t_iter <= pm1.evaluate(plan).t_iter + 1e-9,
+    );
+}
+
+#[test]
+fn prop_split_ranges_partition_exactly() {
+    check(&PairOf(UsizeRange(1, 100_000), UsizeRange(1, 64)), |&(n, k)| {
+        let r = split_ranges(n, k);
+        r.len() == k
+            && r[0].0 == 0
+            && r[k - 1].1 == n
+            && r.windows(2).all(|w| w[0].1 == w[1].0)
+    });
+}
+
+/// Random flow sets: max-min allocation never exceeds any link capacity
+/// and gives every flow a positive rate.
+struct FlowsGen;
+
+impl Gen for FlowsGen {
+    type Value = (usize, Vec<(usize, Dir)>);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let n = 1 + rng.index(6);
+        let nf = 1 + rng.index(12);
+        let flows = (0..nf)
+            .map(|_| {
+                (
+                    rng.index(n),
+                    if rng.chance(0.5) { Dir::Up } else { Dir::Down },
+                )
+            })
+            .collect();
+        (n, flows)
+    }
+}
+
+#[test]
+fn prop_max_min_rates_respect_capacities() {
+    check_with(Config { cases: 300, ..Config::default() }, &FlowsGen, |(n, flows)| {
+        let model = BandwidthModel::uniform(*n, 100.0, 0.0);
+        let eps = 1e-6;
+        let fl: Vec<Vec<(usize, Dir)>> =
+            flows.iter().map(|&e| vec![e]).collect();
+        let rates = max_min_rates(&model, &fl);
+        if rates.iter().any(|&r| r <= 0.0) {
+            return false;
+        }
+        for w in 0..*n {
+            for dir in [Dir::Up, Dir::Down] {
+                let used: f64 = flows
+                    .iter()
+                    .zip(&rates)
+                    .filter(|((fw, fd), _)| *fw == w && *fd == dir)
+                    .map(|(_, r)| *r)
+                    .sum();
+                if used > 100.0 + eps {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_plan_memory_check_monotone_in_mu() {
+    // increasing μ can only increase memory demand (3b)
+    let p = PlatformSpec::aws_lambda();
+    let m = merge_layers(&zoo::amoebanet_d36(&p), 8, MergeCriterion::Compute);
+    check_with(
+        Config { cases: 200, ..Config::default() },
+        &PlanGen { l: m.n_layers(), n_tiers: p.n_tiers() },
+        |plan| {
+            let mut bigger = plan.clone();
+            bigger.n_micro_global = plan.n_micro_global * 2;
+            (0..plan.n_stages()).all(|s| {
+                plan.stage_mem_bytes(&m, &p, s)
+                    <= bigger.stage_mem_bytes(&m, &p, s)
+            })
+        },
+    );
+}
