@@ -5,13 +5,19 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use funcpipe::collective::sim::{simulate_pipelined_scatter_reduce, simulate_scatter_reduce};
-use funcpipe::collective::{pipelined::pipelined_scatter_reduce, scatter_reduce::scatter_reduce};
+use funcpipe::collective::sim::{
+    simulate_pipelined_scatter_reduce, simulate_scatter_reduce,
+};
+use funcpipe::collective::Chunking;
+use funcpipe::collective::{
+    pipelined::{pipelined_scatter_reduce, pipelined_scatter_reduce_chunked},
+    scatter_reduce::scatter_reduce,
+};
 use funcpipe::model::{merge_layers, zoo, MergeCriterion, Plan};
 use funcpipe::pipeline::{build_schedule, simulate_iteration};
 use funcpipe::planner::{CoOptimizer, PerfModel};
 use funcpipe::platform::network::BandwidthModel;
-use funcpipe::platform::{MemStore, ObjectStore, PlatformSpec};
+use funcpipe::platform::{MemStore, ObjectStore, PlatformSpec, ThrottledStore};
 
 fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     // warmup
@@ -27,7 +33,12 @@ fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) {
 fn main() {
     let p = PlatformSpec::aws_lambda();
     let m = merge_layers(&zoo::amoebanet_d36(&p), 8, MergeCriterion::Compute);
-    let plan = Plan { cuts: vec![2, 5], dp: 4, stage_tiers: vec![7, 7, 7], n_micro_global: 16 };
+    let plan = Plan {
+        cuts: vec![2, 5],
+        dp: 4,
+        stage_tiers: vec![7, 7, 7],
+        n_micro_global: 16,
+    };
     let pm = PerfModel::new(&m, &p);
 
     time("perf_model::evaluate", 20_000, || {
@@ -37,8 +48,12 @@ fn main() {
         std::hint::black_box(build_schedule(&plan));
     });
     time("pipeline DES iteration", 200, || {
-        std::hint::black_box(simulate_iteration(&m, &p, &plan,
-            funcpipe::collective::SyncAlgorithm::PipelinedScatterReduce));
+        std::hint::black_box(simulate_iteration(
+            &m,
+            &p,
+            &plan,
+            funcpipe::collective::SyncAlgorithm::PipelinedScatterReduce,
+        ));
     });
     time("co-optimizer solve (L=8, batch 64)", 5, || {
         let opt = CoOptimizer::new(&m, &p);
@@ -53,22 +68,118 @@ fn main() {
     });
 
     // real threaded collectives, 4 workers x 1M f32
-    for (name, pipelined) in [("real scatter-reduce 4x1M f32", false),
-                              ("real pipelined scatter-reduce 4x1M f32", true)] {
+    for (name, pipelined) in [
+        ("real scatter-reduce 4x1M f32", false),
+        ("real pipelined scatter-reduce 4x1M f32", true),
+    ] {
         time(name, 5, || {
             let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
-            let handles: Vec<_> = (0..4).map(|rank| {
-                let store = store.clone();
-                std::thread::spawn(move || {
-                    let mut g = vec![rank as f32; 1_000_000];
-                    if pipelined {
-                        pipelined_scatter_reduce(&store, "b", 0, rank, 4, &mut g, None, Duration::from_secs(30)).unwrap();
-                    } else {
-                        scatter_reduce(&store, "b", 0, rank, 4, &mut g, None, Duration::from_secs(30)).unwrap();
-                    }
+            let handles: Vec<_> = (0..4)
+                .map(|rank| {
+                    let store = store.clone();
+                    std::thread::spawn(move || {
+                        let mut g = vec![rank as f32; 1_000_000];
+                        let timeout = Duration::from_secs(30);
+                        if pipelined {
+                            pipelined_scatter_reduce(
+                                &store, "b", 0, rank, 4, &mut g, None, timeout,
+                            )
+                            .unwrap();
+                        } else {
+                            scatter_reduce(
+                                &store, "b", 0, rank, 4, &mut g, None, timeout,
+                            )
+                            .unwrap();
+                        }
+                    })
                 })
-            }).collect();
-            for h in handles { h.join().unwrap(); }
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
         });
     }
+
+    // chunked engine: same transfer, bounded store occupancy
+    for (name, chunk_kb, in_flight) in [
+        ("real chunked pipelined s-r 4x1M f32 (256KBx4)", 256usize, 4usize),
+        ("real chunked pipelined s-r 4x1M f32 (64KBx8)", 64, 8),
+    ] {
+        time(name, 5, || {
+            let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+            let chunking = Chunking::new(chunk_kb << 10, in_flight);
+            let handles: Vec<_> = (0..4)
+                .map(|rank| {
+                    let store = store.clone();
+                    std::thread::spawn(move || {
+                        let mut g = vec![rank as f32; 1_000_000];
+                        pipelined_scatter_reduce_chunked(
+                            &store,
+                            "bc",
+                            0,
+                            rank,
+                            4,
+                            &mut g,
+                            None,
+                            Duration::from_secs(30),
+                            chunking,
+                        )
+                        .unwrap();
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+
+    // chunked duplex on a throttled store: the wall-clock comparison the
+    // bounded-memory engine must win or tie (reported, not asserted)
+    let throttled = |label: &str, chunking: Option<Chunking>| {
+        let n = 4;
+        let len = 200_000; // 800 KB per worker
+        let bw = 40.0e6;
+        let inner: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let store: Arc<dyn ObjectStore> = Arc::new(
+                    ThrottledStore::new(
+                        inner.clone(),
+                        bw,
+                        bw,
+                        Duration::from_millis(1),
+                    ),
+                );
+                std::thread::spawn(move || {
+                    let mut g = vec![rank as f32; len];
+                    let timeout = Duration::from_secs(60);
+                    match chunking {
+                        Some(c) => pipelined_scatter_reduce_chunked(
+                            &store, "t", 0, rank, n, &mut g, None, timeout, c,
+                        )
+                        .unwrap(),
+                        None => pipelined_scatter_reduce(
+                            &store, "t", 0, rank, n, &mut g, None, timeout,
+                        )
+                        .unwrap(),
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        println!(
+            "{label:<44} {:>10.3} s wall   (peak store {} KB)",
+            t0.elapsed().as_secs_f64(),
+            inner.high_water_bytes() >> 10
+        );
+    };
+    throttled("throttled pipelined (unchunked)", None);
+    throttled(
+        "throttled pipelined chunked 64KBx4",
+        Some(Chunking::new(64 << 10, 4)),
+    );
 }

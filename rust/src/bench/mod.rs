@@ -255,22 +255,26 @@ pub fn fig7() {
 }
 
 /// Fig. 8: pipelined vs non-pipelined scatter-reduce as the data-parallel
-/// degree grows (D18, 3-stage plan) — training throughput and sync time.
+/// degree grows (D18, 3-stage plan) — training throughput and sync time,
+/// plus the chunked engine's model/flowsim columns (4 MB chunks).
 pub fn fig8() {
     let p = PlatformSpec::aws_lambda();
     let m = model_for("amoebanet-d18", &p, 6);
     // the recommended 3-stage shape from §5.5 (d starts at 2)
     let cuts = vec![1usize, 3];
     let tiers = vec![p.max_tier(); 3];
+    let chunk_bytes = 4usize << 20;
     let mut t = Table::new(
-        "Fig 8 — scatter-reduce: pipelined vs plain (D18, 3 stages)",
+        "Fig 8 — scatter-reduce: pipelined vs plain (D18, 3 stages; chunked = 4 MB flows)",
     )
     .header([
         "dp",
         "sync plain (model)",
         "sync piped (model)",
+        "sync piped-chunked (model)",
         "sync plain (flowsim)",
         "sync piped (flowsim)",
+        "sync piped-chunked (flowsim)",
         "sync cut",
         "throughput gain",
     ]);
@@ -284,8 +288,10 @@ pub fn fig8() {
         let pm_plain =
             PerfModel::new(&m, &p).with_sync(SyncAlgorithm::ScatterReduce);
         let pm_piped = PerfModel::new(&m, &p);
+        let pm_chunked = PerfModel::new(&m, &p).with_chunk_bytes(chunk_bytes);
         let perf_plain = pm_plain.evaluate(&plan);
         let perf_piped = pm_piped.evaluate(&plan);
+        let perf_chunked = pm_chunked.evaluate(&plan);
 
         // flow-level simulation of the biggest stage's sync
         let (lo, hi) = plan.stage_ranges(m.n_layers())[2];
@@ -296,13 +302,22 @@ pub fn fig8() {
             collective::sim::simulate_scatter_reduce(dp, grad, &net);
         let sim_piped =
             collective::sim::simulate_pipelined_scatter_reduce(dp, grad, &net);
+        let sim_chunked =
+            collective::sim::simulate_pipelined_scatter_reduce_chunked(
+                dp,
+                grad,
+                &net,
+                chunk_bytes as f64,
+            );
 
         t.row([
             dp.to_string(),
             secs(perf_plain.sync_s),
             secs(perf_piped.sync_s),
+            secs(perf_chunked.sync_s),
             secs(sim_plain),
             secs(sim_piped),
+            secs(sim_chunked),
             pct_change(perf_plain.sync_s, perf_piped.sync_s),
             // throughput gain = t_plain / t_piped
             speedup(perf_plain.t_iter, perf_piped.t_iter),

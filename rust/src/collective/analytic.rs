@@ -42,6 +42,37 @@ pub fn sync_time(
     gamma * grad_bytes / w_bps + delta * t_lat
 }
 
+/// Chunked synchronization time: the transfer term of eqs. (1)/(2) is
+/// unchanged (the same bytes cross the same links), but every per-phase
+/// storage operation becomes ⌈split/chunk⌉ serialized operations on its
+/// link, so the latency term multiplies by the per-split chunk count.
+/// `chunk_bytes == 0` (unchunked) reduces exactly to [`sync_time`].
+///
+/// This deliberately ignores the chunked engine's finer pipeline fill
+/// (chunk-level duplex lets downloads start one chunk — not one split —
+/// after the first upload), so it is a mild upper bound; the FlowSim
+/// chunked schedules model the fill exactly and sit at or below this
+/// value (see `collective_equiv.rs`).
+pub fn sync_time_chunked(
+    alg: SyncAlgorithm,
+    grad_bytes: f64,
+    n: usize,
+    w_bps: f64,
+    t_lat: f64,
+    chunk_bytes: usize,
+) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let (gamma, delta) = alg.gamma_delta(n);
+    let chunks_per_split = if chunk_bytes == 0 {
+        1.0
+    } else {
+        (grad_bytes / n as f64 / chunk_bytes as f64).ceil().max(1.0)
+    };
+    gamma * grad_bytes / w_bps + delta * t_lat * chunks_per_split
+}
+
 /// Server-side aggregation throughput: deserializing + merging each
 /// replica's gradients burdens the single VM (§5.2 "the server node in
 /// this centralized structure can be heavily burdened") — this is why
@@ -145,6 +176,47 @@ mod tests {
         assert!(cut(1024) > 0.33);
         assert!(cut(1024) < 0.334);
         assert!(cut(2) < cut(32));
+    }
+
+    #[test]
+    fn chunked_formula_reduces_to_unchunked() {
+        for alg in [
+            SyncAlgorithm::ScatterReduce,
+            SyncAlgorithm::PipelinedScatterReduce,
+        ] {
+            for n in [2usize, 8, 32] {
+                // chunk_bytes = 0 is the unchunked formula, exactly
+                let a = sync_time(alg, 280.0 * MB, n, 70.0 * MB, 0.04);
+                let b = sync_time_chunked(alg, 280.0 * MB, n, 70.0 * MB, 0.04, 0);
+                assert_eq!(a, b);
+                // at zero latency chunking costs nothing
+                let c = sync_time_chunked(alg, 280.0 * MB, n, 70.0 * MB, 0.0, 1 << 20);
+                let d = sync_time(alg, 280.0 * MB, n, 70.0 * MB, 0.0);
+                assert!((c - d).abs() < 1e-9 * d);
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_latency_overhead_grows_with_chunk_count() {
+        let t = |chunk: usize| {
+            sync_time_chunked(
+                SyncAlgorithm::PipelinedScatterReduce,
+                280.0 * MB,
+                8,
+                70.0 * MB,
+                0.04,
+                chunk,
+            )
+        };
+        // smaller chunks -> more per-op latency; unchunked is the floor
+        assert!(t(1 << 20) > t(0));
+        assert!(t(1 << 18) > t(1 << 20));
+        // transfer term dominates for sane chunk sizes: 4 MB chunks on a
+        // 35 MB split add (9-1) * delta * t_lat = 3.2 s against an 8 s
+        // transfer
+        let overhead = t(4 << 20) - t(0);
+        assert!(overhead > 0.0 && overhead < 4.0, "overhead {overhead}");
     }
 
     #[test]

@@ -1,0 +1,311 @@
+//! The multi-flow transfer engine: one persistent uploader thread and one
+//! persistent downloader thread per worker, shared by every collective
+//! call on a [`CollectiveCtx`](super::CollectiveCtx) and reused across
+//! rounds — the paper's duplex insight (§3.3) realized as a reusable flow
+//! pool instead of the original per-call `mpsc` + `thread::spawn`.
+//!
+//! * **Uploads** are queued on a bounded channel whose capacity equals
+//!   the in-flight window, so at most `in_flight` serialized chunks are
+//!   resident on the producer side at any time. A job may carry a
+//!   [`Gate`]: the uploader then first waits for the ack objects of an
+//!   earlier chunk (the sliding window that bounds the *store's*
+//!   occupancy) and deletes a broadcast chunk whose readers have all
+//!   acked.
+//! * **Downloads** are requested as ordered key streams; the downloader
+//!   prefetches up to `in_flight` chunks ahead of the consumer through a
+//!   bounded result channel.
+//!
+//! Both threads exit when the pool is dropped.
+
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::platform::ObjectStore;
+
+/// Window gate executed by the uploader *before* its `put`: wait until
+/// every listed ack object exists (consuming them), then optionally
+/// delete an earlier broadcast chunk whose readers have now all acked.
+pub(crate) struct Gate {
+    pub wait_acks: Vec<String>,
+    pub delete_after: Option<String>,
+    pub timeout: Duration,
+}
+
+/// One upload job: serialized chunk plus its optional window gate.
+pub(crate) struct PutJob {
+    pub key: String,
+    pub data: Vec<u8>,
+    pub gate: Option<Gate>,
+}
+
+enum UpJob {
+    Put(PutJob),
+    Flush(SyncSender<Result<()>>),
+}
+
+struct DownStream {
+    keys: Vec<String>,
+    timeout: Duration,
+    out: SyncSender<Result<Arc<Vec<u8>>>>,
+}
+
+/// The reusable per-worker flow pool.
+pub(crate) struct FlowPool {
+    up_tx: Option<SyncSender<UpJob>>,
+    down_tx: Option<SyncSender<DownStream>>,
+    uploader: Option<JoinHandle<()>>,
+    downloader: Option<JoinHandle<()>>,
+    in_flight: usize,
+}
+
+impl FlowPool {
+    pub fn new(store: Arc<dyn ObjectStore>, in_flight: usize) -> Self {
+        let in_flight = in_flight.max(1);
+        let (up_tx, up_rx) = mpsc::sync_channel::<UpJob>(in_flight);
+        let (down_tx, down_rx) = mpsc::sync_channel::<DownStream>(2);
+
+        let up_store = store.clone();
+        let uploader = std::thread::Builder::new()
+            .name("flow-uploader".into())
+            .spawn(move || {
+                let mut failed: Option<anyhow::Error> = None;
+                while let Ok(job) = up_rx.recv() {
+                    match job {
+                        UpJob::Put(put) => {
+                            if failed.is_some() {
+                                continue; // drain; error surfaces on flush
+                            }
+                            if let Err(e) = run_put(&up_store, put) {
+                                failed = Some(e);
+                            }
+                        }
+                        UpJob::Flush(reply) => {
+                            let res = match failed.take() {
+                                Some(e) => Err(e),
+                                None => Ok(()),
+                            };
+                            let _ = reply.send(res);
+                        }
+                    }
+                }
+            })
+            .expect("spawn uploader");
+
+        let downloader = std::thread::Builder::new()
+            .name("flow-downloader".into())
+            .spawn(move || {
+                while let Ok(stream) = down_rx.recv() {
+                    for key in &stream.keys {
+                        match store.get_blocking(key, stream.timeout) {
+                            Ok(bytes) => {
+                                if stream.out.send(Ok(bytes)).is_err() {
+                                    break; // consumer gone
+                                }
+                            }
+                            Err(e) => {
+                                let _ = stream.out.send(Err(
+                                    e.context(format!("downloading {key}")),
+                                ));
+                                break;
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawn downloader");
+
+        Self {
+            up_tx: Some(up_tx),
+            down_tx: Some(down_tx),
+            uploader: Some(uploader),
+            downloader: Some(downloader),
+            in_flight,
+        }
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Queue an upload, blocking if the window is full. Only safe when
+    /// the uploader cannot be gate-blocked on an ack *this* thread would
+    /// produce (plain phases; post-download tails).
+    pub fn put_blocking(&self, job: PutJob) -> Result<()> {
+        self.up_tx
+            .as_ref()
+            .expect("pool alive")
+            .send(UpJob::Put(job))
+            .map_err(|_| anyhow!("uploader thread gone"))
+    }
+
+    /// Non-blocking queue attempt; hands the job back when the window is
+    /// full so the caller can make download progress first.
+    pub fn try_put(&self, job: PutJob) -> std::result::Result<(), PutJob> {
+        match self
+            .up_tx
+            .as_ref()
+            .expect("pool alive")
+            .try_send(UpJob::Put(job))
+        {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(UpJob::Put(j))) => Err(j),
+            Err(TrySendError::Disconnected(UpJob::Put(j))) => Err(j),
+            Err(_) => unreachable!("only Put jobs are tried"),
+        }
+    }
+
+    /// Wait for every queued upload to finish; returns the first error.
+    pub fn flush(&self) -> Result<()> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.up_tx
+            .as_ref()
+            .expect("pool alive")
+            .send(UpJob::Flush(tx))
+            .map_err(|_| anyhow!("uploader thread gone"))?;
+        rx.recv().context("uploader thread gone")?
+    }
+
+    /// Start an ordered download stream; chunks arrive on the returned
+    /// receiver with an `in_flight`-deep prefetch window.
+    pub fn stream(
+        &self,
+        keys: Vec<String>,
+        timeout: Duration,
+    ) -> Receiver<Result<Arc<Vec<u8>>>> {
+        let (tx, rx) = mpsc::sync_channel(self.in_flight);
+        let _ = self
+            .down_tx
+            .as_ref()
+            .expect("pool alive")
+            .send(DownStream { keys, timeout, out: tx });
+        rx
+    }
+}
+
+fn run_put(store: &Arc<dyn ObjectStore>, put: PutJob) -> Result<()> {
+    if let Some(gate) = put.gate {
+        for ack in &gate.wait_acks {
+            store
+                .get_blocking(ack, gate.timeout)
+                .with_context(|| format!("window gate on {ack}"))?;
+            store.delete(ack);
+        }
+        if let Some(spent) = &gate.delete_after {
+            store.delete(spent);
+        }
+    }
+    store.put(&put.key, put.data).context("chunk upload")
+}
+
+impl Drop for FlowPool {
+    fn drop(&mut self) {
+        // closing the channels ends both loops
+        drop(self.up_tx.take());
+        drop(self.down_tx.take());
+        if let Some(h) = self.uploader.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.downloader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::MemStore;
+
+    fn mem() -> Arc<dyn ObjectStore> {
+        Arc::new(MemStore::new())
+    }
+
+    #[test]
+    fn uploads_land_and_flush_reports_ok() {
+        let store = mem();
+        let pool = FlowPool::new(store.clone(), 2);
+        for i in 0..5 {
+            pool.put_blocking(PutJob {
+                key: format!("k/{i}"),
+                data: vec![i as u8; 3],
+                gate: None,
+            })
+            .unwrap();
+        }
+        pool.flush().unwrap();
+        assert_eq!(store.list("k/").len(), 5);
+    }
+
+    #[test]
+    fn stream_preserves_order() {
+        let store = mem();
+        let pool = FlowPool::new(store.clone(), 2);
+        for i in 0..6 {
+            store.put(&format!("s/{i}"), vec![i as u8]).unwrap();
+        }
+        let keys: Vec<String> = (0..6).map(|i| format!("s/{i}")).collect();
+        let rx = pool.stream(keys, Duration::from_secs(5));
+        for i in 0..6 {
+            let b = rx.recv().unwrap().unwrap();
+            assert_eq!(*b, vec![i as u8]);
+        }
+    }
+
+    #[test]
+    fn gate_blocks_until_ack_exists() {
+        let store = mem();
+        let pool = FlowPool::new(store.clone(), 1);
+        pool.put_blocking(PutJob {
+            key: "gated".into(),
+            data: vec![1],
+            gate: Some(Gate {
+                wait_acks: vec!["ack/0".into()],
+                delete_after: Some("old-chunk".into()),
+                timeout: Duration::from_secs(5),
+            }),
+        })
+        .unwrap();
+        store.put("old-chunk", vec![9, 9]).unwrap();
+        assert!(store.get("gated").is_none(), "gate should hold the put");
+        store.put("ack/0", Vec::new()).unwrap();
+        pool.flush().unwrap();
+        assert!(store.get("gated").is_some());
+        assert!(store.get("ack/0").is_none(), "ack consumed");
+        assert!(store.get("old-chunk").is_none(), "spent chunk deleted");
+    }
+
+    #[test]
+    fn upload_errors_surface_on_flush() {
+        let store = mem();
+        let pool = FlowPool::new(store.clone(), 1);
+        pool.put_blocking(PutJob {
+            key: "x".into(),
+            data: vec![],
+            gate: Some(Gate {
+                wait_acks: vec!["never".into()],
+                delete_after: None,
+                timeout: Duration::from_millis(30),
+            }),
+        })
+        .unwrap();
+        assert!(pool.flush().is_err());
+        // pool stays usable after an error
+        pool.put_blocking(PutJob { key: "y".into(), data: vec![1], gate: None })
+            .unwrap();
+        pool.flush().unwrap();
+        assert!(store.get("y").is_some());
+    }
+
+    #[test]
+    fn stream_propagates_timeout_error() {
+        let store = mem();
+        let pool = FlowPool::new(store, 1);
+        let rx =
+            pool.stream(vec!["missing".into()], Duration::from_millis(30));
+        assert!(rx.recv().unwrap().is_err());
+    }
+}

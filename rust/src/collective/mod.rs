@@ -5,25 +5,67 @@
 //! synchronization algorithms in three mutually-validating forms:
 //!
 //! * **analytic** — the closed-form times of eqs. (1)/(2) used inside the
-//!   planner's performance model;
+//!   planner's performance model, plus chunked variants that account for
+//!   the per-chunk storage-latency overhead;
 //! * **simulated** — flow schedules on the max-min-fair [`FlowSim`]
-//!   network, used by Fig. 8 / Table 3 reproductions;
-//! * **real** — threaded implementations over an [`ObjectStore`] that move
-//!   actual `f32` gradients, used by the end-to-end trainer.
+//!   network (chunked and unchunked), used by Fig. 8 / Table 3
+//!   reproductions;
+//! * **real** — the unified engine below, which moves actual `f32`
+//!   gradients through an [`ObjectStore`] and is used by the end-to-end
+//!   trainer.
 //!
-//! The three agree by construction and by test (`collective_equiv.rs`).
+//! # The unified engine
+//!
+//! Every real algorithm implements the [`Collective`] trait and runs on a
+//! shared [`CollectiveCtx`]: the store handle, the `(group, round)` key
+//! namespace, the merge operator and the [`Chunking`] policy. Transfers go
+//! through a per-worker [`flow::FlowPool`] — one persistent uploader and
+//! one persistent downloader thread reused across rounds (replacing the
+//! per-call `mpsc` + `thread::spawn` of the original implementation), so
+//! uplink and downlink genuinely overlap just as in the flow model.
+//!
+//! With chunking enabled, gradients are split into fixed-size chunks that
+//! are uploaded, downloaded and merged as independent flows. Consumers
+//! delete single-reader chunks on merge and post tiny ack objects; the
+//! uploader window-gates chunk `q` on the ack of chunk `q − in_flight`,
+//! so at most `in_flight` un-consumed chunks per worker exist in storage
+//! at any instant. That bounds both the worker's resident serialization
+//! memory and the store's high-water mark by
+//! `chunks_in_flight × chunk_bytes` (× `n` workers store-side) instead of
+//! the full gradient — see `ObjectStore::high_water_bytes`.
+//!
+//! The three forms agree by construction and by test
+//! (`collective_equiv.rs`).
 //!
 //! [`FlowSim`]: crate::platform::FlowSim
 //! [`ObjectStore`]: crate::platform::ObjectStore
 
 pub mod analytic;
+pub mod flow;
 pub mod parameter_server;
 pub mod pipelined;
 pub mod scatter_reduce;
 pub mod sendrecv;
 pub mod sim;
 
-pub use analytic::{ps_sync_time, sync_time, SyncAlgorithm};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::platform::ObjectStore;
+
+pub use analytic::{
+    ps_sync_time, sync_time, sync_time_chunked, SyncAlgorithm,
+};
+
+/// Merge operator: `acc += delta`. Injected so the trainer can route the
+/// reduction through the AOT `merge2` executable (L1 Pallas kernel).
+pub type MergeFn<'a> = dyn Fn(&mut [f32], &[f32]) + 'a;
+
+pub(crate) fn native_merge(acc: &mut [f32], delta: &[f32]) {
+    add_assign(acc, delta);
+}
 
 /// Serialize f32 gradients little-endian (the wire format of every
 /// storage object; matches the artifacts' raw `.f32` convention).
@@ -67,6 +109,245 @@ pub fn add_assign(acc: &mut [f32], delta: &[f32]) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Chunking policy
+// ---------------------------------------------------------------------------
+
+/// How a gradient split is cut into independently-flowing chunks.
+///
+/// `chunk_bytes == 0` disables chunking: each split travels as one object
+/// and no ack/window machinery runs (the original behaviour). Otherwise
+/// each split is cut into ⌈split/chunk⌉ chunks and at most `in_flight`
+/// un-consumed chunks per worker exist at any time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chunking {
+    /// Chunk size in bytes (f32-aligned internally); 0 = unchunked.
+    pub chunk_bytes: usize,
+    /// Window of in-flight (uploaded but un-consumed) chunks per worker.
+    pub in_flight: usize,
+}
+
+impl Chunking {
+    /// Unchunked (one flow per split, no windows).
+    pub const NONE: Chunking = Chunking { chunk_bytes: 0, in_flight: 4 };
+
+    pub fn new(chunk_bytes: usize, in_flight: usize) -> Self {
+        Self { chunk_bytes, in_flight: in_flight.max(1) }
+    }
+
+    pub fn is_chunked(&self) -> bool {
+        self.chunk_bytes > 0
+    }
+
+    /// Elements per chunk; `None` = whole split in one flow.
+    pub fn chunk_elems(&self) -> Option<usize> {
+        self.is_chunked().then_some((self.chunk_bytes / 4).max(1))
+    }
+
+    /// Number of chunks covering `elems` elements (0 for an empty split).
+    pub fn chunks_in(&self, elems: usize) -> usize {
+        if elems == 0 {
+            return 0;
+        }
+        match self.chunk_elems() {
+            None => 1,
+            Some(ce) => elems.div_ceil(ce),
+        }
+    }
+}
+
+impl Default for Chunking {
+    fn default() -> Self {
+        Chunking::NONE
+    }
+}
+
+/// Absolute element ranges of the chunks covering `[lo, hi)`.
+pub fn chunk_ranges(
+    lo: usize,
+    hi: usize,
+    chunk_elems: Option<usize>,
+) -> Vec<(usize, usize)> {
+    if hi <= lo {
+        return Vec::new();
+    }
+    match chunk_elems {
+        None => vec![(lo, hi)],
+        Some(ce) => {
+            let ce = ce.max(1);
+            (lo..hi)
+                .step_by(ce)
+                .map(|s| (s, (s + ce).min(hi)))
+                .collect()
+        }
+    }
+}
+
+/// Per-split chunk layout shared by producers and consumers of one
+/// all-reduce round — both sides derive identical sequence numbers from
+/// it, which is what lets consumers name the ack objects the producer's
+/// window gate waits for.
+pub(crate) struct ChunkPlan {
+    /// Absolute `(lo, hi)` element ranges of every chunk, per split.
+    pub chunks: Vec<Vec<(usize, usize)>>,
+}
+
+impl ChunkPlan {
+    pub fn new(ranges: &[(usize, usize)], chunking: &Chunking) -> Self {
+        let chunks = ranges
+            .iter()
+            .map(|&(lo, hi)| chunk_ranges(lo, hi, chunking.chunk_elems()))
+            .collect();
+        Self { chunks }
+    }
+
+    pub fn count(&self, split: usize) -> usize {
+        self.chunks[split].len()
+    }
+
+    /// Producer `p` uploads splits `(p+1)%n, (p+2)%n, …` in step order
+    /// during the reduce phase; sequence number of the first chunk of
+    /// `split` within that order.
+    pub fn reduce_seq_base(&self, producer: usize, split: usize, n: usize) -> usize {
+        let k = (split + n - producer) % n; // step index 1..n-1
+        debug_assert!(k >= 1 && k < n);
+        (1..k)
+            .map(|j| self.count((producer + j) % n))
+            .sum()
+    }
+
+    /// Total reduce-phase chunks producer `p` uploads (= all splits but
+    /// its own); phase-3 sequence numbers start here.
+    pub fn total_reduce(&self, producer: usize, n: usize) -> usize {
+        (0..n).filter(|&s| s != producer).map(|s| self.count(s)).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Key namespace
+// ---------------------------------------------------------------------------
+
+pub(crate) fn done_key(group: &str, round: u64, rank: usize) -> String {
+    format!("{group}/r{round}/done/f{rank}")
+}
+
+pub(crate) fn ack_key(
+    group: &str,
+    round: u64,
+    producer: usize,
+    seq: usize,
+    consumer: usize,
+) -> String {
+    format!("{group}/r{round}/ack/f{producer}/q{seq}/d{consumer}")
+}
+
+/// Merged-split (all-gather) chunk key — shared by both scatter-reduce
+/// variants; their reduce phases use algorithm-private prefixes.
+pub(crate) fn merged_chunk_key(
+    group: &str,
+    round: u64,
+    split: usize,
+    chunk: usize,
+) -> String {
+    format!("{group}/r{round}/ag/s{split}/c{chunk}")
+}
+
+// ---------------------------------------------------------------------------
+// The unified collective engine
+// ---------------------------------------------------------------------------
+
+/// Shared context of every collective call: the store handle, key
+/// namespace, timeout, chunking policy, and the reusable flow pool whose
+/// uploader/downloader threads persist across rounds.
+pub struct CollectiveCtx {
+    pub store: Arc<dyn ObjectStore>,
+    pub group: String,
+    pub rank: usize,
+    pub n: usize,
+    pub timeout: Duration,
+    pub chunking: Chunking,
+    pool: flow::FlowPool,
+}
+
+impl CollectiveCtx {
+    pub fn new(
+        store: Arc<dyn ObjectStore>,
+        group: impl Into<String>,
+        rank: usize,
+        n: usize,
+        timeout: Duration,
+    ) -> Self {
+        assert!(n >= 1 && rank < n, "rank {rank} out of range for n={n}");
+        let pool = flow::FlowPool::new(store.clone(), Chunking::NONE.in_flight);
+        Self {
+            store,
+            group: group.into(),
+            rank,
+            n,
+            timeout,
+            chunking: Chunking::NONE,
+            pool,
+        }
+    }
+
+    /// Enable chunked streaming. The pool is rebuilt only when the
+    /// queue depth actually changes, so the common wrapper path spawns
+    /// one uploader/downloader pair, not two.
+    pub fn with_chunking(mut self, chunking: Chunking) -> Self {
+        self.chunking = chunking;
+        if chunking.in_flight != self.pool.in_flight() {
+            self.pool =
+                flow::FlowPool::new(self.store.clone(), chunking.in_flight);
+        }
+        self
+    }
+
+    pub(crate) fn pool(&self) -> &flow::FlowPool {
+        &self.pool
+    }
+
+    /// Run one all-reduce round with the algorithm selected by `alg`. On
+    /// return `grads` holds the elementwise sum over all `n` workers.
+    pub fn all_reduce(
+        &self,
+        alg: SyncAlgorithm,
+        round: u64,
+        grads: &mut [f32],
+        merge: Option<&MergeFn>,
+    ) -> Result<()> {
+        let c: &dyn Collective = match alg {
+            SyncAlgorithm::ScatterReduce => &scatter_reduce::PlainScatterReduce,
+            SyncAlgorithm::PipelinedScatterReduce => {
+                &pipelined::PipelinedScatterReduce
+            }
+        };
+        c.all_reduce(self, round, grads, merge)
+            .with_context(|| format!("{} round {round}", c.name()))
+    }
+
+    /// Publish this rank's end-of-round marker (the cleanup barrier).
+    pub(crate) fn mark_done(&self, round: u64) -> Result<()> {
+        self.store
+            .put(&done_key(&self.group, round, self.rank), Vec::new())
+            .context("done marker")
+    }
+}
+
+/// One storage-relayed all-reduce algorithm over the unified engine.
+pub trait Collective {
+    fn name(&self) -> &'static str;
+
+    /// Blocking; on return every rank's `grads` holds the elementwise sum
+    /// across the `ctx.n` participants of `(ctx.group, round)`.
+    fn all_reduce(
+        &self,
+        ctx: &CollectiveCtx,
+        round: u64,
+        grads: &mut [f32],
+        merge: Option<&MergeFn>,
+    ) -> Result<()>;
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,5 +382,51 @@ mod tests {
         let mut a = vec![1.0f32, 2.0];
         add_assign(&mut a, &[0.5, -2.0]);
         assert_eq!(a, vec![1.5, 0.0]);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_and_bound() {
+        let r = chunk_ranges(10, 107, Some(16));
+        assert_eq!(r.first().unwrap().0, 10);
+        assert_eq!(r.last().unwrap().1, 107);
+        for w in r.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+        assert!(r.iter().all(|(a, b)| b - a <= 16));
+        assert_eq!(chunk_ranges(5, 5, Some(16)), Vec::new());
+        assert_eq!(chunk_ranges(0, 40, None), vec![(0, 40)]);
+    }
+
+    #[test]
+    fn chunking_counts() {
+        let c = Chunking::new(64, 4); // 16 elems per chunk
+        assert_eq!(c.chunk_elems(), Some(16));
+        assert_eq!(c.chunks_in(0), 0);
+        assert_eq!(c.chunks_in(1), 1);
+        assert_eq!(c.chunks_in(16), 1);
+        assert_eq!(c.chunks_in(17), 2);
+        assert_eq!(Chunking::NONE.chunks_in(1_000_000), 1);
+        assert_eq!(Chunking::NONE.chunks_in(0), 0);
+    }
+
+    #[test]
+    fn chunk_plan_sequences_are_consistent() {
+        let n = 4;
+        let ranges = split_ranges(103, n);
+        let plan = ChunkPlan::new(&ranges, &Chunking::new(40, 2)); // 10 elems
+        for p in 0..n {
+            // producer p's reduce sequence covers each foreign split once,
+            // in step order, with bases that tile [0, total)
+            let mut seen = vec![false; plan.total_reduce(p, n)];
+            for k in 1..n {
+                let split = (p + k) % n;
+                let base = plan.reduce_seq_base(p, split, n);
+                for c in 0..plan.count(split) {
+                    assert!(!seen[base + c]);
+                    seen[base + c] = true;
+                }
+            }
+            assert!(seen.iter().all(|&x| x));
+        }
     }
 }

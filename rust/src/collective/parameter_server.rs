@@ -2,22 +2,31 @@
 //! of the HybridPS baseline (Cirrus-style, §2.2/§5.1). A dedicated server
 //! thread (standing in for the VM) aggregates worker gradients and
 //! publishes the merged result.
+//!
+//! The PS topology is asymmetric (workers push, one server merges), so it
+//! does not implement the symmetric [`Collective`](super::Collective)
+//! trait; it shares the engine's [`Chunking`] policy instead: with
+//! chunking enabled, pushes and the published result travel as
+//! independent chunk objects and the server merges/consumes chunk-wise,
+//! so its resident overhead beyond the accumulator is one chunk.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::scatter_reduce::{native_merge, MergeFn};
-use super::{bytes_to_f32s, f32s_to_bytes};
+use super::{
+    bytes_to_f32s, chunk_ranges, f32s_to_bytes, native_merge, Chunking,
+    MergeFn,
+};
 use crate::platform::ObjectStore;
 
-fn push_key(group: &str, round: u64, from: usize) -> String {
-    format!("{group}/ps/r{round}/push/f{from}")
+fn push_key(group: &str, round: u64, from: usize, chunk: usize) -> String {
+    format!("{group}/ps/r{round}/push/f{from}/c{chunk}")
 }
 
-fn merged_key(group: &str, round: u64) -> String {
-    format!("{group}/ps/r{round}/merged")
+fn merged_key(group: &str, round: u64, chunk: usize) -> String {
+    format!("{group}/ps/r{round}/merged/c{chunk}")
 }
 
 /// Worker side: push local gradients, wait for the merged result.
@@ -29,13 +38,39 @@ pub fn ps_sync_worker(
     grads: &mut [f32],
     timeout: Duration,
 ) -> Result<()> {
-    store
-        .put(&push_key(group, round, rank), f32s_to_bytes(grads))
-        .context("ps push")?;
-    let merged = store
-        .get_blocking(&merged_key(group, round), timeout)
-        .context("ps pull")?;
-    grads.copy_from_slice(&bytes_to_f32s(&merged));
+    ps_sync_worker_chunked(
+        store,
+        group,
+        round,
+        rank,
+        grads,
+        timeout,
+        Chunking::NONE,
+    )
+}
+
+/// Chunked worker push/pull. `chunking` must match the server's.
+pub fn ps_sync_worker_chunked(
+    store: &Arc<dyn ObjectStore>,
+    group: &str,
+    round: u64,
+    rank: usize,
+    grads: &mut [f32],
+    timeout: Duration,
+    chunking: Chunking,
+) -> Result<()> {
+    let chunks = chunk_ranges(0, grads.len(), chunking.chunk_elems());
+    for (c, &(lo, hi)) in chunks.iter().enumerate() {
+        store
+            .put(&push_key(group, round, rank, c), f32s_to_bytes(&grads[lo..hi]))
+            .context("ps push")?;
+    }
+    for (c, &(lo, hi)) in chunks.iter().enumerate() {
+        let merged = store
+            .get_blocking(&merged_key(group, round, c), timeout)
+            .context("ps pull")?;
+        grads[lo..hi].copy_from_slice(&bytes_to_f32s(&merged));
+    }
     Ok(())
 }
 
@@ -50,19 +85,49 @@ pub fn ps_sync_server(
     merge: Option<&MergeFn>,
     timeout: Duration,
 ) -> Result<Vec<f32>> {
+    ps_sync_server_chunked(
+        store,
+        group,
+        round,
+        n,
+        len,
+        merge,
+        timeout,
+        Chunking::NONE,
+    )
+}
+
+/// Chunked server: merges each push chunk-wise (consuming the pushes) and
+/// publishes the merged result chunk-wise, so chunks become available to
+/// workers as soon as every replica's copy of that range has arrived.
+#[allow(clippy::too_many_arguments)]
+pub fn ps_sync_server_chunked(
+    store: &Arc<dyn ObjectStore>,
+    group: &str,
+    round: u64,
+    n: usize,
+    len: usize,
+    merge: Option<&MergeFn>,
+    timeout: Duration,
+    chunking: Chunking,
+) -> Result<Vec<f32>> {
     let native: &MergeFn = &native_merge;
     let merge = merge.unwrap_or(native);
+    let chunks = chunk_ranges(0, len, chunking.chunk_elems());
     let mut acc = vec![0.0f32; len];
-    for rank in 0..n {
-        let bytes = store
-            .get_blocking(&push_key(group, round, rank), timeout)
-            .context("ps gather")?;
-        merge(&mut acc, &bytes_to_f32s(&bytes));
-        store.delete(&push_key(group, round, rank));
+    for (c, &(lo, hi)) in chunks.iter().enumerate() {
+        for rank in 0..n {
+            let key = push_key(group, round, rank, c);
+            let bytes = store
+                .get_blocking(&key, timeout)
+                .context("ps gather")?;
+            merge(&mut acc[lo..hi], &bytes_to_f32s(&bytes));
+            store.delete(&key);
+        }
+        store
+            .put(&merged_key(group, round, c), f32s_to_bytes(&acc[lo..hi]))
+            .context("ps publish")?;
     }
-    store
-        .put(&merged_key(group, round), f32s_to_bytes(&acc))
-        .context("ps publish")?;
     Ok(acc)
 }
 
@@ -71,15 +136,22 @@ mod tests {
     use super::*;
     use crate::platform::MemStore;
 
-    #[test]
-    fn ps_roundtrip_sums_gradients() {
-        let n = 5;
-        let len = 33;
+    fn roundtrip(n: usize, len: usize, chunking: Chunking) -> Vec<Vec<f32>> {
         let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
         let server = {
             let store = store.clone();
             std::thread::spawn(move || {
-                ps_sync_server(&store, "g", 0, n, len, None, Duration::from_secs(10)).unwrap()
+                ps_sync_server_chunked(
+                    &store,
+                    "g",
+                    0,
+                    n,
+                    len,
+                    None,
+                    Duration::from_secs(10),
+                    chunking,
+                )
+                .unwrap()
             })
         };
         let mut workers = Vec::new();
@@ -87,16 +159,44 @@ mod tests {
             let store = store.clone();
             workers.push(std::thread::spawn(move || {
                 let mut g = vec![(rank + 1) as f32; len];
-                ps_sync_worker(&store, "g", 0, rank, &mut g, Duration::from_secs(10)).unwrap();
+                ps_sync_worker_chunked(
+                    &store,
+                    "g",
+                    0,
+                    rank,
+                    &mut g,
+                    Duration::from_secs(10),
+                    chunking,
+                )
+                .unwrap();
                 g
             }));
         }
-        let merged = server.join().unwrap();
-        let want = (1..=n).sum::<usize>() as f32;
-        assert!(merged.iter().all(|&x| (x - want).abs() < 1e-5));
+        let mut out = vec![server.join().unwrap()];
         for w in workers {
-            let g = w.join().unwrap();
-            assert!(g.iter().all(|&x| (x - want).abs() < 1e-5));
+            out.push(w.join().unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn ps_roundtrip_sums_gradients() {
+        let n = 5;
+        let len = 33;
+        let want = (1..=n).sum::<usize>() as f32;
+        for res in roundtrip(n, len, Chunking::NONE) {
+            assert!(res.iter().all(|&x| (x - want).abs() < 1e-5));
+        }
+    }
+
+    #[test]
+    fn chunked_ps_matches_unchunked() {
+        let n = 3;
+        let len = 103; // not chunk-aligned
+        let plain = roundtrip(n, len, Chunking::NONE);
+        for chunk_bytes in [16usize, 64, 1024] {
+            let chunked = roundtrip(n, len, Chunking::new(chunk_bytes, 2));
+            assert_eq!(plain, chunked, "chunk={chunk_bytes}");
         }
     }
 

@@ -1,5 +1,5 @@
 //! FuncPipe's **pipelined scatter-reduce** (§3.3, Fig. 4(b)) — the paper's
-//! second contribution, real implementation over an [`ObjectStore`].
+//! second contribution, rebuilt on the unified chunked engine.
 //!
 //! The 3-phase algorithm wastes bandwidth because phase-1 uploads and
 //! phase-2 downloads are serial; this version runs them in duplex:
@@ -14,27 +14,282 @@
 //! the all-reduce. Transfer time drops from `3·s/w − 2s/(n·w)` to `2·s/w`
 //! — eq. (1) vs eq. (2).
 //!
-//! Duplex is realized with a dedicated uploader thread per worker: uploads
-//! of steps 1..n−1 are queued in order while the caller thread performs
-//! the (blocking) downloads and merges, so uplink and downlink genuinely
-//! overlap in the real path just as in the flow model.
+//! Duplex runs on the context's persistent [`flow::FlowPool`]: uploads
+//! stream chunk-wise through the uploader thread while this thread merges
+//! the downloads the downloader prefetches, so uplink and downlink
+//! genuinely overlap in the real path just as in the flow model — now at
+//! *chunk* granularity.
+//!
+//! With chunking enabled the engine also bounds storage occupancy: every
+//! consumed chunk is deleted (reduce phase) or ack-counted and deleted by
+//! its producer (merged-split broadcast), and the uploader window-gates
+//! chunk `q` on the consumption of chunk `q − in_flight`, capping the
+//! store's high-water mark at `n × in_flight × chunk_bytes` plus epsilon.
+//!
+//! [`flow::FlowPool`]: super::flow::FlowPool
 
-use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::scatter_reduce::{native_merge, MergeFn};
-use super::{bytes_to_f32s, f32s_to_bytes, split_ranges};
+use super::flow::{Gate, PutJob};
+use super::{
+    ack_key, bytes_to_f32s, f32s_to_bytes, merged_chunk_key, native_merge,
+    split_ranges, ChunkPlan, Chunking, Collective, CollectiveCtx, MergeFn,
+};
 use crate::platform::ObjectStore;
 
-fn key(group: &str, round: u64, split: usize, from: usize) -> String {
-    format!("{group}/r{round}/ps{split}/f{from}")
+pub(crate) fn reduce_key(
+    group: &str,
+    round: u64,
+    split: usize,
+    from: usize,
+    chunk: usize,
+) -> String {
+    format!("{group}/r{round}/ps/s{split}/f{from}/c{chunk}")
 }
 
-fn merged_key(group: &str, round: u64, split: usize) -> String {
-    format!("{group}/r{round}/m{split}")
+/// What one planned upload carries and who must acknowledge it.
+struct Planned {
+    key: String,
+    /// Element range, absolute in `grads` coords (reduce phase) or
+    /// relative to the merged buffer (broadcast phase).
+    lo: usize,
+    hi: usize,
+    /// Consumer ranks whose acks close this chunk's window slot.
+    ackers: Vec<usize>,
+    /// Broadcast chunks are deleted by the producer once all acks are in;
+    /// reduce chunks are deleted by their single consumer.
+    broadcast: bool,
+}
+
+/// One expected incoming chunk of a download stream.
+struct Incoming {
+    key: String,
+    lo: usize,
+    hi: usize,
+    producer: usize,
+    seq: usize,
+}
+
+/// FuncPipe's pipelined scatter-reduce on the unified engine.
+pub struct PipelinedScatterReduce;
+
+impl Collective for PipelinedScatterReduce {
+    fn name(&self) -> &'static str {
+        "pipelined-scatter-reduce"
+    }
+
+    fn all_reduce(
+        &self,
+        ctx: &CollectiveCtx,
+        round: u64,
+        grads: &mut [f32],
+        merge: Option<&MergeFn>,
+    ) -> Result<()> {
+        let (n, rank) = (ctx.n, ctx.rank);
+        if n == 1 {
+            return Ok(());
+        }
+        let native: &MergeFn = &native_merge;
+        let merge = merge.unwrap_or(native);
+        let ranges = split_ranges(grads.len(), n);
+        let plan = ChunkPlan::new(&ranges, &ctx.chunking);
+        let windowed = ctx.chunking.is_chunked();
+        let window = ctx.pool().in_flight();
+        let group = ctx.group.as_str();
+        let pool = ctx.pool();
+        let (mylo, myhi) = ranges[rank];
+
+        // ---- the full upload plan: reduce steps, then the broadcast ----
+        let mut planned: Vec<Planned> = Vec::new();
+        for k in 1..n {
+            let split = (rank + k) % n;
+            for (c, &(lo, hi)) in plan.chunks[split].iter().enumerate() {
+                planned.push(Planned {
+                    key: reduce_key(group, round, split, rank, c),
+                    lo,
+                    hi,
+                    ackers: vec![split],
+                    broadcast: false,
+                });
+            }
+        }
+        let n_reduce = planned.len();
+        debug_assert_eq!(n_reduce, plan.total_reduce(rank, n));
+        for (c, &(lo, hi)) in plan.chunks[rank].iter().enumerate() {
+            planned.push(Planned {
+                key: merged_chunk_key(group, round, rank, c),
+                lo: lo - mylo,
+                hi: hi - mylo,
+                ackers: (0..n).filter(|&d| d != rank).collect(),
+                broadcast: true,
+            });
+        }
+
+        // window gate for planned[q]: wait until chunk q-W was consumed
+        let gate_for = |q: usize| -> Option<Gate> {
+            if !windowed || q < window {
+                return None;
+            }
+            let p = &planned[q - window];
+            Some(Gate {
+                wait_acks: p
+                    .ackers
+                    .iter()
+                    .map(|&d| ack_key(group, round, rank, q - window, d))
+                    .collect(),
+                delete_after: p.broadcast.then(|| p.key.clone()),
+                timeout: ctx.timeout,
+            })
+        };
+        // one planned upload, serialized lazily from `data` (the gradient
+        // during the reduce phase, the merged buffer during broadcast)
+        let job_for = |q: usize, data: &[f32]| -> PutJob {
+            let p = &planned[q];
+            PutJob {
+                key: p.key.clone(),
+                data: f32s_to_bytes(&data[p.lo..p.hi]),
+                gate: gate_for(q),
+            }
+        };
+        // fill the upload window without ever blocking: the acks a gate
+        // waits on may be ours to produce via the download loop
+        let fill = |data: &[f32],
+                    limit: usize,
+                    next_put: &mut usize,
+                    parked: &mut Option<PutJob>| {
+            loop {
+                let job = match parked.take() {
+                    Some(j) => j,
+                    None if *next_put < limit => {
+                        let j = job_for(*next_put, data);
+                        *next_put += 1;
+                        j
+                    }
+                    None => return,
+                };
+                if let Err(j) = pool.try_put(job) {
+                    *parked = Some(j);
+                    return;
+                }
+            }
+        };
+        // after our own downloads are done, blocking is safe: the gates'
+        // acks come from other, still-active consumers
+        let drain = |data: &[f32],
+                     limit: usize,
+                     next_put: &mut usize,
+                     parked: &mut Option<PutJob>|
+         -> Result<()> {
+            if let Some(j) = parked.take() {
+                pool.put_blocking(j)?;
+            }
+            while *next_put < limit {
+                pool.put_blocking(job_for(*next_put, data))?;
+                *next_put += 1;
+            }
+            Ok(())
+        };
+
+        // ---- reduce phase: stream uploads while merging our own split --
+        let mut merged = grads[mylo..myhi].to_vec();
+        let mut incoming: Vec<Incoming> = Vec::new();
+        for k in 2..=n {
+            let src = (rank + n - (k - 1)) % n;
+            let base = plan.reduce_seq_base(src, rank, n);
+            for (c, &(lo, hi)) in plan.chunks[rank].iter().enumerate() {
+                incoming.push(Incoming {
+                    key: reduce_key(group, round, rank, src, c),
+                    lo,
+                    hi,
+                    producer: src,
+                    seq: base + c,
+                });
+            }
+        }
+        let rx = pool.stream(
+            incoming.iter().map(|i| i.key.clone()).collect(),
+            ctx.timeout,
+        );
+        let mut next_put = 0usize;
+        let mut parked: Option<PutJob> = None;
+        for inc in &incoming {
+            fill(grads, n_reduce, &mut next_put, &mut parked);
+            let bytes = rx.recv().context("reduce stream closed")??;
+            merge(
+                &mut merged[inc.lo - mylo..inc.hi - mylo],
+                &bytes_to_f32s(&bytes),
+            );
+            ctx.store.delete(&inc.key); // single reader: consume
+            if windowed {
+                ctx.store
+                    .put(
+                        &ack_key(group, round, inc.producer, inc.seq, rank),
+                        Vec::new(),
+                    )
+                    .context("reduce ack")?;
+            }
+        }
+        drain(grads, n_reduce, &mut next_put, &mut parked)?;
+
+        // ---- broadcast phase: publish merged chunks, gather the rest ---
+        grads[mylo..myhi].copy_from_slice(&merged);
+        let mut incoming: Vec<Incoming> = Vec::new();
+        for j in 0..n {
+            if j == rank {
+                continue;
+            }
+            let base = plan.total_reduce(j, n);
+            for (c, &(lo, hi)) in plan.chunks[j].iter().enumerate() {
+                incoming.push(Incoming {
+                    key: merged_chunk_key(group, round, j, c),
+                    lo,
+                    hi,
+                    producer: j,
+                    seq: base + c,
+                });
+            }
+        }
+        let rx = pool.stream(
+            incoming.iter().map(|i| i.key.clone()).collect(),
+            ctx.timeout,
+        );
+        for inc in &incoming {
+            fill(&merged, planned.len(), &mut next_put, &mut parked);
+            let bytes = rx.recv().context("broadcast stream closed")??;
+            grads[inc.lo..inc.hi].copy_from_slice(&bytes_to_f32s(&bytes));
+            if windowed {
+                ctx.store
+                    .put(
+                        &ack_key(group, round, inc.producer, inc.seq, rank),
+                        Vec::new(),
+                    )
+                    .context("broadcast ack")?;
+            }
+        }
+        drain(&merged, planned.len(), &mut next_put, &mut parked)?;
+        pool.flush().context("upload flush")?;
+
+        // ---- close the window tail: collect outstanding acks ----------
+        if windowed {
+            let tail = planned.len().saturating_sub(window);
+            for (q, p) in planned.iter().enumerate().skip(tail) {
+                for &d in &p.ackers {
+                    let key = ack_key(group, round, rank, q, d);
+                    ctx.store
+                        .get_blocking(&key, ctx.timeout)
+                        .context("tail ack")?;
+                    ctx.store.delete(&key);
+                }
+                if p.broadcast {
+                    ctx.store.delete(&p.key);
+                }
+            }
+        }
+        ctx.mark_done(round)
+    }
 }
 
 /// Pipelined scatter-reduce. Blocking; on return `grads` holds the
@@ -49,67 +304,36 @@ pub fn pipelined_scatter_reduce(
     merge: Option<&MergeFn>,
     timeout: Duration,
 ) -> Result<()> {
-    assert!(rank < n);
-    if n == 1 {
-        return Ok(());
-    }
-    let ranges = split_ranges(grads.len(), n);
-    let native: &MergeFn = &native_merge;
-    let merge = merge.unwrap_or(native);
+    pipelined_scatter_reduce_chunked(
+        store,
+        group,
+        round,
+        rank,
+        n,
+        grads,
+        merge,
+        timeout,
+        Chunking::NONE,
+    )
+}
 
-    // Uploader thread: streams the n-1 uploads of steps 1..=n-1 in order,
-    // concurrently with the downloads below (the duplex).
-    let (tx, rx) = mpsc::channel::<(String, Vec<u8>)>();
-    let up_store = store.clone();
-    let uploader = std::thread::spawn(move || -> Result<()> {
-        while let Ok((k, data)) = rx.recv() {
-            up_store.put(&k, data).context("pipelined upload")?;
-        }
-        Ok(())
-    });
-    for k in 1..n {
-        let split = (rank + k) % n;
-        let (lo, hi) = ranges[split];
-        tx.send((
-            key(group, round, split, rank),
-            f32s_to_bytes(&grads[lo..hi]),
-        ))
-        .expect("uploader alive");
-    }
-    drop(tx);
-
-    // Downloads of steps 2..=n: merge foreign copies of our split while
-    // the uploader drains.
-    let (mylo, myhi) = ranges[rank];
-    let mut merged = grads[mylo..myhi].to_vec();
-    for k in 2..=n {
-        let src = (rank + n - (k - 1)) % n;
-        let bytes = store
-            .get_blocking(&key(group, round, rank, src), timeout)
-            .context("pipelined download")?;
-        merge(&mut merged, &bytes_to_f32s(&bytes));
-    }
-    uploader
-        .join()
-        .expect("uploader panicked")
-        .context("uploader failed")?;
-
-    // Final exchange (same as phase 3 of the baseline).
-    store
-        .put(&merged_key(group, round, rank), f32s_to_bytes(&merged))
-        .context("merged upload")?;
-    grads[mylo..myhi].copy_from_slice(&merged);
-    for j in 0..n {
-        if j == rank {
-            continue;
-        }
-        let bytes = store
-            .get_blocking(&merged_key(group, round, j), timeout)
-            .context("merged download")?;
-        let (lo, hi) = ranges[j];
-        grads[lo..hi].copy_from_slice(&bytes_to_f32s(&bytes));
-    }
-    Ok(())
+/// Chunked variant: duplex at chunk granularity with a bounded in-flight
+/// window (see the module docs for the storage-occupancy guarantee).
+#[allow(clippy::too_many_arguments)]
+pub fn pipelined_scatter_reduce_chunked(
+    store: &Arc<dyn ObjectStore>,
+    group: &str,
+    round: u64,
+    rank: usize,
+    n: usize,
+    grads: &mut [f32],
+    merge: Option<&MergeFn>,
+    timeout: Duration,
+    chunking: Chunking,
+) -> Result<()> {
+    let ctx = CollectiveCtx::new(store.clone(), group, rank, n, timeout)
+        .with_chunking(chunking);
+    PipelinedScatterReduce.all_reduce(&ctx, round, grads, merge)
 }
 
 #[cfg(test)]
@@ -117,7 +341,7 @@ mod tests {
     use super::*;
     use crate::platform::{MemStore, ThrottledStore};
 
-    fn run_n(n: usize, len: usize) -> Vec<Vec<f32>> {
+    fn run_n(n: usize, len: usize, chunking: Chunking) -> Vec<Vec<f32>> {
         let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
         let mut handles = Vec::new();
         for rank in 0..n {
@@ -125,7 +349,7 @@ mod tests {
             handles.push(std::thread::spawn(move || {
                 let mut grads: Vec<f32> =
                     (0..len).map(|i| ((rank + 1) * (i + 1)) as f32).collect();
-                pipelined_scatter_reduce(
+                pipelined_scatter_reduce_chunked(
                     &store,
                     "pg",
                     0,
@@ -134,6 +358,7 @@ mod tests {
                     &mut grads,
                     None,
                     Duration::from_secs(10),
+                    chunking,
                 )
                 .unwrap();
                 grads
@@ -146,7 +371,7 @@ mod tests {
     fn all_workers_get_the_sum() {
         for n in [2usize, 3, 5, 8] {
             let len = 97;
-            let results = run_n(n, len);
+            let results = run_n(n, len, Chunking::NONE);
             let expect: Vec<f32> = (0..len)
                 .map(|i| {
                     (0..n).map(|r| ((r + 1) * (i + 1)) as f32).sum::<f32>()
@@ -154,6 +379,23 @@ mod tests {
                 .collect();
             for (r, res) in results.iter().enumerate() {
                 assert_eq!(res, &expect, "rank {r} of n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_matches_unchunked() {
+        for n in [2usize, 4, 6] {
+            let len = 10_000 + n; // uneven split sizes
+            let plain = run_n(n, len, Chunking::NONE);
+            for (chunk_bytes, in_flight) in [(64usize, 1), (256, 3), (4096, 8)]
+            {
+                let chunked =
+                    run_n(n, len, Chunking::new(chunk_bytes, in_flight));
+                assert_eq!(
+                    plain, chunked,
+                    "n={n} chunk={chunk_bytes} w={in_flight}"
+                );
             }
         }
     }
@@ -175,12 +417,32 @@ mod tests {
             let (ga, gb) = (mk(rank), mk(rank));
             ha.push(std::thread::spawn(move || {
                 let mut g = ga;
-                scatter_reduce(&sa, "a", 0, rank, n, &mut g, None, Duration::from_secs(10)).unwrap();
+                scatter_reduce(
+                    &sa,
+                    "a",
+                    0,
+                    rank,
+                    n,
+                    &mut g,
+                    None,
+                    Duration::from_secs(10),
+                )
+                .unwrap();
                 g
             }));
             hb.push(std::thread::spawn(move || {
                 let mut g = gb;
-                pipelined_scatter_reduce(&sb, "b", 0, rank, n, &mut g, None, Duration::from_secs(10)).unwrap();
+                pipelined_scatter_reduce(
+                    &sb,
+                    "b",
+                    0,
+                    rank,
+                    n,
+                    &mut g,
+                    None,
+                    Duration::from_secs(10),
+                )
+                .unwrap();
                 g
             }));
         }
@@ -189,8 +451,57 @@ mod tests {
         assert_eq!(ra, rb);
     }
 
+    /// With chunking, consumed chunks are deleted and the uploader windows
+    /// on acks, so the store's high-water mark stays within the chunk
+    /// budget; the unchunked run (whole splits + retained merged splits)
+    /// blows straight through it.
+    #[test]
+    fn chunked_run_bounds_store_high_water_mark() {
+        let n = 4;
+        let len = 4096 * n; // 64 KB of gradient per worker
+        let chunk_bytes = 1024;
+        let in_flight = 2;
+        let run = |chunking: Chunking| -> u64 {
+            let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+            let handles: Vec<_> = (0..n)
+                .map(|rank| {
+                    let store = store.clone();
+                    std::thread::spawn(move || {
+                        let mut g = vec![rank as f32 + 0.5; len];
+                        pipelined_scatter_reduce_chunked(
+                            &store, "hw", 0, rank, n, &mut g, None,
+                            Duration::from_secs(30), chunking,
+                        )
+                        .unwrap();
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            store.high_water_bytes()
+        };
+        // budget: every worker may have at most `in_flight` un-consumed
+        // chunks alive, plus one chunk mid-upload each
+        let budget = (n * (in_flight + 1) * chunk_bytes) as u64;
+        let hwm_chunked = run(Chunking::new(chunk_bytes, in_flight));
+        assert!(
+            hwm_chunked <= budget,
+            "chunked HWM {hwm_chunked} exceeds budget {budget}"
+        );
+        let hwm_plain = run(Chunking::NONE);
+        assert!(
+            hwm_plain > budget,
+            "unchunked HWM {hwm_plain} unexpectedly under budget {budget}"
+        );
+    }
+
     /// The wall-clock benefit exists in the *real* implementation too:
     /// with symmetric per-worker throttling, duplex beats serial phases.
+    /// De-flaked: best-of-3 per variant with a tolerance margin, so a
+    /// single descheduled thread cannot fail CI; the deterministic version
+    /// of this property lives in the FlowSim tests
+    /// (`sim::pipelined_beats_plain_in_sim`).
     #[test]
     fn pipelined_is_faster_on_throttled_store() {
         use crate::collective::scatter_reduce::scatter_reduce;
@@ -210,10 +521,17 @@ mod tests {
                 ));
                 handles.push(std::thread::spawn(move || {
                     let mut g = vec![rank as f32; len];
+                    let timeout = Duration::from_secs(30);
                     if pipelined {
-                        pipelined_scatter_reduce(&store, "t", 0, rank, n, &mut g, None, Duration::from_secs(30)).unwrap();
+                        pipelined_scatter_reduce(
+                            &store, "t", 0, rank, n, &mut g, None, timeout,
+                        )
+                        .unwrap();
                     } else {
-                        scatter_reduce(&store, "t", 0, rank, n, &mut g, None, Duration::from_secs(30)).unwrap();
+                        scatter_reduce(
+                            &store, "t", 0, rank, n, &mut g, None, timeout,
+                        )
+                        .unwrap();
                     }
                 }));
             }
@@ -222,11 +540,19 @@ mod tests {
             }
             start.elapsed().as_secs_f64()
         };
-        let t_plain = run(false);
-        let t_piped = run(true);
+        // structural gap at n=4 is (3-2/4)/2 = 1.25x; require at least a
+        // 3% win on best-of-3 so the test still catches duplex breaking
+        // (ratio -> 1.0) while scheduler noise on the min cannot flip a
+        // 25% gap
+        let best = |pipelined: bool| {
+            (0..3).map(|_| run(pipelined)).fold(f64::INFINITY, f64::min)
+        };
+        let t_plain = best(false);
+        let t_piped = best(true);
         assert!(
-            t_piped < t_plain,
-            "pipelined {t_piped:.3}s !< plain {t_plain:.3}s"
+            t_piped < t_plain * 0.97,
+            "pipelined {t_piped:.3}s not meaningfully faster than plain \
+             {t_plain:.3}s"
         );
     }
 }

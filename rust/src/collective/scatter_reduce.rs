@@ -1,33 +1,139 @@
 //! LambdaML's 3-phase storage-based scatter-reduce (Fig. 4(a)) — the
-//! baseline algorithm, real implementation over an [`ObjectStore`].
+//! baseline algorithm, rebuilt on the unified chunked engine.
 //!
 //! Every replica of a stage calls [`scatter_reduce`] with its local
 //! gradient vector; all return the elementwise sum. Phases:
-//!   1. upload the n−1 splits owned by other workers;
-//!   2. download the n−1 foreign copies of the own split and merge;
+//!   1. upload the n−1 splits owned by other workers (chunk-wise);
+//!   2. download the n−1 foreign copies of the own split and merge,
+//!      consuming (deleting) each single-reader chunk;
 //!   3. upload the merged split, download the other merged splits.
 //!
-//! Keys embed (group, round, phase, split, sender) so concurrent rounds
-//! and stages never collide — the paper's filename-metadata scheme (§4).
+//! The phases stay strictly serialized per worker — the inefficiency the
+//! paper identifies, preserved here so eq. (1) remains the right model —
+//! which is also why this algorithm never window-gates its uploads:
+//! nobody consumes phase-1 chunks until every worker reaches phase 2, so
+//! a store-occupancy window would deadlock.
+//!
+//! Keys embed (group, round, phase, split, sender, chunk) so concurrent
+//! rounds and stages never collide — the paper's filename-metadata scheme
+//! (§4). Each rank posts a `done` marker after its final download;
+//! [`cleanup`] waits for all markers before deleting the round's prefix,
+//! so a straggler can never lose a phase-3 object it still needs.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::{add_assign, bytes_to_f32s, f32s_to_bytes, split_ranges};
+use super::flow::PutJob;
+use super::{
+    bytes_to_f32s, done_key, f32s_to_bytes, merged_chunk_key, native_merge,
+    split_ranges, ChunkPlan, Chunking, Collective, CollectiveCtx, MergeFn,
+};
 use crate::platform::ObjectStore;
 
-/// Merge operator: `acc += delta`. Injected so the trainer can route the
-/// reduction through the AOT `merge2` executable (L1 Pallas kernel).
-pub type MergeFn<'a> = dyn Fn(&mut [f32], &[f32]) + 'a;
-
-pub(crate) fn native_merge(acc: &mut [f32], delta: &[f32]) {
-    add_assign(acc, delta);
+pub(crate) fn p1_key(
+    group: &str,
+    round: u64,
+    split: usize,
+    from: usize,
+    chunk: usize,
+) -> String {
+    format!("{group}/r{round}/p1/s{split}/f{from}/c{chunk}")
 }
 
-fn key(group: &str, round: u64, phase: u8, split: usize, from: usize) -> String {
-    format!("{group}/r{round}/p{phase}/s{split}/f{from}")
+/// The plain (LambdaML) scatter-reduce on the unified engine.
+pub struct PlainScatterReduce;
+
+impl Collective for PlainScatterReduce {
+    fn name(&self) -> &'static str {
+        "scatter-reduce"
+    }
+
+    fn all_reduce(
+        &self,
+        ctx: &CollectiveCtx,
+        round: u64,
+        grads: &mut [f32],
+        merge: Option<&MergeFn>,
+    ) -> Result<()> {
+        let (n, rank) = (ctx.n, ctx.rank);
+        if n == 1 {
+            return Ok(());
+        }
+        let native: &MergeFn = &native_merge;
+        let merge = merge.unwrap_or(native);
+        let ranges = split_ranges(grads.len(), n);
+        let plan = ChunkPlan::new(&ranges, &ctx.chunking);
+        let group = ctx.group.as_str();
+        let pool = ctx.pool();
+
+        // phase 1: upload foreign splits chunk-wise (uplink only)
+        for j in 0..n {
+            if j == rank {
+                continue;
+            }
+            for (c, &(lo, hi)) in plan.chunks[j].iter().enumerate() {
+                pool.put_blocking(PutJob {
+                    key: p1_key(group, round, j, rank, c),
+                    data: f32s_to_bytes(&grads[lo..hi]),
+                    gate: None,
+                })?;
+            }
+        }
+        pool.flush().context("phase-1 upload")?;
+
+        // phase 2: merge the foreign copies of our own split, consuming
+        // each chunk (we are its only reader)
+        let (mylo, myhi) = ranges[rank];
+        let mut merged = grads[mylo..myhi].to_vec();
+        let mut keys = Vec::new();
+        let mut spans = Vec::new();
+        for j in 0..n {
+            if j == rank {
+                continue;
+            }
+            for (c, &(lo, hi)) in plan.chunks[rank].iter().enumerate() {
+                keys.push(p1_key(group, round, rank, j, c));
+                spans.push((lo, hi));
+            }
+        }
+        let rx = pool.stream(keys.clone(), ctx.timeout);
+        for (key, &(lo, hi)) in keys.iter().zip(&spans) {
+            let bytes = rx.recv().context("phase-2 stream closed")??;
+            merge(&mut merged[lo - mylo..hi - mylo], &bytes_to_f32s(&bytes));
+            ctx.store.delete(key);
+        }
+
+        // phase 3: publish merged chunks, gather the other merged splits
+        for (c, &(lo, hi)) in plan.chunks[rank].iter().enumerate() {
+            pool.put_blocking(PutJob {
+                key: merged_chunk_key(group, round, rank, c),
+                data: f32s_to_bytes(&merged[lo - mylo..hi - mylo]),
+                gate: None,
+            })?;
+        }
+        pool.flush().context("phase-3 upload")?;
+        grads[mylo..myhi].copy_from_slice(&merged);
+
+        let mut keys = Vec::new();
+        let mut spans = Vec::new();
+        for j in 0..n {
+            if j == rank {
+                continue;
+            }
+            for (c, &(lo, hi)) in plan.chunks[j].iter().enumerate() {
+                keys.push(merged_chunk_key(group, round, j, c));
+                spans.push((lo, hi));
+            }
+        }
+        let rx = pool.stream(keys, ctx.timeout);
+        for &(lo, hi) in &spans {
+            let bytes = rx.recv().context("phase-3 stream closed")??;
+            grads[lo..hi].copy_from_slice(&bytes_to_f32s(&bytes));
+        }
+        ctx.mark_done(round)
+    }
 }
 
 /// Non-pipelined (LambdaML) scatter-reduce. Blocking; returns when this
@@ -42,71 +148,67 @@ pub fn scatter_reduce(
     merge: Option<&MergeFn>,
     timeout: Duration,
 ) -> Result<()> {
-    assert!(rank < n);
-    if n == 1 {
-        return Ok(());
-    }
-    let ranges = split_ranges(grads.len(), n);
-    let native: &MergeFn = &native_merge;
-    let merge = merge.unwrap_or(native);
-
-    // phase 1: upload foreign splits
-    for j in 0..n {
-        if j == rank {
-            continue;
-        }
-        let (lo, hi) = ranges[j];
-        store
-            .put(&key(group, round, 1, j, rank), f32s_to_bytes(&grads[lo..hi]))
-            .context("phase-1 upload")?;
-    }
-
-    // phase 2: merge foreign copies of our own split
-    let (mylo, myhi) = ranges[rank];
-    let mut merged = grads[mylo..myhi].to_vec();
-    for j in 0..n {
-        if j == rank {
-            continue;
-        }
-        let bytes = store
-            .get_blocking(&key(group, round, 1, rank, j), timeout)
-            .context("phase-2 download")?;
-        let delta = bytes_to_f32s(&bytes);
-        merge(&mut merged, &delta);
-    }
-
-    // phase 3: publish merged split, gather the others
-    store
-        .put(&key(group, round, 3, rank, rank), f32s_to_bytes(&merged))
-        .context("phase-3 upload")?;
-    grads[mylo..myhi].copy_from_slice(&merged);
-    for j in 0..n {
-        if j == rank {
-            continue;
-        }
-        let bytes = store
-            .get_blocking(&key(group, round, 3, j, j), timeout)
-            .context("phase-3 download")?;
-        let (lo, hi) = ranges[j];
-        grads[lo..hi].copy_from_slice(&bytes_to_f32s(&bytes));
-    }
-    Ok(())
+    scatter_reduce_chunked(
+        store,
+        group,
+        round,
+        rank,
+        n,
+        grads,
+        merge,
+        timeout,
+        Chunking::NONE,
+    )
 }
 
-/// Remove this round's objects (called by rank 0 after a barrier, or lazily
-/// by the Function Manager's garbage collection).
-pub fn cleanup(store: &Arc<dyn ObjectStore>, group: &str, round: u64) {
+/// Chunked variant: splits additionally travel as `chunking.chunk_bytes`
+/// objects (uploaded/downloaded as independent flows).
+#[allow(clippy::too_many_arguments)]
+pub fn scatter_reduce_chunked(
+    store: &Arc<dyn ObjectStore>,
+    group: &str,
+    round: u64,
+    rank: usize,
+    n: usize,
+    grads: &mut [f32],
+    merge: Option<&MergeFn>,
+    timeout: Duration,
+    chunking: Chunking,
+) -> Result<()> {
+    let ctx = CollectiveCtx::new(store.clone(), group, rank, n, timeout)
+        .with_chunking(chunking);
+    PlainScatterReduce.all_reduce(&ctx, round, grads, merge)
+}
+
+/// Remove this round's objects. Waits for every rank's `done` marker
+/// first (the end-of-round barrier each collective posts), so a straggler
+/// still downloading phase-3 objects can never have them deleted from
+/// under it. Called by rank 0 once a later round's barrier implies the
+/// markers exist, or lazily by the Function Manager's garbage collection.
+pub fn cleanup(
+    store: &Arc<dyn ObjectStore>,
+    group: &str,
+    round: u64,
+    n: usize,
+    timeout: Duration,
+) -> Result<()> {
+    for rank in 0..n {
+        store
+            .get_blocking(&done_key(group, round, rank), timeout)
+            .with_context(|| format!("cleanup barrier: rank {rank} not done"))?;
+    }
     for k in store.list(&format!("{group}/r{round}/")) {
         store.delete(&k);
     }
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::platform::MemStore;
+    use crate::platform::{MemStore, ThrottledStore};
 
-    fn run_n(n: usize, len: usize) -> Vec<Vec<f32>> {
+    fn run_n(n: usize, len: usize, chunking: Chunking) -> Vec<Vec<f32>> {
         let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
         let mut handles = Vec::new();
         for rank in 0..n {
@@ -114,7 +216,7 @@ mod tests {
             handles.push(std::thread::spawn(move || {
                 let mut grads: Vec<f32> =
                     (0..len).map(|i| (rank * len + i) as f32).collect();
-                scatter_reduce(
+                scatter_reduce_chunked(
                     &store,
                     "g",
                     0,
@@ -123,6 +225,7 @@ mod tests {
                     &mut grads,
                     None,
                     Duration::from_secs(10),
+                    chunking,
                 )
                 .unwrap();
                 grads
@@ -135,7 +238,7 @@ mod tests {
     fn all_workers_get_the_sum() {
         for n in [2usize, 3, 4, 8] {
             let len = 103; // not divisible by n
-            let results = run_n(n, len);
+            let results = run_n(n, len, Chunking::NONE);
             let expect: Vec<f32> = (0..len)
                 .map(|i| {
                     (0..n).map(|r| (r * len + i) as f32).sum::<f32>()
@@ -143,6 +246,21 @@ mod tests {
                 .collect();
             for (r, res) in results.iter().enumerate() {
                 assert_eq!(res, &expect, "rank {r} of n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_matches_unchunked() {
+        for n in [2usize, 3, 5] {
+            let len = 257; // odd, not divisible by n or the chunk size
+            let plain = run_n(n, len, Chunking::NONE);
+            for chunk_bytes in [16usize, 64, 4096] {
+                let chunked = run_n(n, len, Chunking::new(chunk_bytes, 3));
+                assert_eq!(
+                    plain, chunked,
+                    "n={n} chunk={chunk_bytes}: chunked deviates"
+                );
             }
         }
     }
@@ -191,27 +309,88 @@ mod tests {
     #[test]
     fn cleanup_removes_round_objects() {
         let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
-        let _ = {
+        let mk = |rank: usize| {
             let store = store.clone();
-            let t0 = std::thread::spawn({
-                let store = store.clone();
-                move || {
-                    let mut g = vec![1.0f32; 8];
-                    scatter_reduce(&store, "x", 5, 0, 2, &mut g, None, Duration::from_secs(10)).unwrap();
-                }
-            });
-            let t1 = std::thread::spawn({
-                let store = store.clone();
-                move || {
-                    let mut g = vec![2.0f32; 8];
-                    scatter_reduce(&store, "x", 5, 1, 2, &mut g, None, Duration::from_secs(10)).unwrap();
-                }
-            });
-            t0.join().unwrap();
-            t1.join().unwrap();
+            std::thread::spawn(move || {
+                let mut g = vec![(rank + 1) as f32; 8];
+                scatter_reduce(
+                    &store,
+                    "x",
+                    5,
+                    rank,
+                    2,
+                    &mut g,
+                    None,
+                    Duration::from_secs(10),
+                )
+                .unwrap();
+            })
         };
-        assert!(store.total_bytes() > 0);
-        cleanup(&store, "x", 5);
+        let (t0, t1) = (mk(0), mk(1));
+        t0.join().unwrap();
+        t1.join().unwrap();
+        assert!(store.total_bytes() > 0); // merged splits await cleanup
+        cleanup(&store, "x", 5, 2, Duration::from_secs(5)).unwrap();
         assert_eq!(store.total_bytes(), 0);
+        assert!(store.list("x/r5/").is_empty());
+    }
+
+    /// Regression for the cleanup race: rank 1 sits behind a throttled
+    /// store and is still blocking-downloading phase-3 objects when rank 0
+    /// finishes and fires cleanup. The done-marker barrier must make
+    /// cleanup wait instead of deleting objects the straggler needs.
+    #[test]
+    fn cleanup_waits_for_stragglers() {
+        let inner: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let fast = inner.clone();
+        let slow: Arc<dyn ObjectStore> = Arc::new(ThrottledStore::new(
+            inner.clone(),
+            f64::INFINITY,
+            50.0e3, // 50 KB/s downlink: phase 2+3 take a while
+            Duration::from_millis(5),
+        ));
+        let len = 4000; // 16 KB of gradient, phase-3 split = 4 x 2 KB chunks
+        let chunking = Chunking::new(2048, 2);
+        let t0 = std::thread::spawn({
+            let fast = fast.clone();
+            move || {
+                let mut g = vec![1.0f32; len];
+                scatter_reduce_chunked(
+                    &fast,
+                    "rc",
+                    0,
+                    0,
+                    2,
+                    &mut g,
+                    None,
+                    Duration::from_secs(30),
+                    chunking,
+                )
+                .unwrap();
+                // rank 0 immediately garbage-collects the round while the
+                // straggler still has several chunk downloads to request
+                cleanup(&fast, "rc", 0, 2, Duration::from_secs(30)).unwrap();
+            }
+        });
+        let t1 = std::thread::spawn(move || {
+            let mut g = vec![2.0f32; len];
+            scatter_reduce_chunked(
+                &slow,
+                "rc",
+                0,
+                1,
+                2,
+                &mut g,
+                None,
+                Duration::from_secs(30),
+                chunking,
+            )
+            .unwrap();
+            g
+        });
+        t0.join().unwrap();
+        let g = t1.join().unwrap();
+        assert!(g.iter().all(|&x| (x - 3.0).abs() < 1e-6));
+        assert_eq!(inner.total_bytes(), 0, "cleanup ran after the barrier");
     }
 }

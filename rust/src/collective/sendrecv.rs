@@ -5,9 +5,9 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use super::{bytes_to_f32s, f32s_to_bytes};
+use super::{bytes_to_f32s, chunk_ranges, f32s_to_bytes, Chunking};
 use crate::platform::ObjectStore;
 
 /// Key for the activation flowing stage→stage+1 (forward) or the gradient
@@ -52,6 +52,58 @@ pub fn recv_consume(
     let v = recv(store, key, timeout)?;
     store.delete(key);
     Ok(v)
+}
+
+/// Chunked upload of a boundary tensor: the payload travels as
+/// independent `{key}/c{i}` objects behind a `{key}/meta` chunk count, so
+/// large activations never materialize as one blob on either side of the
+/// relay. The receiver needs no chunking knowledge — it reads the meta.
+pub fn send_chunked(
+    store: &Arc<dyn ObjectStore>,
+    key: &str,
+    data: &[f32],
+    chunking: Chunking,
+) -> Result<()> {
+    let chunks = chunk_ranges(0, data.len(), chunking.chunk_elems());
+    store
+        .put(
+            &format!("{key}/meta"),
+            (chunks.len() as u64).to_le_bytes().to_vec(),
+        )
+        .context("send_chunked meta")?;
+    for (i, &(lo, hi)) in chunks.iter().enumerate() {
+        store
+            .put(&format!("{key}/c{i}"), f32s_to_bytes(&data[lo..hi]))
+            .context("send_chunked")?;
+    }
+    Ok(())
+}
+
+/// Blocking chunked receive; consumes the chunk objects and the meta.
+pub fn recv_chunked_consume(
+    store: &Arc<dyn ObjectStore>,
+    key: &str,
+    timeout: Duration,
+) -> Result<Vec<f32>> {
+    let meta_key = format!("{key}/meta");
+    let meta = store
+        .get_blocking(&meta_key, timeout)
+        .context("recv_chunked meta")?;
+    if meta.len() != 8 {
+        bail!("bad chunk meta for {key:?}: {} bytes", meta.len());
+    }
+    let n_chunks = u64::from_le_bytes(meta[..8].try_into().unwrap()) as usize;
+    let mut out = Vec::new();
+    for i in 0..n_chunks {
+        let ck = format!("{key}/c{i}");
+        let bytes = store
+            .get_blocking(&ck, timeout)
+            .context("recv_chunked")?;
+        out.extend_from_slice(&bytes_to_f32s(&bytes));
+        store.delete(&ck);
+    }
+    store.delete(&meta_key);
+    Ok(out)
 }
 
 /// Raw-bytes variants for non-f32 payloads (int32 token batches).
@@ -111,6 +163,31 @@ mod tests {
                 assert_ne!(keys[i], keys[j]);
             }
         }
+    }
+
+    #[test]
+    fn chunked_send_recv_roundtrip() {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let data: Vec<f32> = (0..103).map(|i| i as f32 * 0.5).collect();
+        for chunking in [Chunking::NONE, Chunking::new(16, 2), Chunking::new(64, 4)] {
+            let k = format!("chunky/{}", chunking.chunk_bytes);
+            send_chunked(&store, &k, &data, chunking).unwrap();
+            let got =
+                recv_chunked_consume(&store, &k, Duration::from_secs(1))
+                    .unwrap();
+            assert_eq!(got, data);
+            assert!(store.list(&k).is_empty(), "chunks consumed");
+        }
+    }
+
+    #[test]
+    fn chunked_empty_tensor() {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        send_chunked(&store, "empty", &[], Chunking::new(16, 2)).unwrap();
+        let got =
+            recv_chunked_consume(&store, "empty", Duration::from_secs(1))
+                .unwrap();
+        assert!(got.is_empty());
     }
 
     #[test]

@@ -125,6 +125,185 @@ pub fn simulate_pipelined_scatter_reduce(
     sim.run()
 }
 
+/// Chunked 3-phase scatter-reduce: the same schedule as
+/// [`simulate_scatter_reduce`], but every split travels as
+/// ⌈split/chunk⌉ flows serialized on their link, mirroring the real
+/// chunked engine. With `latency == 0` this converges to the unchunked
+/// makespan (same bytes on the same links behind the same barriers);
+/// with latency it exposes the per-chunk operation overhead that
+/// [`sync_time_chunked`](super::analytic::sync_time_chunked) models.
+pub fn simulate_scatter_reduce_chunked(
+    n: usize,
+    grad_bytes: f64,
+    model: &BandwidthModel,
+    chunk_bytes: f64,
+) -> f64 {
+    assert!(n >= 2);
+    let split = grad_bytes / n as f64;
+    let nc = chunks_per_split(split, chunk_bytes);
+    let chunk = split / nc as f64;
+    let mut sim = FlowSim::new(model.clone());
+
+    // phase 1: worker i's uplink carries its (n-1)*nc foreign-split
+    // chunks, serialized; up1[i][j][c] indexed per split then chunk
+    let mut up1 = vec![vec![vec![usize::MAX; nc]; n]; n];
+    let mut last_up = vec![None::<usize>; n];
+    for i in 0..n {
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            for c in 0..nc {
+                let deps = last_up[i].map(|p| vec![p]).unwrap_or_default();
+                let id = if deps.is_empty() {
+                    sim.add_flow(i, Dir::Up, chunk, 0.0)
+                } else {
+                    sim.add_flow_after(i, Dir::Up, chunk, deps, 0.0)
+                };
+                up1[i][j][c] = id;
+                last_up[i] = Some(id);
+            }
+        }
+    }
+    // phase 2: strictly after the worker's own phase-1 uploads (the
+    // serialization of the plain algorithm), chunk flows serialized on
+    // the downlink, each gated on the producing upload chunk
+    let mut last_down = vec![None::<usize>; n];
+    for i in 0..n {
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            for c in 0..nc {
+                let mut deps = vec![last_up[i].expect("n>=2"), up1[j][i][c]];
+                if let Some(p) = last_down[i] {
+                    deps.push(p);
+                }
+                last_down[i] =
+                    Some(sim.add_flow_after(i, Dir::Down, chunk, deps, 0.0));
+            }
+        }
+    }
+    // phase 3: merged-split chunks after the merge completes, then the
+    // gathers, gated per chunk on the producing upload
+    let mut up3 = vec![vec![usize::MAX; nc]; n];
+    for i in 0..n {
+        let mut prev = last_down[i];
+        for c in 0..nc {
+            let mut deps = vec![last_down[i].expect("n>=2")];
+            if let Some(p) = prev {
+                deps.push(p);
+            }
+            up3[i][c] = sim.add_flow_after(i, Dir::Up, chunk, deps, 0.0);
+            prev = Some(up3[i][c]);
+        }
+    }
+    for i in 0..n {
+        let mut prev = Some(*up3[i].last().expect("nc>=1"));
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            for c in 0..nc {
+                let mut deps = vec![up3[j][c]];
+                if let Some(p) = prev {
+                    deps.push(p);
+                }
+                prev = Some(sim.add_flow_after(i, Dir::Down, chunk, deps, 0.0));
+            }
+        }
+    }
+    sim.run()
+}
+
+/// Chunked pipelined scatter-reduce: chunk-granular duplex — download
+/// chunk `c` of step `k` needs only upload chunk `c` of step `k-1`, so
+/// the fill is one *chunk* rather than one split, exactly like the real
+/// chunked engine (ack windows are not modelled; with symmetric
+/// bandwidth they never bind).
+pub fn simulate_pipelined_scatter_reduce_chunked(
+    n: usize,
+    grad_bytes: f64,
+    model: &BandwidthModel,
+    chunk_bytes: f64,
+) -> f64 {
+    assert!(n >= 2);
+    let split = grad_bytes / n as f64;
+    let nc = chunks_per_split(split, chunk_bytes);
+    let chunk = split / nc as f64;
+    let mut sim = FlowSim::new(model.clone());
+
+    // reduce uploads: steps k=1..n-1, chunks serialized on the uplink
+    let mut up = vec![vec![vec![usize::MAX; nc]; n]; n];
+    let mut last_up = vec![None::<usize>; n];
+    for i in 0..n {
+        for k in 1..n {
+            for c in 0..nc {
+                let deps = last_up[i].map(|p| vec![p]).unwrap_or_default();
+                let id = if deps.is_empty() {
+                    sim.add_flow(i, Dir::Up, chunk, 0.0)
+                } else {
+                    sim.add_flow_after(i, Dir::Up, chunk, deps, 0.0)
+                };
+                up[i][k][c] = id;
+                last_up[i] = Some(id);
+            }
+        }
+    }
+    // reduce downloads: at step k worker i pulls its own split's chunk c
+    // uploaded by (i-(k-1)) at step k-1 — duplex at chunk granularity
+    let mut last_down = vec![None::<usize>; n];
+    for i in 0..n {
+        for k in 2..=n {
+            let src = (i + n - (k - 1)) % n;
+            for c in 0..nc {
+                let mut deps = vec![up[src][k - 1][c]];
+                if let Some(p) = last_down[i] {
+                    deps.push(p);
+                }
+                last_down[i] =
+                    Some(sim.add_flow_after(i, Dir::Down, chunk, deps, 0.0));
+            }
+        }
+    }
+    // broadcast: merged chunks after the merge, then the gathers
+    let mut up3 = vec![vec![usize::MAX; nc]; n];
+    for i in 0..n {
+        let mut prev = last_up[i];
+        for c in 0..nc {
+            let mut deps = vec![last_down[i].expect("n>=2")];
+            if let Some(p) = prev {
+                deps.push(p);
+            }
+            up3[i][c] = sim.add_flow_after(i, Dir::Up, chunk, deps, 0.0);
+            prev = Some(up3[i][c]);
+        }
+    }
+    for i in 0..n {
+        let mut prev = last_down[i];
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            for c in 0..nc {
+                let mut deps = vec![up3[j][c]];
+                if let Some(p) = prev {
+                    deps.push(p);
+                }
+                prev = Some(sim.add_flow_after(i, Dir::Down, chunk, deps, 0.0));
+            }
+        }
+    }
+    sim.run()
+}
+
+fn chunks_per_split(split_bytes: f64, chunk_bytes: f64) -> usize {
+    if chunk_bytes <= 0.0 {
+        return 1;
+    }
+    ((split_bytes / chunk_bytes).ceil() as usize).max(1)
+}
+
 /// HybridPS synchronization: workers push gradients directly to a VM
 /// parameter server (worker index `n` in the model) and pull updated
 /// parameters back.
@@ -213,6 +392,62 @@ mod tests {
         let formula = ps_sync_time(100.0 * MB, n, 70.0 * MB, 1.25e9, 0.0) - agg;
         let err = (sim_t - formula).abs() / formula;
         assert!(err < 0.15, "sim {sim_t} vs formula {formula}");
+    }
+
+    #[test]
+    fn chunked_schedules_match_unchunked_at_zero_latency() {
+        // same bytes, same links, same barriers: chunking must cost
+        // nothing when storage operations are free
+        for n in [2usize, 4, 8] {
+            let model = storage_model(n, 70.0 * MB, 0.0);
+            let s = 280.0 * MB;
+            let plain = simulate_scatter_reduce(n, s, &model);
+            for chunk in [4.0e6, 16.0e6] {
+                let chunked =
+                    simulate_scatter_reduce_chunked(n, s, &model, chunk);
+                let err = (chunked - plain).abs() / plain;
+                assert!(
+                    err < 1e-5,
+                    "plain n={n} chunk={chunk}: {chunked} vs {plain}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_pipelined_is_never_slower_and_respects_occupancy() {
+        for n in [2usize, 4, 8] {
+            let model = storage_model(n, 70.0 * MB, 0.0);
+            let s = 280.0 * MB;
+            let unchunked = simulate_pipelined_scatter_reduce(n, s, &model);
+            for chunk in [2.0e6, 8.0e6] {
+                let chunked = simulate_pipelined_scatter_reduce_chunked(
+                    n, s, &model, chunk,
+                );
+                // finer fill can only help...
+                assert!(
+                    chunked <= unchunked * (1.0 + 1e-9),
+                    "n={n} chunk={chunk}: {chunked} > {unchunked}"
+                );
+                // ...but every worker still moves s bytes up its link
+                let occupancy_floor = s / (70.0 * MB);
+                assert!(chunked >= occupancy_floor * (1.0 - 1e-9));
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_latency_overhead_visible_in_sim() {
+        // with real per-operation latency, smaller chunks mean more
+        // serialized storage ops on each link
+        let n = 4;
+        let model = storage_model(n, 70.0 * MB, 0.02);
+        let s = 80.0 * MB;
+        let coarse =
+            simulate_pipelined_scatter_reduce_chunked(n, s, &model, 10.0e6);
+        let fine =
+            simulate_pipelined_scatter_reduce_chunked(n, s, &model, 1.0e6);
+        assert!(fine > coarse, "fine {fine} !> coarse {coarse}");
     }
 
     #[test]

@@ -20,6 +20,11 @@ pub struct ExperimentConfig {
     pub merge_criterion: MergeCriterion,
     pub sync_alg: SyncAlgorithm,
     pub bandwidth_scale: f64,
+    /// Collective chunk size in bytes (0 = unchunked); flows into the
+    /// planner's sync model (`plan`/`simulate`). The trainer takes its
+    /// chunking from the `train` CLI flags (`--chunk-bytes`,
+    /// `--chunks-in-flight`), not from this experiment config.
+    pub chunk_bytes: usize,
     pub weights: Vec<(f64, f64)>,
 }
 
@@ -34,6 +39,7 @@ impl Default for ExperimentConfig {
             merge_criterion: MergeCriterion::Compute,
             sync_alg: SyncAlgorithm::PipelinedScatterReduce,
             bandwidth_scale: 1.0,
+            chunk_bytes: 0,
             weights: crate::planner::DEFAULT_WEIGHTS.to_vec(),
         }
     }
@@ -75,6 +81,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = j.get("bandwidth_scale") {
             cfg.bandwidth_scale = v.as_f64().context("bandwidth_scale")?;
+        }
+        if let Some(v) = j.get("chunk_bytes") {
+            cfg.chunk_bytes = v.as_usize().context("chunk_bytes")?;
         }
         if let Some(v) = j.get("weights") {
             cfg.weights = v
@@ -147,10 +156,12 @@ mod tests {
             r#"{"model": "bert-large", "platform": "alibaba",
                 "global_batch": 256, "merge_layers": 6,
                 "merge_criterion": "params", "sync": "scatter-reduce",
-                "bandwidth_scale": 4.0, "weights": [[1, 0], [1, 0.001]]}"#,
+                "bandwidth_scale": 4.0, "chunk_bytes": 1048576,
+                "weights": [[1, 0], [1, 0.001]]}"#,
         )
         .unwrap();
         assert_eq!(cfg.model, "bert-large");
+        assert_eq!(cfg.chunk_bytes, 1 << 20);
         assert_eq!(cfg.weights.len(), 2);
         let p = cfg.resolve_platform().unwrap();
         assert_eq!(p.name, "alibaba-fc");

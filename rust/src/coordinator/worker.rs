@@ -19,12 +19,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::collective::pipelined::pipelined_scatter_reduce;
-use crate::collective::scatter_reduce::scatter_reduce;
 use crate::collective::sendrecv::{
-    boundary_key, recv_consume, send,
+    boundary_key, recv_chunked_consume, recv_consume, send, send_chunked,
 };
-use crate::collective::SyncAlgorithm;
+use crate::collective::CollectiveCtx;
 use crate::platform::function::FunctionInstance;
 use crate::platform::{ObjectStore, ThrottledStore};
 use crate::runtime::{Manifest, Runtime};
@@ -90,6 +88,38 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<usize> {
     let grad_len = stage.entry.flat_param_size;
     let lr_scale = 1.0 / (cfg.mu * cfg.dp) as f32;
 
+    // Boundary tensors ride the same chunking policy as the gradient
+    // collectives: with chunking on, activations/gradients relay as
+    // bounded chunk flows instead of one blob per micro-batch.
+    let send_boundary = |key: &str, data: &[f32]| -> Result<()> {
+        if cfg.chunking.is_chunked() {
+            send_chunked(&store, key, data, cfg.chunking)
+        } else {
+            send(&store, key, data)
+        }
+    };
+    let recv_boundary = |key: &str| -> Result<Vec<f32>> {
+        if cfg.chunking.is_chunked() {
+            recv_chunked_consume(&store, key, RECV_TIMEOUT)
+        } else {
+            recv_consume(&store, key, RECV_TIMEOUT)
+        }
+    };
+
+    // Persistent collective context for the intra-stage sync: its flow
+    // pool's uploader/downloader threads live for the whole training run
+    // and are reused every round.
+    let sync_ctx = (cfg.dp > 1).then(|| {
+        CollectiveCtx::new(
+            store.clone(),
+            format!("sync/s{}", ctx.stage_idx),
+            ctx.replica,
+            cfg.dp,
+            RECV_TIMEOUT,
+        )
+        .with_chunking(cfg.chunking)
+    });
+
     for step in 0..cfg.steps {
         let round = step as u64;
         let mut grads_acc = vec![0.0f32; grad_len];
@@ -104,25 +134,25 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<usize> {
             if is_first {
                 let (tokens, _) = corpus.batch(step, ctx.replica, mb);
                 let out = stage.fwd_tokens(&tokens).context("embed fwd")?;
-                send(
-                    &store,
+                send_boundary(
                     &boundary_key("fwd", round, 0, ctx.replica, mb),
                     &out,
                 )?;
                 saved_tok.push(tokens);
             } else {
-                let x = recv_consume(
-                    &store,
-                    &boundary_key("fwd", round, ctx.stage_idx - 1, ctx.replica, mb),
-                    RECV_TIMEOUT,
-                )?;
+                let x = recv_boundary(&boundary_key(
+                    "fwd",
+                    round,
+                    ctx.stage_idx - 1,
+                    ctx.replica,
+                    mb,
+                ))?;
                 if is_last {
                     // loss computed in backward; save input only
                     saved_f32.push(x);
                 } else {
                     let out = stage.fwd_acts(&x).context("blocks fwd")?;
-                    send(
-                        &store,
+                    send_boundary(
                         &boundary_key("fwd", round, ctx.stage_idx, ctx.replica, mb),
                         &out,
                     )?;
@@ -141,18 +171,19 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<usize> {
                 crate::collective::add_assign(&mut grads_acc, &g);
                 losses += loss;
                 if n_stages > 1 {
-                    send(
-                        &store,
+                    send_boundary(
                         &boundary_key("bwd", round, ctx.stage_idx, ctx.replica, mb),
                         &gx,
                     )?;
                 }
             } else {
-                let gy = recv_consume(
-                    &store,
-                    &boundary_key("bwd", round, ctx.stage_idx + 1, ctx.replica, mb),
-                    RECV_TIMEOUT,
-                )?;
+                let gy = recv_boundary(&boundary_key(
+                    "bwd",
+                    round,
+                    ctx.stage_idx + 1,
+                    ctx.replica,
+                    mb,
+                ))?;
                 if is_first {
                     let g = stage
                         .bwd_tokens(&saved_tok[mb], &gy)
@@ -163,8 +194,7 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<usize> {
                         .bwd_acts(&saved_f32[mb], &gy)
                         .context("blocks bwd")?;
                     crate::collective::add_assign(&mut grads_acc, &g);
-                    send(
-                        &store,
+                    send_boundary(
                         &boundary_key("bwd", round, ctx.stage_idx, ctx.replica, mb),
                         &gx,
                     )?;
@@ -173,11 +203,10 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<usize> {
         }
 
         // ---- intra-stage sync (scatter-reduce over the d replicas) -------
-        if cfg.dp > 1 {
-            let group = format!("sync/s{}", ctx.stage_idx);
+        if let Some(sync) = &sync_ctx {
             // route the merge through the AOT merge2 executable (the L1
             // Pallas grad_merge kernel) when split sizes allow; fall back
-            // to the native add for partial splits.
+            // to the native add for partial splits/chunks.
             let merge = |acc: &mut [f32], delta: &[f32]| {
                 if acc.len() == grad_len {
                     if let Ok(merged) = stage.merge_grads(acc, delta) {
@@ -187,36 +216,19 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<usize> {
                 }
                 crate::collective::add_assign(acc, delta);
             };
-            match cfg.sync_alg {
-                SyncAlgorithm::PipelinedScatterReduce => pipelined_scatter_reduce(
-                    &store,
-                    &group,
-                    round,
-                    ctx.replica,
-                    cfg.dp,
-                    &mut grads_acc,
-                    Some(&merge),
-                    RECV_TIMEOUT,
-                )?,
-                SyncAlgorithm::ScatterReduce => scatter_reduce(
-                    &store,
-                    &group,
-                    round,
-                    ctx.replica,
-                    cfg.dp,
-                    &mut grads_acc,
-                    Some(&merge),
-                    RECV_TIMEOUT,
-                )?,
-            }
-            // garbage-collect an older round's sync objects (safe: all
-            // replicas have passed round-2's barrier to reach here)
+            sync.all_reduce(cfg.sync_alg, round, &mut grads_acc, Some(&merge))?;
+            // garbage-collect an older round's sync objects; cleanup's
+            // done-marker barrier is already satisfied (every replica
+            // passed round-2 to reach here), so this never blocks and a
+            // straggler can never lose objects it still needs
             if step >= 2 && ctx.replica == 0 {
                 crate::collective::scatter_reduce::cleanup(
                     &store,
-                    &group,
+                    &sync.group,
                     round - 2,
-                );
+                    cfg.dp,
+                    RECV_TIMEOUT,
+                )?;
             }
         }
 

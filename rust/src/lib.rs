@@ -16,6 +16,11 @@
 //!
 //! See DESIGN.md for the module inventory and the experiment index.
 
+// The collective call signatures mirror the paper's parameter lists
+// (store, group, round, rank, n, grads, merge, timeout, …); bundling them
+// would only add indirection for the CLI and tests.
+#![allow(clippy::too_many_arguments)]
+
 pub mod baselines;
 pub mod bench;
 pub mod collective;

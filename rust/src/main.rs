@@ -69,6 +69,9 @@ fn config_from_flags(flags: &HashMap<String, String>) -> Result<ExperimentConfig
     if let Some(s) = flags.get("bandwidth-scale") {
         cfg.bandwidth_scale = s.parse().context("--bandwidth-scale")?;
     }
+    if let Some(s) = flags.get("chunk-bytes") {
+        cfg.chunk_bytes = s.parse().context("--chunk-bytes")?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -101,11 +104,14 @@ USAGE: funcpipe <command> [--flags]
 
 COMMANDS:
   plan      --model <name> --batch <n> [--platform aws|alibaba]
+            [--chunk-bytes n]
             co-optimize partition + resources; prints the Pareto sweep
-  simulate  --model <name> --batch <n>
+  simulate  --model <name> --batch <n> [--chunk-bytes n]
             DES-simulate the recommended plan vs the closed-form model
   train     [--dp n] [--mu n] [--steps n] [--artifacts dir]
-            real end-to-end training over the AOT artifacts
+            [--chunk-bytes n] [--chunks-in-flight n]
+            real end-to-end training over the AOT artifacts; chunk flags
+            stream gradients as bounded-memory chunk flows
   profile   [--artifacts dir]
             profile AOT stages through PJRT
   baseline  --model <name> --batch <n>
@@ -119,7 +125,8 @@ fn cmd_plan(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = config_from_flags(flags)?;
     let platform = cfg.resolve_platform()?;
     let model = cfg.resolve_model(&platform)?;
-    let opt = CoOptimizer::new(&model, &platform);
+    let mut opt = CoOptimizer::new(&model, &platform);
+    opt.perf.chunk_bytes = cfg.chunk_bytes;
     let points = sweep(&cfg.weights, |w| {
         opt.solve(cfg.n_micro_global(), w)
             .map(|(plan, perf, _)| (plan, perf))
@@ -153,7 +160,8 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = config_from_flags(flags)?;
     let platform = cfg.resolve_platform()?;
     let model = cfg.resolve_model(&platform)?;
-    let opt = CoOptimizer::new(&model, &platform);
+    let mut opt = CoOptimizer::new(&model, &platform);
+    opt.perf.chunk_bytes = cfg.chunk_bytes;
     let points = sweep(&cfg.weights, |w| {
         opt.solve(cfg.n_micro_global(), w)
             .map(|(plan, perf, _)| (plan, perf))
@@ -201,6 +209,22 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     }
     if let Some(v) = flags.get("lifetime") {
         cfg.lifetime_s = v.parse()?;
+    }
+    // the two chunking flags are independent: --chunks-in-flight alone
+    // still sizes the flow pool's queues for the unchunked path
+    let chunk_bytes: Option<usize> = flags
+        .get("chunk-bytes")
+        .map(|s| s.parse().context("--chunk-bytes"))
+        .transpose()?;
+    let in_flight: Option<usize> = flags
+        .get("chunks-in-flight")
+        .map(|s| s.parse().context("--chunks-in-flight"))
+        .transpose()?;
+    if chunk_bytes.is_some() || in_flight.is_some() {
+        cfg.chunking = funcpipe::collective::Chunking::new(
+            chunk_bytes.unwrap_or(0),
+            in_flight.unwrap_or(funcpipe::collective::Chunking::NONE.in_flight),
+        );
     }
     let report = funcpipe::trainer::train(&cfg)?;
     println!(

@@ -2,7 +2,7 @@
 //! model (`x_i`), the data-parallel degree (`d` / `y_k`), and the memory
 //! tier of each stage's workers (`m_i` / `z_{i,j}`).
 
-use thiserror::Error;
+use std::fmt;
 
 use crate::model::layer::ModelProfile;
 use crate::platform::PlatformSpec;
@@ -21,21 +21,43 @@ pub struct Plan {
     pub n_micro_global: usize,
 }
 
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum PlanError {
-    #[error("cuts must be strictly increasing and < L-1 (L={l}): {cuts:?}")]
     BadCuts { cuts: Vec<usize>, l: usize },
-    #[error("stage_tiers length {got} != number of stages {want}")]
     TierLen { got: usize, want: usize },
-    #[error("tier index {tier} out of range ({n_tiers} tiers)")]
     BadTier { tier: usize, n_tiers: usize },
-    #[error("dp degree {dp} does not divide micro-batch count {m}")]
     BadDp { dp: usize, m: usize },
-    #[error(
-        "stage {stage} needs {need_mb} MB but tier provides {have_mb} MB"
-    )]
     OutOfMemory { stage: usize, need_mb: u64, have_mb: u64 },
 }
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::BadCuts { cuts, l } => write!(
+                f,
+                "cuts must be strictly increasing and < L-1 (L={l}): {cuts:?}"
+            ),
+            PlanError::TierLen { got, want } => write!(
+                f,
+                "stage_tiers length {got} != number of stages {want}"
+            ),
+            PlanError::BadTier { tier, n_tiers } => write!(
+                f,
+                "tier index {tier} out of range ({n_tiers} tiers)"
+            ),
+            PlanError::BadDp { dp, m } => write!(
+                f,
+                "dp degree {dp} does not divide micro-batch count {m}"
+            ),
+            PlanError::OutOfMemory { stage, need_mb, have_mb } => write!(
+                f,
+                "stage {stage} needs {need_mb} MB but tier provides {have_mb} MB"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
 
 impl Plan {
     /// Single-stage plan (pure data parallelism / LambdaML shape).

@@ -7,7 +7,7 @@
 //! evaluated here directly per *stage* — numerically identical, and it
 //! keeps `evaluate` allocation-free on the planner's hot path.
 
-use crate::collective::{sync_time, SyncAlgorithm};
+use crate::collective::{sync_time_chunked, SyncAlgorithm};
 use crate::model::{ModelProfile, Plan};
 use crate::platform::PlatformSpec;
 
@@ -45,6 +45,12 @@ pub struct PerfModel<'a> {
     pub model: &'a ModelProfile,
     pub platform: &'a PlatformSpec,
     pub sync_alg: SyncAlgorithm,
+    /// Chunk size of the storage collectives in bytes; 0 = unchunked.
+    /// Adds the per-chunk latency term of
+    /// [`sync_time_chunked`](crate::collective::sync_time_chunked) to the
+    /// synchronization model, so plans are costed with the same knob the
+    /// trainer runs with.
+    pub chunk_bytes: usize,
 }
 
 impl<'a> PerfModel<'a> {
@@ -53,11 +59,17 @@ impl<'a> PerfModel<'a> {
             model,
             platform,
             sync_alg: SyncAlgorithm::PipelinedScatterReduce,
+            chunk_bytes: 0,
         }
     }
 
     pub fn with_sync(mut self, alg: SyncAlgorithm) -> Self {
         self.sync_alg = alg;
+        self
+    }
+
+    pub fn with_chunk_bytes(mut self, chunk_bytes: usize) -> Self {
+        self.chunk_bytes = chunk_bytes;
         self
     }
 
@@ -177,12 +189,13 @@ impl<'a> PerfModel<'a> {
                 0.0
             } else {
                 let (lo, hi) = ranges[s];
-                sync_time(
+                sync_time_chunked(
                     self.sync_alg,
                     m.range_param_bytes(lo, hi) as f64,
                     plan.dp,
                     bw(plan.stage_tiers[s]),
                     p.storage.latency_s,
+                    self.chunk_bytes,
                 )
             };
             t_iter_max = t_iter_max.max(t_b + t_s);
@@ -303,6 +316,29 @@ mod tests {
         // t grows by (μb-μa)·(Δf + Δb) — strictly increasing, sub-2x
         assert!(b.t_iter > a.t_iter);
         assert!(b.t_iter < 2.0 * a.t_iter);
+    }
+
+    #[test]
+    fn chunking_knob_adds_latency_but_preserves_transfer() {
+        let (m, p) = fixture();
+        let plan = Plan {
+            cuts: vec![8],
+            dp: 4,
+            stage_tiers: vec![7, 7],
+            n_micro_global: 16,
+        };
+        let base = PerfModel::new(&m, &p).evaluate(&plan);
+        let chunked = PerfModel::new(&m, &p)
+            .with_chunk_bytes(1 << 20)
+            .evaluate(&plan);
+        // more storage ops -> more sync latency, nothing else moves
+        assert!(chunked.sync_s > base.sync_s);
+        assert!((chunked.compute_s - base.compute_s).abs() < 1e-9);
+        // huge chunks converge back to the unchunked model
+        let coarse = PerfModel::new(&m, &p)
+            .with_chunk_bytes(1 << 30)
+            .evaluate(&plan);
+        assert!((coarse.t_iter - base.t_iter).abs() < 1e-9);
     }
 
     #[test]

@@ -35,6 +35,14 @@ pub trait ObjectStore: Send + Sync {
 
     /// Total bytes currently stored (tests/metrics).
     fn total_bytes(&self) -> u64;
+
+    /// Peak of `total_bytes` over the store's lifetime — the memory the
+    /// relay bucket would have needed. The chunked collectives bound this
+    /// by `workers × chunks_in_flight × chunk_bytes`; stores that do not
+    /// track it report 0.
+    fn high_water_bytes(&self) -> u64 {
+        0
+    }
 }
 
 #[derive(Default)]
@@ -42,6 +50,8 @@ struct StoreInner {
     map: HashMap<String, Arc<Vec<u8>>>,
     puts: u64,
     gets: u64,
+    cur_bytes: u64,
+    high_water_bytes: u64,
 }
 
 /// In-memory object store shared by all workers in a process.
@@ -71,7 +81,12 @@ impl ObjectStore for MemStore {
     fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
         let mut g = self.inner.lock().unwrap();
         g.puts += 1;
-        g.map.insert(key.to_string(), Arc::new(data));
+        let added = data.len() as u64;
+        if let Some(old) = g.map.insert(key.to_string(), Arc::new(data)) {
+            g.cur_bytes -= old.len() as u64;
+        }
+        g.cur_bytes += added;
+        g.high_water_bytes = g.high_water_bytes.max(g.cur_bytes);
         drop(g);
         self.cond.notify_all();
         Ok(())
@@ -108,7 +123,9 @@ impl ObjectStore for MemStore {
 
     fn delete(&self, key: &str) {
         let mut g = self.inner.lock().unwrap();
-        g.map.remove(key);
+        if let Some(old) = g.map.remove(key) {
+            g.cur_bytes -= old.len() as u64;
+        }
     }
 
     fn list(&self, prefix: &str) -> Vec<String> {
@@ -125,7 +142,15 @@ impl ObjectStore for MemStore {
 
     fn total_bytes(&self) -> u64 {
         let g = self.inner.lock().unwrap();
-        g.map.values().map(|v| v.len() as u64).sum()
+        debug_assert_eq!(
+            g.cur_bytes,
+            g.map.values().map(|v| v.len() as u64).sum::<u64>()
+        );
+        g.cur_bytes
+    }
+
+    fn high_water_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().high_water_bytes
     }
 }
 
@@ -191,6 +216,10 @@ impl ObjectStore for ThrottledStore {
     fn total_bytes(&self) -> u64 {
         self.inner.total_bytes()
     }
+
+    fn high_water_bytes(&self) -> u64 {
+        self.inner.high_water_bytes()
+    }
 }
 
 #[cfg(test)]
@@ -234,6 +263,22 @@ mod tests {
         assert_eq!(s.list("grad/"), vec!["grad/0/1", "grad/0/2"]);
         s.delete("grad/0/1");
         assert_eq!(s.list("grad/").len(), 1);
+    }
+
+    #[test]
+    fn high_water_mark_tracks_peak_not_current() {
+        let s = MemStore::new();
+        s.put("a", vec![0u8; 100]).unwrap();
+        s.put("b", vec![0u8; 50]).unwrap();
+        assert_eq!(s.total_bytes(), 150);
+        assert_eq!(s.high_water_bytes(), 150);
+        s.delete("a");
+        assert_eq!(s.total_bytes(), 50);
+        assert_eq!(s.high_water_bytes(), 150, "peak is sticky");
+        // overwrite replaces, not accumulates
+        s.put("b", vec![0u8; 200]).unwrap();
+        assert_eq!(s.total_bytes(), 200);
+        assert_eq!(s.high_water_bytes(), 200);
     }
 
     #[test]

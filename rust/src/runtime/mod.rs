@@ -6,6 +6,17 @@
 //!   the parameter tensors, with flat-vector views for the collectives.
 
 pub mod artifact;
+
+/// Real PJRT execution; needs the `xla` bindings, which the offline
+/// registry cannot provide. Built only with `--features xla-rt`; the
+/// default build substitutes [`stage_stub`] whose `Runtime::cpu()` fails
+/// fast, so everything artifact-gated (trainer, profiler, e2e tests)
+/// skips itself cleanly.
+#[cfg(feature = "xla-rt")]
+pub mod stage;
+
+#[cfg(not(feature = "xla-rt"))]
+#[path = "stage_stub.rs"]
 pub mod stage;
 
 pub use artifact::{Manifest, ParamSpec, StageEntry};

@@ -9,7 +9,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::collective::SyncAlgorithm;
+use crate::collective::{Chunking, SyncAlgorithm};
 use crate::coordinator::leader::run_training;
 use crate::platform::MemStore;
 
@@ -32,6 +32,9 @@ pub struct TrainConfig {
     pub lifetime_s: f64,
     pub checkpoint_margin_s: f64,
     pub sync_alg: SyncAlgorithm,
+    /// Chunked streaming policy for the gradient collectives
+    /// (`Chunking::NONE` = whole splits, the classic behaviour).
+    pub chunking: Chunking,
 }
 
 impl TrainConfig {
@@ -47,6 +50,7 @@ impl TrainConfig {
             lifetime_s: f64::INFINITY,
             checkpoint_margin_s: 2.0,
             sync_alg: SyncAlgorithm::PipelinedScatterReduce,
+            chunking: Chunking::NONE,
         }
     }
 

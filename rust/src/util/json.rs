@@ -17,21 +17,36 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("unexpected end of input at byte {0}")]
     Eof(usize),
-    #[error("unexpected character {1:?} at byte {0}")]
     Unexpected(usize, char),
-    #[error("invalid number at byte {0}")]
     BadNumber(usize),
-    #[error("invalid escape at byte {0}")]
     BadEscape(usize),
-    #[error("field {0:?} missing")]
     MissingField(String),
-    #[error("type mismatch for {0:?}: wanted {1}")]
     TypeMismatch(String, &'static str),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Eof(i) => {
+                write!(f, "unexpected end of input at byte {i}")
+            }
+            JsonError::Unexpected(i, c) => {
+                write!(f, "unexpected character {c:?} at byte {i}")
+            }
+            JsonError::BadNumber(i) => write!(f, "invalid number at byte {i}"),
+            JsonError::BadEscape(i) => write!(f, "invalid escape at byte {i}"),
+            JsonError::MissingField(k) => write!(f, "field {k:?} missing"),
+            JsonError::TypeMismatch(k, want) => {
+                write!(f, "type mismatch for {k:?}: wanted {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {

@@ -5,13 +5,17 @@
 //! logs read like an iteration trace.
 
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use log::{Level, LevelFilter, Metadata, Record};
-use once_cell::sync::Lazy;
 
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
 static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+fn start() -> Instant {
+    *START.get_or_init(Instant::now)
+}
 
 struct Logger;
 
@@ -24,7 +28,7 @@ impl log::Log for Logger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        let t = START.elapsed().as_secs_f64();
+        let t = start().elapsed().as_secs_f64();
         let lvl = match record.level() {
             Level::Error => "ERR ",
             Level::Warn => "WARN",
@@ -45,7 +49,7 @@ pub fn init() {
     if INSTALLED.swap(true, Ordering::SeqCst) {
         return;
     }
-    Lazy::force(&START);
+    let _ = start(); // pin t=0 to init time
     let level = match std::env::var("FUNCPIPE_LOG").as_deref() {
         Ok("error") => LevelFilter::Error,
         Ok("warn") => LevelFilter::Warn,

@@ -1,15 +1,19 @@
 //! The three faces of every collective agree: analytic closed form,
-//! flow-level simulation, and the real threaded implementation.
+//! flow-level simulation, and the real threaded implementation — for the
+//! classic whole-split transfers and for the chunked multi-flow engine.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use funcpipe::collective::sim::{
-    simulate_pipelined_scatter_reduce, simulate_scatter_reduce,
+    simulate_pipelined_scatter_reduce,
+    simulate_pipelined_scatter_reduce_chunked, simulate_scatter_reduce,
+    simulate_scatter_reduce_chunked,
 };
 use funcpipe::collective::{
-    pipelined::pipelined_scatter_reduce, scatter_reduce::scatter_reduce,
-    sync_time, SyncAlgorithm,
+    pipelined::{pipelined_scatter_reduce, pipelined_scatter_reduce_chunked},
+    scatter_reduce::{scatter_reduce, scatter_reduce_chunked},
+    sync_time, sync_time_chunked, Chunking, SyncAlgorithm,
 };
 use funcpipe::platform::network::BandwidthModel;
 use funcpipe::platform::{MemStore, ObjectStore};
@@ -77,6 +81,106 @@ fn real_implementations_agree_bitwise() {
             results.push(out[0].clone());
         }
         assert_eq!(results[0], results[1], "plain != pipelined at n={n}");
+    }
+}
+
+/// The chunked engine is represented in all three forms, and in each form
+/// it agrees with the unchunked baseline where it must:
+/// * analytic — identical at zero latency (chunking only adds per-op
+///   latency), exactly equal with `chunk_bytes == 0`;
+/// * FlowSim — the plain chunked schedule reproduces the unchunked
+///   makespan at zero latency within 1e-5, the pipelined chunked
+///   schedule is never slower (finer fill) and never beats the link
+///   occupancy bound;
+/// * real — the summed gradients are identical (asserted elementwise to
+///   1e-5 and, for the integer-valued inputs used here, bitwise).
+#[test]
+fn chunked_forms_agree_with_unchunked() {
+    let w = 70.0e6;
+    for n in [2usize, 4, 8] {
+        let s = 280.0e6;
+        // analytic
+        for alg in [
+            SyncAlgorithm::ScatterReduce,
+            SyncAlgorithm::PipelinedScatterReduce,
+        ] {
+            let a = sync_time(alg, s, n, w, 0.0);
+            let b = sync_time_chunked(alg, s, n, w, 0.0, 4 << 20);
+            assert!(
+                (a - b).abs() / a < 1e-5,
+                "analytic {alg:?} n={n}: {a} vs {b}"
+            );
+            assert_eq!(sync_time_chunked(alg, s, n, w, 0.04, 0), sync_time(alg, s, n, w, 0.04));
+        }
+        // FlowSim
+        let net = BandwidthModel::uniform(n, w, 0.0);
+        let plain = simulate_scatter_reduce(n, s, &net);
+        let plain_chunked =
+            simulate_scatter_reduce_chunked(n, s, &net, 4.0e6);
+        assert!(
+            (plain - plain_chunked).abs() / plain < 1e-5,
+            "flowsim plain n={n}: {plain} vs {plain_chunked}"
+        );
+        let piped = simulate_pipelined_scatter_reduce(n, s, &net);
+        let piped_chunked =
+            simulate_pipelined_scatter_reduce_chunked(n, s, &net, 4.0e6);
+        assert!(piped_chunked <= piped * (1.0 + 1e-9));
+        assert!(piped_chunked >= s / w * (1.0 - 1e-9));
+    }
+}
+
+/// Real path: chunked == unchunked for both scatter-reduce variants, over
+/// uneven lengths (len not divisible by n, split not divisible by chunk)
+/// and several window depths.
+#[test]
+fn real_chunked_matches_unchunked_for_all_algorithms() {
+    for n in [2usize, 3, 5] {
+        let len = 10_007; // prime: nothing divides evenly
+        let gen = |rank: usize| -> Vec<f32> {
+            (0..len).map(|i| ((rank * 31 + i * 7) % 127) as f32).collect()
+        };
+        let run = |pipelined: bool, chunking: Chunking| -> Vec<Vec<f32>> {
+            let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+            let handles: Vec<_> = (0..n)
+                .map(|rank| {
+                    let store = store.clone();
+                    let mut g = gen(rank);
+                    std::thread::spawn(move || {
+                        if pipelined {
+                            pipelined_scatter_reduce_chunked(
+                                &store, "c", 0, rank, n, &mut g, None,
+                                Duration::from_secs(30), chunking,
+                            )
+                            .unwrap();
+                        } else {
+                            scatter_reduce_chunked(
+                                &store, "c", 0, rank, n, &mut g, None,
+                                Duration::from_secs(30), chunking,
+                            )
+                            .unwrap();
+                        }
+                        g
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        };
+        for pipelined in [false, true] {
+            let baseline = run(pipelined, Chunking::NONE);
+            for chunking in [Chunking::new(100, 1), Chunking::new(1024, 3)] {
+                let chunked = run(pipelined, chunking);
+                for (a, b) in baseline.iter().zip(&chunked) {
+                    for (x, y) in a.iter().zip(b) {
+                        assert!(
+                            (x - y).abs() < 1e-5,
+                            "pipelined={pipelined} n={n} chunk={}: {x} vs {y}",
+                            chunking.chunk_bytes
+                        );
+                    }
+                }
+                assert_eq!(&baseline, &chunked, "bitwise for integer inputs");
+            }
+        }
     }
 }
 
