@@ -1,0 +1,53 @@
+//! The `Experiment` session API end to end: one unified config drives
+//! plan → artifact → simulate → (gated) train, with typed reports.
+//!
+//!     cargo run --release --example experiment_session
+//!
+//! This is the library-caller view of exactly what the CLI does:
+//!
+//!     funcpipe plan --model amoebanet-d18 --batch 64 --out plan.json
+//!     funcpipe simulate --plan plan.json
+//!     funcpipe train --plan plan.json
+
+use funcpipe::config::ExperimentConfig;
+use funcpipe::experiment::{Experiment, Format, PlanArtifact, Report, TrainOverrides};
+
+fn main() {
+    // 1. one unified config for the whole session (§3.1's loop)
+    let cfg = ExperimentConfig {
+        model: "amoebanet-d18".into(),
+        global_batch: 64,
+        ..ExperimentConfig::default()
+    };
+    let exp = Experiment::new(cfg).expect("valid config");
+
+    // 2. co-optimize: the Pareto front as a typed PlanReport
+    let plans = exp.plan().expect("planning");
+    print!("{}", plans.render(Format::Table));
+
+    // 3. freeze the recommendation as a serializable artifact
+    let rec = plans.recommended().expect("feasible plan");
+    let path = std::env::temp_dir().join("funcpipe-demo-plan.json");
+    rec.artifact.save(&path).expect("save artifact");
+    println!("\nwrote {} — excerpt:", path.display());
+    let text = rec.artifact.to_json_text();
+    for line in text.lines().take(8) {
+        println!("  {line}");
+    }
+    println!("  ...");
+
+    // 4. anyone (any process) can reload it and act on it
+    let loaded = PlanArtifact::load(&path).expect("load artifact");
+    let exp2 = Experiment::from_artifact(&loaded).expect("compatible artifact");
+    let sim = exp2.simulate(&loaded).expect("simulate");
+    print!("\n{}", sim.render(Format::Table));
+    println!("(same report as JSON: `--format json` on the CLI)");
+
+    // 5. train from the plan — dp/μ/chunking come from the artifact, not
+    //    hand-copied flags (needs `make artifacts` + --features xla-rt)
+    match exp2.train(Some(&loaded), &TrainOverrides::default()) {
+        Ok(run) => print!("\n{}", run.render(Format::Table)),
+        Err(e) => println!("\ntrain skipped ({e:#})"),
+    }
+    std::fs::remove_file(&path).ok();
+}

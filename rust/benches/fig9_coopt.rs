@@ -1,7 +1,13 @@
-//! Bench harness for the paper's fig9 — regenerates the rows/series and
-//! reports wall time (criterion is unavailable offline; harness = false).
+//! Bench harness for the paper's fig9 — regenerates the rows/series
+//! through the shared Report tables and reports wall time (criterion is
+//! unavailable offline; harness = false).
 fn main() {
     let t0 = std::time::Instant::now();
-    funcpipe::bench::fig9();
-    println!("\n[bench] fig9 regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+    for t in funcpipe::bench::fig9() {
+        t.print();
+    }
+    println!(
+        "\n[bench] fig9 regenerated in {:.2}s",
+        t0.elapsed().as_secs_f64()
+    );
 }

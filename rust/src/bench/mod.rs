@@ -1,11 +1,14 @@
 //! Figure/table regeneration harness — one function per table AND figure
-//! of the paper's evaluation (§5). Each prints the same rows/series the
-//! paper reports; `cargo bench` wraps these with timing, and
-//! `funcpipe fig <id>` runs them directly. DESIGN.md §5 maps ids→modules.
+//! of the paper's evaluation (§5). Each *returns* the same rows/series the
+//! paper reports as [`Table`] values, rendered through the CLI's
+//! `Report` path (`experiment::TableSet`) — so `funcpipe fig <id>
+//! --format table|json`, `cargo bench` and library callers all consume
+//! identical output through one path. DESIGN.md §5 maps ids→modules.
 
 use crate::baselines::{evaluate_baseline, BaselineKind};
 use crate::collective::{self, SyncAlgorithm};
 use crate::model::{merge_layers, zoo, MergeCriterion, ModelProfile, Plan};
+use crate::pipeline::rel_err_pct;
 use crate::pipeline::simulate::simulate_iteration_noisy;
 use crate::planner::bayes::BayesOpt;
 use crate::planner::tpdmp::Tpdmp;
@@ -41,7 +44,8 @@ fn funcpipe_sweep(
 
 /// Fig. 1: (a) LambdaML's communication bottleneck on AmoebaNet-D36 with
 /// 8 workers; (b) three configurations (TPDMP=B1, Bayes=B2, FuncPipe).
-pub fn fig1() {
+pub fn fig1() -> Vec<Table> {
+    let mut out = Vec::new();
     let p = PlatformSpec::aws_lambda();
     let m = zoo::amoebanet_d36(&p);
 
@@ -69,7 +73,7 @@ pub fn fig1() {
             format!("{:.2}", comm / compute),
         ]);
     }
-    t.print();
+    out.push(t);
 
     let mb = merge_layers(&m, 8, MergeCriterion::Compute);
     let alpha = (1.0, 2e-4);
@@ -89,12 +93,14 @@ pub fn fig1() {
     if let Some((_, perf, _)) = &fp {
         t.row(["FuncPipe".to_string(), secs(perf.t_iter), usd(perf.c_iter)]);
     }
-    t.print();
+    out.push(t);
+    out
 }
 
 /// Fig. 5: overall performance — 4 models × batch {16, 64, 256},
 /// FuncPipe Pareto points + recommendation vs the four baselines.
-pub fn fig5() {
+pub fn fig5() -> Vec<Table> {
+    let mut out = Vec::new();
     let p = PlatformSpec::aws_lambda();
     for name in zoo::MODEL_NAMES {
         let zoo_m = zoo::by_name(name, &p).unwrap();
@@ -154,14 +160,16 @@ pub fn fig5() {
                     cmp,
                 ]);
             }
-            t.print();
+            out.push(t);
         }
     }
+    out
 }
 
 /// Fig. 6: training-time breakdown (computation / pipeline flush /
 /// synchronization).
-pub fn fig6() {
+pub fn fig6() -> Vec<Table> {
+    let mut out = Vec::new();
     let p = PlatformSpec::aws_lambda();
     let cases = [
         ("bert-large", 16usize),
@@ -196,13 +204,15 @@ pub fn fig6() {
                 ]);
             }
         }
-        t.print();
+        out.push(t);
     }
+    out
 }
 
 /// Fig. 7: scalability — normalized throughput vs total allocated memory
 /// as the global batch grows, FuncPipe vs LambdaML.
-pub fn fig7() {
+pub fn fig7() -> Vec<Table> {
+    let mut out = Vec::new();
     let p = PlatformSpec::aws_lambda();
     for name in ["amoebanet-d18", "amoebanet-d36"] {
         let zoo_m = zoo::by_name(name, &p).unwrap();
@@ -250,14 +260,15 @@ pub fn fig7() {
                 ]);
             }
         }
-        t.print();
+        out.push(t);
     }
+    out
 }
 
 /// Fig. 8: pipelined vs non-pipelined scatter-reduce as the data-parallel
 /// degree grows (D18, 3-stage plan) — training throughput and sync time,
 /// plus the chunked engine's model/flowsim columns (4 MB chunks).
-pub fn fig8() {
+pub fn fig8() -> Vec<Table> {
     let p = PlatformSpec::aws_lambda();
     let m = model_for("amoebanet-d18", &p, 6);
     // the recommended 3-stage shape from §5.5 (d starts at 2)
@@ -323,12 +334,13 @@ pub fn fig8() {
             speedup(perf_plain.t_iter, perf_piped.t_iter),
         ]);
     }
-    t.print();
+    vec![t]
 }
 
 /// Fig. 9 + §5.6: co-optimization vs TPDMP vs Bayes (batch 64), with
 /// solution times.
-pub fn fig9() {
+pub fn fig9() -> Vec<Table> {
+    let mut out = Vec::new();
     let p = PlatformSpec::aws_lambda();
     let alpha_list = DEFAULT_WEIGHTS;
     let mut solve_times = (0.0f64, 0.0f64, 0.0f64);
@@ -374,7 +386,7 @@ pub fn fig9() {
             }
             solve_times.2 += t0.elapsed().as_secs_f64();
         }
-        t.print();
+        out.push(t);
     }
     let n = (zoo::MODEL_NAMES.len() * alpha_list.len()) as f64;
     let mut t = Table::new("§5.6 — average solution time per configuration")
@@ -382,12 +394,14 @@ pub fn fig9() {
     t.row(["FuncPipe (B&B)".to_string(), secs(solve_times.0 / n)]);
     t.row(["TPDMP (grid)".to_string(), secs(solve_times.1 / n)]);
     t.row(["Bayes (100 rounds)".to_string(), secs(solve_times.2 / n)]);
-    t.print();
+    out.push(t);
+    out
 }
 
 /// Fig. 10: Alibaba Cloud — shared 10 Gb/s OSS cap; ResNet101 & D36 at
 /// batch 64/256; HybridPS is the strongest baseline there (§5.7).
-pub fn fig10() {
+pub fn fig10() -> Vec<Table> {
+    let mut out = Vec::new();
     let p = PlatformSpec::alibaba_fc();
     for name in ["resnet101", "amoebanet-d36"] {
         let zoo_m = zoo::by_name(name, &p).unwrap();
@@ -416,14 +430,16 @@ pub fn fig10() {
                     usd(rec.perf.c_iter),
                 ]);
             }
-            t.print();
+            out.push(t);
         }
     }
+    out
 }
 
 /// Fig. 11: iteration time/cost as function bandwidth scales 1×..20×,
 /// plus the GPU reference points.
-pub fn fig11() {
+pub fn fig11() -> Vec<Table> {
+    let mut out = Vec::new();
     for name in zoo::MODEL_NAMES {
         let mut t = Table::new(format!(
             "Fig 11 — bandwidth sweep, {name} batch 64"
@@ -477,13 +493,14 @@ pub fn fig11() {
             secs(gpu_t * 1.1),
             usd(P3_2XLARGE.cost(gpu_t) * 1.3),
         ]);
-        t.print();
+        out.push(t);
     }
+    out
 }
 
 /// Table 3: performance-model prediction error, validated against the
 /// discrete-event simulator on the recommended plans.
-pub fn table3() {
+pub fn table3() -> Vec<Table> {
     let p = PlatformSpec::aws_lambda();
     let mut t = Table::new(
         "Table 3 — perf-model vs DES prediction error (t_iter)",
@@ -514,9 +531,7 @@ pub fn table3() {
                     SyncAlgorithm::PipelinedScatterReduce,
                     Some((0xBEEF ^ (gb as u64) << 8 ^ i as u64, 0.15)),
                 );
-                cell_errs.push(
-                    (pt.perf.t_iter - sim.t_iter).abs() / sim.t_iter * 100.0,
-                );
+                cell_errs.push(rel_err_pct(pt.perf.t_iter, sim.t_iter));
             }
             let err =
                 cell_errs.iter().sum::<f64>() / cell_errs.len() as f64;
@@ -540,7 +555,7 @@ pub fn table3() {
             grand.iter().sum::<f64>() / grand.len().max(1) as f64
         ),
     ]);
-    t.print();
+    vec![t]
 }
 
 /// Quick sanity used by tests: the headline Fig 5 comparison for one case.

@@ -1,0 +1,359 @@
+//! CLI plumbing for the `funcpipe` binary: strict flag parsing (unknown
+//! flags are errors, not silent no-ops) and the flag → unified-config /
+//! train-override mappings. Lives in the library so the behaviour is
+//! testable; `main.rs` is a thin dispatcher over this module and
+//! [`experiment`](crate::experiment).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::collective::SyncAlgorithm;
+use crate::config::ExperimentConfig;
+use crate::experiment::{Format, TrainOverrides};
+use crate::model::MergeCriterion;
+
+/// Flags that shape the unified [`ExperimentConfig`]; accepted by every
+/// config-driven subcommand.
+pub const CONFIG_FLAGS: &[&str] = &[
+    "config",
+    "model",
+    "platform",
+    "batch",
+    "micro-batch",
+    "merge-layers",
+    "merge-criterion",
+    "sync",
+    "bandwidth-scale",
+    "chunk-bytes",
+    "chunks-in-flight",
+    "steps",
+    "lr",
+    "lifetime",
+    "artifacts",
+    "format",
+];
+
+/// Config-shaping flags that clash with `--plan`: the artifact already
+/// froze them, so overriding them silently would betray the plan.
+pub const PLAN_EXCLUSIVE_FLAGS: &[&str] = &[
+    "config",
+    "model",
+    "platform",
+    "batch",
+    "micro-batch",
+    "merge-layers",
+    "merge-criterion",
+    "sync",
+    "bandwidth-scale",
+];
+
+/// The flag allowlist for a subcommand; `None` = unknown subcommand.
+pub fn flags_for(cmd: &str) -> Option<Vec<&'static str>> {
+    let extra: &[&str] = match cmd {
+        "plan" => &["out"],
+        "simulate" => &["plan"],
+        "train" => &["plan", "dp", "mu"],
+        "baseline" => &[],
+        "profile" => return Some(vec!["artifacts", "format"]),
+        "fig" => return Some(vec!["format"]),
+        _ => return None,
+    };
+    let mut all = extra.to_vec();
+    all.extend_from_slice(CONFIG_FLAGS);
+    Some(all)
+}
+
+/// Minimal flag parser: `--key value` pairs, every flag takes a value.
+/// Strict on every failure mode that used to be a silent no-op: a flag
+/// not in `allowed` (the `--chunk-byte` typo class), a duplicated flag,
+/// a flag without a value, and stray positional arguments (a forgotten
+/// `--plan` must not silently run a different experiment) are all
+/// errors.
+pub fn parse_flags(
+    cmd: &str,
+    args: &[String],
+    allowed: &[&str],
+) -> Result<HashMap<String, String>> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let Some(key) = args[i].strip_prefix("--") else {
+            bail!(
+                "unexpected argument {:?} for `{cmd}` (flags are `--key value`)",
+                args[i]
+            );
+        };
+        if !allowed.contains(&key) {
+            bail!(
+                "unknown flag --{key} for `{cmd}` (supported: {})",
+                allowed
+                    .iter()
+                    .map(|f| format!("--{f}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            );
+        }
+        if map.contains_key(key) {
+            bail!("flag --{key} given more than once");
+        }
+        if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            map.insert(key.to_string(), args[i + 1].clone());
+            i += 2;
+        } else {
+            bail!("flag --{key} requires a value");
+        }
+    }
+    Ok(map)
+}
+
+/// When `--plan` is present, flags that would re-shape the frozen config
+/// are rejected with a pointer at the right fix.
+pub fn check_plan_conflicts(flags: &HashMap<String, String>) -> Result<()> {
+    if !flags.contains_key("plan") {
+        return Ok(());
+    }
+    for f in PLAN_EXCLUSIVE_FLAGS {
+        if flags.contains_key(*f) {
+            bail!(
+                "--{f} conflicts with --plan: the artifact already fixes it \
+                 (edit the artifact's config or re-run `plan`)"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Restrict to a subset (e.g. `simulate --plan` takes nothing else: the
+/// artifact is the whole input).
+pub fn only_flags(
+    flags: &HashMap<String, String>,
+    allowed: &[&str],
+    what: &str,
+) -> Result<()> {
+    for key in flags.keys() {
+        if !allowed.contains(&key.as_str()) {
+            bail!(
+                "--{key} is not meaningful with {what} (allowed: {})",
+                allowed
+                    .iter()
+                    .map(|f| format!("--{f}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Build the unified config from `--config` (file) plus flag overrides.
+pub fn config_from_flags(
+    flags: &HashMap<String, String>,
+) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = flags.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        ExperimentConfig::from_json_text(&text)?
+    } else {
+        ExperimentConfig::default()
+    };
+    if let Some(m) = flags.get("model") {
+        cfg.model = m.clone();
+    }
+    if let Some(p) = flags.get("platform") {
+        cfg.platform = p.clone();
+    }
+    if let Some(b) = flags.get("batch") {
+        cfg.global_batch = b.parse().context("--batch")?;
+    }
+    if let Some(b) = flags.get("micro-batch") {
+        cfg.micro_batch = b.parse().context("--micro-batch")?;
+    }
+    if let Some(l) = flags.get("merge-layers") {
+        cfg.merge_layers = l.parse().context("--merge-layers")?;
+    }
+    if let Some(c) = flags.get("merge-criterion") {
+        cfg.merge_criterion = MergeCriterion::parse(c).with_context(|| {
+            format!("--merge-criterion {c:?} (compute|params|activations)")
+        })?;
+    }
+    if let Some(s) = flags.get("sync") {
+        cfg.sync_alg = SyncAlgorithm::parse(s).with_context(|| {
+            format!("--sync {s:?} (pipelined|scatter-reduce)")
+        })?;
+    }
+    if let Some(s) = flags.get("bandwidth-scale") {
+        cfg.bandwidth_scale = s.parse().context("--bandwidth-scale")?;
+    }
+    if let Some(s) = flags.get("chunk-bytes") {
+        cfg.chunk_bytes = s.parse().context("--chunk-bytes")?;
+    }
+    if let Some(s) = flags.get("chunks-in-flight") {
+        cfg.chunks_in_flight = s.parse().context("--chunks-in-flight")?;
+    }
+    if let Some(s) = flags.get("steps") {
+        cfg.steps = s.parse().context("--steps")?;
+    }
+    if let Some(s) = flags.get("lr") {
+        cfg.lr = s.parse().context("--lr")?;
+    }
+    if let Some(s) = flags.get("lifetime") {
+        cfg.lifetime_s = s.parse().context("--lifetime")?;
+    }
+    if let Some(dir) = flags.get("artifacts") {
+        cfg.artifacts_dir = dir.clone();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Per-run trainer overrides from flags (all optional; absent = derive
+/// from the plan/config).
+pub fn train_overrides_from_flags(
+    flags: &HashMap<String, String>,
+) -> Result<TrainOverrides> {
+    let mut ov = TrainOverrides::default();
+    if let Some(v) = flags.get("dp") {
+        ov.dp = Some(v.parse().context("--dp")?);
+    }
+    if let Some(v) = flags.get("mu") {
+        ov.mu = Some(v.parse().context("--mu")?);
+    }
+    if let Some(v) = flags.get("steps") {
+        ov.steps = Some(v.parse().context("--steps")?);
+    }
+    if let Some(v) = flags.get("lr") {
+        ov.lr = Some(v.parse().context("--lr")?);
+    }
+    if let Some(v) = flags.get("lifetime") {
+        ov.lifetime_s = Some(v.parse().context("--lifetime")?);
+    }
+    if let Some(v) = flags.get("chunk-bytes") {
+        ov.chunk_bytes = Some(v.parse().context("--chunk-bytes")?);
+    }
+    if let Some(v) = flags.get("chunks-in-flight") {
+        ov.chunks_in_flight = Some(v.parse().context("--chunks-in-flight")?);
+    }
+    if let Some(v) = flags.get("artifacts") {
+        ov.artifacts_dir = Some(v.clone());
+    }
+    Ok(ov)
+}
+
+/// `--format table|json` (default: table).
+pub fn format_from_flags(flags: &HashMap<String, String>) -> Result<Format> {
+    match flags.get("format") {
+        Some(s) => Format::parse(s),
+        None => Ok(Format::Table),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn rejects_unknown_and_duplicate_flags() {
+        let allowed = flags_for("plan").unwrap();
+        // the motivating typo: --chunk-byte (missing "s")
+        assert!(parse_flags("plan", &argv(&["--chunk-byte", "1"]), &allowed)
+            .is_err());
+        assert!(parse_flags(
+            "plan",
+            &argv(&["--model", "a", "--model", "b"]),
+            &allowed
+        )
+        .is_err());
+        let ok =
+            parse_flags("plan", &argv(&["--chunk-bytes", "1024"]), &allowed)
+                .unwrap();
+        assert_eq!(ok.get("chunk-bytes").unwrap(), "1024");
+    }
+
+    #[test]
+    fn rejects_positionals_and_missing_values() {
+        let allowed = flags_for("simulate").unwrap();
+        // forgotten `--plan`: the file name must not be silently dropped
+        assert!(
+            parse_flags("simulate", &argv(&["plan.json"]), &allowed).is_err()
+        );
+        // a flag swallowing the next flag instead of a value
+        assert!(parse_flags(
+            "simulate",
+            &argv(&["--plan", "--format", "json"]),
+            &allowed
+        )
+        .is_err());
+        // trailing flag without a value
+        assert!(
+            parse_flags("simulate", &argv(&["--plan"]), &allowed).is_err()
+        );
+        // negative numbers are values, not flags
+        let ok = parse_flags(
+            "simulate",
+            &argv(&["--bandwidth-scale", "-1"]),
+            &allowed,
+        )
+        .unwrap();
+        assert_eq!(ok.get("bandwidth-scale").unwrap(), "-1");
+    }
+
+    #[test]
+    fn new_config_flags_flow_through() {
+        let allowed = flags_for("plan").unwrap();
+        let flags = parse_flags(
+            "plan",
+            &argv(&[
+                "--sync",
+                "scatter-reduce",
+                "--micro-batch",
+                "2",
+                "--merge-criterion",
+                "params",
+                "--steps",
+                "7",
+            ]),
+            &allowed,
+        )
+        .unwrap();
+        let cfg = config_from_flags(&flags).unwrap();
+        assert_eq!(cfg.sync_alg, SyncAlgorithm::ScatterReduce);
+        assert_eq!(cfg.micro_batch, 2);
+        assert_eq!(cfg.merge_criterion, MergeCriterion::ParamSize);
+        assert_eq!(cfg.steps, 7);
+    }
+
+    #[test]
+    fn plan_conflicts_are_rejected() {
+        let mut flags = HashMap::new();
+        flags.insert("plan".to_string(), "p.json".to_string());
+        check_plan_conflicts(&flags).unwrap();
+        flags.insert("model".to_string(), "bert-large".to_string());
+        assert!(check_plan_conflicts(&flags).is_err());
+    }
+
+    #[test]
+    fn overrides_parse() {
+        let mut flags = HashMap::new();
+        flags.insert("dp".to_string(), "4".to_string());
+        flags.insert("lifetime".to_string(), "30".to_string());
+        let ov = train_overrides_from_flags(&flags).unwrap();
+        assert_eq!(ov.dp, Some(4));
+        assert_eq!(ov.lifetime_s, Some(30.0));
+        assert_eq!(ov.mu, None);
+    }
+
+    #[test]
+    fn format_flag() {
+        let mut flags = HashMap::new();
+        assert_eq!(format_from_flags(&flags).unwrap(), Format::Table);
+        flags.insert("format".to_string(), "json".to_string());
+        assert_eq!(format_from_flags(&flags).unwrap(), Format::Json);
+        flags.insert("format".to_string(), "xml".to_string());
+        assert!(format_from_flags(&flags).is_err());
+    }
+}

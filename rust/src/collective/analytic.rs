@@ -11,6 +11,23 @@ pub enum SyncAlgorithm {
 }
 
 impl SyncAlgorithm {
+    /// Stable wire name — the `"sync"` value in configs and plan
+    /// artifacts. `parse` is its inverse.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SyncAlgorithm::ScatterReduce => "scatter-reduce",
+            SyncAlgorithm::PipelinedScatterReduce => "pipelined",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SyncAlgorithm> {
+        match s {
+            "scatter-reduce" => Some(SyncAlgorithm::ScatterReduce),
+            "pipelined" => Some(SyncAlgorithm::PipelinedScatterReduce),
+            _ => None,
+        }
+    }
+
     /// The (γ, δ) parameters of eq. (9): `t_s = γ·s/W + δ·t_lat`.
     ///
     /// Pipelined: γ=2, δ=2+n. Non-pipelined (from eq. (1)): γ=3−2/n, δ=4.

@@ -1,16 +1,27 @@
-//! JSON experiment configuration: everything the CLI accepts can also be
-//! given as a config file (`funcpipe plan --config exp.json`), the
-//! "config system" a downstream user drives sweeps with.
+//! The unified experiment configuration: ONE config drives the whole
+//! session lifecycle — `plan`, `simulate`, `train`, `baseline` — through
+//! the [`Experiment`](crate::experiment::Experiment) facade. Everything
+//! the CLI accepts can also be given as a config file
+//! (`funcpipe plan --config exp.json`), and the config serializes back
+//! out ([`ExperimentConfig::to_json`]) so it can travel inside a plan
+//! artifact (`funcpipe plan --out plan.json`).
+//!
+//! Historically the trainer had its own disjoint
+//! [`TrainConfig`](crate::trainer::TrainConfig) and the chunking knob
+//! meant different things on each side; the trainer knobs (`steps`,
+//! `lr`, `lifetime_s`, `throttle`, chunking) now live here and
+//! `TrainConfig` is derived from this struct (plus the plan) by
+//! [`Experiment::train_config`](crate::experiment::Experiment::train_config).
 
 use anyhow::{bail, Context, Result};
 
-use crate::collective::SyncAlgorithm;
+use crate::collective::{Chunking, SyncAlgorithm};
 use crate::model::{zoo, MergeCriterion, ModelProfile};
 use crate::platform::PlatformSpec;
 use crate::util::json::Json;
 
 /// A fully-resolved experiment configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
     pub model: String,
     pub platform: String,
@@ -20,12 +31,24 @@ pub struct ExperimentConfig {
     pub merge_criterion: MergeCriterion,
     pub sync_alg: SyncAlgorithm,
     pub bandwidth_scale: f64,
-    /// Collective chunk size in bytes (0 = unchunked); flows into the
-    /// planner's sync model (`plan`/`simulate`). The trainer takes its
-    /// chunking from the `train` CLI flags (`--chunk-bytes`,
-    /// `--chunks-in-flight`), not from this experiment config.
+    /// Collective chunk size in bytes (0 = unchunked). One knob for the
+    /// whole session: the planner's sync model prices it and the trainer
+    /// streams gradients with it, so plans are costed with the policy
+    /// they will actually run under.
     pub chunk_bytes: usize,
+    /// Window of in-flight (uploaded but un-consumed) chunks per worker.
+    pub chunks_in_flight: usize,
     pub weights: Vec<(f64, f64)>,
+    // -- trainer session knobs (formerly TrainConfig-only) ---------------
+    /// Directory of the AOT artifacts the trainer/profiler execute.
+    pub artifacts_dir: String,
+    pub steps: usize,
+    pub lr: f64,
+    /// Simulated function lifetime in seconds (infinite = no restarts).
+    /// Omitted from JSON when infinite.
+    pub lifetime_s: f64,
+    /// Per-worker storage throttle `(bytes/s, latency seconds)`.
+    pub throttle: Option<(f64, f64)>,
 }
 
 impl Default for ExperimentConfig {
@@ -40,14 +63,45 @@ impl Default for ExperimentConfig {
             sync_alg: SyncAlgorithm::PipelinedScatterReduce,
             bandwidth_scale: 1.0,
             chunk_bytes: 0,
+            chunks_in_flight: Chunking::NONE.in_flight,
             weights: crate::planner::DEFAULT_WEIGHTS.to_vec(),
+            artifacts_dir: "artifacts".into(),
+            steps: 20,
+            lr: 0.2,
+            lifetime_s: f64::INFINITY,
+            throttle: None,
         }
     }
 }
 
 impl ExperimentConfig {
     pub fn from_json_text(text: &str) -> Result<Self> {
-        let j = Json::parse(text).context("parsing config JSON")?;
+        Self::from_json(&Json::parse(text).context("parsing config JSON")?)
+    }
+
+    /// Parse from an already-parsed JSON object (used directly by the
+    /// plan artifact, which embeds the config). Unknown keys are
+    /// rejected so config typos fail loudly, like unknown CLI flags.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        const KNOWN: [&str; 16] = [
+            "model",
+            "platform",
+            "global_batch",
+            "micro_batch",
+            "merge_layers",
+            "merge_criterion",
+            "sync",
+            "bandwidth_scale",
+            "chunk_bytes",
+            "chunks_in_flight",
+            "weights",
+            "artifacts_dir",
+            "steps",
+            "lr",
+            "lifetime_s",
+            "throttle",
+        ];
+        j.check_keys(&KNOWN).context("config")?;
         let mut cfg = Self::default();
         if let Some(v) = j.get("model") {
             cfg.model = v.as_str().context("model must be a string")?.into();
@@ -65,25 +119,23 @@ impl ExperimentConfig {
             cfg.merge_layers = v.as_usize().context("merge_layers")?;
         }
         if let Some(v) = j.get("merge_criterion") {
-            cfg.merge_criterion = match v.as_str() {
-                Some("compute") => MergeCriterion::Compute,
-                Some("params") => MergeCriterion::ParamSize,
-                Some("activations") => MergeCriterion::ActivationSize,
-                other => bail!("unknown merge_criterion {other:?}"),
-            };
+            let s = v.as_str().context("merge_criterion string")?;
+            cfg.merge_criterion = MergeCriterion::parse(s)
+                .with_context(|| format!("unknown merge_criterion {s:?}"))?;
         }
         if let Some(v) = j.get("sync") {
-            cfg.sync_alg = match v.as_str() {
-                Some("pipelined") => SyncAlgorithm::PipelinedScatterReduce,
-                Some("scatter-reduce") => SyncAlgorithm::ScatterReduce,
-                other => bail!("unknown sync {other:?}"),
-            };
+            let s = v.as_str().context("sync string")?;
+            cfg.sync_alg = SyncAlgorithm::parse(s)
+                .with_context(|| format!("unknown sync {s:?}"))?;
         }
         if let Some(v) = j.get("bandwidth_scale") {
             cfg.bandwidth_scale = v.as_f64().context("bandwidth_scale")?;
         }
         if let Some(v) = j.get("chunk_bytes") {
             cfg.chunk_bytes = v.as_usize().context("chunk_bytes")?;
+        }
+        if let Some(v) = j.get("chunks_in_flight") {
+            cfg.chunks_in_flight = v.as_usize().context("chunks_in_flight")?;
         }
         if let Some(v) = j.get("weights") {
             cfg.weights = v
@@ -92,6 +144,9 @@ impl ExperimentConfig {
                 .iter()
                 .map(|pair| -> Result<(f64, f64)> {
                     let a = pair.as_arr().context("weight pair")?;
+                    if a.len() != 2 {
+                        bail!("weight pair must have two entries");
+                    }
                     Ok((
                         a[0].as_f64().context("w0")?,
                         a[1].as_f64().context("w1")?,
@@ -99,8 +154,73 @@ impl ExperimentConfig {
                 })
                 .collect::<Result<Vec<_>>>()?;
         }
+        if let Some(v) = j.get("artifacts_dir") {
+            cfg.artifacts_dir =
+                v.as_str().context("artifacts_dir string")?.into();
+        }
+        if let Some(v) = j.get("steps") {
+            cfg.steps = v.as_usize().context("steps")?;
+        }
+        if let Some(v) = j.get("lr") {
+            cfg.lr = v.as_f64().context("lr")?;
+        }
+        if let Some(v) = j.get("lifetime_s") {
+            cfg.lifetime_s = v.as_f64().context("lifetime_s")?;
+        }
+        if let Some(v) = j.get("throttle") {
+            let a = v.as_arr().context("throttle must be [bytes/s, lat_s]")?;
+            if a.len() != 2 {
+                bail!("throttle must be [bytes/s, lat_s]");
+            }
+            cfg.throttle = Some((
+                a[0].as_f64().context("throttle bytes/s")?,
+                a[1].as_f64().context("throttle lat_s")?,
+            ));
+        }
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Serialize; exact inverse of [`ExperimentConfig::from_json`].
+    /// Non-finite `lifetime_s` (the "no restarts" default) is expressed
+    /// by omitting the key, since JSON has no infinity.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("model", Json::str(self.model.as_str())),
+            ("platform", Json::str(self.platform.as_str())),
+            ("global_batch", Json::Num(self.global_batch as f64)),
+            ("micro_batch", Json::Num(self.micro_batch as f64)),
+            ("merge_layers", Json::Num(self.merge_layers as f64)),
+            ("merge_criterion", Json::str(self.merge_criterion.as_str())),
+            ("sync", Json::str(self.sync_alg.as_str())),
+            ("bandwidth_scale", Json::Num(self.bandwidth_scale)),
+            ("chunk_bytes", Json::Num(self.chunk_bytes as f64)),
+            ("chunks_in_flight", Json::Num(self.chunks_in_flight as f64)),
+            (
+                "weights",
+                Json::Arr(
+                    self.weights
+                        .iter()
+                        .map(|&(a, b)| {
+                            Json::Arr(vec![Json::Num(a), Json::Num(b)])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("artifacts_dir", Json::str(self.artifacts_dir.as_str())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("lr", Json::Num(self.lr)),
+        ];
+        if self.lifetime_s.is_finite() {
+            pairs.push(("lifetime_s", Json::Num(self.lifetime_s)));
+        }
+        if let Some((bps, lat)) = self.throttle {
+            pairs.push((
+                "throttle",
+                Json::Arr(vec![Json::Num(bps), Json::Num(lat)]),
+            ));
+        }
+        Json::obj(pairs)
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -116,6 +236,27 @@ impl ExperimentConfig {
         }
         if self.merge_layers == 0 {
             bail!("merge_layers must be >= 1");
+        }
+        if !self.bandwidth_scale.is_finite() || self.bandwidth_scale <= 0.0 {
+            bail!("bandwidth_scale must be a positive finite number");
+        }
+        if self.chunks_in_flight == 0 {
+            bail!("chunks_in_flight must be >= 1");
+        }
+        if self.steps == 0 {
+            bail!("steps must be >= 1");
+        }
+        if !(self.lr.is_finite() && self.lr > 0.0) {
+            bail!("lr must be a positive finite number");
+        }
+        // NaN must fail too, so compare through the negation
+        if self.lifetime_s.is_nan() || self.lifetime_s <= 0.0 {
+            bail!("lifetime_s must be positive");
+        }
+        if let Some((bps, lat)) = self.throttle {
+            if !(bps > 0.0 && lat >= 0.0) {
+                bail!("throttle must be (bytes/s > 0, lat_s >= 0)");
+            }
         }
         self.resolve_platform()?;
         Ok(())
@@ -144,6 +285,12 @@ impl ExperimentConfig {
     pub fn n_micro_global(&self) -> usize {
         self.global_batch / self.micro_batch
     }
+
+    /// The session's chunked-streaming policy (`Chunking::NONE` when
+    /// `chunk_bytes` is 0).
+    pub fn chunking(&self) -> Chunking {
+        Chunking::new(self.chunk_bytes, self.chunks_in_flight)
+    }
 }
 
 #[cfg(test)]
@@ -170,8 +317,46 @@ mod tests {
     }
 
     #[test]
+    fn parses_trainer_knobs() {
+        let cfg = ExperimentConfig::from_json_text(
+            r#"{"steps": 7, "lr": 0.05, "lifetime_s": 30.5,
+                "throttle": [40000000, 0.002], "chunks_in_flight": 8,
+                "artifacts_dir": "my-artifacts"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.steps, 7);
+        assert_eq!(cfg.lr, 0.05);
+        assert_eq!(cfg.lifetime_s, 30.5);
+        assert_eq!(cfg.throttle, Some((40.0e6, 0.002)));
+        assert_eq!(cfg.chunks_in_flight, 8);
+        assert_eq!(cfg.artifacts_dir, "my-artifacts");
+        assert_eq!(cfg.chunking().in_flight, 8);
+        assert!(!cfg.chunking().is_chunked());
+    }
+
+    #[test]
     fn defaults_are_valid() {
         ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity() {
+        let cfg = ExperimentConfig {
+            model: "resnet101".into(),
+            chunk_bytes: 1 << 20,
+            throttle: Some((0.5e6, 0.01)),
+            lifetime_s: 42.0,
+            ..ExperimentConfig::default()
+        };
+        let j = cfg.to_json();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back, cfg);
+        // and the default (infinite lifetime, no throttle) omits both
+        let d = ExperimentConfig::default();
+        let dj = d.to_json();
+        assert!(dj.get("lifetime_s").is_none());
+        assert!(dj.get("throttle").is_none());
+        assert_eq!(ExperimentConfig::from_json(&dj).unwrap(), d);
     }
 
     #[test]
@@ -186,5 +371,20 @@ mod tests {
             r#"{"global_batch": 10, "micro_batch": 4}"#
         )
         .is_err());
+        // unknown keys fail loudly, like unknown CLI flags
+        assert!(ExperimentConfig::from_json_text(
+            r#"{"chunk_byte": 1024}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json_text(r#"{"steps": 0}"#).is_err());
+        for bad in ["0", "-1", "1e400"] {
+            assert!(
+                ExperimentConfig::from_json_text(&format!(
+                    r#"{{"bandwidth_scale": {bad}}}"#
+                ))
+                .is_err(),
+                "bandwidth_scale {bad} accepted"
+            );
+        }
     }
 }

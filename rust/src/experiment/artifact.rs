@@ -1,0 +1,210 @@
+//! The serializable plan artifact — FuncPipe's deployable unit.
+//!
+//! `funcpipe plan --out plan.json` freezes the co-optimizer's decision
+//! (partition cuts, per-stage tiers, data-parallel degree, micro-batch
+//! layout) *together with the config that produced it* (model, platform,
+//! sync algorithm, chunking policy, trainer knobs), so
+//! `simulate --plan plan.json` and `train --plan plan.json` reconstruct
+//! the exact session without the user re-deriving `--dp`/`--mu` by hand
+//! — the §3.1 profile → optimize → deploy → train loop as one file.
+//!
+//! Serialization is a strict round-trip: `to_json_text` →
+//! [`PlanArtifact::from_json_text`] → `to_json_text` is the identity on
+//! the text (deterministic key order, shortest-round-trip float
+//! formatting); `rust/tests/plan_artifact.rs` property-tests this.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::model::Plan;
+use crate::util::json::Json;
+
+/// Bumped when the on-disk layout changes incompatibly; loaders reject
+/// versions they do not understand instead of misreading them.
+pub const PLAN_SCHEMA_VERSION: usize = 1;
+
+/// A frozen plan plus everything needed to act on it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanArtifact {
+    pub version: usize,
+    /// The unified config the planner ran with (and the trainer will
+    /// run with) — model, platform, batch layout, sync/chunking policy,
+    /// trainer knobs.
+    pub config: ExperimentConfig,
+    /// The §3.4 decision variable.
+    pub plan: Plan,
+    /// The (α1, α2) weight pair whose solve produced this plan.
+    pub weights: (f64, f64),
+    /// Perf-model prediction at plan time. Informational: `simulate`
+    /// and `train` recompute from the config, so a hand-edited artifact
+    /// cannot smuggle in stale numbers.
+    pub predicted_t_iter: f64,
+    pub predicted_c_iter: f64,
+}
+
+impl PlanArtifact {
+    pub fn new(
+        config: ExperimentConfig,
+        plan: Plan,
+        weights: (f64, f64),
+        predicted_t_iter: f64,
+        predicted_c_iter: f64,
+    ) -> Self {
+        Self {
+            version: PLAN_SCHEMA_VERSION,
+            config,
+            plan,
+            weights,
+            predicted_t_iter,
+            predicted_c_iter,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(self.version as f64)),
+            ("config", self.config.to_json()),
+            ("plan", self.plan.to_json()),
+            (
+                "weights",
+                Json::Arr(vec![
+                    Json::Num(self.weights.0),
+                    Json::Num(self.weights.1),
+                ]),
+            ),
+            (
+                "predicted",
+                Json::obj(vec![
+                    ("t_iter", Json::Num(self.predicted_t_iter)),
+                    ("c_iter", Json::Num(self.predicted_c_iter)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Strict parse: unknown keys at any level we own are errors, like
+    /// unknown CLI flags and unknown config keys — a hand-edited
+    /// artifact with a misplaced or typo'd key must fail loudly, not
+    /// silently run the old policy.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        j.check_keys(&["version", "config", "plan", "weights", "predicted"])
+            .context("plan artifact")?;
+        let version = j.field_usize("version").context("plan artifact")?;
+        if version != PLAN_SCHEMA_VERSION {
+            bail!(
+                "unsupported plan artifact version {version} \
+                 (this build reads version {PLAN_SCHEMA_VERSION})"
+            );
+        }
+        let config = ExperimentConfig::from_json(j.field("config")?)
+            .context("plan artifact config")?;
+        let plan =
+            Plan::from_json(j.field("plan")?).context("plan artifact plan")?;
+        let w = j.field_arr("weights")?;
+        if w.len() != 2 {
+            bail!("plan artifact weights must be [α1, α2]");
+        }
+        let predicted = j.field("predicted")?;
+        predicted
+            .check_keys(&["t_iter", "c_iter"])
+            .context("plan artifact predicted")?;
+        Ok(Self {
+            version,
+            config,
+            plan,
+            weights: (
+                w[0].as_f64().context("weight α1")?,
+                w[1].as_f64().context("weight α2")?,
+            ),
+            predicted_t_iter: predicted.field_f64("t_iter")?,
+            predicted_c_iter: predicted.field_f64("c_iter")?,
+        })
+    }
+
+    /// Pretty JSON text, newline-terminated (the `--out` file format).
+    pub fn to_json_text(&self) -> String {
+        let mut s = self.to_json().pretty();
+        s.push('\n');
+        s
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        Self::from_json(&Json::parse(text).context("parsing plan artifact")?)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json_text())
+            .with_context(|| format!("writing plan artifact {}", path.display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan artifact {}", path.display()))?;
+        Self::from_json_text(&text)
+            .with_context(|| format!("parsing plan artifact {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> PlanArtifact {
+        PlanArtifact::new(
+            ExperimentConfig::default(),
+            Plan {
+                cuts: vec![1, 3],
+                dp: 2,
+                stage_tiers: vec![7, 7, 7],
+                n_micro_global: 16,
+            },
+            (1.0, 2e-4),
+            3.25,
+            0.000715,
+        )
+    }
+
+    #[test]
+    fn text_roundtrip_is_identity() {
+        let a = sample();
+        let t1 = a.to_json_text();
+        let b = PlanArtifact::from_json_text(&t1).unwrap();
+        assert_eq!(b, a);
+        assert_eq!(b.to_json_text(), t1);
+    }
+
+    #[test]
+    fn rejects_future_versions_and_garbage() {
+        let mut j = sample().to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".into(), Json::Num(99.0));
+        }
+        assert!(PlanArtifact::from_json(&j).is_err());
+        assert!(PlanArtifact::from_json_text("{}").is_err());
+        assert!(PlanArtifact::from_json_text("not json").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_keys_at_every_owned_level() {
+        // a misplaced config knob at the artifact's top level
+        let mut top = sample().to_json();
+        if let Json::Obj(o) = &mut top {
+            o.insert("chunk_bytes".into(), Json::Num(1048576.0));
+        }
+        assert!(PlanArtifact::from_json(&top).is_err());
+
+        // a typo'd key inside the plan object
+        let mut nested = sample().to_json();
+        if let Json::Obj(o) = &mut nested {
+            let Some(Json::Obj(p)) = o.get_mut("plan") else {
+                panic!("plan object missing")
+            };
+            p.insert("mu".into(), Json::Num(4.0));
+        }
+        assert!(PlanArtifact::from_json(&nested).is_err());
+    }
+}

@@ -1,0 +1,440 @@
+//! The `Experiment` session API — one object that owns the resolved
+//! model + platform and exposes the whole FuncPipe lifecycle (§3.1:
+//! profile → co-optimize → deploy → train) programmatically:
+//!
+//! ```text
+//! let exp = Experiment::new(cfg)?;            // one unified config
+//! let plans = exp.plan()?;                    // PlanReport (Pareto front)
+//! let rec = plans.recommended().unwrap();
+//! rec.artifact.save("plan.json")?;            // serializable artifact
+//! let sim = exp.simulate(&rec.artifact)?;     // SimReport
+//! let run = exp.train(Some(&rec.artifact), &TrainOverrides::default())?;
+//! let base = exp.baselines()?;                // BaselineReport
+//! ```
+//!
+//! The CLI (`rust/src/main.rs`), the `bench::fig*` generators and the
+//! integration tests are thin shells over this module, so every surface
+//! exercises identical code. The [`PlanArtifact`] makes the planner's
+//! decision a file: `funcpipe plan --out plan.json` solves once and
+//! `simulate|train --plan plan.json` replay it — the trainer derives
+//! `dp`/`mu`/chunking from the plan instead of hand-copied flags.
+
+pub mod artifact;
+pub mod report;
+
+pub use artifact::{PlanArtifact, PLAN_SCHEMA_VERSION};
+pub use report::{
+    BaselineReport, BaselineRow, Format, PlanPoint, PlanReport, ProfileReport,
+    ProfileRow, Report, SimReport, TableSet, TrainReport,
+};
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::baselines::{evaluate_baseline, BaselineKind};
+use crate::collective::Chunking;
+use crate::config::ExperimentConfig;
+use crate::model::{zoo, ModelProfile};
+use crate::pipeline::simulate_iteration;
+use crate::planner::{pareto_front, recommend, sweep, CoOptimizer, PerfModel};
+use crate::platform::pricing::{C5_9XLARGE, R7_2XLARGE};
+use crate::platform::PlatformSpec;
+use crate::trainer;
+
+/// Explicit per-run overrides for [`Experiment::train`]: every field
+/// defaults to "take it from the plan/config". CLI flags map 1:1 onto
+/// these, which is what keeps `--dp`/`--mu` available as *overrides*
+/// while the plan artifact supplies them normally.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TrainOverrides {
+    pub dp: Option<usize>,
+    pub mu: Option<usize>,
+    pub steps: Option<usize>,
+    pub lr: Option<f64>,
+    pub lifetime_s: Option<f64>,
+    pub chunk_bytes: Option<usize>,
+    pub chunks_in_flight: Option<usize>,
+    pub artifacts_dir: Option<String>,
+}
+
+/// One experiment session: a unified config plus the model and platform
+/// it resolves to, with the full lifecycle as methods.
+pub struct Experiment {
+    cfg: ExperimentConfig,
+    platform: PlatformSpec,
+    model: ModelProfile,
+}
+
+impl Experiment {
+    pub fn new(cfg: ExperimentConfig) -> Result<Self> {
+        cfg.validate()?;
+        let platform = cfg.resolve_platform()?;
+        let model = cfg.resolve_model(&platform)?;
+        Ok(Self { cfg, platform, model })
+    }
+
+    /// Reconstruct the session a plan artifact was produced by (the
+    /// `simulate|train --plan plan.json` path). The embedded plan is
+    /// validated against the re-resolved model and platform, so a stale
+    /// or hand-mangled artifact fails here instead of mid-run.
+    pub fn from_artifact(artifact: &PlanArtifact) -> Result<Self> {
+        let exp = Self::new(artifact.config.clone())?;
+        exp.check_artifact(artifact)?;
+        Ok(exp)
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    pub fn model(&self) -> &ModelProfile {
+        &self.model
+    }
+
+    pub fn platform(&self) -> &PlatformSpec {
+        &self.platform
+    }
+
+    /// An artifact is only meaningful for the session that matches its
+    /// embedded config; verify before acting on its plan.
+    fn check_artifact(&self, artifact: &PlanArtifact) -> Result<()> {
+        if artifact.config.model != self.cfg.model
+            || artifact.config.platform != self.cfg.platform
+        {
+            bail!(
+                "plan artifact is for {} on {}, but this session resolves {} on {}",
+                artifact.config.model,
+                artifact.config.platform,
+                self.cfg.model,
+                self.cfg.platform
+            );
+        }
+        // full-config equality: merge/batch/sync/chunking drift changes
+        // what the plan's cuts and tiers mean, so acting on the artifact
+        // under a different config would silently compute the wrong
+        // session (per-run deltas belong in TrainOverrides)
+        if artifact.config != self.cfg {
+            bail!(
+                "plan artifact's embedded config differs from this \
+                 session's config; rebuild the session with \
+                 Experiment::from_artifact or re-run `plan`"
+            );
+        }
+        if artifact.plan.n_micro_global != self.cfg.n_micro_global() {
+            bail!(
+                "plan artifact covers {} micro-batches but the config's \
+                 batch layout gives {}",
+                artifact.plan.n_micro_global,
+                self.cfg.n_micro_global()
+            );
+        }
+        artifact
+            .plan
+            .validate(&self.model, &self.platform)
+            .context("plan artifact incompatible with the resolved model/platform")?;
+        Ok(())
+    }
+
+    /// Co-optimize partition + resources over the config's weight sweep
+    /// (§3.4). Returns the Pareto front with the paper's δ ≥ 0.8
+    /// recommendation marked; each point carries a deployable
+    /// [`PlanArtifact`].
+    pub fn plan(&self) -> Result<PlanReport> {
+        let mut opt = CoOptimizer::new(&self.model, &self.platform);
+        opt.perf.sync_alg = self.cfg.sync_alg;
+        opt.perf.chunk_bytes = self.cfg.chunk_bytes;
+        let points = sweep(&self.cfg.weights, |w| {
+            opt.solve(self.cfg.n_micro_global(), w)
+                .map(|(plan, perf, _)| (plan, perf))
+        });
+        let front = pareto_front(&points);
+        let rec = recommend(&front);
+        let points = front
+            .into_iter()
+            .map(|pt| {
+                let recommended =
+                    rec.as_ref().map(|r| r.plan == pt.plan).unwrap_or(false);
+                PlanPoint {
+                    describe: pt.plan.describe(&self.model, &self.platform),
+                    artifact: PlanArtifact::new(
+                        self.cfg.clone(),
+                        pt.plan,
+                        pt.weights,
+                        pt.perf.t_iter,
+                        pt.perf.c_iter,
+                    ),
+                    perf: pt.perf,
+                    recommended,
+                }
+            })
+            .collect();
+        Ok(PlanReport {
+            model: self.cfg.model.clone(),
+            platform: self.cfg.platform.clone(),
+            global_batch: self.cfg.global_batch,
+            points,
+        })
+    }
+
+    /// Cross-check a plan: closed-form perf model (§3.4.2) vs the
+    /// discrete-event simulator, both using this session's sync
+    /// algorithm. The chunking policy is priced only on the model side
+    /// (the DES executes the unchunked flow schedule — same byte
+    /// volume, no per-chunk latency term), so with `chunk_bytes > 0`
+    /// the reported error includes the priced chunk overhead, not pure
+    /// model error. Deterministic, so the same artifact always yields
+    /// the same report (the `plan --out` → `simulate --plan`
+    /// equivalence the integration tests pin down).
+    pub fn simulate(&self, artifact: &PlanArtifact) -> Result<SimReport> {
+        self.check_artifact(artifact)?;
+        let predicted = PerfModel::new(&self.model, &self.platform)
+            .with_sync(self.cfg.sync_alg)
+            .with_chunk_bytes(self.cfg.chunk_bytes)
+            .evaluate(&artifact.plan);
+        let sim = simulate_iteration(
+            &self.model,
+            &self.platform,
+            &artifact.plan,
+            self.cfg.sync_alg,
+        );
+        Ok(SimReport {
+            describe: artifact.plan.describe(&self.model, &self.platform),
+            plan: artifact.plan.clone(),
+            predicted,
+            sim,
+        })
+    }
+
+    /// Derive the trainer configuration: unified config → plan-supplied
+    /// `dp`/`mu` → explicit overrides, in that precedence order. Public
+    /// so tests (and curious users) can inspect the derivation without
+    /// running a training job.
+    pub fn train_config(
+        &self,
+        artifact: Option<&PlanArtifact>,
+        overrides: &TrainOverrides,
+    ) -> Result<trainer::TrainConfig> {
+        if let Some(a) = artifact {
+            self.check_artifact(a)?;
+        }
+        let cfg = &self.cfg;
+        let mut tc = trainer::TrainConfig::new(cfg.artifacts_dir.clone());
+        tc.steps = cfg.steps;
+        tc.lr = cfg.lr as f32;
+        tc.lifetime_s = cfg.lifetime_s;
+        tc.throttle = cfg.throttle;
+        tc.sync_alg = cfg.sync_alg;
+        tc.chunking = cfg.chunking();
+        if let Some(a) = artifact {
+            tc.dp = a.plan.dp;
+            tc.mu = a.plan.mu();
+        }
+        if let Some(d) = overrides.dp {
+            tc.dp = d;
+        }
+        if let Some(m) = overrides.mu {
+            tc.mu = m;
+        }
+        if let Some(s) = overrides.steps {
+            tc.steps = s;
+        }
+        if let Some(lr) = overrides.lr {
+            tc.lr = lr as f32;
+        }
+        if let Some(l) = overrides.lifetime_s {
+            tc.lifetime_s = l;
+        }
+        if overrides.chunk_bytes.is_some() || overrides.chunks_in_flight.is_some()
+        {
+            tc.chunking = Chunking::new(
+                overrides.chunk_bytes.unwrap_or(cfg.chunk_bytes),
+                overrides.chunks_in_flight.unwrap_or(cfg.chunks_in_flight),
+            );
+        }
+        if let Some(dir) = &overrides.artifacts_dir {
+            tc.artifacts_dir = std::path::PathBuf::from(dir);
+        }
+        ensure!(
+            tc.dp >= 1 && tc.mu >= 1 && tc.steps >= 1,
+            "dp, mu and steps must be positive"
+        );
+        // overrides bypass ExperimentConfig::validate, so re-check the
+        // float knobs here (NaN lr fails the > 0 comparison)
+        ensure!(
+            tc.lr.is_finite() && tc.lr > 0.0,
+            "lr must be a positive finite number"
+        );
+        ensure!(
+            !tc.lifetime_s.is_nan() && tc.lifetime_s > 0.0,
+            "lifetime_s must be positive"
+        );
+        Ok(tc)
+    }
+
+    /// Real end-to-end training over the AOT artifacts, driven by the
+    /// plan (when given) instead of hand-derived `--dp`/`--mu`.
+    pub fn train(
+        &self,
+        artifact: Option<&PlanArtifact>,
+        overrides: &TrainOverrides,
+    ) -> Result<TrainReport> {
+        let tc = self.train_config(artifact, overrides)?;
+        let raw = trainer::train(&tc)?;
+        Ok(TrainReport::from_raw(&tc, raw))
+    }
+
+    /// Evaluate the §5.1 baselines on this session's (unmerged) model.
+    /// The parameter-server VM matches the platform, as in the paper
+    /// (c5.9xlarge on AWS, r7.2xlarge on Alibaba, §5.7).
+    pub fn baselines(&self) -> Result<BaselineReport> {
+        let zoo_m = zoo::by_name(&self.cfg.model, &self.platform)
+            .with_context(|| format!("unknown model {:?}", self.cfg.model))?;
+        let vm = if self.platform.name == "alibaba-fc" {
+            R7_2XLARGE
+        } else {
+            C5_9XLARGE
+        };
+        let rows = BaselineKind::ALL
+            .iter()
+            .map(|&kind| {
+                let result = evaluate_baseline(
+                    kind,
+                    &zoo_m,
+                    &self.platform,
+                    self.cfg.global_batch,
+                    vm,
+                );
+                let mem_mb =
+                    result.as_ref().map(|r| self.platform.tier(r.tier).mem_mb);
+                BaselineRow { name: kind.name(), mem_mb, result }
+            })
+            .collect();
+        Ok(BaselineReport {
+            model: self.cfg.model.clone(),
+            platform: self.cfg.platform.clone(),
+            global_batch: self.cfg.global_batch,
+            rows,
+        })
+    }
+
+    /// Profile the AOT stages through PJRT (§3.1 step 3).
+    pub fn profile(&self, reps: usize) -> Result<ProfileReport> {
+        let prof = crate::profiler::profile_stages(
+            Path::new(&self.cfg.artifacts_dir),
+            &self.platform,
+            reps,
+        )?;
+        let top = self.platform.max_tier();
+        Ok(ProfileReport {
+            rows: prof
+                .layers
+                .iter()
+                .map(|l| ProfileRow {
+                    name: l.name.clone(),
+                    param_bytes: l.param_bytes,
+                    fwd_s: l.fwd_s[top],
+                    bwd_s: l.bwd_s[top],
+                })
+                .collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            model: "resnet101".into(),
+            global_batch: 16,
+            merge_layers: 4,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn plan_marks_exactly_one_recommendation() {
+        let exp = Experiment::new(small_cfg()).unwrap();
+        let report = exp.plan().unwrap();
+        assert!(!report.points.is_empty());
+        assert_eq!(
+            report.points.iter().filter(|p| p.recommended).count(),
+            1,
+            "{report:?}"
+        );
+        let rec = report.recommended().unwrap();
+        rec.artifact
+            .plan
+            .validate(exp.model(), exp.platform())
+            .unwrap();
+    }
+
+    #[test]
+    fn simulate_rejects_foreign_artifacts() {
+        let exp = Experiment::new(small_cfg()).unwrap();
+        let report = exp.plan().unwrap();
+        let mut artifact = report.recommended().unwrap().artifact.clone();
+        artifact.config.model = "bert-large".into();
+        assert!(exp.simulate(&artifact).is_err());
+
+        // any embedded-config drift is rejected, not just model/platform
+        let mut drifted = report.recommended().unwrap().artifact.clone();
+        drifted.config.merge_layers += 1;
+        assert!(exp.simulate(&drifted).is_err());
+    }
+
+    #[test]
+    fn train_config_precedence_config_plan_overrides() {
+        let exp = Experiment::new(small_cfg()).unwrap();
+        let rec = exp.plan().unwrap().recommended().unwrap().clone();
+
+        // no plan, no overrides: unified-config defaults
+        let tc = exp
+            .train_config(None, &TrainOverrides::default())
+            .unwrap();
+        assert_eq!(tc.steps, exp.config().steps);
+        assert_eq!((tc.dp, tc.mu), (1, 2));
+
+        // plan supplies dp/mu
+        let tc = exp
+            .train_config(Some(&rec.artifact), &TrainOverrides::default())
+            .unwrap();
+        assert_eq!(tc.dp, rec.artifact.plan.dp);
+        assert_eq!(tc.mu, rec.artifact.plan.mu());
+        assert_eq!(tc.sync_alg, exp.config().sync_alg);
+
+        // explicit overrides beat the plan
+        let ov = TrainOverrides {
+            dp: Some(1),
+            mu: Some(1),
+            steps: Some(3),
+            chunk_bytes: Some(4096),
+            ..TrainOverrides::default()
+        };
+        let tc = exp.train_config(Some(&rec.artifact), &ov).unwrap();
+        assert_eq!((tc.dp, tc.mu, tc.steps), (1, 1, 3));
+        assert_eq!(tc.chunking.chunk_bytes, 4096);
+        assert_eq!(
+            tc.chunking.in_flight,
+            exp.config().chunks_in_flight
+        );
+
+        // overrides cannot smuggle in values the config path rejects
+        let bad =
+            TrainOverrides { lifetime_s: Some(0.0), ..Default::default() };
+        assert!(exp.train_config(None, &bad).is_err());
+        let bad = TrainOverrides { lr: Some(-1.0), ..Default::default() };
+        assert!(exp.train_config(None, &bad).is_err());
+        let bad = TrainOverrides { lr: Some(f64::NAN), ..Default::default() };
+        assert!(exp.train_config(None, &bad).is_err());
+    }
+
+    #[test]
+    fn baselines_report_all_kinds() {
+        let exp = Experiment::new(small_cfg()).unwrap();
+        let report = exp.baselines().unwrap();
+        assert_eq!(report.rows.len(), BaselineKind::ALL.len());
+    }
+}

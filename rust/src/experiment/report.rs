@@ -1,0 +1,543 @@
+//! Typed reports: every lifecycle stage returns a structured value that
+//! renders through ONE path — [`Report::render`] — as either the classic
+//! paper-style ASCII table or machine-readable JSON. The CLI
+//! (`--format table|json`), the `bench::fig*` generators and library
+//! callers all go through these types, so there is exactly one place
+//! where numbers become output.
+
+use anyhow::{bail, Result};
+
+use crate::baselines::BaselineResult;
+use crate::model::Plan;
+use crate::pipeline::{rel_err_pct, SimResult};
+use crate::planner::PlanPerf;
+use crate::trainer::IterLog;
+use crate::util::humansize::{bytes, secs, usd};
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+use super::artifact::PlanArtifact;
+
+/// Output format selected by `--format` (table is the default).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Format {
+    #[default]
+    Table,
+    Json,
+}
+
+impl Format {
+    pub fn parse(s: &str) -> Result<Format> {
+        match s {
+            "table" => Ok(Format::Table),
+            "json" => Ok(Format::Json),
+            other => bail!("unknown format {other:?} (expected table|json)"),
+        }
+    }
+}
+
+/// A renderable result. `to_tables` is the human form, `to_json` the
+/// structured form; `render` is the single switch every surface uses.
+pub trait Report {
+    fn to_tables(&self) -> Vec<Table>;
+    fn to_json(&self) -> Json;
+
+    fn render(&self, format: Format) -> String {
+        match format {
+            Format::Table => {
+                let mut out = String::new();
+                for t in self.to_tables() {
+                    out.push_str(&t.render());
+                }
+                out
+            }
+            Format::Json => {
+                let mut s = self.to_json().pretty();
+                s.push('\n');
+                s
+            }
+        }
+    }
+
+    fn print(&self, format: Format) {
+        print!("{}", self.render(format));
+    }
+}
+
+fn table_json(t: &Table) -> Json {
+    Json::obj(vec![
+        ("title", Json::str(t.title())),
+        (
+            "columns",
+            Json::Arr(
+                t.header_cols()
+                    .iter()
+                    .map(|h| Json::str(h.as_str()))
+                    .collect(),
+            ),
+        ),
+        (
+            "rows",
+            Json::Arr(
+                t.rows()
+                    .iter()
+                    .map(|r| {
+                        Json::Arr(
+                            r.iter().map(|c| Json::str(c.as_str())).collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// A bundle of plain tables behind the same render path — how the
+/// `bench::fig*` generators (which emit `Vec<Table>`) ride the CLI's
+/// `--format` switch. Deliberately NOT `impl Report for Table`:
+/// `Table`'s inherent zero-arg `render()`/`print()` would shadow the
+/// trait's `render(Format)`/`print(Format)` and every call site would
+/// need UFCS.
+#[derive(Debug, Clone, Default)]
+pub struct TableSet(pub Vec<Table>);
+
+impl Report for TableSet {
+    fn to_tables(&self) -> Vec<Table> {
+        self.0.clone()
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Arr(self.0.iter().map(table_json).collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// plan
+// ---------------------------------------------------------------------------
+
+/// One Pareto-front configuration from a planning sweep.
+#[derive(Debug, Clone)]
+pub struct PlanPoint {
+    /// The deployable artifact (config + plan + prediction).
+    pub artifact: PlanArtifact,
+    /// Full perf-model evaluation (with the Fig. 6 breakdown).
+    pub perf: PlanPerf,
+    /// Human summary (`[0..7]@4096MB | … d=2 μ=8 workers=6`).
+    pub describe: String,
+    /// Selected by the paper's δ ≥ 0.8 recommendation rule.
+    pub recommended: bool,
+}
+
+/// Result of [`Experiment::plan`](super::Experiment::plan).
+#[derive(Debug, Clone)]
+pub struct PlanReport {
+    pub model: String,
+    pub platform: String,
+    pub global_batch: usize,
+    /// The Pareto front, cheapest weights first.
+    pub points: Vec<PlanPoint>,
+}
+
+impl PlanReport {
+    pub fn recommended(&self) -> Option<&PlanPoint> {
+        self.points.iter().find(|p| p.recommended)
+    }
+}
+
+impl Report for PlanReport {
+    fn to_tables(&self) -> Vec<Table> {
+        let mut t = Table::new(format!(
+            "FuncPipe plans — {} on {}, global batch {}",
+            self.model, self.platform, self.global_batch
+        ))
+        .header(["weights", "plan", "t_iter", "c_iter", "rec"]);
+        for p in &self.points {
+            t.row([
+                format!(
+                    "({}, {})",
+                    p.artifact.weights.0, p.artifact.weights.1
+                ),
+                p.describe.clone(),
+                secs(p.perf.t_iter),
+                usd(p.perf.c_iter),
+                if p.recommended {
+                    "<- recommended".into()
+                } else {
+                    String::new()
+                },
+            ]);
+        }
+        vec![t]
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.as_str())),
+            ("platform", Json::str(self.platform.as_str())),
+            ("global_batch", Json::Num(self.global_batch as f64)),
+            (
+                "plans",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                (
+                                    "weights",
+                                    Json::Arr(vec![
+                                        Json::Num(p.artifact.weights.0),
+                                        Json::Num(p.artifact.weights.1),
+                                    ]),
+                                ),
+                                ("plan", p.artifact.plan.to_json()),
+                                ("describe", Json::str(p.describe.as_str())),
+                                ("t_iter", Json::Num(p.perf.t_iter)),
+                                ("c_iter", Json::Num(p.perf.c_iter)),
+                                ("compute_s", Json::Num(p.perf.compute_s)),
+                                ("flush_s", Json::Num(p.perf.flush_s)),
+                                ("sync_s", Json::Num(p.perf.sync_s)),
+                                (
+                                    "total_mem_gb",
+                                    Json::Num(p.perf.total_mem_gb),
+                                ),
+                                ("recommended", Json::Bool(p.recommended)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// simulate
+// ---------------------------------------------------------------------------
+
+/// Closed-form prediction vs discrete-event simulation of one plan.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub plan: Plan,
+    pub describe: String,
+    pub predicted: PlanPerf,
+    pub sim: SimResult,
+}
+
+impl SimReport {
+    /// Table-3-style relative t_iter error, percent.
+    pub fn error_pct(&self) -> f64 {
+        rel_err_pct(self.predicted.t_iter, self.sim.t_iter)
+    }
+}
+
+impl Report for SimReport {
+    fn to_tables(&self) -> Vec<Table> {
+        let mut t = Table::new(format!("model vs DES simulation — {}", self.describe))
+            .header(["source", "t_iter", "c_iter"]);
+        t.row([
+            "perf model".to_string(),
+            secs(self.predicted.t_iter),
+            usd(self.predicted.c_iter),
+        ]);
+        t.row([
+            "DES sim".to_string(),
+            secs(self.sim.t_iter),
+            usd(self.sim.c_iter),
+        ]);
+        t.row([
+            "error".to_string(),
+            format!("{:.1}%", self.error_pct()),
+            String::new(),
+        ]);
+        vec![t]
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("plan", self.plan.to_json()),
+            ("describe", Json::str(self.describe.as_str())),
+            (
+                "predicted",
+                Json::obj(vec![
+                    ("t_iter", Json::Num(self.predicted.t_iter)),
+                    ("c_iter", Json::Num(self.predicted.c_iter)),
+                ]),
+            ),
+            (
+                "simulated",
+                Json::obj(vec![
+                    ("t_iter", Json::Num(self.sim.t_iter)),
+                    ("c_iter", Json::Num(self.sim.c_iter)),
+                ]),
+            ),
+            ("error_pct", Json::Num(self.error_pct())),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// train
+// ---------------------------------------------------------------------------
+
+/// Structured summary of a real training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub steps: usize,
+    pub dp: usize,
+    pub mu: usize,
+    pub first_loss: f32,
+    pub last_loss: f32,
+    pub mean_iter_s: f64,
+    pub wall_s: f64,
+    pub restarts: usize,
+    pub store_puts: u64,
+    pub store_gets: u64,
+    pub logs: Vec<IterLog>,
+}
+
+impl TrainReport {
+    pub(crate) fn from_raw(
+        cfg: &crate::trainer::TrainConfig,
+        raw: crate::trainer::TrainReport,
+    ) -> Self {
+        Self {
+            steps: cfg.steps,
+            dp: cfg.dp,
+            mu: cfg.mu,
+            first_loss: raw.first_loss(),
+            last_loss: raw.last_loss(),
+            mean_iter_s: raw.mean_iter_s(),
+            wall_s: raw.wall_s,
+            restarts: raw.restarts,
+            store_puts: raw.store_put_gets.0,
+            store_gets: raw.store_put_gets.1,
+            logs: raw.logs,
+        }
+    }
+}
+
+impl Report for TrainReport {
+    fn to_tables(&self) -> Vec<Table> {
+        let mut t = Table::new(format!(
+            "training run — {} steps, dp={} μ={}",
+            self.steps, self.dp, self.mu
+        ))
+        .header(["metric", "value"]);
+        t.row(["loss".to_string(), format!("{:.4} -> {:.4}", self.first_loss, self.last_loss)]);
+        t.row(["iter time".to_string(), format!("{:.1} ms", self.mean_iter_s * 1e3)]);
+        t.row(["wall time".to_string(), secs(self.wall_s)]);
+        t.row(["restarts".to_string(), self.restarts.to_string()]);
+        t.row([
+            "store put/get".to_string(),
+            format!("{}/{}", self.store_puts, self.store_gets),
+        ]);
+        vec![t]
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("steps", Json::Num(self.steps as f64)),
+            ("dp", Json::Num(self.dp as f64)),
+            ("mu", Json::Num(self.mu as f64)),
+            ("first_loss", Json::Num(self.first_loss as f64)),
+            ("last_loss", Json::Num(self.last_loss as f64)),
+            ("mean_iter_s", Json::Num(self.mean_iter_s)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("restarts", Json::Num(self.restarts as f64)),
+            (
+                "store",
+                Json::obj(vec![
+                    ("puts", Json::Num(self.store_puts as f64)),
+                    ("gets", Json::Num(self.store_gets as f64)),
+                ]),
+            ),
+            (
+                "loss_curve",
+                Json::Arr(
+                    self.logs
+                        .iter()
+                        .map(|l| {
+                            Json::obj(vec![
+                                ("step", Json::Num(l.step as f64)),
+                                ("loss", Json::Num(l.loss as f64)),
+                                ("iter_s", Json::Num(l.iter_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// baselines
+// ---------------------------------------------------------------------------
+
+/// One evaluated §5.1 baseline (`None` result = OOM, as the paper reports).
+#[derive(Debug, Clone)]
+pub struct BaselineRow {
+    pub name: &'static str,
+    /// Worker memory in MB for the chosen tier (when feasible).
+    pub mem_mb: Option<u64>,
+    pub result: Option<BaselineResult>,
+}
+
+/// Result of [`Experiment::baselines`](super::Experiment::baselines).
+#[derive(Debug, Clone)]
+pub struct BaselineReport {
+    pub model: String,
+    pub platform: String,
+    pub global_batch: usize,
+    pub rows: Vec<BaselineRow>,
+}
+
+impl Report for BaselineReport {
+    fn to_tables(&self) -> Vec<Table> {
+        let mut t = Table::new(format!(
+            "baselines — {} on {}, batch {}",
+            self.model, self.platform, self.global_batch
+        ))
+        .header(["design", "workers", "mem", "t_iter", "c_iter"]);
+        for row in &self.rows {
+            match (&row.result, row.mem_mb) {
+                (Some(r), Some(mb)) => t.row([
+                    row.name.to_string(),
+                    r.n_workers.to_string(),
+                    format!("{mb}MB"),
+                    secs(r.t_iter),
+                    usd(r.c_iter),
+                ]),
+                _ => t.row([
+                    row.name.to_string(),
+                    "OOM".into(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                ]),
+            }
+        }
+        vec![t]
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.as_str())),
+            ("platform", Json::str(self.platform.as_str())),
+            ("global_batch", Json::Num(self.global_batch as f64)),
+            (
+                "baselines",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|row| match (&row.result, row.mem_mb) {
+                            (Some(r), Some(mb)) => Json::obj(vec![
+                                ("design", Json::str(row.name)),
+                                ("feasible", Json::Bool(true)),
+                                ("workers", Json::Num(r.n_workers as f64)),
+                                ("mem_mb", Json::Num(mb as f64)),
+                                ("local_batch", Json::Num(r.local_batch as f64)),
+                                ("t_iter", Json::Num(r.t_iter)),
+                                ("c_iter", Json::Num(r.c_iter)),
+                                ("compute_s", Json::Num(r.compute_s)),
+                                ("sync_s", Json::Num(r.sync_s)),
+                            ]),
+                            _ => Json::obj(vec![
+                                ("design", Json::str(row.name)),
+                                ("feasible", Json::Bool(false)),
+                            ]),
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// profile
+// ---------------------------------------------------------------------------
+
+/// One profiled AOT stage (per micro-batch, at the platform's top tier).
+#[derive(Debug, Clone)]
+pub struct ProfileRow {
+    pub name: String,
+    pub param_bytes: u64,
+    pub fwd_s: f64,
+    pub bwd_s: f64,
+}
+
+/// Result of [`Experiment::profile`](super::Experiment::profile).
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    pub rows: Vec<ProfileRow>,
+}
+
+impl Report for ProfileReport {
+    fn to_tables(&self) -> Vec<Table> {
+        let mut t = Table::new("AOT stage profile (per micro-batch)")
+            .header(["stage", "params", "fwd@top", "bwd@top"]);
+        for r in &self.rows {
+            t.row([
+                r.name.clone(),
+                bytes(r.param_bytes),
+                secs(r.fwd_s),
+                secs(r.bwd_s),
+            ]);
+        }
+        vec![t]
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "stages",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("stage", Json::str(r.name.as_str())),
+                            ("param_bytes", Json::Num(r.param_bytes as f64)),
+                            ("fwd_s", Json::Num(r.fwd_s)),
+                            ("bwd_s", Json::Num(r.bwd_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_parses() {
+        assert_eq!(Format::parse("table").unwrap(), Format::Table);
+        assert_eq!(Format::parse("json").unwrap(), Format::Json);
+        assert!(Format::parse("yaml").is_err());
+    }
+
+    #[test]
+    fn table_report_json_shape() {
+        let mut t = Table::new("demo").header(["a", "b"]);
+        t.row(["1", "2"]);
+        let j = table_json(&t);
+        assert_eq!(j.field_str("title").unwrap(), "demo");
+        assert_eq!(j.field_arr("rows").unwrap().len(), 1);
+        // the render path emits parseable JSON
+        let rendered = TableSet(vec![t]).render(Format::Json);
+        Json::parse(rendered.trim()).unwrap();
+    }
+
+    #[test]
+    fn tableset_renders_both_formats() {
+        let mut t = Table::new("x").header(["c"]);
+        t.row(["v"]);
+        let set = TableSet(vec![t.clone(), t]);
+        assert!(set.render(Format::Table).contains("== x =="));
+        let j = Json::parse(set.render(Format::Json).trim()).unwrap();
+        assert_eq!(j.as_arr().unwrap().len(), 2);
+    }
+}

@@ -8,7 +8,10 @@
 //! * **L3 (this crate)** — the rust coordinator: serverless-platform
 //!   substrate, pipeline scheduler, storage-based collectives including the
 //!   paper's pipelined scatter-reduce, the MIQP partition/resource
-//!   co-optimizer, profiler, function manager and trainer.
+//!   co-optimizer, profiler, function manager and trainer — all fronted by
+//!   the [`experiment`] session API (`Experiment` + serializable
+//!   `PlanArtifact` + typed `Report`s), which the CLI and the figure
+//!   generators are thin shells over.
 //! * **L2** — `python/compile/model.py`: staged transformer fwd/bwd in JAX,
 //!   AOT-lowered once to HLO text in `artifacts/`.
 //! * **L1** — `python/compile/kernels/`: Pallas kernels (fused linear,
@@ -23,9 +26,11 @@
 
 pub mod baselines;
 pub mod bench;
+pub mod cli;
 pub mod collective;
 pub mod config;
 pub mod coordinator;
+pub mod experiment;
 pub mod model;
 pub mod pipeline;
 pub mod planner;

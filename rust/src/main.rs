@@ -1,22 +1,29 @@
-//! `funcpipe` CLI — the leader entrypoint.
+//! `funcpipe` CLI — a thin shell over the [`experiment`] session API.
 //!
 //! Subcommands:
-//!   plan     — co-optimize partition + resources for a zoo model
-//!   simulate — DES-simulate a plan and compare with the perf model
-//!   train    — real end-to-end training over the AOT artifacts
+//!   plan     — co-optimize partition + resources; `--out plan.json`
+//!              writes the recommended plan as a serializable artifact
+//!   simulate — DES-simulate a plan (`--plan plan.json` or re-plan)
+//!   train    — real end-to-end training; `--plan plan.json` supplies
+//!              dp/μ/chunking (flags remain as explicit overrides)
 //!   profile  — profile the AOT stages through PJRT
 //!   baseline — evaluate the §5.1 baselines
 //!   fig      — regenerate a paper figure/table (fig1 fig5 ... table3)
+//!
+//! Every subcommand takes `--format table|json`; JSON goes to stdout
+//! unmixed with status chatter (which goes to stderr), so output pipes
+//! cleanly into other tools.
+//!
+//! [`experiment`]: funcpipe::experiment
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
-use funcpipe::baselines::{evaluate_baseline, BaselineKind};
-use funcpipe::config::ExperimentConfig;
-use funcpipe::planner::{pareto_front, recommend, sweep, CoOptimizer};
-use funcpipe::util::humansize::{secs, usd};
+use funcpipe::cli;
+use funcpipe::experiment::{
+    Experiment, Format, PlanArtifact, Report, TableSet,
+};
 use funcpipe::util::logging;
-use funcpipe::util::table::Table;
 
 fn main() {
     logging::init();
@@ -26,73 +33,32 @@ fn main() {
     }
 }
 
-/// Minimal flag parser: `--key value` pairs after the subcommand.
-fn parse_flags(args: &[String]) -> HashMap<String, String> {
-    let mut map = HashMap::new();
-    let mut i = 0;
-    while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                map.insert(key.to_string(), args[i + 1].clone());
-                i += 2;
-            } else {
-                map.insert(key.to_string(), "true".into());
-                i += 1;
-            }
-        } else {
-            i += 1;
-        }
-    }
-    map
-}
-
-fn config_from_flags(flags: &HashMap<String, String>) -> Result<ExperimentConfig> {
-    let mut cfg = if let Some(path) = flags.get("config") {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {path}"))?;
-        ExperimentConfig::from_json_text(&text)?
-    } else {
-        ExperimentConfig::default()
-    };
-    if let Some(m) = flags.get("model") {
-        cfg.model = m.clone();
-    }
-    if let Some(p) = flags.get("platform") {
-        cfg.platform = p.clone();
-    }
-    if let Some(b) = flags.get("batch") {
-        cfg.global_batch = b.parse().context("--batch")?;
-    }
-    if let Some(l) = flags.get("merge-layers") {
-        cfg.merge_layers = l.parse().context("--merge-layers")?;
-    }
-    if let Some(s) = flags.get("bandwidth-scale") {
-        cfg.bandwidth_scale = s.parse().context("--bandwidth-scale")?;
-    }
-    if let Some(s) = flags.get("chunk-bytes") {
-        cfg.chunk_bytes = s.parse().context("--chunk-bytes")?;
-    }
-    cfg.validate()?;
-    Ok(cfg)
-}
-
 fn run() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
-    let flags = parse_flags(&args[1.min(args.len())..]);
+    let rest = &args[1.min(args.len())..];
 
     match cmd {
-        "plan" => cmd_plan(&flags),
-        "simulate" => cmd_simulate(&flags),
-        "train" => cmd_train(&flags),
-        "profile" => cmd_profile(&flags),
-        "baseline" => cmd_baseline(&flags),
-        "fig" => cmd_fig(&args),
+        "fig" => return cmd_fig(rest),
         "help" | "--help" | "-h" => {
             print_help();
-            Ok(())
+            return Ok(());
         }
-        other => bail!("unknown command {other:?}; try `funcpipe help`"),
+        _ => {}
+    }
+
+    let allowed = cli::flags_for(cmd)
+        .with_context(|| format!("unknown command {cmd:?}; try `funcpipe help`"))?;
+    let flags = cli::parse_flags(cmd, rest, &allowed)?;
+    let format = cli::format_from_flags(&flags)?;
+
+    match cmd {
+        "plan" => cmd_plan(&flags, format),
+        "simulate" => cmd_simulate(&flags, format),
+        "train" => cmd_train(&flags, format),
+        "profile" => cmd_profile(&flags, format),
+        "baseline" => cmd_baseline(&flags, format),
+        _ => unreachable!("flags_for gated the command set"),
     }
 }
 
@@ -102,208 +68,116 @@ fn print_help() {
 
 USAGE: funcpipe <command> [--flags]
 
+Every command accepts --format table|json (default: table). The
+config-driven commands (plan, simulate, train, baseline) also accept
+the unified config flags (--config file.json --model <name>
+--batch <n> --micro-batch <n> --platform aws|alibaba
+--merge-layers <n> --merge-criterion compute|params|activations
+--sync pipelined|scatter-reduce --bandwidth-scale <x>
+--chunk-bytes <n> --chunks-in-flight <n> --steps <n> --lr <x>
+--lifetime <s> --artifacts <dir>); profile takes just --artifacts,
+fig just --format. Unknown flags are errors.
+
 COMMANDS:
-  plan      --model <name> --batch <n> [--platform aws|alibaba]
-            [--chunk-bytes n]
+  plan      [--out plan.json]
             co-optimize partition + resources; prints the Pareto sweep
-  simulate  --model <name> --batch <n> [--chunk-bytes n]
-            DES-simulate the recommended plan vs the closed-form model
-  train     [--dp n] [--mu n] [--steps n] [--artifacts dir]
-            [--chunk-bytes n] [--chunks-in-flight n]
-            real end-to-end training over the AOT artifacts; chunk flags
-            stream gradients as bounded-memory chunk flows
+            and optionally writes the recommended plan artifact
+  simulate  [--plan plan.json]
+            DES-simulate a plan vs the closed-form model; with --plan
+            the artifact is the whole input (no other flags)
+  train     [--plan plan.json] [--dp n] [--mu n]
+            real end-to-end training over the AOT artifacts; --plan
+            derives dp/μ/sync/chunking from the artifact, flags are
+            explicit overrides
   profile   [--artifacts dir]
             profile AOT stages through PJRT
-  baseline  --model <name> --batch <n>
-            evaluate LambdaML / HybridPS (+GA) baselines
+  baseline  evaluate LambdaML / HybridPS (+GA) baselines
   fig       <fig1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table3>
-            regenerate a paper figure/table (also: cargo bench)"
+            regenerate a paper figure/table (also: cargo bench)
+
+The plan artifact closes the paper's §3.1 loop in one file:
+  funcpipe plan --model amoebanet-d18 --batch 64 --out plan.json
+  funcpipe simulate --plan plan.json
+  funcpipe train --plan plan.json        # no manual --dp/--mu"
     );
 }
 
-fn cmd_plan(flags: &HashMap<String, String>) -> Result<()> {
-    let cfg = config_from_flags(flags)?;
-    let platform = cfg.resolve_platform()?;
-    let model = cfg.resolve_model(&platform)?;
-    let mut opt = CoOptimizer::new(&model, &platform);
-    opt.perf.chunk_bytes = cfg.chunk_bytes;
-    let points = sweep(&cfg.weights, |w| {
-        opt.solve(cfg.n_micro_global(), w)
-            .map(|(plan, perf, _)| (plan, perf))
-    });
-    let front = pareto_front(&points);
-
-    let mut t = Table::new(format!(
-        "FuncPipe plans — {} on {}, global batch {}",
-        cfg.model, cfg.platform, cfg.global_batch
-    ))
-    .header(["weights", "plan", "t_iter", "c_iter", "rec"]);
-    let rec = recommend(&front);
-    for p in &front {
-        let is_rec = rec
-            .as_ref()
-            .map(|r| r.plan == p.plan)
-            .unwrap_or(false);
-        t.row([
-            format!("({}, {})", p.weights.0, p.weights.1),
-            p.plan.describe(&model, &platform),
-            secs(p.perf.t_iter),
-            usd(p.perf.c_iter),
-            if is_rec { "<- recommended".into() } else { String::new() },
-        ]);
+fn cmd_plan(flags: &HashMap<String, String>, format: Format) -> Result<()> {
+    let cfg = cli::config_from_flags(flags)?;
+    let exp = Experiment::new(cfg)?;
+    let report = exp.plan()?;
+    if let Some(path) = flags.get("out") {
+        let rec = report
+            .recommended()
+            .context("no feasible plan to write (try other weights/batch)")?;
+        rec.artifact.save(path)?;
+        eprintln!("wrote recommended plan artifact to {path}");
     }
-    t.print();
+    report.print(format);
     Ok(())
 }
 
-fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
-    let cfg = config_from_flags(flags)?;
-    let platform = cfg.resolve_platform()?;
-    let model = cfg.resolve_model(&platform)?;
-    let mut opt = CoOptimizer::new(&model, &platform);
-    opt.perf.chunk_bytes = cfg.chunk_bytes;
-    let points = sweep(&cfg.weights, |w| {
-        opt.solve(cfg.n_micro_global(), w)
-            .map(|(plan, perf, _)| (plan, perf))
-    });
-    let rec = recommend(&points).context("no feasible plan")?;
-    let sim = funcpipe::pipeline::simulate_iteration(
-        &model,
-        &platform,
-        &rec.plan,
-        cfg.sync_alg,
-    );
-    let mut t = Table::new("model vs DES simulation")
-        .header(["source", "t_iter", "c_iter"]);
-    t.row(["perf model".to_string(), secs(rec.perf.t_iter), usd(rec.perf.c_iter)]);
-    t.row(["DES sim".to_string(), secs(sim.t_iter), usd(sim.c_iter)]);
-    t.row([
-        "error".to_string(),
-        format!(
-            "{:.1}%",
-            (sim.t_iter - rec.perf.t_iter).abs() / sim.t_iter * 100.0
-        ),
-        String::new(),
-    ]);
-    t.print();
+fn cmd_simulate(flags: &HashMap<String, String>, format: Format) -> Result<()> {
+    let report = if let Some(path) = flags.get("plan") {
+        cli::only_flags(flags, &["plan", "format"], "simulate --plan")?;
+        let artifact = PlanArtifact::load(path)?;
+        let exp = Experiment::from_artifact(&artifact)?;
+        exp.simulate(&artifact)?
+    } else {
+        let exp = Experiment::new(cli::config_from_flags(flags)?)?;
+        let plans = exp.plan()?;
+        let rec = plans.recommended().context("no feasible plan")?;
+        exp.simulate(&rec.artifact)?
+    };
+    report.print(format);
     Ok(())
 }
 
-fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
-    let dir = flags
-        .get("artifacts")
-        .cloned()
-        .unwrap_or_else(|| "artifacts".into());
-    let mut cfg = funcpipe::trainer::TrainConfig::new(dir);
-    if let Some(v) = flags.get("dp") {
-        cfg.dp = v.parse()?;
-    }
-    if let Some(v) = flags.get("mu") {
-        cfg.mu = v.parse()?;
-    }
-    if let Some(v) = flags.get("steps") {
-        cfg.steps = v.parse()?;
-    }
-    if let Some(v) = flags.get("lr") {
-        cfg.lr = v.parse()?;
-    }
-    if let Some(v) = flags.get("lifetime") {
-        cfg.lifetime_s = v.parse()?;
-    }
-    // the two chunking flags are independent: --chunks-in-flight alone
-    // still sizes the flow pool's queues for the unchunked path
-    let chunk_bytes: Option<usize> = flags
-        .get("chunk-bytes")
-        .map(|s| s.parse().context("--chunk-bytes"))
-        .transpose()?;
-    let in_flight: Option<usize> = flags
-        .get("chunks-in-flight")
-        .map(|s| s.parse().context("--chunks-in-flight"))
-        .transpose()?;
-    if chunk_bytes.is_some() || in_flight.is_some() {
-        cfg.chunking = funcpipe::collective::Chunking::new(
-            chunk_bytes.unwrap_or(0),
-            in_flight.unwrap_or(funcpipe::collective::Chunking::NONE.in_flight),
-        );
-    }
-    let report = funcpipe::trainer::train(&cfg)?;
-    println!(
-        "trained {} steps: loss {:.4} -> {:.4}, {:.1} ms/iter, {} restarts",
-        cfg.steps,
-        report.first_loss(),
-        report.last_loss(),
-        report.mean_iter_s() * 1e3,
-        report.restarts
-    );
+fn cmd_train(flags: &HashMap<String, String>, format: Format) -> Result<()> {
+    cli::check_plan_conflicts(flags)?;
+    let overrides = cli::train_overrides_from_flags(flags)?;
+    let (exp, artifact) = if let Some(path) = flags.get("plan") {
+        let a = PlanArtifact::load(path)?;
+        (Experiment::from_artifact(&a)?, Some(a))
+    } else {
+        (Experiment::new(cli::config_from_flags(flags)?)?, None)
+    };
+    let report = exp.train(artifact.as_ref(), &overrides)?;
+    report.print(format);
     Ok(())
 }
 
-fn cmd_profile(flags: &HashMap<String, String>) -> Result<()> {
-    let dir = flags
-        .get("artifacts")
-        .cloned()
-        .unwrap_or_else(|| "artifacts".into());
-    let platform = funcpipe::platform::PlatformSpec::aws_lambda();
-    let prof = funcpipe::profiler::profile_stages(
-        std::path::Path::new(&dir),
-        &platform,
-        3,
-    )?;
-    let mut t = Table::new("AOT stage profile (per micro-batch)")
-        .header(["stage", "params", "fwd@top", "bwd@top"]);
-    for l in &prof.layers {
-        t.row([
-            l.name.clone(),
-            funcpipe::util::humansize::bytes(l.param_bytes),
-            secs(l.fwd_s[platform.max_tier()]),
-            secs(l.bwd_s[platform.max_tier()]),
-        ]);
+fn cmd_profile(flags: &HashMap<String, String>, format: Format) -> Result<()> {
+    let mut cfg = funcpipe::config::ExperimentConfig::default();
+    if let Some(dir) = flags.get("artifacts") {
+        cfg.artifacts_dir = dir.clone();
     }
-    t.print();
+    let exp = Experiment::new(cfg)?;
+    let report = exp.profile(3)?;
+    report.print(format);
     Ok(())
 }
 
-fn cmd_baseline(flags: &HashMap<String, String>) -> Result<()> {
-    let cfg = config_from_flags(flags)?;
-    let platform = cfg.resolve_platform()?;
-    let model = funcpipe::model::zoo::by_name(&cfg.model, &platform)
-        .context("unknown model")?;
-    let mut t = Table::new(format!(
-        "baselines — {} batch {}",
-        cfg.model, cfg.global_batch
-    ))
-    .header(["design", "workers", "mem", "t_iter", "c_iter"]);
-    for kind in BaselineKind::ALL {
-        match evaluate_baseline(
-            kind,
-            &model,
-            &platform,
-            cfg.global_batch,
-            funcpipe::platform::pricing::C5_9XLARGE,
-        ) {
-            Some(r) => t.row([
-                kind.name().to_string(),
-                r.n_workers.to_string(),
-                format!("{}MB", platform.tier(r.tier).mem_mb),
-                secs(r.t_iter),
-                usd(r.c_iter),
-            ]),
-            None => t.row([
-                kind.name().to_string(),
-                "OOM".into(),
-                String::new(),
-                String::new(),
-                String::new(),
-            ]),
-        }
-    }
-    t.print();
+fn cmd_baseline(flags: &HashMap<String, String>, format: Format) -> Result<()> {
+    let exp = Experiment::new(cli::config_from_flags(flags)?)?;
+    let report = exp.baselines()?;
+    report.print(format);
     Ok(())
 }
 
 fn cmd_fig(args: &[String]) -> Result<()> {
-    let which = args.get(1).map(String::as_str).unwrap_or("");
-    match which {
+    let which = args.first().map(String::as_str).unwrap_or("");
+    if which.is_empty() || which.starts_with("--") {
+        bail!(
+            "missing figure id (usage: funcpipe fig \
+             <fig1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table3> \
+             [--format table|json])"
+        );
+    }
+    let flag_args = &args[1..];
+    let flags = cli::parse_flags("fig", flag_args, &["format"])?;
+    let format = cli::format_from_flags(&flags)?;
+    let tables = match which {
         "fig1" => funcpipe::bench::fig1(),
         "fig5" => funcpipe::bench::fig5(),
         "fig6" => funcpipe::bench::fig6(),
@@ -314,6 +188,7 @@ fn cmd_fig(args: &[String]) -> Result<()> {
         "fig11" => funcpipe::bench::fig11(),
         "table3" => funcpipe::bench::table3(),
         other => bail!("unknown figure {other:?}"),
-    }
+    };
+    TableSet(tables).print(format);
     Ok(())
 }

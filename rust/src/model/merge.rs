@@ -16,6 +16,27 @@ pub enum MergeCriterion {
     ActivationSize,
 }
 
+impl MergeCriterion {
+    /// Stable wire name — the `"merge_criterion"` value in configs and
+    /// plan artifacts. `parse` is its inverse.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MergeCriterion::Compute => "compute",
+            MergeCriterion::ParamSize => "params",
+            MergeCriterion::ActivationSize => "activations",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MergeCriterion> {
+        match s {
+            "compute" => Some(MergeCriterion::Compute),
+            "params" => Some(MergeCriterion::ParamSize),
+            "activations" => Some(MergeCriterion::ActivationSize),
+            _ => None,
+        }
+    }
+}
+
 fn weight(l: &LayerProfile, c: MergeCriterion) -> f64 {
     match c {
         // tier 0 as the balancing reference — ratios are tier-invariant

@@ -6,6 +6,7 @@ use std::fmt;
 
 use crate::model::layer::ModelProfile;
 use crate::platform::PlatformSpec;
+use crate::util::json::{Json, JsonError};
 
 /// A complete training configuration for one model on one platform.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -168,6 +169,44 @@ impl Plan {
         Ok(())
     }
 
+    /// JSON form of the §3.4 decision variable — the serializable core of
+    /// the plan artifact (`funcpipe plan --out plan.json`). Structural
+    /// only; semantic feasibility is [`Plan::validate`]'s job.
+    pub fn to_json(&self) -> Json {
+        let nums = |xs: &[usize]| {
+            Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+        };
+        Json::obj(vec![
+            ("cuts", nums(&self.cuts)),
+            ("dp", Json::Num(self.dp as f64)),
+            ("stage_tiers", nums(&self.stage_tiers)),
+            ("n_micro_global", Json::Num(self.n_micro_global as f64)),
+        ])
+    }
+
+    /// Inverse of [`Plan::to_json`]. Strict: keys outside the plan
+    /// schema are errors, so a hand-edited artifact with a misplaced
+    /// knob fails loudly instead of silently dropping it.
+    pub fn from_json(j: &Json) -> Result<Self, JsonError> {
+        j.check_keys(&["cuts", "dp", "stage_tiers", "n_micro_global"])?;
+        let usizes = |key: &str| -> Result<Vec<usize>, JsonError> {
+            j.field_arr(key)?
+                .iter()
+                .map(|v| {
+                    v.as_usize().ok_or_else(|| {
+                        JsonError::TypeMismatch(key.to_string(), "usize")
+                    })
+                })
+                .collect()
+        };
+        Ok(Self {
+            cuts: usizes("cuts")?,
+            dp: j.field_usize("dp")?,
+            stage_tiers: usizes("stage_tiers")?,
+            n_micro_global: j.field_usize("n_micro_global")?,
+        })
+    }
+
     /// Human-readable summary ("[0..7]@4096 | [8..23]@10240, d=2, μ=8").
     pub fn describe(&self, model: &ModelProfile, platform: &PlatformSpec) -> String {
         let ranges = self.stage_ranges(model.n_layers());
@@ -296,6 +335,38 @@ mod tests {
         let s0 = p.base_mem_mb * 1024 * 1024;
         assert_eq!(m1, 8 * act + 2 * params + s0);
         assert_eq!(m2, 4 * act + 4 * params + s0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let plan = Plan {
+            cuts: vec![3, 9],
+            dp: 4,
+            stage_tiers: vec![0, 5, 7],
+            n_micro_global: 16,
+        };
+        let j = plan.to_json();
+        assert_eq!(Plan::from_json(&j).unwrap(), plan);
+        // and through text
+        let reparsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(Plan::from_json(&reparsed).unwrap(), plan);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_shapes() {
+        let missing = crate::util::json::Json::parse(r#"{"dp": 2}"#).unwrap();
+        assert!(Plan::from_json(&missing).is_err());
+        let bad_type = crate::util::json::Json::parse(
+            r#"{"cuts": [1.5], "dp": 2, "stage_tiers": [0], "n_micro_global": 4}"#,
+        )
+        .unwrap();
+        assert!(Plan::from_json(&bad_type).is_err());
+        let unknown_key = crate::util::json::Json::parse(
+            r#"{"cuts": [], "dp": 2, "stage_tiers": [0],
+                "n_micro_global": 4, "mu": 2}"#,
+        )
+        .unwrap();
+        assert!(Plan::from_json(&unknown_key).is_err());
     }
 
     #[test]

@@ -15,5 +15,5 @@ pub mod simulate;
 pub mod task;
 
 pub use schedule::build_schedule;
-pub use simulate::{simulate_iteration, SimResult};
+pub use simulate::{rel_err_pct, simulate_iteration, SimResult};
 pub use task::{Schedule, Task, TaskKind};

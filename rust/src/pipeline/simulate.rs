@@ -46,6 +46,14 @@ pub struct SimResult {
     pub t_nosync: f64,
 }
 
+/// Relative prediction error `|predicted − measured| / measured` in
+/// percent — the Table 3 / `simulate` accuracy metric, shared by the
+/// CLI's `SimReport` and the bench generators so every surface reports
+/// the same number.
+pub fn rel_err_pct(predicted: f64, measured: f64) -> f64 {
+    (predicted - measured).abs() / measured * 100.0
+}
+
 /// Simulate one training iteration of `plan` (deterministic durations).
 pub fn simulate_iteration(
     model: &ModelProfile,

@@ -1,6 +1,15 @@
 //! End-to-end training driver: configuration, synthetic corpus and the
-//! public `train()` entry point that the examples and CLI call. The
-//! distributed execution itself lives in [`coordinator`](crate::coordinator).
+//! public `train()` entry point. The distributed execution itself lives
+//! in [`coordinator`](crate::coordinator).
+//!
+//! [`TrainConfig`] is the trainer's *internal* runtime configuration.
+//! Users drive training through the unified
+//! [`ExperimentConfig`](crate::config::ExperimentConfig) and the
+//! [`Experiment`](crate::experiment::Experiment) facade, which derives a
+//! `TrainConfig` from the config plus the plan artifact
+//! (`Experiment::train_config`): `dp`/`mu` come from the plan, the
+//! session knobs (steps, lr, lifetime, throttle, chunking) from the
+//! config, and explicit overrides win over both.
 
 pub mod data;
 

@@ -25,6 +25,7 @@ pub enum JsonError {
     BadEscape(usize),
     MissingField(String),
     TypeMismatch(String, &'static str),
+    UnknownKey(String),
 }
 
 impl fmt::Display for JsonError {
@@ -42,6 +43,7 @@ impl fmt::Display for JsonError {
             JsonError::TypeMismatch(k, want) => {
                 write!(f, "type mismatch for {k:?}: wanted {want}")
             }
+            JsonError::UnknownKey(k) => write!(f, "unknown key {k:?}"),
         }
     }
 }
@@ -145,6 +147,22 @@ impl Json {
             .ok_or(JsonError::TypeMismatch(key.to_string(), "array"))
     }
 
+    /// Strict-object check: error unless `self` is an object whose keys
+    /// all appear in `known`. Parsers that own a JSON level use this so
+    /// a typo'd or misplaced key fails loudly (the unknown-CLI-flag
+    /// policy, applied to files).
+    pub fn check_keys(&self, known: &[&str]) -> Result<(), JsonError> {
+        let obj = self
+            .as_obj()
+            .ok_or(JsonError::TypeMismatch("<root>".to_string(), "object"))?;
+        for key in obj.keys() {
+            if !known.contains(&key.as_str()) {
+                return Err(JsonError::UnknownKey(key.clone()));
+            }
+        }
+        Ok(())
+    }
+
     // -- builders ---------------------------------------------------------
 
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
@@ -166,6 +184,50 @@ impl Json {
 
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
+    }
+
+    // -- pretty printing ---------------------------------------------------
+
+    /// Pretty-print with two-space indentation. Output is deterministic
+    /// (`Obj` is a `BTreeMap`, so keys are sorted), which is what makes
+    /// the plan-artifact round-trip (`serialize → parse → re-serialize`)
+    /// an identity on the text as well as the value.
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        self.pretty_into(&mut out, 0);
+        out
+    }
+
+    fn pretty_into(&self, out: &mut String, indent: usize) {
+        const PAD: &str = "  ";
+        match self {
+            Json::Arr(a) if !a.is_empty() => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    out.push_str(if i == 0 { "\n" } else { ",\n" });
+                    out.push_str(&PAD.repeat(indent + 1));
+                    v.pretty_into(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&PAD.repeat(indent));
+                out.push(']');
+            }
+            Json::Obj(o) if !o.is_empty() => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    out.push_str(if i == 0 { "\n" } else { ",\n" });
+                    out.push_str(&PAD.repeat(indent + 1));
+                    out.push_str(&Json::Str(k.clone()).to_string());
+                    out.push_str(": ");
+                    v.pretty_into(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&PAD.repeat(indent));
+                out.push('}');
+            }
+            // scalars and empty containers reuse the compact form
+            other => out.push_str(&other.to_string()),
+        }
     }
 }
 
@@ -466,6 +528,32 @@ mod tests {
     fn display_integers_exactly() {
         assert_eq!(Json::num(42.0).to_string(), "42");
         assert_eq!(Json::num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn check_keys_rejects_strays() {
+        let v = Json::parse(r#"{"a": 1, "b": 2}"#).unwrap();
+        v.check_keys(&["a", "b", "c"]).unwrap();
+        assert!(matches!(
+            v.check_keys(&["a"]),
+            Err(JsonError::UnknownKey(k)) if k == "b"
+        ));
+        assert!(Json::parse("[]").unwrap().check_keys(&["a"]).is_err());
+    }
+
+    #[test]
+    fn pretty_roundtrips_and_is_stable() {
+        let v = Json::parse(
+            r#"{"b": [1, 2.5, "x"], "a": {"k": null, "j": []}, "c": true}"#,
+        )
+        .unwrap();
+        let p1 = v.pretty();
+        let reparsed = Json::parse(&p1).unwrap();
+        assert_eq!(reparsed, v);
+        assert_eq!(reparsed.pretty(), p1);
+        // keys come out sorted, nested structures indented
+        assert!(p1.starts_with("{\n  \"a\": {"), "{p1}");
+        assert!(p1.contains("\"j\": []"), "{p1}");
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! and diffable.
 
 /// A simple column-aligned table.
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct Table {
     title: String,
     header: Vec<String>,
@@ -34,6 +34,19 @@ impl Table {
 
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
+    }
+
+    // structured accessors, used by the JSON side of the `Report` path
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+
+    pub fn header_cols(&self) -> &[String] {
+        &self.header
+    }
+
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
     }
 
     pub fn render(&self) -> String {

@@ -1,0 +1,195 @@
+//! Plan-artifact serde + `Experiment` session-API integration tests:
+//! the `plan --out plan.json` → `simulate|train --plan plan.json` flow
+//! must be byte-identical to staying in process.
+
+use funcpipe::config::ExperimentConfig;
+use funcpipe::experiment::{
+    Experiment, Format, PlanArtifact, Report, TrainOverrides,
+};
+use funcpipe::model::Plan;
+use funcpipe::util::json::Json;
+use funcpipe::util::quickcheck::{check_with, Config as QcConfig, Gen};
+use funcpipe::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// property: serialize → parse → re-serialize is the identity
+// ---------------------------------------------------------------------------
+
+struct ArtifactGen;
+
+impl Gen for ArtifactGen {
+    type Value = PlanArtifact;
+
+    fn generate(&self, rng: &mut Rng) -> PlanArtifact {
+        let models =
+            ["amoebanet-d18", "amoebanet-d36", "bert-large", "resnet101"];
+        let micro_batch = [1usize, 2, 4][rng.index(3)];
+        let mut cfg = ExperimentConfig {
+            model: models[rng.index(models.len())].to_string(),
+            platform: ["aws-lambda", "alibaba-fc"][rng.index(2)].to_string(),
+            micro_batch,
+            global_batch: micro_batch * (1 + rng.index(64)),
+            merge_layers: 1 + rng.index(12),
+            bandwidth_scale: rng.uniform(0.25, 8.0),
+            chunk_bytes: [0usize, 65536, 1 << 20][rng.index(3)],
+            chunks_in_flight: 1 + rng.index(8),
+            steps: 1 + rng.index(100),
+            lr: rng.uniform(0.01, 1.0),
+            ..ExperimentConfig::default()
+        };
+        if rng.chance(0.3) {
+            cfg.lifetime_s = rng.uniform(1.0, 1000.0);
+        }
+        if rng.chance(0.3) {
+            cfg.throttle =
+                Some((rng.uniform(1e5, 1e8), rng.uniform(0.0, 0.05)));
+        }
+
+        // structurally plausible plan (serde is shape-only; semantic
+        // feasibility is Experiment::from_artifact's job)
+        let n_cuts = rng.index(4);
+        let mut cuts: Vec<usize> =
+            (0..n_cuts).map(|_| rng.index(23)).collect();
+        cuts.sort_unstable();
+        cuts.dedup();
+        let dp = [1usize, 2, 4, 8][rng.index(4)];
+        let plan = Plan {
+            stage_tiers: (0..cuts.len() + 1).map(|_| rng.index(8)).collect(),
+            cuts,
+            dp,
+            n_micro_global: dp * (1 + rng.index(16)),
+        };
+        PlanArtifact::new(
+            cfg,
+            plan,
+            (1.0, rng.uniform(0.0, 1e-3)),
+            rng.uniform(0.1, 100.0),
+            rng.uniform(1e-6, 1.0),
+        )
+    }
+}
+
+#[test]
+fn artifact_json_roundtrip_is_identity() {
+    check_with(
+        QcConfig { cases: 200, ..Default::default() },
+        &ArtifactGen,
+        |a| match PlanArtifact::from_json_text(&a.to_json_text()) {
+            Ok(parsed) => {
+                parsed == *a && parsed.to_json_text() == a.to_json_text()
+            }
+            Err(_) => false,
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// integration: the file flow equals the in-process flow exactly
+// ---------------------------------------------------------------------------
+
+fn small_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        model: "resnet101".into(),
+        global_batch: 16,
+        merge_layers: 4,
+        ..ExperimentConfig::default()
+    }
+}
+
+#[test]
+fn plan_out_simulate_plan_matches_in_process() {
+    let exp = Experiment::new(small_cfg()).unwrap();
+    let report = exp.plan().unwrap();
+    let rec = report.recommended().expect("feasible plan");
+
+    // in-process: plan → simulate
+    let direct = exp.simulate(&rec.artifact).unwrap();
+
+    // file flow: plan --out plan.json → simulate --plan plan.json
+    let path = std::env::temp_dir()
+        .join(format!("funcpipe-plan-{}.json", std::process::id()));
+    rec.artifact.save(&path).unwrap();
+    let loaded = PlanArtifact::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, rec.artifact, "artifact changed across the file");
+    let exp2 = Experiment::from_artifact(&loaded).unwrap();
+    let via_file = exp2.simulate(&loaded).unwrap();
+
+    // bit-exact agreement, not approximate
+    assert_eq!(direct.predicted.t_iter, via_file.predicted.t_iter);
+    assert_eq!(direct.predicted.c_iter, via_file.predicted.c_iter);
+    assert_eq!(direct.sim.t_iter, via_file.sim.t_iter);
+    assert_eq!(direct.sim.c_iter, via_file.sim.c_iter);
+    // the rendered reports agree byte-for-byte in both formats
+    assert_eq!(
+        direct.render(Format::Json),
+        via_file.render(Format::Json)
+    );
+    assert_eq!(
+        direct.render(Format::Table),
+        via_file.render(Format::Table)
+    );
+}
+
+#[test]
+fn train_derives_dp_mu_from_the_loaded_plan() {
+    let exp = Experiment::new(small_cfg()).unwrap();
+    let rec = exp.plan().unwrap().recommended().unwrap().artifact.clone();
+
+    let path = std::env::temp_dir()
+        .join(format!("funcpipe-train-plan-{}.json", std::process::id()));
+    rec.save(&path).unwrap();
+    let loaded = PlanArtifact::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let exp2 = Experiment::from_artifact(&loaded).unwrap();
+    let tc = exp2
+        .train_config(Some(&loaded), &TrainOverrides::default())
+        .unwrap();
+    assert_eq!(tc.dp, loaded.plan.dp, "dp must come from the plan");
+    assert_eq!(tc.mu, loaded.plan.mu(), "mu must come from the plan");
+    assert_eq!(tc.sync_alg, loaded.config.sync_alg);
+    assert_eq!(tc.chunking, loaded.config.chunking());
+    assert_eq!(tc.steps, loaded.config.steps);
+
+    // explicit flags stay available as overrides
+    let ov = TrainOverrides { dp: Some(1), steps: Some(2), ..Default::default() };
+    let tc = exp2.train_config(Some(&loaded), &ov).unwrap();
+    assert_eq!((tc.dp, tc.steps), (1, 2));
+    assert_eq!(tc.mu, loaded.plan.mu());
+}
+
+#[test]
+fn artifact_validation_catches_drift() {
+    let exp = Experiment::new(small_cfg()).unwrap();
+    let rec = exp.plan().unwrap().recommended().unwrap().artifact.clone();
+
+    // a hand-edited artifact whose plan no longer matches its config
+    let mut drifted = rec.clone();
+    drifted.plan.n_micro_global += 1;
+    assert!(Experiment::from_artifact(&drifted).is_err());
+
+    // a tier index out of range
+    let mut bad_tier = rec.clone();
+    bad_tier.plan.stage_tiers[0] = 999;
+    assert!(Experiment::from_artifact(&bad_tier).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// every report's JSON form parses back (what the CI smoke step checks
+// end-to-end through the binary)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn report_json_renders_parse() {
+    let exp = Experiment::new(small_cfg()).unwrap();
+    let plan_report = exp.plan().unwrap();
+    Json::parse(plan_report.render(Format::Json).trim()).unwrap();
+
+    let rec = plan_report.recommended().unwrap();
+    let sim_report = exp.simulate(&rec.artifact).unwrap();
+    Json::parse(sim_report.render(Format::Json).trim()).unwrap();
+
+    let base_report = exp.baselines().unwrap();
+    Json::parse(base_report.render(Format::Json).trim()).unwrap();
+}
