@@ -1,0 +1,60 @@
+//! planner_search — throughput of the co-optimizer's B&B search and
+//! effectiveness of the PerfModel StageCache on the `solve_weights`
+//! sweep (the planner hot loop): candidate plans (leaves) and DFS nodes
+//! per second, plus the cache hit rate, for a parameter-heavy-tail CNN
+//! (vgg16) and a Table-1 resnet-class model. Wired into CI next to
+//! `perf_hotpath`; the acceptance bar is a reported hit rate > 50% on
+//! the vgg16 sweep.
+
+use std::time::Instant;
+
+use funcpipe::model::{merge_layers, zoo, MergeCriterion};
+use funcpipe::planner::{CoOptimizer, DEFAULT_WEIGHTS};
+use funcpipe::platform::PlatformSpec;
+
+fn main() {
+    let p = PlatformSpec::aws_lambda();
+    println!(
+        "{:<12} {:>8} {:>10} {:>12} {:>12} {:>12} {:>10}",
+        "model", "plans", "nodes", "plans/s", "nodes/s", "cache hits", "hit rate"
+    );
+    for name in ["vgg16", "resnet101"] {
+        let m = merge_layers(
+            &zoo::by_name(name, &p).expect("zoo model"),
+            8,
+            MergeCriterion::Compute,
+        );
+        let opt = CoOptimizer::new(&m, &p);
+        opt.perf.cache().clear();
+
+        let t0 = Instant::now();
+        let mut leaves = 0u64;
+        let mut nodes = 0u64;
+        let mut found = 0usize;
+        for &w in &DEFAULT_WEIGHTS {
+            if let Some((_, _, stats)) = opt.solve(16, w) {
+                leaves += stats.leaves;
+                nodes += stats.nodes;
+                found += 1;
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let cache = opt.perf.cache();
+        println!(
+            "{:<12} {:>8} {:>10} {:>12.0} {:>12.0} {:>12} {:>9.1}%",
+            name,
+            leaves,
+            nodes,
+            leaves as f64 / dt,
+            nodes as f64 / dt,
+            cache.hits(),
+            cache.hit_rate() * 100.0
+        );
+        assert!(found > 0, "{name}: no feasible plan in the sweep");
+        assert!(
+            cache.hit_rate() > 0.5,
+            "{name}: StageCache hit rate {:.2} below the 50% bar",
+            cache.hit_rate()
+        );
+    }
+}

@@ -12,6 +12,7 @@ use crate::collective::SyncAlgorithm;
 use crate::config::ExperimentConfig;
 use crate::experiment::{Format, TrainOverrides};
 use crate::model::MergeCriterion;
+use crate::simcore::ScenarioModel;
 
 /// Flags that shape the unified [`ExperimentConfig`]; accepted by every
 /// config-driven subcommand.
@@ -36,6 +37,10 @@ pub const CONFIG_FLAGS: &[&str] = &[
 
 /// Config-shaping flags that clash with `--plan`: the artifact already
 /// froze them, so overriding them silently would betray the plan.
+/// `--scenario`/`--seed` are deliberately absent: they are a lens on
+/// the simulation, not part of the plan's identity (and only the
+/// `simulate` subcommand accepts them at all — a scenario flag on a
+/// command that cannot honor it would be a silent no-op).
 pub const PLAN_EXCLUSIVE_FLAGS: &[&str] = &[
     "config",
     "model",
@@ -52,7 +57,7 @@ pub const PLAN_EXCLUSIVE_FLAGS: &[&str] = &[
 pub fn flags_for(cmd: &str) -> Option<Vec<&'static str>> {
     let extra: &[&str] = match cmd {
         "plan" => &["out"],
-        "simulate" => &["plan"],
+        "simulate" => &["plan", "scenario", "seed"],
         "train" => &["plan", "dp", "mu"],
         "baseline" => &[],
         "profile" => return Some(vec!["artifacts", "format"]),
@@ -203,8 +208,45 @@ pub fn config_from_flags(
     if let Some(dir) = flags.get("artifacts") {
         cfg.artifacts_dir = dir.clone();
     }
+    apply_scenario_flags(&mut cfg, flags)?;
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Apply `--scenario`/`--seed` onto a config — shared by the normal
+/// config path and the `simulate --plan` path (where the rest of the
+/// config is frozen by the artifact but the simulation lens stays
+/// selectable per call).
+pub fn apply_scenario_flags(
+    cfg: &mut ExperimentConfig,
+    flags: &HashMap<String, String>,
+) -> Result<()> {
+    if let Some(s) = flags.get("scenario") {
+        cfg.scenario = ScenarioModel::parse(s).with_context(|| {
+            format!(
+                "--scenario {s:?} (expected {})",
+                ScenarioModel::NAMES.join("|")
+            )
+        })?;
+    }
+    if let Some(s) = flags.get("seed") {
+        cfg.seed = s.parse().context("--seed")?;
+        // strict-flag contract: a seed nothing will draw from is the
+        // same silent-no-op class as an unknown flag
+        if cfg.scenario.is_deterministic() {
+            bail!(
+                "--seed has no effect under the deterministic scenario; \
+                 pass --scenario {} (or set `scenario` in the config)",
+                ScenarioModel::NAMES
+                    .iter()
+                    .filter(|&&n| n != "deterministic")
+                    .copied()
+                    .collect::<Vec<_>>()
+                    .join("|")
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Per-run trainer overrides from flags (all optional; absent = derive
@@ -345,6 +387,54 @@ mod tests {
         assert_eq!(ov.dp, Some(4));
         assert_eq!(ov.lifetime_s, Some(30.0));
         assert_eq!(ov.mu, None);
+    }
+
+    #[test]
+    fn scenario_flags_flow_through() {
+        let allowed = flags_for("simulate").unwrap();
+        let flags = parse_flags(
+            "simulate",
+            &argv(&["--scenario", "straggler", "--seed", "7"]),
+            &allowed,
+        )
+        .unwrap();
+        let cfg = config_from_flags(&flags).unwrap();
+        assert_eq!(cfg.scenario.as_str(), "straggler");
+        assert_eq!(cfg.seed, 7);
+        // --seed alone would be a silent no-op (nothing draws from it
+        // under the deterministic default): hard error
+        let seed_only =
+            parse_flags("simulate", &argv(&["--seed", "7"]), &allowed)
+                .unwrap();
+        assert!(config_from_flags(&seed_only).is_err());
+        // unknown scenario names are hard errors (strict-flag contract)
+        let bad = parse_flags(
+            "simulate",
+            &argv(&["--scenario", "chaos-monkey"]),
+            &allowed,
+        )
+        .unwrap();
+        assert!(config_from_flags(&bad).is_err());
+        // scenario does not conflict with --plan (it is a lens, not a
+        // config-shaping flag)
+        let mut with_plan = HashMap::new();
+        with_plan.insert("plan".to_string(), "p.json".to_string());
+        with_plan.insert("scenario".to_string(), "straggler".to_string());
+        check_plan_conflicts(&with_plan).unwrap();
+        // ...but only `simulate` can honor it: everywhere else the flag
+        // would be a silent no-op, so it is rejected outright
+        for cmd in ["plan", "train", "baseline"] {
+            let allowed = flags_for(cmd).unwrap();
+            assert!(
+                parse_flags(cmd, &argv(&["--scenario", "straggler"]), &allowed)
+                    .is_err(),
+                "{cmd} accepted --scenario"
+            );
+            assert!(
+                parse_flags(cmd, &argv(&["--seed", "7"]), &allowed).is_err(),
+                "{cmd} accepted --seed"
+            );
+        }
     }
 
     #[test]

@@ -7,8 +7,10 @@
 //! * **analytic** — the closed-form times of eqs. (1)/(2) used inside the
 //!   planner's performance model, plus chunked variants that account for
 //!   the per-chunk storage-latency overhead;
-//! * **simulated** — flow schedules on the max-min-fair [`FlowSim`]
-//!   network (chunked and unchunked), used by Fig. 8 / Table 3
+//! * **simulated** — declarative [`FlowGraph`] emitters per algorithm
+//!   ([`sim`]), executed by the unified max-min-fair
+//!   [`simcore`](crate::simcore) engine; chunked and unchunked are the
+//!   same graph at different granularity. Used by Fig. 8 / Table 3
 //!   reproductions;
 //! * **real** — the unified engine below, which moves actual `f32`
 //!   gradients through an [`ObjectStore`] and is used by the end-to-end
@@ -35,9 +37,9 @@
 //! the full gradient — see `ObjectStore::high_water_bytes`.
 //!
 //! The three forms agree by construction and by test
-//! (`collective_equiv.rs`).
+//! (`collective_equiv.rs`, `simcore_equiv.rs`).
 //!
-//! [`FlowSim`]: crate::platform::FlowSim
+//! [`FlowGraph`]: crate::simcore::FlowGraph
 //! [`ObjectStore`]: crate::platform::ObjectStore
 
 pub mod analytic;

@@ -2,152 +2,52 @@
 //! max-min-fair network — the "measured" counterpart to the closed forms
 //! in [`analytic`](super::analytic). Used by the Fig. 8 reproduction and
 //! by Table 3's model-accuracy check.
+//!
+//! Since the simcore refactor each algorithm *emits* a declarative
+//! [`FlowGraph`] that the unified engine executes; the historical
+//! `simulate_*` entry points are thin wrappers over
+//! `emit_*` + [`execute`](crate::simcore::execute). Chunked and
+//! unchunked are the same graph at different granularity: the unchunked
+//! schedule is the chunked emitter with one chunk per split, so per-link
+//! serialization, per-chunk dependency gating and the per-operation
+//! latency term all come from one code path.
 
-use crate::platform::network::{BandwidthModel, Dir, FlowSim};
+use crate::platform::network::BandwidthModel;
+use crate::simcore::{execute, FlowGraph, Node, NodeId};
 
-/// LambdaML's 3-phase scatter-reduce (Fig. 4(a)) as a flow schedule.
+fn chunks_per_split(split_bytes: f64, chunk_bytes: f64) -> usize {
+    if chunk_bytes <= 0.0 {
+        return 1;
+    }
+    ((split_bytes / chunk_bytes).ceil() as usize).max(1)
+}
+
+/// LambdaML's 3-phase scatter-reduce (Fig. 4(a)) as a flow graph, at
+/// chunk granularity (`chunk_bytes <= 0` = whole splits).
 ///
-/// Phase 1: each worker uploads its n−1 foreign splits (concurrently on
-/// its uplink). Phase 2 starts only after the relevant upload exists;
-/// download of split i from worker j depends on j's phase-1 upload of
-/// split i. Uploads and downloads of one worker do NOT overlap across
-/// phases — the serialization the paper identifies as the inefficiency —
-/// which we enforce with cross-phase dependencies.
-pub fn simulate_scatter_reduce(
-    n: usize,
-    grad_bytes: f64,
-    model: &BandwidthModel,
-) -> f64 {
-    assert!(n >= 2);
-    let split = grad_bytes / n as f64;
-    let mut sim = FlowSim::new(model.clone());
-
-    // phase 1 uploads: up1[i][j] = worker i uploads split j (j != i)
-    let mut up1 = vec![vec![usize::MAX; n]; n];
-    for i in 0..n {
-        for j in 0..n {
-            if j != i {
-                up1[i][j] = sim.add_flow(i, Dir::Up, split, 0.0);
-            }
-        }
-    }
-    // phase 2 downloads: worker i downloads split i from each j != i,
-    // gated on ALL of i's phase-1 uploads (phases are serial per worker).
-    let mut down2 = vec![vec![usize::MAX; n]; n];
-    for i in 0..n {
-        let mut gate: Vec<usize> =
-            (0..n).filter(|&j| j != i).map(|j| up1[i][j]).collect();
-        for j in 0..n {
-            if j == i {
-                continue;
-            }
-            let mut deps = gate.clone();
-            deps.push(up1[j][i]); // the data must exist
-            down2[i][j] = sim.add_flow_after(i, Dir::Down, split, deps, 0.0);
-        }
-        gate.clear();
-    }
-    // phase 3: upload merged split i (after all phase-2 downloads),
-    // then download all other merged splits.
-    let mut up3 = vec![usize::MAX; n];
-    for i in 0..n {
-        let deps: Vec<usize> =
-            (0..n).filter(|&j| j != i).map(|j| down2[i][j]).collect();
-        up3[i] = sim.add_flow_after(i, Dir::Up, split, deps, 0.0);
-    }
-    for i in 0..n {
-        for j in 0..n {
-            if j != i {
-                sim.add_flow_after(i, Dir::Down, split, vec![up3[j], up3[i]], 0.0);
-            }
-        }
-    }
-    sim.run()
-}
-
-/// FuncPipe's pipelined scatter-reduce (Fig. 4(b), §3.3) as a flow
-/// schedule: at step k worker i uploads split i+k while downloading its
-/// own split uploaded by worker i−(k−1) at step k−1 — duplex.
-pub fn simulate_pipelined_scatter_reduce(
-    n: usize,
-    grad_bytes: f64,
-    model: &BandwidthModel,
-) -> f64 {
-    assert!(n >= 2);
-    let split = grad_bytes / n as f64;
-    let mut sim = FlowSim::new(model.clone());
-
-    // uploads: up[i][k] for steps k = 1..=n-1 (upload split (i+k) mod n),
-    // serialized on worker i's uplink in step order.
-    let mut up = vec![vec![usize::MAX; n]; n];
-    for i in 0..n {
-        let mut prev: Option<usize> = None;
-        for k in 1..n {
-            let deps = prev.map(|p| vec![p]).unwrap_or_default();
-            let id = if deps.is_empty() {
-                sim.add_flow(i, Dir::Up, split, 0.0)
-            } else {
-                sim.add_flow_after(i, Dir::Up, split, deps, 0.0)
-            };
-            up[i][k] = id;
-            prev = Some(id);
-        }
-    }
-    // downloads: at step k (2..=n) worker i downloads split i uploaded by
-    // worker (i - (k-1)) mod n at step k-1; serialized on i's downlink.
-    let mut last = vec![usize::MAX; n];
-    for i in 0..n {
-        let mut prev: Option<usize> = None;
-        for k in 2..=n {
-            let src = (i + n - (k - 1)) % n;
-            let mut deps = vec![up[src][k - 1]];
-            if let Some(p) = prev {
-                deps.push(p);
-            }
-            let id = sim.add_flow_after(i, Dir::Down, split, deps, 0.0);
-            prev = Some(id);
-            last[i] = id;
-        }
-    }
-    // phase 3 (unchanged by the pipelining): upload merged split, then
-    // fetch the n-1 other merged splits.
-    let mut up3 = vec![usize::MAX; n];
-    for i in 0..n {
-        up3[i] = sim.add_flow_after(i, Dir::Up, split, vec![last[i]], 0.0);
-    }
-    for i in 0..n {
-        for j in 0..n {
-            if j != i {
-                sim.add_flow_after(i, Dir::Down, split, vec![up3[j]], 0.0);
-            }
-        }
-    }
-    sim.run()
-}
-
-/// Chunked 3-phase scatter-reduce: the same schedule as
-/// [`simulate_scatter_reduce`], but every split travels as
-/// ⌈split/chunk⌉ flows serialized on their link, mirroring the real
-/// chunked engine. With `latency == 0` this converges to the unchunked
-/// makespan (same bytes on the same links behind the same barriers);
-/// with latency it exposes the per-chunk operation overhead that
-/// [`sync_time_chunked`](super::analytic::sync_time_chunked) models.
-pub fn simulate_scatter_reduce_chunked(
+/// Phase 1: each worker uploads its n−1 foreign splits, chunks
+/// serialized on its uplink. Phase 2 starts only after the relevant
+/// upload exists; download of split i's chunk from worker j depends on
+/// j's phase-1 upload of that chunk. Uploads and downloads of one
+/// worker do NOT overlap across phases — the serialization the paper
+/// identifies as the inefficiency — enforced with cross-phase
+/// dependencies.
+pub fn emit_scatter_reduce(
     n: usize,
     grad_bytes: f64,
     model: &BandwidthModel,
     chunk_bytes: f64,
-) -> f64 {
+) -> FlowGraph {
     assert!(n >= 2);
     let split = grad_bytes / n as f64;
     let nc = chunks_per_split(split, chunk_bytes);
     let chunk = split / nc as f64;
-    let mut sim = FlowSim::new(model.clone());
+    let mut g = FlowGraph::with_network(model);
 
     // phase 1: worker i's uplink carries its (n-1)*nc foreign-split
     // chunks, serialized; up1[i][j][c] indexed per split then chunk
-    let mut up1 = vec![vec![vec![usize::MAX; nc]; n]; n];
-    let mut last_up = vec![None::<usize>; n];
+    let mut up1 = vec![vec![vec![NodeId::MAX; nc]; n]; n];
+    let mut last_up = vec![None::<NodeId>; n];
     for i in 0..n {
         for j in 0..n {
             if j == i {
@@ -155,11 +55,7 @@ pub fn simulate_scatter_reduce_chunked(
             }
             for c in 0..nc {
                 let deps = last_up[i].map(|p| vec![p]).unwrap_or_default();
-                let id = if deps.is_empty() {
-                    sim.add_flow(i, Dir::Up, chunk, 0.0)
-                } else {
-                    sim.add_flow_after(i, Dir::Up, chunk, deps, 0.0)
-                };
+                let id = g.add(Node::transfer(i, true, chunk).after(deps));
                 up1[i][j][c] = id;
                 last_up[i] = Some(id);
             }
@@ -168,7 +64,7 @@ pub fn simulate_scatter_reduce_chunked(
     // phase 2: strictly after the worker's own phase-1 uploads (the
     // serialization of the plain algorithm), chunk flows serialized on
     // the downlink, each gated on the producing upload chunk
-    let mut last_down = vec![None::<usize>; n];
+    let mut last_down = vec![None::<NodeId>; n];
     for i in 0..n {
         for j in 0..n {
             if j == i {
@@ -180,13 +76,13 @@ pub fn simulate_scatter_reduce_chunked(
                     deps.push(p);
                 }
                 last_down[i] =
-                    Some(sim.add_flow_after(i, Dir::Down, chunk, deps, 0.0));
+                    Some(g.add(Node::transfer(i, false, chunk).after(deps)));
             }
         }
     }
     // phase 3: merged-split chunks after the merge completes, then the
     // gathers, gated per chunk on the producing upload
-    let mut up3 = vec![vec![usize::MAX; nc]; n];
+    let mut up3 = vec![vec![NodeId::MAX; nc]; n];
     for i in 0..n {
         let mut prev = last_down[i];
         for c in 0..nc {
@@ -194,7 +90,7 @@ pub fn simulate_scatter_reduce_chunked(
             if let Some(p) = prev {
                 deps.push(p);
             }
-            up3[i][c] = sim.add_flow_after(i, Dir::Up, chunk, deps, 0.0);
+            up3[i][c] = g.add(Node::transfer(i, true, chunk).after(deps));
             prev = Some(up3[i][c]);
         }
     }
@@ -209,42 +105,41 @@ pub fn simulate_scatter_reduce_chunked(
                 if let Some(p) = prev {
                     deps.push(p);
                 }
-                prev = Some(sim.add_flow_after(i, Dir::Down, chunk, deps, 0.0));
+                prev = Some(g.add(Node::transfer(i, false, chunk).after(deps)));
             }
         }
     }
-    sim.run()
+    g
 }
 
-/// Chunked pipelined scatter-reduce: chunk-granular duplex — download
-/// chunk `c` of step `k` needs only upload chunk `c` of step `k-1`, so
-/// the fill is one *chunk* rather than one split, exactly like the real
-/// chunked engine (ack windows are not modelled; with symmetric
-/// bandwidth they never bind).
-pub fn simulate_pipelined_scatter_reduce_chunked(
+/// FuncPipe's pipelined scatter-reduce (Fig. 4(b), §3.3) as a flow
+/// graph: chunk-granular duplex — download chunk `c` of step `k` needs
+/// only upload chunk `c` of step `k-1`, so the fill is one *chunk*
+/// rather than one split, exactly like the real chunked engine (ack
+/// windows are not modelled; with symmetric bandwidth they never bind).
+/// `chunk_bytes <= 0` = whole splits: the classic schedule where at
+/// step k worker i uploads split i+k while downloading its own split
+/// uploaded by worker i−(k−1) at step k−1.
+pub fn emit_pipelined_scatter_reduce(
     n: usize,
     grad_bytes: f64,
     model: &BandwidthModel,
     chunk_bytes: f64,
-) -> f64 {
+) -> FlowGraph {
     assert!(n >= 2);
     let split = grad_bytes / n as f64;
     let nc = chunks_per_split(split, chunk_bytes);
     let chunk = split / nc as f64;
-    let mut sim = FlowSim::new(model.clone());
+    let mut g = FlowGraph::with_network(model);
 
     // reduce uploads: steps k=1..n-1, chunks serialized on the uplink
-    let mut up = vec![vec![vec![usize::MAX; nc]; n]; n];
-    let mut last_up = vec![None::<usize>; n];
+    let mut up = vec![vec![vec![NodeId::MAX; nc]; n]; n];
+    let mut last_up = vec![None::<NodeId>; n];
     for i in 0..n {
         for k in 1..n {
             for c in 0..nc {
                 let deps = last_up[i].map(|p| vec![p]).unwrap_or_default();
-                let id = if deps.is_empty() {
-                    sim.add_flow(i, Dir::Up, chunk, 0.0)
-                } else {
-                    sim.add_flow_after(i, Dir::Up, chunk, deps, 0.0)
-                };
+                let id = g.add(Node::transfer(i, true, chunk).after(deps));
                 up[i][k][c] = id;
                 last_up[i] = Some(id);
             }
@@ -252,7 +147,7 @@ pub fn simulate_pipelined_scatter_reduce_chunked(
     }
     // reduce downloads: at step k worker i pulls its own split's chunk c
     // uploaded by (i-(k-1)) at step k-1 — duplex at chunk granularity
-    let mut last_down = vec![None::<usize>; n];
+    let mut last_down = vec![None::<NodeId>; n];
     for i in 0..n {
         for k in 2..=n {
             let src = (i + n - (k - 1)) % n;
@@ -262,12 +157,12 @@ pub fn simulate_pipelined_scatter_reduce_chunked(
                     deps.push(p);
                 }
                 last_down[i] =
-                    Some(sim.add_flow_after(i, Dir::Down, chunk, deps, 0.0));
+                    Some(g.add(Node::transfer(i, false, chunk).after(deps)));
             }
         }
     }
     // broadcast: merged chunks after the merge, then the gathers
-    let mut up3 = vec![vec![usize::MAX; nc]; n];
+    let mut up3 = vec![vec![NodeId::MAX; nc]; n];
     for i in 0..n {
         let mut prev = last_up[i];
         for c in 0..nc {
@@ -275,7 +170,7 @@ pub fn simulate_pipelined_scatter_reduce_chunked(
             if let Some(p) = prev {
                 deps.push(p);
             }
-            up3[i][c] = sim.add_flow_after(i, Dir::Up, chunk, deps, 0.0);
+            up3[i][c] = g.add(Node::transfer(i, true, chunk).after(deps));
             prev = Some(up3[i][c]);
         }
     }
@@ -290,39 +185,84 @@ pub fn simulate_pipelined_scatter_reduce_chunked(
                 if let Some(p) = prev {
                     deps.push(p);
                 }
-                prev = Some(sim.add_flow_after(i, Dir::Down, chunk, deps, 0.0));
+                prev = Some(g.add(Node::transfer(i, false, chunk).after(deps)));
             }
         }
     }
-    sim.run()
+    g
 }
 
-fn chunks_per_split(split_bytes: f64, chunk_bytes: f64) -> usize {
-    if chunk_bytes <= 0.0 {
-        return 1;
+/// HybridPS synchronization as a flow graph: workers push gradients
+/// directly to a VM parameter server (worker index `n` in the model)
+/// and pull updated parameters back.
+pub fn emit_parameter_server(
+    n: usize,
+    grad_bytes: f64,
+    model: &BandwidthModel,
+) -> FlowGraph {
+    assert!(model.n_workers() >= n + 1, "need server as worker n");
+    let server = n;
+    let mut g = FlowGraph::with_network(model);
+    let ups: Vec<NodeId> =
+        (0..n).map(|i| g.add(Node::direct(i, server, grad_bytes))).collect();
+    // server applies update after all pushes, then each worker pulls.
+    for i in 0..n {
+        g.add(Node::direct(server, i, grad_bytes).after(ups.clone()));
     }
-    ((split_bytes / chunk_bytes).ceil() as usize).max(1)
+    g
 }
 
-/// HybridPS synchronization: workers push gradients directly to a VM
-/// parameter server (worker index `n` in the model) and pull updated
-/// parameters back.
+/// LambdaML's 3-phase scatter-reduce, whole-split flows.
+pub fn simulate_scatter_reduce(
+    n: usize,
+    grad_bytes: f64,
+    model: &BandwidthModel,
+) -> f64 {
+    execute(&emit_scatter_reduce(n, grad_bytes, model, 0.0)).makespan
+}
+
+/// FuncPipe's pipelined scatter-reduce, whole-split flows.
+pub fn simulate_pipelined_scatter_reduce(
+    n: usize,
+    grad_bytes: f64,
+    model: &BandwidthModel,
+) -> f64 {
+    execute(&emit_pipelined_scatter_reduce(n, grad_bytes, model, 0.0)).makespan
+}
+
+/// Chunked 3-phase scatter-reduce: every split travels as
+/// ⌈split/chunk⌉ flows serialized on their link, mirroring the real
+/// chunked engine. With `latency == 0` this converges to the unchunked
+/// makespan (same bytes on the same links behind the same barriers);
+/// with latency it exposes the per-chunk operation overhead that
+/// [`sync_time_chunked`](super::analytic::sync_time_chunked) models.
+pub fn simulate_scatter_reduce_chunked(
+    n: usize,
+    grad_bytes: f64,
+    model: &BandwidthModel,
+    chunk_bytes: f64,
+) -> f64 {
+    execute(&emit_scatter_reduce(n, grad_bytes, model, chunk_bytes)).makespan
+}
+
+/// Chunked pipelined scatter-reduce (chunk-granular duplex fill).
+pub fn simulate_pipelined_scatter_reduce_chunked(
+    n: usize,
+    grad_bytes: f64,
+    model: &BandwidthModel,
+    chunk_bytes: f64,
+) -> f64 {
+    execute(&emit_pipelined_scatter_reduce(n, grad_bytes, model, chunk_bytes))
+        .makespan
+}
+
+/// HybridPS synchronization through the VM parameter server.
 pub fn simulate_parameter_server(
     n: usize,
     grad_bytes: f64,
     model: &BandwidthModel,
 ) -> f64 {
-    assert!(model.n_workers() >= n + 1, "need server as worker n");
-    let server = n;
-    let mut sim = FlowSim::new(model.clone());
-    let ups: Vec<usize> = (0..n)
-        .map(|i| sim.add_direct_flow_after(i, server, grad_bytes, vec![], 0.0))
-        .collect();
-    // server applies update after all pushes, then each worker pulls.
-    for i in 0..n {
-        sim.add_direct_flow_after(server, i, grad_bytes, ups.clone(), 0.0);
-    }
-    sim.run()
+    execute(&emit_parameter_server(n, grad_bytes, model)).makespan
 }
 
 #[cfg(test)]
@@ -460,4 +400,8 @@ mod tests {
         let b = simulate_pipelined_scatter_reduce(n, 100.0 * MB, &capped);
         assert!(b > a * 1.5, "cap should slow things: {a} vs {b}");
     }
+
+    // wrapper == emit + execute delegation is pinned (for every
+    // algorithm, including the parameter server) by
+    // `rust/tests/simcore_equiv.rs::wrappers_delegate_to_emitted_graphs`.
 }

@@ -18,6 +18,7 @@ use anyhow::{bail, Context, Result};
 use crate::collective::{Chunking, SyncAlgorithm};
 use crate::model::{zoo, MergeCriterion, ModelProfile};
 use crate::platform::PlatformSpec;
+use crate::simcore::ScenarioModel;
 use crate::util::json::Json;
 
 /// A fully-resolved experiment configuration.
@@ -49,6 +50,16 @@ pub struct ExperimentConfig {
     pub lifetime_s: f64,
     /// Per-worker storage throttle `(bytes/s, latency seconds)`.
     pub throttle: Option<(f64, f64)>,
+    // -- simulation scenario lens ----------------------------------------
+    /// Serverless scenario the DES applies on `simulate`
+    /// (`deterministic` | `cold-start` | `straggler` |
+    /// `bandwidth-jitter`). A *lens* on the simulation, not part of the
+    /// plan's identity: artifact drift checks ignore it, so one plan can
+    /// be simulated under many scenarios.
+    pub scenario: ScenarioModel,
+    /// Seed for the scenario's draws; same seed + scenario ⇒
+    /// bit-identical `SimReport`.
+    pub seed: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -70,6 +81,8 @@ impl Default for ExperimentConfig {
             lr: 0.2,
             lifetime_s: f64::INFINITY,
             throttle: None,
+            scenario: ScenarioModel::Deterministic,
+            seed: 0,
         }
     }
 }
@@ -83,7 +96,7 @@ impl ExperimentConfig {
     /// plan artifact, which embeds the config). Unknown keys are
     /// rejected so config typos fail loudly, like unknown CLI flags.
     pub fn from_json(j: &Json) -> Result<Self> {
-        const KNOWN: [&str; 16] = [
+        const KNOWN: [&str; 18] = [
             "model",
             "platform",
             "global_batch",
@@ -100,6 +113,8 @@ impl ExperimentConfig {
             "lr",
             "lifetime_s",
             "throttle",
+            "scenario",
+            "seed",
         ];
         j.check_keys(&KNOWN).context("config")?;
         let mut cfg = Self::default();
@@ -177,6 +192,18 @@ impl ExperimentConfig {
                 a[1].as_f64().context("throttle lat_s")?,
             ));
         }
+        if let Some(v) = j.get("scenario") {
+            let s = v.as_str().context("scenario string")?;
+            cfg.scenario = ScenarioModel::parse(s).with_context(|| {
+                format!(
+                    "unknown scenario {s:?} (expected {})",
+                    ScenarioModel::NAMES.join("|")
+                )
+            })?;
+        }
+        if let Some(v) = j.get("seed") {
+            cfg.seed = v.as_usize().context("seed")? as u64;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -210,6 +237,8 @@ impl ExperimentConfig {
             ("artifacts_dir", Json::str(self.artifacts_dir.as_str())),
             ("steps", Json::Num(self.steps as f64)),
             ("lr", Json::Num(self.lr)),
+            ("scenario", Json::str(self.scenario.as_str())),
+            ("seed", Json::Num(self.seed as f64)),
         ];
         if self.lifetime_s.is_finite() {
             pairs.push(("lifetime_s", Json::Num(self.lifetime_s)));
@@ -257,6 +286,22 @@ impl ExperimentConfig {
             if !(bps > 0.0 && lat >= 0.0) {
                 bail!("throttle must be (bytes/s > 0, lat_s >= 0)");
             }
+        }
+        if self.seed > (1u64 << 53) {
+            bail!("seed must fit a JSON number exactly (<= 2^53)");
+        }
+        // the wire format carries only the scenario's name, so a config
+        // holding hand-tuned parameters would serialize lossily and
+        // replay with different noise than the session that wrote it —
+        // reject it here instead (callers wanting custom parameters use
+        // `simulate_iteration_scenario` directly, not the config)
+        if ScenarioModel::parse(self.scenario.as_str()) != Some(self.scenario)
+        {
+            bail!(
+                "config scenario must use the canonical parameters of {:?} \
+                 (select scenarios by name)",
+                self.scenario.as_str()
+            );
         }
         self.resolve_platform()?;
         Ok(())
@@ -337,6 +382,29 @@ mod tests {
     #[test]
     fn defaults_are_valid() {
         ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_scenario_and_seed() {
+        let cfg = ExperimentConfig::from_json_text(
+            r#"{"scenario": "straggler", "seed": 7}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.scenario.as_str(), "straggler");
+        assert_eq!(cfg.seed, 7);
+        // round-trips through JSON like every other knob
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+        // unknown scenario names fail loudly, like unknown flags
+        assert!(ExperimentConfig::from_json_text(
+            r#"{"scenario": "chaos-monkey"}"#
+        )
+        .is_err());
+        // seeds beyond exact-JSON range are rejected
+        assert!(ExperimentConfig::from_json_text(
+            r#"{"seed": 36028797018963970}"#
+        )
+        .is_err());
     }
 
     #[test]

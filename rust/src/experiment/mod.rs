@@ -36,7 +36,7 @@ use crate::baselines::{evaluate_baseline, BaselineKind};
 use crate::collective::Chunking;
 use crate::config::ExperimentConfig;
 use crate::model::{zoo, ModelProfile};
-use crate::pipeline::simulate_iteration;
+use crate::pipeline::{simulate_iteration, simulate_iteration_scenario};
 use crate::planner::{pareto_front, recommend, sweep, CoOptimizer, PerfModel};
 use crate::platform::pricing::{C5_9XLARGE, R7_2XLARGE};
 use crate::platform::PlatformSpec;
@@ -113,8 +113,15 @@ impl Experiment {
         // full-config equality: merge/batch/sync/chunking drift changes
         // what the plan's cuts and tiers mean, so acting on the artifact
         // under a different config would silently compute the wrong
-        // session (per-run deltas belong in TrainOverrides)
-        if artifact.config != self.cfg {
+        // session (per-run deltas belong in TrainOverrides). The
+        // scenario lens (`scenario`/`seed`) is normalized away first:
+        // it changes how a simulation is *perturbed*, never what the
+        // plan means, so one artifact can be simulated under many
+        // scenarios (`simulate --plan p.json --scenario straggler`).
+        let mut theirs = artifact.config.clone();
+        theirs.scenario = self.cfg.scenario;
+        theirs.seed = self.cfg.seed;
+        if theirs != self.cfg {
             bail!(
                 "plan artifact's embedded config differs from this \
                  session's config; rebuild the session with \
@@ -183,9 +190,18 @@ impl Experiment {
     /// (the DES executes the unchunked flow schedule — same byte
     /// volume, no per-chunk latency term), so with `chunk_bytes > 0`
     /// the reported error includes the priced chunk overhead, not pure
-    /// model error. Deterministic, so the same artifact always yields
-    /// the same report (the `plan --out` → `simulate --plan`
-    /// equivalence the integration tests pin down).
+    /// model error.
+    ///
+    /// When the config selects a [`ScenarioModel`] other than
+    /// `deterministic`, the report additionally carries a second DES
+    /// pass with the seeded perturbation applied (cold starts,
+    /// stragglers, bandwidth jitter) — the scenario-lab columns. Both
+    /// passes are deterministic functions of (artifact, scenario,
+    /// seed): the same inputs always yield the bit-identical report
+    /// (the `plan --out` → `simulate --plan` equivalence and the
+    /// replay test pin this down).
+    ///
+    /// [`ScenarioModel`]: crate::simcore::ScenarioModel
     pub fn simulate(&self, artifact: &PlanArtifact) -> Result<SimReport> {
         self.check_artifact(artifact)?;
         let predicted = PerfModel::new(&self.model, &self.platform)
@@ -198,11 +214,24 @@ impl Experiment {
             &artifact.plan,
             self.cfg.sync_alg,
         );
+        let scenario_sim = (!self.cfg.scenario.is_deterministic()).then(|| {
+            simulate_iteration_scenario(
+                &self.model,
+                &self.platform,
+                &artifact.plan,
+                self.cfg.sync_alg,
+                self.cfg.scenario,
+                self.cfg.seed,
+            )
+        });
         Ok(SimReport {
             describe: artifact.plan.describe(&self.model, &self.platform),
             plan: artifact.plan.clone(),
             predicted,
             sim,
+            scenario: self.cfg.scenario,
+            seed: self.cfg.seed,
+            scenario_sim,
         })
     }
 

@@ -11,6 +11,7 @@ use crate::baselines::BaselineResult;
 use crate::model::Plan;
 use crate::pipeline::{rel_err_pct, SimResult};
 use crate::planner::PlanPerf;
+use crate::simcore::ScenarioModel;
 use crate::trainer::IterLog;
 use crate::util::humansize::{bytes, secs, usd};
 use crate::util::json::Json;
@@ -214,19 +215,34 @@ impl Report for PlanReport {
 // simulate
 // ---------------------------------------------------------------------------
 
-/// Closed-form prediction vs discrete-event simulation of one plan.
+/// Closed-form prediction vs discrete-event simulation of one plan,
+/// plus (when the session selects one) the seeded scenario pass.
 #[derive(Debug, Clone)]
 pub struct SimReport {
     pub plan: Plan,
     pub describe: String,
     pub predicted: PlanPerf,
+    /// Deterministic DES — the Table-3 "measured" reference.
     pub sim: SimResult,
+    /// The session's scenario lens and its seed.
+    pub scenario: ScenarioModel,
+    pub seed: u64,
+    /// DES under the scenario; `None` when it is `deterministic`.
+    pub scenario_sim: Option<SimResult>,
 }
 
 impl SimReport {
-    /// Table-3-style relative t_iter error, percent.
+    /// Table-3-style relative t_iter error, percent (model vs the
+    /// deterministic DES — scenario noise is reported separately).
     pub fn error_pct(&self) -> f64 {
         rel_err_pct(self.predicted.t_iter, self.sim.t_iter)
+    }
+
+    /// Scenario-induced slowdown over the deterministic DES, percent.
+    pub fn scenario_overhead_pct(&self) -> Option<f64> {
+        self.scenario_sim
+            .as_ref()
+            .map(|s| (s.t_iter / self.sim.t_iter - 1.0) * 100.0)
     }
 }
 
@@ -249,10 +265,38 @@ impl Report for SimReport {
             format!("{:.1}%", self.error_pct()),
             String::new(),
         ]);
+        if let Some(s) = &self.scenario_sim {
+            t.row([
+                format!(
+                    "DES sim [{} seed={}]",
+                    self.scenario.as_str(),
+                    self.seed
+                ),
+                secs(s.t_iter),
+                usd(s.c_iter),
+            ]);
+            t.row([
+                "scenario overhead".to_string(),
+                format!("{:+.1}%", self.scenario_overhead_pct().unwrap_or(0.0)),
+                String::new(),
+            ]);
+        }
         vec![t]
     }
 
     fn to_json(&self) -> Json {
+        let mut scenario = vec![
+            ("kind", Json::str(self.scenario.as_str())),
+            ("seed", Json::Num(self.seed as f64)),
+        ];
+        if let Some(s) = &self.scenario_sim {
+            scenario.push(("t_iter", Json::Num(s.t_iter)));
+            scenario.push(("c_iter", Json::Num(s.c_iter)));
+            scenario.push((
+                "overhead_pct",
+                Json::Num(self.scenario_overhead_pct().unwrap_or(0.0)),
+            ));
+        }
         Json::obj(vec![
             ("plan", self.plan.to_json()),
             ("describe", Json::str(self.describe.as_str())),
@@ -270,6 +314,7 @@ impl Report for SimReport {
                     ("c_iter", Json::Num(self.sim.c_iter)),
                 ]),
             ),
+            ("scenario", Json::obj(scenario)),
             ("error_pct", Json::Num(self.error_pct())),
         ])
     }

@@ -37,5 +37,6 @@ pub mod planner;
 pub mod platform;
 pub mod profiler;
 pub mod runtime;
+pub mod simcore;
 pub mod trainer;
 pub mod util;

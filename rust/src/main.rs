@@ -75,16 +75,20 @@ the unified config flags (--config file.json --model <name>
 --merge-layers <n> --merge-criterion compute|params|activations
 --sync pipelined|scatter-reduce --bandwidth-scale <x>
 --chunk-bytes <n> --chunks-in-flight <n> --steps <n> --lr <x>
---lifetime <s> --artifacts <dir>); profile takes just --artifacts,
-fig just --format. Unknown flags are errors.
+--lifetime <s> --artifacts <dir>); simulate alone adds the scenario
+lens (--scenario deterministic|cold-start|straggler|bandwidth-jitter
+--seed <n>); profile takes just --artifacts, fig just --format.
+Unknown flags are errors.
 
 COMMANDS:
   plan      [--out plan.json]
             co-optimize partition + resources; prints the Pareto sweep
             and optionally writes the recommended plan artifact
-  simulate  [--plan plan.json]
+  simulate  [--plan plan.json] [--scenario <name>] [--seed <n>]
             DES-simulate a plan vs the closed-form model; with --plan
-            the artifact is the whole input (no other flags)
+            the artifact is the whole input except the scenario lens
+            (--scenario/--seed perturb the simulation, deterministic
+            per seed: cold starts, stragglers, bandwidth jitter)
   train     [--plan plan.json] [--dp n] [--mu n]
             real end-to-end training over the AOT artifacts; --plan
             derives dp/μ/sync/chunking from the artifact, flags are
@@ -119,9 +123,23 @@ fn cmd_plan(flags: &HashMap<String, String>, format: Format) -> Result<()> {
 
 fn cmd_simulate(flags: &HashMap<String, String>, format: Format) -> Result<()> {
     let report = if let Some(path) = flags.get("plan") {
-        cli::only_flags(flags, &["plan", "format"], "simulate --plan")?;
+        // the artifact freezes the config; the scenario lens stays
+        // selectable per simulation
+        cli::only_flags(
+            flags,
+            &["plan", "format", "scenario", "seed"],
+            "simulate --plan",
+        )?;
         let artifact = PlanArtifact::load(path)?;
-        let exp = Experiment::from_artifact(&artifact)?;
+        let mut cfg = artifact.config.clone();
+        // whatever lens the planning session happened to carry is
+        // metadata, not a request: a plain `simulate --plan` must give
+        // the deterministic Table-3 reference, and only explicit
+        // --scenario/--seed flags opt into a perturbed pass
+        cfg.scenario = funcpipe::simcore::ScenarioModel::Deterministic;
+        cfg.seed = 0;
+        cli::apply_scenario_flags(&mut cfg, flags)?;
+        let exp = Experiment::new(cfg)?;
         exp.simulate(&artifact)?
     } else {
         let exp = Experiment::new(cli::config_from_flags(flags)?)?;

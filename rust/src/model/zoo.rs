@@ -27,7 +27,12 @@ const MB: f64 = 1.0e6;
 /// Micro-batch size used throughout the evaluation (§5.1).
 pub const MICRO_BATCH: usize = 4;
 
-/// Names accepted by [`by_name`].
+/// The paper's Table 1 evaluation set — the figure/table generators
+/// iterate exactly these four so the reproduced averages keep matching
+/// the paper. [`by_name`] additionally accepts `vgg16`, the
+/// parameter-heavy-tail CNN used by the `planner_search` bench (its fc
+/// layers concentrate ~89% of the parameters, which stresses the
+/// partitioner differently), deliberately NOT part of this set.
 pub const MODEL_NAMES: [&str; 4] =
     ["resnet101", "amoebanet-d18", "amoebanet-d36", "bert-large"];
 
@@ -37,6 +42,7 @@ pub fn by_name(name: &str, platform: &PlatformSpec) -> Option<ModelProfile> {
         "amoebanet-d18" | "amoebanetd18" | "d18" => Some(amoebanet_d18(platform)),
         "amoebanet-d36" | "amoebanetd36" | "d36" => Some(amoebanet_d36(platform)),
         "bert-large" | "bert" => Some(bert_large(platform)),
+        "vgg16" | "vgg" => Some(vgg16(platform)),
         _ => None,
     }
 }
@@ -230,6 +236,50 @@ pub fn bert_large(platform: &PlatformSpec) -> ModelProfile {
     )
 }
 
+/// VGG16 (~552 MB params, ~96 MB act/sample): 13 convolution layers +
+/// 3 fully-connected layers. The fc block holds ~89% of the parameters
+/// (fc1 alone ≈ 103M of 138M) while the convolutions hold nearly all of
+/// the activations and compute — the opposite skew from the Table 1
+/// models, which is exactly what makes it a good planner-search stress
+/// case: cheap-to-sync conv stages vs one parameter-dense tail stage.
+pub fn vgg16(platform: &PlatformSpec) -> ModelProfile {
+    // per-layer parameter counts (M), conv1_1..conv5_3 then fc6..fc8
+    let param_w = vec![
+        0.002, 0.037, // conv1_*
+        0.074, 0.148, // conv2_*
+        0.295, 0.590, 0.590, // conv3_*
+        1.180, 2.360, 2.360, // conv4_*
+        2.360, 2.360, 2.360, // conv5_*
+        102.8, 16.8, 4.1, // fc6..fc8
+    ];
+    // activation footprint shrinks with each pooling stage; fc is tiny
+    let act_w = vec![
+        3.2, 3.2, 1.6, 1.6, 0.8, 0.8, 0.8, 0.4, 0.4, 0.4, 0.1, 0.1, 0.1,
+        0.02, 0.004, 0.001,
+    ];
+    // GFLOPs per layer (fwd): conv-dominated, fc nearly free
+    let comp_w = vec![
+        0.17, 3.7, 1.85, 3.7, 1.85, 3.7, 3.7, 1.85, 3.7, 3.7, 0.93, 0.93,
+        0.93, 0.21, 0.03, 0.01,
+    ];
+    // boundary tensors halve at every pooling layer
+    let out_frac = vec![
+        0.9, 0.5, 0.9, 0.5, 0.9, 0.9, 0.5, 0.9, 0.9, 0.5, 0.9, 0.9, 0.5,
+        0.5, 0.5, 0.5,
+    ];
+    build(
+        "vgg16",
+        platform,
+        552.0,
+        96.0,
+        // ~15.5 GFLOPs fwd @224px, same CIFAR-scale discount and
+        // calibration anchor as resnet101 (0.55 s at 7.8 GFLOPs)
+        1.1,
+        2.0,
+        Shape { param_w, act_w, comp_w, out_frac },
+    )
+}
+
 /// The small AOT transformer actually trained end-to-end (examples/),
 /// profiled analytically here for planner tests; the real profiler
 /// measures it through PJRT.
@@ -263,6 +313,7 @@ mod tests {
             (amoebanet_d18(&p), 476.0, 432.0),
             (amoebanet_d36(&p), 900.0, 697.0),
             (bert_large(&p), 1153.0, 263.0),
+            (vgg16(&p), 552.0, 96.0),
         ];
         for (m, params_mb, act_mb) in cases {
             let got_p = m.total_param_bytes() as f64 / MB;
@@ -314,6 +365,10 @@ mod tests {
         for n in MODEL_NAMES {
             assert!(by_name(n, &p).is_some(), "{n}");
         }
+        // vgg16 resolves by name but stays out of the Table-1 set the
+        // figure generators iterate
+        assert!(by_name("vgg16", &p).is_some());
+        assert!(!MODEL_NAMES.contains(&"vgg16"));
         assert!(by_name("nope", &p).is_none());
     }
 
@@ -322,6 +377,24 @@ mod tests {
         let p = PlatformSpec::aws_lambda();
         let m = bert_large(&p);
         assert!(m.layers[0].param_bytes > m.layers[1].param_bytes * 2);
+    }
+
+    #[test]
+    fn vgg16_params_concentrate_in_fc() {
+        let p = PlatformSpec::aws_lambda();
+        let m = vgg16(&p);
+        let total: u64 = m.layers.iter().map(|l| l.param_bytes).sum();
+        let fc: u64 = m.layers[13..].iter().map(|l| l.param_bytes).sum();
+        assert!(
+            fc as f64 > 0.85 * total as f64,
+            "fc share {:.2}",
+            fc as f64 / total as f64
+        );
+        // while compute lives in the convolutions
+        let top = p.max_tier();
+        let conv_s: f64 = m.layers[..13].iter().map(|l| l.fwd_s[top]).sum();
+        let fc_s: f64 = m.layers[13..].iter().map(|l| l.fwd_s[top]).sum();
+        assert!(conv_s > 10.0 * fc_s);
     }
 
     #[test]

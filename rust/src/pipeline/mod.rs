@@ -5,8 +5,11 @@
 //! * [`task`] — the task DAG vocabulary shared by the simulator and the
 //!   real executor (Fwd/Bwd compute, boundary Upload/Download, Sync);
 //! * [`schedule`] — builds the §3.2 schedule for a [`Plan`];
-//! * [`simulate`] — discrete-event execution of a schedule on the
-//!   bandwidth-shared platform model ("measured" side of Table 3).
+//! * [`simulate`] — translates a schedule into a
+//!   [`FlowGraph`](crate::simcore::FlowGraph) executed by the unified
+//!   [`simcore`](crate::simcore) engine ("measured" side of Table 3),
+//!   optionally under a seeded scenario (cold starts, stragglers,
+//!   bandwidth jitter).
 //!
 //! [`Plan`]: crate::model::Plan
 
@@ -15,5 +18,8 @@ pub mod simulate;
 pub mod task;
 
 pub use schedule::build_schedule;
-pub use simulate::{rel_err_pct, simulate_iteration, SimResult};
+pub use simulate::{
+    build_flow_graph, rel_err_pct, simulate_iteration,
+    simulate_iteration_scenario, SimResult,
+};
 pub use task::{Schedule, Task, TaskKind};

@@ -2,38 +2,24 @@
 //! bandwidth platform model — the "measured" side of the Table 3
 //! model-accuracy reproduction and of Fig. 8.
 //!
-//! Channels: each worker has a CPU (capacity 1 work-unit/s), an uplink and
-//! a downlink; the optional storage-side aggregate cap spans all
-//! transfers. Rates are allocated max-min fairly (progressive filling)
-//! among active tasks, recomputed at every start/finish event; compute
-//! tasks never actually share a CPU because the schedule chains them.
-//! Sync tasks expand inline into the exact flow schedule of the selected
-//! scatter-reduce algorithm (§3.3).
+//! Since the simcore refactor this module only *translates*: a
+//! [`Schedule`]'s task DAG plus the boundary transfers become a
+//! [`FlowGraph`](crate::simcore::FlowGraph) — compute on per-worker CPU
+//! resources, transfers on uplink/downlink resources (work pre-divided
+//! by effective bandwidth, so the aggregate storage cap is folded in
+//! exactly as the closed-form model does), sync as a fixed-duration
+//! occupancy of the worker's virtual channel — and the unified
+//! [`simcore`](crate::simcore) engine owns time. Because pipeline and
+//! collective simulations now share one graph vocabulary and one
+//! engine, [`ScenarioModel`] perturbations (cold starts, stragglers,
+//! bandwidth jitter) apply to the whole iteration timeline uniformly.
 
 use crate::collective::SyncAlgorithm;
 use crate::model::{ModelProfile, Plan};
 use crate::pipeline::schedule::build_schedule;
 use crate::pipeline::task::TaskKind;
 use crate::platform::PlatformSpec;
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-enum Chan {
-    Cpu(usize),
-    Up(usize),
-    Down(usize),
-}
-
-#[derive(Debug, Clone)]
-struct Job {
-    /// Work remaining: seconds for CPU jobs, bytes for transfers.
-    remaining: f64,
-    chans: Vec<Chan>,
-    deps: Vec<usize>,
-    /// Extra start delay once deps resolve (storage latency per op).
-    delay: f64,
-    finish: Option<f64>,
-    ready: Option<f64>,
-}
+use crate::simcore::{execute, FlowGraph, Node, ScenarioModel};
 
 /// Simulation output.
 #[derive(Debug, Clone)]
@@ -61,7 +47,41 @@ pub fn simulate_iteration(
     plan: &Plan,
     sync_alg: SyncAlgorithm,
 ) -> SimResult {
-    simulate_iteration_noisy(model, platform, plan, sync_alg, None)
+    simulate_iteration_scenario(
+        model,
+        platform,
+        plan,
+        sync_alg,
+        ScenarioModel::Deterministic,
+        0,
+    )
+}
+
+/// Simulate one iteration under a seeded [`ScenarioModel`] — the
+/// scenario-lab entry point behind `funcpipe simulate --scenario
+/// <name> --seed <n>`. Deterministic in `(scenario, seed)`: identical
+/// inputs give bit-identical results (the draws happen in worker-/
+/// node-id order inside [`ScenarioModel::apply`], never from unordered
+/// iteration).
+pub fn simulate_iteration_scenario(
+    model: &ModelProfile,
+    platform: &PlatformSpec,
+    plan: &Plan,
+    sync_alg: SyncAlgorithm,
+    scenario: ScenarioModel,
+    seed: u64,
+) -> SimResult {
+    let run = |with_sync: bool| -> f64 {
+        let mut g =
+            build_flow_graph(model, platform, plan, sync_alg, with_sync);
+        scenario.apply(&mut g, seed);
+        execute(&g).makespan
+    };
+    let t_full = run(true);
+    let t_nosync = run(false);
+    let c_iter =
+        platform.price_per_gb_s * plan.total_mem_gb(platform) * t_full;
+    SimResult { t_iter: t_full, c_iter, t_nosync }
 }
 
 /// Variant with stochastic duration jitter — the realistic "measured"
@@ -70,6 +90,12 @@ pub fn simulate_iteration(
 /// bandwidth factor (σ = `jitter.1`) and compute a smaller one (σ/3).
 /// More workers ⇒ more transfers ⇒ larger aggregate deviation, matching
 /// the paper's error growth with batch size.
+///
+/// Delegates to [`simulate_iteration_scenario`] with
+/// [`ScenarioModel::BandwidthJitter`], which draws strictly in node-id
+/// order from the seeded [`Rng`](crate::util::rng::Rng) — closing the
+/// latent nondeterminism risk of the old inline implementation (any
+/// draw ordered by an unordered container would have broken replay).
 pub fn simulate_iteration_noisy(
     model: &ModelProfile,
     platform: &PlatformSpec,
@@ -77,107 +103,100 @@ pub fn simulate_iteration_noisy(
     sync_alg: SyncAlgorithm,
     jitter: Option<(u64, f64)>,
 ) -> SimResult {
-    let t_full = run(model, platform, plan, sync_alg, true, jitter);
-    let t_nosync = run(model, platform, plan, sync_alg, false, jitter);
-    let c_iter =
-        platform.price_per_gb_s * plan.total_mem_gb(platform) * t_full;
-    SimResult { t_iter: t_full, c_iter, t_nosync }
+    let (scenario, seed) = match jitter {
+        None => (ScenarioModel::Deterministic, 0),
+        Some((seed, sigma)) => {
+            (ScenarioModel::BandwidthJitter { sigma }, seed)
+        }
+    };
+    simulate_iteration_scenario(model, platform, plan, sync_alg, scenario, seed)
 }
 
-fn run(
+/// Translate one iteration of `plan` into a [`FlowGraph`].
+///
+/// Channel model (identical to the historical hand-rolled event loop):
+/// each worker has a CPU (capacity 1 work-unit/s), an uplink and a
+/// downlink; transfer work is pre-divided by the stage tier's
+/// *effective* bandwidth, which already folds in the storage-side
+/// aggregate cap, so links are unit-capacity too. Sync tasks occupy the
+/// worker's dedicated virtual channel for the closed-form duration of
+/// the selected algorithm (§3.3) — with `with_sync == false` they stay
+/// in the graph at zero duration so scenario draws align between the
+/// full and no-sync passes.
+pub fn build_flow_graph(
     model: &ModelProfile,
     platform: &PlatformSpec,
     plan: &Plan,
     sync_alg: SyncAlgorithm,
     with_sync: bool,
-    jitter: Option<(u64, f64)>,
-) -> f64 {
-    use crate::util::rng::Rng;
-    let mut rng = jitter.map(|(seed, _)| Rng::new(seed));
-    let sigma = jitter.map(|(_, s)| s).unwrap_or(0.0);
+) -> FlowGraph {
     let sched = build_schedule(plan);
     let ranges = plan.stage_ranges(model.n_layers());
     let n_workers = sched.n_workers();
     let lat = platform.storage.latency_s;
     let has_comm = sched.n_stages > 1 || plan.dp > 1;
     let beta = if has_comm { platform.beta } else { 1.0 };
-    let bw = |s: usize| platform.effective_bandwidth(plan.stage_tiers[s], n_workers);
+    let bw =
+        |s: usize| platform.effective_bandwidth(plan.stage_tiers[s], n_workers);
 
-    let mut jobs: Vec<Job> = Vec::with_capacity(sched.tasks.len() * 2);
-
-    // map schedule task id -> job id (sync tasks map to their final job)
-    let mut job_of = vec![usize::MAX; sched.tasks.len()];
+    let mut g = FlowGraph::new();
+    // map schedule task id -> node id
+    let mut node_of = vec![usize::MAX; sched.tasks.len()];
 
     for t in &sched.tasks {
-        let deps: Vec<usize> = t.deps.iter().map(|&d| job_of[d]).collect();
-        let (s, w) = (stage_of(&t.kind), t.worker);
-        let job = match t.kind {
-            TaskKind::FwdCompute { stage, .. } => Job {
-                remaining: beta
-                    * model.range_fwd_s(
-                        ranges[stage].0,
-                        ranges[stage].1,
-                        plan.stage_tiers[stage],
-                    ),
-                chans: vec![Chan::Cpu(w)],
-                deps,
-                delay: 0.0,
-                finish: None,
-                ready: None,
-            },
-            TaskKind::BwdCompute { stage, .. } => Job {
-                remaining: beta
-                    * model.range_bwd_s(
-                        ranges[stage].0,
-                        ranges[stage].1,
-                        plan.stage_tiers[stage],
-                    ),
-                chans: vec![Chan::Cpu(w)],
-                deps,
-                delay: 0.0,
-                finish: None,
-                ready: None,
-            },
-            TaskKind::FwdUpload { stage, .. } => Job {
-                remaining: model.layers[ranges[stage].1].out_bytes as f64
-                    / bw(stage),
-                chans: vec![Chan::Up(w)],
-                deps,
-                delay: lat,
-                finish: None,
-                ready: None,
-            },
-            TaskKind::FwdDownload { stage, .. } => Job {
-                remaining: model.layers[ranges[stage - 1].1].out_bytes as f64
-                    / bw(stage),
-                chans: vec![Chan::Down(w)],
-                deps,
-                delay: lat,
-                finish: None,
-                ready: None,
-            },
-            TaskKind::BwdUpload { stage, .. } => Job {
-                remaining: model.layers[ranges[stage].0].grad_bytes as f64
-                    / bw(stage),
-                chans: vec![Chan::Up(w)],
-                deps,
-                delay: lat,
-                finish: None,
-                ready: None,
-            },
-            TaskKind::BwdDownload { stage, .. } => Job {
-                remaining: model.layers[ranges[stage + 1].0].grad_bytes as f64
-                    / bw(stage),
-                chans: vec![Chan::Down(w)],
-                deps,
-                delay: lat,
-                finish: None,
-                ready: None,
-            },
+        let deps: Vec<usize> = t.deps.iter().map(|&d| node_of[d]).collect();
+        let w = t.worker;
+        let node = match t.kind {
+            TaskKind::FwdCompute { stage, .. } => Node::compute(
+                w,
+                beta * model.range_fwd_s(
+                    ranges[stage].0,
+                    ranges[stage].1,
+                    plan.stage_tiers[stage],
+                ),
+            )
+            .after(deps),
+            TaskKind::BwdCompute { stage, .. } => Node::compute(
+                w,
+                beta * model.range_bwd_s(
+                    ranges[stage].0,
+                    ranges[stage].1,
+                    plan.stage_tiers[stage],
+                ),
+            )
+            .after(deps),
+            TaskKind::FwdUpload { stage, .. } => Node::transfer(
+                w,
+                true,
+                model.layers[ranges[stage].1].out_bytes as f64 / bw(stage),
+            )
+            .after(deps)
+            .lag(lat),
+            TaskKind::FwdDownload { stage, .. } => Node::transfer(
+                w,
+                false,
+                model.layers[ranges[stage - 1].1].out_bytes as f64 / bw(stage),
+            )
+            .after(deps)
+            .lag(lat),
+            TaskKind::BwdUpload { stage, .. } => Node::transfer(
+                w,
+                true,
+                model.layers[ranges[stage].0].grad_bytes as f64 / bw(stage),
+            )
+            .after(deps)
+            .lag(lat),
+            TaskKind::BwdDownload { stage, .. } => Node::transfer(
+                w,
+                false,
+                model.layers[ranges[stage + 1].0].grad_bytes as f64 / bw(stage),
+            )
+            .after(deps)
+            .lag(lat),
             TaskKind::Sync { stage } => {
-                // modelled as a single channel-exclusive job of the
-                // closed-duration given by the algorithm's flow analysis,
-                // occupying both links of the worker (duplex use)
+                // the closed-form duration of the algorithm's flow
+                // analysis, occupying the worker's virtual channel
+                // (duplex use of both links)
                 let dur = if with_sync {
                     let (lo, hi) = ranges[stage];
                     crate::collective::sync_time(
@@ -190,157 +209,12 @@ fn run(
                 } else {
                     0.0
                 };
-                Job {
-                    // encode as CPU-style fixed-duration job on a virtual
-                    // channel pair (up+down), capacity-normalized below
-                    remaining: dur,
-                    chans: vec![Chan::Cpu(n_workers + w)], // dedicated chan
-                    deps,
-                    delay: 0.0,
-                    finish: None,
-                    ready: None,
-                }
+                Node::fixed(w, dur).after(deps)
             }
         };
-        let _ = s;
-        let mut job = job;
-        if let Some(rng) = rng.as_mut() {
-            let is_xfer = !matches!(
-                t.kind,
-                TaskKind::FwdCompute { .. } | TaskKind::BwdCompute { .. }
-            );
-            let sg = if is_xfer { sigma } else { sigma / 3.0 };
-            // lognormal factor around 1 (bandwidth dip => longer transfer)
-            job.remaining *= (sg * rng.normal()).exp();
-        }
-        job_of[t.id] = jobs.len();
-        jobs.push(job);
+        node_of[t.id] = g.add(node);
     }
-
-    // ---- event loop: progressive filling over active jobs -------------
-    // channel capacities: CPU (incl. virtual sync channels) = 1 unit/s,
-    // links = 1 unit/s too because transfer remaining is pre-divided by
-    // bandwidth; the aggregate cap is applied as a rate multiplier on all
-    // link jobs via effective_bandwidth (already folded in above).
-    let n = jobs.len();
-    let mut done = 0usize;
-    let mut t = 0.0f64;
-    let mut makespan = 0.0f64;
-
-    // resolve initial readiness
-    for i in 0..n {
-        if jobs[i].deps.is_empty() {
-            let d = jobs[i].delay;
-            jobs[i].ready = Some(d);
-        }
-    }
-
-    while done < n {
-        let active: Vec<usize> = (0..n)
-            .filter(|&i| {
-                jobs[i].finish.is_none()
-                    && jobs[i].ready.map(|r| r <= t + 1e-12).unwrap_or(false)
-            })
-            .collect();
-
-        // instantly complete zero-work jobs
-        let mut completed: Vec<usize> = active
-            .iter()
-            .copied()
-            .filter(|&i| jobs[i].remaining <= 1e-12)
-            .collect();
-        if completed.is_empty() && !active.is_empty() {
-            // rates: each channel shared equally among its active jobs
-            let mut load: std::collections::HashMap<Chan, usize> =
-                std::collections::HashMap::new();
-            for &i in &active {
-                for &c in &jobs[i].chans {
-                    *load.entry(c).or_insert(0) += 1;
-                }
-            }
-            let rates: Vec<f64> = active
-                .iter()
-                .map(|&i| {
-                    jobs[i]
-                        .chans
-                        .iter()
-                        .map(|c| 1.0 / load[c] as f64)
-                        .fold(f64::INFINITY, f64::min)
-                })
-                .collect();
-            let mut dt = f64::INFINITY;
-            for (k, &i) in active.iter().enumerate() {
-                dt = dt.min(jobs[i].remaining / rates[k]);
-            }
-            // next activation
-            let next_ready = (0..n)
-                .filter(|&i| jobs[i].finish.is_none())
-                .filter_map(|i| jobs[i].ready)
-                .filter(|&r| r > t + 1e-12)
-                .fold(f64::INFINITY, f64::min);
-            dt = dt.min(next_ready - t);
-            assert!(dt.is_finite() && dt > 0.0, "stuck at t={t}");
-            for (k, &i) in active.iter().enumerate() {
-                jobs[i].remaining -= rates[k] * dt;
-            }
-            t += dt;
-            completed = active
-                .iter()
-                .copied()
-                .filter(|&i| jobs[i].remaining <= 1e-9)
-                .collect();
-        } else if completed.is_empty() {
-            // nothing active: jump to next readiness
-            let next_ready = (0..n)
-                .filter(|&i| jobs[i].finish.is_none())
-                .filter_map(|i| jobs[i].ready)
-                .filter(|&r| r > t + 1e-12)
-                .fold(f64::INFINITY, f64::min);
-            assert!(next_ready.is_finite(), "deadlock with {} left", n - done);
-            t = next_ready;
-            continue;
-        }
-
-        for &i in &completed {
-            jobs[i].finish = Some(t);
-            makespan = makespan.max(t);
-        }
-        done += completed.len();
-
-        // resolve newly-ready jobs
-        for i in 0..n {
-            if jobs[i].ready.is_some() || jobs[i].finish.is_some() {
-                continue;
-            }
-            let mut all = true;
-            let mut latest: f64 = 0.0;
-            for &d in &jobs[i].deps {
-                match jobs[d].finish {
-                    Some(f) => latest = latest.max(f),
-                    None => {
-                        all = false;
-                        break;
-                    }
-                }
-            }
-            if all {
-                jobs[i].ready = Some(latest + jobs[i].delay);
-            }
-        }
-    }
-    makespan
-}
-
-fn stage_of(kind: &TaskKind) -> usize {
-    match *kind {
-        TaskKind::FwdCompute { stage, .. }
-        | TaskKind::BwdCompute { stage, .. }
-        | TaskKind::FwdUpload { stage, .. }
-        | TaskKind::FwdDownload { stage, .. }
-        | TaskKind::BwdUpload { stage, .. }
-        | TaskKind::BwdDownload { stage, .. }
-        | TaskKind::Sync { stage } => stage,
-    }
+    g
 }
 
 #[cfg(test)]
@@ -420,5 +294,77 @@ mod tests {
         let plain = simulate_iteration(&m, &p, &plan, SyncAlgorithm::ScatterReduce);
         assert!(piped.t_iter < plain.t_iter);
         assert_eq!(piped.t_nosync, plain.t_nosync);
+    }
+
+    #[test]
+    fn scenario_replay_is_bit_identical() {
+        let (m, p) = fixture();
+        let plan = Plan {
+            cuts: vec![2],
+            dp: 2,
+            stage_tiers: vec![7, 7],
+            n_micro_global: 8,
+        };
+        for name in ["cold-start", "straggler", "bandwidth-jitter"] {
+            let s = ScenarioModel::parse(name).unwrap();
+            let a = simulate_iteration_scenario(
+                &m, &p, &plan, SyncAlgorithm::PipelinedScatterReduce, s, 7,
+            );
+            let b = simulate_iteration_scenario(
+                &m, &p, &plan, SyncAlgorithm::PipelinedScatterReduce, s, 7,
+            );
+            assert_eq!(a.t_iter.to_bits(), b.t_iter.to_bits(), "{name}");
+            assert_eq!(a.t_nosync.to_bits(), b.t_nosync.to_bits(), "{name}");
+            let c = simulate_iteration_scenario(
+                &m, &p, &plan, SyncAlgorithm::PipelinedScatterReduce, s, 8,
+            );
+            assert_ne!(
+                a.t_iter.to_bits(),
+                c.t_iter.to_bits(),
+                "{name}: different seeds must differ"
+            );
+        }
+    }
+
+    #[test]
+    fn noisy_wrapper_is_the_jitter_scenario() {
+        let (m, p) = fixture();
+        let plan = Plan {
+            cuts: vec![2],
+            dp: 2,
+            stage_tiers: vec![7, 7],
+            n_micro_global: 8,
+        };
+        let a = simulate_iteration_noisy(
+            &m,
+            &p,
+            &plan,
+            SyncAlgorithm::PipelinedScatterReduce,
+            Some((11, 0.15)),
+        );
+        let b = simulate_iteration_scenario(
+            &m,
+            &p,
+            &plan,
+            SyncAlgorithm::PipelinedScatterReduce,
+            ScenarioModel::BandwidthJitter { sigma: 0.15 },
+            11,
+        );
+        assert_eq!(a.t_iter.to_bits(), b.t_iter.to_bits());
+        // and None means strictly deterministic
+        let c = simulate_iteration_noisy(
+            &m,
+            &p,
+            &plan,
+            SyncAlgorithm::PipelinedScatterReduce,
+            None,
+        );
+        let d = simulate_iteration(
+            &m,
+            &p,
+            &plan,
+            SyncAlgorithm::PipelinedScatterReduce,
+        );
+        assert_eq!(c.t_iter.to_bits(), d.t_iter.to_bits());
     }
 }

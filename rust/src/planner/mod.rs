@@ -23,7 +23,7 @@ pub mod tpdmp;
 
 pub use optimizer::{CoOptimizer, SolveStats};
 pub use pareto::{pareto_front, recommend, sweep, SweepPoint};
-pub use perf_model::{PerfModel, PlanPerf};
+pub use perf_model::{PerfModel, PlanPerf, StageCache, StageTerms};
 
 /// Weight pairs (α1 cost-weight, α2 time-weight) tracing the Pareto
 /// frontier. The paper's magnitudes (1, 2^16…) are tied to its internal

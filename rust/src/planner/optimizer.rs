@@ -266,22 +266,23 @@ impl Dfs<'_, '_> {
         }
 
         // branch: this stage covers [lo..=hi] on tier j. Try larger tiers
-        // first (good incumbents early: feasible + fast).
+        // first (good incumbents early: feasible + fast). The per-stage
+        // terms come from the PerfModel's StageCache, so revisiting a
+        // (range, tier) pair anywhere in the search is O(1).
         for hi in lo..l {
             for j in (0..p.n_tiers()).rev() {
+                let terms = self.opt.perf.stage_terms(lo, hi, j);
                 // feasibility (3b)
-                let act = m.range_act_bytes(lo, hi);
-                let params = m.range_param_bytes(lo, hi);
                 let sync_copies = if self.d == 1 { 2 } else { 4 };
-                let need = (self.mu as u64) * act
-                    + params * sync_copies
+                let need = (self.mu as u64) * terms.act_bytes
+                    + terms.param_bytes * sync_copies
                     + p.base_mem_mb * 1024 * 1024;
                 if need > p.tier(j).mem_bytes() {
                     self.stats.pruned_memory += 1;
                     continue; // smaller tiers will also fail
                 }
-                let stage_fwd = m.range_fwd_s(lo, hi, j);
-                let stage_bwd = m.range_bwd_s(lo, hi, j);
+                let stage_fwd = terms.fwd_s;
+                let stage_bwd = terms.bwd_s;
                 let stage_gb = p.tier(j).mem_gb();
                 let (old_fc, old_bc) = (self.max_fc, self.max_bc);
                 let (old_comm, old_sync) = (self.committed_comm, self.sync_lb);
@@ -305,7 +306,7 @@ impl Dfs<'_, '_> {
                     // raw tier bandwidth ≥ effective → admissible
                     let sync = crate::collective::sync_time(
                         self.opt.perf.sync_alg,
-                        m.range_param_bytes(lo, hi) as f64,
+                        terms.param_bytes as f64,
                         self.d,
                         p.tier(j).bandwidth_bps,
                         p.storage.latency_s,
@@ -472,6 +473,28 @@ mod tests {
         assert!(
             (j_bb - j_brute).abs() < 1e-9 * j_brute.max(1.0),
             "B&B {j_bb} vs brute {j_brute} (plan {plan:?})"
+        );
+    }
+
+    #[test]
+    fn stage_cache_is_hot_in_search() {
+        // thousands of DFS nodes revisit the same few hundred
+        // (range, tier) stages: the memoized terms must serve the bulk
+        // of lookups (the planner_search bench reports the same number)
+        let p = PlatformSpec::aws_lambda();
+        let m = merge_layers(
+            &zoo::resnet101(&p),
+            6,
+            MergeCriterion::Compute,
+        );
+        let opt = CoOptimizer::new(&m, &p);
+        opt.solve(16, (1.0, 2e-4)).unwrap();
+        let cache = opt.perf.cache();
+        assert!(cache.hits() > cache.misses(), "{cache:?}");
+        assert!(
+            cache.hit_rate() > 0.5,
+            "hit rate {:.2} too low",
+            cache.hit_rate()
         );
     }
 

@@ -7,9 +7,97 @@
 //! evaluated here directly per *stage* — numerically identical, and it
 //! keeps `evaluate` allocation-free on the planner's hot path.
 
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
 use crate::collective::{sync_time_chunked, SyncAlgorithm};
 use crate::model::{ModelProfile, Plan};
 use crate::platform::PlatformSpec;
+
+/// Per-stage terms the model derives from a `(layer-range, tier)` pair:
+/// compute times at that tier plus the byte totals every communication
+/// term is a closed-form function of. Everything downstream — sync time
+/// for any `dp`, memory feasibility, the optimizer's bounds — is O(1)
+/// arithmetic over these, so this is exactly the unit worth memoizing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageTerms {
+    /// Forward compute of one micro-batch, seconds (un-β-scaled).
+    pub fwd_s: f64,
+    /// Backward compute of one micro-batch, seconds (un-β-scaled).
+    pub bwd_s: f64,
+    /// Parameter bytes of the range (the sync-traffic term of eq. (9)).
+    pub param_bytes: u64,
+    /// Activation bytes of one micro-batch (constraint (3b)).
+    pub act_bytes: u64,
+}
+
+/// Memoization of [`StageTerms`] keyed by `(lo, hi, tier)`, with
+/// hit/miss counters.
+///
+/// `Optimizer::solve`'s B&B loop evaluates thousands of candidate plans
+/// whose stages repeat the same few hundred `(layer-range, tier)`
+/// combinations; before the cache every node recomputed the O(range)
+/// layer sums from scratch. The `dp` dimension of the key collapses
+/// because every dp-dependent term (eq. (9) sync, replica memory) is
+/// O(1) arithmetic over the cached bytes. Interior-mutable so the hot
+/// path keeps its `&self` signature; single-threaded like the solver.
+#[derive(Debug, Clone, Default)]
+pub struct StageCache {
+    terms: RefCell<HashMap<(usize, usize, usize), StageTerms>>,
+    hits: Cell<u64>,
+    misses: Cell<u64>,
+}
+
+impl StageCache {
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.get()
+    }
+
+    /// Fraction of lookups served from the cache (0.0 when unused).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits.get() + self.misses.get();
+        if total == 0 {
+            0.0
+        } else {
+            self.hits.get() as f64 / total as f64
+        }
+    }
+
+    /// Distinct `(lo, hi, tier)` entries currently cached.
+    pub fn len(&self) -> usize {
+        self.terms.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.terms.borrow().is_empty()
+    }
+
+    /// Drop entries and counters (between unrelated sweeps in benches).
+    pub fn clear(&self) {
+        self.terms.borrow_mut().clear();
+        self.hits.set(0);
+        self.misses.set(0);
+    }
+
+    fn get_or_insert(
+        &self,
+        key: (usize, usize, usize),
+        compute: impl FnOnce() -> StageTerms,
+    ) -> StageTerms {
+        if let Some(t) = self.terms.borrow().get(&key) {
+            self.hits.set(self.hits.get() + 1);
+            return *t;
+        }
+        self.misses.set(self.misses.get() + 1);
+        let t = compute();
+        self.terms.borrow_mut().insert(key, t);
+        t
+    }
+}
 
 /// Evaluated performance of one plan.
 #[derive(Debug, Clone, PartialEq)]
@@ -51,6 +139,8 @@ pub struct PerfModel<'a> {
     /// synchronization model, so plans are costed with the same knob the
     /// trainer runs with.
     pub chunk_bytes: usize,
+    /// Memoized per-stage terms — the planner hot loop's cache.
+    cache: StageCache,
 }
 
 impl<'a> PerfModel<'a> {
@@ -60,7 +150,26 @@ impl<'a> PerfModel<'a> {
             platform,
             sync_alg: SyncAlgorithm::PipelinedScatterReduce,
             chunk_bytes: 0,
+            cache: StageCache::default(),
         }
+    }
+
+    /// The memoized per-stage terms of the range `[lo, hi]` at `tier`.
+    /// First lookup computes the O(range) layer sums; every further
+    /// plan sharing the stage is an O(1) hit (counters on
+    /// [`PerfModel::cache`]).
+    pub fn stage_terms(&self, lo: usize, hi: usize, tier: usize) -> StageTerms {
+        self.cache.get_or_insert((lo, hi, tier), || StageTerms {
+            fwd_s: self.model.range_fwd_s(lo, hi, tier),
+            bwd_s: self.model.range_bwd_s(lo, hi, tier),
+            param_bytes: self.model.range_param_bytes(lo, hi),
+            act_bytes: self.model.range_act_bytes(lo, hi),
+        })
+    }
+
+    /// Cache telemetry (hit/miss counters, entry count).
+    pub fn cache(&self) -> &StageCache {
+        &self.cache
     }
 
     pub fn with_sync(mut self, alg: SyncAlgorithm) -> Self {
@@ -131,13 +240,14 @@ impl<'a> PerfModel<'a> {
             }
         };
 
-        // per-stage compute times (one micro-batch)
+        // per-stage compute times (one micro-batch), memoized across
+        // plans sharing the same (range, tier) stage
         let mut fc = Vec::with_capacity(s_cnt);
         let mut bc = Vec::with_capacity(s_cnt);
         for (s, &(lo, hi)) in ranges.iter().enumerate() {
-            let j = plan.stage_tiers[s];
-            fc.push(beta * m.range_fwd_s(lo, hi, j));
-            bc.push(beta * m.range_bwd_s(lo, hi, j));
+            let terms = self.stage_terms(lo, hi, plan.stage_tiers[s]);
+            fc.push(beta * terms.fwd_s);
+            bc.push(beta * terms.bwd_s);
         }
 
         // boundary transfer times: boundary b sits between stage b and b+1
@@ -189,9 +299,12 @@ impl<'a> PerfModel<'a> {
                 0.0
             } else {
                 let (lo, hi) = ranges[s];
+                let bytes = self
+                    .stage_terms(lo, hi, plan.stage_tiers[s])
+                    .param_bytes as f64;
                 sync_time_chunked(
                     self.sync_alg,
-                    m.range_param_bytes(lo, hi) as f64,
+                    bytes,
                     plan.dp,
                     bw(plan.stage_tiers[s]),
                     p.storage.latency_s,
@@ -377,6 +490,41 @@ mod tests {
             "{total} vs {}",
             perf.t_iter
         );
+    }
+
+    #[test]
+    fn stage_cache_hits_and_preserves_results() {
+        let (m, p) = fixture();
+        let plan = Plan {
+            cuts: vec![5, 11],
+            dp: 2,
+            stage_tiers: vec![4, 5, 7],
+            n_micro_global: 16,
+        };
+        let cold = PerfModel::new(&m, &p);
+        let first = cold.evaluate(&plan);
+        assert!(cold.cache().misses() > 0);
+        let misses_after_first = cold.cache().misses();
+        let second = cold.evaluate(&plan);
+        // identical plan: every stage term is a hit, results identical
+        assert_eq!(cold.cache().misses(), misses_after_first);
+        assert!(cold.cache().hits() > 0);
+        assert_eq!(first, second);
+        // a fresh model agrees with the warmed cache bit-for-bit
+        let fresh = PerfModel::new(&m, &p).evaluate(&plan);
+        assert_eq!(first, fresh);
+    }
+
+    #[test]
+    fn stage_cache_counters_reset() {
+        let (m, p) = fixture();
+        let pm = PerfModel::new(&m, &p);
+        pm.evaluate(&plan_1w(&m));
+        assert!(!pm.cache().is_empty());
+        pm.cache().clear();
+        assert!(pm.cache().is_empty());
+        assert_eq!((pm.cache().hits(), pm.cache().misses()), (0, 0));
+        assert_eq!(pm.cache().hit_rate(), 0.0);
     }
 
     #[test]

@@ -53,119 +53,71 @@ impl BandwidthModel {
 /// occupies — one endpoint for worker↔storage transfers, two for direct
 /// worker↔VM transfers (HybridPS). Returns bytes/s for each flow.
 /// Constraints: each worker's up/down link and the optional aggregate cap.
+///
+/// An adapter over the unified engine's allocator
+/// ([`simcore::allocate_rates`](crate::simcore::allocate_rates)) — the
+/// exact code that times every simulation, so the property tests on
+/// this entry point exercise the production path.
 pub fn max_min_rates(model: &BandwidthModel, flows: &[Vec<(usize, Dir)>]) -> Vec<f64> {
-    let nf = flows.len();
-    let mut rates = vec![0.0f64; nf];
-    if nf == 0 {
-        return rates;
-    }
-
-    // Build constraint list: (capacity, member flow indices)
-    let mut constraints: Vec<(f64, Vec<usize>)> = Vec::new();
-    for w in 0..model.n_workers() {
-        let ups: Vec<usize> = (0..nf)
-            .filter(|&i| flows[i].contains(&(w, Dir::Up)))
-            .collect();
-        if !ups.is_empty() {
-            constraints.push((model.up_bps[w], ups));
-        }
-        let downs: Vec<usize> = (0..nf)
-            .filter(|&i| flows[i].contains(&(w, Dir::Down)))
-            .collect();
-        if !downs.is_empty() {
-            constraints.push((model.down_bps[w], downs));
-        }
-    }
-    if let Some(cap) = model.aggregate_cap_bps {
-        constraints.push((cap, (0..nf).collect()));
-    }
-
-    let mut active = vec![true; nf];
-    let mut used: Vec<f64> = vec![0.0; constraints.len()];
-    let mut n_active = nf;
-
-    while n_active > 0 {
-        // find the bottleneck: smallest equal increment that saturates a
-        // constraint containing at least one active flow
-        let mut best_inc = f64::INFINITY;
-        for (ci, (cap, members)) in constraints.iter().enumerate() {
-            let k = members.iter().filter(|&&i| active[i]).count();
-            if k == 0 {
-                continue;
-            }
-            let inc = (cap - used[ci]) / k as f64;
-            if inc < best_inc {
-                best_inc = inc;
-            }
-        }
-        if !best_inc.is_finite() {
-            break; // no binding constraint: unbounded (shouldn't happen)
-        }
-        let best_inc = best_inc.max(0.0);
-
-        // raise all active flows by best_inc
-        for i in 0..nf {
-            if active[i] {
-                rates[i] += best_inc;
-            }
-        }
-        for (ci, (_, members)) in constraints.iter().enumerate() {
-            let k = members.iter().filter(|&&i| active[i]).count();
-            used[ci] += best_inc * k as f64;
-        }
-
-        // freeze flows in saturated constraints
-        let mut froze = false;
-        for (ci, (cap, members)) in constraints.iter().enumerate() {
-            if used[ci] >= cap - 1e-9 {
-                for &i in members {
-                    if active[i] {
-                        active[i] = false;
-                        n_active -= 1;
-                        froze = true;
-                    }
-                }
-            }
-        }
-        if !froze {
-            break; // numerical safety
-        }
-    }
-    rates
+    use crate::simcore::{FlowGraph, Node, OpKind, Resource};
+    let mut g = FlowGraph::with_network(model);
+    let ids: Vec<usize> = flows
+        .iter()
+        .map(|endpoints| {
+            g.add(Node {
+                kind: OpKind::Transfer,
+                worker: endpoints.first().map_or(0, |e| e.0),
+                resources: endpoints
+                    .iter()
+                    .map(|&(w, d)| match d {
+                        Dir::Up => Resource::Up(w),
+                        Dir::Down => Resource::Down(w),
+                    })
+                    .collect(),
+                // only the instantaneous rate is asked for; the work
+                // amount never enters the allocation
+                work: 1.0,
+                deps: Vec::new(),
+                ready: 0.0,
+                delay: 0.0,
+            })
+        })
+        .collect();
+    crate::simcore::allocate_rates(&g, &ids)
 }
 
-/// Continuous-time flow simulator with dependencies.
+/// Continuous-time flow simulator with dependencies — a thin
+/// compatibility facade over the unified [`simcore`](crate::simcore)
+/// engine (it used to carry its own event loop; simcore's is the same
+/// algorithm, shared with the pipeline DES).
 ///
 /// Flows are added with either an absolute ready time or a dependency list
 /// (they start `latency_s` after the last dependency finishes — modelling
-/// `t_lat` per storage operation). `run()` advances time, re-running the
-/// max-min allocation whenever the active set changes, and records each
-/// flow's finish time.
+/// `t_lat` per storage operation). `run()` executes the accumulated graph
+/// and records each flow's finish time.
 pub struct FlowSim {
-    model: BandwidthModel,
-    flows: Vec<FlowState>,
-}
-
-struct FlowState {
-    endpoints: Vec<(usize, Dir)>,
-    bytes: f64,
-    remaining: f64,
-    /// Absolute ready time (for root flows) — refined as deps complete.
-    ready: f64,
-    deps: Vec<usize>,
-    extra_delay: f64,
-    finish: Option<f64>,
+    n_workers: usize,
+    graph: crate::simcore::FlowGraph,
+    outcome: Option<crate::simcore::SimOutcome>,
 }
 
 impl FlowSim {
     pub fn new(model: BandwidthModel) -> Self {
-        Self { model, flows: Vec::new() }
+        Self {
+            n_workers: model.n_workers(),
+            graph: crate::simcore::FlowGraph::with_network(&model),
+            outcome: None,
+        }
     }
 
     /// Flow with no dependencies, ready at `ready` (storage latency is
     /// added automatically).
     pub fn add_flow(&mut self, worker: usize, dir: Dir, bytes: f64, ready: f64) -> usize {
-        self.add(vec![(worker, dir)], bytes, ready, Vec::new(), 0.0)
+        assert!(worker < self.n_workers);
+        self.graph.add(
+            crate::simcore::Node::transfer(worker, dir == Dir::Up, bytes)
+                .ready_at(ready),
+        )
     }
 
     /// Flow that starts `latency` after all `deps` finish.
@@ -177,7 +129,12 @@ impl FlowSim {
         deps: Vec<usize>,
         extra_delay: f64,
     ) -> usize {
-        self.add(vec![(worker, dir)], bytes, 0.0, deps, extra_delay)
+        assert!(worker < self.n_workers);
+        self.graph.add(
+            crate::simcore::Node::transfer(worker, dir == Dir::Up, bytes)
+                .after(deps)
+                .lag(extra_delay),
+        )
     }
 
     /// Direct worker→worker flow (occupies src uplink AND dst downlink) —
@@ -190,176 +147,31 @@ impl FlowSim {
         deps: Vec<usize>,
         ready: f64,
     ) -> usize {
-        self.add(vec![(src, Dir::Up), (dst, Dir::Down)], bytes, ready, deps, 0.0)
-    }
-
-    fn add(
-        &mut self,
-        endpoints: Vec<(usize, Dir)>,
-        bytes: f64,
-        ready: f64,
-        deps: Vec<usize>,
-        extra_delay: f64,
-    ) -> usize {
-        for &(w, _) in &endpoints {
-            assert!(w < self.model.n_workers());
-        }
-        let id = self.flows.len();
-        self.flows.push(FlowState {
-            endpoints,
-            bytes: bytes.max(0.0),
-            remaining: bytes.max(0.0),
-            ready: ready + self.model.latency_s,
-            deps,
-            extra_delay,
-            finish: None,
-        });
-        id
+        assert!(src < self.n_workers && dst < self.n_workers);
+        self.graph.add(
+            crate::simcore::Node::direct(src, dst, bytes)
+                .after(deps)
+                .ready_at(ready),
+        )
     }
 
     /// Simulate to completion of all flows; returns the makespan.
     pub fn run(&mut self) -> f64 {
-        let n = self.flows.len();
-        let mut resolved_ready: Vec<Option<f64>> = (0..n)
-            .map(|i| {
-                if self.flows[i].deps.is_empty() {
-                    Some(self.flows[i].ready)
-                } else {
-                    None
-                }
-            })
-            .collect();
-        let mut t = 0.0f64;
-        let mut done = 0usize;
-        let mut makespan = 0.0f64;
-
-        while done < n {
-            // active set: ready and unfinished
-            let active: Vec<usize> = (0..n)
-                .filter(|&i| {
-                    self.flows[i].finish.is_none()
-                        && resolved_ready[i].map(|r| r <= t + 1e-12).unwrap_or(false)
-                })
-                .collect();
-
-            // zero-byte active flows complete instantly
-            let mut finished_now = Vec::new();
-            for &i in &active {
-                if self.flows[i].remaining <= 1e-9 {
-                    self.flows[i].finish = Some(t);
-                    finished_now.push(i);
-                }
-            }
-            if !finished_now.is_empty() {
-                done += finished_now.len();
-                makespan = makespan.max(t);
-                Self::resolve_deps(
-                    &self.flows,
-                    &mut resolved_ready,
-                    &finished_now,
-                    self.model.latency_s,
-                );
-                continue;
-            }
-
-            // next activation among not-yet-ready flows with known ready
-            let next_ready = (0..n)
-                .filter(|&i| self.flows[i].finish.is_none())
-                .filter_map(|i| resolved_ready[i])
-                .filter(|&r| r > t + 1e-12)
-                .fold(f64::INFINITY, f64::min);
-
-            if active.is_empty() {
-                assert!(
-                    next_ready.is_finite(),
-                    "deadlock: {} unfinished flows but none ready",
-                    n - done
-                );
-                t = next_ready;
-                continue;
-            }
-
-            let pairs: Vec<Vec<(usize, Dir)>> = active
-                .iter()
-                .map(|&i| self.flows[i].endpoints.clone())
-                .collect();
-            let rates = max_min_rates(&self.model, &pairs);
-
-            // earliest completion among active flows at these rates
-            let mut dt = f64::INFINITY;
-            for (k, &i) in active.iter().enumerate() {
-                if rates[k] > 1e-12 {
-                    dt = dt.min(self.flows[i].remaining / rates[k]);
-                }
-            }
-            if next_ready.is_finite() {
-                dt = dt.min(next_ready - t);
-            }
-            assert!(dt.is_finite(), "no progress possible");
-
-            // advance
-            for (k, &i) in active.iter().enumerate() {
-                self.flows[i].remaining -= rates[k] * dt;
-            }
-            t += dt;
-
-            let newly: Vec<usize> = active
-                .iter()
-                .copied()
-                .filter(|&i| self.flows[i].remaining <= 1e-6)
-                .collect();
-            for &i in &newly {
-                self.flows[i].remaining = 0.0;
-                self.flows[i].finish = Some(t);
-            }
-            if !newly.is_empty() {
-                done += newly.len();
-                makespan = makespan.max(t);
-                Self::resolve_deps(
-                    &self.flows,
-                    &mut resolved_ready,
-                    &newly,
-                    self.model.latency_s,
-                );
-            }
-        }
+        let outcome = crate::simcore::execute(&self.graph);
+        let makespan = outcome.makespan;
+        self.outcome = Some(outcome);
         makespan
     }
 
-    fn resolve_deps(
-        flows: &[FlowState],
-        resolved_ready: &mut [Option<f64>],
-        _finished: &[usize],
-        latency: f64,
-    ) {
-        for i in 0..flows.len() {
-            if resolved_ready[i].is_some() || flows[i].deps.is_empty() {
-                continue;
-            }
-            let mut all = true;
-            let mut latest: f64 = 0.0;
-            for &d in &flows[i].deps {
-                match flows[d].finish {
-                    Some(f) => latest = latest.max(f),
-                    None => {
-                        all = false;
-                        break;
-                    }
-                }
-            }
-            if all {
-                resolved_ready[i] =
-                    Some(latest + flows[i].extra_delay + latency);
-            }
-        }
-    }
-
     pub fn finish_time(&self, id: usize) -> f64 {
-        self.flows[id].finish.expect("flow not finished; call run() first")
+        self.outcome
+            .as_ref()
+            .expect("flow not finished; call run() first")
+            .finish[id]
     }
 
     pub fn bytes(&self, id: usize) -> f64 {
-        self.flows[id].bytes
+        self.graph.nodes[id].work
     }
 }
 

@@ -1,0 +1,393 @@
+//! The discrete-event executor: one event loop for every simulation in
+//! the repo (collective flow schedules, the pipeline DES, FlowSim).
+//!
+//! Semantics (a faithful generalization of the two engines it replaced):
+//!
+//! * a node becomes *ready* `delay` seconds after its last dependency
+//!   finishes (roots: after its absolute `ready` time), but never before
+//!   its worker's start offset;
+//! * active nodes share resources **max-min fairly** by progressive
+//!   filling, re-run whenever the active set changes; each resource is
+//!   one constraint (its capacity over its active members) and the
+//!   optional aggregate cap is one more constraint over all active
+//!   transfers;
+//! * time advances to the earliest of (a) the first completion at the
+//!   current rates, (b) the next readiness instant — so rate changes are
+//!   exact, not sampled;
+//! * ties break deterministically: nodes are scanned, completed and
+//!   resolved in id order, and constraints are assembled in first-seen
+//!   order — identical inputs give bit-identical outputs on every run
+//!   and platform.
+
+use super::graph::{FlowGraph, OpKind};
+
+/// Execution result: per-node finish times plus the makespan.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// Finish instant of each node, indexed by [`NodeId`](super::NodeId).
+    pub finish: Vec<f64>,
+    /// Latest finish over all nodes (0.0 for an empty graph).
+    pub makespan: f64,
+}
+
+/// Run `graph` to completion of every node.
+///
+/// Panics on a deadlocked graph (a dependency cycle, which the builders
+/// cannot produce, or a zero-capacity resource with pending work).
+pub fn execute(graph: &FlowGraph) -> SimOutcome {
+    let n = graph.nodes.len();
+    let mut remaining: Vec<f64> = graph.nodes.iter().map(|x| x.work).collect();
+    let mut finish: Vec<Option<f64>> = vec![None; n];
+    // resolved readiness: known immediately for roots, filled in as
+    // dependencies complete
+    let mut ready: Vec<Option<f64>> = (0..n)
+        .map(|i| {
+            let node = &graph.nodes[i];
+            node.deps.is_empty().then(|| {
+                (node.ready + node.delay).max(graph.worker_start(node.worker))
+            })
+        })
+        .collect();
+
+    let mut t = 0.0f64;
+    let mut done = 0usize;
+    let mut makespan = 0.0f64;
+
+    while done < n {
+        // active set, in id order (deterministic tie-breaking)
+        let active: Vec<usize> = (0..n)
+            .filter(|&i| {
+                finish[i].is_none()
+                    && ready[i].map(|r| r <= t + 1e-12).unwrap_or(false)
+            })
+            .collect();
+
+        // zero-work nodes complete the instant they are ready
+        let mut completed: Vec<usize> = active
+            .iter()
+            .copied()
+            .filter(|&i| remaining[i] <= 1e-12)
+            .collect();
+
+        if completed.is_empty() && !active.is_empty() {
+            let rates = allocate_rates(graph, &active);
+
+            // earliest completion at these rates
+            let mut dt = f64::INFINITY;
+            for (k, &i) in active.iter().enumerate() {
+                if rates[k] > 1e-12 {
+                    dt = dt.min(remaining[i] / rates[k]);
+                }
+            }
+            // ... capped by the next readiness instant
+            let next_ready = (0..n)
+                .filter(|&i| finish[i].is_none())
+                .filter_map(|i| ready[i])
+                .filter(|&r| r > t + 1e-12)
+                .fold(f64::INFINITY, f64::min);
+            if next_ready.is_finite() {
+                dt = dt.min(next_ready - t);
+            }
+            assert!(
+                dt.is_finite() && dt > 0.0,
+                "simcore: no progress possible at t={t} ({} unfinished)",
+                n - done
+            );
+
+            for (k, &i) in active.iter().enumerate() {
+                remaining[i] -= rates[k] * dt;
+            }
+            t += dt;
+
+            completed = active
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    // scale-aware completion snap: work is bytes for
+                    // transfers and seconds for compute, so an absolute
+                    // epsilon would bind differently per class
+                    remaining[i] <= 1e-9 * graph.nodes[i].work.max(1.0)
+                })
+                .collect();
+        } else if completed.is_empty() {
+            // nothing running: jump to the next readiness instant
+            let next_ready = (0..n)
+                .filter(|&i| finish[i].is_none())
+                .filter_map(|i| ready[i])
+                .filter(|&r| r > t + 1e-12)
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                next_ready.is_finite(),
+                "simcore: deadlock with {} nodes unfinished",
+                n - done
+            );
+            t = next_ready;
+            continue;
+        }
+
+        for &i in &completed {
+            remaining[i] = 0.0;
+            finish[i] = Some(t);
+            makespan = makespan.max(t);
+        }
+        done += completed.len();
+
+        // resolve newly-ready dependents (id order)
+        for i in 0..n {
+            if ready[i].is_some() || finish[i].is_some() {
+                continue;
+            }
+            let node = &graph.nodes[i];
+            let mut all = true;
+            let mut latest: f64 = 0.0;
+            for &d in &node.deps {
+                match finish[d] {
+                    Some(f) => latest = latest.max(f),
+                    None => {
+                        all = false;
+                        break;
+                    }
+                }
+            }
+            if all {
+                ready[i] = Some(
+                    (latest + node.delay).max(graph.worker_start(node.worker)),
+                );
+            }
+        }
+    }
+
+    SimOutcome {
+        finish: finish.into_iter().map(|f| f.unwrap_or(0.0)).collect(),
+        makespan,
+    }
+}
+
+/// Max-min fair rates for the `active` node set by progressive filling
+/// over the resource constraints (plus the aggregate transfer cap).
+///
+/// Public because it is THE allocator: the engine calls it every time
+/// the active set changes, and `platform::network::max_min_rates`
+/// (the historical entry point the property tests exercise) is an
+/// adapter over it — there is exactly one max-min implementation in
+/// the repo.
+pub fn allocate_rates(graph: &FlowGraph, active: &[usize]) -> Vec<f64> {
+    let na = active.len();
+    let mut rates = vec![0.0f64; na];
+    if na == 0 {
+        return rates;
+    }
+
+    // constraints in deterministic first-seen order; members index into
+    // `active`/`rates`
+    let mut cons: Vec<(f64, Vec<usize>)> = Vec::new();
+    let mut rmap: std::collections::HashMap<super::Resource, usize> =
+        std::collections::HashMap::new();
+    for (k, &i) in active.iter().enumerate() {
+        for &r in &graph.nodes[i].resources {
+            let ci = *rmap.entry(r).or_insert_with(|| {
+                cons.push((graph.capacity(r), Vec::new()));
+                cons.len() - 1
+            });
+            cons[ci].1.push(k);
+        }
+    }
+    if let Some(cap) = graph.aggregate_cap {
+        let members: Vec<usize> = active
+            .iter()
+            .enumerate()
+            .filter(|&(_, &i)| graph.nodes[i].kind == OpKind::Transfer)
+            .map(|(k, _)| k)
+            .collect();
+        if !members.is_empty() {
+            cons.push((cap, members));
+        }
+    }
+
+    let mut alive = vec![true; na];
+    let mut used = vec![0.0f64; cons.len()];
+    let mut n_alive = na;
+
+    while n_alive > 0 {
+        // bottleneck: smallest equal increment saturating a constraint
+        let mut best_inc = f64::INFINITY;
+        for (ci, (cap, members)) in cons.iter().enumerate() {
+            let k = members.iter().filter(|&&m| alive[m]).count();
+            if k == 0 {
+                continue;
+            }
+            let inc = (cap - used[ci]) / k as f64;
+            if inc < best_inc {
+                best_inc = inc;
+            }
+        }
+        if !best_inc.is_finite() {
+            break; // node with no constraint: cannot happen by construction
+        }
+        let best_inc = best_inc.max(0.0);
+
+        for (m, r) in rates.iter_mut().enumerate() {
+            if alive[m] {
+                *r += best_inc;
+            }
+        }
+        for (ci, (_, members)) in cons.iter().enumerate() {
+            let k = members.iter().filter(|&&m| alive[m]).count();
+            used[ci] += best_inc * k as f64;
+        }
+
+        // freeze members of saturated constraints (scale-aware epsilon:
+        // capacities span 1.0 CPU units to 1e9 byte/s links)
+        let mut froze = false;
+        for (ci, (cap, members)) in cons.iter().enumerate() {
+            if used[ci] >= cap - 1e-9 * cap.max(1.0) {
+                for &m in members {
+                    if alive[m] {
+                        alive[m] = false;
+                        n_alive -= 1;
+                        froze = true;
+                    }
+                }
+            }
+        }
+        if !froze {
+            break; // numerical safety, mirrors the old allocator
+        }
+    }
+    rates
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{FlowGraph, Node, Resource};
+    use super::*;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-6 * b.abs().max(1.0)
+    }
+
+    #[test]
+    fn serial_chain_sums_work() {
+        let mut g = FlowGraph::new();
+        let a = g.add(Node::compute(0, 2.0));
+        let b = g.add(Node::compute(0, 3.0).after(vec![a]));
+        let out = execute(&g);
+        assert!(close(out.finish[a], 2.0));
+        assert!(close(out.finish[b], 5.0));
+        assert!(close(out.makespan, 5.0));
+    }
+
+    #[test]
+    fn shared_resource_is_fair() {
+        let mut g = FlowGraph::new();
+        g.set_capacity(Resource::Up(0), 100.0);
+        let a = g.add(Node::transfer(0, true, 500.0));
+        let b = g.add(Node::transfer(0, true, 500.0));
+        let out = execute(&g);
+        assert!(close(out.finish[a], 10.0));
+        assert!(close(out.finish[b], 10.0));
+    }
+
+    #[test]
+    fn duplex_links_are_independent() {
+        let mut g = FlowGraph::new();
+        g.set_capacity(Resource::Up(0), 100.0);
+        g.set_capacity(Resource::Down(0), 100.0);
+        let up = g.add(Node::transfer(0, true, 1000.0));
+        let down = g.add(Node::transfer(0, false, 1000.0));
+        let out = execute(&g);
+        assert!(close(out.finish[up], 10.0));
+        assert!(close(out.finish[down], 10.0));
+    }
+
+    #[test]
+    fn aggregate_cap_spans_transfers_but_not_compute() {
+        let mut g = FlowGraph::new();
+        for w in 0..4 {
+            g.set_capacity(Resource::Up(w), 100.0);
+        }
+        g.aggregate_cap = Some(200.0);
+        let xs: Vec<_> =
+            (0..4).map(|w| g.add(Node::transfer(w, true, 500.0))).collect();
+        let c = g.add(Node::compute(0, 1.0));
+        let out = execute(&g);
+        // 4 transfers share 200 u/s aggregate -> 50 each -> 10 s
+        for x in xs {
+            assert!(close(out.finish[x], 10.0));
+        }
+        // the CPU job is not a transfer: full rate
+        assert!(close(out.finish[c], 1.0));
+    }
+
+    #[test]
+    fn base_latency_and_extra_lag_stack() {
+        let mut g = FlowGraph::new();
+        g.base_latency = 0.5;
+        g.set_capacity(Resource::Up(0), 100.0);
+        g.set_capacity(Resource::Down(1), 100.0);
+        let a = g.add(Node::transfer(0, true, 100.0)); // ready 0.5, done 1.5
+        let b = g.add(Node::transfer(1, false, 100.0).after(vec![a]));
+        let out = execute(&g);
+        assert!(close(out.finish[a], 1.5));
+        // b starts at 1.5 + 0.5 latency, takes 1 s
+        assert!(close(out.finish[b], 3.0));
+    }
+
+    #[test]
+    fn zero_work_completes_at_ready() {
+        let mut g = FlowGraph::new();
+        g.base_latency = 0.25;
+        let f = g.add(Node::transfer(0, true, 0.0).ready_at(1.0));
+        let out = execute(&g);
+        assert!(close(out.finish[f], 1.25));
+    }
+
+    #[test]
+    fn worker_start_offsets_delay_whole_worker() {
+        let mut g = FlowGraph::new();
+        let a = g.add(Node::compute(0, 1.0));
+        let b = g.add(Node::compute(1, 1.0));
+        g.delay_worker(1, 2.0);
+        let out = execute(&g);
+        assert!(close(out.finish[a], 1.0));
+        assert!(close(out.finish[b], 3.0));
+        assert!(close(out.makespan, 3.0));
+    }
+
+    #[test]
+    fn direct_transfer_occupies_both_ends() {
+        let mut g = FlowGraph::new();
+        g.set_capacity(Resource::Up(0), 100.0);
+        g.set_capacity(Resource::Down(1), 50.0);
+        let d = g.add(Node::direct(0, 1, 100.0));
+        let out = execute(&g);
+        // bound by the slower endpoint
+        assert!(close(out.finish[d], 2.0));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let build = || {
+            let mut g = FlowGraph::new();
+            g.set_capacity(Resource::Up(0), 70e6);
+            g.set_capacity(Resource::Down(0), 70e6);
+            let mut prev = None;
+            for k in 0..32 {
+                let deps = prev.map(|p| vec![p]).unwrap_or_default();
+                let n = if k % 3 == 0 {
+                    Node::transfer(0, k % 2 == 0, 1e6 + k as f64)
+                } else {
+                    Node::compute(0, 0.01 * (k + 1) as f64)
+                };
+                prev = Some(g.add(n.after(deps)));
+            }
+            g
+        };
+        let a = execute(&build());
+        let b = execute(&build());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        for (x, y) in a.finish.iter().zip(&b.finish) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! The declarative flow graph executed by [`engine`](super::engine).
+//!
+//! A [`FlowGraph`] is a DAG of [`Node`]s, each consuming one or two
+//! [`Resource`]s while it runs. Producers — the collective emitters in
+//! [`collective::sim`](crate::collective::sim), the pipeline translator
+//! in [`pipeline::simulate`](crate::pipeline::simulate) — only *describe*
+//! work; all timing semantics (max-min fair sharing, dependency
+//! resolution, storage latency, deterministic tie-breaking) live in the
+//! engine. Chunked and unchunked collectives are the same graph at
+//! different granularity; pipeline and sync simulation compose in one
+//! timeline because they are nodes of the same vocabulary.
+//!
+//! Work units are whatever the occupied resources' capacities are
+//! expressed in: the collective emitters use bytes on byte/s links
+//! (capacities from a [`BandwidthModel`]), the pipeline translator
+//! pre-divides transfers by effective bandwidth and runs everything on
+//! unit-capacity resources — both are first-class citizens of the same
+//! engine.
+
+use std::collections::HashMap;
+
+use crate::platform::network::BandwidthModel;
+
+/// Index of a node within its graph.
+pub type NodeId = usize;
+
+/// What a node occupies while running. Capacities default to 1.0
+/// work-unit/s and can be overridden per resource
+/// ([`FlowGraph::set_capacity`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Resource {
+    /// Worker CPU.
+    Cpu(usize),
+    /// Worker uplink (toward storage).
+    Up(usize),
+    /// Worker downlink (from storage).
+    Down(usize),
+    /// A dedicated virtual channel (closed-form sync jobs run here so
+    /// they serialize per worker without contending with real links).
+    Virtual(usize),
+}
+
+/// Node class — scenarios and the aggregate storage cap select by it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Computation (work in seconds on a CPU resource).
+    Compute,
+    /// A storage/network transfer (subject to the aggregate cap and to
+    /// bandwidth-jitter scenarios).
+    Transfer,
+    /// A fixed-duration occupancy on a virtual channel (e.g. a
+    /// closed-form synchronization term).
+    Fixed,
+}
+
+/// One unit of simulated work.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub kind: OpKind,
+    /// Owning worker (scenario targeting; every resource of the node
+    /// belongs to it except the destination end of a direct transfer).
+    pub worker: usize,
+    /// Resource endpoints occupied while running (1, or 2 for direct
+    /// worker→worker transfers).
+    pub resources: Vec<Resource>,
+    /// Work amount in resource units (bytes or seconds).
+    pub work: f64,
+    pub deps: Vec<NodeId>,
+    /// Absolute earliest start — only meaningful for root nodes
+    /// (dependency nodes start after their last dependency).
+    pub ready: f64,
+    /// Start lag applied once the node becomes ready (per-operation
+    /// storage latency and any extra delay; the graph's base latency is
+    /// folded in by [`FlowGraph::add`]).
+    pub delay: f64,
+}
+
+impl Node {
+    fn new(kind: OpKind, worker: usize, resources: Vec<Resource>, work: f64) -> Self {
+        Self {
+            kind,
+            worker,
+            resources,
+            work: work.max(0.0),
+            deps: Vec::new(),
+            ready: 0.0,
+            delay: 0.0,
+        }
+    }
+
+    /// Transfer on `worker`'s uplink (`up == true`) or downlink.
+    pub fn transfer(worker: usize, up: bool, work: f64) -> Self {
+        let r = if up { Resource::Up(worker) } else { Resource::Down(worker) };
+        Self::new(OpKind::Transfer, worker, vec![r], work)
+    }
+
+    /// Direct transfer occupying `src`'s uplink AND `dst`'s downlink
+    /// (the HybridPS worker↔VM path).
+    pub fn direct(src: usize, dst: usize, work: f64) -> Self {
+        Self::new(
+            OpKind::Transfer,
+            src,
+            vec![Resource::Up(src), Resource::Down(dst)],
+            work,
+        )
+    }
+
+    /// Computation on `worker`'s CPU.
+    pub fn compute(worker: usize, work: f64) -> Self {
+        Self::new(OpKind::Compute, worker, vec![Resource::Cpu(worker)], work)
+    }
+
+    /// Fixed-duration job on `worker`'s dedicated virtual channel.
+    pub fn fixed(worker: usize, work: f64) -> Self {
+        Self::new(OpKind::Fixed, worker, vec![Resource::Virtual(worker)], work)
+    }
+
+    /// Gate on `deps` (start after the last one finishes).
+    pub fn after(mut self, deps: Vec<NodeId>) -> Self {
+        self.deps = deps;
+        self
+    }
+
+    /// Absolute earliest start for a root node.
+    pub fn ready_at(mut self, t: f64) -> Self {
+        self.ready = t;
+        self
+    }
+
+    /// Extra start lag on top of the graph's base latency.
+    pub fn lag(mut self, extra: f64) -> Self {
+        self.delay += extra;
+        self
+    }
+}
+
+/// A complete simulation input: nodes + resource capacities + the
+/// optional storage-side aggregate cap + per-worker start offsets
+/// (cold-start scenarios).
+#[derive(Debug, Clone, Default)]
+pub struct FlowGraph {
+    pub nodes: Vec<Node>,
+    caps: HashMap<Resource, f64>,
+    /// Aggregate cap across all concurrently-running `Transfer` nodes
+    /// (the storage NIC of Alibaba OSS, §5.7).
+    pub aggregate_cap: Option<f64>,
+    /// Added to every node's start lag at [`FlowGraph::add`] time — the
+    /// per-operation storage latency of the bandwidth model.
+    pub base_latency: f64,
+    worker_start: HashMap<usize, f64>,
+}
+
+impl FlowGraph {
+    /// Empty graph: unit capacities, no aggregate cap, zero latency.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Graph whose link capacities, aggregate cap and per-operation
+    /// latency come from a [`BandwidthModel`] — the collective emitters'
+    /// substrate (transfers in bytes).
+    pub fn with_network(model: &BandwidthModel) -> Self {
+        let mut g = Self::new();
+        for w in 0..model.n_workers() {
+            g.caps.insert(Resource::Up(w), model.up_bps[w]);
+            g.caps.insert(Resource::Down(w), model.down_bps[w]);
+        }
+        g.aggregate_cap = model.aggregate_cap_bps;
+        g.base_latency = model.latency_s;
+        g
+    }
+
+    /// Capacity of `r` in work-units/s (default 1.0).
+    pub fn capacity(&self, r: Resource) -> f64 {
+        self.caps.get(&r).copied().unwrap_or(1.0)
+    }
+
+    pub fn set_capacity(&mut self, r: Resource, cap: f64) {
+        self.caps.insert(r, cap);
+    }
+
+    /// Append a node; the graph's base latency folds into its start lag.
+    pub fn add(&mut self, mut node: Node) -> NodeId {
+        debug_assert!(
+            node.deps.iter().all(|&d| d < self.nodes.len()),
+            "node depends on a node not yet added"
+        );
+        node.delay += self.base_latency;
+        let id = self.nodes.len();
+        self.nodes.push(node);
+        id
+    }
+
+    /// Delay every node of `worker` to start no earlier than the
+    /// accumulated offset (cold-start scenarios).
+    pub fn delay_worker(&mut self, worker: usize, delay: f64) {
+        *self.worker_start.entry(worker).or_insert(0.0) += delay.max(0.0);
+    }
+
+    /// Earliest instant any node of `worker` may start.
+    pub fn worker_start(&self, worker: usize) -> f64 {
+        self.worker_start.get(&worker).copied().unwrap_or(0.0)
+    }
+
+    /// 1 + the largest worker index any node names (0 for empty graphs).
+    pub fn n_workers(&self) -> usize {
+        self.nodes
+            .iter()
+            .flat_map(|n| {
+                n.resources.iter().map(|r| match *r {
+                    Resource::Cpu(w)
+                    | Resource::Up(w)
+                    | Resource::Down(w)
+                    | Resource::Virtual(w) => w,
+                })
+                .chain(std::iter::once(n.worker))
+            })
+            .max()
+            .map_or(0, |w| w + 1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+}

@@ -1,0 +1,40 @@
+//! `simcore` — the one discrete-event simulation core behind the
+//! performance model, the pipeline DES and the collective flow
+//! simulations.
+//!
+//! The repo previously carried three divergent timing engines that had
+//! to agree but shared no code: the closed-form planner model, the
+//! hand-rolled event loop in `pipeline/simulate.rs`, and five
+//! near-duplicate flow schedules in `collective/sim.rs`. They now share
+//! one substrate:
+//!
+//! * [`graph`] — the declarative [`FlowGraph`]: nodes (compute /
+//!   transfer / fixed occupancy) over per-worker uplink, downlink, CPU
+//!   and virtual-channel [`Resource`]s, with per-resource capacities,
+//!   an optional storage-side aggregate cap, and per-operation latency;
+//! * [`engine`] — [`execute`]: max-min fair progressive filling over
+//!   the active set, exact event advancement, deterministic
+//!   tie-breaking (id-ordered scans; identical input ⇒ bit-identical
+//!   output);
+//! * [`scenario`] — [`ScenarioModel`]: seeded cold-start / straggler /
+//!   bandwidth-jitter perturbations applied to a graph before
+//!   execution.
+//!
+//! Producers emit graphs; the engine owns time:
+//! [`collective::sim`](crate::collective::sim) emits each sync
+//! algorithm's flow schedule (chunked and unchunked are the same graph
+//! at different granularity),
+//! [`pipeline::simulate`](crate::pipeline::simulate) translates a
+//! [`Schedule`](crate::pipeline::Schedule) plus boundary transfers, and
+//! [`FlowSim`](crate::platform::FlowSim) is a thin compatibility facade.
+//! The closed-form [`PerfModel`](crate::planner::PerfModel) stays
+//! closed-form but shares the same per-stage terms through its
+//! memoizing `StageCache`.
+
+pub mod engine;
+pub mod graph;
+pub mod scenario;
+
+pub use engine::{allocate_rates, execute, SimOutcome};
+pub use graph::{FlowGraph, Node, NodeId, OpKind, Resource};
+pub use scenario::ScenarioModel;

@@ -1,0 +1,220 @@
+//! Pluggable serverless scenarios: seeded perturbations applied to a
+//! [`FlowGraph`] before execution, turning the simulator from a pure
+//! validation tool into a scenario lab.
+//!
+//! Related serverless-training studies show the real environment is
+//! dominated by effects a deterministic model cannot express — container
+//! cold starts, stragglers and bandwidth jitter ("Towards Demystifying
+//! Serverless Machine Learning Training"; SMLT's adaptive scaling is
+//! motivated by exactly this variance). Each scenario perturbs one of
+//! those axes, deterministically from a `u64` seed (xoshiro256** via
+//! [`util::rng`](crate::util::rng)): same seed + scenario ⇒ bit-identical
+//! simulation, different seeds ⇒ different draws. Every draw happens in
+//! worker- or node-id order, never from iteration over unordered
+//! containers, which is what makes replay exact.
+
+use crate::util::rng::Rng;
+
+use super::graph::{FlowGraph, OpKind};
+
+/// A named, seeded perturbation model.
+///
+/// The wire names (config `"scenario"` key, `--scenario` flag) are
+/// `deterministic`, `cold-start`, `straggler` and `bandwidth-jitter`;
+/// [`ScenarioModel::parse`] is the inverse of [`ScenarioModel::as_str`].
+/// Parameters are fixed per name so a name round-trips losslessly
+/// through configs and plan artifacts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScenarioModel {
+    /// No perturbation; the seed is ignored (and no RNG is consumed).
+    Deterministic,
+    /// Each worker's function instance boots `Exp(1/mean_s)` seconds
+    /// late — every node of that worker starts no earlier.
+    ColdStart { mean_s: f64 },
+    /// Per-worker compute slowdown: with probability `prob` a worker is
+    /// a straggler (compute stretched by up to `slowdown`×); every
+    /// worker also gets a small continuous background factor so that
+    /// different seeds always produce different timelines.
+    Straggler { prob: f64, slowdown: f64 },
+    /// Lognormal bandwidth variation: every transfer (and closed-form
+    /// sync occupancy) is stretched by `exp(σ·N(0,1))`, compute by the
+    /// paper-calibrated σ/3 — the Table 3 "measured" noise.
+    BandwidthJitter { sigma: f64 },
+}
+
+impl ScenarioModel {
+    /// Stable wire name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ScenarioModel::Deterministic => "deterministic",
+            ScenarioModel::ColdStart { .. } => "cold-start",
+            ScenarioModel::Straggler { .. } => "straggler",
+            ScenarioModel::BandwidthJitter { .. } => "bandwidth-jitter",
+        }
+    }
+
+    /// Parse a wire name into the scenario with its canonical
+    /// parameters. Inverse of [`ScenarioModel::as_str`].
+    pub fn parse(s: &str) -> Option<ScenarioModel> {
+        match s {
+            "deterministic" => Some(ScenarioModel::Deterministic),
+            "cold-start" => Some(ScenarioModel::ColdStart { mean_s: 2.0 }),
+            "straggler" => {
+                Some(ScenarioModel::Straggler { prob: 0.2, slowdown: 2.5 })
+            }
+            "bandwidth-jitter" => {
+                Some(ScenarioModel::BandwidthJitter { sigma: 0.15 })
+            }
+            _ => None,
+        }
+    }
+
+    /// Every accepted wire name (error messages, CLI help).
+    pub const NAMES: [&'static str; 4] =
+        ["deterministic", "cold-start", "straggler", "bandwidth-jitter"];
+
+    pub fn is_deterministic(&self) -> bool {
+        matches!(self, ScenarioModel::Deterministic)
+    }
+
+    /// Perturb `graph` in place, deterministically from `seed`.
+    pub fn apply(&self, graph: &mut FlowGraph, seed: u64) {
+        match *self {
+            ScenarioModel::Deterministic => {}
+            ScenarioModel::ColdStart { mean_s } => {
+                let mut rng = Rng::new(seed ^ 0xC01D_57A7);
+                for w in 0..graph.n_workers() {
+                    graph.delay_worker(w, rng.exponential(1.0 / mean_s));
+                }
+            }
+            ScenarioModel::Straggler { prob, slowdown } => {
+                let mut rng = Rng::new(seed ^ 0x57A6_61E6);
+                let factors: Vec<f64> = (0..graph.n_workers())
+                    .map(|_| {
+                        // draw both branches' uniforms unconditionally so
+                        // the stream consumed per worker is fixed
+                        let hit = rng.chance(prob);
+                        let heavy = rng.uniform(1.5, slowdown.max(1.5));
+                        let background = rng.uniform(1.0, 1.05);
+                        if hit {
+                            heavy
+                        } else {
+                            background
+                        }
+                    })
+                    .collect();
+                for node in &mut graph.nodes {
+                    if node.kind == OpKind::Compute {
+                        node.work *= factors[node.worker];
+                    }
+                }
+            }
+            ScenarioModel::BandwidthJitter { sigma } => {
+                let mut rng = Rng::new(seed ^ 0xBA2D_317E);
+                for node in &mut graph.nodes {
+                    let sg = match node.kind {
+                        OpKind::Compute => sigma / 3.0,
+                        OpKind::Transfer | OpKind::Fixed => sigma,
+                    };
+                    // lognormal factor around 1 (a bandwidth dip makes
+                    // the transfer longer)
+                    node.work *= (sg * rng.normal()).exp();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{execute, Node};
+    use super::*;
+
+    fn demo_graph() -> FlowGraph {
+        let mut g = FlowGraph::new();
+        for w in 0..4 {
+            let c = g.add(Node::compute(w, 1.0));
+            let u = g.add(Node::transfer(w, true, 0.5).after(vec![c]));
+            g.add(Node::compute(w, 1.0).after(vec![u]));
+        }
+        g
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for name in ScenarioModel::NAMES {
+            let s = ScenarioModel::parse(name).unwrap();
+            assert_eq!(s.as_str(), name);
+        }
+        assert!(ScenarioModel::parse("chaos-monkey").is_none());
+    }
+
+    #[test]
+    fn deterministic_is_identity() {
+        let mut a = demo_graph();
+        let b = demo_graph();
+        ScenarioModel::Deterministic.apply(&mut a, 7);
+        assert_eq!(execute(&a).makespan, execute(&b).makespan);
+    }
+
+    #[test]
+    fn same_seed_replays_bit_identically() {
+        for name in ["cold-start", "straggler", "bandwidth-jitter"] {
+            let s = ScenarioModel::parse(name).unwrap();
+            let mut a = demo_graph();
+            let mut b = demo_graph();
+            s.apply(&mut a, 42);
+            s.apply(&mut b, 42);
+            let (ra, rb) = (execute(&a), execute(&b));
+            assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits(), "{name}");
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        for name in ["cold-start", "straggler", "bandwidth-jitter"] {
+            let s = ScenarioModel::parse(name).unwrap();
+            let mut a = demo_graph();
+            let mut b = demo_graph();
+            s.apply(&mut a, 1);
+            s.apply(&mut b, 2);
+            assert_ne!(
+                execute(&a).makespan.to_bits(),
+                execute(&b).makespan.to_bits(),
+                "{name}: seeds 1 and 2 gave identical timelines"
+            );
+        }
+    }
+
+    #[test]
+    fn cold_start_only_delays() {
+        let base = execute(&demo_graph()).makespan;
+        let mut g = demo_graph();
+        ScenarioModel::parse("cold-start").unwrap().apply(&mut g, 3);
+        assert!(execute(&g).makespan >= base);
+    }
+
+    #[test]
+    fn straggler_stretches_compute_only() {
+        let mut g = demo_graph();
+        let before: f64 = g
+            .nodes
+            .iter()
+            .filter(|n| n.kind == OpKind::Transfer)
+            .map(|n| n.work)
+            .sum();
+        ScenarioModel::parse("straggler").unwrap().apply(&mut g, 5);
+        let after: f64 = g
+            .nodes
+            .iter()
+            .filter(|n| n.kind == OpKind::Transfer)
+            .map(|n| n.work)
+            .sum();
+        assert_eq!(before.to_bits(), after.to_bits());
+        assert!(g
+            .nodes
+            .iter()
+            .filter(|n| n.kind == OpKind::Compute)
+            .all(|n| n.work >= 1.0));
+    }
+}

@@ -1,0 +1,201 @@
+//! Equivalence suite for the unified simcore engine: the refactored
+//! paths (collective FlowGraph emitters, pipeline translation, FlowSim
+//! facade) must reproduce the behaviour the three historical engines
+//! pinned down, across a fixture matrix of all sync algorithms ×
+//! chunked/unchunked × dp ∈ {1, 2, 4} × uneven splits — chunked exact
+//! against unchunked at zero latency, event-loop against closed form
+//! within the existing `rel_err_pct` tolerance.
+
+use funcpipe::collective::sim::{
+    emit_parameter_server, emit_pipelined_scatter_reduce,
+    emit_scatter_reduce, simulate_parameter_server,
+    simulate_pipelined_scatter_reduce,
+    simulate_pipelined_scatter_reduce_chunked, simulate_scatter_reduce,
+    simulate_scatter_reduce_chunked,
+};
+use funcpipe::collective::{ps_sync_time, sync_time, SyncAlgorithm};
+use funcpipe::model::{merge_layers, zoo, MergeCriterion, Plan};
+use funcpipe::pipeline::{rel_err_pct, simulate_iteration};
+use funcpipe::planner::PerfModel;
+use funcpipe::platform::network::{BandwidthModel, Dir, FlowSim};
+use funcpipe::platform::PlatformSpec;
+use funcpipe::simcore::execute;
+
+const MB: f64 = 1.0e6;
+
+/// All sync algorithms × chunked/unchunked × group size ∈ {2, 4} ×
+/// uneven byte totals: the flow schedule agrees with the closed form
+/// (zero latency), and every chunked variant is exact against its
+/// unchunked schedule (same bytes, same links, same barriers).
+#[test]
+fn collective_matrix_matches_closed_forms() {
+    // deliberately uneven: neither divisible by the group size nor by
+    // the chunk size
+    for grad in [97.3 * MB, 281.7 * MB] {
+        for n in [2usize, 4] {
+            let net = BandwidthModel::uniform(n, 70.0 * MB, 0.0);
+            for alg in [
+                SyncAlgorithm::ScatterReduce,
+                SyncAlgorithm::PipelinedScatterReduce,
+            ] {
+                let unchunked = match alg {
+                    SyncAlgorithm::ScatterReduce => {
+                        simulate_scatter_reduce(n, grad, &net)
+                    }
+                    SyncAlgorithm::PipelinedScatterReduce => {
+                        simulate_pipelined_scatter_reduce(n, grad, &net)
+                    }
+                };
+                let formula = sync_time(alg, grad, n, 70.0 * MB, 0.0);
+                assert!(
+                    rel_err_pct(unchunked, formula) < 15.0,
+                    "{alg:?} n={n} grad={grad}: sim {unchunked} vs {formula}"
+                );
+                for chunk in [3.3 * MB, 16.0 * MB] {
+                    let chunked = match alg {
+                        SyncAlgorithm::ScatterReduce => {
+                            simulate_scatter_reduce_chunked(
+                                n, grad, &net, chunk,
+                            )
+                        }
+                        SyncAlgorithm::PipelinedScatterReduce => {
+                            simulate_pipelined_scatter_reduce_chunked(
+                                n, grad, &net, chunk,
+                            )
+                        }
+                    };
+                    // chunked exact: at zero latency granularity is free
+                    // (the pipelined fill can only shrink, never grow)
+                    let tol = 1e-5 * unchunked;
+                    assert!(
+                        chunked <= unchunked + tol,
+                        "{alg:?} n={n} chunk={chunk}: {chunked} > {unchunked}"
+                    );
+                    match alg {
+                        SyncAlgorithm::ScatterReduce => assert!(
+                            (chunked - unchunked).abs() <= tol,
+                            "{alg:?} n={n} chunk={chunk}: {chunked} vs {unchunked}"
+                        ),
+                        SyncAlgorithm::PipelinedScatterReduce => assert!(
+                            chunked >= grad / (70.0 * MB) * (1.0 - 1e-9),
+                            "beats the occupancy floor"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The historical `simulate_*` entry points are delegating wrappers:
+/// emit + execute produces the identical number, bit for bit.
+#[test]
+fn wrappers_delegate_to_emitted_graphs() {
+    let net = BandwidthModel::uniform(4, 70.0 * MB, 0.01);
+    let grad = 123.4 * MB;
+    assert_eq!(
+        simulate_scatter_reduce(4, grad, &net),
+        execute(&emit_scatter_reduce(4, grad, &net, 0.0)).makespan
+    );
+    assert_eq!(
+        simulate_pipelined_scatter_reduce(4, grad, &net),
+        execute(&emit_pipelined_scatter_reduce(4, grad, &net, 0.0)).makespan
+    );
+    assert_eq!(
+        simulate_scatter_reduce_chunked(4, grad, &net, 8.0 * MB),
+        execute(&emit_scatter_reduce(4, grad, &net, 8.0 * MB)).makespan
+    );
+    assert_eq!(
+        simulate_pipelined_scatter_reduce_chunked(4, grad, &net, 8.0 * MB),
+        execute(&emit_pipelined_scatter_reduce(4, grad, &net, 8.0 * MB))
+            .makespan
+    );
+    let mut ps_net = BandwidthModel::uniform(5, 70.0 * MB, 0.0);
+    ps_net.up_bps[4] = 1.25e9;
+    ps_net.down_bps[4] = 1.25e9;
+    assert_eq!(
+        simulate_parameter_server(4, grad, &ps_net),
+        execute(&emit_parameter_server(4, grad, &ps_net)).makespan
+    );
+}
+
+/// The parameter-server schedule still tracks its closed form on the
+/// unified engine (two-endpoint direct flows, max-min shared).
+#[test]
+fn parameter_server_matches_formula() {
+    let n = 8;
+    let mut net = BandwidthModel::uniform(n + 1, 70.0 * MB, 0.0);
+    net.up_bps[n] = 1.25e9;
+    net.down_bps[n] = 1.25e9;
+    let sim = simulate_parameter_server(n, 100.0 * MB, &net);
+    let agg = n as f64 * 100.0 * MB
+        / funcpipe::collective::analytic::PS_SERVER_PROC_BPS;
+    let formula =
+        ps_sync_time(100.0 * MB, n, 70.0 * MB, 1.25e9, 0.0) - agg;
+    assert!(
+        rel_err_pct(sim, formula) < 15.0,
+        "sim {sim} vs formula {formula}"
+    );
+}
+
+/// Pipeline DES vs closed-form model across the plan matrix:
+/// dp ∈ {1, 2, 4} × even and uneven partitions × both sync algorithms,
+/// within the historical 20% tolerance (exact for the 1-worker plan).
+#[test]
+fn pipeline_matrix_tracks_perf_model() {
+    let p = PlatformSpec::aws_lambda();
+    let m = merge_layers(&zoo::amoebanet_d18(&p), 6, MergeCriterion::Compute);
+    let mut checked = 0;
+    for alg in [
+        SyncAlgorithm::ScatterReduce,
+        SyncAlgorithm::PipelinedScatterReduce,
+    ] {
+        let pm = PerfModel::new(&m, &p).with_sync(alg);
+        // cuts chosen to produce uneven layer splits of the 6 merged
+        // layers: [1] → 2+4, [1, 3] → 2+2+2, [0, 1] → 1+1+4
+        for cuts in [vec![], vec![1], vec![1, 3], vec![0, 1]] {
+            for dp in [1usize, 2, 4] {
+                let s = cuts.len() + 1;
+                let plan = Plan {
+                    cuts: cuts.clone(),
+                    dp,
+                    stage_tiers: vec![p.max_tier(); s],
+                    n_micro_global: 4 * dp,
+                };
+                if plan.validate(&m, &p).is_err() {
+                    continue;
+                }
+                let sim = simulate_iteration(&m, &p, &plan, alg);
+                let perf = pm.evaluate(&plan);
+                let err = rel_err_pct(perf.t_iter, sim.t_iter);
+                let tol = if s == 1 && dp == 1 { 1e-4 } else { 20.0 };
+                assert!(
+                    err < tol,
+                    "{alg:?} {plan:?}: sim {} model {} err {err:.2}%",
+                    sim.t_iter,
+                    perf.t_iter
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= 12, "only {checked} feasible matrix points");
+}
+
+/// The FlowSim facade (kept for its public API) delegates to the same
+/// engine: a hand-built flow set behaves exactly as the direct graph.
+#[test]
+fn flowsim_facade_is_the_unified_engine() {
+    let model = BandwidthModel::uniform(2, 100.0, 0.5);
+    let mut sim = FlowSim::new(model);
+    let a = sim.add_flow(0, Dir::Up, 100.0, 0.0);
+    let b = sim.add_flow_after(1, Dir::Down, 100.0, vec![a], 0.0);
+    let c = sim.add_direct_flow_after(0, 1, 50.0, vec![b], 0.0);
+    let makespan = sim.run();
+    // a: 0.5 latency + 1 s; b: 1.5 + 0.5 + 1 s = 3.0; c: 3.5 + 0.5
+    assert!((sim.finish_time(a) - 1.5).abs() < 1e-9);
+    assert!((sim.finish_time(b) - 3.0).abs() < 1e-9);
+    assert!((sim.finish_time(c) - 4.0).abs() < 1e-9);
+    assert_eq!(makespan, sim.finish_time(c));
+    assert_eq!(sim.bytes(c), 50.0);
+}
