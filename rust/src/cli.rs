@@ -10,9 +10,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::collective::SyncAlgorithm;
 use crate::config::ExperimentConfig;
-use crate::experiment::{Format, TrainOverrides};
+use crate::experiment::{Format, PlanArtifact, TrainOverrides};
 use crate::model::MergeCriterion;
-use crate::simcore::ScenarioModel;
+use crate::simcore::ScenarioSpec;
 
 /// Flags that shape the unified [`ExperimentConfig`]; accepted by every
 /// config-driven subcommand.
@@ -38,8 +38,8 @@ pub const CONFIG_FLAGS: &[&str] = &[
 /// Config-shaping flags that clash with `--plan`: the artifact already
 /// froze them, so overriding them silently would betray the plan.
 /// `--scenario`/`--seed` are deliberately absent: they are a lens on
-/// the simulation, not part of the plan's identity (and only the
-/// `simulate` subcommand accepts them at all — a scenario flag on a
+/// execution, not part of the plan's identity (and only the `simulate`
+/// and `train` subcommands accept them at all — a scenario flag on a
 /// command that cannot honor it would be a silent no-op).
 pub const PLAN_EXCLUSIVE_FLAGS: &[&str] = &[
     "config",
@@ -58,7 +58,7 @@ pub fn flags_for(cmd: &str) -> Option<Vec<&'static str>> {
     let extra: &[&str] = match cmd {
         "plan" => &["out"],
         "simulate" => &["plan", "scenario", "seed"],
-        "train" => &["plan", "dp", "mu"],
+        "train" => &["plan", "dp", "mu", "scenario", "seed"],
         "baseline" => &[],
         "profile" => return Some(vec!["artifacts", "format"]),
         "fig" => return Some(vec!["format"]),
@@ -214,19 +214,17 @@ pub fn config_from_flags(
 }
 
 /// Apply `--scenario`/`--seed` onto a config — shared by the normal
-/// config path and the `simulate --plan` path (where the rest of the
-/// config is frozen by the artifact but the simulation lens stays
-/// selectable per call).
+/// config path and the `simulate|train --plan` paths (where the rest of
+/// the config is frozen by the artifact but the execution lens stays
+/// selectable per call). Accepts composites (`cold-start+jitter`) with
+/// the same strict rules as single scenarios.
 pub fn apply_scenario_flags(
     cfg: &mut ExperimentConfig,
     flags: &HashMap<String, String>,
 ) -> Result<()> {
     if let Some(s) = flags.get("scenario") {
-        cfg.scenario = ScenarioModel::parse(s).with_context(|| {
-            format!(
-                "--scenario {s:?} (expected {})",
-                ScenarioModel::NAMES.join("|")
-            )
+        cfg.scenario = ScenarioSpec::parse(s).with_context(|| {
+            format!("--scenario {s:?} (expected {})", ScenarioSpec::SYNTAX)
         })?;
     }
     if let Some(s) = flags.get("seed") {
@@ -236,17 +234,30 @@ pub fn apply_scenario_flags(
         if cfg.scenario.is_deterministic() {
             bail!(
                 "--seed has no effect under the deterministic scenario; \
-                 pass --scenario {} (or set `scenario` in the config)",
-                ScenarioModel::NAMES
-                    .iter()
-                    .filter(|&&n| n != "deterministic")
-                    .copied()
-                    .collect::<Vec<_>>()
-                    .join("|")
+                 pass --scenario (accepted: {}) or set `scenario` in \
+                 the config",
+                ScenarioSpec::SYNTAX
             );
         }
     }
     Ok(())
+}
+
+/// Rebuild the session config from a plan artifact for an execution
+/// subcommand: whatever lens the planning session happened to embed is
+/// metadata, not a request — it resets to deterministic, and only
+/// explicit `--scenario`/`--seed` flags opt back in. ONE policy shared
+/// by `simulate --plan` and `train --plan`, so the two engines can
+/// never drift on it.
+pub fn lens_config_from_artifact(
+    artifact: &PlanArtifact,
+    flags: &HashMap<String, String>,
+) -> Result<ExperimentConfig> {
+    let mut cfg = artifact.config.clone();
+    cfg.scenario = ScenarioSpec::deterministic();
+    cfg.seed = 0;
+    apply_scenario_flags(&mut cfg, flags)?;
+    Ok(cfg)
 }
 
 /// Per-run trainer overrides from flags (all optional; absent = derive
@@ -391,39 +402,51 @@ mod tests {
 
     #[test]
     fn scenario_flags_flow_through() {
-        let allowed = flags_for("simulate").unwrap();
-        let flags = parse_flags(
-            "simulate",
-            &argv(&["--scenario", "straggler", "--seed", "7"]),
-            &allowed,
-        )
-        .unwrap();
-        let cfg = config_from_flags(&flags).unwrap();
-        assert_eq!(cfg.scenario.as_str(), "straggler");
-        assert_eq!(cfg.seed, 7);
-        // --seed alone would be a silent no-op (nothing draws from it
-        // under the deterministic default): hard error
-        let seed_only =
-            parse_flags("simulate", &argv(&["--seed", "7"]), &allowed)
-                .unwrap();
-        assert!(config_from_flags(&seed_only).is_err());
-        // unknown scenario names are hard errors (strict-flag contract)
-        let bad = parse_flags(
-            "simulate",
-            &argv(&["--scenario", "chaos-monkey"]),
-            &allowed,
-        )
-        .unwrap();
-        assert!(config_from_flags(&bad).is_err());
+        // both execution surfaces accept the lens with identical rules
+        for cmd in ["simulate", "train"] {
+            let allowed = flags_for(cmd).unwrap();
+            let flags = parse_flags(
+                cmd,
+                &argv(&["--scenario", "straggler", "--seed", "7"]),
+                &allowed,
+            )
+            .unwrap();
+            let cfg = config_from_flags(&flags).unwrap();
+            assert_eq!(cfg.scenario.name(), "straggler");
+            assert_eq!(cfg.seed, 7);
+            // --seed alone would be a silent no-op (nothing draws from
+            // it under the deterministic default): hard error
+            let seed_only =
+                parse_flags(cmd, &argv(&["--seed", "7"]), &allowed).unwrap();
+            assert!(config_from_flags(&seed_only).is_err());
+            // unknown scenario names are hard errors (strict-flag
+            // contract)
+            let bad = parse_flags(
+                cmd,
+                &argv(&["--scenario", "chaos-monkey"]),
+                &allowed,
+            )
+            .unwrap();
+            assert!(config_from_flags(&bad).is_err());
+            // composites (with the `jitter` shorthand) parse on both
+            let composite = parse_flags(
+                cmd,
+                &argv(&["--scenario", "cold-start+jitter", "--seed", "3"]),
+                &allowed,
+            )
+            .unwrap();
+            let cfg = config_from_flags(&composite).unwrap();
+            assert_eq!(cfg.scenario.name(), "cold-start+bandwidth-jitter");
+        }
         // scenario does not conflict with --plan (it is a lens, not a
         // config-shaping flag)
         let mut with_plan = HashMap::new();
         with_plan.insert("plan".to_string(), "p.json".to_string());
         with_plan.insert("scenario".to_string(), "straggler".to_string());
         check_plan_conflicts(&with_plan).unwrap();
-        // ...but only `simulate` can honor it: everywhere else the flag
-        // would be a silent no-op, so it is rejected outright
-        for cmd in ["plan", "train", "baseline"] {
+        // ...but only simulate/train can honor it: everywhere else the
+        // flag would be a silent no-op, so it is rejected outright
+        for cmd in ["plan", "baseline", "profile"] {
             let allowed = flags_for(cmd).unwrap();
             assert!(
                 parse_flags(cmd, &argv(&["--scenario", "straggler"]), &allowed)

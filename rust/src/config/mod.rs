@@ -18,7 +18,7 @@ use anyhow::{bail, Context, Result};
 use crate::collective::{Chunking, SyncAlgorithm};
 use crate::model::{zoo, MergeCriterion, ModelProfile};
 use crate::platform::PlatformSpec;
-use crate::simcore::ScenarioModel;
+use crate::simcore::ScenarioSpec;
 use crate::util::json::Json;
 
 /// A fully-resolved experiment configuration.
@@ -50,15 +50,17 @@ pub struct ExperimentConfig {
     pub lifetime_s: f64,
     /// Per-worker storage throttle `(bytes/s, latency seconds)`.
     pub throttle: Option<(f64, f64)>,
-    // -- simulation scenario lens ----------------------------------------
-    /// Serverless scenario the DES applies on `simulate`
-    /// (`deterministic` | `cold-start` | `straggler` |
-    /// `bandwidth-jitter`). A *lens* on the simulation, not part of the
+    // -- scenario lens (simulate AND train) ------------------------------
+    /// Serverless scenario applied by the DES on `simulate` and by the
+    /// runtime [`Injector`](crate::scenario::Injector) on `train`:
+    /// `deterministic` | `cold-start` | `straggler` |
+    /// `bandwidth-jitter`, or a `+`-joined composite such as
+    /// `cold-start+jitter`. A *lens* on execution, not part of the
     /// plan's identity: artifact drift checks ignore it, so one plan can
-    /// be simulated under many scenarios.
-    pub scenario: ScenarioModel,
+    /// be replayed under many scenarios on both paths.
+    pub scenario: ScenarioSpec,
     /// Seed for the scenario's draws; same seed + scenario ⇒
-    /// bit-identical `SimReport`.
+    /// bit-identical `SimReport`/`TrainReport`.
     pub seed: u64,
 }
 
@@ -81,7 +83,7 @@ impl Default for ExperimentConfig {
             lr: 0.2,
             lifetime_s: f64::INFINITY,
             throttle: None,
-            scenario: ScenarioModel::Deterministic,
+            scenario: ScenarioSpec::deterministic(),
             seed: 0,
         }
     }
@@ -194,10 +196,10 @@ impl ExperimentConfig {
         }
         if let Some(v) = j.get("scenario") {
             let s = v.as_str().context("scenario string")?;
-            cfg.scenario = ScenarioModel::parse(s).with_context(|| {
+            cfg.scenario = ScenarioSpec::parse(s).with_context(|| {
                 format!(
                     "unknown scenario {s:?} (expected {})",
-                    ScenarioModel::NAMES.join("|")
+                    ScenarioSpec::SYNTAX
                 )
             })?;
         }
@@ -237,7 +239,7 @@ impl ExperimentConfig {
             ("artifacts_dir", Json::str(self.artifacts_dir.as_str())),
             ("steps", Json::Num(self.steps as f64)),
             ("lr", Json::Num(self.lr)),
-            ("scenario", Json::str(self.scenario.as_str())),
+            ("scenario", Json::str(self.scenario.name().as_str())),
             ("seed", Json::Num(self.seed as f64)),
         ];
         if self.lifetime_s.is_finite() {
@@ -291,16 +293,18 @@ impl ExperimentConfig {
             bail!("seed must fit a JSON number exactly (<= 2^53)");
         }
         // the wire format carries only the scenario's name, so a config
-        // holding hand-tuned parameters would serialize lossily and
-        // replay with different noise than the session that wrote it —
-        // reject it here instead (callers wanting custom parameters use
+        // holding hand-tuned parameters (or a non-canonical component
+        // order) would serialize lossily and replay with different
+        // noise than the session that wrote it — reject it here instead
+        // (callers wanting custom parameters use
         // `simulate_iteration_scenario` directly, not the config)
-        if ScenarioModel::parse(self.scenario.as_str()) != Some(self.scenario)
+        if ScenarioSpec::parse(&self.scenario.name()).as_ref()
+            != Some(&self.scenario)
         {
             bail!(
                 "config scenario must use the canonical parameters of {:?} \
                  (select scenarios by name)",
-                self.scenario.as_str()
+                self.scenario.name()
             );
         }
         self.resolve_platform()?;
@@ -390,7 +394,7 @@ mod tests {
             r#"{"scenario": "straggler", "seed": 7}"#,
         )
         .unwrap();
-        assert_eq!(cfg.scenario.as_str(), "straggler");
+        assert_eq!(cfg.scenario.name(), "straggler");
         assert_eq!(cfg.seed, 7);
         // round-trips through JSON like every other knob
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
@@ -405,6 +409,32 @@ mod tests {
             r#"{"seed": 36028797018963970}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn parses_composite_scenarios() {
+        // the `jitter` shorthand and a non-canonical order both
+        // normalize to the canonical wire name...
+        let cfg = ExperimentConfig::from_json_text(
+            r#"{"scenario": "jitter+cold-start", "seed": 3}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.scenario.name(), "cold-start+bandwidth-jitter");
+        assert_eq!(cfg.scenario.components().len(), 2);
+        // ...and the normalized name round-trips losslessly
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+        // contradictions and duplicates are rejected like typos
+        for bad in [
+            r#"{"scenario": "deterministic+cold-start"}"#,
+            r#"{"scenario": "cold-start+cold-start"}"#,
+            r#"{"scenario": "cold-start+chaos"}"#,
+        ] {
+            assert!(
+                ExperimentConfig::from_json_text(bad).is_err(),
+                "{bad} accepted"
+            );
+        }
     }
 
     #[test]

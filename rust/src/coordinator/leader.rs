@@ -11,6 +11,7 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::worker::{run_worker, IterMsg, WorkerCtx};
 use crate::platform::MemStore;
 use crate::runtime::Manifest;
+use crate::scenario::Injector;
 use crate::trainer::{IterLog, TrainConfig, TrainReport};
 
 /// Run a full training job: one thread per worker (stage × replica).
@@ -25,6 +26,15 @@ pub fn run_training(
         bail!("dp, mu and steps must be positive");
     }
 
+    // one injector for the whole job: every worker reads its lens (and
+    // its cold-start draws) from the same seeded construction, so the
+    // run is a function of (scenario, seed) alone
+    let injector = Arc::new(Injector::new(
+        &cfg.scenario,
+        cfg.scenario_seed,
+        n_stages * cfg.dp,
+    ));
+
     let start = Instant::now();
     let (tx, rx) = mpsc::channel::<IterMsg>();
 
@@ -37,6 +47,7 @@ pub fn run_training(
                 replica,
                 base_store: store.clone() as Arc<dyn crate::platform::ObjectStore>,
                 monitor: (stage_idx == n_stages - 1).then(|| tx.clone()),
+                injector: injector.clone(),
             };
             handles.push(
                 std::thread::Builder::new()
@@ -49,49 +60,76 @@ pub fn run_training(
     drop(tx);
 
     // ---- monitor daemon: aggregate per-step losses across replicas ----
-    let mut step_losses: Vec<Vec<f32>> = vec![Vec::new(); cfg.steps];
+    // losses land in per-replica slots so the average is summed in
+    // replica order regardless of message arrival order — one less
+    // source of cross-run drift in the replayable report
+    let mut step_losses: Vec<Vec<Option<f32>>> =
+        vec![vec![None; cfg.dp]; cfg.steps];
     let mut step_done_at: Vec<Option<f64>> = vec![None; cfg.steps];
     while let Ok(msg) = rx.recv() {
-        step_losses[msg.step].push(msg.loss);
-        if step_losses[msg.step].len() == cfg.dp {
+        step_losses[msg.step][msg.replica] = Some(msg.loss);
+        if step_losses[msg.step].iter().all(Option::is_some) {
             step_done_at[msg.step] = Some(start.elapsed().as_secs_f64());
             log::info!(
                 "step {:>4}  loss {:.4}",
                 msg.step,
-                step_losses[msg.step].iter().sum::<f32>() / cfg.dp as f32
+                step_losses[msg.step].iter().flatten().sum::<f32>()
+                    / cfg.dp as f32
             );
         }
     }
 
-    let mut restarts = 0usize;
+    let mut workers = Vec::with_capacity(handles.len());
     for h in handles {
-        restarts += h
-            .join()
-            .map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        workers.push(
+            h.join()
+                .map_err(|_| anyhow::anyhow!("worker panicked"))??,
+        );
     }
+    workers.sort_by_key(|w| w.worker_id);
+    let restarts = workers.iter().map(|w| w.restarts).sum();
 
-    // build logs with per-iteration durations
+    // per-iteration durations: measured wall deltas, or — under the
+    // deterministic virtual clock — the slowest worker's lens-stretched
+    // virtual iteration, which is what gates a pipelined step
+    let virtual_iter =
+        cfg.virtual_iter_s.map(|base| injector.max_iter_virtual_s(base));
     let mut logs = Vec::with_capacity(cfg.steps);
     let mut prev_t = 0.0f64;
     for step in 0..cfg.steps {
         let losses = &step_losses[step];
-        if losses.is_empty() {
+        if losses.iter().any(Option::is_none) {
             bail!("no loss recorded for step {step}");
         }
-        let t = step_done_at[step].unwrap_or(prev_t);
-        logs.push(IterLog {
-            step,
-            loss: losses.iter().sum::<f32>() / losses.len() as f32,
-            iter_s: (t - prev_t).max(0.0),
-        });
-        prev_t = t;
+        let loss =
+            losses.iter().flatten().sum::<f32>() / losses.len() as f32;
+        let iter_s = match virtual_iter {
+            Some(v) => v,
+            None => {
+                let t = step_done_at[step].unwrap_or(prev_t);
+                let dt = (t - prev_t).max(0.0);
+                prev_t = t;
+                dt
+            }
+        };
+        logs.push(IterLog { step, loss, iter_s });
     }
+
+    let wall_s = match cfg.virtual_iter_s {
+        // virtual timeline: the slowest worker's deterministic elapsed
+        Some(_) => workers
+            .iter()
+            .map(|w| w.virtual_elapsed_s)
+            .fold(0.0, f64::max),
+        None => start.elapsed().as_secs_f64(),
+    };
 
     Ok(TrainReport {
         logs,
         restarts,
-        wall_s: start.elapsed().as_secs_f64(),
+        wall_s,
         store_put_gets: (0, 0),
+        workers,
     })
 }
 
@@ -152,5 +190,119 @@ mod tests {
         let report = crate::trainer::train(&cfg).unwrap();
         assert!(report.restarts > 0, "no restarts happened");
         assert!(report.last_loss() < report.first_loss() + 0.5);
+    }
+
+    // ---- native built-in model: these run in every build ----------------
+
+    #[test]
+    fn builtin_tiny_pipeline_trains() {
+        let mut cfg = TrainConfig::new(crate::runtime::BUILTIN_TINY);
+        cfg.steps = 12;
+        cfg.mu = 2;
+        cfg.lr = 0.5;
+        let report = crate::trainer::train(&cfg).unwrap();
+        assert_eq!(report.logs.len(), 12);
+        assert!(
+            report.last_loss() < report.first_loss(),
+            "loss did not fall: {} -> {}",
+            report.first_loss(),
+            report.last_loss()
+        );
+        // one generation per worker, each charged exactly one cold start
+        assert_eq!(report.restarts, 0);
+        assert_eq!(report.generations(), 3);
+        assert!(
+            (report.cold_start_total_s() - 3.0 * cfg.cold_start_s).abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn builtin_tiny_data_parallel_trains() {
+        let mut cfg = TrainConfig::new(crate::runtime::BUILTIN_TINY);
+        cfg.steps = 8;
+        cfg.dp = 2;
+        cfg.mu = 1;
+        cfg.lr = 0.5;
+        let report = crate::trainer::train(&cfg).unwrap();
+        assert_eq!(report.logs.len(), 8);
+        assert_eq!(report.workers.len(), 6);
+        assert!(report.last_loss() < report.first_loss());
+        assert!(report.logs.iter().all(|l| l.loss.is_finite()));
+    }
+
+    #[test]
+    fn builtin_tiny_losses_replay_bit_identically() {
+        let run = || {
+            let mut cfg = TrainConfig::new(crate::runtime::BUILTIN_TINY);
+            cfg.steps = 5;
+            cfg.mu = 2;
+            crate::trainer::train(&cfg)
+                .unwrap()
+                .logs
+                .iter()
+                .map(|l| l.loss.to_bits())
+                .collect::<Vec<u32>>()
+        };
+        assert_eq!(run(), run(), "native numerics drifted across runs");
+    }
+
+    #[test]
+    fn virtual_lifetime_forces_deterministic_restarts() {
+        let mut cfg = TrainConfig::new(crate::runtime::BUILTIN_TINY);
+        cfg.steps = 8;
+        cfg.mu = 1;
+        cfg.virtual_iter_s = Some(1.0);
+        cfg.lifetime_s = 3.0;
+        cfg.checkpoint_margin_s = 0.5;
+        cfg.cold_start_s = 0.25;
+        let report = crate::trainer::train(&cfg).unwrap();
+        // generation timeline per worker: cold 0.25 + k iterations; the
+        // margin trips when remaining 3.0 − age ≤ 0.5, i.e. after the
+        // 3rd iteration of each generation (age 3.25) — 8 steps ⇒
+        // restarts after steps 2 and 5 ⇒ exactly 2 per worker
+        assert_eq!(report.restarts, 6, "{:?}", report.workers);
+        for w in &report.workers {
+            assert_eq!(w.restarts, 2);
+            assert_eq!(w.generations, 3);
+            // a restart charges a cold start once per generation
+            assert!((w.cold_start_s - 3.0 * 0.25).abs() < 1e-9);
+        }
+        assert!(
+            (report.cold_start_total_s() - 3.0 * 3.0 * 0.25).abs() < 1e-9
+        );
+        // virtual wall clock: 8 iterations + 3 cold starts per worker
+        assert!((report.wall_s - (8.0 + 0.75)).abs() < 1e-9);
+        // and the run replays exactly
+        let again = crate::trainer::train(&cfg).unwrap();
+        assert_eq!(again.restarts, 6);
+        assert_eq!(again.wall_s.to_bits(), report.wall_s.to_bits());
+    }
+
+    #[test]
+    fn checkpoints_are_consumed_after_restore() {
+        let mut cfg = TrainConfig::new(crate::runtime::BUILTIN_TINY);
+        cfg.steps = 6;
+        cfg.mu = 1;
+        cfg.virtual_iter_s = Some(1.0);
+        cfg.lifetime_s = 2.0;
+        cfg.checkpoint_margin_s = 0.5;
+        cfg.cold_start_s = 0.0;
+        let store = std::sync::Arc::new(crate::platform::MemStore::new());
+        let report =
+            crate::trainer::train_with_store(&cfg, store.clone()).unwrap();
+        assert!(report.restarts > 0, "test needs the restart path");
+        assert!(
+            store.list("ckpt/").is_empty(),
+            "checkpoint keys leaked: {:?}",
+            store.list("ckpt/")
+        );
+        // the bucket drains completely once boundary tensors, sync
+        // objects and checkpoints are all consume-once
+        let leaked: Vec<String> = store.list("");
+        assert!(
+            leaked.is_empty(),
+            "objects left in the bucket: {leaked:?}"
+        );
     }
 }

@@ -12,3 +12,4 @@ pub mod leader;
 pub mod worker;
 
 pub use leader::run_training;
+pub use worker::WorkerStats;

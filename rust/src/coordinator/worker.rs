@@ -10,12 +10,20 @@
 //! The Function Manager half lives here too: after each iteration the
 //! worker checks its remaining lifetime and, if below the margin,
 //! checkpoints its parameters to storage, "restarts" (new generation,
-//! cold-start sleep), and restores — exercising the §3.1-step-8 path that
-//! real platforms force every 15 minutes.
+//! charging the tier's cold start), and restores — exercising the
+//! §3.1-step-8 path that real platforms force every 15 minutes.
+//!
+//! The scenario [`Injector`] perturbs this path exactly where the
+//! simulator's lenses act: the worker's throttled store handle is
+//! scaled by its bandwidth/latency lens, every generation's cold start
+//! is the tier base plus the scenario draw, and — when
+//! `TrainConfig::virtual_iter_s` is set — the lifecycle ages on a
+//! deterministic virtual clock so the checkpoint/restart schedule (and
+//! therefore the whole report) replays bit-identically per seed.
 
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -26,6 +34,7 @@ use crate::collective::CollectiveCtx;
 use crate::platform::function::FunctionInstance;
 use crate::platform::{ObjectStore, ThrottledStore};
 use crate::runtime::{Manifest, Runtime};
+use crate::scenario::{Injector, WorkerLens};
 use crate::trainer::data::Corpus;
 use crate::trainer::TrainConfig;
 
@@ -38,26 +47,54 @@ pub struct IterMsg {
     pub replica: usize,
 }
 
+/// Per-worker lifecycle and scenario-lens stats, returned to the leader
+/// and surfaced as the `TrainReport`'s scenario columns.
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    pub worker_id: usize,
+    pub stage: usize,
+    pub replica: usize,
+    /// Checkpoint/restart cycles performed.
+    pub restarts: usize,
+    /// Function generations launched (`restarts + 1`).
+    pub generations: u32,
+    /// Cold-start seconds charged, exactly once per generation.
+    pub cold_start_s: f64,
+    /// The scenario lens this worker ran under.
+    pub lens: WorkerLens,
+    /// Deterministic elapsed seconds on the virtual clock (0 in
+    /// wall-clock mode).
+    pub virtual_elapsed_s: f64,
+}
+
 pub struct WorkerCtx {
     pub cfg: TrainConfig,
     pub stage_idx: usize,
     pub replica: usize,
     pub base_store: Arc<dyn ObjectStore>,
     pub monitor: Option<Sender<IterMsg>>,
+    /// Shared seeded perturbation provider (identity when inactive).
+    pub injector: Arc<Injector>,
 }
 
-/// Entry point of a worker thread. Returns the number of
-/// checkpoint/restart cycles performed.
-pub fn run_worker(ctx: WorkerCtx) -> Result<usize> {
+/// Entry point of a worker thread. Returns the worker's lifecycle
+/// stats (restart count, generations, cold-start charges, lens).
+pub fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
     let cfg = &ctx.cfg;
-    // per-worker throttled view of the shared bucket (its own "NIC")
+    let worker_id = ctx.stage_idx * cfg.dp + ctx.replica;
+    let lens = ctx.injector.worker(worker_id);
+    // per-worker throttled view of the shared bucket (its own "NIC"),
+    // scaled by the worker's scenario lens
     let store: Arc<dyn ObjectStore> = match cfg.throttle {
-        Some((bps, lat)) => Arc::new(ThrottledStore::new(
-            ctx.base_store.clone(),
-            bps,
-            bps,
-            Duration::from_secs_f64(lat),
-        )),
+        Some((bps, lat)) => Arc::new(
+            ThrottledStore::new(
+                ctx.base_store.clone(),
+                bps,
+                bps,
+                Duration::from_secs_f64(lat),
+            )
+            .scaled(lens.bandwidth_mult, lens.latency_mult),
+        ),
         None => ctx.base_store.clone(),
     };
 
@@ -76,14 +113,26 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<usize> {
     );
 
     let mut func = FunctionInstance::launch(
-        ctx.stage_idx * cfg.dp + ctx.replica,
+        worker_id,
         ctx.stage_idx,
         ctx.replica,
         0,
         cfg.lifetime_s,
     );
+    let mut stats = WorkerStats {
+        worker_id,
+        stage: ctx.stage_idx,
+        replica: ctx.replica,
+        restarts: 0,
+        generations: 1,
+        cold_start_s: 0.0,
+        lens,
+        virtual_elapsed_s: 0.0,
+    };
+    // every generation — the initial launch included — charges a cold
+    // start: the tier's base plus the scenario's per-generation draw
+    charge_cold_start(cfg, &ctx.injector, &mut func, &mut stats);
     func.mark_running();
-    let mut restarts = 0usize;
 
     let grad_len = stage.entry.flat_param_size;
     let lr_scale = 1.0 / (cfg.mu * cfg.dp) as f32;
@@ -119,6 +168,15 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<usize> {
         )
         .with_chunking(cfg.chunking)
     });
+
+    // Pipeline-gated virtual tick (loop-invariant): a pipelined
+    // iteration is gated by the slowest worker, so EVERY function ages
+    // by the slowest lens-stretched tick — the same duration the leader
+    // logs per step, keeping the checkpoint schedule consistent with
+    // the report's own timeline (a fast worker idles at the boundary,
+    // but its container keeps aging).
+    let virtual_tick =
+        cfg.virtual_iter_s.map(|base| ctx.injector.max_iter_virtual_s(base));
 
     for step in 0..cfg.steps {
         let round = step as u64;
@@ -249,19 +307,29 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<usize> {
             }
         }
 
-        // ---- Function Manager: lifetime check ----------------------------
+        // ---- Function Manager: lifetime bookkeeping ----------------------
+        if let Some(dt) = virtual_tick {
+            func.advance_virtual(dt);
+            stats.virtual_elapsed_s += dt;
+        }
         if func.should_checkpoint(cfg.checkpoint_margin_s) {
             let key = format!("ckpt/s{}/r{}", ctx.stage_idx, ctx.replica);
             store.put(&key, crate::collective::f32s_to_bytes(&stage.flat_params()))?;
             func.restart();
-            // cold start of the replacement container
-            std::thread::sleep(Duration::from_millis(10));
+            // cold start of the replacement container: the tier's
+            // cold_start_s, scenario-scaled — charged once per generation
+            charge_cold_start(cfg, &ctx.injector, &mut func, &mut stats);
             let bytes = store
                 .get_blocking(&key, RECV_TIMEOUT)
                 .context("checkpoint restore")?;
             stage.set_flat_params(&crate::collective::bytes_to_f32s(&bytes))?;
+            // the checkpoint is consumed: leaving the object behind
+            // would grow the bucket (and its high-water mark) with
+            // every generation for the rest of the run
+            store.delete(&key);
             func.mark_running();
-            restarts += 1;
+            stats.restarts += 1;
+            stats.generations += 1;
             log::info!(
                 "worker s{}r{} restarted (generation {})",
                 ctx.stage_idx,
@@ -269,7 +337,30 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<usize> {
                 func.generation
             );
         }
-        let _ = Instant::now();
     }
-    Ok(restarts)
+    Ok(stats)
+}
+
+/// Charge the current generation's cold start: the configured tier base
+/// plus the scenario's seeded draw. In virtual mode the charge advances
+/// the deterministic clock; in wall-clock mode the thread actually
+/// sleeps it, modelling the replacement container's provisioning.
+fn charge_cold_start(
+    cfg: &TrainConfig,
+    injector: &Injector,
+    func: &mut FunctionInstance,
+    stats: &mut WorkerStats,
+) {
+    let cold = injector.cold_start_s(
+        stats.worker_id,
+        func.generation,
+        cfg.cold_start_s,
+    );
+    stats.cold_start_s += cold;
+    if cfg.virtual_iter_s.is_some() {
+        func.advance_virtual(cold);
+        stats.virtual_elapsed_s += cold;
+    } else {
+        std::thread::sleep(Duration::from_secs_f64(cold));
+    }
 }

@@ -119,7 +119,7 @@ impl Experiment {
         // plan means, so one artifact can be simulated under many
         // scenarios (`simulate --plan p.json --scenario straggler`).
         let mut theirs = artifact.config.clone();
-        theirs.scenario = self.cfg.scenario;
+        theirs.scenario = self.cfg.scenario.clone();
         theirs.seed = self.cfg.seed;
         if theirs != self.cfg {
             bail!(
@@ -220,7 +220,7 @@ impl Experiment {
                 &self.platform,
                 &artifact.plan,
                 self.cfg.sync_alg,
-                self.cfg.scenario,
+                &self.cfg.scenario,
                 self.cfg.seed,
             )
         });
@@ -229,7 +229,7 @@ impl Experiment {
             plan: artifact.plan.clone(),
             predicted,
             sim,
-            scenario: self.cfg.scenario,
+            scenario: self.cfg.scenario.clone(),
             seed: self.cfg.seed,
             scenario_sim,
         })
@@ -255,6 +255,34 @@ impl Experiment {
         tc.throttle = cfg.throttle;
         tc.sync_alg = cfg.sync_alg;
         tc.chunking = cfg.chunking();
+        // scenario lens: the trainer's Injector draws from the same
+        // seeded streams the simulator applies, and the function
+        // lifecycle runs on the deterministic virtual clock so a
+        // scenario run replays bit-identically — each tick is the
+        // plan's predicted t_iter (a unit tick with no plan),
+        // lens-stretched per worker.
+        tc.scenario = cfg.scenario.clone();
+        tc.scenario_seed = cfg.seed;
+        if !cfg.scenario.is_deterministic() {
+            tc.virtual_iter_s = Some(
+                artifact
+                    .map(|a| a.predicted_t_iter)
+                    .filter(|t| t.is_finite() && *t > 0.0)
+                    .unwrap_or(1.0),
+            );
+        }
+        // the Function Manager charges the platform tier's cold start
+        // (the restart path's historical hardcoded 10 ms); with a plan,
+        // the slowest (largest) stage tier is the conservative charge
+        tc.cold_start_s = match artifact {
+            Some(a) => a
+                .plan
+                .stage_tiers
+                .iter()
+                .map(|&t| self.platform.tier(t).cold_start_s)
+                .fold(self.platform.cold_start_s, f64::max),
+            None => self.platform.cold_start_s,
+        };
         if let Some(a) = artifact {
             tc.dp = a.plan.dp;
             tc.mu = a.plan.mu();
@@ -458,6 +486,36 @@ mod tests {
         assert!(exp.train_config(None, &bad).is_err());
         let bad = TrainOverrides { lr: Some(f64::NAN), ..Default::default() };
         assert!(exp.train_config(None, &bad).is_err());
+    }
+
+    #[test]
+    fn train_config_carries_the_scenario_lens() {
+        use crate::simcore::ScenarioSpec;
+        let mut cfg = small_cfg();
+        cfg.scenario = ScenarioSpec::parse("straggler").unwrap();
+        cfg.seed = 7;
+        let exp = Experiment::new(cfg).unwrap();
+        let rec = exp.plan().unwrap().recommended().unwrap().clone();
+        let tc = exp
+            .train_config(Some(&rec.artifact), &TrainOverrides::default())
+            .unwrap();
+        assert_eq!(tc.scenario.name(), "straggler");
+        assert_eq!(tc.scenario_seed, 7);
+        // scenario active ⇒ deterministic virtual lifecycle, ticking at
+        // the plan's predicted iteration time
+        assert_eq!(tc.virtual_iter_s, Some(rec.artifact.predicted_t_iter));
+        // the cold start is the platform tier's, not a hardcoded number
+        assert!(
+            (tc.cold_start_s - exp.platform().cold_start_s).abs() < 1e-12
+        );
+        // planless scenario sessions tick at the documented unit rate
+        let tc = exp.train_config(None, &TrainOverrides::default()).unwrap();
+        assert_eq!(tc.virtual_iter_s, Some(1.0));
+        // deterministic sessions keep the wall-clock lifecycle
+        let det = Experiment::new(small_cfg()).unwrap();
+        let tc = det.train_config(None, &TrainOverrides::default()).unwrap();
+        assert!(tc.scenario.is_deterministic());
+        assert_eq!(tc.virtual_iter_s, None);
     }
 
     #[test]

@@ -8,10 +8,11 @@
 use anyhow::{bail, Result};
 
 use crate::baselines::BaselineResult;
+use crate::coordinator::WorkerStats;
 use crate::model::Plan;
 use crate::pipeline::{rel_err_pct, SimResult};
 use crate::planner::PlanPerf;
-use crate::simcore::ScenarioModel;
+use crate::simcore::ScenarioSpec;
 use crate::trainer::IterLog;
 use crate::util::humansize::{bytes, secs, usd};
 use crate::util::json::Json;
@@ -225,7 +226,7 @@ pub struct SimReport {
     /// Deterministic DES — the Table-3 "measured" reference.
     pub sim: SimResult,
     /// The session's scenario lens and its seed.
-    pub scenario: ScenarioModel,
+    pub scenario: ScenarioSpec,
     pub seed: u64,
     /// DES under the scenario; `None` when it is `deterministic`.
     pub scenario_sim: Option<SimResult>,
@@ -269,7 +270,7 @@ impl Report for SimReport {
             t.row([
                 format!(
                     "DES sim [{} seed={}]",
-                    self.scenario.as_str(),
+                    self.scenario.name(),
                     self.seed
                 ),
                 secs(s.t_iter),
@@ -285,8 +286,9 @@ impl Report for SimReport {
     }
 
     fn to_json(&self) -> Json {
+        let kind = self.scenario.name();
         let mut scenario = vec![
-            ("kind", Json::str(self.scenario.as_str())),
+            ("kind", Json::str(kind.as_str())),
             ("seed", Json::Num(self.seed as f64)),
         ];
         if let Some(s) = &self.scenario_sim {
@@ -324,7 +326,10 @@ impl Report for SimReport {
 // train
 // ---------------------------------------------------------------------------
 
-/// Structured summary of a real training run.
+/// Structured summary of a real training run, including the scenario
+/// lens it ran under — the same `kind`/`seed` columns as [`SimReport`],
+/// so one frozen plan replayed by `simulate` and `train` under the same
+/// `--scenario`/`--seed` is comparable line for line.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
     pub steps: usize,
@@ -338,6 +343,19 @@ pub struct TrainReport {
     pub store_puts: u64,
     pub store_gets: u64,
     pub logs: Vec<IterLog>,
+    /// The scenario lens and its seed (mirrors `SimReport`).
+    pub scenario: ScenarioSpec,
+    pub seed: u64,
+    /// Cold-start seconds charged across all generations.
+    pub cold_start_total_s: f64,
+    /// The platform/tier base cold-start charge per generation (what an
+    /// unperturbed run would have paid).
+    pub cold_start_base_s: f64,
+    /// The deterministic virtual tick (scenario runs); `None` = the
+    /// wall-clock lifecycle.
+    pub virtual_iter_s: Option<f64>,
+    /// Per-worker lifecycle + lens stats, in worker-id order.
+    pub workers: Vec<WorkerStats>,
 }
 
 impl TrainReport {
@@ -356,8 +374,40 @@ impl TrainReport {
             restarts: raw.restarts,
             store_puts: raw.store_put_gets.0,
             store_gets: raw.store_put_gets.1,
+            scenario: cfg.scenario.clone(),
+            seed: cfg.scenario_seed,
+            cold_start_total_s: raw.cold_start_total_s(),
+            cold_start_base_s: cfg.cold_start_s,
+            virtual_iter_s: cfg.virtual_iter_s,
+            workers: raw.workers,
             logs: raw.logs,
         }
+    }
+
+    /// Observed scenario slowdown over the unperturbed timeline,
+    /// percent — the train-path analogue of
+    /// [`SimReport::scenario_overhead_pct`]. Defined on the virtual
+    /// clock (scenario runs). `wall_s` is the slowest worker's elapsed
+    /// time, so the baseline is **that same worker's** unperturbed
+    /// timeline — `steps × tick` plus the base cold-start charges of
+    /// its own generations — isolating what the scenario added (lens
+    /// stretch + drawn delays) without billing the platform's ordinary
+    /// cold starts to the scenario or mixing two different workers'
+    /// timelines.
+    pub fn scenario_overhead_pct(&self) -> Option<f64> {
+        self.virtual_iter_s.map(|tick| {
+            let gating = self
+                .workers
+                .iter()
+                .max_by(|a, b| {
+                    a.virtual_elapsed_s.total_cmp(&b.virtual_elapsed_s)
+                })
+                .map(|w| w.generations as f64)
+                .unwrap_or(0.0);
+            let baseline =
+                self.steps as f64 * tick + gating * self.cold_start_base_s;
+            (self.wall_s / baseline - 1.0) * 100.0
+        })
     }
 }
 
@@ -376,10 +426,90 @@ impl Report for TrainReport {
             "store put/get".to_string(),
             format!("{}/{}", self.store_puts, self.store_gets),
         ]);
-        vec![t]
+        t.row([
+            "scenario".to_string(),
+            format!("{} seed={}", self.scenario.name(), self.seed),
+        ]);
+        t.row([
+            "cold-start charged".to_string(),
+            secs(self.cold_start_total_s),
+        ]);
+        if let Some(pct) = self.scenario_overhead_pct() {
+            t.row([
+                "scenario overhead".to_string(),
+                format!("{pct:+.1}%"),
+            ]);
+        }
+        let mut tables = vec![t];
+        if !self.scenario.is_deterministic() {
+            let mut lens = Table::new("scenario lens (per worker)").header([
+                "worker", "stage", "rep", "gens", "cold", "compute×",
+                "bandwidth×",
+            ]);
+            for w in &self.workers {
+                lens.row([
+                    w.worker_id.to_string(),
+                    w.stage.to_string(),
+                    w.replica.to_string(),
+                    w.generations.to_string(),
+                    secs(w.cold_start_s),
+                    format!("{:.3}", w.lens.compute_mult),
+                    format!("{:.3}", w.lens.bandwidth_mult),
+                ]);
+            }
+            tables.push(lens);
+        }
+        tables
     }
 
     fn to_json(&self) -> Json {
+        let kind = self.scenario.name();
+        let mut scenario = vec![
+            ("kind", Json::str(kind.as_str())),
+            ("seed", Json::Num(self.seed as f64)),
+        ];
+        if !self.scenario.is_deterministic() {
+            scenario.push((
+                "cold_start_total_s",
+                Json::Num(self.cold_start_total_s),
+            ));
+            if let Some(pct) = self.scenario_overhead_pct() {
+                scenario.push(("overhead_pct", Json::Num(pct)));
+            }
+            scenario.push((
+                "workers",
+                Json::Arr(
+                    self.workers
+                        .iter()
+                        .map(|w| {
+                            Json::obj(vec![
+                                ("worker", Json::Num(w.worker_id as f64)),
+                                ("stage", Json::Num(w.stage as f64)),
+                                ("replica", Json::Num(w.replica as f64)),
+                                ("restarts", Json::Num(w.restarts as f64)),
+                                (
+                                    "generations",
+                                    Json::Num(w.generations as f64),
+                                ),
+                                ("cold_start_s", Json::Num(w.cold_start_s)),
+                                (
+                                    "compute_mult",
+                                    Json::Num(w.lens.compute_mult),
+                                ),
+                                (
+                                    "bandwidth_mult",
+                                    Json::Num(w.lens.bandwidth_mult),
+                                ),
+                                (
+                                    "latency_mult",
+                                    Json::Num(w.lens.latency_mult),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
         Json::obj(vec![
             ("steps", Json::Num(self.steps as f64)),
             ("dp", Json::Num(self.dp as f64)),
@@ -396,6 +526,7 @@ impl Report for TrainReport {
                     ("gets", Json::Num(self.store_gets as f64)),
                 ]),
             ),
+            ("scenario", Json::obj(scenario)),
             (
                 "loss_curve",
                 Json::Arr(

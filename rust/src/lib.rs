@@ -37,6 +37,7 @@ pub mod planner;
 pub mod platform;
 pub mod profiler;
 pub mod runtime;
+pub mod scenario;
 pub mod simcore;
 pub mod trainer;
 pub mod util;

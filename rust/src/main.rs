@@ -75,10 +75,10 @@ the unified config flags (--config file.json --model <name>
 --merge-layers <n> --merge-criterion compute|params|activations
 --sync pipelined|scatter-reduce --bandwidth-scale <x>
 --chunk-bytes <n> --chunks-in-flight <n> --steps <n> --lr <x>
---lifetime <s> --artifacts <dir>); simulate alone adds the scenario
-lens (--scenario deterministic|cold-start|straggler|bandwidth-jitter
---seed <n>); profile takes just --artifacts, fig just --format.
-Unknown flags are errors.
+--lifetime <s> --artifacts <dir>); simulate and train add the scenario
+lens (--scenario deterministic|cold-start|straggler|bandwidth-jitter,
+composable as e.g. cold-start+jitter, --seed <n>); profile takes just
+--artifacts, fig just --format. Unknown flags are errors.
 
 COMMANDS:
   plan      [--out plan.json]
@@ -90,19 +90,26 @@ COMMANDS:
             (--scenario/--seed perturb the simulation, deterministic
             per seed: cold starts, stragglers, bandwidth jitter)
   train     [--plan plan.json] [--dp n] [--mu n]
-            real end-to-end training over the AOT artifacts; --plan
-            derives dp/μ/sync/chunking from the artifact, flags are
-            explicit overrides
+            [--scenario <name>] [--seed <n>]
+            real end-to-end training over the AOT artifacts (or the
+            built-in model: --artifacts builtin:tiny); --plan derives
+            dp/μ/sync/chunking from the artifact, flags are explicit
+            overrides; --scenario threads the same seeded draws the
+            simulator uses into the real path (per-worker storage
+            lens, scenario-scaled cold starts, deterministic virtual
+            lifecycle — the report replays byte-identically per seed)
   profile   [--artifacts dir]
             profile AOT stages through PJRT
   baseline  evaluate LambdaML / HybridPS (+GA) baselines
   fig       <fig1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table3>
             regenerate a paper figure/table (also: cargo bench)
 
-The plan artifact closes the paper's §3.1 loop in one file:
+The plan artifact closes the paper's §3.1 loop in one file, and one
+frozen plan replays under both engines through an identical lens:
   funcpipe plan --model amoebanet-d18 --batch 64 --out plan.json
-  funcpipe simulate --plan plan.json
-  funcpipe train --plan plan.json        # no manual --dp/--mu"
+  funcpipe simulate --plan plan.json --scenario straggler --seed 7
+  funcpipe train --plan plan.json --scenario straggler --seed 7 \\
+      --artifacts builtin:tiny       # no manual --dp/--mu"
     );
 }
 
@@ -124,22 +131,16 @@ fn cmd_plan(flags: &HashMap<String, String>, format: Format) -> Result<()> {
 fn cmd_simulate(flags: &HashMap<String, String>, format: Format) -> Result<()> {
     let report = if let Some(path) = flags.get("plan") {
         // the artifact freezes the config; the scenario lens stays
-        // selectable per simulation
+        // selectable per simulation (reset-then-apply: a plain
+        // `simulate --plan` gives the deterministic Table-3 reference)
         cli::only_flags(
             flags,
             &["plan", "format", "scenario", "seed"],
             "simulate --plan",
         )?;
         let artifact = PlanArtifact::load(path)?;
-        let mut cfg = artifact.config.clone();
-        // whatever lens the planning session happened to carry is
-        // metadata, not a request: a plain `simulate --plan` must give
-        // the deterministic Table-3 reference, and only explicit
-        // --scenario/--seed flags opt into a perturbed pass
-        cfg.scenario = funcpipe::simcore::ScenarioModel::Deterministic;
-        cfg.seed = 0;
-        cli::apply_scenario_flags(&mut cfg, flags)?;
-        let exp = Experiment::new(cfg)?;
+        let exp =
+            Experiment::new(cli::lens_config_from_artifact(&artifact, flags)?)?;
         exp.simulate(&artifact)?
     } else {
         let exp = Experiment::new(cli::config_from_flags(flags)?)?;
@@ -155,8 +156,12 @@ fn cmd_train(flags: &HashMap<String, String>, format: Format) -> Result<()> {
     cli::check_plan_conflicts(flags)?;
     let overrides = cli::train_overrides_from_flags(flags)?;
     let (exp, artifact) = if let Some(path) = flags.get("plan") {
+        // same lens policy as `simulate --plan`: a plain `train --plan`
+        // runs unperturbed, only explicit flags opt into the injector
         let a = PlanArtifact::load(path)?;
-        (Experiment::from_artifact(&a)?, Some(a))
+        let exp =
+            Experiment::new(cli::lens_config_from_artifact(&a, flags)?)?;
+        (exp, Some(a))
     } else {
         (Experiment::new(cli::config_from_flags(flags)?)?, None)
     };

@@ -19,7 +19,7 @@ use crate::model::{ModelProfile, Plan};
 use crate::pipeline::schedule::build_schedule;
 use crate::pipeline::task::TaskKind;
 use crate::platform::PlatformSpec;
-use crate::simcore::{execute, FlowGraph, Node, ScenarioModel};
+use crate::simcore::{execute, FlowGraph, Node, ScenarioModel, ScenarioSpec};
 
 /// Simulation output.
 #[derive(Debug, Clone)]
@@ -52,23 +52,25 @@ pub fn simulate_iteration(
         platform,
         plan,
         sync_alg,
-        ScenarioModel::Deterministic,
+        &ScenarioSpec::deterministic(),
         0,
     )
 }
 
-/// Simulate one iteration under a seeded [`ScenarioModel`] — the
-/// scenario-lab entry point behind `funcpipe simulate --scenario
-/// <name> --seed <n>`. Deterministic in `(scenario, seed)`: identical
-/// inputs give bit-identical results (the draws happen in worker-/
-/// node-id order inside [`ScenarioModel::apply`], never from unordered
-/// iteration).
+/// Simulate one iteration under a seeded [`ScenarioSpec`] (a single
+/// [`ScenarioModel`] or a `+`-composite) — the scenario-lab entry point
+/// behind `funcpipe simulate --scenario <name> --seed <n>`.
+/// Deterministic in `(scenario, seed)`: identical inputs give
+/// bit-identical results (the draws happen in worker-/node-id order
+/// inside [`ScenarioModel::apply`], never from unordered iteration, and
+/// composite components apply in canonical order from independent
+/// tagged streams).
 pub fn simulate_iteration_scenario(
     model: &ModelProfile,
     platform: &PlatformSpec,
     plan: &Plan,
     sync_alg: SyncAlgorithm,
-    scenario: ScenarioModel,
+    scenario: &ScenarioSpec,
     seed: u64,
 ) -> SimResult {
     let run = |with_sync: bool| -> f64 {
@@ -104,12 +106,13 @@ pub fn simulate_iteration_noisy(
     jitter: Option<(u64, f64)>,
 ) -> SimResult {
     let (scenario, seed) = match jitter {
-        None => (ScenarioModel::Deterministic, 0),
-        Some((seed, sigma)) => {
-            (ScenarioModel::BandwidthJitter { sigma }, seed)
-        }
+        None => (ScenarioSpec::deterministic(), 0),
+        Some((seed, sigma)) => (
+            ScenarioSpec::from_model(ScenarioModel::BandwidthJitter { sigma }),
+            seed,
+        ),
     };
-    simulate_iteration_scenario(model, platform, plan, sync_alg, scenario, seed)
+    simulate_iteration_scenario(model, platform, plan, sync_alg, &scenario, seed)
 }
 
 /// Translate one iteration of `plan` into a [`FlowGraph`].
@@ -305,18 +308,23 @@ mod tests {
             stage_tiers: vec![7, 7],
             n_micro_global: 8,
         };
-        for name in ["cold-start", "straggler", "bandwidth-jitter"] {
-            let s = ScenarioModel::parse(name).unwrap();
+        for name in [
+            "cold-start",
+            "straggler",
+            "bandwidth-jitter",
+            "cold-start+straggler+bandwidth-jitter",
+        ] {
+            let s = ScenarioSpec::parse(name).unwrap();
             let a = simulate_iteration_scenario(
-                &m, &p, &plan, SyncAlgorithm::PipelinedScatterReduce, s, 7,
+                &m, &p, &plan, SyncAlgorithm::PipelinedScatterReduce, &s, 7,
             );
             let b = simulate_iteration_scenario(
-                &m, &p, &plan, SyncAlgorithm::PipelinedScatterReduce, s, 7,
+                &m, &p, &plan, SyncAlgorithm::PipelinedScatterReduce, &s, 7,
             );
             assert_eq!(a.t_iter.to_bits(), b.t_iter.to_bits(), "{name}");
             assert_eq!(a.t_nosync.to_bits(), b.t_nosync.to_bits(), "{name}");
             let c = simulate_iteration_scenario(
-                &m, &p, &plan, SyncAlgorithm::PipelinedScatterReduce, s, 8,
+                &m, &p, &plan, SyncAlgorithm::PipelinedScatterReduce, &s, 8,
             );
             assert_ne!(
                 a.t_iter.to_bits(),
@@ -347,7 +355,9 @@ mod tests {
             &p,
             &plan,
             SyncAlgorithm::PipelinedScatterReduce,
-            ScenarioModel::BandwidthJitter { sigma: 0.15 },
+            &ScenarioSpec::from_model(ScenarioModel::BandwidthJitter {
+                sigma: 0.15,
+            }),
             11,
         );
         assert_eq!(a.t_iter.to_bits(), b.t_iter.to_bits());

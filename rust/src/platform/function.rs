@@ -34,6 +34,12 @@ pub struct FunctionInstance {
     pub generation: u32,
     started: Instant,
     lifetime_s: f64,
+    /// Deterministic age since this generation started, seconds. `None`
+    /// = wall-clock mode (the historical behaviour); advancing the
+    /// clock via [`FunctionInstance::advance_virtual`] switches the
+    /// instance into virtual mode, where the scenario Injector owns
+    /// time and replays are exact.
+    virtual_age_s: Option<f64>,
 }
 
 impl FunctionInstance {
@@ -53,6 +59,7 @@ impl FunctionInstance {
             generation: 0,
             started: Instant::now(),
             lifetime_s,
+            virtual_age_s: None,
         }
     }
 
@@ -60,8 +67,21 @@ impl FunctionInstance {
         self.state = FunctionState::Running;
     }
 
+    /// Advance the deterministic virtual clock by `dt` seconds. The
+    /// first call switches the instance from wall-clock to virtual
+    /// aging for the rest of its life (a mixed clock would make the
+    /// checkpoint schedule depend on the host again).
+    pub fn advance_virtual(&mut self, dt: f64) {
+        *self.virtual_age_s.get_or_insert(0.0) += dt;
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        self.virtual_age_s.is_some()
+    }
+
     pub fn age_s(&self) -> f64 {
-        self.started.elapsed().as_secs_f64()
+        self.virtual_age_s
+            .unwrap_or_else(|| self.started.elapsed().as_secs_f64())
     }
 
     pub fn remaining_s(&self) -> f64 {
@@ -78,11 +98,16 @@ impl FunctionInstance {
         self.remaining_s() <= 0.0
     }
 
-    /// Restart as a fresh instance (new container, same role).
+    /// Restart as a fresh instance (new container, same role). A
+    /// virtual-mode instance stays virtual with its new generation's
+    /// age reset to zero.
     pub fn restart(&mut self) {
         self.generation += 1;
         self.started = Instant::now();
         self.state = FunctionState::Starting;
+        if self.virtual_age_s.is_some() {
+            self.virtual_age_s = Some(0.0);
+        }
     }
 
     /// Unique key prefix for this worker's objects in storage.
@@ -116,6 +141,27 @@ mod tests {
         f.mark_running();
         assert!(!f.should_checkpoint(1.0));
         assert!(f.should_checkpoint(200.0));
+    }
+
+    #[test]
+    fn virtual_clock_is_deterministic_and_resets_on_restart() {
+        let mut f = FunctionInstance::launch(0, 0, 0, 0, 10.0);
+        f.mark_running();
+        assert!(!f.is_virtual());
+        f.advance_virtual(4.0);
+        assert!(f.is_virtual());
+        assert_eq!(f.age_s(), 4.0);
+        assert_eq!(f.remaining_s(), 6.0);
+        assert!(!f.should_checkpoint(5.0));
+        f.advance_virtual(1.5);
+        assert!(f.should_checkpoint(5.0));
+        f.restart();
+        assert!(f.is_virtual(), "restart keeps the virtual clock");
+        assert_eq!(f.age_s(), 0.0);
+        assert_eq!(f.generation, 1);
+        // wall time passing does not age a virtual instance
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(f.age_s(), 0.0);
     }
 
     #[test]

@@ -175,15 +175,30 @@ impl ThrottledStore {
         Self { inner, uplink_bps, downlink_bps, latency }
     }
 
-    fn transfer_sleep(&self, bytes: usize, bps: f64) {
+    /// Scale this handle by a scenario lens: bandwidth multiplied (so a
+    /// multiplier < 1 slows the worker), latency multiplied. How the
+    /// [`Injector`](crate::scenario::Injector) gives each worker its own
+    /// perturbed "NIC" over the shared bucket.
+    pub fn scaled(mut self, bandwidth_mult: f64, latency_mult: f64) -> Self {
+        self.uplink_bps *= bandwidth_mult;
+        self.downlink_bps *= bandwidth_mult;
+        self.latency = Duration::from_secs_f64(
+            self.latency.as_secs_f64() * latency_mult,
+        );
+        self
+    }
+
+    /// Simulated duration of moving `bytes` through a `bps` link.
+    fn transfer_time(&self, bytes: usize, bps: f64) -> Duration {
         if bps.is_finite() && bps > 0.0 {
-            let secs = bytes as f64 / bps;
-            std::thread::sleep(
-                self.latency + Duration::from_secs_f64(secs),
-            );
+            self.latency + Duration::from_secs_f64(bytes as f64 / bps)
         } else {
-            std::thread::sleep(self.latency);
+            self.latency
         }
+    }
+
+    fn transfer_sleep(&self, bytes: usize, bps: f64) {
+        std::thread::sleep(self.transfer_time(bytes, bps));
     }
 }
 
@@ -200,8 +215,24 @@ impl ObjectStore for ThrottledStore {
     }
 
     fn get_blocking(&self, key: &str, timeout: Duration) -> Result<Arc<Vec<u8>>> {
+        // Budget the simulated transfer *inside* the caller's deadline:
+        // historically the inner store could consume the full timeout
+        // and the transfer sleep then stacked on top, so the effective
+        // deadline overshot by up to latency + len/bps. Now the wait and
+        // the transfer share one deadline, and exceeding it fails with
+        // the same timeout error class the inner store uses.
+        let start = Instant::now();
         let v = self.inner.get_blocking(key, timeout)?;
-        self.transfer_sleep(v.len(), self.downlink_bps);
+        let transfer = self.transfer_time(v.len(), self.downlink_bps);
+        let remaining = timeout.saturating_sub(start.elapsed());
+        if transfer > remaining {
+            std::thread::sleep(remaining);
+            bail!(
+                "get_blocking timed out mid-transfer of {key:?} \
+                 ({transfer:?} needed, {remaining:?} left in the deadline)"
+            );
+        }
+        std::thread::sleep(transfer);
         Ok(v)
     }
 
@@ -279,6 +310,48 @@ mod tests {
         s.put("b", vec![0u8; 200]).unwrap();
         assert_eq!(s.total_bytes(), 200);
         assert_eq!(s.high_water_bytes(), 200);
+    }
+
+    #[test]
+    fn throttled_get_blocking_respects_the_deadline() {
+        let inner = Arc::new(MemStore::new());
+        inner.put("big", vec![0u8; 30_000]).unwrap(); // 0.3s at 0.1 MB/s
+        let t = ThrottledStore::new(
+            inner,
+            f64::INFINITY,
+            100_000.0,
+            Duration::from_millis(0),
+        );
+        let start = Instant::now();
+        let err = t.get_blocking("big", Duration::from_millis(50));
+        let dt = start.elapsed().as_secs_f64();
+        assert!(err.is_err(), "a transfer larger than the deadline must fail");
+        assert!(
+            dt < 0.25,
+            "deadline overshot: waited {dt}s for a 50ms timeout"
+        );
+        // a transfer that fits the deadline still succeeds
+        let got = t.get_blocking("big", Duration::from_secs(30)).unwrap();
+        assert_eq!(got.len(), 30_000);
+    }
+
+    #[test]
+    fn scaled_lens_slows_the_handle() {
+        let inner = Arc::new(MemStore::new());
+        inner.put("x", vec![0u8; 100_000]).unwrap();
+        let t = ThrottledStore::new(
+            inner,
+            2_000_000.0,
+            2_000_000.0,
+            Duration::from_millis(2),
+        )
+        .scaled(0.5, 3.0); // half the bandwidth, triple the latency
+        assert!((t.uplink_bps - 1_000_000.0).abs() < 1e-6);
+        assert!((t.downlink_bps - 1_000_000.0).abs() < 1e-6);
+        assert_eq!(t.latency, Duration::from_millis(6));
+        let start = Instant::now();
+        let _ = t.get("x").unwrap(); // 0.1s at the scaled 1 MB/s
+        assert!(start.elapsed().as_secs_f64() >= 0.09);
     }
 
     #[test]

@@ -14,6 +14,11 @@ pub struct MemoryTier {
     pub bandwidth_bps: f64,
     /// Relative compute speed (1.0 == one reference vCPU).
     pub compute_speed: f64,
+    /// Cold-start latency when provisioning a container of this tier,
+    /// seconds. The Function Manager's checkpoint/restart path charges
+    /// it once per generation (§3.1 step 8); uniform across tiers on
+    /// today's presets (the platform's measured base).
+    pub cold_start_s: f64,
 }
 
 impl MemoryTier {
@@ -73,6 +78,7 @@ impl PlatformSpec {
                 mem_mb: m,
                 bandwidth_bps: 70.0e6 * (m as f64 / 1769.0).min(1.0),
                 compute_speed: m as f64 / 1769.0,
+                cold_start_s: 1.5,
             })
             .collect();
         Self {
@@ -99,6 +105,7 @@ impl PlatformSpec {
                 mem_mb: m,
                 bandwidth_bps: 100.0e6 * (m as f64 / 2048.0).min(1.0),
                 compute_speed: m as f64 / 1769.0,
+                cold_start_s: 1.0,
             })
             .collect();
         Self {
@@ -129,6 +136,7 @@ impl PlatformSpec {
                 mem_mb: m,
                 bandwidth_bps: 400.0e6,
                 compute_speed: 1.0,
+                cold_start_s: 0.01,
             })
             .collect();
         Self {
@@ -225,6 +233,24 @@ mod tests {
         let crowded = p.effective_bandwidth(7, 32);
         assert!(crowded < alone);
         assert!(crowded >= alone * p.contention_floor - 1.0);
+    }
+
+    #[test]
+    fn tier_cold_starts_match_platform_base() {
+        for p in [
+            PlatformSpec::aws_lambda(),
+            PlatformSpec::alibaba_fc(),
+            PlatformSpec::local_sim(),
+        ] {
+            for t in &p.tiers {
+                assert!(
+                    (t.cold_start_s - p.cold_start_s).abs() < 1e-12,
+                    "{}: tier {}MB cold start drifted from the base",
+                    p.name,
+                    t.mem_mb
+                );
+            }
+        }
     }
 
     #[test]

@@ -62,9 +62,30 @@ pub struct Manifest {
     pub stages: Vec<StageEntry>,
 }
 
+/// Sentinel `artifacts_dir` selecting the built-in tiny model that the
+/// native (no-`xla-rt`) runtime executes in pure rust — the path that
+/// lets `train` run end-to-end in the default offline build (CI smoke,
+/// scenario-replay tests) without `make artifacts`.
+pub const BUILTIN_TINY: &str = "builtin:tiny";
+
+/// File-name marker for stages the native runtime executes (no AOT
+/// files on disk).
+pub const NATIVE_FILE: &str = "native";
+
 impl Manifest {
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
+        if dir.to_str() == Some(BUILTIN_TINY) {
+            // only the native executor understands the marker files; the
+            // PJRT build would otherwise chase a literal "native" path
+            #[cfg(feature = "xla-rt")]
+            bail!(
+                "{BUILTIN_TINY} runs on the native executor; build \
+                 without --features xla-rt to use it"
+            );
+            #[cfg(not(feature = "xla-rt"))]
+            return Ok(Self::builtin_tiny());
+        }
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
         let j = Json::parse(&text).context("parsing manifest.json")?;
@@ -128,6 +149,66 @@ impl Manifest {
         };
         m.validate()?;
         Ok(m)
+    }
+
+    /// The built-in tiny LM: embed → blocks → head over a 64-token
+    /// vocabulary with d_model 16 — the exact three-stage shape of the
+    /// real AOT artifacts, small enough that the native executor's
+    /// pure-rust linear algebra trains it in milliseconds. Every file
+    /// reference is the [`NATIVE_FILE`] marker; initial parameters are
+    /// generated deterministically by the native runtime instead of
+    /// being read from `init` files.
+    pub fn builtin_tiny() -> Self {
+        let (vocab, d) = (64usize, 16usize);
+        let mk = |index: usize,
+                  name: &str,
+                  kind: &str,
+                  p_name: &str,
+                  rows: usize,
+                  cols: usize,
+                  input_shape: Vec<usize>,
+                  input_dtype: &str,
+                  output_shape: Vec<usize>| {
+            StageEntry {
+                index,
+                name: name.to_string(),
+                kind: kind.to_string(),
+                params: vec![ParamSpec {
+                    name: p_name.to_string(),
+                    shape: vec![rows, cols],
+                    numel: rows * cols,
+                }],
+                flat_param_size: rows * cols,
+                input_shape,
+                input_dtype: input_dtype.to_string(),
+                output_shape,
+                fwd_file: NATIVE_FILE.into(),
+                bwd_file: NATIVE_FILE.into(),
+                sgd_file: NATIVE_FILE.into(),
+                merge2_file: NATIVE_FILE.into(),
+                init_file: NATIVE_FILE.into(),
+                fwd_kept: Vec::new(),
+                bwd_kept: Vec::new(),
+                sgd_kept: Vec::new(),
+                merge2_kept: Vec::new(),
+            }
+        };
+        let m = Self {
+            dir: PathBuf::from(BUILTIN_TINY),
+            n_stages: 3,
+            total_params: vocab * d + d * d + d * vocab,
+            micro_batch: 2,
+            seq_len: 8,
+            vocab,
+            d_model: d,
+            stages: vec![
+                mk(0, "embed", "embed", "emb", vocab, d, vec![2, 8], "i32", vec![2, 8, d]),
+                mk(1, "blocks", "blocks", "w", d, d, vec![2, 8, d], "f32", vec![2, 8, d]),
+                mk(2, "head", "head", "wo", d, vocab, vec![2, 8, d], "f32", vec![2, 8, vocab]),
+            ],
+        };
+        debug_assert!(m.validate().is_ok());
+        m
     }
 
     fn validate(&self) -> Result<()> {
@@ -221,6 +302,22 @@ mod tests {
         // embedding init is non-degenerate
         let flat: f32 = params[0].iter().map(|x| x.abs()).sum();
         assert!(flat > 0.0);
+    }
+
+    #[test]
+    fn builtin_tiny_is_a_valid_native_manifest() {
+        let m = Manifest::load(BUILTIN_TINY).unwrap();
+        // every stage carries the native marker load_stage gates on
+        assert!(m.stages.iter().all(|s| s.fwd_file == NATIVE_FILE));
+        assert_eq!(m.n_stages, 3);
+        assert_eq!(m.stages[0].kind, "embed");
+        assert_eq!(m.stages.last().unwrap().kind, "head");
+        assert_eq!(
+            m.total_params,
+            m.stages.iter().map(|s| s.flat_param_size).sum::<usize>()
+        );
+        assert_eq!(m.vocab, 64);
+        assert_eq!(m.micro_batch * m.seq_len, 16);
     }
 
     #[test]

@@ -9,15 +9,16 @@ pub mod artifact;
 
 /// Real PJRT execution; needs the `xla` bindings, which the offline
 /// registry cannot provide. Built only with `--features xla-rt`; the
-/// default build substitutes [`stage_stub`] whose `Runtime::cpu()` fails
-/// fast, so everything artifact-gated (trainer, profiler, e2e tests)
-/// skips itself cleanly.
+/// default build substitutes [`stage_native`], which executes the
+/// built-in tiny model (`--artifacts builtin:tiny`) in pure rust so
+/// `train` runs end-to-end offline, and fails fast with a clear message
+/// when pointed at real AOT artifacts.
 #[cfg(feature = "xla-rt")]
 pub mod stage;
 
 #[cfg(not(feature = "xla-rt"))]
-#[path = "stage_stub.rs"]
+#[path = "stage_native.rs"]
 pub mod stage;
 
-pub use artifact::{Manifest, ParamSpec, StageEntry};
+pub use artifact::{Manifest, ParamSpec, StageEntry, BUILTIN_TINY};
 pub use stage::{Runtime, StageExec};

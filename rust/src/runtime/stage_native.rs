@@ -1,0 +1,465 @@
+//! Native runtime used when the `xla-rt` feature is off (the default in
+//! the offline build). It mirrors the public surface of
+//! [`stage`](super::stage) so every caller compiles, and — new since the
+//! scenario-injector work — it *executes* manifests whose stages carry
+//! the [`NATIVE_FILE`](super::artifact::NATIVE_FILE) marker (the
+//! [`builtin_tiny`](super::artifact::Manifest::builtin_tiny) model) in
+//! pure rust, so `train` runs end-to-end in the default build: the CI
+//! smoke and the train-path scenario-replay tests exercise the real
+//! coordinator/storage/collective stack without `make artifacts`.
+//!
+//! The native model is a linear LM with the same three-stage shape as
+//! the AOT artifacts: `embed` (a vocab×d table lookup), `blocks` (one
+//! d×d linear map, identity-initialized), `head` (d×vocab logits +
+//! softmax cross-entropy). Everything is single-threaded f32 loops in a
+//! fixed order with deterministically seeded initial parameters, so two
+//! independent runs produce bit-identical losses — the property the
+//! deterministic train-replay contract stands on. Real AOT artifacts
+//! still require `--features xla-rt`; loading them here fails fast with
+//! the historical message.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::artifact::{Manifest, StageEntry, NATIVE_FILE};
+use crate::util::rng::Rng;
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: rebuild with `--features xla-rt` (requires \
+     the xla bindings; see runtime/stage.rs). The native fallback only \
+     executes the built-in model (`--artifacts builtin:tiny`)";
+
+/// Stand-in for the process-wide PJRT client: a handle to the native
+/// executor.
+pub struct Runtime {}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {})
+    }
+
+    pub fn load_stage(
+        self: &Arc<Self>,
+        manifest: &Manifest,
+        entry: &StageEntry,
+    ) -> Result<StageExec> {
+        if entry.fwd_file != NATIVE_FILE {
+            bail!(UNAVAILABLE);
+        }
+        Ok(StageExec::native(manifest, entry))
+    }
+}
+
+/// A loaded native stage: parameters plus the pure-rust executables.
+pub struct StageExec {
+    pub entry: StageEntry,
+    pub micro_batch: usize,
+    pub seq_len: usize,
+    /// Parameter tensors (f32, row-major) in manifest order.
+    pub params: Vec<Vec<f32>>,
+    vocab: usize,
+    d_model: usize,
+}
+
+impl StageExec {
+    /// Deterministically initialized native stage. The seed is a fixed
+    /// function of the stage index so every replica (and every run)
+    /// starts from identical parameters.
+    fn native(manifest: &Manifest, entry: &StageEntry) -> Self {
+        let (vocab, d) = (manifest.vocab, manifest.d_model);
+        let mut rng = Rng::new(0xF1A7_1A7E ^ ((entry.index as u64) << 8));
+        let init: Vec<f32> = match entry.kind.as_str() {
+            // embeddings: the feature scale driving every gradient
+            "embed" => (0..entry.flat_param_size)
+                .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                .collect(),
+            // identity map so the signal (and its gradient) flows
+            // through the middle stage from step 0
+            "blocks" => (0..entry.flat_param_size)
+                .map(|i| if i % (d + 1) == 0 { 1.0 } else { 0.0 })
+                .collect(),
+            // near-zero logits: initial loss is ~ln(vocab)
+            _ => (0..entry.flat_param_size)
+                .map(|_| rng.uniform(-0.1, 0.1) as f32)
+                .collect(),
+        };
+        Self {
+            entry: entry.clone(),
+            micro_batch: manifest.micro_batch,
+            seq_len: manifest.seq_len,
+            params: vec![init],
+            vocab,
+            d_model: d,
+        }
+    }
+
+    fn weights(&self) -> &[f32] {
+        &self.params[0]
+    }
+
+    /// embed forward: `out[i, :] = emb[tokens[i], :]`.
+    pub fn fwd_tokens(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let d = self.d_model;
+        let emb = self.weights();
+        let mut out = vec![0.0f32; tokens.len() * d];
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            if t >= self.vocab {
+                bail!("token {t} out of vocab {}", self.vocab);
+            }
+            out[i * d..(i + 1) * d].copy_from_slice(&emb[t * d..(t + 1) * d]);
+        }
+        Ok(out)
+    }
+
+    /// embed backward: scatter-add of the upstream gradient rows.
+    pub fn bwd_tokens(&self, tokens: &[i32], gy: &[f32]) -> Result<Vec<f32>> {
+        let d = self.d_model;
+        if gy.len() != tokens.len() * d {
+            bail!("embed bwd shape: {} vs {}", gy.len(), tokens.len() * d);
+        }
+        let mut g = vec![0.0f32; self.entry.flat_param_size];
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            if t >= self.vocab {
+                bail!("token {t} out of vocab {}", self.vocab);
+            }
+            for j in 0..d {
+                g[t * d + j] += gy[i * d + j];
+            }
+        }
+        Ok(g)
+    }
+
+    /// blocks forward: `y = x · W` per position.
+    pub fn fwd_acts(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let d = self.d_model;
+        if x.len() % d != 0 {
+            bail!("blocks fwd shape: {} not a multiple of {d}", x.len());
+        }
+        let w = self.weights();
+        let n = x.len() / d;
+        let mut y = vec![0.0f32; x.len()];
+        for i in 0..n {
+            for a in 0..d {
+                let xv = x[i * d + a];
+                if xv == 0.0 {
+                    continue;
+                }
+                for b in 0..d {
+                    y[i * d + b] += xv * w[a * d + b];
+                }
+            }
+        }
+        Ok(y)
+    }
+
+    /// blocks backward: `(gW, gx)` with `gW = xᵀ·gy`, `gx = gy·Wᵀ`.
+    pub fn bwd_acts(&self, x: &[f32], gy: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let d = self.d_model;
+        if x.len() != gy.len() || x.len() % d != 0 {
+            bail!("blocks bwd shape: {} vs {}", x.len(), gy.len());
+        }
+        let w = self.weights();
+        let n = x.len() / d;
+        let mut gw = vec![0.0f32; d * d];
+        let mut gx = vec![0.0f32; x.len()];
+        for i in 0..n {
+            for a in 0..d {
+                let xv = x[i * d + a];
+                let mut acc = 0.0f32;
+                for b in 0..d {
+                    gw[a * d + b] += xv * gy[i * d + b];
+                    acc += gy[i * d + b] * w[a * d + b];
+                }
+                gx[i * d + a] = acc;
+            }
+        }
+        Ok((gw, gx))
+    }
+
+    /// head: per-position softmax cross-entropy over the vocabulary.
+    /// Returns the mean loss and, in the bwd variant, mean gradients.
+    fn head_pass(
+        &self,
+        x: &[f32],
+        targets: &[i32],
+        want_grads: bool,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let (d, v) = (self.d_model, self.vocab);
+        let n = targets.len();
+        if x.len() != n * d {
+            bail!("head shape: {} vs {}", x.len(), n * d);
+        }
+        let wo = self.weights();
+        let inv_n = 1.0f32 / n as f32;
+        let mut gwo = vec![0.0f32; if want_grads { d * v } else { 0 }];
+        let mut gx = vec![0.0f32; if want_grads { n * d } else { 0 }];
+        let mut loss = 0.0f32;
+        let mut logits = vec![0.0f32; v];
+        for i in 0..n {
+            let xi = &x[i * d..(i + 1) * d];
+            logits.iter_mut().for_each(|l| *l = 0.0);
+            for (a, &xv) in xi.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let row = &wo[a * v..(a + 1) * v];
+                for (l, &wv) in logits.iter_mut().zip(row) {
+                    *l += xv * wv;
+                }
+            }
+            let max = logits.iter().fold(f32::NEG_INFINITY, |m, &l| m.max(l));
+            let mut z = 0.0f32;
+            let mut probs = logits.clone();
+            for p in &mut probs {
+                *p = (*p - max).exp();
+                z += *p;
+            }
+            let t = targets[i] as usize;
+            if t >= v {
+                bail!("target {t} out of vocab {v}");
+            }
+            loss += -(probs[t] / z).max(1e-30).ln();
+            if want_grads {
+                // dl = (softmax − onehot) / n
+                for p in &mut probs {
+                    *p = *p / z * inv_n;
+                }
+                probs[t] -= inv_n;
+                for (a, &xv) in xi.iter().enumerate() {
+                    let row = &wo[a * v..(a + 1) * v];
+                    let mut acc = 0.0f32;
+                    for (b, (&dl, &wv)) in probs.iter().zip(row).enumerate() {
+                        gwo[a * v + b] += xv * dl;
+                        acc += dl * wv;
+                    }
+                    gx[i * d + a] = acc;
+                }
+            }
+        }
+        Ok((gwo, gx, loss * inv_n))
+    }
+
+    pub fn fwd_loss(&self, x: &[f32], targets: &[i32]) -> Result<f32> {
+        Ok(self.head_pass(x, targets, false)?.2)
+    }
+
+    pub fn bwd_loss(
+        &self,
+        x: &[f32],
+        targets: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        self.head_pass(x, targets, true)
+    }
+
+    /// Plain SGD over the flat parameter vector.
+    pub fn sgd_step(&mut self, flat_grads: &[f32], lr: f32) -> Result<()> {
+        if flat_grads.len() != self.entry.flat_param_size {
+            bail!(
+                "sgd grad size {} != {}",
+                flat_grads.len(),
+                self.entry.flat_param_size
+            );
+        }
+        let mut off = 0;
+        for p in &mut self.params {
+            for (w, &g) in p.iter_mut().zip(&flat_grads[off..off + p.len()]) {
+                *w -= lr * g;
+            }
+            off += p.len();
+        }
+        Ok(())
+    }
+
+    /// The grad_merge kernel's semantics: elementwise sum.
+    pub fn merge_grads(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        if a.len() != b.len() {
+            bail!("merge_grads size {} != {}", a.len(), b.len());
+        }
+        Ok(a.iter().zip(b).map(|(x, y)| x + y).collect())
+    }
+
+    pub fn flat_params(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.entry.flat_param_size);
+        for p in &self.params {
+            out.extend_from_slice(p);
+        }
+        out
+    }
+
+    pub fn set_flat_params(&mut self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.entry.flat_param_size {
+            bail!("param size {} != {}", flat.len(), self.entry.flat_param_size);
+        }
+        let mut off = 0;
+        for (i, spec) in self.entry.params.iter().enumerate() {
+            self.params[i].copy_from_slice(&flat[off..off + spec.numel]);
+            off += spec.numel;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stages() -> (Manifest, Vec<StageExec>) {
+        let m = Manifest::builtin_tiny();
+        let rt = Arc::new(Runtime::cpu().unwrap());
+        let s = m
+            .stages
+            .iter()
+            .map(|e| rt.load_stage(&m, e).unwrap())
+            .collect();
+        (m, s)
+    }
+
+    #[test]
+    fn non_native_manifests_still_fail_fast() {
+        let m = Manifest::builtin_tiny();
+        let mut entry = m.stages[0].clone();
+        entry.fwd_file = "stage0_fwd.hlo".into();
+        let rt = Arc::new(Runtime::cpu().unwrap());
+        assert!(rt.load_stage(&m, &entry).is_err());
+    }
+
+    #[test]
+    fn init_is_deterministic_across_loads() {
+        let (_, a) = stages();
+        let (_, b) = stages();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.flat_params(), y.flat_params());
+        }
+    }
+
+    #[test]
+    fn forward_shapes_chain() {
+        let (m, s) = stages();
+        let tokens: Vec<i32> = (0..(m.micro_batch * m.seq_len) as i32).map(|i| i % 64).collect();
+        let h0 = s[0].fwd_tokens(&tokens).unwrap();
+        assert_eq!(h0.len(), tokens.len() * m.d_model);
+        let h1 = s[1].fwd_acts(&h0).unwrap();
+        assert_eq!(h1.len(), h0.len());
+        let targets: Vec<i32> = tokens.iter().map(|t| (t + 1) % 64).collect();
+        let loss = s[2].fwd_loss(&h1, &targets).unwrap();
+        // near-zero logits ⇒ loss ≈ ln(64)
+        assert!((loss - 64f32.ln()).abs() < 0.5, "loss {loss}");
+    }
+
+    #[test]
+    fn identity_blocks_pass_through() {
+        let (_, s) = stages();
+        let x: Vec<f32> = (0..32).map(|i| i as f32 * 0.1).collect();
+        let y = s[1].fwd_acts(&x).unwrap();
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn head_gradients_match_finite_differences() {
+        let (m, mut s) = stages();
+        let head = &mut s[2];
+        let n = 3usize;
+        let d = m.d_model;
+        let x: Vec<f32> = (0..n * d).map(|i| ((i * 7 % 13) as f32 - 6.0) * 0.1).collect();
+        let targets: Vec<i32> = vec![5, 40, 63];
+        let (gwo, gx, base) = head.bwd_loss(&x, &targets).unwrap();
+        let eps = 1e-3f32;
+        // parameter gradient: bump one weight
+        for &idx in &[0usize, d * 64 / 2 + 5, d * 64 - 1] {
+            let mut bumped = head.flat_params();
+            bumped[idx] += eps;
+            head.set_flat_params(&bumped).unwrap();
+            let plus = head.fwd_loss(&x, &targets).unwrap();
+            bumped[idx] -= 2.0 * eps;
+            head.set_flat_params(&bumped).unwrap();
+            let minus = head.fwd_loss(&x, &targets).unwrap();
+            bumped[idx] += eps;
+            head.set_flat_params(&bumped).unwrap();
+            let fd = (plus - minus) / (2.0 * eps);
+            assert!(
+                (fd - gwo[idx]).abs() < 5e-3,
+                "gwo[{idx}]: fd {fd} vs analytic {}",
+                gwo[idx]
+            );
+        }
+        // input gradient: bump one activation
+        let mut xp = x.clone();
+        xp[4] += eps;
+        let plus = head.fwd_loss(&xp, &targets).unwrap();
+        xp[4] -= 2.0 * eps;
+        let minus = head.fwd_loss(&xp, &targets).unwrap();
+        let fd = (plus - minus) / (2.0 * eps);
+        assert!((fd - gx[4]).abs() < 5e-3, "gx[4]: fd {fd} vs {}", gx[4]);
+        assert!(base.is_finite());
+    }
+
+    #[test]
+    fn blocks_gradients_match_finite_differences() {
+        let (m, mut s) = stages();
+        let d = m.d_model;
+        let x: Vec<f32> = (0..2 * d).map(|i| (i as f32 * 0.37).sin()).collect();
+        let gy: Vec<f32> = (0..2 * d).map(|i| (i as f32 * 0.11).cos()).collect();
+        let (gw, gx) = s[1].bwd_acts(&x, &gy).unwrap();
+        // loss L = <y, gy>; dL/dW and dL/dx must match finite differences
+        let loss_of = |stage: &StageExec, x: &[f32]| -> f32 {
+            stage
+                .fwd_acts(x)
+                .unwrap()
+                .iter()
+                .zip(&gy)
+                .map(|(a, b)| a * b)
+                .sum()
+        };
+        let eps = 1e-2f32;
+        let idx = d + 3; // W[1][3]
+        let mut w = s[1].flat_params();
+        w[idx] += eps;
+        s[1].set_flat_params(&w).unwrap();
+        let plus = loss_of(&s[1], &x);
+        w[idx] -= 2.0 * eps;
+        s[1].set_flat_params(&w).unwrap();
+        let minus = loss_of(&s[1], &x);
+        w[idx] += eps;
+        s[1].set_flat_params(&w).unwrap();
+        let fd = (plus - minus) / (2.0 * eps);
+        assert!((fd - gw[idx]).abs() < 1e-2, "gw: fd {fd} vs {}", gw[idx]);
+
+        let mut xp = x.clone();
+        xp[7] += eps;
+        let plus = loss_of(&s[1], &xp);
+        xp[7] -= 2.0 * eps;
+        let minus = loss_of(&s[1], &xp);
+        let fd = (plus - minus) / (2.0 * eps);
+        assert!((fd - gx[7]).abs() < 1e-2, "gx: fd {fd} vs {}", gx[7]);
+    }
+
+    #[test]
+    fn sgd_descends_the_head_loss() {
+        let (m, mut s) = stages();
+        let tokens: Vec<i32> =
+            (0..(m.micro_batch * m.seq_len) as i32).map(|i| (i * 5) % 64).collect();
+        let targets: Vec<i32> = tokens.iter().map(|t| (t * 3 + 1) % 64).collect();
+        let x = s[0].fwd_tokens(&tokens).unwrap();
+        let h = s[1].fwd_acts(&x).unwrap();
+        let mut last = f32::INFINITY;
+        for _ in 0..20 {
+            let (g, _, loss) = s[2].bwd_loss(&h, &targets).unwrap();
+            assert!(loss <= last + 1e-4, "loss rose: {last} -> {loss}");
+            last = loss;
+            s[2].sgd_step(&g, 0.5).unwrap();
+        }
+        assert!(last < 64f32.ln() * 0.9, "no learning: {last}");
+    }
+
+    #[test]
+    fn merge_grads_is_elementwise_sum() {
+        let (_, s) = stages();
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![0.5f32, -2.0, 1.0];
+        assert_eq!(s[0].merge_grads(&a, &b).unwrap(), vec![1.5, 0.0, 4.0]);
+        assert!(s[0].merge_grads(&a, &b[..2]).is_err());
+    }
+}

@@ -1,0 +1,322 @@
+//! The scenario **Injector**: the runtime half of the scenario lab.
+//!
+//! PR 3's [`ScenarioModel`]s perturb the *simulator* (a seeded pass over
+//! the [`FlowGraph`](crate::simcore::FlowGraph) before execution). This
+//! module threads the same seeded draws into the **real** execution
+//! path, so `train --scenario straggler --seed 7` replays the lifecycle
+//! the planner evaluated: [`ThrottledStore`](crate::platform::ThrottledStore)
+//! handles are scaled by per-worker bandwidth/latency multipliers, the
+//! Function Manager's checkpoint/restart path (§3.1 step 8) charges a
+//! scenario-scaled cold start per generation, and — because a scenario
+//! run's whole point is replayable comparison — the function lifecycle
+//! and the report's timeline run on a deterministic virtual clock
+//! instead of the wall clock (see `coordinator::worker`).
+//!
+//! Determinism contract (mirrors `simcore::scenario`):
+//! * every per-worker draw happens **strictly in worker-id order** at
+//!   construction, from `util::rng` streams tagged with the same xor
+//!   constants as the simulator — `cold-start` at seed 7 draws the
+//!   *identical* generation-0 delays the simulator applies to its
+//!   workers;
+//! * per-*generation* cold-start draws (the simulator only ever sees
+//!   generation 0) come from a stream keyed on `(worker, generation)`,
+//!   so they are independent of thread interleaving;
+//! * composite [`ScenarioSpec`]s apply components in canonical order,
+//!   each from its own tagged stream, so composing never changes the
+//!   draws a component would make alone.
+//!
+//! Real-path mapping of each lens (DESIGN.md §10): the simulator can
+//! stretch a worker's compute, but the real path executes real
+//! kernels, so a `straggler`'s compute factor maps onto its *storage*
+//! path (bandwidth divided by, latency multiplied by the factor) and
+//! onto the virtual clock; `bandwidth-jitter` draws one per-worker
+//! lognormal transfer factor (the simulator draws per node — the
+//! static per-worker form is the runtime analogue) plus the σ/3
+//! compute factor; `cold-start` adds exponential delays to every
+//! generation's cold start. Bandwidth multipliers only bite when the
+//! run has a finite `throttle`; the lens never touches correctness,
+//! only timing.
+
+use crate::simcore::{
+    cold_start_delays, straggler_factors, ScenarioModel, ScenarioSpec,
+    BANDWIDTH_JITTER_TAG, COLD_START_TAG,
+};
+use crate::util::rng::Rng;
+
+/// One worker's multiplicative lens on the real execution path.
+/// Identity (`1.0` everywhere) under the deterministic scenario.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkerLens {
+    /// Compute slowdown factor (≥ 1 under `straggler`): scales the
+    /// virtual per-iteration time and, through `bandwidth_mult` /
+    /// `latency_mult`, the worker's storage path.
+    pub compute_mult: f64,
+    /// Multiplies the worker's throttled uplink/downlink bandwidth
+    /// (< 1 slows the worker).
+    pub bandwidth_mult: f64,
+    /// Multiplies the worker's per-access storage latency.
+    pub latency_mult: f64,
+}
+
+impl WorkerLens {
+    pub const IDENTITY: WorkerLens =
+        WorkerLens { compute_mult: 1.0, bandwidth_mult: 1.0, latency_mult: 1.0 };
+}
+
+/// Seeded, deterministic perturbation provider for the real trainer.
+#[derive(Debug, Clone)]
+pub struct Injector {
+    spec: ScenarioSpec,
+    seed: u64,
+    lenses: Vec<WorkerLens>,
+    /// Generation-0 cold-start delays, drawn at construction from the
+    /// simulator's exact stream (empty unless `cold-start` is active).
+    cold_gen0: Vec<f64>,
+    cold_mean_s: Option<f64>,
+}
+
+impl Injector {
+    /// Draw every per-worker lens for `n_workers` workers (worker id =
+    /// `stage * dp + replica`, the `FunctionInstance::launch` id), in
+    /// worker-id order, component by component in canonical order.
+    pub fn new(spec: &ScenarioSpec, seed: u64, n_workers: usize) -> Self {
+        let mut lenses = vec![WorkerLens::IDENTITY; n_workers];
+        let mut cold_gen0 = Vec::new();
+        let mut cold_mean_s = None;
+        for component in spec.components() {
+            match *component {
+                ScenarioModel::Deterministic => {}
+                ScenarioModel::ColdStart { mean_s } => {
+                    // the simulator's exact per-worker delay stream
+                    cold_gen0 = cold_start_delays(seed, mean_s, n_workers);
+                    cold_mean_s = Some(mean_s);
+                }
+                ScenarioModel::Straggler { prob, slowdown } => {
+                    // the simulator's exact per-worker factor stream
+                    let factors =
+                        straggler_factors(seed, prob, slowdown, n_workers);
+                    for (lens, factor) in lenses.iter_mut().zip(factors) {
+                        lens.compute_mult *= factor;
+                        lens.bandwidth_mult /= factor;
+                        lens.latency_mult *= factor;
+                    }
+                }
+                ScenarioModel::BandwidthJitter { sigma } => {
+                    let mut rng = Rng::new(seed ^ BANDWIDTH_JITTER_TAG);
+                    for lens in &mut lenses {
+                        // lognormal around 1: a bandwidth dip stretches
+                        // transfers by `t`, compute by the σ/3 factor
+                        // (per worker — the runtime analogue of the
+                        // simulator's per-node draws, same tagged
+                        // stream)
+                        let t = (sigma * rng.normal()).exp();
+                        let c = (sigma / 3.0 * rng.normal()).exp();
+                        lens.bandwidth_mult /= t;
+                        lens.latency_mult *= t;
+                        lens.compute_mult *= c;
+                    }
+                }
+            }
+        }
+        Self { spec: spec.clone(), seed, lenses, cold_gen0, cold_mean_s }
+    }
+
+    /// An inactive injector (identity lenses, base cold starts only).
+    pub fn inactive(n_workers: usize) -> Self {
+        Self::new(&ScenarioSpec::deterministic(), 0, n_workers)
+    }
+
+    pub fn spec(&self) -> &ScenarioSpec {
+        &self.spec
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.lenses.len()
+    }
+
+    /// Whether any perturbation is active.
+    pub fn is_active(&self) -> bool {
+        !self.spec.is_deterministic()
+    }
+
+    pub fn worker(&self, worker: usize) -> WorkerLens {
+        self.lenses.get(worker).copied().unwrap_or(WorkerLens::IDENTITY)
+    }
+
+    /// Seconds a cold start charges `worker` at `generation`: the
+    /// platform/tier base plus, under `cold-start`, the exponential
+    /// draw. Generation 0 uses the simulator's exact per-worker stream;
+    /// later generations (which only the real path reaches) draw from a
+    /// `(worker, generation)`-keyed stream so the value is independent
+    /// of when other workers restart.
+    pub fn cold_start_s(&self, worker: usize, generation: u32, base_s: f64) -> f64 {
+        let extra = match self.cold_mean_s {
+            None => 0.0,
+            Some(mean_s) => {
+                if generation == 0 {
+                    self.cold_gen0.get(worker).copied().unwrap_or(0.0)
+                } else {
+                    let key = (worker as u64)
+                        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        ^ ((generation as u64) << 17)
+                        ^ COLD_START_TAG;
+                    Rng::new(self.seed ^ key).exponential(1.0 / mean_s)
+                }
+            }
+        };
+        base_s + extra
+    }
+
+    /// The worker's deterministic virtual per-iteration time given the
+    /// scenario-free base (the plan's predicted `t_iter`, or a unit
+    /// tick): the straggler/jitter compute factor stretches it.
+    pub fn iter_virtual_s(&self, worker: usize, base_s: f64) -> f64 {
+        base_s * self.worker(worker).compute_mult
+    }
+
+    /// The slowest worker's virtual per-iteration time — what gates a
+    /// pipelined iteration end-to-end.
+    pub fn max_iter_virtual_s(&self, base_s: f64) -> f64 {
+        (0..self.lenses.len().max(1))
+            .map(|w| self.iter_virtual_s(w, base_s))
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcore::{execute, FlowGraph, Node};
+
+    fn spec(name: &str) -> ScenarioSpec {
+        ScenarioSpec::parse(name).unwrap()
+    }
+
+    #[test]
+    fn deterministic_is_identity() {
+        let inj = Injector::inactive(4);
+        assert!(!inj.is_active());
+        for w in 0..4 {
+            assert_eq!(inj.worker(w), WorkerLens::IDENTITY);
+            assert_eq!(inj.cold_start_s(w, 0, 0.25), 0.25);
+            assert_eq!(inj.cold_start_s(w, 3, 0.25), 0.25);
+            assert_eq!(inj.iter_virtual_s(w, 2.0), 2.0);
+        }
+    }
+
+    #[test]
+    fn same_seed_replays_identically() {
+        for name in
+            ["cold-start", "straggler", "bandwidth-jitter", "cold-start+jitter"]
+        {
+            let a = Injector::new(&spec(name), 7, 6);
+            let b = Injector::new(&spec(name), 7, 6);
+            for w in 0..6 {
+                assert_eq!(a.worker(w), b.worker(w), "{name} worker {w}");
+                assert_eq!(
+                    a.cold_start_s(w, 2, 0.1).to_bits(),
+                    b.cold_start_s(w, 2, 0.1).to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_draw_differently() {
+        for name in ["cold-start", "straggler", "bandwidth-jitter"] {
+            let a = Injector::new(&spec(name), 1, 6);
+            let b = Injector::new(&spec(name), 2, 6);
+            let differs = (0..6).any(|w| {
+                a.worker(w) != b.worker(w)
+                    || a.cold_start_s(w, 0, 0.0) != b.cold_start_s(w, 0, 0.0)
+            });
+            assert!(differs, "{name}: seeds 1 and 2 drew identical lenses");
+        }
+    }
+
+    #[test]
+    fn cold_start_gen0_matches_the_simulator_stream() {
+        // the injector's generation-0 delays must be the exact values
+        // ScenarioModel::ColdStart applies to the simulator's workers
+        let inj = Injector::new(&spec("cold-start"), 42, 3);
+        let mut g = FlowGraph::new();
+        for w in 0..3 {
+            g.add(Node::compute(w, 1.0));
+        }
+        let base = execute(&g).makespan;
+        ScenarioModel::parse("cold-start").unwrap().apply(&mut g, 42);
+        let max_delay = (0..3)
+            .map(|w| inj.cold_start_s(w, 0, 0.0))
+            .fold(0.0, f64::max);
+        assert!(max_delay > 0.0);
+        // the delays are continuous draws: a mismatched stream would be
+        // off by ~seconds, not float-stepping noise
+        let makespan = execute(&g).makespan;
+        assert!(
+            (makespan - (base + max_delay)).abs() < 1e-9,
+            "sim cold-start delays diverge from the injector's: \
+             {makespan} vs {}",
+            base + max_delay
+        );
+    }
+
+    #[test]
+    fn straggler_lens_matches_sim_parameterization() {
+        let inj = Injector::new(&spec("straggler"), 5, 8);
+        for w in 0..8 {
+            let lens = inj.worker(w);
+            // factors live in the sim's [1.0, slowdown] band and the
+            // bandwidth/latency mapping is the factor's reciprocal/value
+            assert!(lens.compute_mult >= 1.0 && lens.compute_mult <= 2.5);
+            assert!((lens.bandwidth_mult - 1.0 / lens.compute_mult).abs() < 1e-12);
+            assert!((lens.latency_mult - lens.compute_mult).abs() < 1e-12);
+        }
+        // background factors make every pair of seeds differ a.s.
+        assert!(inj.max_iter_virtual_s(1.0) > 1.0);
+    }
+
+    #[test]
+    fn straggler_lens_matches_the_simulator_factors() {
+        // the lens multipliers must be exactly the factors the simulator
+        // multiplies compute work by — shared stream, shared discipline
+        let inj = Injector::new(&spec("straggler"), 11, 5);
+        let factors = crate::simcore::straggler_factors(11, 0.2, 2.5, 5);
+        for (w, f) in factors.iter().enumerate() {
+            assert_eq!(inj.worker(w).compute_mult.to_bits(), f.to_bits());
+        }
+    }
+
+    #[test]
+    fn per_generation_cold_draws_are_keyed_and_distinct() {
+        let inj = Injector::new(&spec("cold-start"), 9, 2);
+        let g1 = inj.cold_start_s(0, 1, 0.0);
+        let g2 = inj.cold_start_s(0, 2, 0.0);
+        assert!(g1 > 0.0 && g2 > 0.0);
+        assert_ne!(g1.to_bits(), g2.to_bits());
+        // distinct workers draw independently at the same generation
+        assert_ne!(
+            inj.cold_start_s(0, 1, 0.0).to_bits(),
+            inj.cold_start_s(1, 1, 0.0).to_bits()
+        );
+        // and the base is always charged on top
+        assert_eq!(inj.cold_start_s(0, 1, 1.5), 1.5 + g1);
+    }
+
+    #[test]
+    fn composite_components_draw_their_solo_streams() {
+        let solo_cold = Injector::new(&spec("cold-start"), 7, 4);
+        let solo_strag = Injector::new(&spec("straggler"), 7, 4);
+        let both = Injector::new(&spec("cold-start+straggler"), 7, 4);
+        for w in 0..4 {
+            assert_eq!(
+                both.cold_start_s(w, 0, 0.0).to_bits(),
+                solo_cold.cold_start_s(w, 0, 0.0).to_bits()
+            );
+            assert_eq!(both.worker(w), solo_strag.worker(w));
+        }
+    }
+}

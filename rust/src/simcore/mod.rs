@@ -37,4 +37,7 @@ pub mod scenario;
 
 pub use engine::{allocate_rates, execute, SimOutcome};
 pub use graph::{FlowGraph, Node, NodeId, OpKind, Resource};
-pub use scenario::ScenarioModel;
+pub use scenario::{
+    cold_start_delays, straggler_factors, ScenarioModel, ScenarioSpec,
+    BANDWIDTH_JITTER_TAG, COLD_START_TAG, STRAGGLER_TAG,
+};

@@ -42,6 +42,48 @@ pub enum ScenarioModel {
     BandwidthJitter { sigma: f64 },
 }
 
+/// Stream tags: each scenario draws from `Rng::new(seed ^ TAG)`. Shared
+/// with the runtime [`Injector`](crate::scenario::Injector) — "sim and
+/// real draw from identical streams" is only true while there is exactly
+/// one definition of these.
+pub const COLD_START_TAG: u64 = 0xC01D_57A7;
+pub const STRAGGLER_TAG: u64 = 0x57A6_61E6;
+pub const BANDWIDTH_JITTER_TAG: u64 = 0xBA2D_317E;
+
+/// The cold-start scenario's per-worker start delays, in worker-id
+/// order — the one stream both the simulator's graph perturbation and
+/// the injector's generation-0 charges read.
+pub fn cold_start_delays(seed: u64, mean_s: f64, n_workers: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ COLD_START_TAG);
+    (0..n_workers).map(|_| rng.exponential(1.0 / mean_s)).collect()
+}
+
+/// The straggler scenario's per-worker compute factors, in worker-id
+/// order. Both branches' uniforms are drawn unconditionally so the
+/// stream consumed per worker is fixed; every worker gets a small
+/// continuous background factor so distinct seeds always produce
+/// distinct timelines.
+pub fn straggler_factors(
+    seed: u64,
+    prob: f64,
+    slowdown: f64,
+    n_workers: usize,
+) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ STRAGGLER_TAG);
+    (0..n_workers)
+        .map(|_| {
+            let hit = rng.chance(prob);
+            let heavy = rng.uniform(1.5, slowdown.max(1.5));
+            let background = rng.uniform(1.0, 1.05);
+            if hit {
+                heavy
+            } else {
+                background
+            }
+        })
+        .collect()
+}
+
 impl ScenarioModel {
     /// Stable wire name.
     pub fn as_str(&self) -> &'static str {
@@ -82,27 +124,14 @@ impl ScenarioModel {
         match *self {
             ScenarioModel::Deterministic => {}
             ScenarioModel::ColdStart { mean_s } => {
-                let mut rng = Rng::new(seed ^ 0xC01D_57A7);
-                for w in 0..graph.n_workers() {
-                    graph.delay_worker(w, rng.exponential(1.0 / mean_s));
+                let delays = cold_start_delays(seed, mean_s, graph.n_workers());
+                for (w, d) in delays.iter().enumerate() {
+                    graph.delay_worker(w, *d);
                 }
             }
             ScenarioModel::Straggler { prob, slowdown } => {
-                let mut rng = Rng::new(seed ^ 0x57A6_61E6);
-                let factors: Vec<f64> = (0..graph.n_workers())
-                    .map(|_| {
-                        // draw both branches' uniforms unconditionally so
-                        // the stream consumed per worker is fixed
-                        let hit = rng.chance(prob);
-                        let heavy = rng.uniform(1.5, slowdown.max(1.5));
-                        let background = rng.uniform(1.0, 1.05);
-                        if hit {
-                            heavy
-                        } else {
-                            background
-                        }
-                    })
-                    .collect();
+                let factors =
+                    straggler_factors(seed, prob, slowdown, graph.n_workers());
                 for node in &mut graph.nodes {
                     if node.kind == OpKind::Compute {
                         node.work *= factors[node.worker];
@@ -110,7 +139,7 @@ impl ScenarioModel {
                 }
             }
             ScenarioModel::BandwidthJitter { sigma } => {
-                let mut rng = Rng::new(seed ^ 0xBA2D_317E);
+                let mut rng = Rng::new(seed ^ BANDWIDTH_JITTER_TAG);
                 for node in &mut graph.nodes {
                     let sg = match node.kind {
                         OpKind::Compute => sigma / 3.0,
@@ -123,6 +152,117 @@ impl ScenarioModel {
             }
         }
     }
+}
+
+/// A possibly-composite scenario: zero or more [`ScenarioModel`]
+/// components applied in canonical order (cold-start, then straggler,
+/// then bandwidth-jitter). The wire name joins component names with
+/// `+` — `"cold-start+bandwidth-jitter"` — and `"deterministic"` is
+/// the empty composite. `"jitter"` is accepted as shorthand for
+/// `"bandwidth-jitter"` on input; [`ScenarioSpec::name`] always emits
+/// canonical component names in canonical order, so
+/// `parse(spec.name()) == Some(spec)` for every spec `parse` accepts.
+///
+/// Each component draws from its own xor-tagged RNG stream (see
+/// [`ScenarioModel::apply`]), so composing scenarios never perturbs the
+/// draws a component would make alone: `cold-start+straggler` at seed 7
+/// uses exactly the cold-start draws of `cold-start` at seed 7 plus
+/// exactly the straggler draws of `straggler` at seed 7.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ScenarioSpec {
+    components: Vec<ScenarioModel>,
+}
+
+impl ScenarioSpec {
+    /// The empty composite: no perturbation.
+    pub fn deterministic() -> Self {
+        Self { components: Vec::new() }
+    }
+
+    /// Canonical ordering rank of a component (draw/application order).
+    fn rank(m: &ScenarioModel) -> usize {
+        match m {
+            ScenarioModel::Deterministic => 0,
+            ScenarioModel::ColdStart { .. } => 1,
+            ScenarioModel::Straggler { .. } => 2,
+            ScenarioModel::BandwidthJitter { .. } => 3,
+        }
+    }
+
+    /// Wrap a single model (`Deterministic` becomes the empty spec).
+    pub fn from_model(m: ScenarioModel) -> Self {
+        match m {
+            ScenarioModel::Deterministic => Self::deterministic(),
+            other => Self { components: vec![other] },
+        }
+    }
+
+    /// Parse a wire name: component names (canonical, or the `jitter`
+    /// shorthand) joined by `+`. Components may appear in any order and
+    /// are normalized to canonical order; duplicates and mixing
+    /// `deterministic` with anything else are rejected.
+    pub fn parse(s: &str) -> Option<ScenarioSpec> {
+        let parts: Vec<&str> = s.split('+').collect();
+        if parts.len() == 1 && parts[0] == "deterministic" {
+            return Some(Self::deterministic());
+        }
+        let mut components = Vec::new();
+        for part in parts {
+            let canonical = if part == "jitter" { "bandwidth-jitter" } else { part };
+            let m = ScenarioModel::parse(canonical)?;
+            if m.is_deterministic() {
+                // "deterministic+X" is a contradiction, not a composite
+                return None;
+            }
+            if components.iter().any(|c: &ScenarioModel| c.as_str() == m.as_str()) {
+                return None;
+            }
+            components.push(m);
+        }
+        components.sort_by_key(Self::rank);
+        Some(Self { components })
+    }
+
+    /// Stable wire name; inverse of [`ScenarioSpec::parse`] up to
+    /// normalization (canonical component order, canonical names).
+    pub fn name(&self) -> String {
+        if self.components.is_empty() {
+            "deterministic".to_string()
+        } else {
+            self.components
+                .iter()
+                .map(|c| c.as_str())
+                .collect::<Vec<_>>()
+                .join("+")
+        }
+    }
+
+    pub fn is_deterministic(&self) -> bool {
+        self.components.is_empty()
+    }
+
+    /// The components in canonical (application) order.
+    pub fn components(&self) -> &[ScenarioModel] {
+        &self.components
+    }
+
+    /// The component of the same kind as `probe`, if present.
+    pub fn component(&self, probe: &str) -> Option<&ScenarioModel> {
+        self.components.iter().find(|c| c.as_str() == probe)
+    }
+
+    /// Perturb `graph` in place: each component applies in canonical
+    /// order, each drawing from its own tagged stream of `seed`.
+    pub fn apply(&self, graph: &mut FlowGraph, seed: u64) {
+        for c in &self.components {
+            c.apply(graph, seed);
+        }
+    }
+
+    /// Human-readable list of accepted forms (error messages, help).
+    pub const SYNTAX: &'static str =
+        "deterministic|cold-start|straggler|bandwidth-jitter, or a `+`-joined \
+         composite like cold-start+jitter";
 }
 
 #[cfg(test)]
@@ -216,5 +356,83 @@ mod tests {
             .iter()
             .filter(|n| n.kind == OpKind::Compute)
             .all(|n| n.work >= 1.0));
+    }
+
+    #[test]
+    fn spec_parses_singles_like_model() {
+        for name in ScenarioModel::NAMES {
+            let spec = ScenarioSpec::parse(name).unwrap();
+            assert_eq!(spec.name(), name);
+            if name == "deterministic" {
+                assert!(spec.is_deterministic());
+                assert!(spec.components().is_empty());
+            } else {
+                assert_eq!(spec.components().len(), 1);
+                assert_eq!(
+                    spec.components()[0],
+                    ScenarioModel::parse(name).unwrap()
+                );
+            }
+        }
+        assert!(ScenarioSpec::parse("chaos-monkey").is_none());
+    }
+
+    #[test]
+    fn spec_composites_normalize_and_round_trip() {
+        // the ISSUE's ergonomic shorthand
+        let spec = ScenarioSpec::parse("cold-start+jitter").unwrap();
+        assert_eq!(spec.name(), "cold-start+bandwidth-jitter");
+        assert_eq!(spec.components().len(), 2);
+        // any input order normalizes to canonical order
+        let swapped = ScenarioSpec::parse("bandwidth-jitter+cold-start").unwrap();
+        assert_eq!(swapped, spec);
+        // name() round-trips through parse for every accepted spec
+        assert_eq!(ScenarioSpec::parse(&spec.name()).unwrap(), spec);
+        let triple =
+            ScenarioSpec::parse("straggler+cold-start+jitter").unwrap();
+        assert_eq!(triple.name(), "cold-start+straggler+bandwidth-jitter");
+        assert_eq!(ScenarioSpec::parse(&triple.name()).unwrap(), triple);
+    }
+
+    #[test]
+    fn spec_rejects_duplicates_and_deterministic_mixes() {
+        assert!(ScenarioSpec::parse("cold-start+cold-start").is_none());
+        assert!(ScenarioSpec::parse("jitter+bandwidth-jitter").is_none());
+        assert!(ScenarioSpec::parse("deterministic+cold-start").is_none());
+        assert!(ScenarioSpec::parse("cold-start+deterministic").is_none());
+        assert!(ScenarioSpec::parse("").is_none());
+        assert!(ScenarioSpec::parse("cold-start+").is_none());
+    }
+
+    #[test]
+    fn composite_apply_equals_sequential_components() {
+        let mut composite = demo_graph();
+        ScenarioSpec::parse("cold-start+straggler")
+            .unwrap()
+            .apply(&mut composite, 9);
+        let mut sequential = demo_graph();
+        ScenarioModel::parse("cold-start").unwrap().apply(&mut sequential, 9);
+        ScenarioModel::parse("straggler").unwrap().apply(&mut sequential, 9);
+        assert_eq!(
+            execute(&composite).makespan.to_bits(),
+            execute(&sequential).makespan.to_bits()
+        );
+        // and a composite replays bit-identically like every scenario
+        let mut again = demo_graph();
+        ScenarioSpec::parse("cold-start+straggler")
+            .unwrap()
+            .apply(&mut again, 9);
+        assert_eq!(
+            execute(&composite).makespan.to_bits(),
+            execute(&again).makespan.to_bits()
+        );
+    }
+
+    #[test]
+    fn component_lookup_finds_kinds() {
+        let spec = ScenarioSpec::parse("cold-start+jitter").unwrap();
+        assert!(spec.component("cold-start").is_some());
+        assert!(spec.component("bandwidth-jitter").is_some());
+        assert!(spec.component("straggler").is_none());
     }
 }

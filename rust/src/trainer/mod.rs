@@ -20,7 +20,9 @@ use anyhow::Result;
 
 use crate::collective::{Chunking, SyncAlgorithm};
 use crate::coordinator::leader::run_training;
+use crate::coordinator::worker::WorkerStats;
 use crate::platform::MemStore;
+use crate::simcore::ScenarioSpec;
 
 /// Configuration for a real training run over the AOT artifacts.
 #[derive(Debug, Clone)]
@@ -44,6 +46,29 @@ pub struct TrainConfig {
     /// Chunked streaming policy for the gradient collectives
     /// (`Chunking::NONE` = whole splits, the classic behaviour).
     pub chunking: Chunking,
+    /// Scenario lens for the real path (the same seeded draws the
+    /// simulator applies): per-worker storage perturbation + cold-start
+    /// delays through the [`Injector`](crate::scenario::Injector).
+    pub scenario: ScenarioSpec,
+    /// Seed for the scenario draws (independent of the data `seed`, so
+    /// changing the lens never changes the corpus).
+    pub scenario_seed: u64,
+    /// Base cold-start charge per function generation, seconds — the
+    /// platform tier's `cold_start_s` when driven through
+    /// [`Experiment::train_config`](crate::experiment::Experiment::train_config)
+    /// (replaces the historical hardcoded 10 ms sleep; the default
+    /// matches the local-sim tier).
+    pub cold_start_s: f64,
+    /// When set, the function lifecycle and the reported timeline run
+    /// on a deterministic virtual clock: each iteration advances every
+    /// worker's age by the pipeline-gated tick — `virtual_iter_s ×` the
+    /// slowest worker's compute lens, the same duration the report logs
+    /// per step — instead of wall time, so restart counts, generations
+    /// and the whole report replay bit-identically under a fixed
+    /// `(scenario, seed)`. `Experiment::train_config` enables this
+    /// whenever a scenario is active, seeding it with the plan's
+    /// predicted `t_iter`.
+    pub virtual_iter_s: Option<f64>,
 }
 
 impl TrainConfig {
@@ -60,6 +85,10 @@ impl TrainConfig {
             checkpoint_margin_s: 2.0,
             sync_alg: SyncAlgorithm::PipelinedScatterReduce,
             chunking: Chunking::NONE,
+            scenario: ScenarioSpec::deterministic(),
+            scenario_seed: 0,
+            cold_start_s: 0.01,
+            virtual_iter_s: None,
         }
     }
 
@@ -83,6 +112,8 @@ pub struct TrainReport {
     pub restarts: usize,
     pub wall_s: f64,
     pub store_put_gets: (u64, u64),
+    /// Per-worker lifecycle/lens stats, sorted by worker id.
+    pub workers: Vec<WorkerStats>,
 }
 
 impl TrainReport {
@@ -99,6 +130,16 @@ impl TrainReport {
             return 0.0;
         }
         self.logs.iter().map(|l| l.iter_s).sum::<f64>() / self.logs.len() as f64
+    }
+
+    /// Total cold-start seconds charged across all workers/generations.
+    pub fn cold_start_total_s(&self) -> f64 {
+        self.workers.iter().map(|w| w.cold_start_s).sum()
+    }
+
+    /// Total function generations launched (workers + restarts).
+    pub fn generations(&self) -> u64 {
+        self.workers.iter().map(|w| w.generations as u64).sum()
     }
 }
 

@@ -44,6 +44,21 @@ impl Gen for ArtifactGen {
             cfg.throttle =
                 Some((rng.uniform(1e5, 1e8), rng.uniform(0.0, 0.05)));
         }
+        if rng.chance(0.5) {
+            let lenses = [
+                "cold-start",
+                "straggler",
+                "bandwidth-jitter",
+                "cold-start+jitter",
+                "straggler+bandwidth-jitter",
+                "cold-start+straggler+bandwidth-jitter",
+            ];
+            cfg.scenario = funcpipe::simcore::ScenarioSpec::parse(
+                lenses[rng.index(lenses.len())],
+            )
+            .unwrap();
+            cfg.seed = rng.next_u64() & ((1u64 << 53) - 1);
+        }
 
         // structurally plausible plan (serde is shape-only; semantic
         // feasibility is Experiment::from_artifact's job)

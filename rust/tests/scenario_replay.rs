@@ -7,14 +7,14 @@
 
 use funcpipe::config::ExperimentConfig;
 use funcpipe::experiment::{Experiment, Format, Report};
-use funcpipe::simcore::ScenarioModel;
+use funcpipe::simcore::ScenarioSpec;
 
 fn cfg_with(scenario: &str, seed: u64) -> ExperimentConfig {
     ExperimentConfig {
         model: "resnet101".into(),
         global_batch: 16,
         merge_layers: 4,
-        scenario: ScenarioModel::parse(scenario).unwrap(),
+        scenario: ScenarioSpec::parse(scenario).unwrap(),
         seed,
         ..ExperimentConfig::default()
     }
@@ -22,7 +22,13 @@ fn cfg_with(scenario: &str, seed: u64) -> ExperimentConfig {
 
 #[test]
 fn same_seed_and_scenario_is_bit_identical() {
-    for scenario in ["cold-start", "straggler", "bandwidth-jitter"] {
+    for scenario in [
+        "cold-start",
+        "straggler",
+        "bandwidth-jitter",
+        "cold-start+jitter",
+        "cold-start+straggler+bandwidth-jitter",
+    ] {
         // two fully independent sessions — nothing shared but the inputs
         let a = Experiment::new(cfg_with(scenario, 7)).unwrap();
         let b = Experiment::new(cfg_with(scenario, 7)).unwrap();
@@ -47,7 +53,9 @@ fn same_seed_and_scenario_is_bit_identical() {
 
 #[test]
 fn different_seeds_draw_differently() {
-    for scenario in ["cold-start", "straggler", "bandwidth-jitter"] {
+    for scenario in
+        ["cold-start", "straggler", "bandwidth-jitter", "cold-start+jitter"]
+    {
         let a = Experiment::new(cfg_with(scenario, 7)).unwrap();
         let b = Experiment::new(cfg_with(scenario, 8)).unwrap();
         let artifact_a = a.plan().unwrap().recommended().unwrap().artifact.clone();
@@ -96,7 +104,7 @@ fn scenario_lens_does_not_invalidate_artifacts() {
     let artifact = base.plan().unwrap().recommended().unwrap().artifact.clone();
     let lens = Experiment::new(cfg_with("straggler", 7)).unwrap();
     let rep = lens.simulate(&artifact).unwrap();
-    assert_eq!(rep.scenario.as_str(), "straggler");
+    assert_eq!(rep.scenario.name(), "straggler");
     assert_eq!(rep.seed, 7);
     assert!(rep.scenario_sim.is_some());
     // any *other* config drift still fails loudly

@@ -1,0 +1,163 @@
+//! Deterministic scenario replay on the **train** path — the mirror of
+//! `scenario_replay.rs` for the real trainer: the same `--scenario` +
+//! `--seed` must reproduce identical restart counts, generations and
+//! scenario columns (in fact the byte-identical report, since scenario
+//! runs use the injector's virtual clock), and different seeds must
+//! draw different lenses. Runs on the built-in native model
+//! (`builtin:tiny`), so the full coordinator/storage/collective stack
+//! executes in the default offline build.
+
+use funcpipe::config::ExperimentConfig;
+use funcpipe::experiment::{Experiment, Format, Report, TrainOverrides};
+use funcpipe::runtime::BUILTIN_TINY;
+use funcpipe::simcore::ScenarioSpec;
+use funcpipe::util::json::Json;
+
+fn cfg_with(scenario: &str, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        artifacts_dir: BUILTIN_TINY.into(),
+        platform: "local".into(),
+        steps: 4,
+        // virtual tick is 1.0 (planless) and the default checkpoint
+        // margin is 2.0: with this lifetime every worker restarts a
+        // lens-dependent number of times within 4 steps
+        lifetime_s: 4.5,
+        scenario: ScenarioSpec::parse(scenario).unwrap(),
+        seed,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn train_report(cfg: &ExperimentConfig) -> funcpipe::experiment::TrainReport {
+    Experiment::new(cfg.clone())
+        .unwrap()
+        .train(None, &TrainOverrides::default())
+        .unwrap()
+}
+
+#[test]
+fn same_seed_and_scenario_replays_byte_identically() {
+    for scenario in ["straggler", "cold-start+jitter"] {
+        let cfg = cfg_with(scenario, 7);
+        // two fully independent sessions — nothing shared but the inputs
+        let rep_a = train_report(&cfg);
+        let rep_b = train_report(&cfg);
+        assert_eq!(rep_a.restarts, rep_b.restarts, "{scenario}");
+        assert_eq!(rep_a.workers.len(), rep_b.workers.len());
+        for (a, b) in rep_a.workers.iter().zip(&rep_b.workers) {
+            assert_eq!(a.generations, b.generations, "{scenario}");
+            assert_eq!(a.restarts, b.restarts);
+            assert_eq!(a.cold_start_s.to_bits(), b.cold_start_s.to_bits());
+        }
+        assert_eq!(
+            rep_a.render(Format::Json),
+            rep_b.render(Format::Json),
+            "{scenario}: JSON reports differ across identical replays"
+        );
+        assert_eq!(rep_a.render(Format::Table), rep_b.render(Format::Table));
+    }
+}
+
+#[test]
+fn different_seeds_draw_different_lenses() {
+    let rep_a = train_report(&cfg_with("straggler", 7));
+    let rep_b = train_report(&cfg_with("straggler", 8));
+    // per-worker lens factors are continuous draws: distinct seeds
+    // produce distinct multipliers almost surely
+    let differs = rep_a
+        .workers
+        .iter()
+        .zip(&rep_b.workers)
+        .any(|(a, b)| {
+            a.lens.compute_mult.to_bits() != b.lens.compute_mult.to_bits()
+        });
+    assert!(differs, "seeds 7 and 8 drew identical lenses");
+    assert_ne!(
+        rep_a.render(Format::Json),
+        rep_b.render(Format::Json),
+        "seeds 7 and 8 produced identical reports"
+    );
+    // both carry their own seed column
+    assert_eq!(rep_a.seed, 7);
+    assert_eq!(rep_b.seed, 8);
+}
+
+#[test]
+fn deterministic_scenario_keeps_wall_clock_and_names_the_lens() {
+    let cfg = cfg_with("deterministic", 0);
+    let rep = train_report(&cfg);
+    assert!(rep.scenario.is_deterministic());
+    assert_eq!(rep.virtual_iter_s, None);
+    assert!(rep.scenario_overhead_pct().is_none());
+    // the JSON still names the lens so downstream tooling need not
+    // special-case its absence — same contract as SimReport
+    let json = rep.render(Format::Json);
+    assert!(json.contains("\"scenario\""), "{json}");
+    assert!(json.contains("deterministic"), "{json}");
+}
+
+#[test]
+fn one_plan_replays_under_sim_and_train_with_identical_columns() {
+    // the acceptance flow: freeze ONE plan, replay it under `simulate`
+    // and `train` with the same --scenario/--seed, and read the same
+    // scenario kind/seed columns from both reports
+    let cfg = ExperimentConfig {
+        model: "resnet101".into(),
+        global_batch: 16,
+        merge_layers: 4,
+        artifacts_dir: BUILTIN_TINY.into(),
+        steps: 3,
+        scenario: ScenarioSpec::parse("straggler").unwrap(),
+        seed: 7,
+        ..ExperimentConfig::default()
+    };
+    let exp = Experiment::new(cfg).unwrap();
+    let artifact = exp.plan().unwrap().recommended().unwrap().artifact.clone();
+
+    let sim = exp.simulate(&artifact).unwrap();
+    let train = exp
+        .train(Some(&artifact), &TrainOverrides::default())
+        .unwrap();
+
+    // identical lens columns on both reports
+    assert_eq!(sim.scenario.name(), train.scenario.name());
+    assert_eq!(sim.seed, train.seed);
+    let sim_json = Json::parse(sim.render(Format::Json).trim()).unwrap();
+    let train_json = Json::parse(train.render(Format::Json).trim()).unwrap();
+    let col = |j: &Json| -> (String, f64) {
+        let s = j.field("scenario").unwrap();
+        (
+            s.field_str("kind").unwrap().to_string(),
+            s.field_f64("seed").unwrap(),
+        )
+    };
+    assert_eq!(col(&sim_json), col(&train_json));
+    assert_eq!(col(&train_json), ("straggler".to_string(), 7.0));
+
+    // the trainer ran the plan's dp/μ and ticked at its predicted t_iter
+    assert_eq!(train.dp, artifact.plan.dp);
+    assert_eq!(train.virtual_iter_s, Some(artifact.predicted_t_iter));
+
+    // and the train replay is deterministic: run it again, byte for byte
+    let again = exp
+        .train(Some(&artifact), &TrainOverrides::default())
+        .unwrap();
+    assert_eq!(
+        train.render(Format::Json),
+        again.render(Format::Json),
+        "train --plan replay drifted"
+    );
+}
+
+#[test]
+fn scenario_overhead_is_observed_in_the_report() {
+    // stragglers stretch the virtual timeline, and the report says so
+    let rep = train_report(&cfg_with("straggler", 7));
+    let pct = rep.scenario_overhead_pct().expect("virtual clock active");
+    assert!(pct > 0.0, "straggler overhead not observed: {pct}");
+    assert!(rep.cold_start_total_s > 0.0, "cold starts never charged");
+    // generations reconcile with restarts: one launch per worker plus
+    // one per restart
+    let gens: u64 = rep.workers.iter().map(|w| w.generations as u64).sum();
+    assert_eq!(gens, rep.workers.len() as u64 + rep.restarts as u64);
+}
