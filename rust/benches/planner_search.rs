@@ -2,14 +2,19 @@
 //! effectiveness of the PerfModel StageCache on the `solve_weights`
 //! sweep (the planner hot loop): candidate plans (leaves) and DFS nodes
 //! per second, plus the cache hit rate, for a parameter-heavy-tail CNN
-//! (vgg16) and a Table-1 resnet-class model. Wired into CI next to
-//! `perf_hotpath`; the acceptance bar is a reported hit rate > 50% on
-//! the vgg16 sweep.
+//! (vgg16) and a Table-1 resnet-class model. A second table runs EVERY
+//! registry strategy through the one `Planner` API on a small model and
+//! reports per-strategy plans/sec — the cross-strategy cost picture
+//! behind `plan --strategy all`. Wired into CI next to `perf_hotpath`;
+//! the acceptance bar is a reported hit rate > 50% on the vgg16 sweep.
 
 use std::time::Instant;
 
 use funcpipe::model::{merge_layers, zoo, MergeCriterion};
-use funcpipe::planner::{CoOptimizer, DEFAULT_WEIGHTS};
+use funcpipe::planner::{
+    solve_request, CoOptimizer, PerfModel, PlanRequest, DEFAULT_WEIGHTS,
+    STRATEGIES,
+};
 use funcpipe::platform::PlatformSpec;
 
 fn main() {
@@ -57,4 +62,45 @@ fn main() {
             cache.hit_rate()
         );
     }
+
+    // -- per-strategy rows: the whole registry on one shared PerfModel --
+    let m = merge_layers(
+        &zoo::by_name("resnet101", &p).expect("zoo model"),
+        5,
+        MergeCriterion::Compute,
+    );
+    let perf = PerfModel::new(&m, &p);
+    let mut req = PlanRequest::new(16);
+    req.dp_options = vec![1, 2, 4];
+    println!();
+    println!(
+        "{:<12} {:>8} {:>10} {:>12} {:>12} {:>10}",
+        "strategy", "plans", "nodes", "solve s", "plans/s", "hit rate"
+    );
+    for name in STRATEGIES {
+        let t0 = Instant::now();
+        let outcome =
+            solve_request(name, &perf, &req).expect("registry strategy");
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<12} {:>8} {:>10} {:>12.4} {:>12.1} {:>9.1}%",
+            name,
+            outcome.candidates.len(),
+            outcome.stats.nodes,
+            dt,
+            outcome.candidates.len() as f64 / dt.max(1e-9),
+            perf.cache().hit_rate() * 100.0
+        );
+        assert!(
+            !outcome.candidates.is_empty(),
+            "{name}: no feasible plan on resnet101"
+        );
+    }
+    // after the whole registry ran over ONE shared model, the cache
+    // must be hot — the property `plan --strategy all` relies on
+    assert!(
+        perf.cache().hit_rate() > 0.5,
+        "shared StageCache hit rate {:.2} below the 50% bar",
+        perf.cache().hit_rate()
+    );
 }

@@ -10,10 +10,8 @@ use crate::collective::{self, SyncAlgorithm};
 use crate::model::{merge_layers, zoo, MergeCriterion, ModelProfile, Plan};
 use crate::pipeline::rel_err_pct;
 use crate::pipeline::simulate::simulate_iteration_noisy;
-use crate::planner::bayes::BayesOpt;
-use crate::planner::tpdmp::Tpdmp;
 use crate::planner::{
-    pareto_front, recommend, sweep, CoOptimizer, PerfModel, SweepPoint,
+    solve_request, PerfModel, PlanCandidate, PlanOutcome, PlanRequest,
     DEFAULT_WEIGHTS,
 };
 use crate::platform::network::BandwidthModel;
@@ -30,16 +28,42 @@ fn model_for(name: &str, platform: &PlatformSpec, layers: usize) -> ModelProfile
     )
 }
 
-fn funcpipe_sweep(
+/// Solve the default weight sweep through the strategy registry — how
+/// every figure reproduction plans since the `Planner` redesign (the
+/// paper's own numbers come from the exact `bnb` co-optimizer).
+fn strategy_outcome(
+    name: &str,
     model: &ModelProfile,
     platform: &PlatformSpec,
     global_batch: usize,
-) -> Vec<SweepPoint> {
-    let opt = CoOptimizer::new(model, platform);
-    let n_micro = global_batch / zoo::MICRO_BATCH;
-    sweep(&DEFAULT_WEIGHTS, |w| {
-        opt.solve(n_micro, w).map(|(plan, perf, _)| (plan, perf))
-    })
+    weights: &[(f64, f64)],
+) -> PlanOutcome {
+    let perf = PerfModel::new(model, platform);
+    let mut req = PlanRequest::new(global_batch / zoo::MICRO_BATCH);
+    req.weights = weights.to_vec();
+    solve_request(name, &perf, &req).expect("registry strategy")
+}
+
+fn funcpipe_plan(
+    model: &ModelProfile,
+    platform: &PlatformSpec,
+    global_batch: usize,
+) -> PlanOutcome {
+    strategy_outcome("bnb", model, platform, global_batch, &DEFAULT_WEIGHTS)
+}
+
+/// The single best candidate of `strategy` under one weight pair.
+fn strategy_best(
+    name: &str,
+    model: &ModelProfile,
+    platform: &PlatformSpec,
+    global_batch: usize,
+    alpha: (f64, f64),
+) -> Option<PlanCandidate> {
+    strategy_outcome(name, model, platform, global_batch, &[alpha])
+        .candidates
+        .into_iter()
+        .next()
 }
 
 /// Fig. 1: (a) LambdaML's communication bottleneck on AmoebaNet-D36 with
@@ -78,20 +102,18 @@ pub fn fig1() -> Vec<Table> {
     let mb = merge_layers(&m, 8, MergeCriterion::Compute);
     let alpha = (1.0, 2e-4);
     let gb = 64;
-    let n_micro = gb / zoo::MICRO_BATCH;
-    let b1 = Tpdmp::new(&mb, &p).solve(n_micro, alpha);
-    let b2 = BayesOpt::new(&mb, &p).solve(n_micro, alpha);
-    let fp = CoOptimizer::new(&mb, &p).solve(n_micro, alpha);
     let mut t = Table::new("Fig 1(b) — optimized configurations, D36 batch 64")
         .header(["config", "iter time", "iter cost"]);
-    if let Some((_, perf)) = &b1 {
-        t.row(["B1 (TPDMP)".to_string(), secs(perf.t_iter), usd(perf.c_iter)]);
-    }
-    if let Some((_, perf)) = &b2 {
-        t.row(["B2 (Bayes)".to_string(), secs(perf.t_iter), usd(perf.c_iter)]);
-    }
-    if let Some((_, perf, _)) = &fp {
-        t.row(["FuncPipe".to_string(), secs(perf.t_iter), usd(perf.c_iter)]);
+    for (label, strategy) in
+        [("B1 (TPDMP)", "tpdmp"), ("B2 (Bayes)", "bayes"), ("FuncPipe", "bnb")]
+    {
+        if let Some(c) = strategy_best(strategy, &mb, &p, gb, alpha) {
+            t.row([
+                label.to_string(),
+                secs(c.perf.t_iter),
+                usd(c.perf.c_iter),
+            ]);
+        }
     }
     out.push(t);
     out
@@ -133,12 +155,16 @@ pub fn fig5() -> Vec<Table> {
                     ]);
                 }
             }
-            let points = funcpipe_sweep(&m, &p, gb);
-            let front = pareto_front(&points);
-            let rec = recommend(&front);
-            for pt in &front {
-                let is_rec =
-                    rec.as_ref().map(|r| r.plan == pt.plan).unwrap_or(false);
+            let outcome = funcpipe_plan(&m, &p, gb);
+            let rec = outcome.recommend_idx();
+            let flags = outcome.frontier_flags();
+            for (i, pt) in outcome
+                .candidates
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| flags[*i])
+            {
+                let is_rec = rec == Some(i);
                 let cmp = if is_rec {
                     best_base
                         .map(|b| speedup(b, pt.perf.t_iter))
@@ -182,8 +208,8 @@ pub fn fig6() -> Vec<Table> {
         let m = model_for(name, &p, 8);
         let mut t = Table::new(format!("Fig 6 — breakdown, {name} batch {gb}"))
             .header(["design", "compute", "flush", "sync", "total"]);
-        let points = funcpipe_sweep(&m, &p, gb);
-        for pt in pareto_front(&points) {
+        let outcome = funcpipe_plan(&m, &p, gb);
+        for pt in outcome.frontier() {
             t.row([
                 format!("FuncPipe α2={}", pt.weights.1),
                 secs(pt.perf.compute_s),
@@ -247,8 +273,8 @@ pub fn fig7() -> Vec<Table> {
                     format!("{:.2}", thr / n0),
                 ]);
             }
-            let points = funcpipe_sweep(&m, &p, gb);
-            if let Some(rec) = recommend(&points) {
+            let outcome = funcpipe_plan(&m, &p, gb);
+            if let Some(rec) = outcome.recommended() {
                 let thr = rec.perf.throughput(gb);
                 let n0 = *norm.get_or_insert(thr);
                 t.row([
@@ -349,42 +375,27 @@ pub fn fig9() -> Vec<Table> {
         let n_micro = 64 / zoo::MICRO_BATCH;
         let mut t = Table::new(format!("Fig 9 — co-opt comparison, {name} batch 64"))
             .header(["optimizer", "weights α2", "t_iter", "c_iter"]);
+        let gb = n_micro * zoo::MICRO_BATCH;
         for alpha in alpha_list {
-            let t0 = std::time::Instant::now();
-            if let Some((_, perf, _)) =
-                CoOptimizer::new(&m, &p).solve(n_micro, alpha)
+            for (slot, label, strategy) in
+                [(0, "FuncPipe", "bnb"), (1, "TPDMP", "tpdmp"), (2, "Bayes", "bayes")]
             {
-                t.row([
-                    "FuncPipe".to_string(),
-                    format!("{}", alpha.1),
-                    secs(perf.t_iter),
-                    usd(perf.c_iter),
-                ]);
+                let t0 = std::time::Instant::now();
+                if let Some(c) = strategy_best(strategy, &m, &p, gb, alpha) {
+                    t.row([
+                        label.to_string(),
+                        format!("{}", alpha.1),
+                        secs(c.perf.t_iter),
+                        usd(c.perf.c_iter),
+                    ]);
+                }
+                let dt = t0.elapsed().as_secs_f64();
+                match slot {
+                    0 => solve_times.0 += dt,
+                    1 => solve_times.1 += dt,
+                    _ => solve_times.2 += dt,
+                }
             }
-            solve_times.0 += t0.elapsed().as_secs_f64();
-
-            let t0 = std::time::Instant::now();
-            if let Some((_, perf)) = Tpdmp::new(&m, &p).solve(n_micro, alpha) {
-                t.row([
-                    "TPDMP".to_string(),
-                    format!("{}", alpha.1),
-                    secs(perf.t_iter),
-                    usd(perf.c_iter),
-                ]);
-            }
-            solve_times.1 += t0.elapsed().as_secs_f64();
-
-            let t0 = std::time::Instant::now();
-            if let Some((_, perf)) = BayesOpt::new(&m, &p).solve(n_micro, alpha)
-            {
-                t.row([
-                    "Bayes".to_string(),
-                    format!("{}", alpha.1),
-                    secs(perf.t_iter),
-                    usd(perf.c_iter),
-                ]);
-            }
-            solve_times.2 += t0.elapsed().as_secs_f64();
         }
         out.push(t);
     }
@@ -422,8 +433,8 @@ pub fn fig10() -> Vec<Table> {
                     ]);
                 }
             }
-            let points = funcpipe_sweep(&m, &p, gb);
-            if let Some(rec) = recommend(&points) {
+            let outcome = funcpipe_plan(&m, &p, gb);
+            if let Some(rec) = outcome.recommended() {
                 t.row([
                     "FuncPipe (recommended)".to_string(),
                     secs(rec.perf.t_iter),
@@ -463,8 +474,8 @@ pub fn fig11() -> Vec<Table> {
                     usd(r.c_iter),
                 ]);
             }
-            let points = funcpipe_sweep(&m, &p, 64);
-            if let Some(rec) = recommend(&points) {
+            let outcome = funcpipe_plan(&m, &p, 64);
+            if let Some(rec) = outcome.recommended() {
                 t.row([
                     format!("{scale}x"),
                     "FuncPipe".into(),
@@ -515,13 +526,13 @@ pub fn table3() -> Vec<Table> {
             // average over every Pareto-sweep plan (single-worker plans
             // match the DES trivially; multi-stage/multi-dp ones are the
             // interesting prediction targets)
-            let points = funcpipe_sweep(&m, &p, gb);
-            if points.is_empty() {
+            let outcome = funcpipe_plan(&m, &p, gb);
+            if outcome.candidates.is_empty() {
                 row.push("-".into());
                 continue;
             }
             let mut cell_errs = Vec::new();
-            for (i, pt) in points.iter().enumerate() {
+            for (i, pt) in outcome.candidates.iter().enumerate() {
                 // jittered DES = "measured" (σ=15% bandwidth variation,
                 // the phenomenon the paper blames for its errors)
                 let sim = simulate_iteration_noisy(
@@ -567,7 +578,8 @@ pub fn headline_comparison(
     let zoo_m = zoo::by_name(name, &p)?;
     let m = model_for(name, &p, 8);
     let base = evaluate_baseline(BaselineKind::LambdaML, &zoo_m, &p, gb, C5_9XLARGE)?;
-    let rec = recommend(&funcpipe_sweep(&m, &p, gb))?;
+    let outcome = funcpipe_plan(&m, &p, gb);
+    let rec = outcome.recommended()?;
     Some((base.t_iter, base.c_iter, rec.perf.t_iter, rec.perf.c_iter))
 }
 

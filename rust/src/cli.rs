@@ -12,6 +12,7 @@ use crate::collective::SyncAlgorithm;
 use crate::config::ExperimentConfig;
 use crate::experiment::{Format, PlanArtifact, TrainOverrides};
 use crate::model::MergeCriterion;
+use crate::planner::{PlanRequest, RobustRank, RobustSpec, STRATEGIES};
 use crate::simcore::ScenarioSpec;
 
 /// Flags that shape the unified [`ExperimentConfig`]; accepted by every
@@ -26,6 +27,7 @@ pub const CONFIG_FLAGS: &[&str] = &[
     "merge-criterion",
     "sync",
     "bandwidth-scale",
+    "dp-options",
     "chunk-bytes",
     "chunks-in-flight",
     "steps",
@@ -51,12 +53,19 @@ pub const PLAN_EXCLUSIVE_FLAGS: &[&str] = &[
     "merge-criterion",
     "sync",
     "bandwidth-scale",
+    "dp-options",
 ];
 
 /// The flag allowlist for a subcommand; `None` = unknown subcommand.
 pub fn flags_for(cmd: &str) -> Option<Vec<&'static str>> {
     let extra: &[&str] = match cmd {
-        "plan" => &["out"],
+        "plan" => &[
+            "out",
+            "strategy",
+            "robust-scenario",
+            "robust-seeds",
+            "robust-rank",
+        ],
         "simulate" => &["plan", "scenario", "seed"],
         "train" => &["plan", "dp", "mu", "scenario", "seed"],
         "baseline" => &[],
@@ -190,6 +199,16 @@ pub fn config_from_flags(
     if let Some(s) = flags.get("bandwidth-scale") {
         cfg.bandwidth_scale = s.parse().context("--bandwidth-scale")?;
     }
+    if let Some(s) = flags.get("dp-options") {
+        cfg.dp_options = s
+            .split(',')
+            .map(|t| {
+                t.trim().parse::<usize>().with_context(|| {
+                    format!("--dp-options entry {t:?} (comma-separated list)")
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
     if let Some(s) = flags.get("chunk-bytes") {
         cfg.chunk_bytes = s.parse().context("--chunk-bytes")?;
     }
@@ -299,6 +318,72 @@ pub fn format_from_flags(flags: &HashMap<String, String>) -> Result<Format> {
         Some(s) => Format::parse(s),
         None => Ok(Format::Table),
     }
+}
+
+/// `plan --strategy <name|all>` (default: the `bnb` registry default).
+/// Unknown names are rejected here with the full registry listed, so a
+/// typo cannot fall through to a less helpful error deeper down.
+pub fn strategy_from_flags(flags: &HashMap<String, String>) -> Result<String> {
+    match flags.get("strategy") {
+        None => Ok(crate::experiment::DEFAULT_STRATEGY.to_string()),
+        Some(s) if s == "all" || STRATEGIES.contains(&s.as_str()) => {
+            Ok(s.clone())
+        }
+        Some(s) => bail!(
+            "unknown strategy {s:?} (expected all or one of: {})",
+            STRATEGIES.join(" ")
+        ),
+    }
+}
+
+/// `plan --robust-scenario <spec> [--robust-seeds n] [--robust-rank
+/// worst|mean]` → the request's [`RobustSpec`]. The strict-flag
+/// contract applies: `--robust-seeds`/`--robust-rank` without a
+/// scenario would be silent no-ops and are rejected, as is a
+/// deterministic robust scenario (nothing to be robust against).
+pub fn robust_from_flags(
+    flags: &HashMap<String, String>,
+) -> Result<Option<RobustSpec>> {
+    let scenario = flags.get("robust-scenario");
+    if scenario.is_none() {
+        if flags.contains_key("robust-seeds") || flags.contains_key("robust-rank")
+        {
+            bail!(
+                "--robust-seeds/--robust-rank have no effect without \
+                 --robust-scenario"
+            );
+        }
+        return Ok(None);
+    }
+    let s = scenario.unwrap();
+    let scenario = ScenarioSpec::parse(s).with_context(|| {
+        format!("--robust-scenario {s:?} (expected {})", ScenarioSpec::SYNTAX)
+    })?;
+    let seeds = match flags.get("robust-seeds") {
+        Some(v) => v.parse().context("--robust-seeds")?,
+        None => 8,
+    };
+    let rank = match flags.get("robust-rank") {
+        Some(v) => RobustRank::parse(v).with_context(|| {
+            format!("--robust-rank {v:?} (expected worst|mean)")
+        })?,
+        None => RobustRank::Worst,
+    };
+    let spec = RobustSpec { scenario, seeds, rank };
+    spec.validate()?;
+    Ok(Some(spec))
+}
+
+/// Shape the session's [`PlanRequest`] from the `plan` flags (robust
+/// spec on top of the config-derived defaults).
+pub fn apply_plan_flags(
+    req: &mut PlanRequest,
+    flags: &HashMap<String, String>,
+) -> Result<()> {
+    if let Some(spec) = robust_from_flags(flags)? {
+        req.robust = Some(spec);
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -458,6 +543,103 @@ mod tests {
                 "{cmd} accepted --seed"
             );
         }
+    }
+
+    #[test]
+    fn strategy_flag_parses_and_rejects() {
+        let allowed = flags_for("plan").unwrap();
+        // default is bnb
+        assert_eq!(
+            strategy_from_flags(&HashMap::new()).unwrap(),
+            crate::experiment::DEFAULT_STRATEGY
+        );
+        for name in STRATEGIES.iter().chain(&["all"]) {
+            let flags =
+                parse_flags("plan", &argv(&["--strategy", name]), &allowed)
+                    .unwrap();
+            assert_eq!(strategy_from_flags(&flags).unwrap(), *name);
+        }
+        let flags =
+            parse_flags("plan", &argv(&["--strategy", "gurobi"]), &allowed)
+                .unwrap();
+        assert!(strategy_from_flags(&flags).is_err());
+        // --strategy belongs to `plan` alone: on the execution commands
+        // (where --plan lives) it would contradict the frozen artifact
+        for cmd in ["simulate", "train", "baseline", "profile"] {
+            let allowed = flags_for(cmd).unwrap();
+            assert!(
+                parse_flags(cmd, &argv(&["--strategy", "bnb"]), &allowed)
+                    .is_err(),
+                "{cmd} accepted --strategy"
+            );
+        }
+    }
+
+    #[test]
+    fn robust_flags_parse_and_reject() {
+        let allowed = flags_for("plan").unwrap();
+        let flags = parse_flags(
+            "plan",
+            &argv(&[
+                "--robust-scenario",
+                "straggler+jitter",
+                "--robust-seeds",
+                "4",
+                "--robust-rank",
+                "mean",
+            ]),
+            &allowed,
+        )
+        .unwrap();
+        let spec = robust_from_flags(&flags).unwrap().unwrap();
+        assert_eq!(spec.scenario.name(), "straggler+bandwidth-jitter");
+        assert_eq!(spec.seeds, 4);
+        assert_eq!(spec.rank, RobustRank::Mean);
+        // defaults: 8 seeds, worst-case ranking
+        let flags = parse_flags(
+            "plan",
+            &argv(&["--robust-scenario", "cold-start"]),
+            &allowed,
+        )
+        .unwrap();
+        let spec = robust_from_flags(&flags).unwrap().unwrap();
+        assert_eq!((spec.seeds, spec.rank), (8, RobustRank::Worst));
+        // silent no-ops and no-op scenarios are hard errors
+        for bad in [
+            vec!["--robust-seeds", "4"],
+            vec!["--robust-rank", "worst"],
+            vec!["--robust-scenario", "deterministic"],
+            vec!["--robust-scenario", "chaos-monkey"],
+            vec!["--robust-scenario", "straggler", "--robust-rank", "p99"],
+            vec!["--robust-scenario", "straggler", "--robust-seeds", "0"],
+        ] {
+            let flags = parse_flags("plan", &argv(&bad), &allowed).unwrap();
+            assert!(robust_from_flags(&flags).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn dp_options_flag_flows_into_the_config() {
+        let allowed = flags_for("plan").unwrap();
+        let flags = parse_flags(
+            "plan",
+            &argv(&["--dp-options", "1,2,8"]),
+            &allowed,
+        )
+        .unwrap();
+        let cfg = config_from_flags(&flags).unwrap();
+        assert_eq!(cfg.dp_options, vec![1, 2, 8]);
+        for bad in ["1,two", "", "4,2", "0,1"] {
+            let flags =
+                parse_flags("plan", &argv(&["--dp-options", bad]), &allowed)
+                    .unwrap();
+            assert!(config_from_flags(&flags).is_err(), "{bad:?} accepted");
+        }
+        // config-shaping: conflicts with --plan like its siblings
+        let mut with_plan = HashMap::new();
+        with_plan.insert("plan".to_string(), "p.json".to_string());
+        with_plan.insert("dp-options".to_string(), "1,2".to_string());
+        assert!(check_plan_conflicts(&with_plan).is_err());
     }
 
     #[test]

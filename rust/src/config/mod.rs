@@ -40,6 +40,12 @@ pub struct ExperimentConfig {
     /// Window of in-flight (uploaded but un-consumed) chunks per worker.
     pub chunks_in_flight: usize,
     pub weights: Vec<(f64, f64)>,
+    /// Candidate data-parallel degrees every plan strategy searches
+    /// (config key `dp_options`, flag `--dp-options 1,2,4`). Strictly
+    /// increasing; each degree must stay within the platform's
+    /// concurrency cap (the planner cannot price replicas the platform
+    /// will not launch).
+    pub dp_options: Vec<usize>,
     // -- trainer session knobs (formerly TrainConfig-only) ---------------
     /// Directory of the AOT artifacts the trainer/profiler execute.
     pub artifacts_dir: String,
@@ -54,8 +60,8 @@ pub struct ExperimentConfig {
     /// Serverless scenario applied by the DES on `simulate` and by the
     /// runtime [`Injector`](crate::scenario::Injector) on `train`:
     /// `deterministic` | `cold-start` | `straggler` |
-    /// `bandwidth-jitter`, or a `+`-joined composite such as
-    /// `cold-start+jitter`. A *lens* on execution, not part of the
+    /// `bandwidth-jitter` | `flaky-network`, or a `+`-joined composite
+    /// such as `cold-start+jitter`. A *lens* on execution, not part of the
     /// plan's identity: artifact drift checks ignore it, so one plan can
     /// be replayed under many scenarios on both paths.
     pub scenario: ScenarioSpec,
@@ -78,6 +84,7 @@ impl Default for ExperimentConfig {
             chunk_bytes: 0,
             chunks_in_flight: Chunking::NONE.in_flight,
             weights: crate::planner::DEFAULT_WEIGHTS.to_vec(),
+            dp_options: crate::planner::DEFAULT_DP_OPTIONS.to_vec(),
             artifacts_dir: "artifacts".into(),
             steps: 20,
             lr: 0.2,
@@ -98,7 +105,7 @@ impl ExperimentConfig {
     /// plan artifact, which embeds the config). Unknown keys are
     /// rejected so config typos fail loudly, like unknown CLI flags.
     pub fn from_json(j: &Json) -> Result<Self> {
-        const KNOWN: [&str; 18] = [
+        const KNOWN: [&str; 19] = [
             "model",
             "platform",
             "global_batch",
@@ -110,6 +117,7 @@ impl ExperimentConfig {
             "chunk_bytes",
             "chunks_in_flight",
             "weights",
+            "dp_options",
             "artifacts_dir",
             "steps",
             "lr",
@@ -169,6 +177,14 @@ impl ExperimentConfig {
                         a[1].as_f64().context("w1")?,
                     ))
                 })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(v) = j.get("dp_options") {
+            cfg.dp_options = v
+                .as_arr()
+                .context("dp_options array")?
+                .iter()
+                .map(|d| d.as_usize().context("dp_options entry"))
                 .collect::<Result<Vec<_>>>()?;
         }
         if let Some(v) = j.get("artifacts_dir") {
@@ -233,6 +249,15 @@ impl ExperimentConfig {
                         .map(|&(a, b)| {
                             Json::Arr(vec![Json::Num(a), Json::Num(b)])
                         })
+                        .collect(),
+                ),
+            ),
+            (
+                "dp_options",
+                Json::Arr(
+                    self.dp_options
+                        .iter()
+                        .map(|&d| Json::Num(d as f64))
                         .collect(),
                 ),
             ),
@@ -307,7 +332,14 @@ impl ExperimentConfig {
                 self.scenario.name()
             );
         }
-        self.resolve_platform()?;
+        let platform = self.resolve_platform()?;
+        // the dp search space is shared by every plan strategy; the ONE
+        // invariant lives in the planner so config and request layers
+        // can never drift
+        crate::planner::strategy::validate_dp_options(
+            &self.dp_options,
+            &platform,
+        )?;
         Ok(())
     }
 
@@ -386,6 +418,41 @@ mod tests {
     #[test]
     fn defaults_are_valid() {
         ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn dp_options_parse_and_validate() {
+        let cfg = ExperimentConfig::from_json_text(
+            r#"{"dp_options": [1, 2, 8]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.dp_options, vec![1, 2, 8]);
+        // round-trips like every other knob
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+        // rejected: empty, zero, duplicates/unsorted, beyond the
+        // platform's concurrency cap
+        for bad in [
+            r#"{"dp_options": []}"#,
+            r#"{"dp_options": [0, 2]}"#,
+            r#"{"dp_options": [2, 2]}"#,
+            r#"{"dp_options": [4, 2]}"#,
+            r#"{"dp_options": [1, 100000]}"#,
+        ] {
+            assert!(
+                ExperimentConfig::from_json_text(bad).is_err(),
+                "{bad} accepted"
+            );
+        }
+        // the cap is per platform: 300 on alibaba, 1000 on aws
+        assert!(ExperimentConfig::from_json_text(
+            r#"{"platform": "alibaba", "dp_options": [1, 512]}"#
+        )
+        .is_err());
+        ExperimentConfig::from_json_text(
+            r#"{"platform": "aws", "dp_options": [1, 512]}"#,
+        )
+        .unwrap();
     }
 
     #[test]

@@ -65,6 +65,9 @@ pub struct WorkerStats {
     /// Deterministic elapsed seconds on the virtual clock (0 in
     /// wall-clock mode).
     pub virtual_elapsed_s: f64,
+    /// Transient `get_blocking` drops injected by the `flaky-network`
+    /// lens (each one absorbed by a retry; 0 under every other lens).
+    pub flaky_timeouts: u64,
 }
 
 pub struct WorkerCtx {
@@ -97,6 +100,27 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
         ),
         None => ctx.base_store.clone(),
     };
+    // flaky-network lens: seeded transient get_blocking drops injected
+    // below a bounded-retry middleware. A drop fails instantly, hits a
+    // key at most once and costs exactly one retry, so the run stays
+    // deterministic and the report observes the retry path
+    // (`flaky_timeouts`).
+    let (store, flaky_counter): (Arc<dyn ObjectStore>, _) =
+        match ctx.injector.flaky() {
+            Some((prob, _timeout_s)) => {
+                let flaky = crate::scenario::FlakyStore::new(
+                    store,
+                    cfg.scenario_seed,
+                    worker_id,
+                    prob,
+                );
+                let counter = flaky.timeout_counter();
+                let retry =
+                    crate::platform::RetryStore::new(Arc::new(flaky), 2);
+                (Arc::new(retry), Some(counter))
+            }
+            None => (store, None),
+        };
 
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
     let rt = Arc::new(Runtime::cpu()?);
@@ -128,6 +152,7 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
         cold_start_s: 0.0,
         lens,
         virtual_elapsed_s: 0.0,
+        flaky_timeouts: 0,
     };
     // every generation — the initial launch included — charges a cold
     // start: the tier's base plus the scenario's per-generation draw
@@ -337,6 +362,10 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
                 func.generation
             );
         }
+    }
+    if let Some(counter) = &flaky_counter {
+        stats.flaky_timeouts =
+            counter.load(std::sync::atomic::Ordering::Relaxed);
     }
     Ok(stats)
 }

@@ -22,8 +22,20 @@ use crate::model::Plan;
 use crate::util::json::Json;
 
 /// Bumped when the on-disk layout changes incompatibly; loaders reject
-/// versions they do not understand instead of misreading them.
-pub const PLAN_SCHEMA_VERSION: usize = 1;
+/// versions they do not understand instead of misreading them. Version
+/// history:
+///
+/// * **1** — config + plan + weights + predicted t/c;
+/// * **2** — adds `strategy` (the registry key of the planner strategy
+///   that produced the plan). Version-1 artifacts still load: the
+///   `strategy` key is absent there and defaults to `"bnb"`, the only
+///   solver `plan` ever ran before the strategy registry; loaders
+///   normalize to the current version, so re-saving upgrades the file.
+pub const PLAN_SCHEMA_VERSION: usize = 2;
+
+/// The provenance recorded for version-1 artifacts (pre-registry, when
+/// branch-and-bound was the only `plan` solver).
+pub const V1_STRATEGY: &str = "bnb";
 
 /// A frozen plan plus everything needed to act on it.
 #[derive(Debug, Clone, PartialEq)]
@@ -42,6 +54,11 @@ pub struct PlanArtifact {
     /// cannot smuggle in stale numbers.
     pub predicted_t_iter: f64,
     pub predicted_c_iter: f64,
+    /// Registry key of the plan strategy that produced this plan
+    /// (`bnb`, `miqp`, `bayes`, `tpdmp`, `sweep`) — provenance, not
+    /// behaviour: simulate/train act on the plan, not on how it was
+    /// found.
+    pub strategy: String,
 }
 
 impl PlanArtifact {
@@ -51,6 +68,7 @@ impl PlanArtifact {
         weights: (f64, f64),
         predicted_t_iter: f64,
         predicted_c_iter: f64,
+        strategy: impl Into<String>,
     ) -> Self {
         Self {
             version: PLAN_SCHEMA_VERSION,
@@ -59,6 +77,7 @@ impl PlanArtifact {
             weights,
             predicted_t_iter,
             predicted_c_iter,
+            strategy: strategy.into(),
         }
     }
 
@@ -81,6 +100,7 @@ impl PlanArtifact {
                     ("c_iter", Json::Num(self.predicted_c_iter)),
                 ]),
             ),
+            ("strategy", Json::str(self.strategy.as_str())),
         ])
     }
 
@@ -89,15 +109,38 @@ impl PlanArtifact {
     /// artifact with a misplaced or typo'd key must fail loudly, not
     /// silently run the old policy.
     pub fn from_json(j: &Json) -> Result<Self> {
-        j.check_keys(&["version", "config", "plan", "weights", "predicted"])
-            .context("plan artifact")?;
+        j.check_keys(&[
+            "version", "config", "plan", "weights", "predicted", "strategy",
+        ])
+        .context("plan artifact")?;
         let version = j.field_usize("version").context("plan artifact")?;
-        if version != PLAN_SCHEMA_VERSION {
+        if version == 0 || version > PLAN_SCHEMA_VERSION {
             bail!(
                 "unsupported plan artifact version {version} \
-                 (this build reads version {PLAN_SCHEMA_VERSION})"
+                 (this build reads versions 1..={PLAN_SCHEMA_VERSION})"
             );
         }
+        let strategy = match j.get("strategy") {
+            Some(v) => {
+                if version < 2 {
+                    bail!(
+                        "plan artifact version {version} predates the \
+                         strategy field; remove it or bump the version"
+                    );
+                }
+                let s = v.as_str().context("plan artifact strategy")?;
+                if s.is_empty() {
+                    bail!("plan artifact strategy must be non-empty");
+                }
+                s.to_string()
+            }
+            None => {
+                if version >= 2 {
+                    bail!("plan artifact version {version} requires a strategy");
+                }
+                V1_STRATEGY.to_string()
+            }
+        };
         let config = ExperimentConfig::from_json(j.field("config")?)
             .context("plan artifact config")?;
         let plan =
@@ -111,7 +154,9 @@ impl PlanArtifact {
             .check_keys(&["t_iter", "c_iter"])
             .context("plan artifact predicted")?;
         Ok(Self {
-            version,
+            // loaders normalize old versions up: re-saving writes the
+            // current schema (with the defaulted strategy provenance)
+            version: PLAN_SCHEMA_VERSION,
             config,
             plan,
             weights: (
@@ -120,6 +165,7 @@ impl PlanArtifact {
             ),
             predicted_t_iter: predicted.field_f64("t_iter")?,
             predicted_c_iter: predicted.field_f64("c_iter")?,
+            strategy,
         })
     }
 
@@ -165,6 +211,7 @@ mod tests {
             (1.0, 2e-4),
             3.25,
             0.000715,
+            "bnb",
         )
     }
 
@@ -175,6 +222,43 @@ mod tests {
         let b = PlanArtifact::from_json_text(&t1).unwrap();
         assert_eq!(b, a);
         assert_eq!(b.to_json_text(), t1);
+    }
+
+    #[test]
+    fn v1_artifacts_load_with_default_provenance() {
+        // a version-1 file: current shape minus the strategy key
+        let mut j = sample().to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".into(), Json::Num(1.0));
+            o.remove("strategy");
+        }
+        let a = PlanArtifact::from_json(&j).unwrap();
+        assert_eq!(a.strategy, V1_STRATEGY);
+        // normalized up: re-saving writes the current schema
+        assert_eq!(a.version, PLAN_SCHEMA_VERSION);
+        let re = a.to_json();
+        assert_eq!(re.field_usize("version").unwrap(), PLAN_SCHEMA_VERSION);
+        assert_eq!(re.field_str("strategy").unwrap(), "bnb");
+
+        // a v1 file carrying a strategy key is contradictory
+        let mut bad = sample().to_json();
+        if let Json::Obj(o) = &mut bad {
+            o.insert("version".into(), Json::Num(1.0));
+        }
+        assert!(PlanArtifact::from_json(&bad).is_err());
+
+        // v2 without a strategy is likewise rejected
+        let mut missing = sample().to_json();
+        if let Json::Obj(o) = &mut missing {
+            o.remove("strategy");
+        }
+        assert!(PlanArtifact::from_json(&missing).is_err());
+        // and an empty provenance string is meaningless
+        let mut empty = sample().to_json();
+        if let Json::Obj(o) = &mut empty {
+            o.insert("strategy".into(), Json::str(""));
+        }
+        assert!(PlanArtifact::from_json(&empty).is_err());
     }
 
     #[test]

@@ -24,8 +24,9 @@ pub mod report;
 
 pub use artifact::{PlanArtifact, PLAN_SCHEMA_VERSION};
 pub use report::{
-    BaselineReport, BaselineRow, Format, PlanPoint, PlanReport, ProfileReport,
-    ProfileRow, Report, SimReport, TableSet, TrainReport,
+    BaselineReport, BaselineRow, Format, PlanCompareReport, PlanPoint,
+    PlanReport, ProfileReport, ProfileRow, Report, SimReport, StrategyRow,
+    TableSet, TrainReport,
 };
 
 use std::path::Path;
@@ -37,10 +38,16 @@ use crate::collective::Chunking;
 use crate::config::ExperimentConfig;
 use crate::model::{zoo, ModelProfile};
 use crate::pipeline::{simulate_iteration, simulate_iteration_scenario};
-use crate::planner::{pareto_front, recommend, sweep, CoOptimizer, PerfModel};
+use crate::planner::{
+    race, solve_request, PerfModel, PlanCandidate, PlanOutcome, PlanRequest,
+    STRATEGIES,
+};
 use crate::platform::pricing::{C5_9XLARGE, R7_2XLARGE};
 use crate::platform::PlatformSpec;
 use crate::trainer;
+
+/// The default plan strategy (`Experiment::plan`, bare `funcpipe plan`).
+pub const DEFAULT_STRATEGY: &str = "bnb";
 
 /// Explicit per-run overrides for [`Experiment::train`]: every field
 /// defaults to "take it from the plan/config". CLI flags map 1:1 onto
@@ -143,44 +150,163 @@ impl Experiment {
         Ok(())
     }
 
-    /// Co-optimize partition + resources over the config's weight sweep
-    /// (§3.4). Returns the Pareto front with the paper's δ ≥ 0.8
-    /// recommendation marked; each point carries a deployable
-    /// [`PlanArtifact`].
-    pub fn plan(&self) -> Result<PlanReport> {
-        let mut opt = CoOptimizer::new(&self.model, &self.platform);
-        opt.perf.sync_alg = self.cfg.sync_alg;
-        opt.perf.chunk_bytes = self.cfg.chunk_bytes;
-        let points = sweep(&self.cfg.weights, |w| {
-            opt.solve(self.cfg.n_micro_global(), w)
-                .map(|(plan, perf, _)| (plan, perf))
-        });
-        let front = pareto_front(&points);
-        let rec = recommend(&front);
-        let points = front
-            .into_iter()
-            .map(|pt| {
-                let recommended =
-                    rec.as_ref().map(|r| r.plan == pt.plan).unwrap_or(false);
-                PlanPoint {
-                    describe: pt.plan.describe(&self.model, &self.platform),
-                    artifact: PlanArtifact::new(
-                        self.cfg.clone(),
-                        pt.plan,
-                        pt.weights,
-                        pt.perf.t_iter,
-                        pt.perf.c_iter,
-                    ),
-                    perf: pt.perf,
-                    recommended,
-                }
+    /// The session's closed-form performance model: the config's sync
+    /// algorithm and chunking policy, over the resolved model/platform.
+    /// Every plan strategy (and every racing thread) reads this one
+    /// model, so its [`StageCache`](crate::planner::StageCache) warms
+    /// once per session.
+    pub fn perf_model(&self) -> PerfModel<'_> {
+        PerfModel::new(&self.model, &self.platform)
+            .with_sync(self.cfg.sync_alg)
+            .with_chunk_bytes(self.cfg.chunk_bytes)
+    }
+
+    /// The default [`PlanRequest`] this session's config describes:
+    /// batch layout, weight sweep and dp options from the config,
+    /// default budgets, no robustness. Callers layer request-only
+    /// options (robust spec, budgets) on top before solving.
+    pub fn plan_request(&self) -> PlanRequest {
+        let mut req = PlanRequest::new(self.cfg.n_micro_global());
+        req.weights = self.cfg.weights.clone();
+        req.dp_options = self.cfg.dp_options.clone();
+        req
+    }
+
+    fn plan_point(
+        &self,
+        cand: &PlanCandidate,
+        strategy: &str,
+        recommended: bool,
+        on_frontier: bool,
+    ) -> PlanPoint {
+        PlanPoint {
+            describe: cand.plan.describe(&self.model, &self.platform),
+            artifact: PlanArtifact::new(
+                self.cfg.clone(),
+                cand.plan.clone(),
+                cand.weights,
+                cand.perf.t_iter,
+                cand.perf.c_iter,
+                strategy,
+            ),
+            perf: cand.perf.clone(),
+            recommended,
+            on_frontier,
+            robust: cand.robust,
+        }
+    }
+
+    fn report_from_outcome(&self, outcome: &PlanOutcome) -> PlanReport {
+        let flags = outcome.frontier_flags();
+        let rec = outcome.recommend_idx();
+        let points = outcome
+            .candidates
+            .iter()
+            .enumerate()
+            .map(|(i, cand)| {
+                self.plan_point(
+                    cand,
+                    &outcome.strategy,
+                    rec == Some(i),
+                    flags[i],
+                )
             })
             .collect();
-        Ok(PlanReport {
+        PlanReport {
             model: self.cfg.model.clone(),
             platform: self.cfg.platform.clone(),
             global_batch: self.cfg.global_batch,
+            strategy: outcome.strategy.clone(),
+            robust: outcome.robust.clone(),
             points,
+        }
+    }
+
+    /// Co-optimize partition + resources over the config's weight sweep
+    /// (§3.4) with the default `bnb` strategy. Returns every candidate
+    /// with the Pareto frontier flagged and the paper's δ ≥ 0.8
+    /// recommendation marked; each point carries a deployable
+    /// [`PlanArtifact`].
+    pub fn plan(&self) -> Result<PlanReport> {
+        self.plan_with(DEFAULT_STRATEGY, &self.plan_request())
+    }
+
+    /// Like [`Experiment::plan`] but with an explicit registry strategy
+    /// (`bnb`, `miqp`, `bayes`, `tpdmp`, `sweep`) and a caller-shaped
+    /// request (robust spec, budgets, dp/weight overrides).
+    pub fn plan_with(
+        &self,
+        strategy: &str,
+        req: &PlanRequest,
+    ) -> Result<PlanReport> {
+        let perf = self.perf_model();
+        let outcome = solve_request(strategy, &perf, req)?;
+        Ok(self.report_from_outcome(&outcome))
+    }
+
+    /// Race EVERY registry strategy in parallel threads over one shared
+    /// perf model (`plan --strategy all`): per-strategy rows plus the
+    /// pooled δ ≥ 0.8 winner across all candidates, credited to the
+    /// strategy that found it first (registry order breaks ties, so the
+    /// report is deterministic).
+    pub fn plan_race(&self, req: &PlanRequest) -> Result<PlanCompareReport> {
+        let perf = self.perf_model();
+        let outcomes = race(&perf, req, &STRATEGIES)?;
+
+        // pool all candidates (deduped across strategies, registry
+        // order) and recommend over the pooled frontier
+        let rank = req.robust.as_ref().map(|r| r.rank);
+        let mut pooled: Vec<(usize, &PlanCandidate)> = Vec::new();
+        for (si, out) in outcomes.iter().enumerate() {
+            for cand in &out.candidates {
+                if !pooled.iter().any(|(_, c)| c.plan == cand.plan) {
+                    pooled.push((si, cand));
+                }
+            }
+        }
+        let metrics: Vec<(f64, f64)> =
+            pooled.iter().map(|(_, c)| c.metric(rank)).collect();
+        let flags = crate::planner::pareto_flags(&metrics);
+        let front: Vec<usize> = flags
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| **f)
+            .map(|(i, _)| i)
+            .collect();
+        let winner = crate::planner::recommend_among(&metrics, &front).map(
+            |i| {
+                let (si, cand) = pooled[i];
+                self.plan_point(cand, &outcomes[si].strategy, true, true)
+            },
+        );
+
+        let rows = outcomes
+            .iter()
+            .map(|out| {
+                let rec = out.recommend_idx().map(|i| {
+                    self.plan_point(
+                        &out.candidates[i],
+                        &out.strategy,
+                        true,
+                        true,
+                    )
+                });
+                StrategyRow {
+                    strategy: out.strategy.clone(),
+                    candidates: out.candidates.len(),
+                    frontier: out.frontier().len(),
+                    nodes: out.stats.nodes,
+                    recommended: rec,
+                }
+            })
+            .collect();
+        Ok(PlanCompareReport {
+            model: self.cfg.model.clone(),
+            platform: self.cfg.platform.clone(),
+            global_batch: self.cfg.global_batch,
+            robust: req.robust.clone(),
+            rows,
+            winner,
         })
     }
 
@@ -523,5 +649,110 @@ mod tests {
         let exp = Experiment::new(small_cfg()).unwrap();
         let report = exp.baselines().unwrap();
         assert_eq!(report.rows.len(), BaselineKind::ALL.len());
+    }
+
+    #[test]
+    fn every_strategy_plans_through_the_one_api() {
+        let exp = Experiment::new(small_cfg()).unwrap();
+        let req = exp.plan_request();
+        for name in STRATEGIES {
+            let report = exp.plan_with(name, &req).unwrap();
+            assert_eq!(report.strategy, name);
+            assert!(!report.points.is_empty(), "{name}");
+            assert_eq!(
+                report.points.iter().filter(|p| p.recommended).count(),
+                1,
+                "{name}"
+            );
+            let rec = report.recommended().unwrap();
+            assert!(rec.on_frontier, "{name}: recommendation off frontier");
+            // provenance travels in the artifact
+            assert_eq!(rec.artifact.strategy, name);
+            rec.artifact
+                .plan
+                .validate(exp.model(), exp.platform())
+                .unwrap();
+        }
+        assert!(exp.plan_with("chaos", &req).is_err());
+    }
+
+    #[test]
+    fn default_plan_is_the_bnb_strategy() {
+        let exp = Experiment::new(small_cfg()).unwrap();
+        let a = exp.plan().unwrap();
+        let b = exp.plan_with(DEFAULT_STRATEGY, &exp.plan_request()).unwrap();
+        assert_eq!(a.strategy, DEFAULT_STRATEGY);
+        assert_eq!(a.points.len(), b.points.len());
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.artifact.plan, pb.artifact.plan);
+            assert_eq!(pa.recommended, pb.recommended);
+        }
+    }
+
+    #[test]
+    fn race_reports_every_strategy_and_a_winner() {
+        let exp = Experiment::new(small_cfg()).unwrap();
+        let report = exp.plan_race(&exp.plan_request()).unwrap();
+        assert_eq!(report.rows.len(), STRATEGIES.len());
+        for (row, name) in report.rows.iter().zip(STRATEGIES) {
+            assert_eq!(row.strategy, name);
+            assert!(row.candidates > 0, "{name} found nothing");
+        }
+        let winner = report.winner.as_ref().expect("pooled winner");
+        assert!(STRATEGIES.contains(&winner.artifact.strategy.as_str()));
+        // the race renders deterministically (the CI byte-compares it)
+        let again = exp.plan_race(&exp.plan_request()).unwrap();
+        assert_eq!(
+            report.render(Format::Json),
+            again.render(Format::Json),
+            "race output drifted between runs"
+        );
+    }
+
+    #[test]
+    fn robust_request_flows_into_the_report() {
+        use crate::planner::{RobustRank, RobustSpec};
+        use crate::simcore::ScenarioSpec;
+        let exp = Experiment::new(small_cfg()).unwrap();
+        let mut req = exp.plan_request();
+        req.robust = Some(RobustSpec {
+            scenario: ScenarioSpec::parse("straggler+jitter").unwrap(),
+            seeds: 4,
+            rank: RobustRank::Worst,
+        });
+        let report = exp.plan_with("bnb", &req).unwrap();
+        assert!(report.robust.is_some());
+        for p in &report.points {
+            let r = p.robust.expect("every point scored");
+            assert!(r.worst_t.is_finite() && r.worst_t > 0.0);
+        }
+        // exactly one recommendation under the robust metric too
+        assert_eq!(
+            report.points.iter().filter(|p| p.recommended).count(),
+            1
+        );
+        // and the JSON names the spec
+        let json = report.render(Format::Json);
+        assert!(json.contains("\"robust\""), "{json}");
+        assert!(json.contains("cold-start") || json.contains("straggler"));
+    }
+
+    #[test]
+    fn plan_request_honors_config_dp_options() {
+        let mut cfg = small_cfg();
+        cfg.dp_options = vec![1, 2];
+        let exp = Experiment::new(cfg).unwrap();
+        let req = exp.plan_request();
+        assert_eq!(req.dp_options, vec![1, 2]);
+        for name in STRATEGIES {
+            let report = exp.plan_with(name, &req).unwrap();
+            for p in &report.points {
+                assert!(
+                    p.artifact.plan.dp <= 2,
+                    "{name} searched outside dp_options: {:?}",
+                    p.artifact.plan
+                );
+            }
+        }
     }
 }

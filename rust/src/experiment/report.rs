@@ -11,7 +11,7 @@ use crate::baselines::BaselineResult;
 use crate::coordinator::WorkerStats;
 use crate::model::Plan;
 use crate::pipeline::{rel_err_pct, SimResult};
-use crate::planner::PlanPerf;
+use crate::planner::{PlanPerf, RobustRank, RobustScore, RobustSpec};
 use crate::simcore::ScenarioSpec;
 use crate::trainer::IterLog;
 use crate::util::humansize::{bytes, secs, usd};
@@ -117,26 +117,96 @@ impl Report for TableSet {
 // plan
 // ---------------------------------------------------------------------------
 
-/// One Pareto-front configuration from a planning sweep.
+/// One evaluated configuration from a planning solve.
 #[derive(Debug, Clone)]
 pub struct PlanPoint {
-    /// The deployable artifact (config + plan + prediction).
+    /// The deployable artifact (config + plan + prediction + strategy
+    /// provenance).
     pub artifact: PlanArtifact,
     /// Full perf-model evaluation (with the Fig. 6 breakdown).
     pub perf: PlanPerf,
     /// Human summary (`[0..7]@4096MB | … d=2 μ=8 workers=6`).
     pub describe: String,
-    /// Selected by the paper's δ ≥ 0.8 recommendation rule.
+    /// Selected by the paper's δ ≥ 0.8 recommendation rule (under the
+    /// robust metric when the request asked for one).
     pub recommended: bool,
+    /// On the Pareto frontier under the ranking metric.
+    pub on_frontier: bool,
+    /// Seeded scenario scores; present iff the request was robust.
+    pub robust: Option<RobustScore>,
 }
 
-/// Result of [`Experiment::plan`](super::Experiment::plan).
+fn robust_spec_json(spec: &RobustSpec) -> Json {
+    Json::obj(vec![
+        ("scenario", Json::str(spec.scenario.name().as_str())),
+        ("seeds", Json::Num(spec.seeds as f64)),
+        ("rank", Json::str(spec.rank.as_str())),
+    ])
+}
+
+fn point_json(p: &PlanPoint) -> Json {
+    let mut fields = vec![
+        (
+            "weights",
+            Json::Arr(vec![
+                Json::Num(p.artifact.weights.0),
+                Json::Num(p.artifact.weights.1),
+            ]),
+        ),
+        ("plan", p.artifact.plan.to_json()),
+        ("describe", Json::str(p.describe.as_str())),
+        ("strategy", Json::str(p.artifact.strategy.as_str())),
+        ("t_iter", Json::Num(p.perf.t_iter)),
+        ("c_iter", Json::Num(p.perf.c_iter)),
+        ("compute_s", Json::Num(p.perf.compute_s)),
+        ("flush_s", Json::Num(p.perf.flush_s)),
+        ("sync_s", Json::Num(p.perf.sync_s)),
+        ("total_mem_gb", Json::Num(p.perf.total_mem_gb)),
+        ("frontier", Json::Bool(p.on_frontier)),
+        ("recommended", Json::Bool(p.recommended)),
+    ];
+    if let Some(r) = &p.robust {
+        fields.push((
+            "robust",
+            Json::obj(vec![
+                ("worst_t", Json::Num(r.worst_t)),
+                ("worst_c", Json::Num(r.worst_c)),
+                ("mean_t", Json::Num(r.mean_t)),
+                ("mean_c", Json::Num(r.mean_c)),
+            ]),
+        ));
+    }
+    Json::obj(fields)
+}
+
+/// The robust columns appended to a point's table row (empty when the
+/// request was not robust).
+fn robust_cells(robust: Option<&RobustScore>, rank: RobustRank) -> Vec<String> {
+    match robust {
+        Some(r) => {
+            let (t, c) = match rank {
+                RobustRank::Worst => (r.worst_t, r.worst_c),
+                RobustRank::Mean => (r.mean_t, r.mean_c),
+            };
+            vec![secs(t), usd(c)]
+        }
+        None => vec![String::new(), String::new()],
+    }
+}
+
+/// Result of [`Experiment::plan`](super::Experiment::plan): every
+/// deduped candidate of the strategy's sweep, frontier-flagged, with
+/// the δ ≥ 0.8 recommendation marked.
 #[derive(Debug, Clone)]
 pub struct PlanReport {
     pub model: String,
     pub platform: String,
     pub global_batch: usize,
-    /// The Pareto front, cheapest weights first.
+    /// Registry key of the strategy that produced the points.
+    pub strategy: String,
+    /// The scenario-robust selection spec, when one was requested.
+    pub robust: Option<RobustSpec>,
+    /// All candidates, cheapest weights first.
     pub points: Vec<PlanPoint>,
 }
 
@@ -144,17 +214,34 @@ impl PlanReport {
     pub fn recommended(&self) -> Option<&PlanPoint> {
         self.points.iter().find(|p| p.recommended)
     }
+
+    /// The Pareto-frontier points, in sweep order.
+    pub fn frontier(&self) -> Vec<&PlanPoint> {
+        self.points.iter().filter(|p| p.on_frontier).collect()
+    }
 }
 
 impl Report for PlanReport {
     fn to_tables(&self) -> Vec<Table> {
+        let mut header = vec![
+            "weights".to_string(),
+            "plan".to_string(),
+            "t_iter".to_string(),
+            "c_iter".to_string(),
+        ];
+        if let Some(spec) = &self.robust {
+            header.push(format!("{} t [{}]", spec.rank.as_str(), spec.scenario.name()));
+            header.push(format!("{} c", spec.rank.as_str()));
+        }
+        header.push("front".to_string());
+        header.push("rec".to_string());
         let mut t = Table::new(format!(
-            "FuncPipe plans — {} on {}, global batch {}",
-            self.model, self.platform, self.global_batch
+            "FuncPipe plans [{}] — {} on {}, global batch {}",
+            self.strategy, self.model, self.platform, self.global_batch
         ))
-        .header(["weights", "plan", "t_iter", "c_iter", "rec"]);
+        .header(header);
         for p in &self.points {
-            t.row([
+            let mut row = vec![
                 format!(
                     "({}, {})",
                     p.artifact.weights.0, p.artifact.weights.1
@@ -162,53 +249,170 @@ impl Report for PlanReport {
                 p.describe.clone(),
                 secs(p.perf.t_iter),
                 usd(p.perf.c_iter),
-                if p.recommended {
-                    "<- recommended".into()
-                } else {
-                    String::new()
-                },
-            ]);
+            ];
+            if let Some(spec) = &self.robust {
+                row.extend(robust_cells(p.robust.as_ref(), spec.rank));
+            }
+            row.push(if p.on_frontier { "*".into() } else { String::new() });
+            row.push(if p.recommended {
+                "<- recommended".into()
+            } else {
+                String::new()
+            });
+            t.row(row);
         }
         vec![t]
     }
 
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
+            ("model", Json::str(self.model.as_str())),
+            ("platform", Json::str(self.platform.as_str())),
+            ("global_batch", Json::Num(self.global_batch as f64)),
+            ("strategy", Json::str(self.strategy.as_str())),
+            (
+                "plans",
+                Json::Arr(self.points.iter().map(point_json).collect()),
+            ),
+        ];
+        if let Some(spec) = &self.robust {
+            fields.push(("robust", robust_spec_json(spec)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Result of [`Experiment::plan_race`](super::Experiment::plan_race)
+/// (`plan --strategy all`): one row per registry strategy plus the
+/// pooled winner — the δ ≥ 0.8 recommendation over the union of every
+/// strategy's candidates, credited to the strategy that found it.
+///
+/// Deliberately carries NO wall-clock columns: the race's output must
+/// byte-replay (a CI `cmp` pins this), and node/candidate counts are
+/// deterministic while solve times are not.
+#[derive(Debug, Clone)]
+pub struct StrategyRow {
+    pub strategy: String,
+    /// Deduped candidates the strategy produced.
+    pub candidates: usize,
+    /// Of those, on the strategy's own frontier.
+    pub frontier: usize,
+    /// Search nodes visited (0 where a strategy does not count nodes).
+    pub nodes: u64,
+    /// The strategy's own δ ≥ 0.8 recommendation.
+    pub recommended: Option<PlanPoint>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PlanCompareReport {
+    pub model: String,
+    pub platform: String,
+    pub global_batch: usize,
+    pub robust: Option<RobustSpec>,
+    pub rows: Vec<StrategyRow>,
+    /// The pooled recommendation across all strategies' candidates; its
+    /// artifact records the winning strategy's provenance.
+    pub winner: Option<PlanPoint>,
+}
+
+impl Report for PlanCompareReport {
+    fn to_tables(&self) -> Vec<Table> {
+        let mut header = vec![
+            "strategy".to_string(),
+            "plans".to_string(),
+            "front".to_string(),
+            "nodes".to_string(),
+            "recommended plan".to_string(),
+            "t_iter".to_string(),
+            "c_iter".to_string(),
+        ];
+        if let Some(spec) = &self.robust {
+            header.push(format!("{} t [{}]", spec.rank.as_str(), spec.scenario.name()));
+            header.push(format!("{} c", spec.rank.as_str()));
+        }
+        header.push("race".to_string());
+        let mut t = Table::new(format!(
+            "plan strategy race — {} on {}, global batch {}",
+            self.model, self.platform, self.global_batch
+        ))
+        .header(header);
+        for row in &self.rows {
+            let win = self
+                .winner
+                .as_ref()
+                .map(|w| w.artifact.strategy == row.strategy)
+                .unwrap_or(false);
+            let mut cells = vec![
+                row.strategy.clone(),
+                row.candidates.to_string(),
+                row.frontier.to_string(),
+                row.nodes.to_string(),
+            ];
+            match &row.recommended {
+                Some(p) => {
+                    cells.push(p.describe.clone());
+                    cells.push(secs(p.perf.t_iter));
+                    cells.push(usd(p.perf.c_iter));
+                    if let Some(spec) = &self.robust {
+                        cells.extend(robust_cells(p.robust.as_ref(), spec.rank));
+                    }
+                }
+                None => {
+                    cells.push("(no feasible plan)".into());
+                    cells.push(String::new());
+                    cells.push(String::new());
+                    if self.robust.is_some() {
+                        cells.push(String::new());
+                        cells.push(String::new());
+                    }
+                }
+            }
+            cells.push(if win { "<- winner".into() } else { String::new() });
+            t.row(cells);
+        }
+        vec![t]
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
             ("model", Json::str(self.model.as_str())),
             ("platform", Json::str(self.platform.as_str())),
             ("global_batch", Json::Num(self.global_batch as f64)),
             (
-                "plans",
+                "strategies",
                 Json::Arr(
-                    self.points
+                    self.rows
                         .iter()
-                        .map(|p| {
-                            Json::obj(vec![
+                        .map(|row| {
+                            let mut f = vec![
+                                ("strategy", Json::str(row.strategy.as_str())),
                                 (
-                                    "weights",
-                                    Json::Arr(vec![
-                                        Json::Num(p.artifact.weights.0),
-                                        Json::Num(p.artifact.weights.1),
-                                    ]),
+                                    "candidates",
+                                    Json::Num(row.candidates as f64),
                                 ),
-                                ("plan", p.artifact.plan.to_json()),
-                                ("describe", Json::str(p.describe.as_str())),
-                                ("t_iter", Json::Num(p.perf.t_iter)),
-                                ("c_iter", Json::Num(p.perf.c_iter)),
-                                ("compute_s", Json::Num(p.perf.compute_s)),
-                                ("flush_s", Json::Num(p.perf.flush_s)),
-                                ("sync_s", Json::Num(p.perf.sync_s)),
-                                (
-                                    "total_mem_gb",
-                                    Json::Num(p.perf.total_mem_gb),
-                                ),
-                                ("recommended", Json::Bool(p.recommended)),
-                            ])
+                                ("frontier", Json::Num(row.frontier as f64)),
+                                ("nodes", Json::Num(row.nodes as f64)),
+                            ];
+                            if let Some(p) = &row.recommended {
+                                f.push(("recommended", point_json(p)));
+                            }
+                            Json::obj(f)
                         })
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        if let Some(spec) = &self.robust {
+            fields.push(("robust", robust_spec_json(spec)));
+        }
+        if let Some(w) = &self.winner {
+            fields.push(("winner", point_json(w)));
+            fields.push((
+                "winner_strategy",
+                Json::str(w.artifact.strategy.as_str()),
+            ));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -384,6 +588,12 @@ impl TrainReport {
         }
     }
 
+    /// Transient `get_blocking` drops injected by the `flaky-network`
+    /// lens across all workers (each absorbed by a retry).
+    pub fn flaky_timeouts_total(&self) -> u64 {
+        self.workers.iter().map(|w| w.flaky_timeouts).sum()
+    }
+
     /// Observed scenario slowdown over the unperturbed timeline,
     /// percent — the train-path analogue of
     /// [`SimReport::scenario_overhead_pct`]. Defined on the virtual
@@ -440,11 +650,17 @@ impl Report for TrainReport {
                 format!("{pct:+.1}%"),
             ]);
         }
+        if self.flaky_timeouts_total() > 0 {
+            t.row([
+                "flaky timeouts (retried)".to_string(),
+                self.flaky_timeouts_total().to_string(),
+            ]);
+        }
         let mut tables = vec![t];
         if !self.scenario.is_deterministic() {
             let mut lens = Table::new("scenario lens (per worker)").header([
                 "worker", "stage", "rep", "gens", "cold", "compute×",
-                "bandwidth×",
+                "bandwidth×", "flaky",
             ]);
             for w in &self.workers {
                 lens.row([
@@ -455,6 +671,7 @@ impl Report for TrainReport {
                     secs(w.cold_start_s),
                     format!("{:.3}", w.lens.compute_mult),
                     format!("{:.3}", w.lens.bandwidth_mult),
+                    w.flaky_timeouts.to_string(),
                 ]);
             }
             tables.push(lens);
@@ -472,6 +689,10 @@ impl Report for TrainReport {
             scenario.push((
                 "cold_start_total_s",
                 Json::Num(self.cold_start_total_s),
+            ));
+            scenario.push((
+                "flaky_timeouts",
+                Json::Num(self.flaky_timeouts_total() as f64),
             ));
             if let Some(pct) = self.scenario_overhead_pct() {
                 scenario.push(("overhead_pct", Json::Num(pct)));
@@ -503,6 +724,10 @@ impl Report for TrainReport {
                                 (
                                     "latency_mult",
                                     Json::Num(w.lens.latency_mult),
+                                ),
+                                (
+                                    "flaky_timeouts",
+                                    Json::Num(w.flaky_timeouts as f64),
                                 ),
                             ])
                         })

@@ -74,16 +74,29 @@ the unified config flags (--config file.json --model <name>
 --batch <n> --micro-batch <n> --platform aws|alibaba
 --merge-layers <n> --merge-criterion compute|params|activations
 --sync pipelined|scatter-reduce --bandwidth-scale <x>
---chunk-bytes <n> --chunks-in-flight <n> --steps <n> --lr <x>
---lifetime <s> --artifacts <dir>); simulate and train add the scenario
-lens (--scenario deterministic|cold-start|straggler|bandwidth-jitter,
+--dp-options 1,2,4 --chunk-bytes <n> --chunks-in-flight <n>
+--steps <n> --lr <x> --lifetime <s> --artifacts <dir>); simulate and
+train add the scenario lens (--scenario
+deterministic|cold-start|straggler|bandwidth-jitter|flaky-network,
 composable as e.g. cold-start+jitter, --seed <n>); profile takes just
 --artifacts, fig just --format. Unknown flags are errors.
 
 COMMANDS:
-  plan      [--out plan.json]
-            co-optimize partition + resources; prints the Pareto sweep
-            and optionally writes the recommended plan artifact
+  plan      [--strategy bnb|miqp|bayes|tpdmp|sweep|all] [--out plan.json]
+            [--robust-scenario <spec>] [--robust-seeds <n>]
+            [--robust-rank worst|mean]
+            co-optimize partition + resources through the strategy
+            registry (default bnb, the exact branch-and-bound); prints
+            every candidate with the Pareto frontier flagged and the
+            δ>=0.8 recommendation marked, and optionally writes the
+            recommended plan artifact. --strategy all races every
+            strategy in parallel threads over one shared perf model and
+            prints a cross-strategy comparison (--out then writes the
+            pooled winner). --robust-scenario re-scores candidates
+            under seeded scenario replays (e.g. straggler+jitter,
+            --robust-seeds 8) and ranks by worst-case (or --robust-rank
+            mean) scenario time/cost instead of the deterministic
+            point estimate
   simulate  [--plan plan.json] [--scenario <name>] [--seed <n>]
             DES-simulate a plan vs the closed-form model; with --plan
             the artifact is the whole input except the scenario lens
@@ -114,9 +127,30 @@ frozen plan replays under both engines through an identical lens:
 }
 
 fn cmd_plan(flags: &HashMap<String, String>, format: Format) -> Result<()> {
+    let strategy = cli::strategy_from_flags(flags)?;
     let cfg = cli::config_from_flags(flags)?;
     let exp = Experiment::new(cfg)?;
-    let report = exp.plan()?;
+    let mut req = exp.plan_request();
+    cli::apply_plan_flags(&mut req, flags)?;
+    if strategy == "all" {
+        // race every registry strategy over one shared perf model;
+        // --out writes the pooled winner (its artifact records which
+        // strategy found it)
+        let report = exp.plan_race(&req)?;
+        if let Some(path) = flags.get("out") {
+            let win = report.winner.as_ref().context(
+                "no feasible plan to write (try other weights/batch)",
+            )?;
+            win.artifact.save(path)?;
+            eprintln!(
+                "wrote race-winning plan artifact ({}) to {path}",
+                win.artifact.strategy
+            );
+        }
+        report.print(format);
+        return Ok(());
+    }
+    let report = exp.plan_with(&strategy, &req)?;
     if let Some(path) = flags.get("out") {
         let rec = report
             .recommended()

@@ -313,6 +313,7 @@ mod tests {
             "straggler",
             "bandwidth-jitter",
             "cold-start+straggler+bandwidth-jitter",
+            "cold-start+flaky-network",
         ] {
             let s = ScenarioSpec::parse(name).unwrap();
             let a = simulate_iteration_scenario(
@@ -332,6 +333,41 @@ mod tests {
                 "{name}: different seeds must differ"
             );
         }
+    }
+
+    #[test]
+    fn flaky_network_replays_and_only_adds_waiting() {
+        // μ = 8 over two stages ⇒ 64 transfer nodes: two seeds drawing
+        // the identical drop pattern is a ~1e-8 event, so the
+        // seed-sensitivity assertion is safe for a discrete scenario
+        let (m, p) = fixture();
+        let plan = Plan {
+            cuts: vec![2],
+            dp: 2,
+            stage_tiers: vec![7, 7],
+            n_micro_global: 16,
+        };
+        let s = ScenarioSpec::parse("flaky-network").unwrap();
+        let base = simulate_iteration(
+            &m, &p, &plan, SyncAlgorithm::PipelinedScatterReduce,
+        );
+        let a = simulate_iteration_scenario(
+            &m, &p, &plan, SyncAlgorithm::PipelinedScatterReduce, &s, 7,
+        );
+        let b = simulate_iteration_scenario(
+            &m, &p, &plan, SyncAlgorithm::PipelinedScatterReduce, &s, 7,
+        );
+        assert_eq!(a.t_iter.to_bits(), b.t_iter.to_bits());
+        // dead attempts only ever add waiting
+        assert!(a.t_iter >= base.t_iter);
+        let c = simulate_iteration_scenario(
+            &m, &p, &plan, SyncAlgorithm::PipelinedScatterReduce, &s, 8,
+        );
+        assert_ne!(
+            a.t_iter.to_bits(),
+            c.t_iter.to_bits(),
+            "seeds 7 and 8 drew identical flaky drop patterns"
+        );
     }
 
     #[test]

@@ -14,6 +14,29 @@ use crate::planner::perf_model::{PerfModel, PlanPerf};
 use crate::platform::PlatformSpec;
 use crate::util::rng::Rng;
 
+/// The GP search's hyper-parameters, separated from the model handle so
+/// the `bayes` registry strategy can run the same search over a shared
+/// [`PerfModel`].
+#[derive(Debug, Clone)]
+pub struct BayesParams {
+    pub init_rounds: usize,
+    pub total_rounds: usize,
+    pub candidates_per_round: usize,
+    pub seed: u64,
+}
+
+impl Default for BayesParams {
+    fn default() -> Self {
+        Self {
+            init_rounds: 20,
+            total_rounds: 100, // paper: 100 rounds
+            candidates_per_round: 256,
+            seed: 0xBA4E5,
+        }
+    }
+}
+
+/// The classic struct API over the shared [`solve_with`] core.
 pub struct BayesOpt<'a> {
     pub perf: PerfModel<'a>,
     pub dp_options: Vec<usize>,
@@ -25,16 +48,56 @@ pub struct BayesOpt<'a> {
 
 impl<'a> BayesOpt<'a> {
     pub fn new(model: &'a ModelProfile, platform: &'a PlatformSpec) -> Self {
+        let d = BayesParams::default();
         Self {
             perf: PerfModel::new(model, platform),
-            dp_options: vec![1, 2, 4, 8, 16, 32],
-            init_rounds: 20,
-            total_rounds: 100, // paper: 100 rounds
-            candidates_per_round: 256,
-            seed: 0xBA4E5,
+            dp_options: crate::planner::DEFAULT_DP_OPTIONS.to_vec(),
+            init_rounds: d.init_rounds,
+            total_rounds: d.total_rounds,
+            candidates_per_round: d.candidates_per_round,
+            seed: d.seed,
         }
     }
 
+    /// Run the optimization; returns the best feasible plan found.
+    pub fn solve(
+        &self,
+        n_micro_global: usize,
+        alpha: (f64, f64),
+    ) -> Option<(Plan, PlanPerf)> {
+        let params = BayesParams {
+            init_rounds: self.init_rounds,
+            total_rounds: self.total_rounds,
+            candidates_per_round: self.candidates_per_round,
+            seed: self.seed,
+        };
+        solve_with(&self.perf, &self.dp_options, &params, n_micro_global, alpha)
+    }
+}
+
+/// Run the GP-EI search over any (possibly shared) [`PerfModel`];
+/// returns the best feasible plan found (None if every round decoded to
+/// OOM — the failure mode §5.1 reports). Deterministic in
+/// `params.seed`.
+pub fn solve_with(
+    perf: &PerfModel<'_>,
+    dp_options: &[usize],
+    params: &BayesParams,
+    n_micro_global: usize,
+    alpha: (f64, f64),
+) -> Option<(Plan, PlanPerf)> {
+    Search { perf, dp_options, params }.solve(n_micro_global, alpha)
+}
+
+/// Borrowed search state shared by the struct API and the registry
+/// strategy.
+struct Search<'b, 'a> {
+    perf: &'b PerfModel<'a>,
+    dp_options: &'b [usize],
+    params: &'b BayesParams,
+}
+
+impl Search<'_, '_> {
     fn dims(&self) -> usize {
         // [d] + [cut indicator per boundary] + [tier per layer]
         let l = self.perf.model.n_layers();
@@ -76,21 +139,21 @@ impl<'a> BayesOpt<'a> {
         alpha.0 * perf.c_iter + alpha.1 * perf.t_iter
     }
 
-    /// Run the optimization; returns the best feasible plan found (None if
-    /// every round decoded to OOM — the failure mode §5.1 reports).
-    pub fn solve(
+    /// Run the optimization; returns the best feasible plan found (None
+    /// if every round decoded to OOM — the failure mode §5.1 reports).
+    fn solve(
         &self,
         n_micro_global: usize,
         alpha: (f64, f64),
     ) -> Option<(Plan, PlanPerf)> {
-        let mut rng = Rng::new(self.seed);
+        let mut rng = Rng::new(self.params.seed);
         let dims = self.dims();
         let mut xs: Vec<Vec<f64>> = Vec::new();
         let mut ys: Vec<f64> = Vec::new();
         let mut best: Option<(f64, Plan)> = None;
 
-        for round in 0..self.total_rounds {
-            let x = if round < self.init_rounds || ys.is_empty() {
+        for round in 0..self.params.total_rounds {
+            let x = if round < self.params.init_rounds || ys.is_empty() {
                 (0..dims).map(|_| rng.next_f64()).collect::<Vec<f64>>()
             } else {
                 self.propose(&xs, &ys, &mut rng)
@@ -144,7 +207,7 @@ impl<'a> BayesOpt<'a> {
 
         let mut best_x: Option<Vec<f64>> = None;
         let mut best_ei = f64::NEG_INFINITY;
-        for _ in 0..self.candidates_per_round {
+        for _ in 0..self.params.candidates_per_round {
             let cand: Vec<f64> =
                 (0..dims).map(|_| rng.next_f64()).collect();
             let kv: Vec<f64> = xs.iter().map(|x| k(x, &cand)).collect();

@@ -23,6 +23,9 @@ pub struct MiqpSolution {
     pub nodes: u64,
 }
 
+/// The classic struct API over the shared [`solve_with`] core (the
+/// `miqp` registry strategy calls the core directly against a shared
+/// [`PerfModel`]).
 pub struct MiqpSolver<'a> {
     pub perf: PerfModel<'a>,
     pub dp_options: Vec<usize>,
@@ -32,7 +35,7 @@ impl<'a> MiqpSolver<'a> {
     pub fn new(model: &'a ModelProfile, platform: &'a PlatformSpec) -> Self {
         Self {
             perf: PerfModel::new(model, platform),
-            dp_options: vec![1, 2, 4, 8, 16, 32],
+            dp_options: crate::planner::DEFAULT_DP_OPTIONS.to_vec(),
         }
     }
 
@@ -41,126 +44,148 @@ impl<'a> MiqpSolver<'a> {
         n_micro_global: usize,
         alpha: (f64, f64),
     ) -> Option<MiqpSolution> {
-        let m = self.perf.model;
-        let _p = self.perf.platform;
-        let l = m.n_layers();
-        let mut nodes = 0u64;
-        let mut best: Option<(f64, Plan)> = None;
+        solve_with(&self.perf, &self.dp_options, u64::MAX, n_micro_global, alpha)
+    }
+}
 
-        // enumerate y (one-hot over d)
-        for &d in &self.dp_options {
-            if d == 0 || n_micro_global % d != 0 {
-                continue;
-            }
-            // enumerate x and z jointly, layer by layer. State: current
-            // stage start and its tier (z is constant within a stage by
-            // (3c)).
-            let mut x = vec![false; l.saturating_sub(1)];
-            self.enumerate(
-                0,
-                None,
-                &mut x,
-                &mut Vec::new(),
-                d,
-                n_micro_global,
-                alpha,
-                &mut best,
-                &mut nodes,
-            );
+/// The direct binary-variable solver, independent of the struct
+/// wrapper: enumerate y (one-hot over d), then x and z jointly with
+/// constraint propagation. `node_budget` caps the enumeration (anytime
+/// behaviour, `u64::MAX` = exact).
+pub fn solve_with(
+    perf: &PerfModel<'_>,
+    dp_options: &[usize],
+    node_budget: u64,
+    n_micro_global: usize,
+    alpha: (f64, f64),
+) -> Option<MiqpSolution> {
+    let m = perf.model;
+    let l = m.n_layers();
+    let mut nodes = 0u64;
+    let mut best: Option<(f64, Plan)> = None;
+
+    for &d in dp_options {
+        if d == 0 || n_micro_global % d != 0 {
+            continue;
         }
-        best.map(|(objective, plan)| MiqpSolution { plan, objective, nodes })
+        // enumerate x and z jointly, layer by layer. State: current
+        // stage start and its tier (z is constant within a stage by
+        // (3c)).
+        let mut x = vec![false; l.saturating_sub(1)];
+        enumerate(
+            perf,
+            node_budget,
+            0,
+            None,
+            &mut x,
+            &mut Vec::new(),
+            d,
+            n_micro_global,
+            alpha,
+            &mut best,
+            &mut nodes,
+        );
+    }
+    best.map(|(objective, plan)| MiqpSolution { plan, objective, nodes })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn enumerate(
+    perf: &PerfModel<'_>,
+    node_budget: u64,
+    layer: usize,
+    cur_tier: Option<(usize, usize)>, // (stage start layer, tier)
+    x: &mut Vec<bool>,
+    tiers: &mut Vec<usize>,
+    d: usize,
+    n_micro_global: usize,
+    alpha: (f64, f64),
+    best: &mut Option<(f64, Plan)>,
+    nodes: &mut u64,
+) {
+    let m = perf.model;
+    let p = perf.platform;
+    let l = m.n_layers();
+    *nodes += 1;
+    if *nodes > node_budget {
+        return;
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn enumerate(
-        &self,
-        layer: usize,
-        cur_tier: Option<(usize, usize)>, // (stage start layer, tier)
-        x: &mut Vec<bool>,
-        tiers: &mut Vec<usize>,
-        d: usize,
-        n_micro_global: usize,
-        alpha: (f64, f64),
-        best: &mut Option<(f64, Plan)>,
-        nodes: &mut u64,
-    ) {
-        let m = self.perf.model;
-        let p = self.perf.platform;
-        let l = m.n_layers();
-        *nodes += 1;
+    // choose z for `layer`: free at a stage start, forced otherwise
+    let tier_choices: Vec<usize> = match cur_tier {
+        None => (0..p.n_tiers()).collect(),
+        Some((_, t)) => vec![t],
+    };
+    for tier in tier_choices {
+        let stage_start = cur_tier.map(|(s, _)| s).unwrap_or(layer);
+        // (3b) check on the stage prefix [stage_start..=layer]
+        let mu = n_micro_global / d;
+        let act = m.range_act_bytes(stage_start, layer);
+        let params = m.range_param_bytes(stage_start, layer);
+        let copies = if d == 1 { 2 } else { 4 };
+        let need = (mu as u64) * act
+            + params * copies
+            + p.base_mem_mb * 1024 * 1024;
+        if need > p.tier(tier).mem_bytes() {
+            continue;
+        }
 
-        // choose z for `layer`: free at a stage start, forced otherwise
-        let tier_choices: Vec<usize> = match cur_tier {
-            None => (0..p.n_tiers()).collect(),
-            Some((_, t)) => vec![t],
-        };
-        for tier in tier_choices {
-            let stage_start = cur_tier.map(|(s, _)| s).unwrap_or(layer);
-            // (3b) check on the stage prefix [stage_start..=layer]
-            let mu = n_micro_global / d;
-            let act = m.range_act_bytes(stage_start, layer);
-            let params = m.range_param_bytes(stage_start, layer);
-            let copies = if d == 1 { 2 } else { 4 };
-            let need = (mu as u64) * act
-                + params * copies
-                + p.base_mem_mb * 1024 * 1024;
-            if need > p.tier(tier).mem_bytes() {
-                continue;
+        if layer == l - 1 {
+            // complete assignment — close final stage
+            tiers.push(tier);
+            let cuts: Vec<usize> = (0..l - 1).filter(|&i| x[i]).collect();
+            let plan = Plan {
+                cuts,
+                dp: d,
+                stage_tiers: tiers.clone(),
+                n_micro_global,
+            };
+            if plan.validate(m, p).is_ok() {
+                let pf = perf.evaluate(&plan);
+                let j = alpha.0 * pf.c_iter + alpha.1 * pf.t_iter;
+                if best.as_ref().map(|(b, _)| j < *b).unwrap_or(true) {
+                    *best = Some((j, plan));
+                }
             }
+            tiers.pop();
+            continue;
+        }
 
-            if layer == l - 1 {
-                // complete assignment — close final stage
+        // branch on x[layer]
+        for cut in [true, false] {
+            x[layer] = cut;
+            if cut {
                 tiers.push(tier);
-                let cuts: Vec<usize> = (0..l - 1).filter(|&i| x[i]).collect();
-                let plan = Plan {
-                    cuts,
-                    dp: d,
-                    stage_tiers: tiers.clone(),
+                enumerate(
+                    perf,
+                    node_budget,
+                    layer + 1,
+                    None,
+                    x,
+                    tiers,
+                    d,
                     n_micro_global,
-                };
-                if plan.validate(m, p).is_ok() {
-                    let perf = self.perf.evaluate(&plan);
-                    let j = alpha.0 * perf.c_iter + alpha.1 * perf.t_iter;
-                    if best.as_ref().map(|(b, _)| j < *b).unwrap_or(true) {
-                        *best = Some((j, plan));
-                    }
-                }
+                    alpha,
+                    best,
+                    nodes,
+                );
                 tiers.pop();
-                continue;
+            } else {
+                enumerate(
+                    perf,
+                    node_budget,
+                    layer + 1,
+                    Some((stage_start, tier)),
+                    x,
+                    tiers,
+                    d,
+                    n_micro_global,
+                    alpha,
+                    best,
+                    nodes,
+                );
             }
-
-            // branch on x[layer]
-            for cut in [true, false] {
-                x[layer] = cut;
-                if cut {
-                    tiers.push(tier);
-                    self.enumerate(
-                        layer + 1,
-                        None,
-                        x,
-                        tiers,
-                        d,
-                        n_micro_global,
-                        alpha,
-                        best,
-                        nodes,
-                    );
-                    tiers.pop();
-                } else {
-                    self.enumerate(
-                        layer + 1,
-                        Some((stage_start, tier)),
-                        x,
-                        tiers,
-                        d,
-                        n_micro_global,
-                        alpha,
-                        best,
-                        nodes,
-                    );
-                }
-                x[layer] = false;
-            }
+            x[layer] = false;
         }
     }
 }

@@ -1,29 +1,46 @@
-//! §3.4: co-optimization of model partition and resource allocation.
+//! §3.4: co-optimization of model partition and resource allocation —
+//! one [`Planner`] API over five interchangeable strategies.
 //!
-//! * [`perf_model`] — the closed-form iteration time/cost model
-//!   (§3.4.2 + App. B) shared by every optimizer below;
-//! * [`optimizer`] — FuncPipe's exact branch-and-bound co-optimizer over
-//!   (partition, data-parallel degree, per-stage memory tier);
-//! * [`miqp`] — a direct solver over the paper's binary decision variables
-//!   (x_i, y_k, z_{i,j}); replaces Gurobi (DESIGN.md §7), cross-checks
-//!   [`optimizer`];
-//! * [`tpdmp`] — the TPDMP baseline (§5.6): throughput-maximal partition
-//!   under fixed resources + grid search over allocations;
-//! * [`bayes`] — Bayesian-optimization baseline: GP + expected improvement
-//!   over the joint encoded space;
-//! * [`pareto`] — weight sweep, Pareto frontier and the paper's δ≥0.8
-//!   recommendation rule.
+//! A [`PlanRequest`] (weight sweep, micro-batch budget, dp options,
+//! node/time budget, optional scenario-robustness spec) goes in; a
+//! [`PlanOutcome`] (deduped candidates with [`PlanPerf`], solve stats,
+//! Pareto frontier, δ ≥ 0.8 recommendation, strategy provenance) comes
+//! out. The strategies live behind the string-keyed registry in
+//! [`strategy`] ([`strategy_by_name`], [`solve_request`], [`race`]):
+//!
+//! | key | module | what it is |
+//! |---|---|---|
+//! | `bnb` | [`optimizer`] | FuncPipe's exact branch-and-bound over (partition, d, per-stage tier) — the default |
+//! | `miqp` | [`miqp`] | direct solver over the paper's binary decision variables (x_i, y_k, z_{i,j}); replaces Gurobi (DESIGN.md §7) and certifies `bnb` |
+//! | `bayes` | [`bayes`] | CherryPick-style GP + expected-improvement baseline, seeded and deterministic |
+//! | `tpdmp` | [`tpdmp`] | the TPDMP baseline (§5.6): throughput-max partition under a fixed-resource grid |
+//! | `sweep` | [`strategy`] | balanced-partition × uniform-tier × dp configuration grid under the closed-form model |
+//!
+//! Every strategy reads the same [`PerfModel`] (closed-form §3.4.2
+//! model + memoizing [`StageCache`]); `plan --strategy all` races them
+//! in parallel threads over ONE shared model so the cache warms once.
+//! [`pareto`] keeps the generic frontier/δ-rule plumbing (also used by
+//! the legacy sweep API the examples exercise), and
+//! [`perf_model`] the closed-form iteration time/cost model (§3.4.2 +
+//! App. B) every strategy shares.
 
 pub mod bayes;
 pub mod miqp;
 pub mod optimizer;
 pub mod pareto;
 pub mod perf_model;
+pub mod strategy;
 pub mod tpdmp;
 
 pub use optimizer::{CoOptimizer, SolveStats};
-pub use pareto::{pareto_front, recommend, sweep, SweepPoint};
+pub use pareto::{
+    pareto_flags, pareto_front, recommend, recommend_among, sweep, SweepPoint,
+};
 pub use perf_model::{PerfModel, PlanPerf, StageCache, StageTerms};
+pub use strategy::{
+    race, solve_request, strategy_by_name, PlanCandidate, PlanOutcome,
+    PlanRequest, Planner, RobustRank, RobustScore, RobustSpec, STRATEGIES,
+};
 
 /// Weight pairs (α1 cost-weight, α2 time-weight) tracing the Pareto
 /// frontier. The paper's magnitudes (1, 2^16…) are tied to its internal
@@ -31,3 +48,10 @@ pub use perf_model::{PerfModel, PlanPerf, StageCache, StageTerms};
 /// produce distinct speed/cost trade-offs on every zoo model.
 pub const DEFAULT_WEIGHTS: [(f64, f64); 4] =
     [(1.0, 0.0), (1.0, 2e-5), (1.0, 2e-4), (1.0, 2e-3)];
+
+/// Default candidate data-parallel degrees (`D` in §3.4.1). ONE
+/// definition searched by every strategy — historically each solver
+/// hardcoded its own copy — and overridable per session via the
+/// `dp_options` config key / `--dp-options` flag ([`PlanRequest`]
+/// validates each degree against the platform's concurrency cap).
+pub const DEFAULT_DP_OPTIONS: [usize; 6] = [1, 2, 4, 8, 16, 32];

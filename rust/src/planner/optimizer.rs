@@ -31,13 +31,19 @@ pub struct SolveStats {
     pub solve_time_s: f64,
 }
 
-/// The co-optimizer.
+/// Default DFS node cap (anytime behaviour; never hit in practice for
+/// merged models, L ≤ 24). Shared with
+/// [`PlanRequest`](super::strategy::PlanRequest).
+pub const DEFAULT_NODE_BUDGET: u64 = 50_000_000;
+
+/// The co-optimizer — the classic struct API over the shared
+/// [`solve_with`] core (the `bnb` registry strategy calls the core
+/// directly against a shared [`PerfModel`]).
 pub struct CoOptimizer<'a> {
     pub perf: PerfModel<'a>,
     /// Candidate data-parallel degrees (`D` in §3.4.1).
     pub dp_options: Vec<usize>,
-    /// Hard cap on DFS nodes (anytime behaviour; never hit in practice
-    /// for merged models, L ≤ 24).
+    /// Hard cap on DFS nodes.
     pub node_budget: u64,
 }
 
@@ -45,8 +51,8 @@ impl<'a> CoOptimizer<'a> {
     pub fn new(model: &'a ModelProfile, platform: &'a PlatformSpec) -> Self {
         Self {
             perf: PerfModel::new(model, platform),
-            dp_options: vec![1, 2, 4, 8, 16, 32],
-            node_budget: 50_000_000,
+            dp_options: crate::planner::DEFAULT_DP_OPTIONS.to_vec(),
+            node_budget: DEFAULT_NODE_BUDGET,
         }
     }
 
@@ -57,106 +63,13 @@ impl<'a> CoOptimizer<'a> {
         n_micro_global: usize,
         alpha: (f64, f64),
     ) -> Option<(Plan, PlanPerf, SolveStats)> {
-        let start = Instant::now();
-        let mut stats = SolveStats::default();
-        let mut best: Option<(f64, Plan)> = None;
-
-        let m = self.perf.model;
-        let p = self.perf.platform;
-        let l = m.n_layers();
-
-        // per-layer minimum compute (fastest tier) for the bound
-        let fastest_tier = (0..p.n_tiers())
-            .max_by(|&a, &b| {
-                p.tier(a)
-                    .compute_speed
-                    .partial_cmp(&p.tier(b).compute_speed)
-                    .unwrap()
-            })
-            .unwrap();
-        let min_layer_s: Vec<f64> = (0..l)
-            .map(|i| m.layers[i].fwd_s[fastest_tier] + m.layers[i].bwd_s[fastest_tier])
-            .collect();
-        // suffix sums of the per-layer minima
-        let mut suffix_min_s = vec![0.0; l + 1];
-        for i in (0..l).rev() {
-            suffix_min_s[i] = suffix_min_s[i + 1] + min_layer_s[i];
-        }
-        // per-layer minimum fwd/bwd lag contributions (fastest tier) for
-        // the (μ-1)·Δ part of the bound: every remaining layer ends up in
-        // some stage, so Δ_f ≥ its fwd time (suffix max).
-        let mut suffix_max_fwd = vec![0.0f64; l + 1];
-        let mut suffix_max_bwd = vec![0.0f64; l + 1];
-        for i in (0..l).rev() {
-            suffix_max_fwd[i] =
-                suffix_max_fwd[i + 1].max(m.layers[i].fwd_s[fastest_tier]);
-            suffix_max_bwd[i] =
-                suffix_max_bwd[i + 1].max(m.layers[i].bwd_s[fastest_tier]);
-        }
-
-        for &d in &self.dp_options {
-            if d == 0 || n_micro_global % d != 0 {
-                continue;
-            }
-            let mu = n_micro_global / d;
-            if mu == 0 {
-                continue;
-            }
-            // per-layer minimal feasible tier memory (GB) given (μ, d):
-            // some stage must hold layer i, and that stage needs at least
-            // the memory layer i alone requires — suffix max is a valid
-            // bound on the remaining layers' largest stage allocation.
-            let copies = if d == 1 { 2u64 } else { 4u64 };
-            let mut suffix_min_gb = vec![0.0f64; l + 1];
-            let mut infeasible_d = false;
-            for i in (0..l).rev() {
-                let need = (mu as u64) * m.layers[i].act_bytes
-                    + copies * m.layers[i].param_bytes
-                    + p.base_mem_mb * 1024 * 1024;
-                let tier_gb = p
-                    .tiers
-                    .iter()
-                    .filter(|t| t.mem_bytes() >= need)
-                    .map(|t| t.mem_gb())
-                    .fold(f64::INFINITY, f64::min);
-                if !tier_gb.is_finite() {
-                    infeasible_d = true; // a single layer cannot fit: skip d
-                    break;
-                }
-                suffix_min_gb[i] = suffix_min_gb[i + 1].max(tier_gb);
-            }
-            if infeasible_d {
-                continue;
-            }
-            let mut ctx = Dfs {
-                opt: self,
-                d,
-                mu,
-                n_micro_global,
-                alpha,
-                suffix_min_s: &suffix_min_s,
-                suffix_max_fwd: &suffix_max_fwd,
-                suffix_max_bwd: &suffix_max_bwd,
-                suffix_min_gb: &suffix_min_gb,
-                cuts: Vec::new(),
-                tiers: Vec::new(),
-                committed_s: 0.0,
-                committed_gb: 0.0,
-                max_fc: 0.0,
-                max_bc: 0.0,
-                committed_comm: 0.0,
-                sync_lb: 0.0,
-                stats: &mut stats,
-                best: &mut best,
-            };
-            ctx.go(0);
-        }
-
-        stats.solve_time_s = start.elapsed().as_secs_f64();
-        best.map(|(_, plan)| {
-            let perf = self.perf.evaluate(&plan);
-            (plan, perf, stats)
-        })
+        solve_with(
+            &self.perf,
+            &self.dp_options,
+            self.node_budget,
+            n_micro_global,
+            alpha,
+        )
     }
 
     /// Convenience: solve for every weight pair; returns deduped plans.
@@ -177,8 +90,123 @@ impl<'a> CoOptimizer<'a> {
     }
 }
 
+/// The branch-and-bound core, independent of the struct wrapper: solves
+/// against any (possibly shared) [`PerfModel`], which is what lets
+/// `plan --strategy all` race it in a thread against the other registry
+/// strategies over one warm [`StageCache`](super::StageCache).
+pub fn solve_with(
+    perf: &PerfModel<'_>,
+    dp_options: &[usize],
+    node_budget: u64,
+    n_micro_global: usize,
+    alpha: (f64, f64),
+) -> Option<(Plan, PlanPerf, SolveStats)> {
+    let start = Instant::now();
+    let mut stats = SolveStats::default();
+    let mut best: Option<(f64, Plan)> = None;
+
+    let m = perf.model;
+    let p = perf.platform;
+    let l = m.n_layers();
+
+    // per-layer minimum compute (fastest tier) for the bound
+    let fastest_tier = (0..p.n_tiers())
+        .max_by(|&a, &b| {
+            p.tier(a)
+                .compute_speed
+                .partial_cmp(&p.tier(b).compute_speed)
+                .unwrap()
+        })
+        .unwrap();
+    let min_layer_s: Vec<f64> = (0..l)
+        .map(|i| m.layers[i].fwd_s[fastest_tier] + m.layers[i].bwd_s[fastest_tier])
+        .collect();
+    // suffix sums of the per-layer minima
+    let mut suffix_min_s = vec![0.0; l + 1];
+    for i in (0..l).rev() {
+        suffix_min_s[i] = suffix_min_s[i + 1] + min_layer_s[i];
+    }
+    // per-layer minimum fwd/bwd lag contributions (fastest tier) for
+    // the (μ-1)·Δ part of the bound: every remaining layer ends up in
+    // some stage, so Δ_f ≥ its fwd time (suffix max).
+    let mut suffix_max_fwd = vec![0.0f64; l + 1];
+    let mut suffix_max_bwd = vec![0.0f64; l + 1];
+    for i in (0..l).rev() {
+        suffix_max_fwd[i] =
+            suffix_max_fwd[i + 1].max(m.layers[i].fwd_s[fastest_tier]);
+        suffix_max_bwd[i] =
+            suffix_max_bwd[i + 1].max(m.layers[i].bwd_s[fastest_tier]);
+    }
+
+    for &d in dp_options {
+        if d == 0 || n_micro_global % d != 0 {
+            continue;
+        }
+        let mu = n_micro_global / d;
+        if mu == 0 {
+            continue;
+        }
+        // per-layer minimal feasible tier memory (GB) given (μ, d):
+        // some stage must hold layer i, and that stage needs at least
+        // the memory layer i alone requires — suffix max is a valid
+        // bound on the remaining layers' largest stage allocation.
+        let copies = if d == 1 { 2u64 } else { 4u64 };
+        let mut suffix_min_gb = vec![0.0f64; l + 1];
+        let mut infeasible_d = false;
+        for i in (0..l).rev() {
+            let need = (mu as u64) * m.layers[i].act_bytes
+                + copies * m.layers[i].param_bytes
+                + p.base_mem_mb * 1024 * 1024;
+            let tier_gb = p
+                .tiers
+                .iter()
+                .filter(|t| t.mem_bytes() >= need)
+                .map(|t| t.mem_gb())
+                .fold(f64::INFINITY, f64::min);
+            if !tier_gb.is_finite() {
+                infeasible_d = true; // a single layer cannot fit: skip d
+                break;
+            }
+            suffix_min_gb[i] = suffix_min_gb[i + 1].max(tier_gb);
+        }
+        if infeasible_d {
+            continue;
+        }
+        let mut ctx = Dfs {
+            perf,
+            node_budget,
+            d,
+            mu,
+            n_micro_global,
+            alpha,
+            suffix_min_s: &suffix_min_s,
+            suffix_max_fwd: &suffix_max_fwd,
+            suffix_max_bwd: &suffix_max_bwd,
+            suffix_min_gb: &suffix_min_gb,
+            cuts: Vec::new(),
+            tiers: Vec::new(),
+            committed_s: 0.0,
+            committed_gb: 0.0,
+            max_fc: 0.0,
+            max_bc: 0.0,
+            committed_comm: 0.0,
+            sync_lb: 0.0,
+            stats: &mut stats,
+            best: &mut best,
+        };
+        ctx.go(0);
+    }
+
+    stats.solve_time_s = start.elapsed().as_secs_f64();
+    best.map(|(_, plan)| {
+        let perf = perf.evaluate(&plan);
+        (plan, perf, stats)
+    })
+}
+
 struct Dfs<'b, 'a> {
-    opt: &'b CoOptimizer<'a>,
+    perf: &'b PerfModel<'a>,
+    node_budget: u64,
     d: usize,
     mu: usize,
     n_micro_global: usize,
@@ -205,11 +233,11 @@ struct Dfs<'b, 'a> {
 impl Dfs<'_, '_> {
     /// Extend the partial plan whose next unassigned layer is `lo`.
     fn go(&mut self, lo: usize) {
-        let m = self.opt.perf.model;
-        let p = self.opt.perf.platform;
+        let m = self.perf.model;
+        let p = self.perf.platform;
         let l = m.n_layers();
         self.stats.nodes += 1;
-        if self.stats.nodes > self.opt.node_budget {
+        if self.stats.nodes > self.node_budget {
             return;
         }
 
@@ -223,7 +251,7 @@ impl Dfs<'_, '_> {
                 n_micro_global: self.n_micro_global,
             };
             debug_assert!(plan.validate(m, p).is_ok());
-            let (t_iter, c_iter) = self.opt.perf.quick(&plan);
+            let (t_iter, c_iter) = self.perf.quick(&plan);
             let j = self.alpha.0 * c_iter + self.alpha.1 * t_iter;
             if self.best.as_ref().map(|(b, _)| j < *b).unwrap_or(true) {
                 *self.best = Some((j, plan));
@@ -271,7 +299,7 @@ impl Dfs<'_, '_> {
         // (range, tier) pair anywhere in the search is O(1).
         for hi in lo..l {
             for j in (0..p.n_tiers()).rev() {
-                let terms = self.opt.perf.stage_terms(lo, hi, j);
+                let terms = self.perf.stage_terms(lo, hi, j);
                 // feasibility (3b)
                 let sync_copies = if self.d == 1 { 2 } else { 4 };
                 let need = (self.mu as u64) * terms.act_bytes
@@ -305,7 +333,7 @@ impl Dfs<'_, '_> {
                     // t_iter ≥ ... + t_s of this stage; its tier is known,
                     // raw tier bandwidth ≥ effective → admissible
                     let sync = crate::collective::sync_time(
-                        self.opt.perf.sync_alg,
+                        self.perf.sync_alg,
                         terms.param_bytes as f64,
                         self.d,
                         p.tier(j).bandwidth_bps,

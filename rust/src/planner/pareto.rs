@@ -32,35 +32,41 @@ where
     out
 }
 
-/// Pareto-filter on (t_iter, c_iter): keep points not dominated by any
-/// other (strictly better in one dimension, no worse in the other).
-pub fn pareto_front(points: &[SweepPoint]) -> Vec<SweepPoint> {
-    points
+/// Whether metric pair `b` dominates `a` (strictly better in one of
+/// (t, c), no worse in the other).
+fn dominates(b: (f64, f64), a: (f64, f64)) -> bool {
+    (b.0 < a.0 - 1e-12 && b.1 <= a.1 + 1e-12)
+        || (b.1 < a.1 - 1e-12 && b.0 <= a.0 + 1e-12)
+}
+
+/// Non-domination flags over `(t, c)` metric pairs — the generic core
+/// behind [`pareto_front`] and
+/// [`PlanOutcome::frontier_flags`](super::PlanOutcome::frontier_flags),
+/// which feeds it either the deterministic `(t_iter, c_iter)` or the
+/// scenario-robust worst/mean metric.
+pub fn pareto_flags(metrics: &[(f64, f64)]) -> Vec<bool> {
+    metrics
         .iter()
-        .filter(|a| {
-            !points.iter().any(|b| {
-                (b.perf.t_iter < a.perf.t_iter - 1e-12
-                    && b.perf.c_iter <= a.perf.c_iter + 1e-12)
-                    || (b.perf.c_iter < a.perf.c_iter - 1e-12
-                        && b.perf.t_iter <= a.perf.t_iter + 1e-12)
-            })
-        })
-        .cloned()
+        .map(|&a| !metrics.iter().any(|&b| dominates(b, a)))
         .collect()
 }
 
-/// The paper's recommendation rule over a sweep (must contain the
-/// minimum-cost point, i.e. weights (1,0) should be in the sweep).
-pub fn recommend(points: &[SweepPoint]) -> Option<SweepPoint> {
-    let mc = points
+/// The δ ≥ 0.8 recommendation rule over `(t, c)` metric pairs,
+/// restricted to the candidate indices in `idxs` (must contain the
+/// minimum-cost point, i.e. weights (1, 0) should be in the sweep).
+/// Returns the winning index.
+pub fn recommend_among(metrics: &[(f64, f64)], idxs: &[usize]) -> Option<usize> {
+    let mc = idxs
         .iter()
-        .min_by(|a, b| a.perf.c_iter.partial_cmp(&b.perf.c_iter).unwrap())?;
-    let (t_mc, c_mc) = (mc.perf.t_iter, mc.perf.c_iter);
-    let mut cands: Vec<&SweepPoint> = points
+        .copied()
+        .min_by(|&a, &b| metrics[a].1.partial_cmp(&metrics[b].1).unwrap())?;
+    let (t_mc, c_mc) = metrics[mc];
+    let mut cands: Vec<usize> = idxs
         .iter()
-        .filter(|p| {
-            let dt = t_mc / p.perf.t_iter - 1.0;
-            let dc = p.perf.c_iter / c_mc - 1.0;
+        .copied()
+        .filter(|&i| {
+            let dt = t_mc / metrics[i].0 - 1.0;
+            let dc = metrics[i].1 / c_mc - 1.0;
             if dc <= 1e-12 {
                 // no extra cost: always efficient
                 true
@@ -69,8 +75,32 @@ pub fn recommend(points: &[SweepPoint]) -> Option<SweepPoint> {
             }
         })
         .collect();
-    cands.sort_by(|a, b| a.perf.t_iter.partial_cmp(&b.perf.t_iter).unwrap());
-    cands.first().map(|p| (*p).clone())
+    cands.sort_by(|&a, &b| metrics[a].0.partial_cmp(&metrics[b].0).unwrap());
+    cands.first().copied()
+}
+
+fn metrics_of(points: &[SweepPoint]) -> Vec<(f64, f64)> {
+    points.iter().map(|p| (p.perf.t_iter, p.perf.c_iter)).collect()
+}
+
+/// Pareto-filter on (t_iter, c_iter): keep points not dominated by any
+/// other (strictly better in one dimension, no worse in the other).
+pub fn pareto_front(points: &[SweepPoint]) -> Vec<SweepPoint> {
+    let flags = pareto_flags(&metrics_of(points));
+    points
+        .iter()
+        .zip(flags)
+        .filter(|(_, keep)| *keep)
+        .map(|(p, _)| p.clone())
+        .collect()
+}
+
+/// The paper's recommendation rule over a sweep (must contain the
+/// minimum-cost point, i.e. weights (1,0) should be in the sweep).
+pub fn recommend(points: &[SweepPoint]) -> Option<SweepPoint> {
+    let metrics = metrics_of(points);
+    let idxs: Vec<usize> = (0..points.len()).collect();
+    recommend_among(&metrics, &idxs).map(|i| points[i].clone())
 }
 
 #[cfg(test)]

@@ -7,8 +7,9 @@
 //! evaluated here directly per *stage* — numerically identical, and it
 //! keeps `evaluate` allocation-free on the planner's hot path.
 
-use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::collective::{sync_time_chunked, SyncAlgorithm};
 use crate::model::{ModelProfile, Plan};
@@ -40,47 +41,62 @@ pub struct StageTerms {
 /// layer sums from scratch. The `dp` dimension of the key collapses
 /// because every dp-dependent term (eq. (9) sync, replica memory) is
 /// O(1) arithmetic over the cached bytes. Interior-mutable so the hot
-/// path keeps its `&self` signature; single-threaded like the solver.
-#[derive(Debug, Clone, Default)]
+/// path keeps its `&self` signature, and `Sync` (mutex-guarded map,
+/// atomic counters) so `plan --strategy all` can race every registry
+/// strategy in parallel threads over ONE shared warm cache: entries are
+/// pure functions of the key, so concurrent misses insert identical
+/// values and results never depend on thread interleaving (only the
+/// hit/miss counters can drift by the occasional double-miss).
+#[derive(Debug, Default)]
 pub struct StageCache {
-    terms: RefCell<HashMap<(usize, usize, usize), StageTerms>>,
-    hits: Cell<u64>,
-    misses: Cell<u64>,
+    terms: Mutex<HashMap<(usize, usize, usize), StageTerms>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Clone for StageCache {
+    fn clone(&self) -> Self {
+        Self {
+            terms: Mutex::new(self.terms.lock().unwrap().clone()),
+            hits: AtomicU64::new(self.hits.load(Ordering::Relaxed)),
+            misses: AtomicU64::new(self.misses.load(Ordering::Relaxed)),
+        }
+    }
 }
 
 impl StageCache {
     pub fn hits(&self) -> u64 {
-        self.hits.get()
+        self.hits.load(Ordering::Relaxed)
     }
 
     pub fn misses(&self) -> u64 {
-        self.misses.get()
+        self.misses.load(Ordering::Relaxed)
     }
 
     /// Fraction of lookups served from the cache (0.0 when unused).
     pub fn hit_rate(&self) -> f64 {
-        let total = self.hits.get() + self.misses.get();
+        let total = self.hits() + self.misses();
         if total == 0 {
             0.0
         } else {
-            self.hits.get() as f64 / total as f64
+            self.hits() as f64 / total as f64
         }
     }
 
     /// Distinct `(lo, hi, tier)` entries currently cached.
     pub fn len(&self) -> usize {
-        self.terms.borrow().len()
+        self.terms.lock().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.terms.borrow().is_empty()
+        self.terms.lock().unwrap().is_empty()
     }
 
     /// Drop entries and counters (between unrelated sweeps in benches).
     pub fn clear(&self) {
-        self.terms.borrow_mut().clear();
-        self.hits.set(0);
-        self.misses.set(0);
+        self.terms.lock().unwrap().clear();
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
     }
 
     fn get_or_insert(
@@ -88,13 +104,13 @@ impl StageCache {
         key: (usize, usize, usize),
         compute: impl FnOnce() -> StageTerms,
     ) -> StageTerms {
-        if let Some(t) = self.terms.borrow().get(&key) {
-            self.hits.set(self.hits.get() + 1);
+        if let Some(t) = self.terms.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return *t;
         }
-        self.misses.set(self.misses.get() + 1);
+        self.misses.fetch_add(1, Ordering::Relaxed);
         let t = compute();
-        self.terms.borrow_mut().insert(key, t);
+        self.terms.lock().unwrap().insert(key, t);
         t
     }
 }

@@ -1,0 +1,905 @@
+//! The one `Planner` API over the five co-optimization solvers.
+//!
+//! Historically every solver had a bespoke struct entrypoint
+//! (`CoOptimizer::solve`, `MiqpSolver::solve`, `BayesOpt::solve`,
+//! `Tpdmp::solve`, plus the `pareto` weight sweep) and callers hardcoded
+//! one of them. This module is the planning layer's analogue of the
+//! `Experiment` session API and the `simcore` engine unification: ONE
+//! request type goes in, ONE outcome type comes out, and the solvers
+//! live behind a string-keyed registry:
+//!
+//! * [`PlanRequest`] — micro-batch budget, weight sweep, dp options,
+//!   node/time budgets, and an optional scenario-robustness spec;
+//! * [`Planner`] — the strategy trait: solve a request against a
+//!   (possibly shared) [`PerfModel`];
+//! * [`strategy_by_name`] / [`STRATEGIES`] — the registry: `bnb`
+//!   (branch-and-bound, the default), `miqp` (direct binary-variable
+//!   solver), `bayes` (GP + expected improvement), `tpdmp` (§5.6
+//!   throughput-max baseline), `sweep` (balanced-partition × uniform
+//!   tier × dp configuration grid);
+//! * [`solve_request`] — look up, solve, and (when requested) re-score
+//!   the candidates under seeded simcore scenario lenses;
+//! * [`race`] — run several strategies in parallel threads over ONE
+//!   shared `PerfModel`, so every thread reads the same warm
+//!   [`StageCache`](super::StageCache); results are returned in
+//!   strategy order and are bit-deterministic regardless of
+//!   interleaving (cache entries are pure functions of their key).
+//!
+//! [`PlanOutcome`] carries the deduped candidates with their
+//! [`PlanPerf`], aggregate [`SolveStats`], strategy provenance, and —
+//! through [`PlanOutcome::frontier_flags`] and
+//! [`PlanOutcome::recommend_idx`] — the Pareto frontier and the paper's
+//! δ ≥ 0.8 recommendation rule, evaluated either on the deterministic
+//! closed-form `(t_iter, c_iter)` or, when the request asks for
+//! robustness, on the worst-case/mean scenario scores (the gap both
+//! SMLT and MLLess flag for static serverless planners: a plan that is
+//! optimal in the deterministic model can be fragile under cold starts
+//! and stragglers).
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::model::Plan;
+use crate::pipeline::simulate_iteration_scenario;
+use crate::planner::optimizer::SolveStats;
+use crate::planner::pareto::{pareto_flags, recommend_among};
+use crate::planner::perf_model::{PerfModel, PlanPerf};
+use crate::planner::{bayes, miqp, optimizer, tpdmp};
+use crate::platform::PlatformSpec;
+use crate::simcore::ScenarioSpec;
+
+/// How a robust request ranks candidates across its seeded replays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RobustRank {
+    /// Worst-case scenario `(t, c)` over the seeds (the default).
+    Worst,
+    /// Mean scenario `(t, c)` over the seeds.
+    Mean,
+}
+
+impl RobustRank {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RobustRank::Worst => "worst",
+            RobustRank::Mean => "mean",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RobustRank> {
+        match s {
+            "worst" => Some(RobustRank::Worst),
+            "mean" => Some(RobustRank::Mean),
+            _ => None,
+        }
+    }
+}
+
+/// Scenario-robust selection spec: re-score every candidate plan under
+/// `seeds` seeded replays of `scenario` (seeds `1..=seeds`, in order —
+/// byte-deterministic) and rank by `rank` instead of the deterministic
+/// point estimate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RobustSpec {
+    pub scenario: ScenarioSpec,
+    pub seeds: usize,
+    pub rank: RobustRank,
+}
+
+impl RobustSpec {
+    pub const MAX_SEEDS: usize = 256;
+
+    pub fn validate(&self) -> Result<()> {
+        if self.scenario.is_deterministic() {
+            bail!(
+                "robust selection under the deterministic scenario is a \
+                 no-op; pick a perturbing scenario ({})",
+                ScenarioSpec::SYNTAX
+            );
+        }
+        if self.seeds == 0 || self.seeds > Self::MAX_SEEDS {
+            bail!(
+                "robust seeds must be in 1..={} (got {})",
+                Self::MAX_SEEDS,
+                self.seeds
+            );
+        }
+        Ok(())
+    }
+}
+
+/// A candidate's scores across the robust spec's seeded replays.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RobustScore {
+    pub worst_t: f64,
+    pub worst_c: f64,
+    pub mean_t: f64,
+    pub mean_c: f64,
+}
+
+/// What goes into a strategy: everything the §3.4 program needs beyond
+/// the model/platform pair the [`PerfModel`] already carries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanRequest {
+    /// Micro-batches per global batch (`B/b` in §3.4.1).
+    pub n_micro_global: usize,
+    /// Weight pairs (α1, α2) to sweep — the Pareto trace.
+    pub weights: Vec<(f64, f64)>,
+    /// Candidate data-parallel degrees (`D` in §3.4.1). One
+    /// user-controlled space for EVERY strategy (historically each
+    /// solver hardcoded its own copy).
+    pub dp_options: Vec<usize>,
+    /// Hard cap on search nodes per weight (anytime behaviour).
+    pub node_budget: u64,
+    /// Optional wall-clock budget for the whole sweep: a strategy stops
+    /// starting new weight solves once it is exhausted (best-effort
+    /// anytime behaviour; results then depend on machine speed, so
+    /// leave it unset where byte-replayable output matters).
+    pub time_budget_s: Option<f64>,
+    /// Optional scenario-robust selection (see [`RobustSpec`]).
+    pub robust: Option<RobustSpec>,
+}
+
+impl PlanRequest {
+    pub fn new(n_micro_global: usize) -> Self {
+        Self {
+            n_micro_global,
+            weights: super::DEFAULT_WEIGHTS.to_vec(),
+            dp_options: super::DEFAULT_DP_OPTIONS.to_vec(),
+            node_budget: optimizer::DEFAULT_NODE_BUDGET,
+            time_budget_s: None,
+            robust: None,
+        }
+    }
+
+    /// Reject requests no strategy can act on sensibly: empty or
+    /// non-finite weight sweeps, dp degrees of zero, a dp space that is
+    /// not strictly increasing (duplicates would silently re-search),
+    /// and dp degrees beyond the platform's concurrency cap — the
+    /// platform cannot price (or launch) more concurrent replicas than
+    /// it sells.
+    pub fn validate(&self, platform: &PlatformSpec) -> Result<()> {
+        if self.n_micro_global == 0 {
+            bail!("n_micro_global must be >= 1");
+        }
+        if self.weights.is_empty() {
+            bail!("the weight sweep must contain at least one (α1, α2) pair");
+        }
+        for &(a1, a2) in &self.weights {
+            if !(a1.is_finite() && a2.is_finite() && a1 >= 0.0 && a2 >= 0.0) {
+                bail!("weights must be finite and non-negative, got ({a1}, {a2})");
+            }
+        }
+        validate_dp_options(&self.dp_options, platform)?;
+        if self.node_budget == 0 {
+            bail!("node_budget must be >= 1");
+        }
+        if let Some(t) = self.time_budget_s {
+            if !(t.is_finite() && t > 0.0) {
+                bail!("time_budget_s must be a positive finite number");
+            }
+        }
+        if let Some(r) = &self.robust {
+            r.validate()?;
+        }
+        Ok(())
+    }
+
+    fn deadline(&self) -> Option<Instant> {
+        self.time_budget_s
+            .map(|s| Instant::now() + Duration::from_secs_f64(s))
+    }
+}
+
+fn expired(deadline: &Option<Instant>) -> bool {
+    deadline.map(|d| Instant::now() >= d).unwrap_or(false)
+}
+
+/// THE dp-space invariant, shared by [`PlanRequest::validate`] and
+/// `ExperimentConfig::validate` so the two layers can never drift:
+/// non-empty, strictly increasing positive degrees, none beyond what
+/// the platform will concurrently launch (and therefore price).
+pub fn validate_dp_options(
+    dp_options: &[usize],
+    platform: &PlatformSpec,
+) -> Result<()> {
+    if dp_options.is_empty() {
+        bail!("dp_options must contain at least one degree");
+    }
+    for w in dp_options.windows(2) {
+        if w[0] >= w[1] {
+            bail!(
+                "dp_options must be strictly increasing (got {dp_options:?})"
+            );
+        }
+    }
+    for &d in dp_options {
+        if d == 0 {
+            bail!("dp_options entries must be >= 1");
+        }
+        if d > platform.max_concurrency {
+            bail!(
+                "dp degree {d} exceeds {}'s concurrency cap of {} \
+                 functions — the platform cannot price that many \
+                 concurrent replicas",
+                platform.name,
+                platform.max_concurrency
+            );
+        }
+    }
+    Ok(())
+}
+
+/// One evaluated configuration in an outcome.
+#[derive(Debug, Clone)]
+pub struct PlanCandidate {
+    pub plan: Plan,
+    /// Deterministic closed-form evaluation.
+    pub perf: PlanPerf,
+    /// The (α1, α2) pair whose solve first produced this plan.
+    pub weights: (f64, f64),
+    /// Scenario scores; present iff the request asked for robustness.
+    pub robust: Option<RobustScore>,
+}
+
+impl PlanCandidate {
+    /// The `(t, c)` pair candidates are ranked by: the deterministic
+    /// point estimate, or — under a robust request — the worst-case or
+    /// mean scenario scores.
+    pub fn metric(&self, rank: Option<RobustRank>) -> (f64, f64) {
+        match (rank, &self.robust) {
+            (Some(RobustRank::Worst), Some(r)) => (r.worst_t, r.worst_c),
+            (Some(RobustRank::Mean), Some(r)) => (r.mean_t, r.mean_c),
+            _ => (self.perf.t_iter, self.perf.c_iter),
+        }
+    }
+}
+
+/// What comes out of a strategy: deduped candidates (in weight order),
+/// aggregate solve stats, strategy provenance, and the robust spec the
+/// scores were produced under (if any).
+#[derive(Debug, Clone)]
+pub struct PlanOutcome {
+    /// Registry key of the strategy that produced this outcome.
+    pub strategy: String,
+    pub candidates: Vec<PlanCandidate>,
+    /// Aggregated over the weight sweep. `solve_time_s` is wall time
+    /// and therefore excluded from every rendered report (reports must
+    /// byte-replay); node/leaf counts are deterministic.
+    pub stats: SolveStats,
+    pub robust: Option<RobustSpec>,
+}
+
+impl PlanOutcome {
+    /// The active ranking lens (None = deterministic point estimate).
+    pub fn rank(&self) -> Option<RobustRank> {
+        self.robust.as_ref().map(|r| r.rank)
+    }
+
+    /// Each candidate's ranking metric, in candidate order.
+    pub fn metrics(&self) -> Vec<(f64, f64)> {
+        let rank = self.rank();
+        self.candidates.iter().map(|c| c.metric(rank)).collect()
+    }
+
+    /// Per-candidate Pareto non-domination flags under the ranking
+    /// metric.
+    pub fn frontier_flags(&self) -> Vec<bool> {
+        pareto_flags(&self.metrics())
+    }
+
+    /// The non-dominated candidates, in candidate order.
+    pub fn frontier(&self) -> Vec<&PlanCandidate> {
+        self.candidates
+            .iter()
+            .zip(self.frontier_flags())
+            .filter(|(_, f)| *f)
+            .map(|(c, _)| c)
+            .collect()
+    }
+
+    /// The paper's δ ≥ 0.8 recommendation rule over the frontier, under
+    /// the ranking metric: the fastest configuration whose efficiency
+    /// `δ = (t_mc/t_p − 1) / (c_p/c_mc − 1)` stays ≥ 0.8 relative to
+    /// the minimum-cost point. Returns the candidate index.
+    pub fn recommend_idx(&self) -> Option<usize> {
+        let metrics = self.metrics();
+        let front: Vec<usize> = self
+            .frontier_flags()
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| **f)
+            .map(|(i, _)| i)
+            .collect();
+        recommend_among(&metrics, &front)
+    }
+
+    pub fn recommended(&self) -> Option<&PlanCandidate> {
+        self.recommend_idx().map(|i| &self.candidates[i])
+    }
+}
+
+/// A co-optimization strategy: solve a [`PlanRequest`] against a
+/// (possibly shared) [`PerfModel`]. Implementations must be pure
+/// functions of `(perf's model/platform/sync/chunking, req)` — that is
+/// what makes [`race`] deterministic and `--strategy all` output
+/// byte-replayable.
+pub trait Planner: Sync {
+    /// Registry key (also the provenance string in plan artifacts).
+    fn name(&self) -> &'static str;
+
+    fn solve(&self, perf: &PerfModel<'_>, req: &PlanRequest) -> PlanOutcome;
+}
+
+/// Registry keys, in race/report order.
+pub const STRATEGIES: [&str; 5] = ["bnb", "miqp", "bayes", "tpdmp", "sweep"];
+
+/// Look up a strategy by registry key.
+pub fn strategy_by_name(name: &str) -> Option<&'static dyn Planner> {
+    static BNB: Bnb = Bnb;
+    static MIQP: Miqp = Miqp;
+    static BAYES: Bayes = Bayes;
+    static TPDMP: TpdmpStrategy = TpdmpStrategy;
+    static SWEEP: GridSweep = GridSweep;
+    match name {
+        "bnb" => Some(&BNB),
+        "miqp" => Some(&MIQP),
+        "bayes" => Some(&BAYES),
+        "tpdmp" => Some(&TPDMP),
+        "sweep" => Some(&SWEEP),
+        _ => None,
+    }
+}
+
+/// Solve `req` with the named strategy and, when the request carries a
+/// [`RobustSpec`], re-score every candidate under the seeded scenario
+/// lenses. This is the ONE entrypoint `Experiment::plan`, the CLI, the
+/// figure generators and the benches go through.
+pub fn solve_request(
+    name: &str,
+    perf: &PerfModel<'_>,
+    req: &PlanRequest,
+) -> Result<PlanOutcome> {
+    let Some(planner) = strategy_by_name(name) else {
+        bail!(
+            "unknown plan strategy {name:?} (available: {})",
+            STRATEGIES.join(" ")
+        );
+    };
+    req.validate(perf.platform)?;
+    let mut outcome = planner.solve(perf, req);
+    if let Some(spec) = &req.robust {
+        apply_robustness(&mut outcome, perf, spec);
+    }
+    Ok(outcome)
+}
+
+/// Race several strategies in parallel threads over ONE shared
+/// `PerfModel` (and therefore one shared warm `StageCache`). Outcomes
+/// come back in `names` order; unknown names fail before any thread
+/// spawns. Robust re-scoring happens once per DISTINCT plan after the
+/// race (strategies routinely converge on the same optimum — the
+/// agreement suite pins `bnb` == `miqp` — so per-thread scoring would
+/// replay the same seeded simulations several times over).
+pub fn race(
+    perf: &PerfModel<'_>,
+    req: &PlanRequest,
+    names: &[&str],
+) -> Result<Vec<PlanOutcome>> {
+    for n in names {
+        if strategy_by_name(n).is_none() {
+            bail!(
+                "unknown plan strategy {n:?} (available: {})",
+                STRATEGIES.join(" ")
+            );
+        }
+    }
+    req.validate(perf.platform)?;
+    // threads run the pure searches; scoring is hoisted past the barrier
+    let search_req = PlanRequest { robust: None, ..req.clone() };
+    let mut outcomes: Vec<PlanOutcome> = std::thread::scope(|scope| {
+        let handles: Vec<_> = names
+            .iter()
+            .map(|&n| {
+                let sr = &search_req;
+                scope.spawn(move || solve_request(n, perf, sr))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .map_err(|_| anyhow::anyhow!("strategy thread panicked"))?
+            })
+            .collect::<Result<Vec<_>>>()
+    })?;
+    if let Some(spec) = &req.robust {
+        let mut memo: Vec<(Plan, RobustScore)> = Vec::new();
+        for out in &mut outcomes {
+            for cand in &mut out.candidates {
+                let score = match memo.iter().find(|(p, _)| *p == cand.plan) {
+                    Some((_, s)) => *s,
+                    None => {
+                        let s = robust_score(perf, &cand.plan, spec);
+                        memo.push((cand.plan.clone(), s));
+                        s
+                    }
+                };
+                cand.robust = Some(score);
+            }
+            out.robust = Some(spec.clone());
+        }
+    }
+    Ok(outcomes)
+}
+
+/// One plan's scores across `spec.seeds` seeded DES replays of the
+/// scenario (seeds 1..=n, drawn in order — the same engine and streams
+/// `simulate --scenario` uses, so a robust pick is judged by exactly
+/// the noise the scenario lab replays).
+fn robust_score(
+    perf: &PerfModel<'_>,
+    plan: &Plan,
+    spec: &RobustSpec,
+) -> RobustScore {
+    let (mut worst_t, mut worst_c) = (0.0f64, 0.0f64);
+    let (mut sum_t, mut sum_c) = (0.0f64, 0.0f64);
+    for seed in 1..=spec.seeds as u64 {
+        let sim = simulate_iteration_scenario(
+            perf.model,
+            perf.platform,
+            plan,
+            perf.sync_alg,
+            &spec.scenario,
+            seed,
+        );
+        worst_t = worst_t.max(sim.t_iter);
+        worst_c = worst_c.max(sim.c_iter);
+        sum_t += sim.t_iter;
+        sum_c += sim.c_iter;
+    }
+    let n = spec.seeds as f64;
+    RobustScore {
+        worst_t,
+        worst_c,
+        mean_t: sum_t / n,
+        mean_c: sum_c / n,
+    }
+}
+
+/// Re-score every candidate of one outcome (the single-strategy path).
+fn apply_robustness(
+    outcome: &mut PlanOutcome,
+    perf: &PerfModel<'_>,
+    spec: &RobustSpec,
+) {
+    for cand in &mut outcome.candidates {
+        cand.robust = Some(robust_score(perf, &cand.plan, spec));
+    }
+    outcome.robust = Some(spec.clone());
+}
+
+fn push_dedup(
+    candidates: &mut Vec<PlanCandidate>,
+    plan: Plan,
+    perf: PlanPerf,
+    weights: (f64, f64),
+) {
+    if !candidates.iter().any(|c| c.plan == plan) {
+        candidates.push(PlanCandidate { plan, perf, weights, robust: None });
+    }
+}
+
+fn outcome(
+    name: &str,
+    candidates: Vec<PlanCandidate>,
+    mut stats: SolveStats,
+    start: Instant,
+) -> PlanOutcome {
+    stats.solve_time_s = start.elapsed().as_secs_f64();
+    PlanOutcome {
+        strategy: name.to_string(),
+        candidates,
+        stats,
+        robust: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the five registry strategies
+// ---------------------------------------------------------------------------
+
+/// FuncPipe's exact branch-and-bound (`optimizer.rs`) — the default.
+struct Bnb;
+
+impl Planner for Bnb {
+    fn name(&self) -> &'static str {
+        "bnb"
+    }
+
+    fn solve(&self, perf: &PerfModel<'_>, req: &PlanRequest) -> PlanOutcome {
+        let start = Instant::now();
+        let deadline = req.deadline();
+        let mut stats = SolveStats::default();
+        let mut candidates = Vec::new();
+        for &w in &req.weights {
+            if expired(&deadline) {
+                break;
+            }
+            if let Some((plan, pf, s)) = optimizer::solve_with(
+                perf,
+                &req.dp_options,
+                req.node_budget,
+                req.n_micro_global,
+                w,
+            ) {
+                stats.nodes += s.nodes;
+                stats.leaves += s.leaves;
+                stats.pruned_bound += s.pruned_bound;
+                stats.pruned_memory += s.pruned_memory;
+                push_dedup(&mut candidates, plan, pf, w);
+            }
+        }
+        outcome("bnb", candidates, stats, start)
+    }
+}
+
+/// The direct binary-variable solver (`miqp.rs`) — exact, slower;
+/// certifies `bnb`.
+struct Miqp;
+
+impl Planner for Miqp {
+    fn name(&self) -> &'static str {
+        "miqp"
+    }
+
+    fn solve(&self, perf: &PerfModel<'_>, req: &PlanRequest) -> PlanOutcome {
+        let start = Instant::now();
+        let deadline = req.deadline();
+        let mut stats = SolveStats::default();
+        let mut candidates = Vec::new();
+        for &w in &req.weights {
+            if expired(&deadline) {
+                break;
+            }
+            if let Some(sol) = miqp::solve_with(
+                perf,
+                &req.dp_options,
+                req.node_budget,
+                req.n_micro_global,
+                w,
+            ) {
+                stats.nodes += sol.nodes;
+                stats.leaves += 1;
+                let pf = perf.evaluate(&sol.plan);
+                push_dedup(&mut candidates, sol.plan, pf, w);
+            }
+        }
+        outcome("miqp", candidates, stats, start)
+    }
+}
+
+/// The GP + expected-improvement baseline (`bayes.rs`), seeded and
+/// therefore deterministic.
+struct Bayes;
+
+impl Planner for Bayes {
+    fn name(&self) -> &'static str {
+        "bayes"
+    }
+
+    fn solve(&self, perf: &PerfModel<'_>, req: &PlanRequest) -> PlanOutcome {
+        let start = Instant::now();
+        let deadline = req.deadline();
+        let params = bayes::BayesParams::default();
+        let mut stats = SolveStats::default();
+        let mut candidates = Vec::new();
+        for &w in &req.weights {
+            if expired(&deadline) {
+                break;
+            }
+            if let Some((plan, pf)) = bayes::solve_with(
+                perf,
+                &req.dp_options,
+                &params,
+                req.n_micro_global,
+                w,
+            ) {
+                stats.nodes += params.total_rounds as u64;
+                stats.leaves += params.total_rounds as u64;
+                push_dedup(&mut candidates, plan, pf, w);
+            }
+        }
+        outcome("bayes", candidates, stats, start)
+    }
+}
+
+/// The §5.6 TPDMP baseline (`tpdmp.rs`): throughput-max partition under
+/// a (d, uniform tier) grid.
+struct TpdmpStrategy;
+
+impl Planner for TpdmpStrategy {
+    fn name(&self) -> &'static str {
+        "tpdmp"
+    }
+
+    fn solve(&self, perf: &PerfModel<'_>, req: &PlanRequest) -> PlanOutcome {
+        let start = Instant::now();
+        let deadline = req.deadline();
+        let mut stats = SolveStats::default();
+        let mut candidates = Vec::new();
+        for &w in &req.weights {
+            if expired(&deadline) {
+                break;
+            }
+            if let Some((plan, pf)) =
+                tpdmp::solve_with(perf, &req.dp_options, req.n_micro_global, w)
+            {
+                stats.leaves += 1;
+                push_dedup(&mut candidates, plan, pf, w);
+            }
+        }
+        outcome("tpdmp", candidates, stats, start)
+    }
+}
+
+/// Configuration-grid sweep: balanced contiguous partitions (1..=L
+/// stages) × uniform memory tier × dp — the `pareto`-module sweeping
+/// approach generalized from the weight grid to the configuration grid.
+/// Cheap, memory-feasible by construction (validated), and a useful
+/// sanity floor for the exact solvers.
+struct GridSweep;
+
+/// Cut positions splitting `l` layers into `s` contiguous groups whose
+/// sizes differ by at most one (first `l % s` groups get the extra).
+fn balanced_cuts(l: usize, s: usize) -> Vec<usize> {
+    let base = l / s;
+    let rem = l % s;
+    let mut cuts = Vec::with_capacity(s - 1);
+    let mut next = 0usize;
+    for g in 0..s - 1 {
+        next += base + usize::from(g < rem);
+        cuts.push(next - 1);
+    }
+    cuts
+}
+
+impl Planner for GridSweep {
+    fn name(&self) -> &'static str {
+        "sweep"
+    }
+
+    fn solve(&self, perf: &PerfModel<'_>, req: &PlanRequest) -> PlanOutcome {
+        let start = Instant::now();
+        let deadline = req.deadline();
+        let m = perf.model;
+        let p = perf.platform;
+        let l = m.n_layers();
+        let mut stats = SolveStats::default();
+
+        // evaluate the grid once; every weight then picks from it
+        let mut grid: Vec<(Plan, PlanPerf)> = Vec::new();
+        'grid: for &d in &req.dp_options {
+            if d == 0 || req.n_micro_global % d != 0 {
+                continue;
+            }
+            for s in 1..=l {
+                if expired(&deadline) {
+                    break 'grid;
+                }
+                let cuts = balanced_cuts(l, s);
+                for tier in 0..p.n_tiers() {
+                    stats.nodes += 1;
+                    let plan = Plan {
+                        cuts: cuts.clone(),
+                        dp: d,
+                        stage_tiers: vec![tier; s],
+                        n_micro_global: req.n_micro_global,
+                    };
+                    if plan.validate(m, p).is_err() {
+                        stats.pruned_memory += 1;
+                        continue;
+                    }
+                    stats.leaves += 1;
+                    let pf = perf.evaluate(&plan);
+                    grid.push((plan, pf));
+                }
+            }
+        }
+
+        let mut candidates = Vec::new();
+        for &w in &req.weights {
+            let best = grid.iter().min_by(|(_, a), (_, b)| {
+                let ja = w.0 * a.c_iter + w.1 * a.t_iter;
+                let jb = w.0 * b.c_iter + w.1 * b.t_iter;
+                ja.partial_cmp(&jb).unwrap()
+            });
+            if let Some((plan, pf)) = best {
+                push_dedup(&mut candidates, plan.clone(), pf.clone(), w);
+            }
+        }
+        outcome("sweep", candidates, stats, start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{merge_layers, zoo, MergeCriterion};
+
+    fn fixture() -> (crate::model::ModelProfile, PlatformSpec) {
+        let p = PlatformSpec::aws_lambda();
+        let m = merge_layers(&zoo::resnet101(&p), 4, MergeCriterion::Compute);
+        (m, p)
+    }
+
+    #[test]
+    fn registry_knows_exactly_the_five_strategies() {
+        for name in STRATEGIES {
+            let s = strategy_by_name(name).unwrap();
+            assert_eq!(s.name(), name);
+        }
+        assert!(strategy_by_name("gurobi").is_none());
+        assert!(strategy_by_name("all").is_none(), "all is CLI sugar, not a strategy");
+    }
+
+    #[test]
+    fn balanced_cuts_cover_the_layer_range() {
+        assert_eq!(balanced_cuts(8, 1), Vec::<usize>::new());
+        assert_eq!(balanced_cuts(8, 2), vec![3]);
+        assert_eq!(balanced_cuts(8, 3), vec![2, 5]);
+        assert_eq!(balanced_cuts(5, 5), vec![0, 1, 2, 3]);
+        // s-1 cuts, strictly increasing, all < l-1
+        for l in 1..=12usize {
+            for s in 1..=l {
+                let cuts = balanced_cuts(l, s);
+                assert_eq!(cuts.len(), s - 1, "l={l} s={s}");
+                assert!(cuts.windows(2).all(|w| w[0] < w[1]));
+                assert!(cuts.iter().all(|&c| c < l - 1), "l={l} s={s}: {cuts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn request_validation_rejects_bad_dp_spaces() {
+        let p = PlatformSpec::aws_lambda();
+        let ok = PlanRequest::new(16);
+        ok.validate(&p).unwrap();
+
+        let mut bad = PlanRequest::new(16);
+        bad.dp_options = vec![];
+        assert!(bad.validate(&p).is_err());
+        bad.dp_options = vec![0, 2];
+        assert!(bad.validate(&p).is_err());
+        bad.dp_options = vec![4, 2];
+        assert!(bad.validate(&p).is_err());
+        bad.dp_options = vec![2, 2];
+        assert!(bad.validate(&p).is_err());
+        // beyond the platform's concurrency cap: unpriceable
+        bad.dp_options = vec![p.max_concurrency + 1];
+        assert!(bad.validate(&p).is_err());
+
+        let mut bad = PlanRequest::new(16);
+        bad.weights = vec![(1.0, f64::NAN)];
+        assert!(bad.validate(&p).is_err());
+        bad.weights = vec![];
+        assert!(bad.validate(&p).is_err());
+
+        let mut bad = PlanRequest::new(16);
+        bad.robust = Some(RobustSpec {
+            scenario: ScenarioSpec::deterministic(),
+            seeds: 4,
+            rank: RobustRank::Worst,
+        });
+        assert!(bad.validate(&p).is_err());
+        let mut bad = PlanRequest::new(16);
+        bad.robust = Some(RobustSpec {
+            scenario: ScenarioSpec::parse("straggler").unwrap(),
+            seeds: 0,
+            rank: RobustRank::Worst,
+        });
+        assert!(bad.validate(&p).is_err());
+    }
+
+    #[test]
+    fn unknown_strategy_is_an_error() {
+        let (m, p) = fixture();
+        let perf = PerfModel::new(&m, &p);
+        let req = PlanRequest::new(16);
+        assert!(solve_request("chaos", &perf, &req).is_err());
+        assert!(race(&perf, &req, &["bnb", "chaos"]).is_err());
+    }
+
+    #[test]
+    fn every_strategy_solves_and_recommends() {
+        let (m, p) = fixture();
+        let perf = PerfModel::new(&m, &p);
+        let mut req = PlanRequest::new(16);
+        req.dp_options = vec![1, 2, 4];
+        for name in STRATEGIES {
+            let out = solve_request(name, &perf, &req).unwrap();
+            assert_eq!(out.strategy, name);
+            assert!(!out.candidates.is_empty(), "{name}: no candidates");
+            for c in &out.candidates {
+                c.plan.validate(&m, &p).unwrap();
+                assert!(c.perf.t_iter.is_finite() && c.perf.t_iter > 0.0);
+                assert!(req.dp_options.contains(&c.plan.dp), "{name}");
+            }
+            let flags = out.frontier_flags();
+            assert_eq!(flags.len(), out.candidates.len());
+            assert!(flags.iter().any(|f| *f), "{name}: empty frontier");
+            let rec = out.recommend_idx().expect("recommendation");
+            assert!(flags[rec], "{name}: recommendation off the frontier");
+        }
+    }
+
+    #[test]
+    fn race_returns_outcomes_in_strategy_order_deterministically() {
+        let (m, p) = fixture();
+        let perf = PerfModel::new(&m, &p);
+        let mut req = PlanRequest::new(16);
+        req.dp_options = vec![1, 2];
+        let a = race(&perf, &req, &STRATEGIES).unwrap();
+        let b = race(&perf, &req, &STRATEGIES).unwrap();
+        assert_eq!(a.len(), STRATEGIES.len());
+        for (i, name) in STRATEGIES.iter().enumerate() {
+            assert_eq!(a[i].strategy, *name);
+            assert_eq!(a[i].candidates.len(), b[i].candidates.len());
+            assert_eq!(a[i].stats.nodes, b[i].stats.nodes, "{name}");
+            for (ca, cb) in a[i].candidates.iter().zip(&b[i].candidates) {
+                assert_eq!(ca.plan, cb.plan, "{name}");
+                assert_eq!(
+                    ca.perf.t_iter.to_bits(),
+                    cb.perf.t_iter.to_bits(),
+                    "{name}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn robust_scores_replay_and_rank() {
+        let (m, p) = fixture();
+        let perf = PerfModel::new(&m, &p);
+        let mut req = PlanRequest::new(16);
+        req.dp_options = vec![1, 2];
+        req.robust = Some(RobustSpec {
+            scenario: ScenarioSpec::parse("straggler+jitter").unwrap(),
+            seeds: 4,
+            rank: RobustRank::Worst,
+        });
+        let a = solve_request("bnb", &perf, &req).unwrap();
+        let b = solve_request("bnb", &perf, &req).unwrap();
+        for (ca, cb) in a.candidates.iter().zip(&b.candidates) {
+            let (ra, rb) = (ca.robust.unwrap(), cb.robust.unwrap());
+            assert_eq!(ra.worst_t.to_bits(), rb.worst_t.to_bits());
+            assert_eq!(ra.mean_c.to_bits(), rb.mean_c.to_bits());
+            // the mean never exceeds the worst case, and scores are real
+            assert!(ra.worst_t.is_finite() && ra.worst_t > 0.0);
+            assert!(ra.mean_t <= ra.worst_t + 1e-12);
+            assert!(ra.mean_c <= ra.worst_c + 1e-12);
+            // the robust metric is what ranking sees
+            assert_eq!(ca.metric(Some(RobustRank::Worst)), (ra.worst_t, ra.worst_c));
+            assert_eq!(ca.metric(None), (ca.perf.t_iter, ca.perf.c_iter));
+        }
+        assert!(a.recommend_idx().is_some());
+        assert_eq!(a.rank(), Some(RobustRank::Worst));
+    }
+
+    #[test]
+    fn time_budget_truncates_but_never_invents() {
+        let (m, p) = fixture();
+        let perf = PerfModel::new(&m, &p);
+        let full = solve_request("bnb", &perf, &PlanRequest::new(16)).unwrap();
+        let mut req = PlanRequest::new(16);
+        req.time_budget_s = Some(1e-9);
+        let cut = solve_request("bnb", &perf, &req).unwrap();
+        assert!(cut.candidates.len() <= full.candidates.len());
+        for c in &cut.candidates {
+            assert!(full.candidates.iter().any(|f| f.plan == c.plan));
+        }
+        let mut bad = PlanRequest::new(16);
+        bad.time_budget_s = Some(0.0);
+        assert!(bad.validate(&p).is_err());
+    }
+}

@@ -13,7 +13,10 @@ use crate::model::{ModelProfile, Plan};
 use crate::planner::perf_model::{PerfModel, PlanPerf};
 use crate::platform::PlatformSpec;
 
-/// Grid-search wrapper around throughput-maximal partitioning.
+/// Grid-search wrapper around throughput-maximal partitioning — the
+/// classic struct API over the shared [`solve_with`] core (the `tpdmp`
+/// registry strategy calls the core directly against a shared
+/// [`PerfModel`]).
 pub struct Tpdmp<'a> {
     pub perf: PerfModel<'a>,
     pub dp_options: Vec<usize>,
@@ -23,78 +26,18 @@ impl<'a> Tpdmp<'a> {
     pub fn new(model: &'a ModelProfile, platform: &'a PlatformSpec) -> Self {
         Self {
             perf: PerfModel::new(model, platform),
-            dp_options: vec![1, 2, 4, 8, 16, 32],
+            dp_options: crate::planner::DEFAULT_DP_OPTIONS.to_vec(),
         }
     }
 
     /// For a fixed (d, uniform tier): the partition minimizing `t_iter`.
-    /// DFS with memory pruning (the tier is fixed so the space is just the
-    /// cut set; L ≤ 24 keeps this fast with bounding on committed time).
     pub fn best_partition_fixed_resources(
         &self,
         d: usize,
         tier: usize,
         n_micro_global: usize,
     ) -> Option<(Plan, PlanPerf)> {
-        let m = self.perf.model;
-        let _p = self.perf.platform;
-        let l = m.n_layers();
-        if n_micro_global % d != 0 {
-            return None;
-        }
-        let mu = n_micro_global / d;
-
-        let mut best: Option<(f64, Plan)> = None;
-        let mut cuts: Vec<usize> = Vec::new();
-        // DFS over cut positions; evaluate complete cut sets.
-        fn go(
-            lo: usize,
-            l: usize,
-            cuts: &mut Vec<usize>,
-            ctx: &Tpdmp,
-            d: usize,
-            tier: usize,
-            mu: usize,
-            n_micro_global: usize,
-            best: &mut Option<(f64, Plan)>,
-        ) {
-            let m = ctx.perf.model;
-            let p = ctx.perf.platform;
-            for hi in lo..l {
-                // stage [lo..=hi] feasibility on the fixed tier
-                let act = m.range_act_bytes(lo, hi);
-                let params = m.range_param_bytes(lo, hi);
-                let copies = if d == 1 { 2 } else { 4 };
-                let need = (mu as u64) * act
-                    + params * copies
-                    + p.base_mem_mb * 1024 * 1024;
-                if need > p.tier(tier).mem_bytes() {
-                    // extending hi only grows memory: stop
-                    break;
-                }
-                if hi == l - 1 {
-                    let plan = Plan {
-                        cuts: cuts.clone(),
-                        dp: d,
-                        stage_tiers: vec![tier; cuts.len() + 1],
-                        n_micro_global,
-                    };
-                    let t = ctx.perf.evaluate(&plan).t_iter;
-                    if best.as_ref().map(|(b, _)| t < *b).unwrap_or(true) {
-                        *best = Some((t, plan));
-                    }
-                } else {
-                    cuts.push(hi);
-                    go(hi + 1, l, cuts, ctx, d, tier, mu, n_micro_global, best);
-                    cuts.pop();
-                }
-            }
-        }
-        go(0, l, &mut cuts, self, d, tier, mu, n_micro_global, &mut best);
-        best.map(|(_, plan)| {
-            let perf = self.perf.evaluate(&plan);
-            (plan, perf)
-        })
+        best_partition_fixed(&self.perf, d, tier, n_micro_global)
     }
 
     /// Full TPDMP baseline: grid over (d, tier), throughput-max partition
@@ -104,25 +47,105 @@ impl<'a> Tpdmp<'a> {
         n_micro_global: usize,
         alpha: (f64, f64),
     ) -> Option<(Plan, PlanPerf)> {
-        let p = self.perf.platform;
-        let mut best: Option<(f64, Plan, PlanPerf)> = None;
-        for &d in &self.dp_options {
-            if d == 0 || n_micro_global % d != 0 {
-                continue;
+        solve_with(&self.perf, &self.dp_options, n_micro_global, alpha)
+    }
+}
+
+/// For a fixed (d, uniform tier): the partition minimizing `t_iter`.
+/// DFS with memory pruning (the tier is fixed so the space is just the
+/// cut set; L ≤ 24 keeps this fast with bounding on committed time).
+pub fn best_partition_fixed(
+    perf: &PerfModel<'_>,
+    d: usize,
+    tier: usize,
+    n_micro_global: usize,
+) -> Option<(Plan, PlanPerf)> {
+    let m = perf.model;
+    let l = m.n_layers();
+    if d == 0 || n_micro_global % d != 0 {
+        return None;
+    }
+    let mu = n_micro_global / d;
+
+    let mut best: Option<(f64, Plan)> = None;
+    let mut cuts: Vec<usize> = Vec::new();
+    // DFS over cut positions; evaluate complete cut sets.
+    fn go(
+        lo: usize,
+        l: usize,
+        cuts: &mut Vec<usize>,
+        perf: &PerfModel<'_>,
+        d: usize,
+        tier: usize,
+        mu: usize,
+        n_micro_global: usize,
+        best: &mut Option<(f64, Plan)>,
+    ) {
+        let m = perf.model;
+        let p = perf.platform;
+        for hi in lo..l {
+            // stage [lo..=hi] feasibility on the fixed tier
+            let act = m.range_act_bytes(lo, hi);
+            let params = m.range_param_bytes(lo, hi);
+            let copies = if d == 1 { 2 } else { 4 };
+            let need = (mu as u64) * act
+                + params * copies
+                + p.base_mem_mb * 1024 * 1024;
+            if need > p.tier(tier).mem_bytes() {
+                // extending hi only grows memory: stop
+                break;
             }
-            for tier in 0..p.n_tiers() {
-                if let Some((plan, perf)) =
-                    self.best_partition_fixed_resources(d, tier, n_micro_global)
-                {
-                    let j = alpha.0 * perf.c_iter + alpha.1 * perf.t_iter;
-                    if best.as_ref().map(|(b, _, _)| j < *b).unwrap_or(true) {
-                        best = Some((j, plan, perf));
-                    }
+            if hi == l - 1 {
+                let plan = Plan {
+                    cuts: cuts.clone(),
+                    dp: d,
+                    stage_tiers: vec![tier; cuts.len() + 1],
+                    n_micro_global,
+                };
+                let t = perf.evaluate(&plan).t_iter;
+                if best.as_ref().map(|(b, _)| t < *b).unwrap_or(true) {
+                    *best = Some((t, plan));
+                }
+            } else {
+                cuts.push(hi);
+                go(hi + 1, l, cuts, perf, d, tier, mu, n_micro_global, best);
+                cuts.pop();
+            }
+        }
+    }
+    go(0, l, &mut cuts, perf, d, tier, mu, n_micro_global, &mut best);
+    best.map(|(_, plan)| {
+        let pf = perf.evaluate(&plan);
+        (plan, pf)
+    })
+}
+
+/// Full TPDMP baseline over any (possibly shared) [`PerfModel`]: grid
+/// over (d, tier), throughput-max partition each, select by (3a).
+pub fn solve_with(
+    perf: &PerfModel<'_>,
+    dp_options: &[usize],
+    n_micro_global: usize,
+    alpha: (f64, f64),
+) -> Option<(Plan, PlanPerf)> {
+    let p = perf.platform;
+    let mut best: Option<(f64, Plan, PlanPerf)> = None;
+    for &d in dp_options {
+        if d == 0 || n_micro_global % d != 0 {
+            continue;
+        }
+        for tier in 0..p.n_tiers() {
+            if let Some((plan, pf)) =
+                best_partition_fixed(perf, d, tier, n_micro_global)
+            {
+                let j = alpha.0 * pf.c_iter + alpha.1 * pf.t_iter;
+                if best.as_ref().map(|(b, _, _)| j < *b).unwrap_or(true) {
+                    best = Some((j, plan, pf));
                 }
             }
         }
-        best.map(|(_, plan, perf)| (plan, perf))
     }
+    best.map(|(_, plan, pf)| (plan, pf))
 }
 
 #[cfg(test)]

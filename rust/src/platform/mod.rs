@@ -20,5 +20,7 @@ pub mod tiers;
 pub use function::{FunctionInstance, FunctionState};
 pub use network::{BandwidthModel, FlowSim};
 pub use pricing::CostModel;
-pub use storage::{MemStore, ObjectStore, ThrottledStore};
+pub use storage::{
+    MemStore, ObjectStore, RetryStore, ThrottledStore, TRANSIENT_ERROR_MARKER,
+};
 pub use tiers::{MemoryTier, PlatformSpec, StorageSpec};

@@ -10,6 +10,7 @@
 //! worker's 70 MB/s world (scaled up so demos finish quickly).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -253,6 +254,87 @@ impl ObjectStore for ThrottledStore {
     }
 }
 
+/// Marker every transient (retry-safe) storage error message carries —
+/// the contract between failure injectors ([`FlakyStore`]'s drops) and
+/// this middleware. Deliberately NOT the generic "timed out" class:
+/// genuine deadline exhaustion (a peer that died, a transfer larger
+/// than its budget) must surface immediately, not after `max_retries`
+/// more full-timeout waits — the deadline-overshoot class
+/// `ThrottledStore::get_blocking` exists to prevent.
+///
+/// [`FlakyStore`]: crate::scenario::FlakyStore
+pub const TRANSIENT_ERROR_MARKER: &str = "transient";
+
+/// Bounded-retry middleware over a store's blocking fetches: a
+/// `get_blocking` that fails with a [`TRANSIENT_ERROR_MARKER`]-class
+/// error is re-attempted up to `max_retries` more times, absorbing
+/// transient storage failures — the retry path the `flaky-network`
+/// scenario exercises deterministically (its injected drops fail
+/// instantly and can hit a key at most once, so a single retry always
+/// clears them). Every other error, genuine timeouts included,
+/// propagates at once; every other operation passes through untouched.
+pub struct RetryStore {
+    inner: Arc<dyn ObjectStore>,
+    max_retries: u32,
+    retries: Arc<AtomicU64>,
+}
+
+impl RetryStore {
+    pub fn new(inner: Arc<dyn ObjectStore>, max_retries: u32) -> Self {
+        Self { inner, max_retries, retries: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Shared handle on the retry counter (readable after the store has
+    /// been type-erased behind `Arc<dyn ObjectStore>`).
+    pub fn retry_counter(&self) -> Arc<AtomicU64> {
+        self.retries.clone()
+    }
+}
+
+impl ObjectStore for RetryStore {
+    fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
+        self.inner.put(key, data)
+    }
+
+    fn get(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+        self.inner.get(key)
+    }
+
+    fn get_blocking(&self, key: &str, timeout: Duration) -> Result<Arc<Vec<u8>>> {
+        let mut attempt = 0u32;
+        loop {
+            match self.inner.get_blocking(key, timeout) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    let transient =
+                        e.to_string().contains(TRANSIENT_ERROR_MARKER);
+                    if !transient || attempt >= self.max_retries {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    fn delete(&self, key: &str) {
+        self.inner.delete(key)
+    }
+
+    fn list(&self, prefix: &str) -> Vec<String> {
+        self.inner.list(prefix)
+    }
+
+    fn total_bytes(&self) -> u64 {
+        self.inner.total_bytes()
+    }
+
+    fn high_water_bytes(&self) -> u64 {
+        self.inner.high_water_bytes()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -352,6 +434,84 @@ mod tests {
         let start = Instant::now();
         let _ = t.get("x").unwrap(); // 0.1s at the scaled 1 MB/s
         assert!(start.elapsed().as_secs_f64() >= 0.09);
+    }
+
+    /// A store whose blocking fetches fail with a timeout-class error a
+    /// fixed number of times before succeeding.
+    struct FailNTimes {
+        inner: MemStore,
+        fails_left: Mutex<u32>,
+    }
+
+    impl ObjectStore for FailNTimes {
+        fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
+            self.inner.put(key, data)
+        }
+        fn get(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+            self.inner.get(key)
+        }
+        fn get_blocking(
+            &self,
+            key: &str,
+            timeout: Duration,
+        ) -> Result<Arc<Vec<u8>>> {
+            let mut left = self.fails_left.lock().unwrap();
+            if *left > 0 {
+                *left -= 1;
+                bail!("transient fault: get_blocking timed out waiting for {key:?}");
+            }
+            drop(left);
+            self.inner.get_blocking(key, timeout)
+        }
+        fn delete(&self, key: &str) {
+            self.inner.delete(key)
+        }
+        fn list(&self, prefix: &str) -> Vec<String> {
+            self.inner.list(prefix)
+        }
+        fn total_bytes(&self) -> u64 {
+            self.inner.total_bytes()
+        }
+    }
+
+    fn flaky_inner(fails: u32) -> Arc<FailNTimes> {
+        let inner = MemStore::new();
+        inner.put("k", vec![7]).unwrap();
+        Arc::new(FailNTimes { inner, fails_left: Mutex::new(fails) })
+    }
+
+    #[test]
+    fn retry_store_absorbs_transient_timeouts() {
+        let r = RetryStore::new(flaky_inner(2), 2);
+        let counter = r.retry_counter();
+        let got = r.get_blocking("k", Duration::from_secs(1)).unwrap();
+        assert_eq!(*got, vec![7]);
+        assert_eq!(counter.load(Ordering::Relaxed), 2);
+        // a clean fetch costs no retries
+        r.get_blocking("k", Duration::from_secs(1)).unwrap();
+        assert_eq!(counter.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn retry_store_gives_up_past_its_budget() {
+        let r = RetryStore::new(flaky_inner(3), 2);
+        let err = r.get_blocking("k", Duration::from_secs(1));
+        assert!(err.is_err(), "3 faults must exhaust 2 retries");
+    }
+
+    #[test]
+    fn retry_store_never_retries_genuine_timeouts() {
+        // a genuinely missing key exhausts ONE deadline, not
+        // (1 + max_retries) of them: real timeouts are not transient
+        let r = RetryStore::new(Arc::new(MemStore::new()), 2);
+        let start = Instant::now();
+        let err = r.get_blocking("never", Duration::from_millis(50));
+        let dt = start.elapsed().as_secs_f64();
+        assert!(err.is_err());
+        assert!(
+            dt < 0.12,
+            "genuine timeout was retried: waited {dt}s on a 50ms deadline"
+        );
     }
 
     #[test]

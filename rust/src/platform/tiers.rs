@@ -63,6 +63,12 @@ pub struct PlatformSpec {
     /// bandwidth = W * max(floor, 1 - slope*(n-1)).
     pub contention_slope: f64,
     pub contention_floor: f64,
+    /// Maximum concurrently running functions the platform sells (§2.1:
+    /// providers cap per-account concurrency — 1000 on Lambda, 300 on
+    /// Function Compute by default). The planner rejects data-parallel
+    /// degrees beyond it: the platform cannot price replicas it will
+    /// not launch.
+    pub max_concurrency: usize,
 }
 
 impl PlatformSpec {
@@ -92,6 +98,7 @@ impl PlatformSpec {
             beta: 1.15,
             contention_slope: 0.008,
             contention_floor: 0.45,
+            max_concurrency: 1000,
         }
     }
 
@@ -122,6 +129,7 @@ impl PlatformSpec {
             beta: 1.15,
             contention_slope: 0.006,
             contention_floor: 0.5,
+            max_concurrency: 300,
         }
     }
 
@@ -150,6 +158,7 @@ impl PlatformSpec {
             beta: 1.05,
             contention_slope: 0.0,
             contention_floor: 1.0,
+            max_concurrency: 256,
         }
     }
 
@@ -249,6 +258,21 @@ mod tests {
                     p.name,
                     t.mem_mb
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn concurrency_caps_cover_the_default_dp_space() {
+        for p in [
+            PlatformSpec::aws_lambda(),
+            PlatformSpec::alibaba_fc(),
+            PlatformSpec::local_sim(),
+        ] {
+            assert!(p.max_concurrency > 0);
+            // every default dp degree is launchable on every platform
+            for d in crate::planner::DEFAULT_DP_OPTIONS {
+                assert!(d <= p.max_concurrency, "{}: dp {d}", p.name);
             }
         }
     }

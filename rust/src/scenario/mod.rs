@@ -33,13 +33,26 @@
 //! lognormal transfer factor (the simulator draws per node — the
 //! static per-worker form is the runtime analogue) plus the σ/3
 //! compute factor; `cold-start` adds exponential delays to every
-//! generation's cold start. Bandwidth multipliers only bite when the
-//! run has a finite `throttle`; the lens never touches correctness,
-//! only timing.
+//! generation's cold start; `flaky-network` drops `get_blocking`
+//! attempts through the worker's [`FlakyStore`] handle (per-(worker,
+//! key) seeded decisions, at most one drop per key — the simulator
+//! charges the dead attempt's timeout per transfer node) and the
+//! trainer's [`RetryStore`](crate::platform::RetryStore) middleware
+//! absorbs them, exercising the retry path for real. Bandwidth
+//! multipliers only bite when the run has a finite `throttle`; the
+//! lens never touches correctness, only timing (flaky drops surface as
+//! retry counts in the report, never as wrong data).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::platform::ObjectStore;
 use crate::simcore::{
     cold_start_delays, straggler_factors, ScenarioModel, ScenarioSpec,
-    BANDWIDTH_JITTER_TAG, COLD_START_TAG,
+    BANDWIDTH_JITTER_TAG, COLD_START_TAG, FLAKY_NETWORK_TAG,
 };
 use crate::util::rng::Rng;
 
@@ -73,6 +86,10 @@ pub struct Injector {
     /// simulator's exact stream (empty unless `cold-start` is active).
     cold_gen0: Vec<f64>,
     cold_mean_s: Option<f64>,
+    /// `(prob, timeout_s)` when the `flaky-network` component is
+    /// active: each worker's store handle drops `get_blocking` attempts
+    /// with per-(worker, key) seeded decisions (see [`FlakyStore`]).
+    flaky: Option<(f64, f64)>,
 }
 
 impl Injector {
@@ -83,6 +100,7 @@ impl Injector {
         let mut lenses = vec![WorkerLens::IDENTITY; n_workers];
         let mut cold_gen0 = Vec::new();
         let mut cold_mean_s = None;
+        let mut flaky = None;
         for component in spec.components() {
             match *component {
                 ScenarioModel::Deterministic => {}
@@ -101,6 +119,12 @@ impl Injector {
                         lens.latency_mult *= factor;
                     }
                 }
+                ScenarioModel::FlakyNetwork { prob, timeout_s } => {
+                    // no per-worker lens: the drop decisions are pure
+                    // functions of (seed, worker, key), drawn lazily by
+                    // the worker's FlakyStore handle
+                    flaky = Some((prob, timeout_s));
+                }
                 ScenarioModel::BandwidthJitter { sigma } => {
                     let mut rng = Rng::new(seed ^ BANDWIDTH_JITTER_TAG);
                     for lens in &mut lenses {
@@ -118,7 +142,7 @@ impl Injector {
                 }
             }
         }
-        Self { spec: spec.clone(), seed, lenses, cold_gen0, cold_mean_s }
+        Self { spec: spec.clone(), seed, lenses, cold_gen0, cold_mean_s, flaky }
     }
 
     /// An inactive injector (identity lenses, base cold starts only).
@@ -184,6 +208,126 @@ impl Injector {
         (0..self.lenses.len().max(1))
             .map(|w| self.iter_virtual_s(w, base_s))
             .fold(0.0, f64::max)
+    }
+
+    /// `(prob, timeout_s)` of the `flaky-network` component, when
+    /// active.
+    pub fn flaky(&self) -> Option<(f64, f64)> {
+        self.flaky
+    }
+}
+
+/// FNV-1a over a key string — the stable hash [`FlakyStore`] mixes into
+/// its per-key drop stream (std's `DefaultHasher` is explicitly not
+/// stable across releases, and replay must be).
+fn fnv1a(key: &str) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for b in key.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// The `flaky-network` lens on a worker's store handle: `get_blocking`
+/// attempts are dropped with probability `prob`, at most once per key,
+/// by decisions that are pure functions of `(seed, worker, key)` — so
+/// the drop pattern is independent of thread interleaving and replays
+/// byte-identically, and a single retry always clears a drop (which is
+/// why it composes with [`RetryStore`](crate::platform::RetryStore)).
+/// An injected drop fails *instantly* with the transient error class
+/// ([`TRANSIENT_ERROR_MARKER`](crate::platform::TRANSIENT_ERROR_MARKER))
+/// and never touches the inner store, so storage op counts stay
+/// deterministic too.
+pub struct FlakyStore {
+    inner: Arc<dyn ObjectStore>,
+    seed: u64,
+    worker: u64,
+    prob: f64,
+    dropped: Mutex<std::collections::HashSet<String>>,
+    timeouts: Arc<AtomicU64>,
+}
+
+impl FlakyStore {
+    pub fn new(
+        inner: Arc<dyn ObjectStore>,
+        seed: u64,
+        worker: usize,
+        prob: f64,
+    ) -> Self {
+        Self {
+            inner,
+            seed,
+            worker: worker as u64,
+            prob,
+            dropped: Mutex::new(std::collections::HashSet::new()),
+            timeouts: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Shared handle on the injected-drop counter (readable after the
+    /// store has been type-erased).
+    pub fn timeout_counter(&self) -> Arc<AtomicU64> {
+        self.timeouts.clone()
+    }
+
+    /// Whether THIS attempt on `key` is dropped: the seeded per-key
+    /// decision, gated so a key fails at most once (transient by
+    /// construction).
+    fn should_drop(&self, key: &str) -> bool {
+        let mut dropped = self.dropped.lock().unwrap();
+        if dropped.contains(key) {
+            return false; // already failed once: the retry goes through
+        }
+        let stream = self.seed
+            ^ FLAKY_NETWORK_TAG
+            ^ self.worker.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ fnv1a(key);
+        if Rng::new(stream).chance(self.prob) {
+            dropped.insert(key.to_string());
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl ObjectStore for FlakyStore {
+    fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
+        self.inner.put(key, data)
+    }
+
+    fn get(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+        self.inner.get(key)
+    }
+
+    fn get_blocking(&self, key: &str, timeout: Duration) -> Result<Arc<Vec<u8>>> {
+        if self.should_drop(key) {
+            self.timeouts.fetch_add(1, Ordering::Relaxed);
+            // the marker is the retry middleware's classification
+            // contract: only errors carrying it are retry-safe
+            bail!(
+                "{} flaky-network drop: get_blocking gave up on {key:?}",
+                crate::platform::TRANSIENT_ERROR_MARKER
+            );
+        }
+        self.inner.get_blocking(key, timeout)
+    }
+
+    fn delete(&self, key: &str) {
+        self.inner.delete(key)
+    }
+
+    fn list(&self, prefix: &str) -> Vec<String> {
+        self.inner.list(prefix)
+    }
+
+    fn total_bytes(&self) -> u64 {
+        self.inner.total_bytes()
+    }
+
+    fn high_water_bytes(&self) -> u64 {
+        self.inner.high_water_bytes()
     }
 }
 
@@ -304,6 +448,93 @@ mod tests {
         );
         // and the base is always charged on top
         assert_eq!(inj.cold_start_s(0, 1, 1.5), 1.5 + g1);
+    }
+
+    #[test]
+    fn flaky_component_sets_params_and_keeps_lenses_identity() {
+        let inj = Injector::new(&spec("flaky-network"), 7, 4);
+        assert!(inj.is_active());
+        let (prob, timeout_s) = inj.flaky().unwrap();
+        assert!(prob > 0.0 && prob < 1.0);
+        assert!(timeout_s > 0.0);
+        for w in 0..4 {
+            assert_eq!(inj.worker(w), WorkerLens::IDENTITY);
+        }
+        assert!(Injector::inactive(4).flaky().is_none());
+        // composes: the flaky params ride along with other lenses
+        let both = Injector::new(&spec("flaky-network+straggler"), 7, 4);
+        assert!(both.flaky().is_some());
+        assert_ne!(both.worker(0), WorkerLens::IDENTITY);
+    }
+
+    #[test]
+    fn flaky_store_drops_deterministically_and_at_most_once_per_key() {
+        use crate::platform::{MemStore, ObjectStore};
+        use std::sync::Arc;
+        use std::time::Duration;
+
+        let mem = Arc::new(MemStore::new());
+        for i in 0..200 {
+            mem.put(&format!("k{i}"), vec![i as u8]).unwrap();
+        }
+        let store =
+            FlakyStore::new(mem.clone(), 7, 3, 0.15);
+        let counter = store.timeout_counter();
+        let timeout = Duration::from_secs(1);
+        let mut first_outcomes = Vec::new();
+        for i in 0..200 {
+            first_outcomes
+                .push(store.get_blocking(&format!("k{i}"), timeout).is_err());
+        }
+        let drops = first_outcomes.iter().filter(|d| **d).count();
+        // prob 0.15 over 200 keys: all-or-nothing would mean a broken
+        // stream (P < 1e-13 either way)
+        assert!(drops > 0 && drops < 200, "drop count {drops}");
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), drops as u64);
+        // second attempt on every key goes through: drops are transient
+        for i in 0..200 {
+            store.get_blocking(&format!("k{i}"), timeout).unwrap();
+        }
+        // a fresh handle with the same (seed, worker) replays the exact
+        // drop pattern; a different worker or seed draws its own
+        let replay = FlakyStore::new(mem.clone(), 7, 3, 0.15);
+        let mut same = true;
+        let mut other_differs = false;
+        let other = FlakyStore::new(mem.clone(), 8, 3, 0.15);
+        for (i, was_dropped) in first_outcomes.iter().enumerate() {
+            let key = format!("k{i}");
+            same &= replay.get_blocking(&key, timeout).is_err() == *was_dropped;
+            other_differs |=
+                other.get_blocking(&key, timeout).is_err() != *was_dropped;
+        }
+        assert!(same, "replay diverged from the first run");
+        assert!(other_differs, "seed 8 drew the identical 200-key pattern");
+    }
+
+    #[test]
+    fn flaky_store_composes_with_the_retry_middleware() {
+        use crate::platform::{MemStore, ObjectStore, RetryStore};
+        use std::sync::Arc;
+        use std::time::Duration;
+
+        let mem = Arc::new(MemStore::new());
+        for i in 0..100 {
+            mem.put(&format!("k{i}"), vec![1]).unwrap();
+        }
+        let flaky = FlakyStore::new(mem, 7, 0, 0.3);
+        let drops = flaky.timeout_counter();
+        let store = RetryStore::new(Arc::new(flaky), 1);
+        let retries = store.retry_counter();
+        // every fetch succeeds despite the injected drops...
+        for i in 0..100 {
+            store
+                .get_blocking(&format!("k{i}"), Duration::from_secs(1))
+                .unwrap();
+        }
+        // ...and each drop cost exactly one retry
+        let d = drops.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(d > 0, "no drops at prob 0.3 over 100 keys");
+        assert_eq!(retries.load(std::sync::atomic::Ordering::Relaxed), d);
     }
 
     #[test]

@@ -39,5 +39,5 @@ pub use engine::{allocate_rates, execute, SimOutcome};
 pub use graph::{FlowGraph, Node, NodeId, OpKind, Resource};
 pub use scenario::{
     cold_start_delays, straggler_factors, ScenarioModel, ScenarioSpec,
-    BANDWIDTH_JITTER_TAG, COLD_START_TAG, STRAGGLER_TAG,
+    BANDWIDTH_JITTER_TAG, COLD_START_TAG, FLAKY_NETWORK_TAG, STRAGGLER_TAG,
 };

@@ -40,6 +40,13 @@ pub enum ScenarioModel {
     /// sync occupancy) is stretched by `exp(σ·N(0,1))`, compute by the
     /// paper-calibrated σ/3 — the Table 3 "measured" noise.
     BandwidthJitter { sigma: f64 },
+    /// Transient storage failures: each transfer independently (with
+    /// probability `prob`, drawn in node-id order) suffers one dropped
+    /// `get_blocking` attempt and pays `timeout_s` of dead waiting
+    /// before its retry goes through. The runtime analogue injects the
+    /// drop into the real trainer's store handle and the retry layer
+    /// absorbs it (see [`Injector`](crate::scenario::Injector)).
+    FlakyNetwork { prob: f64, timeout_s: f64 },
 }
 
 /// Stream tags: each scenario draws from `Rng::new(seed ^ TAG)`. Shared
@@ -49,6 +56,7 @@ pub enum ScenarioModel {
 pub const COLD_START_TAG: u64 = 0xC01D_57A7;
 pub const STRAGGLER_TAG: u64 = 0x57A6_61E6;
 pub const BANDWIDTH_JITTER_TAG: u64 = 0xBA2D_317E;
+pub const FLAKY_NETWORK_TAG: u64 = 0xF1A2_4E71;
 
 /// The cold-start scenario's per-worker start delays, in worker-id
 /// order — the one stream both the simulator's graph perturbation and
@@ -92,6 +100,7 @@ impl ScenarioModel {
             ScenarioModel::ColdStart { .. } => "cold-start",
             ScenarioModel::Straggler { .. } => "straggler",
             ScenarioModel::BandwidthJitter { .. } => "bandwidth-jitter",
+            ScenarioModel::FlakyNetwork { .. } => "flaky-network",
         }
     }
 
@@ -107,13 +116,21 @@ impl ScenarioModel {
             "bandwidth-jitter" => {
                 Some(ScenarioModel::BandwidthJitter { sigma: 0.15 })
             }
+            "flaky-network" => {
+                Some(ScenarioModel::FlakyNetwork { prob: 0.15, timeout_s: 0.5 })
+            }
             _ => None,
         }
     }
 
     /// Every accepted wire name (error messages, CLI help).
-    pub const NAMES: [&'static str; 4] =
-        ["deterministic", "cold-start", "straggler", "bandwidth-jitter"];
+    pub const NAMES: [&'static str; 5] = [
+        "deterministic",
+        "cold-start",
+        "straggler",
+        "bandwidth-jitter",
+        "flaky-network",
+    ];
 
     pub fn is_deterministic(&self) -> bool {
         matches!(self, ScenarioModel::Deterministic)
@@ -148,6 +165,17 @@ impl ScenarioModel {
                     // lognormal factor around 1 (a bandwidth dip makes
                     // the transfer longer)
                     node.work *= (sg * rng.normal()).exp();
+                }
+            }
+            ScenarioModel::FlakyNetwork { prob, timeout_s } => {
+                // one draw per transfer node, in node-id order; a hit
+                // delays the op by the dead attempt's timeout (the
+                // retry then moves the same bytes)
+                let mut rng = Rng::new(seed ^ FLAKY_NETWORK_TAG);
+                for node in &mut graph.nodes {
+                    if node.kind == OpKind::Transfer && rng.chance(prob) {
+                        node.delay += timeout_s;
+                    }
                 }
             }
         }
@@ -186,6 +214,7 @@ impl ScenarioSpec {
             ScenarioModel::ColdStart { .. } => 1,
             ScenarioModel::Straggler { .. } => 2,
             ScenarioModel::BandwidthJitter { .. } => 3,
+            ScenarioModel::FlakyNetwork { .. } => 4,
         }
     }
 
@@ -261,8 +290,8 @@ impl ScenarioSpec {
 
     /// Human-readable list of accepted forms (error messages, help).
     pub const SYNTAX: &'static str =
-        "deterministic|cold-start|straggler|bandwidth-jitter, or a `+`-joined \
-         composite like cold-start+jitter";
+        "deterministic|cold-start|straggler|bandwidth-jitter|flaky-network, \
+         or a `+`-joined composite like cold-start+jitter";
 }
 
 #[cfg(test)]
@@ -299,7 +328,9 @@ mod tests {
 
     #[test]
     fn same_seed_replays_bit_identically() {
-        for name in ["cold-start", "straggler", "bandwidth-jitter"] {
+        for name in
+            ["cold-start", "straggler", "bandwidth-jitter", "flaky-network"]
+        {
             let s = ScenarioModel::parse(name).unwrap();
             let mut a = demo_graph();
             let mut b = demo_graph();
@@ -313,6 +344,9 @@ mod tests {
     #[test]
     fn different_seeds_differ() {
         for name in ["cold-start", "straggler", "bandwidth-jitter"] {
+            // flaky-network is excluded here: its draws are discrete, so
+            // two seeds CAN coincide on a small demo graph (the larger
+            // pipeline replay tests cover its seed sensitivity)
             let s = ScenarioModel::parse(name).unwrap();
             let mut a = demo_graph();
             let mut b = demo_graph();
@@ -359,6 +393,41 @@ mod tests {
     }
 
     #[test]
+    fn flaky_network_delays_transfers_only() {
+        // scan seeds for one where at least one transfer is hit (the
+        // draw is deterministic per seed, so this terminates instantly)
+        let m = ScenarioModel::parse("flaky-network").unwrap();
+        let ScenarioModel::FlakyNetwork { timeout_s, .. } = m else {
+            panic!("wrong variant")
+        };
+        let mut hit_seed = None;
+        for seed in 0..64u64 {
+            let mut g = demo_graph();
+            m.apply(&mut g, seed);
+            if g.nodes
+                .iter()
+                .any(|n| n.kind == OpKind::Transfer && n.delay >= timeout_s)
+            {
+                hit_seed = Some(seed);
+                break;
+            }
+        }
+        let seed = hit_seed.expect("no seed in 0..64 dropped a transfer");
+        let base = execute(&demo_graph()).makespan;
+        let mut g = demo_graph();
+        m.apply(&mut g, seed);
+        // compute/fixed nodes untouched; work amounts untouched
+        for (a, b) in g.nodes.iter().zip(&demo_graph().nodes) {
+            assert_eq!(a.work.to_bits(), b.work.to_bits());
+            if a.kind != OpKind::Transfer {
+                assert_eq!(a.delay.to_bits(), b.delay.to_bits());
+            }
+        }
+        // a dead attempt only ever adds waiting
+        assert!(execute(&g).makespan >= base);
+    }
+
+    #[test]
     fn spec_parses_singles_like_model() {
         for name in ScenarioModel::NAMES {
             let spec = ScenarioSpec::parse(name).unwrap();
@@ -392,6 +461,12 @@ mod tests {
             ScenarioSpec::parse("straggler+cold-start+jitter").unwrap();
         assert_eq!(triple.name(), "cold-start+straggler+bandwidth-jitter");
         assert_eq!(ScenarioSpec::parse(&triple.name()).unwrap(), triple);
+        // flaky-network composes and canonicalizes last
+        let flaky =
+            ScenarioSpec::parse("flaky-network+cold-start").unwrap();
+        assert_eq!(flaky.name(), "cold-start+flaky-network");
+        assert_eq!(ScenarioSpec::parse(&flaky.name()).unwrap(), flaky);
+        assert!(ScenarioSpec::parse("flaky-network+flaky-network").is_none());
     }
 
     #[test]

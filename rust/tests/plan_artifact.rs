@@ -49,8 +49,10 @@ impl Gen for ArtifactGen {
                 "cold-start",
                 "straggler",
                 "bandwidth-jitter",
+                "flaky-network",
                 "cold-start+jitter",
                 "straggler+bandwidth-jitter",
+                "flaky-network+cold-start",
                 "cold-start+straggler+bandwidth-jitter",
             ];
             cfg.scenario = funcpipe::simcore::ScenarioSpec::parse(
@@ -58,6 +60,17 @@ impl Gen for ArtifactGen {
             )
             .unwrap();
             cfg.seed = rng.next_u64() & ((1u64 << 53) - 1);
+        }
+        if rng.chance(0.5) {
+            // a strictly-increasing subset of the default dp space
+            cfg.dp_options = funcpipe::planner::DEFAULT_DP_OPTIONS
+                .iter()
+                .copied()
+                .filter(|_| rng.chance(0.6))
+                .collect();
+            if cfg.dp_options.is_empty() {
+                cfg.dp_options = vec![1 + rng.index(8)];
+            }
         }
 
         // structurally plausible plan (serde is shape-only; semantic
@@ -74,12 +87,17 @@ impl Gen for ArtifactGen {
             dp,
             n_micro_global: dp * (1 + rng.index(16)),
         };
+        // strategy provenance: any registry key, or a foreign-but-valid
+        // string (loaders keep provenance open for future strategies)
+        let strategies =
+            ["bnb", "miqp", "bayes", "tpdmp", "sweep", "custom-solver"];
         PlanArtifact::new(
             cfg,
             plan,
             (1.0, rng.uniform(0.0, 1e-3)),
             rng.uniform(0.1, 100.0),
             rng.uniform(1e-6, 1.0),
+            strategies[rng.index(strategies.len())],
         )
     }
 }
@@ -96,6 +114,58 @@ fn artifact_json_roundtrip_is_identity() {
             Err(_) => false,
         },
     );
+}
+
+#[test]
+fn v_old_artifacts_parse_with_default_provenance() {
+    // downgrade freshly-generated artifacts to the version-1 on-disk
+    // shape (no strategy key) and check the back-compat parse: loads,
+    // defaults provenance to "bnb", re-serializes as the current schema
+    check_with(
+        QcConfig { cases: 60, ..Default::default() },
+        &ArtifactGen,
+        |a| {
+            let Json::Obj(mut obj) = a.to_json() else { return false };
+            obj.insert("version".into(), Json::Num(1.0));
+            obj.remove("strategy");
+            let v1_text = Json::Obj(obj).pretty();
+            let Ok(parsed) = PlanArtifact::from_json_text(&v1_text) else {
+                return false;
+            };
+            parsed.strategy == "bnb"
+                && parsed.version
+                    == funcpipe::experiment::PLAN_SCHEMA_VERSION
+                && parsed.plan == a.plan
+                && parsed.config == a.config
+                // and the upgraded form round-trips like any current one
+                && PlanArtifact::from_json_text(&parsed.to_json_text())
+                    .map(|p| p == parsed)
+                    .unwrap_or(false)
+        },
+    );
+}
+
+#[test]
+fn provenance_survives_the_file_flow() {
+    let exp = Experiment::new(small_cfg()).unwrap();
+    let report = exp
+        .plan_with("tpdmp", &exp.plan_request())
+        .unwrap();
+    let rec = report.recommended().expect("feasible plan");
+    assert_eq!(rec.artifact.strategy, "tpdmp");
+    let path = std::env::temp_dir().join(format!(
+        "funcpipe-strategy-plan-{}.json",
+        std::process::id()
+    ));
+    rec.artifact.save(&path).unwrap();
+    let loaded = PlanArtifact::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.strategy, "tpdmp");
+    assert_eq!(loaded, rec.artifact);
+    // a strategy-planned artifact drives simulate/train sessions like
+    // any other — provenance is metadata, not behaviour
+    let exp2 = Experiment::from_artifact(&loaded).unwrap();
+    exp2.simulate(&loaded).unwrap();
 }
 
 // ---------------------------------------------------------------------------

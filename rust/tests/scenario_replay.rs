@@ -26,7 +26,9 @@ fn same_seed_and_scenario_is_bit_identical() {
         "cold-start",
         "straggler",
         "bandwidth-jitter",
+        "flaky-network",
         "cold-start+jitter",
+        "flaky-network+cold-start",
         "cold-start+straggler+bandwidth-jitter",
     ] {
         // two fully independent sessions — nothing shared but the inputs

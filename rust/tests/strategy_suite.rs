@@ -1,0 +1,195 @@
+//! Cross-strategy agreement suite for the `Planner` registry: the two
+//! exact solvers must agree on every default weight pair, every
+//! strategy must return memory-feasible plans from the one shared
+//! request, the dp search space is honored uniformly, and racing is
+//! deterministic.
+
+use funcpipe::model::{merge_layers, zoo, MergeCriterion, ModelProfile};
+use funcpipe::planner::{
+    race, solve_request, PerfModel, PlanRequest, RobustRank, RobustSpec,
+    DEFAULT_WEIGHTS, STRATEGIES,
+};
+use funcpipe::platform::PlatformSpec;
+use funcpipe::simcore::ScenarioSpec;
+
+fn small_model(name: &str, p: &PlatformSpec) -> ModelProfile {
+    merge_layers(&zoo::by_name(name, p).unwrap(), 4, MergeCriterion::Compute)
+}
+
+/// `miqp` and `bnb` are both exact on the same program, so for EVERY
+/// default weight pair they must reach the same optimal objective on
+/// the small zoo models (the suite-level form of the in-module
+/// certification tests).
+#[test]
+fn miqp_and_bnb_agree_on_every_default_weight() {
+    let p = PlatformSpec::aws_lambda();
+    for name in ["resnet101", "bert-large", "amoebanet-d18"] {
+        let m = small_model(name, &p);
+        let perf = PerfModel::new(&m, &p);
+        for &alpha in &DEFAULT_WEIGHTS {
+            let mut req = PlanRequest::new(8);
+            req.weights = vec![alpha];
+            req.dp_options = vec![1, 2];
+            let bnb = solve_request("bnb", &perf, &req).unwrap();
+            let miqp = solve_request("miqp", &perf, &req).unwrap();
+            let (b, q) = (
+                bnb.candidates.first().expect("bnb feasible"),
+                miqp.candidates.first().expect("miqp feasible"),
+            );
+            let jb = alpha.0 * b.perf.c_iter + alpha.1 * b.perf.t_iter;
+            let jq = alpha.0 * q.perf.c_iter + alpha.1 * q.perf.t_iter;
+            assert!(
+                (jb - jq).abs() < 1e-9 * jb.max(1.0),
+                "{name} α={alpha:?}: bnb {jb} vs miqp {jq}"
+            );
+        }
+    }
+}
+
+/// Every registry strategy returns plans that validate against the
+/// model/platform (memory constraint (3b) included) and stay inside the
+/// requested dp space.
+#[test]
+fn every_strategy_returns_memory_feasible_plans() {
+    let p = PlatformSpec::aws_lambda();
+    for model_name in ["resnet101", "amoebanet-d18"] {
+        let m = merge_layers(
+            &zoo::by_name(model_name, &p).unwrap(),
+            6,
+            MergeCriterion::Compute,
+        );
+        let perf = PerfModel::new(&m, &p);
+        let mut req = PlanRequest::new(16);
+        req.dp_options = vec![1, 2, 4];
+        for strategy in STRATEGIES {
+            let out = solve_request(strategy, &perf, &req).unwrap();
+            assert!(
+                !out.candidates.is_empty(),
+                "{strategy} on {model_name}: nothing feasible"
+            );
+            for c in &out.candidates {
+                c.plan.validate(&m, &p).unwrap_or_else(|e| {
+                    panic!("{strategy} on {model_name}: infeasible plan {e:#}")
+                });
+                assert!(req.dp_options.contains(&c.plan.dp), "{strategy}");
+                assert!(c.perf.t_iter.is_finite() && c.perf.t_iter > 0.0);
+                assert!(c.perf.c_iter.is_finite() && c.perf.c_iter > 0.0);
+            }
+        }
+    }
+}
+
+/// Constraining the dp space constrains EVERY strategy the same way —
+/// the historical bug class this suite exists for (each solver carried
+/// its own hardcoded `vec![1, 2, 4, 8, 16, 32]`).
+#[test]
+fn strategies_search_the_shared_dp_space() {
+    let p = PlatformSpec::aws_lambda();
+    let m = small_model("resnet101", &p);
+    let perf = PerfModel::new(&m, &p);
+    let mut req = PlanRequest::new(16);
+    req.dp_options = vec![2];
+    for strategy in STRATEGIES {
+        let out = solve_request(strategy, &perf, &req).unwrap();
+        assert!(!out.candidates.is_empty(), "{strategy}");
+        for c in &out.candidates {
+            assert_eq!(c.plan.dp, 2, "{strategy} ignored dp_options");
+        }
+    }
+}
+
+/// The exact strategies dominate the baselines on the shared objective
+/// (their search spaces contain the baselines') — through the one API.
+#[test]
+fn exact_strategies_dominate_baselines_on_objective() {
+    let p = PlatformSpec::aws_lambda();
+    let m = merge_layers(
+        &zoo::by_name("amoebanet-d18", &p).unwrap(),
+        6,
+        MergeCriterion::Compute,
+    );
+    let perf = PerfModel::new(&m, &p);
+    let alpha = (1.0, 2e-4);
+    let mut req = PlanRequest::new(16);
+    req.weights = vec![alpha];
+    req.dp_options = vec![1, 2, 4];
+    let j = |name: &str| -> Option<f64> {
+        solve_request(name, &perf, &req)
+            .unwrap()
+            .candidates
+            .first()
+            .map(|c| alpha.0 * c.perf.c_iter + alpha.1 * c.perf.t_iter)
+    };
+    let j_bnb = j("bnb").expect("bnb feasible");
+    for baseline in ["tpdmp", "bayes", "sweep"] {
+        if let Some(jb) = j(baseline) {
+            assert!(
+                j_bnb <= jb + 1e-9,
+                "bnb {j_bnb} worse than {baseline} {jb}"
+            );
+        }
+    }
+}
+
+/// Racing the whole registry twice over one shared `PerfModel` yields
+/// bit-identical outcomes in registry order — what makes the
+/// `plan --strategy all` report byte-replayable.
+#[test]
+fn race_is_deterministic_with_and_without_robustness() {
+    let p = PlatformSpec::aws_lambda();
+    let m = small_model("resnet101", &p);
+    let perf = PerfModel::new(&m, &p);
+    let mut req = PlanRequest::new(16);
+    req.dp_options = vec![1, 2];
+    req.robust = Some(RobustSpec {
+        scenario: ScenarioSpec::parse("straggler+jitter").unwrap(),
+        seeds: 4,
+        rank: RobustRank::Worst,
+    });
+    let a = race(&perf, &req, &STRATEGIES).unwrap();
+    let b = race(&perf, &req, &STRATEGIES).unwrap();
+    for (oa, ob) in a.iter().zip(&b) {
+        assert_eq!(oa.strategy, ob.strategy);
+        assert_eq!(oa.stats.nodes, ob.stats.nodes, "{}", oa.strategy);
+        assert_eq!(oa.candidates.len(), ob.candidates.len());
+        for (ca, cb) in oa.candidates.iter().zip(&ob.candidates) {
+            assert_eq!(ca.plan, cb.plan);
+            assert_eq!(ca.perf.t_iter.to_bits(), cb.perf.t_iter.to_bits());
+            let (ra, rb) = (ca.robust.unwrap(), cb.robust.unwrap());
+            assert_eq!(ra.worst_t.to_bits(), rb.worst_t.to_bits());
+            assert_eq!(ra.mean_t.to_bits(), rb.mean_t.to_bits());
+        }
+        assert_eq!(oa.recommend_idx(), ob.recommend_idx());
+    }
+}
+
+/// Robust ranking can legitimately change which frontier point the
+/// δ-rule picks; whatever it picks must carry robust scores and sit on
+/// the robust frontier.
+#[test]
+fn robust_recommendation_is_scored_and_on_frontier() {
+    let p = PlatformSpec::aws_lambda();
+    let m = small_model("resnet101", &p);
+    let perf = PerfModel::new(&m, &p);
+    for rank in [RobustRank::Worst, RobustRank::Mean] {
+        let mut req = PlanRequest::new(16);
+        req.dp_options = vec![1, 2, 4];
+        req.robust = Some(RobustSpec {
+            scenario: ScenarioSpec::parse("cold-start+straggler").unwrap(),
+            seeds: 6,
+            rank,
+        });
+        let out = solve_request("bnb", &perf, &req).unwrap();
+        let idx = out.recommend_idx().expect("recommendation");
+        assert!(out.frontier_flags()[idx]);
+        let rec = &out.candidates[idx];
+        let score = rec.robust.expect("robust score");
+        assert!(score.mean_t <= score.worst_t + 1e-12);
+        // the ranking metric is the robust one, not the deterministic
+        let (mt, _) = rec.metric(Some(rank));
+        match rank {
+            RobustRank::Worst => assert_eq!(mt.to_bits(), score.worst_t.to_bits()),
+            RobustRank::Mean => assert_eq!(mt.to_bits(), score.mean_t.to_bits()),
+        }
+    }
+}
