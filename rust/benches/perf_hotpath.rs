@@ -18,6 +18,31 @@ use funcpipe::pipeline::{build_schedule, simulate_iteration};
 use funcpipe::planner::{CoOptimizer, PerfModel};
 use funcpipe::platform::network::BandwidthModel;
 use funcpipe::platform::{MemStore, ObjectStore, PlatformSpec, ThrottledStore};
+use funcpipe::simcore::{execute, execute_full, FlowGraph, Node};
+
+/// Synthetic dp-scale DES input: `n_workers` independent
+/// compute → upload → download chains, `rounds` deep — the shape a
+/// 10³-replica iteration puts through the engine. Works are slightly
+/// de-tied per node so completions arrive one at a time (the worst
+/// case for a full re-solve on every event).
+fn worker_chains(n_workers: usize, rounds: usize) -> FlowGraph {
+    let mut g = FlowGraph::new();
+    for w in 0..n_workers {
+        let mut prev: Option<usize> = None;
+        for r in 0..rounds {
+            let jitter = 1.0 + ((w * 31 + r * 7) % 1009) as f64 * 1e-4;
+            let mut c = Node::compute(w, jitter);
+            if let Some(p) = prev {
+                c = c.after(vec![p]);
+            }
+            let c = g.add(c);
+            let u = g.add(Node::transfer(w, true, 0.6 * jitter).after(vec![c]));
+            prev =
+                Some(g.add(Node::transfer(w, false, 0.4 * jitter).after(vec![u])));
+        }
+    }
+    g
+}
 
 fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     // warmup
@@ -59,6 +84,60 @@ fn main() {
         let opt = CoOptimizer::new(&m, &p);
         std::hint::black_box(opt.solve(16, (1.0, 2e-4)));
     });
+    // -- 1024-worker rows: the incremental event-driven engine vs the
+    // full re-solve reference on the same graph. The ISSUE-6 scale
+    // target: an event at one worker must not cost a whole-graph
+    // re-solve once dp reaches 10^3.
+    {
+        let g = worker_chains(1024, 3);
+        let inc = execute(&g);
+        let full = execute_full(&g);
+        assert!(
+            (inc.makespan - full.makespan).abs()
+                <= 1e-6 * full.makespan.max(1.0),
+            "engines disagree at 1024 workers: incremental {} vs full {}",
+            inc.makespan,
+            full.makespan
+        );
+
+        let inc_iters = 20;
+        let t0 = Instant::now();
+        for _ in 0..inc_iters {
+            std::hint::black_box(execute(&g));
+        }
+        let inc_per = t0.elapsed().as_secs_f64() / inc_iters as f64;
+
+        let full_iters = 2;
+        let t0 = Instant::now();
+        for _ in 0..full_iters {
+            std::hint::black_box(execute_full(&g));
+        }
+        let full_per = t0.elapsed().as_secs_f64() / full_iters as f64;
+
+        println!(
+            "{:<44} {:>12.3} ms/run   ({:.1} plans/s)",
+            format!("simcore execute 1024x3 chains ({} nodes)", g.len()),
+            inc_per * 1e3,
+            1.0 / inc_per
+        );
+        println!(
+            "{:<44} {:>12.3} ms/run   ({:.1} plans/s)",
+            "simcore execute_full (reference)",
+            full_per * 1e3,
+            1.0 / full_per
+        );
+        let speedup = full_per / inc_per;
+        println!(
+            "{:<44} {:>11.1}x",
+            "incremental speedup at 1024 workers", speedup
+        );
+        assert!(
+            speedup >= 10.0,
+            "incremental engine at 1024 workers is only {speedup:.1}x the \
+             full re-solve path (bar: 10x)"
+        );
+    }
+
     let net = BandwidthModel::uniform(8, 70.0e6, 0.04);
     time("flowsim scatter-reduce n=8", 200, || {
         std::hint::black_box(simulate_scatter_reduce(8, 300e6, &net));

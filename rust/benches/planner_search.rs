@@ -103,4 +103,40 @@ fn main() {
         "shared StageCache hit rate {:.2} below the 50% bar",
         perf.cache().hit_rate()
     );
+
+    // -- dp=1024 row: the 10^3-replica point through the closed-form
+    // scorer. The platform cap is lifted to let the planner price it
+    // (aws-lambda sells 1000 concurrent functions; the row is about
+    // scorer throughput at scale, not the purchasable envelope).
+    let mut p1024 = PlatformSpec::aws_lambda();
+    p1024.max_concurrency = 1024;
+    let m = merge_layers(
+        &zoo::by_name("resnet101", &p1024).expect("zoo model"),
+        8,
+        MergeCriterion::Compute,
+    );
+    let perf = PerfModel::new(&m, &p1024);
+    let mut req = PlanRequest::new(2048); // mu = 2 per replica at dp=1024
+    req.dp_options = vec![1024];
+    let t0 = Instant::now();
+    let outcome = solve_request("bnb", &perf, &req).expect("bnb at dp=1024");
+    let dt = t0.elapsed().as_secs_f64();
+    println!();
+    println!(
+        "{:<12} {:>8} {:>10} {:>12.4} {:>12.1} {:>9.1}%",
+        "bnb dp=1024",
+        outcome.candidates.len(),
+        outcome.stats.nodes,
+        dt,
+        outcome.candidates.len() as f64 / dt.max(1e-9),
+        perf.cache().hit_rate() * 100.0
+    );
+    assert!(
+        !outcome.candidates.is_empty(),
+        "no feasible resnet101 plan at dp=1024"
+    );
+    assert!(
+        outcome.candidates.iter().all(|c| c.plan.dp == 1024),
+        "dp space was [1024]; every candidate must sit on it"
+    );
 }

@@ -40,9 +40,9 @@ pub const CONFIG_FLAGS: &[&str] = &[
 /// Config-shaping flags that clash with `--plan`: the artifact already
 /// froze them, so overriding them silently would betray the plan.
 /// `--scenario`/`--seed` are deliberately absent: they are a lens on
-/// execution, not part of the plan's identity (and only the `simulate`
-/// and `train` subcommands accept them at all — a scenario flag on a
-/// command that cannot honor it would be a silent no-op).
+/// execution, not part of the plan's identity (and only the `simulate`,
+/// `train` and `profile` subcommands accept them at all — a scenario
+/// flag on a command that cannot honor it would be a silent no-op).
 pub const PLAN_EXCLUSIVE_FLAGS: &[&str] = &[
     "config",
     "model",
@@ -69,7 +69,12 @@ pub fn flags_for(cmd: &str) -> Option<Vec<&'static str>> {
         "simulate" => &["plan", "scenario", "seed"],
         "train" => &["plan", "dp", "mu", "scenario", "seed"],
         "baseline" => &[],
-        "profile" => return Some(vec!["artifacts", "format"]),
+        // profile honors the scenario lens: measured stage times are
+        // viewed through the per-worker compute multiplier, the same
+        // draws the simulator and trainer apply
+        "profile" => {
+            return Some(vec!["artifacts", "format", "scenario", "seed"])
+        }
         "fig" => return Some(vec!["format"]),
         _ => return None,
     };
@@ -487,8 +492,9 @@ mod tests {
 
     #[test]
     fn scenario_flags_flow_through() {
-        // both execution surfaces accept the lens with identical rules
-        for cmd in ["simulate", "train"] {
+        // every surface that can honor the lens accepts it with
+        // identical rules
+        for cmd in ["simulate", "train", "profile"] {
             let allowed = flags_for(cmd).unwrap();
             let flags = parse_flags(
                 cmd,
@@ -529,9 +535,10 @@ mod tests {
         with_plan.insert("plan".to_string(), "p.json".to_string());
         with_plan.insert("scenario".to_string(), "straggler".to_string());
         check_plan_conflicts(&with_plan).unwrap();
-        // ...but only simulate/train can honor it: everywhere else the
-        // flag would be a silent no-op, so it is rejected outright
-        for cmd in ["plan", "baseline", "profile"] {
+        // ...but only simulate/train/profile can honor it: everywhere
+        // else the flag would be a silent no-op, so it is rejected
+        // outright
+        for cmd in ["plan", "baseline"] {
             let allowed = flags_for(cmd).unwrap();
             assert!(
                 parse_flags(cmd, &argv(&["--scenario", "straggler"]), &allowed)

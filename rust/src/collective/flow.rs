@@ -1,8 +1,10 @@
-//! The multi-flow transfer engine: one persistent uploader thread and one
-//! persistent downloader thread per worker, shared by every collective
+//! The multi-flow transfer engine: one persistent uploader *task* per
+//! pool plus per-stream downloader tasks, shared by every collective
 //! call on a [`CollectiveCtx`](super::CollectiveCtx) and reused across
-//! rounds — the paper's duplex insight (§3.3) realized as a reusable flow
-//! pool instead of the original per-call `mpsc` + `thread::spawn`.
+//! rounds — the paper's duplex insight (§3.3). Historically this was a
+//! pair of dedicated OS threads per worker; the pool is now a set of
+//! state machines on the shared bounded executor ([`crate::exec`]), so
+//! dp=1024 costs tasks, not threads.
 //!
 //! * **Uploads** are queued on a bounded channel whose capacity equals
 //!   the in-flight window, so at most `in_flight` serialized chunks are
@@ -11,19 +13,21 @@
 //!   earlier chunk (the sliding window that bounds the *store's*
 //!   occupancy) and deletes a broadcast chunk whose readers have all
 //!   acked.
-//! * **Downloads** are requested as ordered key streams; the downloader
-//!   prefetches up to `in_flight` chunks ahead of the consumer through a
-//!   bounded result channel.
+//! * **Downloads** are requested as ordered key streams; each stream's
+//!   task prefetches up to `in_flight` chunks ahead of the consumer
+//!   through a bounded result channel.
 //!
-//! Both threads exit when the pool is dropped.
+//! The uploader task exits when the pool is dropped (after draining its
+//! queue); stream tasks exit when their keys are exhausted or their
+//! consumer is gone.
 
-use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::exec;
+use crate::exec::sync::{channel, oneshot, Receiver, TrySendError};
 use crate::platform::ObjectStore;
 
 /// Window gate executed by the uploader *before* its `put`: wait until
@@ -44,101 +48,61 @@ pub(crate) struct PutJob {
 
 enum UpJob {
     Put(PutJob),
-    Flush(SyncSender<Result<()>>),
-}
-
-struct DownStream {
-    keys: Vec<String>,
-    timeout: Duration,
-    out: SyncSender<Result<Arc<Vec<u8>>>>,
+    Flush(exec::sync::OnceSender<Result<()>>),
 }
 
 /// The reusable per-worker flow pool.
 pub(crate) struct FlowPool {
-    up_tx: Option<SyncSender<UpJob>>,
-    down_tx: Option<SyncSender<DownStream>>,
-    uploader: Option<JoinHandle<()>>,
-    downloader: Option<JoinHandle<()>>,
+    up_tx: Option<exec::sync::Sender<UpJob>>,
+    store: Arc<dyn ObjectStore>,
     in_flight: usize,
 }
 
 impl FlowPool {
     pub fn new(store: Arc<dyn ObjectStore>, in_flight: usize) -> Self {
         let in_flight = in_flight.max(1);
-        let (up_tx, up_rx) = mpsc::sync_channel::<UpJob>(in_flight);
-        let (down_tx, down_rx) = mpsc::sync_channel::<DownStream>(2);
+        let (up_tx, mut up_rx) = channel::<UpJob>(in_flight);
 
         let up_store = store.clone();
-        let uploader = std::thread::Builder::new()
-            .name("flow-uploader".into())
-            .spawn(move || {
-                let mut failed: Option<anyhow::Error> = None;
-                while let Ok(job) = up_rx.recv() {
-                    match job {
-                        UpJob::Put(put) => {
-                            if failed.is_some() {
-                                continue; // drain; error surfaces on flush
-                            }
-                            if let Err(e) = run_put(&up_store, put) {
-                                failed = Some(e);
-                            }
+        exec::spawn(async move {
+            let mut failed: Option<anyhow::Error> = None;
+            while let Some(job) = up_rx.recv().await {
+                match job {
+                    UpJob::Put(put) => {
+                        if failed.is_some() {
+                            continue; // drain; error surfaces on flush
                         }
-                        UpJob::Flush(reply) => {
-                            let res = match failed.take() {
-                                Some(e) => Err(e),
-                                None => Ok(()),
-                            };
-                            let _ = reply.send(res);
+                        if let Err(e) = run_put(&up_store, put).await {
+                            failed = Some(e);
                         }
                     }
-                }
-            })
-            .expect("spawn uploader");
-
-        let downloader = std::thread::Builder::new()
-            .name("flow-downloader".into())
-            .spawn(move || {
-                while let Ok(stream) = down_rx.recv() {
-                    for key in &stream.keys {
-                        match store.get_blocking(key, stream.timeout) {
-                            Ok(bytes) => {
-                                if stream.out.send(Ok(bytes)).is_err() {
-                                    break; // consumer gone
-                                }
-                            }
-                            Err(e) => {
-                                let _ = stream.out.send(Err(
-                                    e.context(format!("downloading {key}")),
-                                ));
-                                break;
-                            }
-                        }
+                    UpJob::Flush(reply) => {
+                        let res = match failed.take() {
+                            Some(e) => Err(e),
+                            None => Ok(()),
+                        };
+                        reply.send(res);
                     }
                 }
-            })
-            .expect("spawn downloader");
+            }
+        });
 
-        Self {
-            up_tx: Some(up_tx),
-            down_tx: Some(down_tx),
-            uploader: Some(uploader),
-            downloader: Some(downloader),
-            in_flight,
-        }
+        Self { up_tx: Some(up_tx), store, in_flight }
     }
 
     pub fn in_flight(&self) -> usize {
         self.in_flight
     }
 
-    /// Queue an upload, blocking if the window is full. Only safe when
-    /// the uploader cannot be gate-blocked on an ack *this* thread would
-    /// produce (plain phases; post-download tails).
-    pub fn put_blocking(&self, job: PutJob) -> Result<()> {
+    /// Queue an upload, waiting if the window is full. Only safe when
+    /// the uploader cannot be gate-blocked on an ack *this* state
+    /// machine would produce (plain phases; post-download tails).
+    pub async fn put(&self, job: PutJob) -> Result<()> {
         self.up_tx
             .as_ref()
             .expect("pool alive")
             .send(UpJob::Put(job))
+            .await
             .map_err(|_| anyhow!("uploader thread gone"))
     }
 
@@ -152,21 +116,22 @@ impl FlowPool {
             .try_send(UpJob::Put(job))
         {
             Ok(()) => Ok(()),
-            Err(TrySendError::Full(UpJob::Put(j))) => Err(j),
-            Err(TrySendError::Disconnected(UpJob::Put(j))) => Err(j),
+            Err(TrySendError::Full(UpJob::Put(j)))
+            | Err(TrySendError::Disconnected(UpJob::Put(j))) => Err(j),
             Err(_) => unreachable!("only Put jobs are tried"),
         }
     }
 
     /// Wait for every queued upload to finish; returns the first error.
-    pub fn flush(&self) -> Result<()> {
-        let (tx, rx) = mpsc::sync_channel(1);
+    pub async fn flush(&self) -> Result<()> {
+        let (tx, rx) = oneshot();
         self.up_tx
             .as_ref()
             .expect("pool alive")
             .send(UpJob::Flush(tx))
+            .await
             .map_err(|_| anyhow!("uploader thread gone"))?;
-        rx.recv().context("uploader thread gone")?
+        rx.await.map_err(|_| anyhow!("uploader thread gone"))?
     }
 
     /// Start an ordered download stream; chunks arrive on the returned
@@ -176,21 +141,35 @@ impl FlowPool {
         keys: Vec<String>,
         timeout: Duration,
     ) -> Receiver<Result<Arc<Vec<u8>>>> {
-        let (tx, rx) = mpsc::sync_channel(self.in_flight);
-        let _ = self
-            .down_tx
-            .as_ref()
-            .expect("pool alive")
-            .send(DownStream { keys, timeout, out: tx });
+        let (tx, rx) = channel(self.in_flight);
+        let store = self.store.clone();
+        exec::spawn(async move {
+            for key in &keys {
+                match store.get_async(key, timeout).await {
+                    Ok(bytes) => {
+                        if tx.send(Ok(bytes)).await.is_err() {
+                            break; // consumer gone
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx
+                            .send(Err(e.context(format!("downloading {key}"))))
+                            .await;
+                        break;
+                    }
+                }
+            }
+        });
         rx
     }
 }
 
-fn run_put(store: &Arc<dyn ObjectStore>, put: PutJob) -> Result<()> {
+async fn run_put(store: &Arc<dyn ObjectStore>, put: PutJob) -> Result<()> {
     if let Some(gate) = put.gate {
         for ack in &gate.wait_acks {
             store
-                .get_blocking(ack, gate.timeout)
+                .get_async(ack, gate.timeout)
+                .await
                 .with_context(|| format!("window gate on {ack}"))?;
             store.delete(ack);
         }
@@ -198,26 +177,22 @@ fn run_put(store: &Arc<dyn ObjectStore>, put: PutJob) -> Result<()> {
             store.delete(spent);
         }
     }
-    store.put(&put.key, put.data).context("chunk upload")
+    store.put_async(&put.key, put.data).await.context("chunk upload")
 }
 
 impl Drop for FlowPool {
     fn drop(&mut self) {
-        // closing the channels ends both loops
+        // closing the channel ends the uploader task once it drains;
+        // callers that need completion ordering flush first (all the
+        // collective algorithms do)
         drop(self.up_tx.take());
-        drop(self.down_tx.take());
-        if let Some(h) = self.uploader.take() {
-            let _ = h.join();
-        }
-        if let Some(h) = self.downloader.take() {
-            let _ = h.join();
-        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::block_on;
     use crate::platform::MemStore;
 
     fn mem() -> Arc<dyn ObjectStore> {
@@ -228,15 +203,18 @@ mod tests {
     fn uploads_land_and_flush_reports_ok() {
         let store = mem();
         let pool = FlowPool::new(store.clone(), 2);
-        for i in 0..5 {
-            pool.put_blocking(PutJob {
-                key: format!("k/{i}"),
-                data: vec![i as u8; 3],
-                gate: None,
-            })
-            .unwrap();
-        }
-        pool.flush().unwrap();
+        block_on(async {
+            for i in 0..5 {
+                pool.put(PutJob {
+                    key: format!("k/{i}"),
+                    data: vec![i as u8; 3],
+                    gate: None,
+                })
+                .await
+                .unwrap();
+            }
+            pool.flush().await.unwrap();
+        });
         assert_eq!(store.list("k/").len(), 5);
     }
 
@@ -248,18 +226,20 @@ mod tests {
             store.put(&format!("s/{i}"), vec![i as u8]).unwrap();
         }
         let keys: Vec<String> = (0..6).map(|i| format!("s/{i}")).collect();
-        let rx = pool.stream(keys, Duration::from_secs(5));
-        for i in 0..6 {
-            let b = rx.recv().unwrap().unwrap();
-            assert_eq!(*b, vec![i as u8]);
-        }
+        let mut rx = pool.stream(keys, Duration::from_secs(5));
+        block_on(async {
+            for i in 0..6 {
+                let b = rx.recv().await.unwrap().unwrap();
+                assert_eq!(*b, vec![i as u8]);
+            }
+        });
     }
 
     #[test]
     fn gate_blocks_until_ack_exists() {
         let store = mem();
         let pool = FlowPool::new(store.clone(), 1);
-        pool.put_blocking(PutJob {
+        block_on(pool.put(PutJob {
             key: "gated".into(),
             data: vec![1],
             gate: Some(Gate {
@@ -267,12 +247,12 @@ mod tests {
                 delete_after: Some("old-chunk".into()),
                 timeout: Duration::from_secs(5),
             }),
-        })
+        }))
         .unwrap();
         store.put("old-chunk", vec![9, 9]).unwrap();
         assert!(store.get("gated").is_none(), "gate should hold the put");
         store.put("ack/0", Vec::new()).unwrap();
-        pool.flush().unwrap();
+        block_on(pool.flush()).unwrap();
         assert!(store.get("gated").is_some());
         assert!(store.get("ack/0").is_none(), "ack consumed");
         assert!(store.get("old-chunk").is_none(), "spent chunk deleted");
@@ -282,7 +262,7 @@ mod tests {
     fn upload_errors_surface_on_flush() {
         let store = mem();
         let pool = FlowPool::new(store.clone(), 1);
-        pool.put_blocking(PutJob {
+        block_on(pool.put(PutJob {
             key: "x".into(),
             data: vec![],
             gate: Some(Gate {
@@ -290,13 +270,13 @@ mod tests {
                 delete_after: None,
                 timeout: Duration::from_millis(30),
             }),
-        })
+        }))
         .unwrap();
-        assert!(pool.flush().is_err());
+        assert!(block_on(pool.flush()).is_err());
         // pool stays usable after an error
-        pool.put_blocking(PutJob { key: "y".into(), data: vec![1], gate: None })
+        block_on(pool.put(PutJob { key: "y".into(), data: vec![1], gate: None }))
             .unwrap();
-        pool.flush().unwrap();
+        block_on(pool.flush()).unwrap();
         assert!(store.get("y").is_some());
     }
 
@@ -304,8 +284,8 @@ mod tests {
     fn stream_propagates_timeout_error() {
         let store = mem();
         let pool = FlowPool::new(store, 1);
-        let rx =
+        let mut rx =
             pool.stream(vec!["missing".into()], Duration::from_millis(30));
-        assert!(rx.recv().unwrap().is_err());
+        assert!(block_on(rx.recv()).unwrap().is_err());
     }
 }

@@ -21,10 +21,11 @@
 //! Every real algorithm implements the [`Collective`] trait and runs on a
 //! shared [`CollectiveCtx`]: the store handle, the `(group, round)` key
 //! namespace, the merge operator and the [`Chunking`] policy. Transfers go
-//! through a per-worker [`flow::FlowPool`] — one persistent uploader and
-//! one persistent downloader thread reused across rounds (replacing the
-//! per-call `mpsc` + `thread::spawn` of the original implementation), so
-//! uplink and downlink genuinely overlap just as in the flow model.
+//! through a per-worker [`flow::FlowPool`] — a persistent uploader state
+//! machine plus per-stream downloaders on the shared bounded executor
+//! ([`crate::exec`]), reused across rounds — so uplink and downlink
+//! genuinely overlap just as in the flow model, at O(cores) threads
+//! total instead of two OS threads per worker.
 //!
 //! With chunking enabled, gradients are split into fixed-size chunks that
 //! are uploaded, downloaded and merged as independent flows. Consumers
@@ -50,6 +51,8 @@ pub mod scatter_reduce;
 pub mod sendrecv;
 pub mod sim;
 
+use std::future::Future;
+use std::pin::Pin;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -63,7 +66,12 @@ pub use analytic::{
 
 /// Merge operator: `acc += delta`. Injected so the trainer can route the
 /// reduction through the AOT `merge2` executable (L1 Pallas kernel).
-pub type MergeFn<'a> = dyn Fn(&mut [f32], &[f32]) + 'a;
+/// `Send + Sync` because the collectives are worker *state machines* on
+/// the shared executor: the closure may be polled from any pool thread.
+pub type MergeFn<'a> = dyn Fn(&mut [f32], &[f32]) + Send + Sync + 'a;
+
+/// Boxed future a [`Collective`] round returns (object-safe async).
+pub type CollectiveFuture<'a> = Pin<Box<dyn Future<Output = Result<()>> + Send + 'a>>;
 
 pub(crate) fn native_merge(acc: &mut [f32], delta: &[f32]) {
     add_assign(acc, delta);
@@ -310,12 +318,12 @@ impl CollectiveCtx {
 
     /// Run one all-reduce round with the algorithm selected by `alg`. On
     /// return `grads` holds the elementwise sum over all `n` workers.
-    pub fn all_reduce(
+    pub async fn all_reduce(
         &self,
         alg: SyncAlgorithm,
         round: u64,
         grads: &mut [f32],
-        merge: Option<&MergeFn>,
+        merge: Option<&MergeFn<'_>>,
     ) -> Result<()> {
         let c: &dyn Collective = match alg {
             SyncAlgorithm::ScatterReduce => &scatter_reduce::PlainScatterReduce,
@@ -324,30 +332,44 @@ impl CollectiveCtx {
             }
         };
         c.all_reduce(self, round, grads, merge)
+            .await
             .with_context(|| format!("{} round {round}", c.name()))
     }
 
+    /// Blocking convenience over [`Self::all_reduce`] for sync callers
+    /// (tests, benches, examples that drive ranks from OS threads).
+    pub fn all_reduce_blocking(
+        &self,
+        alg: SyncAlgorithm,
+        round: u64,
+        grads: &mut [f32],
+        merge: Option<&MergeFn<'_>>,
+    ) -> Result<()> {
+        crate::exec::block_on(self.all_reduce(alg, round, grads, merge))
+    }
+
     /// Publish this rank's end-of-round marker (the cleanup barrier).
-    pub(crate) fn mark_done(&self, round: u64) -> Result<()> {
+    pub(crate) async fn mark_done(&self, round: u64) -> Result<()> {
         self.store
-            .put(&done_key(&self.group, round, self.rank), Vec::new())
+            .put_async(&done_key(&self.group, round, self.rank), Vec::new())
+            .await
             .context("done marker")
     }
 }
 
 /// One storage-relayed all-reduce algorithm over the unified engine.
-pub trait Collective {
+pub trait Collective: Send + Sync {
     fn name(&self) -> &'static str;
 
-    /// Blocking; on return every rank's `grads` holds the elementwise sum
+    /// Resolves once every rank's `grads` holds the elementwise sum
     /// across the `ctx.n` participants of `(ctx.group, round)`.
-    fn all_reduce(
-        &self,
-        ctx: &CollectiveCtx,
+    fn all_reduce<'a>(
+        &'a self,
+        ctx: &'a CollectiveCtx,
         round: u64,
-        grads: &mut [f32],
-        merge: Option<&MergeFn>,
-    ) -> Result<()>;
+        grads: &'a mut [f32],
+        merge: Option<&'a MergeFn<'a>>,
+    ) -> CollectiveFuture<'a>;
 }
 
 #[cfg(test)]

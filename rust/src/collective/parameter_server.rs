@@ -59,15 +59,36 @@ pub fn ps_sync_worker_chunked(
     timeout: Duration,
     chunking: Chunking,
 ) -> Result<()> {
+    crate::exec::block_on(ps_sync_worker_async(
+        store, group, round, rank, grads, timeout, chunking,
+    ))
+}
+
+/// Async worker push/pull — the state-machine form of
+/// [`ps_sync_worker_chunked`]; identical keys and ordering.
+pub async fn ps_sync_worker_async(
+    store: &Arc<dyn ObjectStore>,
+    group: &str,
+    round: u64,
+    rank: usize,
+    grads: &mut [f32],
+    timeout: Duration,
+    chunking: Chunking,
+) -> Result<()> {
     let chunks = chunk_ranges(0, grads.len(), chunking.chunk_elems());
     for (c, &(lo, hi)) in chunks.iter().enumerate() {
         store
-            .put(&push_key(group, round, rank, c), f32s_to_bytes(&grads[lo..hi]))
+            .put_async(
+                &push_key(group, round, rank, c),
+                f32s_to_bytes(&grads[lo..hi]),
+            )
+            .await
             .context("ps push")?;
     }
     for (c, &(lo, hi)) in chunks.iter().enumerate() {
         let merged = store
-            .get_blocking(&merged_key(group, round, c), timeout)
+            .get_async(&merged_key(group, round, c), timeout)
+            .await
             .context("ps pull")?;
         grads[lo..hi].copy_from_slice(&bytes_to_f32s(&merged));
     }
@@ -111,6 +132,24 @@ pub fn ps_sync_server_chunked(
     timeout: Duration,
     chunking: Chunking,
 ) -> Result<Vec<f32>> {
+    crate::exec::block_on(ps_sync_server_async(
+        store, group, round, n, len, merge, timeout, chunking,
+    ))
+}
+
+/// Async server gather/merge/publish — the state-machine form of
+/// [`ps_sync_server_chunked`]; identical keys and ordering.
+#[allow(clippy::too_many_arguments)]
+pub async fn ps_sync_server_async(
+    store: &Arc<dyn ObjectStore>,
+    group: &str,
+    round: u64,
+    n: usize,
+    len: usize,
+    merge: Option<&MergeFn<'_>>,
+    timeout: Duration,
+    chunking: Chunking,
+) -> Result<Vec<f32>> {
     let native: &MergeFn = &native_merge;
     let merge = merge.unwrap_or(native);
     let chunks = chunk_ranges(0, len, chunking.chunk_elems());
@@ -119,13 +158,15 @@ pub fn ps_sync_server_chunked(
         for rank in 0..n {
             let key = push_key(group, round, rank, c);
             let bytes = store
-                .get_blocking(&key, timeout)
+                .get_async(&key, timeout)
+                .await
                 .context("ps gather")?;
             merge(&mut acc[lo..hi], &bytes_to_f32s(&bytes));
             store.delete(&key);
         }
         store
-            .put(&merged_key(group, round, c), f32s_to_bytes(&acc[lo..hi]))
+            .put_async(&merged_key(group, round, c), f32s_to_bytes(&acc[lo..hi]))
+            .await
             .context("ps publish")?;
     }
     Ok(acc)

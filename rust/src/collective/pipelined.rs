@@ -15,8 +15,8 @@
 //! — eq. (1) vs eq. (2).
 //!
 //! Duplex runs on the context's persistent [`flow::FlowPool`]: uploads
-//! stream chunk-wise through the uploader thread while this thread merges
-//! the downloads the downloader prefetches, so uplink and downlink
+//! stream chunk-wise through the uploader task while this state machine
+//! merges the downloads the downloader prefetches, so uplink and downlink
 //! genuinely overlap in the real path just as in the flow model — now at
 //! *chunk* granularity.
 //!
@@ -36,8 +36,10 @@ use anyhow::{Context, Result};
 use super::flow::{Gate, PutJob};
 use super::{
     ack_key, bytes_to_f32s, f32s_to_bytes, merged_chunk_key, native_merge,
-    split_ranges, ChunkPlan, Chunking, Collective, CollectiveCtx, MergeFn,
+    split_ranges, ChunkPlan, Chunking, Collective, CollectiveCtx,
+    CollectiveFuture, MergeFn,
 };
+use crate::exec::block_on;
 use crate::platform::ObjectStore;
 
 pub(crate) fn reduce_key(
@@ -81,215 +83,225 @@ impl Collective for PipelinedScatterReduce {
         "pipelined-scatter-reduce"
     }
 
-    fn all_reduce(
-        &self,
-        ctx: &CollectiveCtx,
+    fn all_reduce<'a>(
+        &'a self,
+        ctx: &'a CollectiveCtx,
         round: u64,
-        grads: &mut [f32],
-        merge: Option<&MergeFn>,
-    ) -> Result<()> {
-        let (n, rank) = (ctx.n, ctx.rank);
-        if n == 1 {
-            return Ok(());
-        }
-        let native: &MergeFn = &native_merge;
-        let merge = merge.unwrap_or(native);
-        let ranges = split_ranges(grads.len(), n);
-        let plan = ChunkPlan::new(&ranges, &ctx.chunking);
-        let windowed = ctx.chunking.is_chunked();
-        let window = ctx.pool().in_flight();
-        let group = ctx.group.as_str();
-        let pool = ctx.pool();
-        let (mylo, myhi) = ranges[rank];
+        grads: &'a mut [f32],
+        merge: Option<&'a MergeFn<'a>>,
+    ) -> CollectiveFuture<'a> {
+        Box::pin(run(ctx, round, grads, merge))
+    }
+}
 
-        // ---- the full upload plan: reduce steps, then the broadcast ----
-        let mut planned: Vec<Planned> = Vec::new();
-        for k in 1..n {
-            let split = (rank + k) % n;
-            for (c, &(lo, hi)) in plan.chunks[split].iter().enumerate() {
-                planned.push(Planned {
-                    key: reduce_key(group, round, split, rank, c),
-                    lo,
-                    hi,
-                    ackers: vec![split],
-                    broadcast: false,
-                });
-            }
-        }
-        let n_reduce = planned.len();
-        debug_assert_eq!(n_reduce, plan.total_reduce(rank, n));
-        for (c, &(lo, hi)) in plan.chunks[rank].iter().enumerate() {
+async fn run(
+    ctx: &CollectiveCtx,
+    round: u64,
+    grads: &mut [f32],
+    merge: Option<&MergeFn<'_>>,
+) -> Result<()> {
+    let (n, rank) = (ctx.n, ctx.rank);
+    if n == 1 {
+        return Ok(());
+    }
+    let native: &MergeFn = &native_merge;
+    let merge = merge.unwrap_or(native);
+    let ranges = split_ranges(grads.len(), n);
+    let plan = ChunkPlan::new(&ranges, &ctx.chunking);
+    let windowed = ctx.chunking.is_chunked();
+    let window = ctx.pool().in_flight();
+    let group = ctx.group.as_str();
+    let pool = ctx.pool();
+    let (mylo, myhi) = ranges[rank];
+
+    // ---- the full upload plan: reduce steps, then the broadcast ----
+    let mut planned: Vec<Planned> = Vec::new();
+    for k in 1..n {
+        let split = (rank + k) % n;
+        for (c, &(lo, hi)) in plan.chunks[split].iter().enumerate() {
             planned.push(Planned {
-                key: merged_chunk_key(group, round, rank, c),
-                lo: lo - mylo,
-                hi: hi - mylo,
-                ackers: (0..n).filter(|&d| d != rank).collect(),
-                broadcast: true,
+                key: reduce_key(group, round, split, rank, c),
+                lo,
+                hi,
+                ackers: vec![split],
+                broadcast: false,
             });
         }
-
-        // window gate for planned[q]: wait until chunk q-W was consumed
-        let gate_for = |q: usize| -> Option<Gate> {
-            if !windowed || q < window {
-                return None;
-            }
-            let p = &planned[q - window];
-            Some(Gate {
-                wait_acks: p
-                    .ackers
-                    .iter()
-                    .map(|&d| ack_key(group, round, rank, q - window, d))
-                    .collect(),
-                delete_after: p.broadcast.then(|| p.key.clone()),
-                timeout: ctx.timeout,
-            })
-        };
-        // one planned upload, serialized lazily from `data` (the gradient
-        // during the reduce phase, the merged buffer during broadcast)
-        let job_for = |q: usize, data: &[f32]| -> PutJob {
-            let p = &planned[q];
-            PutJob {
-                key: p.key.clone(),
-                data: f32s_to_bytes(&data[p.lo..p.hi]),
-                gate: gate_for(q),
-            }
-        };
-        // fill the upload window without ever blocking: the acks a gate
-        // waits on may be ours to produce via the download loop
-        let fill = |data: &[f32],
-                    limit: usize,
-                    next_put: &mut usize,
-                    parked: &mut Option<PutJob>| {
-            loop {
-                let job = match parked.take() {
-                    Some(j) => j,
-                    None if *next_put < limit => {
-                        let j = job_for(*next_put, data);
-                        *next_put += 1;
-                        j
-                    }
-                    None => return,
-                };
-                if let Err(j) = pool.try_put(job) {
-                    *parked = Some(j);
-                    return;
-                }
-            }
-        };
-        // after our own downloads are done, blocking is safe: the gates'
-        // acks come from other, still-active consumers
-        let drain = |data: &[f32],
-                     limit: usize,
-                     next_put: &mut usize,
-                     parked: &mut Option<PutJob>|
-         -> Result<()> {
-            if let Some(j) = parked.take() {
-                pool.put_blocking(j)?;
-            }
-            while *next_put < limit {
-                pool.put_blocking(job_for(*next_put, data))?;
-                *next_put += 1;
-            }
-            Ok(())
-        };
-
-        // ---- reduce phase: stream uploads while merging our own split --
-        let mut merged = grads[mylo..myhi].to_vec();
-        let mut incoming: Vec<Incoming> = Vec::new();
-        for k in 2..=n {
-            let src = (rank + n - (k - 1)) % n;
-            let base = plan.reduce_seq_base(src, rank, n);
-            for (c, &(lo, hi)) in plan.chunks[rank].iter().enumerate() {
-                incoming.push(Incoming {
-                    key: reduce_key(group, round, rank, src, c),
-                    lo,
-                    hi,
-                    producer: src,
-                    seq: base + c,
-                });
-            }
-        }
-        let rx = pool.stream(
-            incoming.iter().map(|i| i.key.clone()).collect(),
-            ctx.timeout,
-        );
-        let mut next_put = 0usize;
-        let mut parked: Option<PutJob> = None;
-        for inc in &incoming {
-            fill(grads, n_reduce, &mut next_put, &mut parked);
-            let bytes = rx.recv().context("reduce stream closed")??;
-            merge(
-                &mut merged[inc.lo - mylo..inc.hi - mylo],
-                &bytes_to_f32s(&bytes),
-            );
-            ctx.store.delete(&inc.key); // single reader: consume
-            if windowed {
-                ctx.store
-                    .put(
-                        &ack_key(group, round, inc.producer, inc.seq, rank),
-                        Vec::new(),
-                    )
-                    .context("reduce ack")?;
-            }
-        }
-        drain(grads, n_reduce, &mut next_put, &mut parked)?;
-
-        // ---- broadcast phase: publish merged chunks, gather the rest ---
-        grads[mylo..myhi].copy_from_slice(&merged);
-        let mut incoming: Vec<Incoming> = Vec::new();
-        for j in 0..n {
-            if j == rank {
-                continue;
-            }
-            let base = plan.total_reduce(j, n);
-            for (c, &(lo, hi)) in plan.chunks[j].iter().enumerate() {
-                incoming.push(Incoming {
-                    key: merged_chunk_key(group, round, j, c),
-                    lo,
-                    hi,
-                    producer: j,
-                    seq: base + c,
-                });
-            }
-        }
-        let rx = pool.stream(
-            incoming.iter().map(|i| i.key.clone()).collect(),
-            ctx.timeout,
-        );
-        for inc in &incoming {
-            fill(&merged, planned.len(), &mut next_put, &mut parked);
-            let bytes = rx.recv().context("broadcast stream closed")??;
-            grads[inc.lo..inc.hi].copy_from_slice(&bytes_to_f32s(&bytes));
-            if windowed {
-                ctx.store
-                    .put(
-                        &ack_key(group, round, inc.producer, inc.seq, rank),
-                        Vec::new(),
-                    )
-                    .context("broadcast ack")?;
-            }
-        }
-        drain(&merged, planned.len(), &mut next_put, &mut parked)?;
-        pool.flush().context("upload flush")?;
-
-        // ---- close the window tail: collect outstanding acks ----------
-        if windowed {
-            let tail = planned.len().saturating_sub(window);
-            for (q, p) in planned.iter().enumerate().skip(tail) {
-                for &d in &p.ackers {
-                    let key = ack_key(group, round, rank, q, d);
-                    ctx.store
-                        .get_blocking(&key, ctx.timeout)
-                        .context("tail ack")?;
-                    ctx.store.delete(&key);
-                }
-                if p.broadcast {
-                    ctx.store.delete(&p.key);
-                }
-            }
-        }
-        ctx.mark_done(round)
     }
+    let n_reduce = planned.len();
+    debug_assert_eq!(n_reduce, plan.total_reduce(rank, n));
+    for (c, &(lo, hi)) in plan.chunks[rank].iter().enumerate() {
+        planned.push(Planned {
+            key: merged_chunk_key(group, round, rank, c),
+            lo: lo - mylo,
+            hi: hi - mylo,
+            ackers: (0..n).filter(|&d| d != rank).collect(),
+            broadcast: true,
+        });
+    }
+
+    // window gate for planned[q]: wait until chunk q-W was consumed
+    let gate_for = |q: usize| -> Option<Gate> {
+        if !windowed || q < window {
+            return None;
+        }
+        let p = &planned[q - window];
+        Some(Gate {
+            wait_acks: p
+                .ackers
+                .iter()
+                .map(|&d| ack_key(group, round, rank, q - window, d))
+                .collect(),
+            delete_after: p.broadcast.then(|| p.key.clone()),
+            timeout: ctx.timeout,
+        })
+    };
+    // one planned upload, serialized lazily from `data` (the gradient
+    // during the reduce phase, the merged buffer during broadcast)
+    let job_for = |q: usize, data: &[f32]| -> PutJob {
+        let p = &planned[q];
+        PutJob {
+            key: p.key.clone(),
+            data: f32s_to_bytes(&data[p.lo..p.hi]),
+            gate: gate_for(q),
+        }
+    };
+    // fill the upload window without ever suspending: the acks a gate
+    // waits on may be ours to produce via the download loop
+    let fill = |data: &[f32],
+                limit: usize,
+                next_put: &mut usize,
+                parked: &mut Option<PutJob>| {
+        loop {
+            let job = match parked.take() {
+                Some(j) => j,
+                None if *next_put < limit => {
+                    let j = job_for(*next_put, data);
+                    *next_put += 1;
+                    j
+                }
+                None => return,
+            };
+            if let Err(j) = pool.try_put(job) {
+                *parked = Some(j);
+                return;
+            }
+        }
+    };
+
+    // ---- reduce phase: stream uploads while merging our own split --
+    let mut merged = grads[mylo..myhi].to_vec();
+    let mut incoming: Vec<Incoming> = Vec::new();
+    for k in 2..=n {
+        let src = (rank + n - (k - 1)) % n;
+        let base = plan.reduce_seq_base(src, rank, n);
+        for (c, &(lo, hi)) in plan.chunks[rank].iter().enumerate() {
+            incoming.push(Incoming {
+                key: reduce_key(group, round, rank, src, c),
+                lo,
+                hi,
+                producer: src,
+                seq: base + c,
+            });
+        }
+    }
+    let mut rx = pool.stream(
+        incoming.iter().map(|i| i.key.clone()).collect(),
+        ctx.timeout,
+    );
+    let mut next_put = 0usize;
+    let mut parked: Option<PutJob> = None;
+    for inc in &incoming {
+        fill(grads, n_reduce, &mut next_put, &mut parked);
+        let bytes = rx.recv().await.context("reduce stream closed")??;
+        merge(
+            &mut merged[inc.lo - mylo..inc.hi - mylo],
+            &bytes_to_f32s(&bytes),
+        );
+        ctx.store.delete(&inc.key); // single reader: consume
+        if windowed {
+            ctx.store
+                .put_async(
+                    &ack_key(group, round, inc.producer, inc.seq, rank),
+                    Vec::new(),
+                )
+                .await
+                .context("reduce ack")?;
+        }
+    }
+    // after our own downloads are done, suspending on the window is safe:
+    // the gates' acks come from other, still-active consumers
+    if let Some(j) = parked.take() {
+        pool.put(j).await?;
+    }
+    while next_put < n_reduce {
+        pool.put(job_for(next_put, grads)).await?;
+        next_put += 1;
+    }
+
+    // ---- broadcast phase: publish merged chunks, gather the rest ---
+    grads[mylo..myhi].copy_from_slice(&merged);
+    let mut incoming: Vec<Incoming> = Vec::new();
+    for j in 0..n {
+        if j == rank {
+            continue;
+        }
+        let base = plan.total_reduce(j, n);
+        for (c, &(lo, hi)) in plan.chunks[j].iter().enumerate() {
+            incoming.push(Incoming {
+                key: merged_chunk_key(group, round, j, c),
+                lo,
+                hi,
+                producer: j,
+                seq: base + c,
+            });
+        }
+    }
+    let mut rx = pool.stream(
+        incoming.iter().map(|i| i.key.clone()).collect(),
+        ctx.timeout,
+    );
+    for inc in &incoming {
+        fill(&merged, planned.len(), &mut next_put, &mut parked);
+        let bytes = rx.recv().await.context("broadcast stream closed")??;
+        grads[inc.lo..inc.hi].copy_from_slice(&bytes_to_f32s(&bytes));
+        if windowed {
+            ctx.store
+                .put_async(
+                    &ack_key(group, round, inc.producer, inc.seq, rank),
+                    Vec::new(),
+                )
+                .await
+                .context("broadcast ack")?;
+        }
+    }
+    if let Some(j) = parked.take() {
+        pool.put(j).await?;
+    }
+    while next_put < planned.len() {
+        pool.put(job_for(next_put, &merged)).await?;
+        next_put += 1;
+    }
+    pool.flush().await.context("upload flush")?;
+
+    // ---- close the window tail: collect outstanding acks ----------
+    if windowed {
+        let tail = planned.len().saturating_sub(window);
+        for (q, p) in planned.iter().enumerate().skip(tail) {
+            for &d in &p.ackers {
+                let key = ack_key(group, round, rank, q, d);
+                ctx.store
+                    .get_async(&key, ctx.timeout)
+                    .await
+                    .context("tail ack")?;
+                ctx.store.delete(&key);
+            }
+            if p.broadcast {
+                ctx.store.delete(&p.key);
+            }
+        }
+    }
+    ctx.mark_done(round).await
 }
 
 /// Pipelined scatter-reduce. Blocking; on return `grads` holds the
@@ -333,7 +345,7 @@ pub fn pipelined_scatter_reduce_chunked(
 ) -> Result<()> {
     let ctx = CollectiveCtx::new(store.clone(), group, rank, n, timeout)
         .with_chunking(chunking);
-    PipelinedScatterReduce.all_reduce(&ctx, round, grads, merge)
+    block_on(run(&ctx, round, grads, merge))
 }
 
 #[cfg(test)]

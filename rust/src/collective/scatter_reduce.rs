@@ -28,8 +28,10 @@ use anyhow::{Context, Result};
 use super::flow::PutJob;
 use super::{
     bytes_to_f32s, done_key, f32s_to_bytes, merged_chunk_key, native_merge,
-    split_ranges, ChunkPlan, Chunking, Collective, CollectiveCtx, MergeFn,
+    split_ranges, ChunkPlan, Chunking, Collective, CollectiveCtx,
+    CollectiveFuture, MergeFn,
 };
+use crate::exec::block_on;
 use crate::platform::ObjectStore;
 
 pub(crate) fn p1_key(
@@ -50,90 +52,101 @@ impl Collective for PlainScatterReduce {
         "scatter-reduce"
     }
 
-    fn all_reduce(
-        &self,
-        ctx: &CollectiveCtx,
+    fn all_reduce<'a>(
+        &'a self,
+        ctx: &'a CollectiveCtx,
         round: u64,
-        grads: &mut [f32],
-        merge: Option<&MergeFn>,
-    ) -> Result<()> {
-        let (n, rank) = (ctx.n, ctx.rank);
-        if n == 1 {
-            return Ok(());
-        }
-        let native: &MergeFn = &native_merge;
-        let merge = merge.unwrap_or(native);
-        let ranges = split_ranges(grads.len(), n);
-        let plan = ChunkPlan::new(&ranges, &ctx.chunking);
-        let group = ctx.group.as_str();
-        let pool = ctx.pool();
-
-        // phase 1: upload foreign splits chunk-wise (uplink only)
-        for j in 0..n {
-            if j == rank {
-                continue;
-            }
-            for (c, &(lo, hi)) in plan.chunks[j].iter().enumerate() {
-                pool.put_blocking(PutJob {
-                    key: p1_key(group, round, j, rank, c),
-                    data: f32s_to_bytes(&grads[lo..hi]),
-                    gate: None,
-                })?;
-            }
-        }
-        pool.flush().context("phase-1 upload")?;
-
-        // phase 2: merge the foreign copies of our own split, consuming
-        // each chunk (we are its only reader)
-        let (mylo, myhi) = ranges[rank];
-        let mut merged = grads[mylo..myhi].to_vec();
-        let mut keys = Vec::new();
-        let mut spans = Vec::new();
-        for j in 0..n {
-            if j == rank {
-                continue;
-            }
-            for (c, &(lo, hi)) in plan.chunks[rank].iter().enumerate() {
-                keys.push(p1_key(group, round, rank, j, c));
-                spans.push((lo, hi));
-            }
-        }
-        let rx = pool.stream(keys.clone(), ctx.timeout);
-        for (key, &(lo, hi)) in keys.iter().zip(&spans) {
-            let bytes = rx.recv().context("phase-2 stream closed")??;
-            merge(&mut merged[lo - mylo..hi - mylo], &bytes_to_f32s(&bytes));
-            ctx.store.delete(key);
-        }
-
-        // phase 3: publish merged chunks, gather the other merged splits
-        for (c, &(lo, hi)) in plan.chunks[rank].iter().enumerate() {
-            pool.put_blocking(PutJob {
-                key: merged_chunk_key(group, round, rank, c),
-                data: f32s_to_bytes(&merged[lo - mylo..hi - mylo]),
-                gate: None,
-            })?;
-        }
-        pool.flush().context("phase-3 upload")?;
-        grads[mylo..myhi].copy_from_slice(&merged);
-
-        let mut keys = Vec::new();
-        let mut spans = Vec::new();
-        for j in 0..n {
-            if j == rank {
-                continue;
-            }
-            for (c, &(lo, hi)) in plan.chunks[j].iter().enumerate() {
-                keys.push(merged_chunk_key(group, round, j, c));
-                spans.push((lo, hi));
-            }
-        }
-        let rx = pool.stream(keys, ctx.timeout);
-        for &(lo, hi) in &spans {
-            let bytes = rx.recv().context("phase-3 stream closed")??;
-            grads[lo..hi].copy_from_slice(&bytes_to_f32s(&bytes));
-        }
-        ctx.mark_done(round)
+        grads: &'a mut [f32],
+        merge: Option<&'a MergeFn<'a>>,
+    ) -> CollectiveFuture<'a> {
+        Box::pin(run(ctx, round, grads, merge))
     }
+}
+
+async fn run(
+    ctx: &CollectiveCtx,
+    round: u64,
+    grads: &mut [f32],
+    merge: Option<&MergeFn<'_>>,
+) -> Result<()> {
+    let (n, rank) = (ctx.n, ctx.rank);
+    if n == 1 {
+        return Ok(());
+    }
+    let native: &MergeFn = &native_merge;
+    let merge = merge.unwrap_or(native);
+    let ranges = split_ranges(grads.len(), n);
+    let plan = ChunkPlan::new(&ranges, &ctx.chunking);
+    let group = ctx.group.as_str();
+    let pool = ctx.pool();
+
+    // phase 1: upload foreign splits chunk-wise (uplink only)
+    for j in 0..n {
+        if j == rank {
+            continue;
+        }
+        for (c, &(lo, hi)) in plan.chunks[j].iter().enumerate() {
+            pool.put(PutJob {
+                key: p1_key(group, round, j, rank, c),
+                data: f32s_to_bytes(&grads[lo..hi]),
+                gate: None,
+            })
+            .await?;
+        }
+    }
+    pool.flush().await.context("phase-1 upload")?;
+
+    // phase 2: merge the foreign copies of our own split, consuming
+    // each chunk (we are its only reader)
+    let (mylo, myhi) = ranges[rank];
+    let mut merged = grads[mylo..myhi].to_vec();
+    let mut keys = Vec::new();
+    let mut spans = Vec::new();
+    for j in 0..n {
+        if j == rank {
+            continue;
+        }
+        for (c, &(lo, hi)) in plan.chunks[rank].iter().enumerate() {
+            keys.push(p1_key(group, round, rank, j, c));
+            spans.push((lo, hi));
+        }
+    }
+    let mut rx = pool.stream(keys.clone(), ctx.timeout);
+    for (key, &(lo, hi)) in keys.iter().zip(&spans) {
+        let bytes = rx.recv().await.context("phase-2 stream closed")??;
+        merge(&mut merged[lo - mylo..hi - mylo], &bytes_to_f32s(&bytes));
+        ctx.store.delete(key);
+    }
+
+    // phase 3: publish merged chunks, gather the other merged splits
+    for (c, &(lo, hi)) in plan.chunks[rank].iter().enumerate() {
+        pool.put(PutJob {
+            key: merged_chunk_key(group, round, rank, c),
+            data: f32s_to_bytes(&merged[lo - mylo..hi - mylo]),
+            gate: None,
+        })
+        .await?;
+    }
+    pool.flush().await.context("phase-3 upload")?;
+    grads[mylo..myhi].copy_from_slice(&merged);
+
+    let mut keys = Vec::new();
+    let mut spans = Vec::new();
+    for j in 0..n {
+        if j == rank {
+            continue;
+        }
+        for (c, &(lo, hi)) in plan.chunks[j].iter().enumerate() {
+            keys.push(merged_chunk_key(group, round, j, c));
+            spans.push((lo, hi));
+        }
+    }
+    let mut rx = pool.stream(keys, ctx.timeout);
+    for &(lo, hi) in &spans {
+        let bytes = rx.recv().await.context("phase-3 stream closed")??;
+        grads[lo..hi].copy_from_slice(&bytes_to_f32s(&bytes));
+    }
+    ctx.mark_done(round).await
 }
 
 /// Non-pipelined (LambdaML) scatter-reduce. Blocking; returns when this
@@ -177,7 +190,28 @@ pub fn scatter_reduce_chunked(
 ) -> Result<()> {
     let ctx = CollectiveCtx::new(store.clone(), group, rank, n, timeout)
         .with_chunking(chunking);
-    PlainScatterReduce.all_reduce(&ctx, round, grads, merge)
+    block_on(run(&ctx, round, grads, merge))
+}
+
+/// Async form of [`cleanup`] — what the pooled worker state machines
+/// call between rounds.
+pub async fn cleanup_async(
+    store: &Arc<dyn ObjectStore>,
+    group: &str,
+    round: u64,
+    n: usize,
+    timeout: Duration,
+) -> Result<()> {
+    for rank in 0..n {
+        store
+            .get_async(&done_key(group, round, rank), timeout)
+            .await
+            .with_context(|| format!("cleanup barrier: rank {rank} not done"))?;
+    }
+    for k in store.list(&format!("{group}/r{round}/")) {
+        store.delete(&k);
+    }
+    Ok(())
 }
 
 /// Remove this round's objects. Waits for every rank's `done` marker
@@ -192,15 +226,7 @@ pub fn cleanup(
     n: usize,
     timeout: Duration,
 ) -> Result<()> {
-    for rank in 0..n {
-        store
-            .get_blocking(&done_key(group, round, rank), timeout)
-            .with_context(|| format!("cleanup barrier: rank {rank} not done"))?;
-    }
-    for k in store.list(&format!("{group}/r{round}/")) {
-        store.delete(&k);
-    }
-    Ok(())
+    block_on(cleanup_async(store, group, round, n, timeout))
 }
 
 #[cfg(test)]

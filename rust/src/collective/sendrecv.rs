@@ -1,6 +1,11 @@
 //! Inter-stage activation/gradient transfer via storage — the *upload* /
 //! *download* pipeline tasks of §3.2. Partition boundaries exchange
 //! per-micro-batch tensors through uniquely-keyed objects.
+//!
+//! Every operation comes in two forms: a blocking one (called from plain
+//! OS threads — tests, external drivers) and an `_async` twin used by the
+//! pooled worker state machines, which must never park an executor thread
+//! on a store wait.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -125,6 +130,104 @@ pub fn recv_bytes_consume(
     Ok(bytes.as_ref().clone())
 }
 
+// ---------------------------------------------------------------- async
+// Twins of the blocking operations for the pooled worker state machines.
+// Control flow mirrors the blocking forms exactly (same keys, same
+// consume order) so replay transcripts cannot tell them apart.
+
+/// Async upload of a boundary tensor.
+pub async fn send_async(
+    store: &Arc<dyn ObjectStore>,
+    key: &str,
+    data: &[f32],
+) -> Result<()> {
+    store.put_async(key, f32s_to_bytes(data)).await.context("send")
+}
+
+/// Async receive then delete.
+pub async fn recv_consume_async(
+    store: &Arc<dyn ObjectStore>,
+    key: &str,
+    timeout: Duration,
+) -> Result<Vec<f32>> {
+    let bytes = store.get_async(key, timeout).await.context("recv")?;
+    store.delete(key);
+    Ok(bytes_to_f32s(&bytes))
+}
+
+/// Async chunked upload (same wire format as [`send_chunked`]).
+pub async fn send_chunked_async(
+    store: &Arc<dyn ObjectStore>,
+    key: &str,
+    data: &[f32],
+    chunking: Chunking,
+) -> Result<()> {
+    let chunks = chunk_ranges(0, data.len(), chunking.chunk_elems());
+    store
+        .put_async(
+            &format!("{key}/meta"),
+            (chunks.len() as u64).to_le_bytes().to_vec(),
+        )
+        .await
+        .context("send_chunked meta")?;
+    for (i, &(lo, hi)) in chunks.iter().enumerate() {
+        store
+            .put_async(&format!("{key}/c{i}"), f32s_to_bytes(&data[lo..hi]))
+            .await
+            .context("send_chunked")?;
+    }
+    Ok(())
+}
+
+/// Async chunked receive; consumes the chunk objects and the meta.
+pub async fn recv_chunked_consume_async(
+    store: &Arc<dyn ObjectStore>,
+    key: &str,
+    timeout: Duration,
+) -> Result<Vec<f32>> {
+    let meta_key = format!("{key}/meta");
+    let meta = store
+        .get_async(&meta_key, timeout)
+        .await
+        .context("recv_chunked meta")?;
+    if meta.len() != 8 {
+        bail!("bad chunk meta for {key:?}: {} bytes", meta.len());
+    }
+    let n_chunks = u64::from_le_bytes(meta[..8].try_into().unwrap()) as usize;
+    let mut out = Vec::new();
+    for i in 0..n_chunks {
+        let ck = format!("{key}/c{i}");
+        let bytes = store
+            .get_async(&ck, timeout)
+            .await
+            .context("recv_chunked")?;
+        out.extend_from_slice(&bytes_to_f32s(&bytes));
+        store.delete(&ck);
+    }
+    store.delete(&meta_key);
+    Ok(out)
+}
+
+/// Async raw-bytes upload.
+pub async fn send_bytes_async(
+    store: &Arc<dyn ObjectStore>,
+    key: &str,
+    data: Vec<u8>,
+) -> Result<()> {
+    store.put_async(key, data).await.context("send_bytes")
+}
+
+/// Async raw-bytes receive then delete.
+pub async fn recv_bytes_consume_async(
+    store: &Arc<dyn ObjectStore>,
+    key: &str,
+    timeout: Duration,
+) -> Result<Vec<u8>> {
+    let bytes = store.get_async(key, timeout).await.context("recv_bytes")?;
+    store.delete(key);
+    Ok(bytes.as_ref().clone())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,6 +291,59 @@ mod tests {
             recv_chunked_consume(&store, "empty", Duration::from_secs(1))
                 .unwrap();
         assert!(got.is_empty());
+    }
+
+    #[test]
+    fn async_twins_match_blocking_wire_format() {
+        use crate::exec::block_on;
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let data: Vec<f32> = (0..57).map(|i| i as f32 - 3.0).collect();
+        block_on(async {
+            send_async(&store, "a/plain", &data).await.unwrap();
+            send_chunked_async(&store, "a/ch", &data, Chunking::new(32, 2))
+                .await
+                .unwrap();
+            send_bytes_async(&store, "a/raw", vec![1, 2, 3]).await.unwrap();
+        });
+        // the blocking readers consume what the async writers produced
+        let got = recv_consume(&store, "a/plain", Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(got, data);
+        let got =
+            recv_chunked_consume(&store, "a/ch", Duration::from_secs(1))
+                .unwrap();
+        assert_eq!(got, data);
+        // and vice versa
+        send(&store, "b/plain", &data).unwrap();
+        send_chunked(&store, "b/ch", &data, Chunking::new(32, 2)).unwrap();
+        block_on(async {
+            let got = recv_consume_async(
+                &store,
+                "b/plain",
+                Duration::from_secs(1),
+            )
+            .await
+            .unwrap();
+            assert_eq!(got, data);
+            let got = recv_chunked_consume_async(
+                &store,
+                "b/ch",
+                Duration::from_secs(1),
+            )
+            .await
+            .unwrap();
+            assert_eq!(got, data);
+            let raw = recv_bytes_consume_async(
+                &store,
+                "a/raw",
+                Duration::from_secs(1),
+            )
+            .await
+            .unwrap();
+            assert_eq!(raw, vec![1, 2, 3]);
+        });
+        assert!(store.list("a/").is_empty());
+        assert!(store.list("b/").is_empty());
     }
 
     #[test]

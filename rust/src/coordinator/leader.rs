@@ -1,6 +1,13 @@
 //! The leader: launches the worker "functions", runs the monitor daemon,
 //! aggregates the training report (§3.1's startup flow, with the
 //! Partition/Resource Optimizer applied beforehand by the caller).
+//!
+//! Workers are async state machines spawned onto the shared bounded
+//! executor, so worker count scales independently of OS thread count:
+//! a dp=256 job still runs on `available_parallelism` pool threads.
+//! The monitor daemon stays a plain blocking loop on the calling thread
+//! (worker → monitor messages ride a std unbounded channel, whose sends
+//! never block a pool task).
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -14,7 +21,8 @@ use crate::runtime::Manifest;
 use crate::scenario::Injector;
 use crate::trainer::{IterLog, TrainConfig, TrainReport};
 
-/// Run a full training job: one thread per worker (stage × replica).
+/// Run a full training job: one executor task per worker
+/// (stage × replica).
 pub fn run_training(
     cfg: &TrainConfig,
     store: Arc<MemStore>,
@@ -49,12 +57,7 @@ pub fn run_training(
                 monitor: (stage_idx == n_stages - 1).then(|| tx.clone()),
                 injector: injector.clone(),
             };
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("worker-s{stage_idx}r{replica}"))
-                    .spawn(move || run_worker(ctx))
-                    .context("spawning worker")?,
-            );
+            handles.push(crate::exec::spawn(run_worker(ctx)));
         }
     }
     drop(tx);
@@ -82,7 +85,7 @@ pub fn run_training(
     let mut workers = Vec::with_capacity(handles.len());
     for h in handles {
         workers.push(
-            h.join()
+            crate::exec::block_on(h)
                 .map_err(|_| anyhow::anyhow!("worker panicked"))??,
         );
     }

@@ -3,9 +3,17 @@
 //! The loop follows the §3.2 schedule: μ forward micro-batches (download
 //! input → compute → upload output), then μ backward micro-batches in
 //! reverse order, then intra-stage scatter-reduce (if d > 1) and the SGD
-//! update through the AOT executable. Uploads run on a background
-//! uploader thread so uplink and compute/downlink overlap — the paper's
-//! Task-Executor DAG, specialized to the fixed GPipe order.
+//! update through the AOT executable. Uploads stream through the flow
+//! pool's uploader task so uplink and compute/downlink overlap — the
+//! paper's Task-Executor DAG, specialized to the fixed GPipe order.
+//!
+//! A worker is an **async state machine**, not a thread: [`run_worker`]
+//! is an `async fn` the leader spawns onto the shared bounded executor
+//! ([`crate::exec`]), so a dp=1024 local run costs
+//! `available_parallelism` OS threads, not thousands. Every store wait
+//! suspends the task instead of parking a thread; compute (the AOT/native
+//! executables) runs inline on the pool, which is exactly the serverless
+//! model — one vCPU share per function.
 //!
 //! The Function Manager half lives here too: after each iteration the
 //! worker checks its remaining lifetime and, if below the margin,
@@ -28,9 +36,10 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::collective::sendrecv::{
-    boundary_key, recv_chunked_consume, recv_consume, send, send_chunked,
+    boundary_key, recv_chunked_consume_async, recv_consume_async, send_async,
+    send_chunked_async,
 };
-use crate::collective::CollectiveCtx;
+use crate::collective::{Chunking, CollectiveCtx};
 use crate::platform::function::FunctionInstance;
 use crate::platform::{ObjectStore, ThrottledStore};
 use crate::runtime::{Manifest, Runtime};
@@ -80,9 +89,38 @@ pub struct WorkerCtx {
     pub injector: Arc<Injector>,
 }
 
-/// Entry point of a worker thread. Returns the worker's lifecycle
-/// stats (restart count, generations, cold-start charges, lens).
-pub fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
+/// Boundary tensors ride the same chunking policy as the gradient
+/// collectives: with chunking on, activations/gradients relay as
+/// bounded chunk flows instead of one blob per micro-batch.
+async fn send_boundary(
+    store: &Arc<dyn ObjectStore>,
+    chunking: Chunking,
+    key: &str,
+    data: &[f32],
+) -> Result<()> {
+    if chunking.is_chunked() {
+        send_chunked_async(store, key, data, chunking).await
+    } else {
+        send_async(store, key, data).await
+    }
+}
+
+async fn recv_boundary(
+    store: &Arc<dyn ObjectStore>,
+    chunking: Chunking,
+    key: &str,
+) -> Result<Vec<f32>> {
+    if chunking.is_chunked() {
+        recv_chunked_consume_async(store, key, RECV_TIMEOUT).await
+    } else {
+        recv_consume_async(store, key, RECV_TIMEOUT).await
+    }
+}
+
+/// Entry point of a worker state machine (the leader spawns one task per
+/// stage × replica). Returns the worker's lifecycle stats (restart
+/// count, generations, cold-start charges, lens).
+pub async fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
     let cfg = &ctx.cfg;
     let worker_id = ctx.stage_idx * cfg.dp + ctx.replica;
     let lens = ctx.injector.worker(worker_id);
@@ -156,32 +194,14 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
     };
     // every generation — the initial launch included — charges a cold
     // start: the tier's base plus the scenario's per-generation draw
-    charge_cold_start(cfg, &ctx.injector, &mut func, &mut stats);
+    charge_cold_start(cfg, &ctx.injector, &mut func, &mut stats).await;
     func.mark_running();
 
     let grad_len = stage.entry.flat_param_size;
     let lr_scale = 1.0 / (cfg.mu * cfg.dp) as f32;
 
-    // Boundary tensors ride the same chunking policy as the gradient
-    // collectives: with chunking on, activations/gradients relay as
-    // bounded chunk flows instead of one blob per micro-batch.
-    let send_boundary = |key: &str, data: &[f32]| -> Result<()> {
-        if cfg.chunking.is_chunked() {
-            send_chunked(&store, key, data, cfg.chunking)
-        } else {
-            send(&store, key, data)
-        }
-    };
-    let recv_boundary = |key: &str| -> Result<Vec<f32>> {
-        if cfg.chunking.is_chunked() {
-            recv_chunked_consume(&store, key, RECV_TIMEOUT)
-        } else {
-            recv_consume(&store, key, RECV_TIMEOUT)
-        }
-    };
-
     // Persistent collective context for the intra-stage sync: its flow
-    // pool's uploader/downloader threads live for the whole training run
+    // pool's uploader/downloader tasks live for the whole training run
     // and are reused every round.
     let sync_ctx = (cfg.dp > 1).then(|| {
         CollectiveCtx::new(
@@ -218,27 +238,38 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
                 let (tokens, _) = corpus.batch(step, ctx.replica, mb);
                 let out = stage.fwd_tokens(&tokens).context("embed fwd")?;
                 send_boundary(
+                    &store,
+                    cfg.chunking,
                     &boundary_key("fwd", round, 0, ctx.replica, mb),
                     &out,
-                )?;
+                )
+                .await?;
                 saved_tok.push(tokens);
             } else {
-                let x = recv_boundary(&boundary_key(
-                    "fwd",
-                    round,
-                    ctx.stage_idx - 1,
-                    ctx.replica,
-                    mb,
-                ))?;
+                let x = recv_boundary(
+                    &store,
+                    cfg.chunking,
+                    &boundary_key(
+                        "fwd",
+                        round,
+                        ctx.stage_idx - 1,
+                        ctx.replica,
+                        mb,
+                    ),
+                )
+                .await?;
                 if is_last {
                     // loss computed in backward; save input only
                     saved_f32.push(x);
                 } else {
                     let out = stage.fwd_acts(&x).context("blocks fwd")?;
                     send_boundary(
+                        &store,
+                        cfg.chunking,
                         &boundary_key("fwd", round, ctx.stage_idx, ctx.replica, mb),
                         &out,
-                    )?;
+                    )
+                    .await?;
                     saved_f32.push(x);
                 }
             }
@@ -255,18 +286,26 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
                 losses += loss;
                 if n_stages > 1 {
                     send_boundary(
+                        &store,
+                        cfg.chunking,
                         &boundary_key("bwd", round, ctx.stage_idx, ctx.replica, mb),
                         &gx,
-                    )?;
+                    )
+                    .await?;
                 }
             } else {
-                let gy = recv_boundary(&boundary_key(
-                    "bwd",
-                    round,
-                    ctx.stage_idx + 1,
-                    ctx.replica,
-                    mb,
-                ))?;
+                let gy = recv_boundary(
+                    &store,
+                    cfg.chunking,
+                    &boundary_key(
+                        "bwd",
+                        round,
+                        ctx.stage_idx + 1,
+                        ctx.replica,
+                        mb,
+                    ),
+                )
+                .await?;
                 if is_first {
                     let g = stage
                         .bwd_tokens(&saved_tok[mb], &gy)
@@ -278,9 +317,12 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
                         .context("blocks bwd")?;
                     crate::collective::add_assign(&mut grads_acc, &g);
                     send_boundary(
+                        &store,
+                        cfg.chunking,
                         &boundary_key("bwd", round, ctx.stage_idx, ctx.replica, mb),
                         &gx,
-                    )?;
+                    )
+                    .await?;
                 }
             }
         }
@@ -299,19 +341,21 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
                 }
                 crate::collective::add_assign(acc, delta);
             };
-            sync.all_reduce(cfg.sync_alg, round, &mut grads_acc, Some(&merge))?;
+            sync.all_reduce(cfg.sync_alg, round, &mut grads_acc, Some(&merge))
+                .await?;
             // garbage-collect an older round's sync objects; cleanup's
             // done-marker barrier is already satisfied (every replica
-            // passed round-2 to reach here), so this never blocks and a
-            // straggler can never lose objects it still needs
+            // passed round-2 to reach here), so this never suspends long
+            // and a straggler can never lose objects it still needs
             if step >= 2 && ctx.replica == 0 {
-                crate::collective::scatter_reduce::cleanup(
+                crate::collective::scatter_reduce::cleanup_async(
                     &store,
                     &sync.group,
                     round - 2,
                     cfg.dp,
                     RECV_TIMEOUT,
-                )?;
+                )
+                .await?;
             }
         }
 
@@ -339,13 +383,19 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
         }
         if func.should_checkpoint(cfg.checkpoint_margin_s) {
             let key = format!("ckpt/s{}/r{}", ctx.stage_idx, ctx.replica);
-            store.put(&key, crate::collective::f32s_to_bytes(&stage.flat_params()))?;
+            store
+                .put_async(
+                    &key,
+                    crate::collective::f32s_to_bytes(&stage.flat_params()),
+                )
+                .await?;
             func.restart();
             // cold start of the replacement container: the tier's
             // cold_start_s, scenario-scaled — charged once per generation
-            charge_cold_start(cfg, &ctx.injector, &mut func, &mut stats);
+            charge_cold_start(cfg, &ctx.injector, &mut func, &mut stats).await;
             let bytes = store
-                .get_blocking(&key, RECV_TIMEOUT)
+                .get_async(&key, RECV_TIMEOUT)
+                .await
                 .context("checkpoint restore")?;
             stage.set_flat_params(&crate::collective::bytes_to_f32s(&bytes))?;
             // the checkpoint is consumed: leaving the object behind
@@ -372,9 +422,10 @@ pub fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
 
 /// Charge the current generation's cold start: the configured tier base
 /// plus the scenario's seeded draw. In virtual mode the charge advances
-/// the deterministic clock; in wall-clock mode the thread actually
-/// sleeps it, modelling the replacement container's provisioning.
-fn charge_cold_start(
+/// the deterministic clock; in wall-clock mode the task actually waits
+/// it out (an async timer, not a parked thread), modelling the
+/// replacement container's provisioning.
+async fn charge_cold_start(
     cfg: &TrainConfig,
     injector: &Injector,
     func: &mut FunctionInstance,
@@ -389,7 +440,7 @@ fn charge_cold_start(
     if cfg.virtual_iter_s.is_some() {
         func.advance_virtual(cold);
         stats.virtual_elapsed_s += cold;
-    } else {
-        std::thread::sleep(Duration::from_secs_f64(cold));
+    } else if cold > 0.0 {
+        crate::exec::sleep(Duration::from_secs_f64(cold)).await;
     }
 }

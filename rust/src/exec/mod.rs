@@ -1,0 +1,278 @@
+//! `exec` — the shared bounded executor behind the real execution path.
+//!
+//! The real path used to burn two OS threads per worker (`FlowPool`'s
+//! uploader/downloader pair) plus a coordinator thread per worker, so a
+//! dp=1024 local run wanted ~3000 threads. This module replaces that
+//! with the std-only equivalent of a minimal async runtime: a global
+//! pool of [`available_parallelism`](std::thread::available_parallelism)
+//! worker threads driving per-worker *state machines* (plain `async`
+//! futures), so thread count is O(cores) regardless of dp.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **No dependencies.** The offline registry carries no crates
+//!    (DESIGN.md §3), so this is built from `std::task::Wake`,
+//!    `Condvar` and `BinaryHeap` — the same discipline as the simcore
+//!    engine, which is the in-repo idiom for event-driven scheduling.
+//! 2. **Determinism lives above the executor.** Task interleaving is
+//!    scheduler-dependent; every deterministic quantity in the trainer
+//!    (virtual clock, lens draws, replica-slot aggregation, store
+//!    counters) is keyed by worker/replica/generation ids and commutes
+//!    across interleavings — see DESIGN.md §12.
+//! 3. **Blocking compatibility.** Every historical blocking entry point
+//!    survives as a [`block_on`] wrapper, so tests and examples that
+//!    spawn OS threads keep working unchanged.
+//!
+//! Pieces: [`spawn`]/[`JoinHandle`] (task submission), [`block_on`]
+//! (sync↔async bridge, safe on any non-pool thread), [`sleep`] (timer
+//! wheel thread), and the [`sync`] primitives (bounded MPSC channel +
+//! oneshot) the async `FlowPool` is built from.
+
+pub mod sync;
+pub mod timer;
+
+pub use timer::{sleep, sleep_until};
+
+use std::collections::VecDeque;
+use std::future::Future;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::pin::Pin;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::task::{Context, Poll, Wake, Waker};
+use std::thread;
+
+/// A spawned task panicked; carries the panic payload.
+pub struct Panicked(pub Box<dyn std::any::Any + Send + 'static>);
+
+impl std::fmt::Debug for Panicked {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Panicked")
+    }
+}
+
+type BoxFuture = Pin<Box<dyn Future<Output = ()> + Send + 'static>>;
+
+struct Pool {
+    queue: Mutex<VecDeque<Arc<Task>>>,
+    available: Condvar,
+    size: usize,
+}
+
+/// One schedulable unit. The future lives under its own mutex: a task
+/// re-queued by a wake that raced an in-progress poll simply blocks on
+/// the slot until the poll finishes, then polls again (a benign
+/// spurious poll) — no lost wakeups, no double polls.
+struct Task {
+    fut: Mutex<Option<BoxFuture>>,
+    queued: AtomicBool,
+    pool: &'static Pool,
+}
+
+impl Wake for Task {
+    fn wake(self: Arc<Self>) {
+        if !self.queued.swap(true, Ordering::AcqRel) {
+            let pool = self.pool;
+            pool.queue.lock().unwrap().push_back(self);
+            pool.available.notify_one();
+        }
+    }
+}
+
+fn worker_loop(pool: &'static Pool) {
+    loop {
+        let task = {
+            let mut q = pool.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                q = pool.available.wait(q).unwrap();
+            }
+        };
+        // clear `queued` before polling so wakes arriving mid-poll
+        // re-queue the task instead of being swallowed
+        task.queued.store(false, Ordering::Release);
+        let waker = Waker::from(task.clone());
+        let mut cx = Context::from_waker(&waker);
+        let mut slot = task.fut.lock().unwrap();
+        if let Some(fut) = slot.as_mut() {
+            if fut.as_mut().poll(&mut cx).is_ready() {
+                *slot = None;
+            }
+        }
+    }
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<&'static Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let size = thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .max(2);
+        let pool: &'static Pool = Box::leak(Box::new(Pool {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            size,
+        }));
+        for k in 0..size {
+            thread::Builder::new()
+                .name(format!("exec-{k}"))
+                .spawn(move || worker_loop(pool))
+                .expect("spawn executor worker");
+        }
+        pool
+    })
+}
+
+/// Number of pool threads (== `available_parallelism`, min 2). The
+/// dp=256 stress test asserts peak process thread count stays O(this).
+pub fn pool_size() -> usize {
+    pool().size
+}
+
+struct JoinInner<T> {
+    result: Option<Result<T, Panicked>>,
+    waker: Option<Waker>,
+}
+
+/// Handle to a spawned task; awaiting it yields the task's output (or
+/// [`Panicked`] if the task panicked — the pool thread survives).
+pub struct JoinHandle<T> {
+    state: Arc<Mutex<JoinInner<T>>>,
+}
+
+impl<T> Future for JoinHandle<T> {
+    type Output = Result<T, Panicked>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        let mut g = self.state.lock().unwrap();
+        match g.result.take() {
+            Some(r) => Poll::Ready(r),
+            None => {
+                g.waker = Some(cx.waker().clone());
+                Poll::Pending
+            }
+        }
+    }
+}
+
+/// Submit a future to the shared pool. Panics inside the task are
+/// caught at the poll boundary and surface through the handle.
+pub fn spawn<F>(fut: F) -> JoinHandle<F::Output>
+where
+    F: Future + Send + 'static,
+    F::Output: Send + 'static,
+{
+    let state = Arc::new(Mutex::new(JoinInner { result: None, waker: None }));
+    let s2 = state.clone();
+    let wrapped = async move {
+        let mut fut = Box::pin(fut);
+        let result = std::future::poll_fn(move |cx| {
+            match catch_unwind(AssertUnwindSafe(|| fut.as_mut().poll(cx))) {
+                Ok(Poll::Ready(v)) => Poll::Ready(Ok(v)),
+                Ok(Poll::Pending) => Poll::Pending,
+                Err(p) => Poll::Ready(Err(Panicked(p))),
+            }
+        })
+        .await;
+        let waker = {
+            let mut g = s2.lock().unwrap();
+            g.result = Some(result);
+            g.waker.take()
+        };
+        if let Some(w) = waker {
+            w.wake();
+        }
+    };
+    let task = Arc::new(Task {
+        fut: Mutex::new(Some(Box::pin(wrapped))),
+        queued: AtomicBool::new(false),
+        pool: pool(),
+    });
+    Waker::from(task).wake();
+    JoinHandle { state }
+}
+
+struct ThreadWaker(thread::Thread);
+
+impl Wake for ThreadWaker {
+    fn wake(self: Arc<Self>) {
+        self.0.unpark();
+    }
+}
+
+/// Drive `fut` to completion on the calling thread (parking between
+/// polls). This is the sync↔async bridge every historical blocking API
+/// is built on. Call it from OS threads you own — never from inside a
+/// pool task, where it would pin a pool slot for the full duration.
+pub fn block_on<F: Future>(fut: F) -> F::Output {
+    let waker = Waker::from(Arc::new(ThreadWaker(thread::current())));
+    let mut cx = Context::from_waker(&waker);
+    let mut fut = std::pin::pin!(fut);
+    loop {
+        match fut.as_mut().poll(&mut cx) {
+            Poll::Ready(v) => return v,
+            Poll::Pending => thread::park(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn spawn_and_join_roundtrip() {
+        let h = spawn(async { 21 * 2 });
+        assert_eq!(block_on(h).unwrap(), 42);
+    }
+
+    #[test]
+    fn tasks_interleave_beyond_pool_size() {
+        // 4 × pool_size tasks that each await a timer: with blocking
+        // threads this would need 4× the threads; here they multiplex
+        let n = pool_size() * 4;
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                spawn(async move {
+                    sleep(Duration::from_millis(20)).await;
+                    i
+                })
+            })
+            .collect();
+        let start = Instant::now();
+        let mut sum = 0usize;
+        for h in handles {
+            sum += block_on(h).unwrap();
+        }
+        assert_eq!(sum, n * (n - 1) / 2);
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "timer tasks serialized instead of multiplexing"
+        );
+    }
+
+    #[test]
+    fn panics_surface_through_the_handle() {
+        let h = spawn(async {
+            panic!("boom");
+            #[allow(unreachable_code)]
+            ()
+        });
+        assert!(block_on(h).is_err());
+        // the pool survives the panic
+        let h2 = spawn(async { 7 });
+        assert_eq!(block_on(h2).unwrap(), 7);
+    }
+
+    #[test]
+    fn sleep_waits_roughly_the_requested_time() {
+        let start = Instant::now();
+        block_on(sleep(Duration::from_millis(50)));
+        let dt = start.elapsed();
+        assert!(dt >= Duration::from_millis(45), "woke early: {dt:?}");
+    }
+}

@@ -1,0 +1,302 @@
+//! Async synchronization primitives for the executor: a bounded MPSC
+//! channel (the backpressure spine of the async `FlowPool`) and a
+//! oneshot cell (flush acknowledgements, join results).
+//!
+//! Both use the register-then-check-under-one-lock protocol: waker
+//! registration and state inspection happen under the same mutex, so a
+//! producer/consumer that races a registration always observes the
+//! waker it must wake — no lost wakeups. Capacity wakes are broadcast
+//! (every parked sender re-polls) because channels here are small
+//! (`in_flight` ≈ 4–16) and correctness beats elegance.
+
+use std::collections::VecDeque;
+use std::future::poll_fn;
+use std::sync::{Arc, Mutex};
+use std::task::{Poll, Waker};
+
+/// `try_send` failure: the channel is full or the receiver is gone.
+/// Carries the value back like `std::sync::mpsc::TrySendError`.
+#[derive(Debug)]
+pub enum TrySendError<T> {
+    Full(T),
+    Disconnected(T),
+}
+
+struct ChanInner<T> {
+    queue: VecDeque<T>,
+    cap: usize,
+    senders: usize,
+    rx_alive: bool,
+    send_wakers: Vec<Waker>,
+    recv_waker: Option<Waker>,
+}
+
+impl<T> ChanInner<T> {
+    fn wake_senders(&mut self) -> Vec<Waker> {
+        std::mem::take(&mut self.send_wakers)
+    }
+}
+
+/// Sending half (clonable).
+pub struct Sender<T> {
+    chan: Arc<Mutex<ChanInner<T>>>,
+}
+
+/// Receiving half (single consumer).
+pub struct Receiver<T> {
+    chan: Arc<Mutex<ChanInner<T>>>,
+}
+
+/// Bounded async MPSC channel of capacity `cap` (≥ 1).
+pub fn channel<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    let chan = Arc::new(Mutex::new(ChanInner {
+        queue: VecDeque::new(),
+        cap: cap.max(1),
+        senders: 1,
+        rx_alive: true,
+        send_wakers: Vec::new(),
+        recv_waker: None,
+    }));
+    (Sender { chan: chan.clone() }, Receiver { chan })
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.chan.lock().unwrap().senders += 1;
+        Sender { chan: self.chan.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let waker = {
+            let mut g = self.chan.lock().unwrap();
+            g.senders -= 1;
+            if g.senders == 0 {
+                g.recv_waker.take()
+            } else {
+                None
+            }
+        };
+        if let Some(w) = waker {
+            w.wake();
+        }
+    }
+}
+
+impl<T> Sender<T> {
+    /// Non-blocking send; returns the value on a full or closed channel.
+    pub fn try_send(&self, v: T) -> Result<(), TrySendError<T>> {
+        let waker = {
+            let mut g = self.chan.lock().unwrap();
+            if !g.rx_alive {
+                return Err(TrySendError::Disconnected(v));
+            }
+            if g.queue.len() >= g.cap {
+                return Err(TrySendError::Full(v));
+            }
+            g.queue.push_back(v);
+            g.recv_waker.take()
+        };
+        if let Some(w) = waker {
+            w.wake();
+        }
+        Ok(())
+    }
+
+    /// Send, waiting for capacity. `Err(v)` if the receiver is gone.
+    pub async fn send(&self, v: T) -> Result<(), T> {
+        let mut slot = Some(v);
+        poll_fn(move |cx| {
+            let waker = {
+                let mut g = self.chan.lock().unwrap();
+                if !g.rx_alive {
+                    return Poll::Ready(Err(slot.take().expect("polled after done")));
+                }
+                if g.queue.len() >= g.cap {
+                    g.send_wakers.push(cx.waker().clone());
+                    return Poll::Pending;
+                }
+                g.queue.push_back(slot.take().expect("polled after done"));
+                g.recv_waker.take()
+            };
+            if let Some(w) = waker {
+                w.wake();
+            }
+            Poll::Ready(Ok(()))
+        })
+        .await
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Receive the next value; `None` once every sender is dropped and
+    /// the queue is drained.
+    pub async fn recv(&mut self) -> Option<T> {
+        poll_fn(|cx| {
+            let (out, wakers) = {
+                let mut g = self.chan.lock().unwrap();
+                match g.queue.pop_front() {
+                    Some(v) => (Poll::Ready(Some(v)), g.wake_senders()),
+                    None if g.senders == 0 => (Poll::Ready(None), Vec::new()),
+                    None => {
+                        g.recv_waker = Some(cx.waker().clone());
+                        (Poll::Pending, Vec::new())
+                    }
+                }
+            };
+            for w in wakers {
+                w.wake();
+            }
+            out
+        })
+        .await
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let wakers = {
+            let mut g = self.chan.lock().unwrap();
+            g.rx_alive = false;
+            g.queue.clear();
+            g.wake_senders()
+        };
+        for w in wakers {
+            w.wake();
+        }
+    }
+}
+
+struct OnceInner<T> {
+    value: Option<T>,
+    tx_alive: bool,
+    waker: Option<Waker>,
+}
+
+/// Sending half of a oneshot cell.
+pub struct OnceSender<T> {
+    cell: Arc<Mutex<OnceInner<T>>>,
+}
+
+/// Receiving half of a oneshot cell: a future yielding `Err(())` if the
+/// sender was dropped without sending.
+pub struct OnceReceiver<T> {
+    cell: Arc<Mutex<OnceInner<T>>>,
+}
+
+/// Single-value rendezvous cell.
+pub fn oneshot<T>() -> (OnceSender<T>, OnceReceiver<T>) {
+    let cell = Arc::new(Mutex::new(OnceInner {
+        value: None,
+        tx_alive: true,
+        waker: None,
+    }));
+    (OnceSender { cell: cell.clone() }, OnceReceiver { cell })
+}
+
+impl<T> OnceSender<T> {
+    pub fn send(self, v: T) {
+        let waker = {
+            let mut g = self.cell.lock().unwrap();
+            g.value = Some(v);
+            g.waker.take()
+        };
+        if let Some(w) = waker {
+            w.wake();
+        }
+    }
+}
+
+impl<T> Drop for OnceSender<T> {
+    fn drop(&mut self) {
+        let waker = {
+            let mut g = self.cell.lock().unwrap();
+            g.tx_alive = false;
+            g.waker.take()
+        };
+        if let Some(w) = waker {
+            w.wake();
+        }
+    }
+}
+
+impl<T> std::future::Future for OnceReceiver<T> {
+    type Output = Result<T, ()>;
+
+    fn poll(
+        self: std::pin::Pin<&mut Self>,
+        cx: &mut std::task::Context<'_>,
+    ) -> Poll<Self::Output> {
+        let mut g = self.cell.lock().unwrap();
+        if let Some(v) = g.value.take() {
+            return Poll::Ready(Ok(v));
+        }
+        if !g.tx_alive {
+            return Poll::Ready(Err(()));
+        }
+        g.waker = Some(cx.waker().clone());
+        Poll::Pending
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{block_on, spawn};
+
+    #[test]
+    fn bounded_channel_backpressures_and_drains() {
+        let (tx, mut rx) = channel::<usize>(2);
+        let producer = spawn(async move {
+            for i in 0..50 {
+                tx.send(i).await.expect("receiver alive");
+            }
+        });
+        let got = block_on(async move {
+            let mut got = Vec::new();
+            while let Some(v) = rx.recv().await {
+                got.push(v);
+            }
+            got
+        });
+        block_on(producer).unwrap();
+        assert_eq!(got, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn try_send_reports_full_then_recovers() {
+        let (tx, mut rx) = channel::<u8>(1);
+        tx.try_send(1).unwrap();
+        match tx.try_send(2) {
+            Err(TrySendError::Full(2)) => {}
+            other => panic!("expected Full(2), got {other:?}"),
+        }
+        assert_eq!(block_on(rx.recv()), Some(1));
+        tx.try_send(2).unwrap();
+        drop(tx);
+        assert_eq!(block_on(rx.recv()), Some(2));
+        assert_eq!(block_on(rx.recv()), None);
+    }
+
+    #[test]
+    fn dropped_receiver_disconnects_senders() {
+        let (tx, rx) = channel::<u8>(1);
+        drop(rx);
+        match tx.try_send(9) {
+            Err(TrySendError::Disconnected(9)) => {}
+            other => panic!("expected Disconnected(9), got {other:?}"),
+        }
+        assert!(block_on(tx.send(9)).is_err());
+    }
+
+    #[test]
+    fn oneshot_delivers_and_reports_drops() {
+        let (tx, rx) = oneshot::<u32>();
+        tx.send(5);
+        assert_eq!(block_on(rx), Ok(5));
+        let (tx2, rx2) = oneshot::<u32>();
+        drop(tx2);
+        assert_eq!(block_on(rx2), Err(()));
+    }
+}

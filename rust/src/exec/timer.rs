@@ -1,0 +1,138 @@
+//! The executor's timer: one OS thread owning a min-heap of deadlines.
+//!
+//! [`sleep`]/[`sleep_until`] futures register `(deadline, waker)` pairs;
+//! the timer thread waits on a `Condvar` until the earliest deadline
+//! (or a new, earlier registration) and wakes the due tasks. Re-polling
+//! a not-yet-due `Sleep` re-registers it — duplicate entries fire as
+//! harmless spurious wakes, which the task model tolerates by design.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::task::{Context, Poll, Waker};
+use std::time::{Duration, Instant};
+
+struct Entry {
+    at: Instant,
+    seq: u64,
+    waker: Waker,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+struct TimerState {
+    heap: BinaryHeap<Reverse<Entry>>,
+    seq: u64,
+}
+
+struct Timer {
+    state: Mutex<TimerState>,
+    cond: Condvar,
+}
+
+impl Timer {
+    fn run(&self) {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            let mut due: Vec<Waker> = Vec::new();
+            while let Some(Reverse(e)) = g.heap.peek() {
+                if e.at <= now {
+                    due.push(g.heap.pop().unwrap().0.waker);
+                } else {
+                    break;
+                }
+            }
+            if !due.is_empty() {
+                drop(g);
+                for w in due {
+                    w.wake();
+                }
+                g = self.state.lock().unwrap();
+                continue;
+            }
+            let wait =
+                g.heap.peek().map(|Reverse(e)| e.at.saturating_duration_since(now));
+            g = match wait {
+                Some(d) => self.cond.wait_timeout(g, d).unwrap().0,
+                None => self.cond.wait(g).unwrap(),
+            };
+        }
+    }
+}
+
+fn timer() -> &'static Timer {
+    static T: OnceLock<&'static Timer> = OnceLock::new();
+    T.get_or_init(|| {
+        let t: &'static Timer = Box::leak(Box::new(Timer {
+            state: Mutex::new(TimerState { heap: BinaryHeap::new(), seq: 0 }),
+            cond: Condvar::new(),
+        }));
+        std::thread::Builder::new()
+            .name("exec-timer".into())
+            .spawn(move || t.run())
+            .expect("spawn executor timer");
+        t
+    })
+}
+
+/// Arm a one-shot wake at `at` for `waker`. Used by deadline-bearing
+/// futures (e.g. the async store fetches) that want a timeout wake
+/// without re-registering on every poll.
+pub fn register(at: Instant, waker: Waker) {
+    let t = timer();
+    let mut g = t.state.lock().unwrap();
+    let seq = g.seq;
+    g.seq += 1;
+    g.heap.push(Reverse(Entry { at, seq, waker }));
+    drop(g);
+    t.cond.notify_one();
+}
+
+/// Future resolving once `Instant::now() >= at`.
+pub struct Sleep {
+    at: Instant,
+}
+
+impl Future for Sleep {
+    type Output = ();
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        if Instant::now() >= self.at {
+            Poll::Ready(())
+        } else {
+            register(self.at, cx.waker().clone());
+            Poll::Pending
+        }
+    }
+}
+
+/// Asynchronously wait for `d` without occupying a pool thread.
+pub fn sleep(d: Duration) -> Sleep {
+    Sleep { at: Instant::now() + d }
+}
+
+/// Asynchronously wait until the absolute instant `at`.
+pub fn sleep_until(at: Instant) -> Sleep {
+    Sleep { at }
+}

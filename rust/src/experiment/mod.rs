@@ -501,7 +501,13 @@ impl Experiment {
         })
     }
 
-    /// Profile the AOT stages through PJRT (§3.1 step 3).
+    /// Profile the AOT stages through PJRT (§3.1 step 3). When the
+    /// session config carries a scenario, the measured times are viewed
+    /// through the same seeded [`WorkerLens`](crate::scenario::WorkerLens)
+    /// draws the simulator and trainer apply — stage *i* through worker
+    /// *i*'s compute multiplier — so a profile taken under
+    /// `--scenario straggler --seed 7` predicts exactly the stage times
+    /// that `train` will exhibit under that lens.
     pub fn profile(&self, reps: usize) -> Result<ProfileReport> {
         let prof = crate::profiler::profile_stages(
             Path::new(&self.cfg.artifacts_dir),
@@ -509,15 +515,26 @@ impl Experiment {
             reps,
         )?;
         let top = self.platform.max_tier();
+        let injector = crate::scenario::Injector::new(
+            &self.cfg.scenario,
+            self.cfg.seed,
+            prof.layers.len(),
+        );
         Ok(ProfileReport {
+            scenario: self.cfg.scenario.name(),
             rows: prof
                 .layers
                 .iter()
-                .map(|l| ProfileRow {
-                    name: l.name.clone(),
-                    param_bytes: l.param_bytes,
-                    fwd_s: l.fwd_s[top],
-                    bwd_s: l.bwd_s[top],
+                .enumerate()
+                .map(|(i, l)| {
+                    let m = injector.worker(i).compute_mult;
+                    ProfileRow {
+                        name: l.name.clone(),
+                        param_bytes: l.param_bytes,
+                        fwd_s: l.fwd_s[top] * m,
+                        bwd_s: l.bwd_s[top] * m,
+                        compute_mult: m,
+                    }
                 })
                 .collect(),
         })
@@ -534,6 +551,48 @@ mod tests {
             global_batch: 16,
             merge_layers: 4,
             ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn profile_applies_scenario_lens() {
+        let mut cfg = small_cfg();
+        cfg.artifacts_dir = crate::runtime::BUILTIN_TINY.into();
+        let base = Experiment::new(cfg.clone()).unwrap().profile(1).unwrap();
+        assert_eq!(base.scenario, "deterministic");
+        assert!(base.rows.iter().all(|r| r.compute_mult == 1.0));
+        assert!(base.rows.iter().all(|r| r.fwd_s > 0.0 && r.bwd_s > 0.0));
+
+        // pick a seed whose straggler draws actually perturb one of the
+        // builtin stages (each worker straggles with probability 0.2,
+        // so some seeds draw an all-identity lens)
+        let spec = crate::simcore::ScenarioSpec::parse("straggler").unwrap();
+        let n = base.rows.len();
+        let seed = (0u64..64)
+            .find(|&s| {
+                let inj = crate::scenario::Injector::new(&spec, s, n);
+                (0..n).any(|w| inj.worker(w).compute_mult > 1.0)
+            })
+            .expect("some seed under 64 draws a straggler");
+        cfg.scenario = spec.clone();
+        cfg.seed = seed;
+        let lensed = Experiment::new(cfg).unwrap().profile(1).unwrap();
+        assert_eq!(lensed.scenario, "straggler");
+        // the straggler lens only slows workers down, and slows at least
+        // one stage measurably
+        assert!(lensed.rows.iter().all(|r| r.compute_mult >= 1.0));
+        assert!(
+            lensed.rows.iter().any(|r| r.compute_mult > 1.0),
+            "{lensed:?}"
+        );
+        // the multipliers are the injector's own draws for this seed
+        let inj =
+            crate::scenario::Injector::new(&spec, seed, lensed.rows.len());
+        for (i, r) in lensed.rows.iter().enumerate() {
+            assert_eq!(
+                r.compute_mult.to_bits(),
+                inj.worker(i).compute_mult.to_bits()
+            );
         }
     }
 

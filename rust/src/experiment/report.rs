@@ -859,53 +859,70 @@ impl Report for BaselineReport {
 // profile
 // ---------------------------------------------------------------------------
 
-/// One profiled AOT stage (per micro-batch, at the platform's top tier).
+/// One profiled AOT stage (per micro-batch, at the platform's top tier,
+/// viewed through the session scenario's per-worker compute lens).
 #[derive(Debug, Clone)]
 pub struct ProfileRow {
     pub name: String,
     pub param_bytes: u64,
     pub fwd_s: f64,
     pub bwd_s: f64,
+    /// The scenario lens multiplier already applied to `fwd_s`/`bwd_s`
+    /// (1.0 under the deterministic scenario).
+    pub compute_mult: f64,
 }
 
 /// Result of [`Experiment::profile`](super::Experiment::profile).
 #[derive(Debug, Clone)]
 pub struct ProfileReport {
+    /// Scenario the times are viewed through ("deterministic" = raw).
+    pub scenario: String,
     pub rows: Vec<ProfileRow>,
 }
 
 impl Report for ProfileReport {
     fn to_tables(&self) -> Vec<Table> {
-        let mut t = Table::new("AOT stage profile (per micro-batch)")
-            .header(["stage", "params", "fwd@top", "bwd@top"]);
+        let mut t = Table::new(format!(
+            "AOT stage profile (per micro-batch, scenario: {})",
+            self.scenario
+        ))
+        .header(["stage", "params", "fwd@top", "bwd@top", "lens"]);
         for r in &self.rows {
             t.row([
                 r.name.clone(),
                 bytes(r.param_bytes),
                 secs(r.fwd_s),
                 secs(r.bwd_s),
+                format!("{:.3}x", r.compute_mult),
             ]);
         }
         vec![t]
     }
 
     fn to_json(&self) -> Json {
-        Json::obj(vec![(
-            "stages",
-            Json::Arr(
-                self.rows
-                    .iter()
-                    .map(|r| {
-                        Json::obj(vec![
-                            ("stage", Json::str(r.name.as_str())),
-                            ("param_bytes", Json::Num(r.param_bytes as f64)),
-                            ("fwd_s", Json::Num(r.fwd_s)),
-                            ("bwd_s", Json::Num(r.bwd_s)),
-                        ])
-                    })
-                    .collect(),
+        Json::obj(vec![
+            ("scenario", Json::str(self.scenario.as_str())),
+            (
+                "stages",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("stage", Json::str(r.name.as_str())),
+                                (
+                                    "param_bytes",
+                                    Json::Num(r.param_bytes as f64),
+                                ),
+                                ("fwd_s", Json::Num(r.fwd_s)),
+                                ("bwd_s", Json::Num(r.bwd_s)),
+                                ("compute_mult", Json::Num(r.compute_mult)),
+                            ])
+                        })
+                        .collect(),
+                ),
             ),
-        )])
+        ])
     }
 }
 

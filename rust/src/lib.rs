@@ -30,6 +30,7 @@ pub mod cli;
 pub mod collective;
 pub mod config;
 pub mod coordinator;
+pub mod exec;
 pub mod experiment;
 pub mod model;
 pub mod pipeline;

@@ -209,6 +209,10 @@ fn cmd_profile(flags: &HashMap<String, String>, format: Format) -> Result<()> {
     if let Some(dir) = flags.get("artifacts") {
         cfg.artifacts_dir = dir.clone();
     }
+    // the profile honors the same execution lens as simulate/train:
+    // measured stage times are viewed through the scenario's per-worker
+    // compute multipliers
+    funcpipe::cli::apply_scenario_flags(&mut cfg, flags)?;
     let exp = Experiment::new(cfg)?;
     let report = exp.profile(3)?;
     report.print(format);

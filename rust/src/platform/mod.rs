@@ -21,6 +21,7 @@ pub use function::{FunctionInstance, FunctionState};
 pub use network::{BandwidthModel, FlowSim};
 pub use pricing::CostModel;
 pub use storage::{
-    MemStore, ObjectStore, RetryStore, ThrottledStore, TRANSIENT_ERROR_MARKER,
+    MemStore, ObjectStore, RetryStore, StoreFuture, ThrottledStore,
+    TRANSIENT_ERROR_MARKER,
 };
 pub use tiers::{MemoryTier, PlatformSpec, StorageSpec};

@@ -10,11 +10,18 @@
 //! worker's 70 MB/s world (scaled up so demos finish quickly).
 
 use std::collections::HashMap;
+use std::future::Future;
+use std::pin::Pin;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::task::{Poll, Waker};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
+
+/// Boxed future the async store methods return (`Arc<dyn ObjectStore>`
+/// stays object-safe).
+pub type StoreFuture<'a, T> = Pin<Box<dyn Future<Output = T> + Send + 'a>>;
 
 /// S3/OSS-like blob interface. Keys are flat strings; metadata (sender,
 /// step, micro-batch id) is encoded in the key like the paper does (§4).
@@ -44,6 +51,34 @@ pub trait ObjectStore: Send + Sync {
     fn high_water_bytes(&self) -> u64 {
         0
     }
+
+    /// Async twin of [`get_blocking`](Self::get_blocking): resolves when
+    /// the key appears (or the deadline passes) *without* pinning an OS
+    /// thread — the primitive the pooled executor's worker state
+    /// machines are built on. Counter semantics are identical to the
+    /// blocking path (one `gets` bump, on success only), so replay
+    /// byte-compares see the same `store_put_gets` either way.
+    ///
+    /// The default simply runs the blocking fetch eagerly and wraps the
+    /// result — correct for any store, but it blocks the polling thread;
+    /// the in-repo stores all override it with real wakeups.
+    fn get_async<'a>(
+        &'a self,
+        key: &'a str,
+        timeout: Duration,
+    ) -> StoreFuture<'a, Result<Arc<Vec<u8>>>> {
+        let r = self.get_blocking(key, timeout);
+        Box::pin(async move { r })
+    }
+
+    /// Async twin of [`put`](Self::put). The default runs the blocking
+    /// put eagerly (fine for instant stores like [`MemStore`]); throttled
+    /// stores override it to sleep on the executor's timer instead of
+    /// the OS clock.
+    fn put_async<'a>(&'a self, key: &'a str, data: Vec<u8>) -> StoreFuture<'a, Result<()>> {
+        let r = self.put(key, data);
+        Box::pin(async move { r })
+    }
 }
 
 #[derive(Default)]
@@ -53,6 +88,9 @@ struct StoreInner {
     gets: u64,
     cur_bytes: u64,
     high_water_bytes: u64,
+    /// Async fetch wakers, woken (all of them) on every put — the task
+    /// equivalent of the `Condvar::notify_all` the blocking path uses.
+    waiters: Vec<Waker>,
 }
 
 /// In-memory object store shared by all workers in a process.
@@ -88,8 +126,12 @@ impl ObjectStore for MemStore {
         }
         g.cur_bytes += added;
         g.high_water_bytes = g.high_water_bytes.max(g.cur_bytes);
+        let waiters = std::mem::take(&mut g.waiters);
         drop(g);
         self.cond.notify_all();
+        for w in waiters {
+            w.wake();
+        }
         Ok(())
     }
 
@@ -152,6 +194,36 @@ impl ObjectStore for MemStore {
 
     fn high_water_bytes(&self) -> u64 {
         self.inner.lock().unwrap().high_water_bytes
+    }
+
+    fn get_async<'a>(
+        &'a self,
+        key: &'a str,
+        timeout: Duration,
+    ) -> StoreFuture<'a, Result<Arc<Vec<u8>>>> {
+        let deadline = Instant::now() + timeout;
+        let mut deadline_armed = false;
+        Box::pin(std::future::poll_fn(move |cx| {
+            let mut g = self.inner.lock().unwrap();
+            if let Some(v) = g.map.get(key).cloned() {
+                g.gets += 1; // success-only bump, like the blocking path
+                return Poll::Ready(Ok(v));
+            }
+            if Instant::now() >= deadline {
+                return Poll::Ready(Err(anyhow::anyhow!(
+                    "get_blocking timed out waiting for {key:?}"
+                )));
+            }
+            g.waiters.push(cx.waker().clone());
+            drop(g);
+            if !deadline_armed {
+                // one timer entry per fetch so the deadline fires even
+                // if no put ever wakes us
+                crate::exec::timer::register(deadline, cx.waker().clone());
+                deadline_armed = true;
+            }
+            Poll::Pending
+        }))
     }
 }
 
@@ -252,6 +324,37 @@ impl ObjectStore for ThrottledStore {
     fn high_water_bytes(&self) -> u64 {
         self.inner.high_water_bytes()
     }
+
+    fn put_async<'a>(&'a self, key: &'a str, data: Vec<u8>) -> StoreFuture<'a, Result<()>> {
+        Box::pin(async move {
+            crate::exec::sleep(self.transfer_time(data.len(), self.uplink_bps)).await;
+            self.inner.put_async(key, data).await
+        })
+    }
+
+    fn get_async<'a>(
+        &'a self,
+        key: &'a str,
+        timeout: Duration,
+    ) -> StoreFuture<'a, Result<Arc<Vec<u8>>>> {
+        Box::pin(async move {
+            // same single-deadline budget as the blocking path: the wait
+            // and the simulated transfer share one timeout
+            let start = Instant::now();
+            let v = self.inner.get_async(key, timeout).await?;
+            let transfer = self.transfer_time(v.len(), self.downlink_bps);
+            let remaining = timeout.saturating_sub(start.elapsed());
+            if transfer > remaining {
+                crate::exec::sleep(remaining).await;
+                bail!(
+                    "get_blocking timed out mid-transfer of {key:?} \
+                     ({transfer:?} needed, {remaining:?} left in the deadline)"
+                );
+            }
+            crate::exec::sleep(transfer).await;
+            Ok(v)
+        })
+    }
 }
 
 /// Marker every transient (retry-safe) storage error message carries —
@@ -332,6 +435,34 @@ impl ObjectStore for RetryStore {
 
     fn high_water_bytes(&self) -> u64 {
         self.inner.high_water_bytes()
+    }
+
+    fn put_async<'a>(&'a self, key: &'a str, data: Vec<u8>) -> StoreFuture<'a, Result<()>> {
+        self.inner.put_async(key, data)
+    }
+
+    fn get_async<'a>(
+        &'a self,
+        key: &'a str,
+        timeout: Duration,
+    ) -> StoreFuture<'a, Result<Arc<Vec<u8>>>> {
+        Box::pin(async move {
+            let mut attempt = 0u32;
+            loop {
+                match self.inner.get_async(key, timeout).await {
+                    Ok(v) => return Ok(v),
+                    Err(e) => {
+                        let transient =
+                            e.to_string().contains(TRANSIENT_ERROR_MARKER);
+                        if !transient || attempt >= self.max_retries {
+                            return Err(e);
+                        }
+                        attempt += 1;
+                        self.retries.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        })
     }
 }
 

@@ -49,7 +49,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::platform::ObjectStore;
+use crate::platform::{ObjectStore, StoreFuture};
 use crate::simcore::{
     cold_start_delays, straggler_factors, ScenarioModel, ScenarioSpec,
     BANDWIDTH_JITTER_TAG, COLD_START_TAG, FLAKY_NETWORK_TAG,
@@ -328,6 +328,29 @@ impl ObjectStore for FlakyStore {
 
     fn high_water_bytes(&self) -> u64 {
         self.inner.high_water_bytes()
+    }
+
+    fn put_async<'a>(&'a self, key: &'a str, data: Vec<u8>) -> StoreFuture<'a, Result<()>> {
+        self.inner.put_async(key, data)
+    }
+
+    fn get_async<'a>(
+        &'a self,
+        key: &'a str,
+        timeout: Duration,
+    ) -> StoreFuture<'a, Result<Arc<Vec<u8>>>> {
+        // same seeded per-(worker, key) decision as the blocking path:
+        // drops are instant, counted, and never touch the inner store
+        if self.should_drop(key) {
+            self.timeouts.fetch_add(1, Ordering::Relaxed);
+            return Box::pin(async move {
+                bail!(
+                    "{} flaky-network drop: get_blocking gave up on {key:?}",
+                    crate::platform::TRANSIENT_ERROR_MARKER
+                )
+            });
+        }
+        self.inner.get_async(key, timeout)
     }
 }
 

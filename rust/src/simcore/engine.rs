@@ -18,6 +18,28 @@
 //!   resolved in id order, and constraints are assembled in first-seen
 //!   order — identical inputs give bit-identical outputs on every run
 //!   and platform.
+//!
+//! Two executors implement those semantics:
+//!
+//! * [`execute`] — the incremental event-driven engine. Nodes are
+//!   partitioned once into *static components* (union-find over shared
+//!   resources; the aggregate cap joins every transfer into one
+//!   component). Rates are re-solved per component, only when that
+//!   component's active membership changed, with lazy work settlement
+//!   and an epoch-invalidated completion heap — so a graph of 10³–10⁴
+//!   independent workers costs O(events · log events), not
+//!   O(nodes · events). Simultaneous events are batched into one round.
+//! * [`execute_full`] — the original whole-graph loop: full O(n) scan
+//!   and full re-solve on every active-set change. Kept as the
+//!   reference implementation; the equivalence tests and the
+//!   `perf_hotpath` 1024-worker rows compare against it.
+//!
+//! The two engines agree to tolerance (not bit-for-bit: they settle
+//! remaining work on different schedules, so float rounding differs in
+//! the last ulps), and each is individually run-to-run deterministic.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeSet, BinaryHeap};
 
 use super::graph::{FlowGraph, OpKind};
 
@@ -30,11 +52,333 @@ pub struct SimOutcome {
     pub makespan: f64,
 }
 
-/// Run `graph` to completion of every node.
+/// Simulated instants are finite and non-NaN by construction, so
+/// `total_cmp` gives the heap a real total order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Tm(f64);
+
+impl Eq for Tm {}
+
+impl PartialOrd for Tm {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Tm {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+const EV_READY: u8 = 0;
+const EV_DONE: u8 = 1;
+
+/// Heap entry: `(instant, kind, node, epoch)`. Min-ordered via
+/// `Reverse`; ties resolve by kind then node id, keeping pops
+/// deterministic.
+type Ev = Reverse<(Tm, u8, usize, u64)>;
+
+/// Union-find with path halving; components are fixed once built, so no
+/// ranks are needed.
+struct Dsu(Vec<usize>);
+
+impl Dsu {
+    fn new(n: usize) -> Self {
+        Dsu((0..n).collect())
+    }
+
+    fn find(&mut self, mut x: usize) -> usize {
+        while self.0[x] != x {
+            self.0[x] = self.0[self.0[x]];
+            x = self.0[x];
+        }
+        x
+    }
+
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            // root the larger id under the smaller: component ids then
+            // enumerate in first-node order, independent of union order
+            let (lo, hi) = if ra < rb { (ra, rb) } else { (rb, ra) };
+            self.0[hi] = lo;
+        }
+    }
+}
+
+/// One static resource-sharing component: the unit of incremental
+/// re-solving. `rates` is parallel to `active`.
+struct Comp {
+    active: Vec<usize>,
+    rates: Vec<f64>,
+    /// Instant up to which members' remaining work has been settled at
+    /// the current `rates`.
+    settled: f64,
+}
+
+impl Comp {
+    /// Burn members' remaining work forward to `t` at the current rates.
+    /// Must run before any membership or rate change.
+    fn settle(&mut self, t: f64, remaining: &mut [f64]) {
+        let dt = t - self.settled;
+        if dt > 0.0 {
+            for (k, &i) in self.active.iter().enumerate() {
+                remaining[i] = (remaining[i] - self.rates[k] * dt).max(0.0);
+            }
+        }
+        self.settled = t;
+    }
+}
+
+/// Run `graph` to completion of every node (incremental engine).
 ///
 /// Panics on a deadlocked graph (a dependency cycle, which the builders
 /// cannot produce, or a zero-capacity resource with pending work).
 pub fn execute(graph: &FlowGraph) -> SimOutcome {
+    let n = graph.nodes.len();
+    if n == 0 {
+        return SimOutcome { finish: Vec::new(), makespan: 0.0 };
+    }
+
+    // --- static components: nodes sharing any resource are co-solved;
+    // the aggregate cap couples every transfer ---------------------------
+    let mut dsu = Dsu::new(n);
+    {
+        let mut owner: std::collections::HashMap<super::Resource, usize> =
+            std::collections::HashMap::new();
+        let mut first_transfer: Option<usize> = None;
+        for (i, node) in graph.nodes.iter().enumerate() {
+            for &r in &node.resources {
+                match owner.get(&r) {
+                    Some(&o) => dsu.union(o, i),
+                    None => {
+                        owner.insert(r, i);
+                    }
+                }
+            }
+            if graph.aggregate_cap.is_some() && node.kind == OpKind::Transfer {
+                match first_transfer {
+                    Some(o) => dsu.union(o, i),
+                    None => first_transfer = Some(i),
+                }
+            }
+        }
+    }
+    let mut comp_of = vec![usize::MAX; n];
+    let mut comps: Vec<Comp> = Vec::new();
+    for i in 0..n {
+        let root = dsu.find(i);
+        if comp_of[root] == usize::MAX {
+            comp_of[root] = comps.len();
+            comps.push(Comp {
+                active: Vec::new(),
+                rates: Vec::new(),
+                settled: 0.0,
+            });
+        }
+        comp_of[i] = comp_of[root];
+    }
+
+    // --- per-node state -------------------------------------------------
+    let mut remaining: Vec<f64> = graph.nodes.iter().map(|x| x.work).collect();
+    let mut finish: Vec<Option<f64>> = vec![None; n];
+    let mut deps_left: Vec<usize> =
+        graph.nodes.iter().map(|x| x.deps.len()).collect();
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, node) in graph.nodes.iter().enumerate() {
+        for &d in &node.deps {
+            dependents[d].push(i);
+        }
+    }
+    // epoch-invalidated completion events: only the entry whose epoch
+    // matches the node's current epoch is live
+    let mut epoch: Vec<u64> = vec![0; n];
+
+    let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
+    for (i, node) in graph.nodes.iter().enumerate() {
+        if node.deps.is_empty() {
+            let rt = (node.ready + node.delay).max(graph.worker_start(node.worker));
+            heap.push(Reverse((Tm(rt), EV_READY, i, 0)));
+        }
+    }
+
+    let mut t = 0.0f64;
+    let mut done = 0usize;
+    let mut makespan = 0.0f64;
+    // components whose membership changed this round, in id order
+    let mut dirty: BTreeSet<usize> = BTreeSet::new();
+
+    while done < n {
+        // --- next valid event -------------------------------------------
+        let Some(&Reverse((Tm(te), _, _, _))) = heap.peek() else {
+            let stalled = comps.iter().any(|c| !c.active.is_empty());
+            assert!(
+                !stalled,
+                "simcore: no progress possible at t={t} ({} unfinished)",
+                n - done
+            );
+            panic!("simcore: deadlock with {} nodes unfinished", n - done);
+        };
+        t = te.max(t);
+
+        // --- drain the simultaneous batch (one event round) -------------
+        let mut completions: Vec<usize> = Vec::new();
+        let mut activations: Vec<usize> = Vec::new();
+        while let Some(&Reverse((Tm(et), kind, i, ep))) = heap.peek() {
+            if et > t + 1e-12 {
+                break;
+            }
+            heap.pop();
+            if finish[i].is_some() {
+                continue; // stale: already finished
+            }
+            match kind {
+                EV_READY => activations.push(i),
+                _ => {
+                    if ep == epoch[i] {
+                        completions.push(i);
+                    } // else stale: rates changed since it was queued
+                }
+            }
+        }
+        completions.sort_unstable();
+        activations.sort_unstable();
+
+        // --- fixpoint at instant t: completions unlock dependents whose
+        // readiness (and possibly zero-work completion) lands at t -------
+        loop {
+            let mut newly_done: Vec<usize> = Vec::new();
+
+            for &i in &completions {
+                if finish[i].is_some() {
+                    continue;
+                }
+                let c = comp_of[i];
+                comps[c].settle(t, &mut remaining);
+                // batch: complete every settled member of the component
+                // within the scale-aware snap (work is bytes for
+                // transfers, seconds for compute — an absolute epsilon
+                // would bind differently per class)
+                let members: Vec<usize> = comps[c].active.clone();
+                for m in members {
+                    if finish[m].is_none()
+                        && remaining[m] <= 1e-9 * graph.nodes[m].work.max(1.0)
+                    {
+                        remaining[m] = 0.0;
+                        finish[m] = Some(t);
+                        makespan = makespan.max(t);
+                        done += 1;
+                        newly_done.push(m);
+                        let pos = comps[c]
+                            .active
+                            .iter()
+                            .position(|&x| x == m)
+                            .expect("completing a non-member");
+                        comps[c].active.remove(pos);
+                        comps[c].rates.remove(pos);
+                    }
+                }
+                dirty.insert(c);
+            }
+            completions.clear();
+
+            // activate ready nodes (zero-work completes the instant it is
+            // ready; real work joins its component for the re-solve)
+            for &i in &activations {
+                if finish[i].is_some() {
+                    continue;
+                }
+                if remaining[i] <= 1e-12 {
+                    remaining[i] = 0.0;
+                    finish[i] = Some(t);
+                    makespan = makespan.max(t);
+                    done += 1;
+                    newly_done.push(i);
+                } else {
+                    let c = comp_of[i];
+                    comps[c].settle(t, &mut remaining);
+                    comps[c].active.push(i);
+                    comps[c].active.sort_unstable();
+                    let pos = comps[c]
+                        .active
+                        .iter()
+                        .position(|&x| x == i)
+                        .expect("just inserted");
+                    comps[c].rates.insert(pos, 0.0);
+                    dirty.insert(c);
+                }
+            }
+            activations.clear();
+
+            if newly_done.is_empty() {
+                break;
+            }
+            newly_done.sort_unstable();
+
+            // resolve dependents in id order; same-instant readiness
+            // loops back as this round's activations
+            for &d in &newly_done {
+                for &i in &dependents[d] {
+                    deps_left[i] -= 1;
+                    if deps_left[i] == 0 {
+                        let node = &graph.nodes[i];
+                        let latest = node
+                            .deps
+                            .iter()
+                            .map(|&x| finish[x].expect("dep not finished"))
+                            .fold(0.0f64, f64::max);
+                        let rt = (latest + node.delay)
+                            .max(graph.worker_start(node.worker));
+                        if rt <= t + 1e-12 {
+                            activations.push(i);
+                        } else {
+                            heap.push(Reverse((Tm(rt), EV_READY, i, 0)));
+                        }
+                    }
+                }
+            }
+            if activations.is_empty() {
+                break;
+            }
+            activations.sort_unstable();
+        }
+
+        // --- re-solve only the components whose membership changed ------
+        for &c in &dirty {
+            let comp = &mut comps[c];
+            debug_assert!(comp.settled <= t + 1e-12);
+            comp.settled = t;
+            comp.rates = allocate_rates(graph, &comp.active);
+            for (k, &i) in comp.active.iter().enumerate() {
+                if comp.rates[k] > 1e-12 {
+                    epoch[i] += 1;
+                    let tf = t + remaining[i] / comp.rates[k];
+                    heap.push(Reverse((Tm(tf), EV_DONE, i, epoch[i])));
+                } else {
+                    // stalled member: invalidate any queued completion so
+                    // a later re-solve is its only way forward
+                    epoch[i] += 1;
+                }
+            }
+        }
+        dirty.clear();
+    }
+
+    SimOutcome {
+        finish: finish.into_iter().map(|f| f.unwrap_or(0.0)).collect(),
+        makespan,
+    }
+}
+
+/// Run `graph` to completion with the original whole-graph loop: a full
+/// O(n) active-set scan and a full-graph rate re-solve on every change.
+///
+/// Semantically equivalent to [`execute`] (to float tolerance) and
+/// individually deterministic; kept as the reference oracle for the
+/// equivalence suite and as the "pre-refactor" baseline the
+/// `perf_hotpath`/`planner_search` 1024-worker rows measure against.
+pub fn execute_full(graph: &FlowGraph) -> SimOutcome {
     let n = graph.nodes.len();
     let mut remaining: Vec<f64> = graph.nodes.iter().map(|x| x.work).collect();
     let mut finish: Vec<Option<f64>> = vec![None; n];
@@ -166,8 +510,10 @@ pub fn execute(graph: &FlowGraph) -> SimOutcome {
 /// Max-min fair rates for the `active` node set by progressive filling
 /// over the resource constraints (plus the aggregate transfer cap).
 ///
-/// Public because it is THE allocator: the engine calls it every time
-/// the active set changes, and `platform::network::max_min_rates`
+/// Public because it is THE allocator: both engines call it every time
+/// an active set changes ([`execute`] hands it one component's members,
+/// [`execute_full`] the whole active set — identical semantics because
+/// resources never span components), and `platform::network::max_min_rates`
 /// (the historical entry point the property tests exercise) is an
 /// adapter over it — there is exactly one max-min implementation in
 /// the repo.
@@ -365,26 +711,109 @@ mod tests {
         assert!(close(out.finish[d], 2.0));
     }
 
+    fn chain_graph() -> FlowGraph {
+        let mut g = FlowGraph::new();
+        g.set_capacity(Resource::Up(0), 70e6);
+        g.set_capacity(Resource::Down(0), 70e6);
+        let mut prev = None;
+        for k in 0..32 {
+            let deps = prev.map(|p| vec![p]).unwrap_or_default();
+            let n = if k % 3 == 0 {
+                Node::transfer(0, k % 2 == 0, 1e6 + k as f64)
+            } else {
+                Node::compute(0, 0.01 * (k + 1) as f64)
+            };
+            prev = Some(g.add(n.after(deps)));
+        }
+        g
+    }
+
     #[test]
     fn deterministic_across_runs() {
-        let build = || {
-            let mut g = FlowGraph::new();
-            g.set_capacity(Resource::Up(0), 70e6);
-            g.set_capacity(Resource::Down(0), 70e6);
-            let mut prev = None;
-            for k in 0..32 {
-                let deps = prev.map(|p| vec![p]).unwrap_or_default();
-                let n = if k % 3 == 0 {
-                    Node::transfer(0, k % 2 == 0, 1e6 + k as f64)
-                } else {
-                    Node::compute(0, 0.01 * (k + 1) as f64)
-                };
-                prev = Some(g.add(n.after(deps)));
+        let a = execute(&chain_graph());
+        let b = execute(&chain_graph());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        for (x, y) in a.finish.iter().zip(&b.finish) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn full_engine_deterministic_across_runs() {
+        let a = execute_full(&chain_graph());
+        let b = execute_full(&chain_graph());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        for (x, y) in a.finish.iter().zip(&b.finish) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    /// A deliberately nasty graph: many workers, cross-worker deps,
+    /// zero-work barriers, lags, start offsets and an aggregate cap that
+    /// fuses every transfer into one big component.
+    fn layered_graph(workers: usize, agg: Option<f64>) -> FlowGraph {
+        let mut g = FlowGraph::new();
+        g.base_latency = 0.01;
+        g.aggregate_cap = agg;
+        for w in 0..workers {
+            g.set_capacity(Resource::Up(w), 50.0 + (w % 7) as f64 * 10.0);
+            g.set_capacity(Resource::Down(w), 80.0 + (w % 5) as f64 * 5.0);
+        }
+        let mut heads = Vec::with_capacity(workers);
+        for w in 0..workers {
+            if w % 11 == 0 {
+                g.delay_worker(w, 0.5 + (w % 3) as f64 * 0.25);
             }
-            g
-        };
-        let a = execute(&build());
-        let b = execute(&build());
+            let c1 = g.add(Node::compute(w, 0.2 + (w % 4) as f64 * 0.05));
+            let up = g.add(
+                Node::transfer(w, true, 100.0 + (w % 9) as f64 * 20.0)
+                    .after(vec![c1]),
+            );
+            let down = g.add(
+                Node::transfer(w, false, 150.0 + (w % 6) as f64 * 10.0)
+                    .after(vec![up])
+                    .lag(0.02),
+            );
+            let c2 = g.add(Node::compute(w, 0.1).after(vec![down]));
+            heads.push(c2);
+        }
+        // zero-work barrier joining neighbours, then a second wave
+        for w in 0..workers {
+            let peer = heads[(w + 1) % workers];
+            let bar = g.add(Node::fixed(w, 0.0).after(vec![heads[w], peer]));
+            let up2 = g.add(Node::transfer(w, true, 60.0).after(vec![bar]));
+            g.add(Node::compute(w, 0.05).after(vec![up2]));
+        }
+        g
+    }
+
+    #[test]
+    fn incremental_matches_full_without_aggregate_cap() {
+        let g = layered_graph(24, None);
+        let a = execute(&g);
+        let b = execute_full(&g);
+        assert_eq!(a.finish.len(), b.finish.len());
+        assert!(close(a.makespan, b.makespan));
+        for (x, y) in a.finish.iter().zip(&b.finish) {
+            assert!(close(*x, *y), "finish diverged: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn incremental_matches_full_with_aggregate_cap() {
+        let g = layered_graph(16, Some(400.0));
+        let a = execute(&g);
+        let b = execute_full(&g);
+        assert!(close(a.makespan, b.makespan));
+        for (x, y) in a.finish.iter().zip(&b.finish) {
+            assert!(close(*x, *y), "finish diverged: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn incremental_is_deterministic_on_large_graphs() {
+        let a = execute(&layered_graph(64, None));
+        let b = execute(&layered_graph(64, None));
         assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
         for (x, y) in a.finish.iter().zip(&b.finish) {
             assert_eq!(x.to_bits(), y.to_bits());

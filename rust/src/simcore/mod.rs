@@ -35,7 +35,7 @@ pub mod engine;
 pub mod graph;
 pub mod scenario;
 
-pub use engine::{allocate_rates, execute, SimOutcome};
+pub use engine::{allocate_rates, execute, execute_full, SimOutcome};
 pub use graph::{FlowGraph, Node, NodeId, OpKind, Resource};
 pub use scenario::{
     cold_start_delays, straggler_factors, ScenarioModel, ScenarioSpec,
