@@ -17,6 +17,7 @@ use crate::planner::{
 use crate::platform::network::BandwidthModel;
 use crate::platform::pricing::{C5_9XLARGE, P3_2XLARGE, R7_2XLARGE};
 use crate::platform::PlatformSpec;
+use crate::serve::{serve_plan, ServeOptions, TrafficSpec};
 use crate::util::humansize::{secs, usd};
 use crate::util::table::{pct_change, speedup, Table};
 
@@ -443,6 +444,42 @@ pub fn fig10() -> Vec<Table> {
             }
             out.push(t);
         }
+    }
+    // serving replay on the same platform: the recommended ResNet101
+    // plan driven by the authored Alibaba minute-level trace
+    // (`serve::arrivals::ALIBABA_TRACE_PER_MIN` — the ONE source
+    // `serve --traffic alibaba` replays byte-identically)
+    let m = model_for("resnet101", &p, 8);
+    let outcome = funcpipe_plan(&m, &p, 64);
+    if let Some(rec) = outcome.recommended() {
+        let perf = PerfModel::new(&m, &p);
+        let mut t = Table::new(
+            "Fig 10 (serving) — ResNet101 plan replayed under the \
+             Alibaba trace",
+        )
+        .header([
+            "traffic", "seed", "p50", "p99", "achieved req/min", "cold %",
+            "$/1k req",
+        ]);
+        for mean in [600.0f64, 2400.0] {
+            let mut opts = ServeOptions::new(
+                TrafficSpec::Alibaba { mean_per_min: mean },
+                7,
+            );
+            opts.duration_s = 30.0;
+            if let Ok(o) = serve_plan(&perf, &rec.plan, &opts) {
+                t.row([
+                    opts.traffic.name(),
+                    opts.seed.to_string(),
+                    format!("{:.1}ms", o.p50_ms),
+                    format!("{:.1}ms", o.p99_ms),
+                    format!("{:.0}", o.achieved_rpm),
+                    format!("{:.1}%", o.cold_start_rate * 100.0),
+                    usd(o.cost_per_1k_usd),
+                ]);
+            }
+        }
+        out.push(t);
     }
     out
 }

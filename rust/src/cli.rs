@@ -9,10 +9,13 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 use crate::collective::SyncAlgorithm;
-use crate::config::ExperimentConfig;
+use crate::config::{validate_seed, ExperimentConfig};
 use crate::experiment::{Format, PlanArtifact, TrainOverrides};
 use crate::model::MergeCriterion;
-use crate::planner::{PlanRequest, RobustRank, RobustSpec, STRATEGIES};
+use crate::planner::{
+    PlanRequest, RobustRank, RobustSpec, SloSpec, STRATEGIES,
+};
+use crate::serve::{ServeOptions, TrafficSpec, TRAFFIC_SYNTAX};
 use crate::simcore::ScenarioSpec;
 
 /// Flags that shape the unified [`ExperimentConfig`]; accepted by every
@@ -65,10 +68,29 @@ pub fn flags_for(cmd: &str) -> Option<Vec<&'static str>> {
             "robust-scenario",
             "robust-seeds",
             "robust-rank",
+            "slo-p99-ms",
+            "slo-traffic",
+            "slo-seeds",
         ],
         "simulate" => &["plan", "scenario", "seed"],
         "train" => &["plan", "dp", "mu", "scenario", "seed"],
         "baseline" => &[],
+        // serve is artifact-driven like `simulate --plan`: the frozen
+        // plan is the whole model/platform input, so the config-shaping
+        // flags are deliberately absent
+        "serve" => {
+            return Some(vec![
+                "plan",
+                "traffic",
+                "seed",
+                "duration",
+                "batch-window-ms",
+                "idle-timeout-s",
+                "max-instances",
+                "scenario",
+                "format",
+            ])
+        }
         // profile honors the scenario lens: measured stage times are
         // viewed through the per-worker compute multiplier, the same
         // draws the simulator and trainer apply
@@ -252,7 +274,7 @@ pub fn apply_scenario_flags(
         })?;
     }
     if let Some(s) = flags.get("seed") {
-        cfg.seed = s.parse().context("--seed")?;
+        cfg.seed = parse_seed(s)?;
         // strict-flag contract: a seed nothing will draw from is the
         // same silent-no-op class as an unknown flag
         if cfg.scenario.is_deterministic() {
@@ -265,6 +287,19 @@ pub fn apply_scenario_flags(
         }
     }
     Ok(())
+}
+
+/// Parse and bound-check a `--seed` value. ONE validator for every
+/// flag surface that accepts a seed (the scenario lens on
+/// `simulate|train|profile` — including the `--plan` paths, which skip
+/// `ExperimentConfig::validate` — and `serve`'s arrival seed), applying
+/// the same ≤ 2^53 bound [`ExperimentConfig::validate`] enforces on
+/// config files. Historically `--seed` on a `--plan` path bypassed the
+/// bound and the report JSON silently rounded the seed.
+pub fn parse_seed(s: &str) -> Result<u64> {
+    let seed: u64 = s.parse().context("--seed")?;
+    validate_seed(seed).context("--seed")?;
+    Ok(seed)
 }
 
 /// Rebuild the session config from a plan artifact for an execution
@@ -379,14 +414,91 @@ pub fn robust_from_flags(
     Ok(Some(spec))
 }
 
+/// `plan --slo-p99-ms <ms> --slo-traffic <spec> [--slo-seeds n]` → the
+/// request's [`SloSpec`]: finalists are re-scored under seeded serving
+/// replays and ranked by $/1k-requests subject to the p99 target. The
+/// strict-flag contract applies: `--slo-traffic`/`--slo-seeds` without
+/// a target (or a target without traffic to replay) would be silent
+/// no-ops and are rejected.
+pub fn slo_from_flags(
+    flags: &HashMap<String, String>,
+) -> Result<Option<SloSpec>> {
+    let Some(p99) = flags.get("slo-p99-ms") else {
+        if flags.contains_key("slo-traffic") || flags.contains_key("slo-seeds")
+        {
+            bail!(
+                "--slo-traffic/--slo-seeds have no effect without \
+                 --slo-p99-ms"
+            );
+        }
+        return Ok(None);
+    };
+    let p99_ms: f64 = p99.parse().context("--slo-p99-ms")?;
+    let Some(t) = flags.get("slo-traffic") else {
+        bail!(
+            "--slo-p99-ms requires --slo-traffic (expected {TRAFFIC_SYNTAX})"
+        );
+    };
+    let traffic =
+        TrafficSpec::parse(t).with_context(|| format!("--slo-traffic {t:?}"))?;
+    let seeds = match flags.get("slo-seeds") {
+        Some(v) => v.parse().context("--slo-seeds")?,
+        None => 4,
+    };
+    let spec = SloSpec { p99_ms, traffic, seeds };
+    spec.validate()?;
+    Ok(Some(spec))
+}
+
+/// Build the [`ServeOptions`] for `serve --plan … --traffic …` (every
+/// knob optional except the traffic source; defaults mirror
+/// [`ServeOptions::new`]).
+pub fn serve_options_from_flags(
+    flags: &HashMap<String, String>,
+) -> Result<ServeOptions> {
+    let Some(t) = flags.get("traffic") else {
+        bail!("serve requires --traffic (expected {TRAFFIC_SYNTAX})");
+    };
+    let traffic =
+        TrafficSpec::parse(t).with_context(|| format!("--traffic {t:?}"))?;
+    let seed = match flags.get("seed") {
+        Some(s) => parse_seed(s)?,
+        None => 0,
+    };
+    let mut opts = ServeOptions::new(traffic, seed);
+    if let Some(v) = flags.get("duration") {
+        opts.duration_s = v.parse().context("--duration")?;
+    }
+    if let Some(v) = flags.get("batch-window-ms") {
+        let ms: f64 = v.parse().context("--batch-window-ms")?;
+        opts.batch_window_s = ms / 1e3;
+    }
+    if let Some(v) = flags.get("idle-timeout-s") {
+        opts.idle_timeout_s = v.parse().context("--idle-timeout-s")?;
+    }
+    if let Some(v) = flags.get("max-instances") {
+        opts.max_instances = v.parse().context("--max-instances")?;
+    }
+    if let Some(s) = flags.get("scenario") {
+        opts.scenario = ScenarioSpec::parse(s).with_context(|| {
+            format!("--scenario {s:?} (expected {})", ScenarioSpec::SYNTAX)
+        })?;
+    }
+    opts.validate()?;
+    Ok(opts)
+}
+
 /// Shape the session's [`PlanRequest`] from the `plan` flags (robust
-/// spec on top of the config-derived defaults).
+/// and SLO specs on top of the config-derived defaults).
 pub fn apply_plan_flags(
     req: &mut PlanRequest,
     flags: &HashMap<String, String>,
 ) -> Result<()> {
     if let Some(spec) = robust_from_flags(flags)? {
         req.robust = Some(spec);
+    }
+    if let Some(spec) = slo_from_flags(flags)? {
+        req.slo = Some(spec);
     }
     Ok(())
 }
@@ -623,6 +735,178 @@ mod tests {
             let flags = parse_flags("plan", &argv(&bad), &allowed).unwrap();
             assert!(robust_from_flags(&flags).is_err(), "{bad:?} accepted");
         }
+    }
+
+    #[test]
+    fn slo_flags_parse_and_reject() {
+        let allowed = flags_for("plan").unwrap();
+        let flags = parse_flags(
+            "plan",
+            &argv(&[
+                "--slo-p99-ms",
+                "250",
+                "--slo-traffic",
+                "poisson:1000",
+                "--slo-seeds",
+                "2",
+            ]),
+            &allowed,
+        )
+        .unwrap();
+        let spec = slo_from_flags(&flags).unwrap().unwrap();
+        assert_eq!(spec.p99_ms, 250.0);
+        assert_eq!(spec.traffic.name(), "poisson:1000");
+        assert_eq!(spec.seeds, 2);
+        // defaults: 4 seeds
+        let flags = parse_flags(
+            "plan",
+            &argv(&["--slo-p99-ms", "250", "--slo-traffic", "alibaba"]),
+            &allowed,
+        )
+        .unwrap();
+        let spec = slo_from_flags(&flags).unwrap().unwrap();
+        assert_eq!(spec.seeds, 4);
+        assert!(slo_from_flags(&HashMap::new()).unwrap().is_none());
+        // silent no-ops, missing traffic and bad values are hard errors
+        for bad in [
+            vec!["--slo-traffic", "poisson:1000"],
+            vec!["--slo-seeds", "4"],
+            vec!["--slo-p99-ms", "250"],
+            vec!["--slo-p99-ms", "0", "--slo-traffic", "poisson:1000"],
+            vec!["--slo-p99-ms", "abc", "--slo-traffic", "poisson:1000"],
+            vec!["--slo-p99-ms", "250", "--slo-traffic", "uniform:10"],
+            vec![
+                "--slo-p99-ms",
+                "250",
+                "--slo-traffic",
+                "poisson:1000",
+                "--slo-seeds",
+                "0",
+            ],
+        ] {
+            let flags = parse_flags("plan", &argv(&bad), &allowed).unwrap();
+            assert!(slo_from_flags(&flags).is_err(), "{bad:?} accepted");
+        }
+        // the SLO knobs belong to `plan` alone
+        for cmd in ["simulate", "train", "baseline", "profile", "serve"] {
+            let allowed = flags_for(cmd).unwrap();
+            assert!(
+                parse_flags(cmd, &argv(&["--slo-p99-ms", "250"]), &allowed)
+                    .is_err(),
+                "{cmd} accepted --slo-p99-ms"
+            );
+        }
+    }
+
+    #[test]
+    fn serve_flags_parse_and_reject() {
+        let allowed = flags_for("serve").unwrap();
+        let flags = parse_flags(
+            "serve",
+            &argv(&[
+                "--plan",
+                "p.json",
+                "--traffic",
+                "diurnal:1000:0.5",
+                "--seed",
+                "7",
+                "--duration",
+                "30",
+                "--batch-window-ms",
+                "20",
+                "--idle-timeout-s",
+                "5",
+                "--max-instances",
+                "16",
+                "--scenario",
+                "cold-start+straggler",
+            ]),
+            &allowed,
+        )
+        .unwrap();
+        let opts = serve_options_from_flags(&flags).unwrap();
+        assert_eq!(opts.traffic.name(), "diurnal:1000:0.5:3600");
+        assert_eq!(opts.seed, 7);
+        assert_eq!(opts.duration_s, 30.0);
+        assert_eq!(opts.batch_window_s, 0.02);
+        assert_eq!(opts.idle_timeout_s, 5.0);
+        assert_eq!(opts.max_instances, 16);
+        assert_eq!(opts.scenario.name(), "cold-start+straggler");
+        // defaults mirror ServeOptions::new; a bare seed IS meaningful
+        // here (it drives the arrival draws, not just a scenario lens)
+        let mut min = HashMap::new();
+        min.insert("traffic".to_string(), "poisson:1000".to_string());
+        let opts = serve_options_from_flags(&min).unwrap();
+        assert_eq!(opts.seed, 0);
+        assert!(opts.scenario.is_deterministic());
+        // strict rejections: no traffic, unknown traffic, bad knobs
+        for bad in [
+            vec!["--plan", "p.json"],
+            vec!["--traffic", "uniform:10"],
+            vec!["--traffic", "poisson"],
+            vec!["--traffic", "poisson:1000", "--duration", "0"],
+            vec!["--traffic", "poisson:1000", "--max-instances", "0"],
+            vec!["--traffic", "poisson:1000", "--batch-window-ms", "-1"],
+            vec!["--traffic", "poisson:1000", "--scenario", "chaos"],
+        ] {
+            let flags = parse_flags("serve", &argv(&bad), &allowed).unwrap();
+            assert!(
+                serve_options_from_flags(&flags).is_err(),
+                "{bad:?} accepted"
+            );
+        }
+        // config-shaping flags are not accepted at all (artifact-driven)
+        for f in ["--model", "--platform", "--batch"] {
+            assert!(
+                parse_flags("serve", &argv(&[f, "x"]), &allowed).is_err(),
+                "serve accepted {f}"
+            );
+        }
+    }
+
+    #[test]
+    fn seed_bound_is_enforced_on_every_flag_surface() {
+        let over = format!("{}", (1u64 << 53) + 1);
+        // the shared parser itself
+        assert_eq!(parse_seed("7").unwrap(), 7);
+        assert!(parse_seed(&over).is_err());
+        assert!(parse_seed("-1").is_err());
+        // the scenario-lens surfaces (config path)
+        for cmd in ["simulate", "train", "profile"] {
+            let allowed = flags_for(cmd).unwrap();
+            let flags = parse_flags(
+                cmd,
+                &argv(&["--scenario", "straggler", "--seed", &over]),
+                &allowed,
+            )
+            .unwrap();
+            assert!(
+                config_from_flags(&flags).is_err(),
+                "{cmd} accepted an over-bound --seed"
+            );
+        }
+        // the --plan lens path (bypasses ExperimentConfig::validate)
+        let artifact_cfg = ExperimentConfig::default();
+        let mut flags = HashMap::new();
+        flags.insert("scenario".to_string(), "straggler".to_string());
+        flags.insert("seed".to_string(), over.clone());
+        let mut cfg = artifact_cfg;
+        assert!(
+            apply_scenario_flags(&mut cfg, &flags).is_err(),
+            "--plan lens path accepted an over-bound --seed"
+        );
+        // the serve path
+        let allowed = flags_for("serve").unwrap();
+        let flags = parse_flags(
+            "serve",
+            &argv(&["--traffic", "poisson:1000", "--seed", &over]),
+            &allowed,
+        )
+        .unwrap();
+        assert!(serve_options_from_flags(&flags).is_err());
+        // the exact boundary is accepted everywhere
+        let edge = format!("{}", 1u64 << 53);
+        assert_eq!(parse_seed(&edge).unwrap(), 1u64 << 53);
     }
 
     #[test]

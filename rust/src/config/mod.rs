@@ -21,6 +21,19 @@ use crate::platform::PlatformSpec;
 use crate::simcore::ScenarioSpec;
 use crate::util::json::Json;
 
+/// Shared validator for every seed-accepting surface — the config file,
+/// each subcommand's `--seed` flag, and the serve/SLO replay paths.
+/// ONE definition of the bound: a seed must fit a JSON number exactly
+/// (≤ 2^53) so reports and artifacts round-trip the value losslessly.
+/// Historically only the config path enforced this and a `--seed` on
+/// `simulate --plan` slipped past it.
+pub fn validate_seed(seed: u64) -> Result<()> {
+    if seed > (1u64 << 53) {
+        bail!("seed must fit a JSON number exactly (<= 2^53), got {seed}");
+    }
+    Ok(())
+}
+
 /// A fully-resolved experiment configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
@@ -314,9 +327,7 @@ impl ExperimentConfig {
                 bail!("throttle must be (bytes/s > 0, lat_s >= 0)");
             }
         }
-        if self.seed > (1u64 << 53) {
-            bail!("seed must fit a JSON number exactly (<= 2^53)");
-        }
+        validate_seed(self.seed)?;
         // the wire format carries only the scenario's name, so a config
         // holding hand-tuned parameters (or a non-canonical component
         // order) would serialize lossily and replay with different
@@ -418,6 +429,18 @@ mod tests {
     #[test]
     fn defaults_are_valid() {
         ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn seed_bound_is_shared_and_exact() {
+        validate_seed(0).unwrap();
+        validate_seed(1u64 << 53).unwrap();
+        assert!(validate_seed((1u64 << 53) + 1).is_err());
+        assert!(validate_seed(u64::MAX).is_err());
+        // the config path goes through the same validator
+        let mut cfg = ExperimentConfig::default();
+        cfg.seed = (1u64 << 53) + 1;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -25,8 +25,8 @@ pub mod report;
 pub use artifact::{PlanArtifact, PLAN_SCHEMA_VERSION};
 pub use report::{
     BaselineReport, BaselineRow, Format, PlanCompareReport, PlanPoint,
-    PlanReport, ProfileReport, ProfileRow, Report, SimReport, StrategyRow,
-    TableSet, TrainReport,
+    PlanReport, ProfileReport, ProfileRow, Report, ServeReport, SimReport,
+    StrategyRow, TableSet, TrainReport,
 };
 
 use std::path::Path;
@@ -44,6 +44,7 @@ use crate::planner::{
 };
 use crate::platform::pricing::{C5_9XLARGE, R7_2XLARGE};
 use crate::platform::PlatformSpec;
+use crate::serve::{serve_plan, ServeOptions};
 use crate::trainer;
 
 /// The default plan strategy (`Experiment::plan`, bare `funcpipe plan`).
@@ -193,6 +194,7 @@ impl Experiment {
             recommended,
             on_frontier,
             robust: cand.robust,
+            slo: cand.slo,
         }
     }
 
@@ -218,6 +220,7 @@ impl Experiment {
             global_batch: self.cfg.global_batch,
             strategy: outcome.strategy.clone(),
             robust: outcome.robust.clone(),
+            slo: outcome.slo.clone(),
             points,
         }
     }
@@ -305,6 +308,7 @@ impl Experiment {
             platform: self.cfg.platform.clone(),
             global_batch: self.cfg.global_batch,
             robust: req.robust.clone(),
+            slo: req.slo.clone(),
             rows,
             winner,
         })
@@ -498,6 +502,37 @@ impl Experiment {
             platform: self.cfg.platform.clone(),
             global_batch: self.cfg.global_batch,
             rows,
+        })
+    }
+
+    /// Replay a frozen plan as a pipelined serving deployment: stages
+    /// execute forward-only behind per-stage autoscaled function pools,
+    /// driven by the seeded arrival trace in `opts.traffic`. The replay
+    /// is a deterministic function of (artifact, options) — the same
+    /// inputs always render the byte-identical [`ServeReport`] (the
+    /// serve replay test and a CI `cmp` pin this). Note the plan's `dp`
+    /// is a *training* knob and is ignored here: replication is owned
+    /// by the autoscaler, while `μ` caps the serving micro-batch.
+    pub fn serve(
+        &self,
+        artifact: &PlanArtifact,
+        opts: &ServeOptions,
+    ) -> Result<ServeReport> {
+        self.check_artifact(artifact)?;
+        let perf = self.perf_model();
+        let outcome = serve_plan(&perf, &artifact.plan, opts)?;
+        Ok(ServeReport {
+            model: self.cfg.model.clone(),
+            platform: self.cfg.platform.clone(),
+            traffic: opts.traffic.name(),
+            seed: opts.seed,
+            scenario: opts.scenario.name(),
+            duration_s: opts.duration_s,
+            batch_window_s: opts.batch_window_s,
+            idle_timeout_s: opts.idle_timeout_s,
+            max_instances: opts.max_instances,
+            batch_cap: artifact.plan.mu().max(1),
+            outcome,
         })
     }
 
@@ -794,6 +829,60 @@ mod tests {
         let json = report.render(Format::Json);
         assert!(json.contains("\"robust\""), "{json}");
         assert!(json.contains("cold-start") || json.contains("straggler"));
+    }
+
+    #[test]
+    fn slo_request_flows_into_the_report() {
+        use crate::planner::SloSpec;
+        use crate::serve::TrafficSpec;
+        let exp = Experiment::new(small_cfg()).unwrap();
+        let mut req = exp.plan_request();
+        req.slo = Some(SloSpec {
+            p99_ms: 120_000.0,
+            traffic: TrafficSpec::parse("poisson:300").unwrap(),
+            seeds: 1,
+        });
+        let report = exp.plan_with("bnb", &req).unwrap();
+        assert!(report.slo.is_some());
+        for p in &report.points {
+            let s = p.slo.expect("every point replay-scored");
+            assert!(s.p99_ms.is_finite() && s.p99_ms > 0.0);
+            assert!(s.cost_per_1k_usd > 0.0);
+        }
+        assert_eq!(
+            report.points.iter().filter(|p| p.recommended).count(),
+            1
+        );
+        // the JSON names the spec and scores every plan
+        let json = report.render(Format::Json);
+        assert!(json.contains("\"slo\""), "{json}");
+        assert!(json.contains("poisson:300"), "{json}");
+    }
+
+    #[test]
+    fn serve_replays_a_frozen_plan_through_the_session_api() {
+        use crate::serve::TrafficSpec;
+        let exp = Experiment::new(small_cfg()).unwrap();
+        let rec = exp.plan().unwrap().recommended().unwrap().clone();
+        let mut opts = ServeOptions::new(
+            TrafficSpec::parse("poisson:600").unwrap(),
+            7,
+        );
+        opts.duration_s = 10.0;
+        let a = exp.serve(&rec.artifact, &opts).unwrap();
+        let b = exp.serve(&rec.artifact, &opts).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(
+            a.render(Format::Json),
+            b.render(Format::Json),
+            "serve output drifted between runs"
+        );
+        assert!(a.outcome.completed > 0);
+        assert_eq!(a.batch_cap, rec.artifact.plan.mu());
+        // foreign artifacts are rejected on the serve path too
+        let mut foreign = rec.artifact.clone();
+        foreign.config.model = "bert-large".into();
+        assert!(exp.serve(&foreign, &opts).is_err());
     }
 
     #[test]

@@ -11,7 +11,10 @@ use crate::baselines::BaselineResult;
 use crate::coordinator::WorkerStats;
 use crate::model::Plan;
 use crate::pipeline::{rel_err_pct, SimResult};
-use crate::planner::{PlanPerf, RobustRank, RobustScore, RobustSpec};
+use crate::planner::{
+    PlanPerf, RobustRank, RobustScore, RobustSpec, SloScore, SloSpec,
+};
+use crate::serve::ServeOutcome;
 use crate::simcore::ScenarioSpec;
 use crate::trainer::IterLog;
 use crate::util::humansize::{bytes, secs, usd};
@@ -134,6 +137,9 @@ pub struct PlanPoint {
     pub on_frontier: bool,
     /// Seeded scenario scores; present iff the request was robust.
     pub robust: Option<RobustScore>,
+    /// Seeded serving-replay scores; present iff the request carried an
+    /// [`SloSpec`].
+    pub slo: Option<SloScore>,
 }
 
 fn robust_spec_json(spec: &RobustSpec) -> Json {
@@ -142,6 +148,27 @@ fn robust_spec_json(spec: &RobustSpec) -> Json {
         ("seeds", Json::Num(spec.seeds as f64)),
         ("rank", Json::str(spec.rank.as_str())),
     ])
+}
+
+fn slo_spec_json(spec: &SloSpec) -> Json {
+    Json::obj(vec![
+        ("p99_ms", Json::Num(spec.p99_ms)),
+        ("traffic", Json::str(spec.traffic.name().as_str())),
+        ("seeds", Json::Num(spec.seeds as f64)),
+    ])
+}
+
+/// The SLO columns appended to a point's table row (empty when the
+/// request carried no [`SloSpec`]).
+fn slo_cells(slo: Option<&SloScore>) -> Vec<String> {
+    match slo {
+        Some(s) => vec![
+            format!("{:.1}ms", s.p99_ms),
+            usd(s.cost_per_1k_usd),
+            if s.feasible { "ok".into() } else { "MISS".into() },
+        ],
+        None => vec![String::new(), String::new(), String::new()],
+    }
 }
 
 fn point_json(p: &PlanPoint) -> Json {
@@ -176,6 +203,16 @@ fn point_json(p: &PlanPoint) -> Json {
             ]),
         ));
     }
+    if let Some(s) = &p.slo {
+        fields.push((
+            "slo",
+            Json::obj(vec![
+                ("p99_ms", Json::Num(s.p99_ms)),
+                ("cost_per_1k_usd", Json::Num(s.cost_per_1k_usd)),
+                ("feasible", Json::Bool(s.feasible)),
+            ]),
+        ));
+    }
     Json::obj(fields)
 }
 
@@ -206,6 +243,8 @@ pub struct PlanReport {
     pub strategy: String,
     /// The scenario-robust selection spec, when one was requested.
     pub robust: Option<RobustSpec>,
+    /// The serving-SLO selection spec, when one was requested.
+    pub slo: Option<SloSpec>,
     /// All candidates, cheapest weights first.
     pub points: Vec<PlanPoint>,
 }
@@ -233,6 +272,11 @@ impl Report for PlanReport {
             header.push(format!("{} t [{}]", spec.rank.as_str(), spec.scenario.name()));
             header.push(format!("{} c", spec.rank.as_str()));
         }
+        if let Some(spec) = &self.slo {
+            header.push(format!("p99 [{}]", spec.traffic.name()));
+            header.push("$/1k req".to_string());
+            header.push(format!("slo {:.0}ms", spec.p99_ms));
+        }
         header.push("front".to_string());
         header.push("rec".to_string());
         let mut t = Table::new(format!(
@@ -252,6 +296,9 @@ impl Report for PlanReport {
             ];
             if let Some(spec) = &self.robust {
                 row.extend(robust_cells(p.robust.as_ref(), spec.rank));
+            }
+            if self.slo.is_some() {
+                row.extend(slo_cells(p.slo.as_ref()));
             }
             row.push(if p.on_frontier { "*".into() } else { String::new() });
             row.push(if p.recommended {
@@ -277,6 +324,9 @@ impl Report for PlanReport {
         ];
         if let Some(spec) = &self.robust {
             fields.push(("robust", robust_spec_json(spec)));
+        }
+        if let Some(spec) = &self.slo {
+            fields.push(("slo", slo_spec_json(spec)));
         }
         Json::obj(fields)
     }
@@ -309,6 +359,7 @@ pub struct PlanCompareReport {
     pub platform: String,
     pub global_batch: usize,
     pub robust: Option<RobustSpec>,
+    pub slo: Option<SloSpec>,
     pub rows: Vec<StrategyRow>,
     /// The pooled recommendation across all strategies' candidates; its
     /// artifact records the winning strategy's provenance.
@@ -329,6 +380,11 @@ impl Report for PlanCompareReport {
         if let Some(spec) = &self.robust {
             header.push(format!("{} t [{}]", spec.rank.as_str(), spec.scenario.name()));
             header.push(format!("{} c", spec.rank.as_str()));
+        }
+        if let Some(spec) = &self.slo {
+            header.push(format!("p99 [{}]", spec.traffic.name()));
+            header.push("$/1k req".to_string());
+            header.push(format!("slo {:.0}ms", spec.p99_ms));
         }
         header.push("race".to_string());
         let mut t = Table::new(format!(
@@ -356,6 +412,9 @@ impl Report for PlanCompareReport {
                     if let Some(spec) = &self.robust {
                         cells.extend(robust_cells(p.robust.as_ref(), spec.rank));
                     }
+                    if self.slo.is_some() {
+                        cells.extend(slo_cells(p.slo.as_ref()));
+                    }
                 }
                 None => {
                     cells.push("(no feasible plan)".into());
@@ -364,6 +423,9 @@ impl Report for PlanCompareReport {
                     if self.robust.is_some() {
                         cells.push(String::new());
                         cells.push(String::new());
+                    }
+                    if self.slo.is_some() {
+                        cells.extend(slo_cells(None));
                     }
                 }
             }
@@ -404,6 +466,9 @@ impl Report for PlanCompareReport {
         ];
         if let Some(spec) = &self.robust {
             fields.push(("robust", robust_spec_json(spec)));
+        }
+        if let Some(spec) = &self.slo {
+            fields.push(("slo", slo_spec_json(spec)));
         }
         if let Some(w) = &self.winner {
             fields.push(("winner", point_json(w)));
@@ -917,6 +982,168 @@ impl Report for ProfileReport {
                                 ("fwd_s", Json::Num(r.fwd_s)),
                                 ("bwd_s", Json::Num(r.bwd_s)),
                                 ("compute_mult", Json::Num(r.compute_mult)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// serve
+// ---------------------------------------------------------------------------
+
+/// Result of [`Experiment::serve`](super::Experiment::serve): one
+/// trace-driven serving replay of a frozen plan. Carries NO wall-clock
+/// values — every number derives from the virtual clock and the seeded
+/// arrival/scenario streams, so the same (plan, traffic, seed) renders
+/// byte-identically (a CI `cmp` pins this).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeReport {
+    pub model: String,
+    pub platform: String,
+    /// Canonical traffic spec (`TrafficSpec::name`).
+    pub traffic: String,
+    pub seed: u64,
+    /// Scenario lens the replay ran under ("deterministic" = none).
+    pub scenario: String,
+    /// Arrival-window length the trace was generated for.
+    pub duration_s: f64,
+    /// Micro-batch formation window (echoed knob).
+    pub batch_window_s: f64,
+    /// Autoscaler scale-down idle timeout (echoed knob).
+    pub idle_timeout_s: f64,
+    /// Autoscaler per-stage instance ceiling (echoed knob).
+    pub max_instances: usize,
+    /// Requests per batch cap — the frozen plan's μ.
+    pub batch_cap: usize,
+    /// The replay's measured outcome.
+    pub outcome: ServeOutcome,
+}
+
+impl Report for ServeReport {
+    fn to_tables(&self) -> Vec<Table> {
+        let o = &self.outcome;
+        let mut t = Table::new(format!(
+            "serving replay — {} on {} [{} seed={}]",
+            self.model, self.platform, self.traffic, self.seed
+        ))
+        .header(["metric", "value"]);
+        t.row(["requests".to_string(), format!("{} offered / {} served", o.requests, o.completed)]);
+        t.row([
+            "latency".to_string(),
+            format!(
+                "p50 {:.1}ms  p95 {:.1}ms  p99 {:.1}ms",
+                o.p50_ms, o.p95_ms, o.p99_ms
+            ),
+        ]);
+        t.row([
+            "throughput".to_string(),
+            format!(
+                "{:.0} req/min offered, {:.0} req/min achieved",
+                o.offered_rpm, o.achieved_rpm
+            ),
+        ]);
+        t.row(["makespan".to_string(), secs(o.makespan_s)]);
+        t.row([
+            "cold-start rate".to_string(),
+            format!("{:.1}%", o.cold_start_rate * 100.0),
+        ]);
+        t.row([
+            "cost".to_string(),
+            format!("{} ({} / 1k req)", usd(o.cost_usd), usd(o.cost_per_1k_usd)),
+        ]);
+        t.row([
+            "scenario".to_string(),
+            format!("{} seed={}", self.scenario, self.seed),
+        ]);
+        t.row([
+            "knobs".to_string(),
+            format!(
+                "window {:.0}ms, idle {:.0}s, ≤{} inst/stage, batch ≤{}",
+                self.batch_window_s * 1e3,
+                self.idle_timeout_s,
+                self.max_instances,
+                self.batch_cap
+            ),
+        ]);
+        let mut stages = Table::new("per-stage autoscaling").header([
+            "stage", "tier", "launches", "expiries", "peak", "batches",
+            "mean batch", "util", "busy", "alive",
+        ]);
+        for s in &o.stages {
+            stages.row([
+                s.stage.to_string(),
+                s.tier.to_string(),
+                s.launches.to_string(),
+                s.expiries.to_string(),
+                s.peak_instances.to_string(),
+                s.batches.to_string(),
+                format!("{:.2}", s.mean_batch),
+                format!("{:.1}%", s.utilization * 100.0),
+                secs(s.busy_s),
+                secs(s.alive_s),
+            ]);
+        }
+        vec![t, stages]
+    }
+
+    fn to_json(&self) -> Json {
+        let o = &self.outcome;
+        Json::obj(vec![
+            ("model", Json::str(self.model.as_str())),
+            ("platform", Json::str(self.platform.as_str())),
+            ("traffic", Json::str(self.traffic.as_str())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("scenario", Json::str(self.scenario.as_str())),
+            ("duration_s", Json::Num(self.duration_s)),
+            (
+                "knobs",
+                Json::obj(vec![
+                    ("batch_window_s", Json::Num(self.batch_window_s)),
+                    ("idle_timeout_s", Json::Num(self.idle_timeout_s)),
+                    ("max_instances", Json::Num(self.max_instances as f64)),
+                    ("batch_cap", Json::Num(self.batch_cap as f64)),
+                ]),
+            ),
+            ("requests", Json::Num(o.requests as f64)),
+            ("completed", Json::Num(o.completed as f64)),
+            (
+                "latency_ms",
+                Json::obj(vec![
+                    ("p50", Json::Num(o.p50_ms)),
+                    ("p95", Json::Num(o.p95_ms)),
+                    ("p99", Json::Num(o.p99_ms)),
+                ]),
+            ),
+            ("offered_rpm", Json::Num(o.offered_rpm)),
+            ("achieved_rpm", Json::Num(o.achieved_rpm)),
+            ("makespan_s", Json::Num(o.makespan_s)),
+            ("cold_start_rate", Json::Num(o.cold_start_rate)),
+            ("cost_usd", Json::Num(o.cost_usd)),
+            ("cost_per_1k_usd", Json::Num(o.cost_per_1k_usd)),
+            (
+                "stages",
+                Json::Arr(
+                    o.stages
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("stage", Json::Num(s.stage as f64)),
+                                ("tier", Json::Num(s.tier as f64)),
+                                ("launches", Json::Num(s.launches as f64)),
+                                ("expiries", Json::Num(s.expiries as f64)),
+                                (
+                                    "peak_instances",
+                                    Json::Num(s.peak_instances as f64),
+                                ),
+                                ("batches", Json::Num(s.batches as f64)),
+                                ("mean_batch", Json::Num(s.mean_batch)),
+                                ("utilization", Json::Num(s.utilization)),
+                                ("busy_s", Json::Num(s.busy_s)),
+                                ("alive_s", Json::Num(s.alive_s)),
                             ])
                         })
                         .collect(),

@@ -39,6 +39,7 @@ pub mod platform;
 pub mod profiler;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod simcore;
 pub mod trainer;
 pub mod util;

@@ -6,6 +6,8 @@
 //!   simulate — DES-simulate a plan (`--plan plan.json` or re-plan)
 //!   train    — real end-to-end training; `--plan plan.json` supplies
 //!              dp/μ/chunking (flags remain as explicit overrides)
+//!   serve    — replay a frozen plan as a pipelined serving deployment
+//!              under a seeded arrival trace (`--plan` + `--traffic`)
 //!   profile  — profile the AOT stages through PJRT
 //!   baseline — evaluate the §5.1 baselines
 //!   fig      — regenerate a paper figure/table (fig1 fig5 ... table3)
@@ -56,6 +58,7 @@ fn run() -> Result<()> {
         "plan" => cmd_plan(&flags, format),
         "simulate" => cmd_simulate(&flags, format),
         "train" => cmd_train(&flags, format),
+        "serve" => cmd_serve(&flags, format),
         "profile" => cmd_profile(&flags, format),
         "baseline" => cmd_baseline(&flags, format),
         _ => unreachable!("flags_for gated the command set"),
@@ -96,7 +99,10 @@ COMMANDS:
             under seeded scenario replays (e.g. straggler+jitter,
             --robust-seeds 8) and ranks by worst-case (or --robust-rank
             mean) scenario time/cost instead of the deterministic
-            point estimate
+            point estimate. --slo-p99-ms <ms> --slo-traffic <spec>
+            [--slo-seeds <n>] re-scores finalists under seeded serving
+            replays and recommends the cheapest plan per 1k requests
+            whose replayed p99 latency meets the target
   simulate  [--plan plan.json] [--scenario <name>] [--seed <n>]
             DES-simulate a plan vs the closed-form model; with --plan
             the artifact is the whole input except the scenario lens
@@ -111,6 +117,18 @@ COMMANDS:
             simulator uses into the real path (per-worker storage
             lens, scenario-scaled cold starts, deterministic virtual
             lifecycle — the report replays byte-identically per seed)
+  serve     --plan plan.json --traffic <spec> [--seed <n>]
+            [--duration <s>] [--batch-window-ms <ms>]
+            [--idle-timeout-s <s>] [--max-instances <n>]
+            [--scenario <name>]
+            replay the frozen plan as a pipelined serving deployment:
+            forward-only stages behind autoscaled per-stage function
+            pools, driven by a seeded arrival trace (--traffic
+            poisson:RATE | diurnal[:BASE[:AMP[:PERIOD_S]]] |
+            alibaba[:MEAN], rates in req/min); reports p50/p95/p99
+            latency, throughput, cold-start rate, per-stage
+            utilization and $/1k-requests, byte-identical per
+            (plan, traffic, seed)
   profile   [--artifacts dir]
             profile AOT stages through PJRT
   baseline  evaluate LambdaML / HybridPS (+GA) baselines
@@ -200,6 +218,21 @@ fn cmd_train(flags: &HashMap<String, String>, format: Format) -> Result<()> {
         (Experiment::new(cli::config_from_flags(flags)?)?, None)
     };
     let report = exp.train(artifact.as_ref(), &overrides)?;
+    report.print(format);
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>, format: Format) -> Result<()> {
+    // artifact-driven like `simulate --plan`: the frozen plan supplies
+    // the model/platform; the traffic, seed and autoscaler knobs are
+    // the serving session's own inputs
+    let Some(path) = flags.get("plan") else {
+        bail!("serve requires --plan plan.json (from `plan --out`)");
+    };
+    let opts = cli::serve_options_from_flags(flags)?;
+    let artifact = PlanArtifact::load(path)?;
+    let exp = Experiment::from_artifact(&artifact)?;
+    let report = exp.serve(&artifact, &opts)?;
     report.print(format);
     Ok(())
 }

@@ -39,7 +39,8 @@ pub use pareto::{
 pub use perf_model::{PerfModel, PlanPerf, StageCache, StageTerms};
 pub use strategy::{
     race, solve_request, strategy_by_name, PlanCandidate, PlanOutcome,
-    PlanRequest, Planner, RobustRank, RobustScore, RobustSpec, STRATEGIES,
+    PlanRequest, Planner, RobustRank, RobustScore, RobustSpec, SloScore,
+    SloSpec, STRATEGIES,
 };
 
 /// Weight pairs (α1 cost-weight, α2 time-weight) tracing the Pareto

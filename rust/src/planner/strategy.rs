@@ -47,6 +47,7 @@ use crate::planner::pareto::{pareto_flags, recommend_among};
 use crate::planner::perf_model::{PerfModel, PlanPerf};
 use crate::planner::{bayes, miqp, optimizer, tpdmp};
 use crate::platform::PlatformSpec;
+use crate::serve::{serve_plan, ServeOptions, TrafficSpec};
 use crate::simcore::ScenarioSpec;
 
 /// How a robust request ranks candidates across its seeded replays.
@@ -117,6 +118,57 @@ pub struct RobustScore {
     pub mean_c: f64,
 }
 
+/// SLO-aware serving selection spec (the serving-tier analogue of
+/// [`RobustSpec`]): re-score every candidate plan under `seeds` seeded
+/// serving replays of `traffic` (seeds `1..=seeds`, in order —
+/// byte-deterministic) and rank by $/1k-requests subject to the p99
+/// latency target.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloSpec {
+    /// p99 end-to-end request latency target, milliseconds.
+    pub p99_ms: f64,
+    /// Arrival process each replay serves.
+    pub traffic: TrafficSpec,
+    pub seeds: usize,
+}
+
+/// Arrival horizon of each SLO scoring replay, seconds. Fixed (not a
+/// knob) so two sessions score a candidate identically.
+pub const SLO_REPLAY_DURATION_S: f64 = 10.0;
+
+impl SloSpec {
+    pub fn validate(&self) -> Result<()> {
+        if !self.p99_ms.is_finite() || self.p99_ms <= 0.0 {
+            bail!(
+                "SLO p99 target must be a positive finite number of \
+                 milliseconds, got {}",
+                self.p99_ms
+            );
+        }
+        if self.seeds == 0 || self.seeds > RobustSpec::MAX_SEEDS {
+            bail!(
+                "slo seeds must be in 1..={} (got {})",
+                RobustSpec::MAX_SEEDS,
+                self.seeds
+            );
+        }
+        Ok(())
+    }
+}
+
+/// A candidate's scores across the SLO spec's seeded serving replays.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloScore {
+    /// Worst replayed p99 latency across the seeds, milliseconds.
+    pub p99_ms: f64,
+    /// Mean $/1k-requests across the seeds.
+    pub cost_per_1k_usd: f64,
+    /// Whether the worst p99 meets the target (and every replay
+    /// actually completed requests — an empty replay certifies
+    /// nothing).
+    pub feasible: bool,
+}
+
 /// What goes into a strategy: everything the §3.4 program needs beyond
 /// the model/platform pair the [`PerfModel`] already carries.
 #[derive(Debug, Clone, PartialEq)]
@@ -138,6 +190,8 @@ pub struct PlanRequest {
     pub time_budget_s: Option<f64>,
     /// Optional scenario-robust selection (see [`RobustSpec`]).
     pub robust: Option<RobustSpec>,
+    /// Optional SLO-aware serving selection (see [`SloSpec`]).
+    pub slo: Option<SloSpec>,
 }
 
 impl PlanRequest {
@@ -149,6 +203,7 @@ impl PlanRequest {
             node_budget: optimizer::DEFAULT_NODE_BUDGET,
             time_budget_s: None,
             robust: None,
+            slo: None,
         }
     }
 
@@ -181,6 +236,9 @@ impl PlanRequest {
         }
         if let Some(r) = &self.robust {
             r.validate()?;
+        }
+        if let Some(s) = &self.slo {
+            s.validate()?;
         }
         Ok(())
     }
@@ -240,6 +298,8 @@ pub struct PlanCandidate {
     pub weights: (f64, f64),
     /// Scenario scores; present iff the request asked for robustness.
     pub robust: Option<RobustScore>,
+    /// Serving-replay scores; present iff the request carried an SLO.
+    pub slo: Option<SloScore>,
 }
 
 impl PlanCandidate {
@@ -268,6 +328,7 @@ pub struct PlanOutcome {
     /// byte-replay); node/leaf counts are deterministic.
     pub stats: SolveStats,
     pub robust: Option<RobustSpec>,
+    pub slo: Option<SloSpec>,
 }
 
 impl PlanOutcome {
@@ -298,11 +359,20 @@ impl PlanOutcome {
             .collect()
     }
 
-    /// The paper's δ ≥ 0.8 recommendation rule over the frontier, under
-    /// the ranking metric: the fastest configuration whose efficiency
-    /// `δ = (t_mc/t_p − 1) / (c_p/c_mc − 1)` stays ≥ 0.8 relative to
-    /// the minimum-cost point. Returns the candidate index.
+    /// The recommendation rule. Under an SLO request, candidates are
+    /// ranked by the serving objective — cheapest $/1k-requests among
+    /// the plans whose replayed worst-case p99 meets the target; if no
+    /// candidate is feasible, the one closest to the target (lowest
+    /// p99) so the caller sees *how* infeasible the request is.
+    /// Otherwise: the paper's δ ≥ 0.8 rule over the frontier, under
+    /// the (possibly robust) ranking metric: the fastest configuration
+    /// whose efficiency `δ = (t_mc/t_p − 1) / (c_p/c_mc − 1)` stays
+    /// ≥ 0.8 relative to the minimum-cost point. Returns the candidate
+    /// index.
     pub fn recommend_idx(&self) -> Option<usize> {
+        if self.slo.is_some() {
+            return self.recommend_slo_idx();
+        }
         let metrics = self.metrics();
         let front: Vec<usize> = self
             .frontier_flags()
@@ -312,6 +382,36 @@ impl PlanOutcome {
             .map(|(i, _)| i)
             .collect();
         recommend_among(&metrics, &front)
+    }
+
+    /// The SLO serving objective over candidates carrying an
+    /// [`SloScore`]. Ties break toward lower p99 then lower index, so
+    /// the pick is deterministic.
+    fn recommend_slo_idx(&self) -> Option<usize> {
+        let scored: Vec<(usize, SloScore)> = self
+            .candidates
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| c.slo.map(|s| (i, s)))
+            .collect();
+        let best_feasible = scored
+            .iter()
+            .filter(|(_, s)| s.feasible)
+            .min_by(|(_, a), (_, b)| {
+                a.cost_per_1k_usd
+                    .partial_cmp(&b.cost_per_1k_usd)
+                    .unwrap()
+                    .then(a.p99_ms.partial_cmp(&b.p99_ms).unwrap())
+            });
+        if let Some(&(i, _)) = best_feasible {
+            return Some(i);
+        }
+        scored
+            .iter()
+            .min_by(|(_, a), (_, b)| {
+                a.p99_ms.partial_cmp(&b.p99_ms).unwrap()
+            })
+            .map(|&(i, _)| i)
     }
 
     pub fn recommended(&self) -> Option<&PlanCandidate> {
@@ -371,6 +471,9 @@ pub fn solve_request(
     if let Some(spec) = &req.robust {
         apply_robustness(&mut outcome, perf, spec);
     }
+    if let Some(spec) = &req.slo {
+        apply_slo(&mut outcome, perf, spec)?;
+    }
     Ok(outcome)
 }
 
@@ -396,7 +499,7 @@ pub fn race(
     }
     req.validate(perf.platform)?;
     // threads run the pure searches; scoring is hoisted past the barrier
-    let search_req = PlanRequest { robust: None, ..req.clone() };
+    let search_req = PlanRequest { robust: None, slo: None, ..req.clone() };
     let mut outcomes: Vec<PlanOutcome> = std::thread::scope(|scope| {
         let handles: Vec<_> = names
             .iter()
@@ -428,6 +531,24 @@ pub fn race(
                 cand.robust = Some(score);
             }
             out.robust = Some(spec.clone());
+        }
+    }
+    if let Some(spec) = &req.slo {
+        let mut memo: Vec<(Plan, SloScore)> = Vec::new();
+        for out in &mut outcomes {
+            for cand in &mut out.candidates {
+                let hit = memo.iter().find(|(p, _)| *p == cand.plan);
+                let score = match hit {
+                    Some((_, s)) => *s,
+                    None => {
+                        let s = slo_score(perf, &cand.plan, spec)?;
+                        memo.push((cand.plan.clone(), s));
+                        s
+                    }
+                };
+                cand.slo = Some(score);
+            }
+            out.slo = Some(spec.clone());
         }
     }
     Ok(outcomes)
@@ -479,6 +600,57 @@ fn apply_robustness(
     outcome.robust = Some(spec.clone());
 }
 
+/// One plan's scores across `spec.seeds` seeded serving replays (seeds
+/// 1..=n, in order — the same `serve` engine and arrival streams the
+/// `serve` subcommand replays, so an SLO pick is judged by exactly the
+/// deployment it will run as).
+fn slo_score(
+    perf: &PerfModel<'_>,
+    plan: &Plan,
+    spec: &SloSpec,
+) -> Result<SloScore> {
+    let mut worst_p99 = 0.0f64;
+    let mut sum_cost = 0.0f64;
+    let mut all_served = true;
+    for seed in 1..=spec.seeds as u64 {
+        let mut opts = ServeOptions::new(spec.traffic.clone(), seed);
+        opts.duration_s = SLO_REPLAY_DURATION_S;
+        let out = serve_plan(perf, plan, &opts)?;
+        worst_p99 = worst_p99.max(out.p99_ms);
+        sum_cost += out.cost_per_1k_usd;
+        all_served &= out.completed > 0;
+    }
+    Ok(SloScore {
+        p99_ms: worst_p99,
+        cost_per_1k_usd: sum_cost / spec.seeds as f64,
+        feasible: all_served && worst_p99 <= spec.p99_ms,
+    })
+}
+
+/// Re-score every candidate of one outcome under the SLO spec's
+/// serving replays (the single-strategy path).
+fn apply_slo(
+    outcome: &mut PlanOutcome,
+    perf: &PerfModel<'_>,
+    spec: &SloSpec,
+) -> Result<()> {
+    let mut memo: Vec<(Plan, SloScore)> = Vec::new();
+    for cand in &mut outcome.candidates {
+        let hit = memo.iter().find(|(p, _)| *p == cand.plan);
+        let score = match hit {
+            Some((_, s)) => *s,
+            None => {
+                let s = slo_score(perf, &cand.plan, spec)?;
+                memo.push((cand.plan.clone(), s));
+                s
+            }
+        };
+        cand.slo = Some(score);
+    }
+    outcome.slo = Some(spec.clone());
+    Ok(())
+}
+
 fn push_dedup(
     candidates: &mut Vec<PlanCandidate>,
     plan: Plan,
@@ -486,7 +658,13 @@ fn push_dedup(
     weights: (f64, f64),
 ) {
     if !candidates.iter().any(|c| c.plan == plan) {
-        candidates.push(PlanCandidate { plan, perf, weights, robust: None });
+        candidates.push(PlanCandidate {
+            plan,
+            perf,
+            weights,
+            robust: None,
+            slo: None,
+        });
     }
 }
 
@@ -502,6 +680,7 @@ fn outcome(
         candidates,
         stats,
         robust: None,
+        slo: None,
     }
 }
 
@@ -884,6 +1063,122 @@ mod tests {
         }
         assert!(a.recommend_idx().is_some());
         assert_eq!(a.rank(), Some(RobustRank::Worst));
+    }
+
+    #[test]
+    fn slo_validation_rejects_bad_specs() {
+        let p = PlatformSpec::aws_lambda();
+        let traffic = TrafficSpec::parse("poisson:600").unwrap();
+        let mut req = PlanRequest::new(16);
+        req.slo = Some(SloSpec {
+            p99_ms: 0.0,
+            traffic: traffic.clone(),
+            seeds: 2,
+        });
+        assert!(req.validate(&p).is_err());
+        req.slo = Some(SloSpec {
+            p99_ms: f64::NAN,
+            traffic: traffic.clone(),
+            seeds: 2,
+        });
+        assert!(req.validate(&p).is_err());
+        req.slo = Some(SloSpec { p99_ms: 100.0, traffic: traffic.clone(), seeds: 0 });
+        assert!(req.validate(&p).is_err());
+        req.slo = Some(SloSpec {
+            p99_ms: 100.0,
+            traffic: traffic.clone(),
+            seeds: RobustSpec::MAX_SEEDS + 1,
+        });
+        assert!(req.validate(&p).is_err());
+        req.slo = Some(SloSpec { p99_ms: 100.0, traffic, seeds: 2 });
+        req.validate(&p).unwrap();
+    }
+
+    #[test]
+    fn slo_scores_replay_and_pick_the_cheapest_feasible_plan() {
+        let (m, p) = fixture();
+        let perf = PerfModel::new(&m, &p);
+        let mut req = PlanRequest::new(16);
+        req.dp_options = vec![1, 2];
+        req.slo = Some(SloSpec {
+            // Generous target: with feasible candidates present, the
+            // recommendation must meet it (the acceptance criterion).
+            p99_ms: 120_000.0,
+            traffic: TrafficSpec::parse("poisson:300").unwrap(),
+            seeds: 2,
+        });
+        let a = solve_request("bnb", &perf, &req).unwrap();
+        let b = solve_request("bnb", &perf, &req).unwrap();
+        for (ca, cb) in a.candidates.iter().zip(&b.candidates) {
+            let (sa, sb) = (ca.slo.unwrap(), cb.slo.unwrap());
+            assert_eq!(sa.p99_ms.to_bits(), sb.p99_ms.to_bits());
+            assert_eq!(
+                sa.cost_per_1k_usd.to_bits(),
+                sb.cost_per_1k_usd.to_bits()
+            );
+            assert!(sa.p99_ms.is_finite() && sa.p99_ms > 0.0);
+            assert!(sa.cost_per_1k_usd > 0.0);
+        }
+        let rec = a.recommended().expect("slo recommendation");
+        let rs = rec.slo.unwrap();
+        assert!(
+            rs.feasible && rs.p99_ms <= 120_000.0,
+            "feasible candidates exist, so the pick must meet the SLO \
+             (picked p99 {} ms)",
+            rs.p99_ms
+        );
+        // ... and it is the cheapest feasible one
+        for c in &a.candidates {
+            let s = c.slo.unwrap();
+            if s.feasible {
+                assert!(rs.cost_per_1k_usd <= s.cost_per_1k_usd + 1e-12);
+            }
+        }
+
+        // An impossible target still yields a deterministic pick — the
+        // closest candidate, flagged infeasible.
+        req.slo = Some(SloSpec {
+            p99_ms: 0.001,
+            traffic: TrafficSpec::parse("poisson:300").unwrap(),
+            seeds: 2,
+        });
+        let tight = solve_request("bnb", &perf, &req).unwrap();
+        let rec = tight.recommended().expect("infeasible still recommends");
+        let rs = rec.slo.unwrap();
+        assert!(!rs.feasible);
+        for c in &tight.candidates {
+            assert!(rs.p99_ms <= c.slo.unwrap().p99_ms + 1e-12);
+        }
+    }
+
+    #[test]
+    fn race_scores_slo_once_per_distinct_plan() {
+        let (m, p) = fixture();
+        let perf = PerfModel::new(&m, &p);
+        let mut req = PlanRequest::new(16);
+        req.dp_options = vec![1, 2];
+        req.slo = Some(SloSpec {
+            p99_ms: 120_000.0,
+            traffic: TrafficSpec::parse("poisson:300").unwrap(),
+            seeds: 1,
+        });
+        let outs = race(&perf, &req, &["bnb", "miqp"]).unwrap();
+        assert_eq!(outs.len(), 2);
+        for out in &outs {
+            assert_eq!(out.slo, req.slo);
+            for c in &out.candidates {
+                assert!(c.slo.is_some());
+            }
+        }
+        // identical plans across strategies carry bit-identical scores
+        for ca in &outs[0].candidates {
+            for cb in &outs[1].candidates {
+                if ca.plan == cb.plan {
+                    let (sa, sb) = (ca.slo.unwrap(), cb.slo.unwrap());
+                    assert_eq!(sa.p99_ms.to_bits(), sb.p99_ms.to_bits());
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,368 @@
+//! Trace-driven arrival processes for the serving tier.
+//!
+//! Three load sources, all drawn from xor-tagged [`util::rng`] streams
+//! (the same discipline as `simcore::scenario`):
+//!
+//! * `poisson:RATE` — homogeneous Poisson arrivals at `RATE` req/min;
+//! * `diurnal[:BASE[:AMP[:PERIOD_S]]]` — sinusoidal-rate Poisson
+//!   (Lewis–Shedler thinning against the peak rate), the classic
+//!   day/night load curve compressed to `PERIOD_S`;
+//! * `alibaba[:MEAN]` — replay of the embedded per-minute Alibaba-style
+//!   production trace (the one the `fig10` bench consumes), scaled so
+//!   the mean rate is `MEAN` req/min, as a piecewise-constant-rate
+//!   Poisson process.
+//!
+//! Determinism contract: every draw comes from `Rng::new(seed ^
+//! ARRIVAL_TAG)` **strictly in arrival-time order** — one sequential
+//! stream per generation call, no per-thread state — so a `(traffic,
+//! seed)` pair replays byte-identically regardless of host, and a
+//! different seed changes every inter-arrival gap.
+//!
+//! [`util::rng`]: crate::util::rng
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Stream tag for arrival draws (`seed ^ ARRIVAL_TAG`), following the
+/// `simcore::scenario` xor-tag idiom so arrival draws never collide
+/// with scenario-lens draws made from the same user seed.
+pub const ARRIVAL_TAG: u64 = 0xA221_4A15;
+
+/// Relative per-minute request weights of the embedded Alibaba-style
+/// trace: a one-hour window with a morning ramp, a midday plateau, two
+/// flash-crowd spikes and a tail-off — the bursty shape serverless
+/// autoscaling exists for. Shared verbatim by `bench::fig10` and the
+/// `alibaba` traffic source so both replay one byte-identical trace.
+pub const ALIBABA_TRACE_PER_MIN: [f64; 60] = [
+    0.42, 0.44, 0.47, 0.52, 0.58, 0.66, 0.75, 0.86, 0.97, 1.08, //
+    1.18, 1.26, 1.31, 1.33, 1.32, 1.29, 1.25, 1.22, 1.20, 1.19, //
+    1.20, 1.23, 1.28, 1.36, 2.10, 2.85, 2.40, 1.70, 1.38, 1.27, //
+    1.22, 1.19, 1.17, 1.16, 1.15, 1.14, 1.13, 1.12, 1.10, 1.08, //
+    1.05, 1.02, 0.98, 0.95, 0.93, 0.92, 1.55, 2.20, 1.85, 1.30, //
+    1.05, 0.92, 0.83, 0.76, 0.70, 0.64, 0.58, 0.52, 0.47, 0.43,
+];
+
+/// Mean of [`ALIBABA_TRACE_PER_MIN`] — the factor that normalizes the
+/// trace weights to a target mean rate.
+pub fn alibaba_trace_mean() -> f64 {
+    let s: f64 = ALIBABA_TRACE_PER_MIN.iter().sum();
+    s / ALIBABA_TRACE_PER_MIN.len() as f64
+}
+
+/// A parsed `--traffic` specification.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TrafficSpec {
+    /// Homogeneous Poisson at `rate_per_min` req/min.
+    Poisson { rate_per_min: f64 },
+    /// Sinusoidal-rate Poisson: instantaneous rate
+    /// `base * (1 + amplitude * sin(2π t / period_s))` req/min.
+    Diurnal { base_per_min: f64, amplitude: f64, period_s: f64 },
+    /// Piecewise-constant-rate replay of the embedded Alibaba-style
+    /// per-minute trace, scaled to `mean_per_min` req/min on average.
+    Alibaba { mean_per_min: f64 },
+}
+
+/// CLI syntax for `--traffic` / `--slo-traffic` values.
+pub const TRAFFIC_SYNTAX: &str =
+    "poisson:RATE | diurnal[:BASE[:AMP[:PERIOD_S]]] | alibaba[:MEAN] \
+     (rates in req/min)";
+
+fn parse_rate(what: &str, s: &str) -> Result<f64> {
+    let v: f64 = s
+        .parse()
+        .map_err(|_| anyhow::anyhow!("{what}: not a number: {s:?}"))?;
+    if !v.is_finite() || v <= 0.0 {
+        bail!("{what}: must be a positive finite number, got {s}");
+    }
+    Ok(v)
+}
+
+impl TrafficSpec {
+    /// Parse a `--traffic` value. Unknown sources and malformed
+    /// rates are hard errors — a typo'd traffic spec must never
+    /// silently fall back to a default load.
+    pub fn parse(s: &str) -> Result<TrafficSpec> {
+        let mut parts = s.split(':');
+        let kind = parts.next().unwrap_or("");
+        let rest: Vec<&str> = parts.collect();
+        match kind {
+            "poisson" => {
+                let [rate] = rest.as_slice() else {
+                    bail!(
+                        "traffic `poisson` needs exactly one rate: \
+                         poisson:RATE (req/min), got {s:?}"
+                    );
+                };
+                Ok(TrafficSpec::Poisson {
+                    rate_per_min: parse_rate("poisson rate", rate)?,
+                })
+            }
+            "diurnal" => {
+                if rest.len() > 3 {
+                    bail!(
+                        "traffic `diurnal` takes at most \
+                         diurnal:BASE:AMP:PERIOD_S, got {s:?}"
+                    );
+                }
+                let base = match rest.first() {
+                    Some(v) => parse_rate("diurnal base rate", v)?,
+                    None => 1000.0,
+                };
+                let amplitude = match rest.get(1) {
+                    Some(v) => {
+                        let a: f64 = v.parse().map_err(|_| {
+                            anyhow::anyhow!(
+                                "diurnal amplitude: not a number: {v:?}"
+                            )
+                        })?;
+                        if !(0.0..=1.0).contains(&a) {
+                            bail!(
+                                "diurnal amplitude must be in [0, 1], \
+                                 got {v}"
+                            );
+                        }
+                        a
+                    }
+                    None => 0.5,
+                };
+                let period_s = match rest.get(2) {
+                    Some(v) => parse_rate("diurnal period", v)?,
+                    None => 3600.0,
+                };
+                Ok(TrafficSpec::Diurnal {
+                    base_per_min: base,
+                    amplitude,
+                    period_s,
+                })
+            }
+            "alibaba" => {
+                if rest.len() > 1 {
+                    bail!(
+                        "traffic `alibaba` takes at most alibaba:MEAN, \
+                         got {s:?}"
+                    );
+                }
+                let mean = match rest.first() {
+                    Some(v) => parse_rate("alibaba mean rate", v)?,
+                    None => 1000.0,
+                };
+                Ok(TrafficSpec::Alibaba { mean_per_min: mean })
+            }
+            _ => bail!(
+                "unknown traffic source {s:?} (expected {TRAFFIC_SYNTAX})"
+            ),
+        }
+    }
+
+    /// Canonical rendering (re-parses to an equal spec) — what reports
+    /// echo so a replay can be reconstructed from the JSON alone.
+    pub fn name(&self) -> String {
+        match self {
+            TrafficSpec::Poisson { rate_per_min } => {
+                format!("poisson:{}", fmt_rate(*rate_per_min))
+            }
+            TrafficSpec::Diurnal { base_per_min, amplitude, period_s } => {
+                format!(
+                    "diurnal:{}:{}:{}",
+                    fmt_rate(*base_per_min),
+                    fmt_rate(*amplitude),
+                    fmt_rate(*period_s)
+                )
+            }
+            TrafficSpec::Alibaba { mean_per_min } => {
+                format!("alibaba:{}", fmt_rate(*mean_per_min))
+            }
+        }
+    }
+
+    /// Mean offered rate in req/min (exact for poisson/alibaba; the
+    /// sinusoid's mean is its base rate).
+    pub fn mean_rate_per_min(&self) -> f64 {
+        match self {
+            TrafficSpec::Poisson { rate_per_min } => *rate_per_min,
+            TrafficSpec::Diurnal { base_per_min, .. } => *base_per_min,
+            TrafficSpec::Alibaba { mean_per_min } => *mean_per_min,
+        }
+    }
+
+    /// Generate the arrival times (seconds, ascending, in
+    /// `[0, duration_s)`) for this spec under `seed`. All randomness
+    /// comes from one sequential `seed ^ ARRIVAL_TAG` stream in
+    /// arrival order, so the result is a pure function of
+    /// `(self, seed, duration_s)`.
+    pub fn generate(&self, seed: u64, duration_s: f64) -> Vec<f64> {
+        let mut rng = Rng::new(seed ^ ARRIVAL_TAG);
+        let mut out = Vec::new();
+        match self {
+            TrafficSpec::Poisson { rate_per_min } => {
+                let lambda = rate_per_min / 60.0;
+                let mut t = 0.0;
+                loop {
+                    t += rng.exponential(lambda);
+                    if t >= duration_s {
+                        break;
+                    }
+                    out.push(t);
+                }
+            }
+            TrafficSpec::Diurnal { base_per_min, amplitude, period_s } => {
+                // Lewis–Shedler thinning against the peak rate: every
+                // candidate draw consumes stream state whether accepted
+                // or not, keeping the stream position a function of the
+                // candidate count alone.
+                let base = base_per_min / 60.0;
+                let peak = base * (1.0 + amplitude);
+                let mut t = 0.0;
+                loop {
+                    t += rng.exponential(peak);
+                    if t >= duration_s {
+                        break;
+                    }
+                    let phase =
+                        2.0 * std::f64::consts::PI * t / period_s;
+                    let rate = base * (1.0 + amplitude * phase.sin());
+                    if rng.chance(rate / peak) {
+                        out.push(t);
+                    }
+                }
+            }
+            TrafficSpec::Alibaba { mean_per_min } => {
+                // Piecewise-constant-rate Poisson over the per-minute
+                // trace, one exponential stream walked window by
+                // window in time order.
+                let norm = alibaba_trace_mean();
+                let n = ALIBABA_TRACE_PER_MIN.len();
+                let mut t = 0.0;
+                while t < duration_s {
+                    let minute = (t / 60.0) as usize;
+                    let window_end =
+                        ((minute + 1) as f64 * 60.0).min(duration_s);
+                    let w = ALIBABA_TRACE_PER_MIN[minute % n];
+                    let lambda = mean_per_min * w / norm / 60.0;
+                    t += rng.exponential(lambda);
+                    if t < window_end {
+                        out.push(t);
+                    } else {
+                        // The gap overshot the window: restart the
+                        // walk at the boundary under the next
+                        // minute's rate (memorylessness makes the
+                        // truncation exact).
+                        t = window_end;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Deterministic minimal float rendering for canonical spec names:
+/// integers print without a fractional part.
+fn fmt_rate(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 9e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_three_sources_and_rejects_junk() {
+        assert_eq!(
+            TrafficSpec::parse("poisson:600").unwrap(),
+            TrafficSpec::Poisson { rate_per_min: 600.0 }
+        );
+        assert_eq!(
+            TrafficSpec::parse("diurnal").unwrap(),
+            TrafficSpec::Diurnal {
+                base_per_min: 1000.0,
+                amplitude: 0.5,
+                period_s: 3600.0
+            }
+        );
+        assert_eq!(
+            TrafficSpec::parse("diurnal:200:0.3:120").unwrap(),
+            TrafficSpec::Diurnal {
+                base_per_min: 200.0,
+                amplitude: 0.3,
+                period_s: 120.0
+            }
+        );
+        assert_eq!(
+            TrafficSpec::parse("alibaba:5000").unwrap(),
+            TrafficSpec::Alibaba { mean_per_min: 5000.0 }
+        );
+        for bad in [
+            "poisson",
+            "poisson:-3",
+            "poisson:abc",
+            "poisson:1:2",
+            "diurnal:100:1.5",
+            "diurnal:100:0.5:60:9",
+            "alibaba:0",
+            "uniform:10",
+            "",
+        ] {
+            assert!(
+                TrafficSpec::parse(bad).is_err(),
+                "{bad:?} should be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn canonical_name_round_trips() {
+        for s in ["poisson:600", "diurnal:200:0.3:120", "alibaba:5000"] {
+            let spec = TrafficSpec::parse(s).unwrap();
+            let again = TrafficSpec::parse(&spec.name()).unwrap();
+            assert_eq!(spec, again, "{s} via {}", spec.name());
+        }
+    }
+
+    #[test]
+    fn generation_is_seed_deterministic_and_seed_sensitive() {
+        for s in ["poisson:6000", "diurnal:6000:0.5:60", "alibaba:6000"] {
+            let spec = TrafficSpec::parse(s).unwrap();
+            let a = spec.generate(7, 30.0);
+            let b = spec.generate(7, 30.0);
+            assert_eq!(a, b, "{s}: same seed must replay exactly");
+            let c = spec.generate(8, 30.0);
+            assert_ne!(a, c, "{s}: a new seed must change the draws");
+            assert!(!a.is_empty(), "{s}: 30 s at 100 req/s draws arrivals");
+            assert!(
+                a.windows(2).all(|w| w[0] <= w[1]),
+                "{s}: arrivals are time-ordered"
+            );
+            assert!(a.iter().all(|&t| (0.0..30.0).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn poisson_rate_is_roughly_honoured() {
+        let spec = TrafficSpec::parse("poisson:60000").unwrap();
+        let n = spec.generate(3, 60.0).len() as f64;
+        // 60 s at 1000 req/s ⇒ 60k ± a few percent.
+        assert!((n - 60_000.0).abs() < 3_000.0, "got {n}");
+    }
+
+    #[test]
+    fn alibaba_trace_is_bursty_and_shared() {
+        // The embedded trace must keep its flash-crowd spikes — fig10
+        // and the serving replay both key off this exact shape.
+        let peak = ALIBABA_TRACE_PER_MIN
+            .iter()
+            .cloned()
+            .fold(f64::NEG_INFINITY, f64::max);
+        let trough = ALIBABA_TRACE_PER_MIN
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        assert!(peak / trough > 4.0, "trace lost its burstiness");
+        assert!((alibaba_trace_mean() - 1.0).abs() < 0.25);
+    }
+}

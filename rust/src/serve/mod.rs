@@ -1,0 +1,769 @@
+//! The **serving tier**: pipelined forward-only execution of a frozen
+//! [`Plan`] as a simulated serverless inference deployment.
+//!
+//! FuncPipe partitions a model across serverless functions to fit
+//! memory/bandwidth caps; MOPAR (arxiv 2404.02445) shows the same idea
+//! carries to *inference*. This module runs that workload on a
+//! deterministic virtual-clock event loop:
+//!
+//! * a **request router** accumulates arrivals into micro-batches —
+//!   a batch dispatches when it reaches the plan's `mu` requests or
+//!   when the batching window closes, whichever first;
+//! * each pipeline stage owns a FIFO **batch queue** and an
+//!   autoscaled pool of [`FunctionInstance`]s: scale *up* when queued
+//!   batches exceed the instances already cold-starting (SMLT-style
+//!   load tracking, arxiv 2205.01853), scale *down* on an idle
+//!   timeout, every launch paying a (scenario-scalable) cold start
+//!   and every instance aging on the virtual clock until the platform
+//!   lifetime expires it;
+//! * **activation hand-off** between stages is priced through the
+//!   same storage model the trainer uses: per-access latency plus
+//!   boundary bytes over [`PlatformSpec::effective_bandwidth`] at the
+//!   *current* live-instance count (autoscaling feeds back into
+//!   storage contention);
+//! * **billing** is serverless-faithful: every instance accrues
+//!   `tier.mem_gb() × alive_seconds × price_per_gb_s` from launch
+//!   (cold start included) to retirement.
+//!
+//! Determinism: arrivals are pre-drawn by [`arrivals`] in time order;
+//! the event loop breaks time ties by insertion sequence; scenario
+//! lens draws key on the global launch ordinal. A `(plan, traffic,
+//! seed, scenario)` tuple therefore replays byte-identically.
+
+pub mod arrivals;
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::model::Plan;
+use crate::planner::PerfModel;
+use crate::platform::FunctionInstance;
+use crate::scenario::{Injector, WorkerLens};
+use crate::simcore::ScenarioSpec;
+use crate::util::stats::percentile;
+
+pub use arrivals::{
+    TrafficSpec, ALIBABA_TRACE_PER_MIN, ARRIVAL_TAG, TRAFFIC_SYNTAX,
+};
+
+/// Knobs of one serving replay. Everything that can change a byte of
+/// the outcome is in here (plus the plan and the perf model).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub traffic: TrafficSpec,
+    /// Seeds the arrival stream (`seed ^ ARRIVAL_TAG`) *and* the
+    /// scenario lens (component tags), mirroring `--seed` elsewhere.
+    pub seed: u64,
+    /// Simulated arrival horizon, seconds; the deployment then drains.
+    pub duration_s: f64,
+    /// Router batching window: a partial batch dispatches at most this
+    /// long after its first request arrived.
+    pub batch_window_s: f64,
+    /// An idle instance retires after this long without work.
+    pub idle_timeout_s: f64,
+    /// Per-stage autoscaler ceiling.
+    pub max_instances: usize,
+    /// Scenario lens composed over the deployment (deterministic =
+    /// identity).
+    pub scenario: ScenarioSpec,
+}
+
+impl ServeOptions {
+    pub fn new(traffic: TrafficSpec, seed: u64) -> Self {
+        Self {
+            traffic,
+            seed,
+            duration_s: 60.0,
+            batch_window_s: 0.01,
+            idle_timeout_s: 10.0,
+            max_instances: 64,
+            scenario: ScenarioSpec::deterministic(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.duration_s.is_finite() || self.duration_s <= 0.0 {
+            bail!("serve duration must be positive, got {}", self.duration_s);
+        }
+        if !self.batch_window_s.is_finite() || self.batch_window_s < 0.0 {
+            bail!(
+                "batch window must be >= 0, got {}",
+                self.batch_window_s
+            );
+        }
+        if !self.idle_timeout_s.is_finite() || self.idle_timeout_s <= 0.0 {
+            bail!(
+                "idle timeout must be positive, got {}",
+                self.idle_timeout_s
+            );
+        }
+        if self.max_instances == 0 {
+            bail!("max instances per stage must be >= 1");
+        }
+        // same bound every seed-accepting surface enforces
+        crate::config::validate_seed(self.seed)?;
+        Ok(())
+    }
+}
+
+/// Per-stage outcome of a serving replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageStats {
+    pub stage: usize,
+    pub tier: usize,
+    /// Instances launched (every one pays a cold start).
+    pub launches: usize,
+    /// Launches that hit the platform lifetime and were retired while
+    /// still in demand.
+    pub expiries: usize,
+    /// High-water mark of simultaneously alive instances.
+    pub peak_instances: usize,
+    pub batches: usize,
+    pub mean_batch: f64,
+    /// busy_s / alive_s over all instances of the stage.
+    pub utilization: f64,
+    pub busy_s: f64,
+    pub alive_s: f64,
+}
+
+/// Raw numbers of one serving replay (the typed `ServeReport` in
+/// `experiment::report` renders these).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeOutcome {
+    pub requests: usize,
+    pub completed: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Mean offered load over the arrival horizon, req/min.
+    pub offered_rpm: f64,
+    /// completed / makespan, req/min.
+    pub achieved_rpm: f64,
+    /// First arrival to last completion, seconds.
+    pub makespan_s: f64,
+    /// Fraction of completed requests whose batch was an instance's
+    /// first work item (i.e. waited on a cold start somewhere).
+    pub cold_start_rate: f64,
+    pub cost_usd: f64,
+    pub cost_per_1k_usd: f64,
+    pub stages: Vec<StageStats>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Ev {
+    /// Request `req` reaches the router.
+    Arrive(usize),
+    /// The router's batching window for accumulation `epoch` closes.
+    WindowClose(u64),
+    /// Instance finished its cold start.
+    Ready { stage: usize, inst: usize },
+    /// Instance finished computing a batch.
+    Done { stage: usize, inst: usize, batch: usize },
+    /// A batch's activations landed in stage `stage`'s queue.
+    BatchAt { stage: usize, batch: usize },
+    /// Idle-timeout probe (valid only if the instance's idle epoch
+    /// still matches).
+    IdleCheck { stage: usize, inst: usize, epoch: u64 },
+}
+
+/// Heap entry: ascending time, ties broken by insertion sequence so
+/// the loop is a pure function of its inputs.
+#[derive(Debug, Clone, Copy)]
+struct Scheduled {
+    t: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Event times are finite by construction (validated inputs).
+        self.t
+            .partial_cmp(&other.t)
+            .expect("event times are never NaN")
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum InstState {
+    Starting,
+    Idle,
+    Busy,
+    Retired,
+}
+
+struct Inst {
+    func: FunctionInstance,
+    state: InstState,
+    lens: WorkerLens,
+    launch_t: f64,
+    last_touch: f64,
+    retire_t: Option<f64>,
+    busy_s: f64,
+    served_batches: usize,
+    idle_epoch: u64,
+}
+
+struct StageRt {
+    tier: usize,
+    /// Per-micro-batch (= per-request) forward seconds at this tier.
+    fwd_s: f64,
+    /// Boundary activation bytes per request toward the next stage.
+    out_bytes: f64,
+    queue: VecDeque<usize>,
+    insts: Vec<Inst>,
+    /// Incremental counters (the event loop touches these per event —
+    /// no O(instances) scans on the hot path).
+    alive_now: usize,
+    starting_now: usize,
+    launches: usize,
+    expiries: usize,
+    peak_alive: usize,
+    batches: usize,
+    batched_reqs: usize,
+}
+
+struct Sim<'a> {
+    perf: &'a PerfModel<'a>,
+    opts: &'a ServeOptions,
+    injector: Injector,
+    lens_n: usize,
+    heap: BinaryHeap<Reverse<Scheduled>>,
+    seq: u64,
+    now: f64,
+    stages: Vec<StageRt>,
+    batch_cap: usize,
+    /// Router accumulation for the next batch (request ids).
+    pending: Vec<usize>,
+    window_epoch: u64,
+    batches: Vec<Vec<usize>>,
+    arrival: Vec<f64>,
+    done: Vec<Option<f64>>,
+    launch_ordinal: usize,
+    completed: usize,
+    cold_hit_reqs: usize,
+    last_done_t: f64,
+    first_arrival_t: f64,
+    cost_usd: f64,
+}
+
+impl<'a> Sim<'a> {
+    fn push(&mut self, t: f64, ev: Ev) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Scheduled { t, seq, ev }));
+    }
+
+    fn total_alive(&self) -> usize {
+        self.stages.iter().map(|s| s.alive_now).sum()
+    }
+
+    fn cold_start_base_s(&self, tier: usize) -> f64 {
+        let p = self.perf.platform;
+        p.tier(tier).cold_start_s.max(p.cold_start_s)
+    }
+
+    /// Launch one instance for `stage`, paying a (scenario-scaled)
+    /// cold start keyed on the global launch ordinal.
+    fn launch(&mut self, stage: usize) {
+        let ordinal = self.launch_ordinal;
+        self.launch_ordinal += 1;
+        let lens_worker = ordinal % self.lens_n;
+        let generation = (ordinal / self.lens_n) as u32;
+        let st = &self.stages[stage];
+        let base = self.cold_start_base_s(st.tier);
+        let cold_s = self.injector.cold_start_s(lens_worker, generation, base);
+        let lens = self.injector.worker(lens_worker);
+        let st = &mut self.stages[stage];
+        let replica = st.insts.len();
+        let mut func = FunctionInstance::launch(
+            ordinal,
+            stage,
+            replica,
+            st.tier,
+            self.perf.platform.function_lifetime_s,
+        );
+        // Pin the lifecycle to the virtual clock from birth.
+        func.advance_virtual(0.0);
+        let inst = Inst {
+            func,
+            state: InstState::Starting,
+            lens,
+            launch_t: self.now,
+            last_touch: self.now,
+            retire_t: None,
+            busy_s: 0.0,
+            served_batches: 0,
+            idle_epoch: 0,
+        };
+        st.insts.push(inst);
+        st.launches += 1;
+        st.alive_now += 1;
+        st.starting_now += 1;
+        st.peak_alive = st.peak_alive.max(st.alive_now);
+        let t_ready = self.now + cold_s;
+        self.push(t_ready, Ev::Ready { stage, inst: replica });
+    }
+
+    fn retire(&mut self, stage: usize, inst: usize) {
+        let now = self.now;
+        let price = self.perf.platform.price_per_gb_s;
+        let mem_gb = {
+            let st = &self.stages[stage];
+            self.perf.platform.tier(st.tier).mem_gb()
+        };
+        let i = &mut self.stages[stage].insts[inst];
+        i.func.advance_virtual(now - i.last_touch);
+        i.last_touch = now;
+        i.state = InstState::Retired;
+        i.retire_t = Some(now);
+        self.cost_usd += (now - i.launch_t) * mem_gb * price;
+        self.stages[stage].alive_now -= 1;
+    }
+
+    /// Form a batch from the router's pending requests and enqueue it
+    /// at stage 0.
+    fn form_batch(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        self.window_epoch += 1;
+        let reqs = std::mem::take(&mut self.pending);
+        let id = self.batches.len();
+        self.batches.push(reqs);
+        self.stages[0].queue.push_back(id);
+        self.dispatch(0);
+    }
+
+    /// Assign queued batches to idle instances (lowest index first),
+    /// then scale up if batches still outnumber starting instances.
+    fn dispatch(&mut self, stage: usize) {
+        loop {
+            if self.stages[stage].queue.is_empty() {
+                break;
+            }
+            let idle = self.stages[stage]
+                .insts
+                .iter()
+                .position(|i| i.state == InstState::Idle);
+            let Some(idx) = idle else { break };
+            let batch = self.stages[stage].queue.pop_front().unwrap();
+            let b = self.batches[batch].len();
+            let now = self.now;
+            let st = &mut self.stages[stage];
+            let inst = &mut st.insts[idx];
+            if inst.served_batches == 0 {
+                self.cold_hit_reqs += b;
+            }
+            inst.served_batches += 1;
+            inst.func.advance_virtual(now - inst.last_touch);
+            inst.last_touch = now;
+            inst.state = InstState::Busy;
+            let service_s = st.fwd_s * b as f64 * inst.lens.compute_mult;
+            inst.busy_s += service_s;
+            st.batches += 1;
+            st.batched_reqs += b;
+            self.push(now + service_s, Ev::Done { stage, inst: idx, batch });
+        }
+        // Scale-up: every queued batch not already covered by a
+        // cold-starting instance asks for one more, up to the ceiling.
+        let queued = self.stages[stage].queue.len();
+        let starting = self.stages[stage].starting_now;
+        let mut deficit = queued.saturating_sub(starting);
+        while deficit > 0
+            && self.stages[stage].alive_now < self.opts.max_instances
+        {
+            self.launch(stage);
+            deficit -= 1;
+        }
+    }
+
+    fn on_idle(&mut self, stage: usize, inst: usize) {
+        let now = self.now;
+        let i = &mut self.stages[stage].insts[inst];
+        i.state = InstState::Idle;
+        i.idle_epoch += 1;
+        let epoch = i.idle_epoch;
+        self.push(
+            now + self.opts.idle_timeout_s,
+            Ev::IdleCheck { stage, inst, epoch },
+        );
+        self.dispatch(stage);
+    }
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::Arrive(req) => {
+                if self.pending.is_empty() {
+                    let epoch = self.window_epoch;
+                    self.push(
+                        self.now + self.opts.batch_window_s,
+                        Ev::WindowClose(epoch),
+                    );
+                }
+                self.pending.push(req);
+                if self.pending.len() >= self.batch_cap {
+                    self.form_batch();
+                }
+            }
+            Ev::WindowClose(epoch) => {
+                if epoch == self.window_epoch {
+                    self.form_batch();
+                }
+            }
+            Ev::Ready { stage, inst } => {
+                let now = self.now;
+                self.stages[stage].starting_now -= 1;
+                let i = &mut self.stages[stage].insts[inst];
+                i.func.advance_virtual(now - i.last_touch);
+                i.last_touch = now;
+                i.func.mark_running();
+                self.on_idle(stage, inst);
+            }
+            Ev::Done { stage, inst, batch } => {
+                let b = self.batches[batch].len();
+                let now = self.now;
+                let last = stage + 1 == self.stages.len();
+                let lens = self.stages[stage].insts[inst].lens;
+                if last {
+                    for &req in &self.batches[batch] {
+                        self.done[req] = Some(now);
+                    }
+                    self.completed += b;
+                    self.last_done_t = now;
+                } else {
+                    // Activation hand-off through storage: one upload
+                    // on this stage's tier, one download on the next,
+                    // both under the live-instance contention the
+                    // autoscaler currently causes.
+                    let p = self.perf.platform;
+                    let n = self.total_alive().max(1);
+                    let bytes = self.stages[stage].out_bytes * b as f64;
+                    let up = p.effective_bandwidth(
+                        self.stages[stage].tier,
+                        n,
+                    ) * lens.bandwidth_mult;
+                    let down = p.effective_bandwidth(
+                        self.stages[stage + 1].tier,
+                        n,
+                    );
+                    let transfer_s = 2.0
+                        * p.storage.latency_s
+                        * lens.latency_mult
+                        + bytes / up
+                        + bytes / down;
+                    self.push(
+                        now + transfer_s,
+                        Ev::BatchAt { stage: stage + 1, batch },
+                    );
+                }
+                let expired = {
+                    let i = &mut self.stages[stage].insts[inst];
+                    i.func.advance_virtual(now - i.last_touch);
+                    i.last_touch = now;
+                    i.func.expired()
+                };
+                if expired {
+                    self.stages[stage].expiries += 1;
+                    self.retire(stage, inst);
+                    // The pool shrank mid-demand: let the scaler react.
+                    self.dispatch(stage);
+                } else {
+                    self.on_idle(stage, inst);
+                }
+            }
+            Ev::BatchAt { stage, batch } => {
+                self.stages[stage].queue.push_back(batch);
+                self.dispatch(stage);
+            }
+            Ev::IdleCheck { stage, inst, epoch } => {
+                let i = &self.stages[stage].insts[inst];
+                if i.state == InstState::Idle && i.idle_epoch == epoch {
+                    self.retire(stage, inst);
+                }
+            }
+        }
+    }
+}
+
+/// Run one serving replay of `plan` under `opts`. Pure function of its
+/// arguments — same inputs, byte-identical [`ServeOutcome`].
+pub fn serve_plan(
+    perf: &PerfModel,
+    plan: &Plan,
+    opts: &ServeOptions,
+) -> Result<ServeOutcome> {
+    opts.validate()?;
+    let m = perf.model;
+    let p = perf.platform;
+    let ranges = plan.stage_ranges(m.n_layers());
+    if ranges.len() != plan.stage_tiers.len() {
+        bail!(
+            "plan has {} stages but {} stage tiers",
+            ranges.len(),
+            plan.stage_tiers.len()
+        );
+    }
+    let stages: Vec<StageRt> = ranges
+        .iter()
+        .zip(plan.stage_tiers.iter())
+        .map(|(&(lo, hi), &tier)| {
+            let terms = perf.stage_terms(lo, hi, tier);
+            StageRt {
+                tier,
+                fwd_s: terms.fwd_s,
+                out_bytes: m.layers[hi].out_bytes as f64,
+                queue: VecDeque::new(),
+                insts: Vec::new(),
+                alive_now: 0,
+                starting_now: 0,
+                launches: 0,
+                expiries: 0,
+                peak_alive: 0,
+                batches: 0,
+                batched_reqs: 0,
+            }
+        })
+        .collect();
+
+    let arrival = opts.traffic.generate(opts.seed, opts.duration_s);
+    let requests = arrival.len();
+    let lens_n = (stages.len() * opts.max_instances).max(1);
+    let injector = Injector::new(&opts.scenario, opts.seed, lens_n);
+    let batch_cap = plan.mu().max(1);
+
+    let mut sim = Sim {
+        perf,
+        opts,
+        injector,
+        lens_n,
+        heap: BinaryHeap::new(),
+        seq: 0,
+        now: 0.0,
+        stages,
+        batch_cap,
+        pending: Vec::new(),
+        window_epoch: 0,
+        batches: Vec::new(),
+        arrival: arrival.clone(),
+        done: vec![None; requests],
+        launch_ordinal: 0,
+        completed: 0,
+        cold_hit_reqs: 0,
+        last_done_t: 0.0,
+        first_arrival_t: arrival.first().copied().unwrap_or(0.0),
+        cost_usd: 0.0,
+    };
+    for (req, &t) in arrival.iter().enumerate() {
+        sim.push(t, Ev::Arrive(req));
+    }
+    while let Some(Reverse(sch)) = sim.heap.pop() {
+        sim.now = sch.t;
+        sim.handle(sch.ev);
+    }
+
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(requests);
+    for (req, d) in sim.done.iter().enumerate() {
+        if let Some(t) = d {
+            lat_ms.push((t - sim.arrival[req]) * 1000.0);
+        }
+    }
+    let pct = |q: f64| -> f64 {
+        if lat_ms.is_empty() {
+            0.0
+        } else {
+            percentile(&lat_ms, q)
+        }
+    };
+    let completed = sim.completed;
+    let makespan_s = if completed > 0 {
+        sim.last_done_t - sim.first_arrival_t
+    } else {
+        0.0
+    };
+    let stage_rows: Vec<StageStats> = sim
+        .stages
+        .iter()
+        .enumerate()
+        .map(|(s, st)| {
+            let alive_s: f64 = st
+                .insts
+                .iter()
+                .map(|i| i.retire_t.unwrap_or(i.last_touch) - i.launch_t)
+                .sum();
+            let busy_s: f64 = st.insts.iter().map(|i| i.busy_s).sum();
+            StageStats {
+                stage: s,
+                tier: st.tier,
+                launches: st.launches,
+                expiries: st.expiries,
+                peak_instances: st.peak_alive,
+                batches: st.batches,
+                mean_batch: if st.batches > 0 {
+                    st.batched_reqs as f64 / st.batches as f64
+                } else {
+                    0.0
+                },
+                utilization: if alive_s > 0.0 { busy_s / alive_s } else { 0.0 },
+                busy_s,
+                alive_s,
+            }
+        })
+        .collect();
+    Ok(ServeOutcome {
+        requests,
+        completed,
+        p50_ms: pct(50.0),
+        p95_ms: pct(95.0),
+        p99_ms: pct(99.0),
+        offered_rpm: requests as f64 / opts.duration_s * 60.0,
+        achieved_rpm: if makespan_s > 0.0 {
+            completed as f64 / makespan_s * 60.0
+        } else {
+            0.0
+        },
+        makespan_s,
+        cold_start_rate: if completed > 0 {
+            sim.cold_hit_reqs as f64 / completed as f64
+        } else {
+            0.0
+        },
+        cost_usd: sim.cost_usd,
+        cost_per_1k_usd: if completed > 0 {
+            sim.cost_usd / completed as f64 * 1000.0
+        } else {
+            0.0
+        },
+        stages: stage_rows,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::platform::PlatformSpec;
+
+    fn setup() -> (crate::model::ModelProfile, PlatformSpec) {
+        let p = PlatformSpec::aws_lambda();
+        let m = zoo::resnet101(&p);
+        (m, p)
+    }
+
+    fn plan(p: &PlatformSpec, m: &crate::model::ModelProfile) -> Plan {
+        let top = p.max_tier();
+        let l = m.n_layers();
+        Plan {
+            cuts: vec![l / 2 - 1],
+            dp: 1,
+            stage_tiers: vec![top, top],
+            n_micro_global: 4,
+        }
+    }
+
+    #[test]
+    fn replay_is_byte_deterministic_and_seed_sensitive() {
+        let (m, p) = setup();
+        let perf = PerfModel::new(&m, &p);
+        let plan = plan(&p, &m);
+        let mut opts = ServeOptions::new(
+            TrafficSpec::parse("poisson:1200").unwrap(),
+            7,
+        );
+        opts.duration_s = 20.0;
+        let a = serve_plan(&perf, &plan, &opts).unwrap();
+        let b = serve_plan(&perf, &plan, &opts).unwrap();
+        assert_eq!(a, b);
+        opts.seed = 8;
+        let c = serve_plan(&perf, &plan, &opts).unwrap();
+        assert_ne!(a.requests, 0);
+        assert_ne!(a, c, "a new seed must change the replay");
+    }
+
+    #[test]
+    fn all_requests_complete_and_are_billed() {
+        let (m, p) = setup();
+        let perf = PerfModel::new(&m, &p);
+        let plan = plan(&p, &m);
+        let mut opts = ServeOptions::new(
+            TrafficSpec::parse("diurnal:600:0.5:60").unwrap(),
+            3,
+        );
+        opts.duration_s = 20.0;
+        let out = serve_plan(&perf, &plan, &opts).unwrap();
+        assert_eq!(out.completed, out.requests);
+        assert!(out.requests > 50, "20 s at ~10 req/s draws arrivals");
+        assert!(out.p99_ms >= out.p95_ms && out.p95_ms >= out.p50_ms);
+        assert!(out.p50_ms > 0.0);
+        assert!(out.cost_usd > 0.0);
+        assert!(out.cost_per_1k_usd > 0.0);
+        assert!(out.cold_start_rate > 0.0, "scale-from-zero pays colds");
+        for st in &out.stages {
+            assert!(st.launches >= 1);
+            assert!(st.peak_instances >= 1);
+            assert!(st.utilization > 0.0 && st.utilization <= 1.0);
+        }
+    }
+
+    #[test]
+    fn autoscaler_respects_the_per_stage_ceiling() {
+        let (m, p) = setup();
+        let perf = PerfModel::new(&m, &p);
+        let plan = plan(&p, &m);
+        let mut opts = ServeOptions::new(
+            // A hard burst: far more offered load than two instances
+            // per stage can clear.
+            TrafficSpec::parse("poisson:20000").unwrap(),
+            11,
+        );
+        opts.duration_s = 5.0;
+        opts.max_instances = 2;
+        let out = serve_plan(&perf, &plan, &opts).unwrap();
+        assert_eq!(out.completed, out.requests, "overload still drains");
+        for st in &out.stages {
+            assert!(
+                st.peak_instances <= 2,
+                "stage {} peaked at {}",
+                st.stage,
+                st.peak_instances
+            );
+        }
+        assert!(out.p99_ms > out.p50_ms);
+    }
+
+    #[test]
+    fn batches_respect_the_mu_cap() {
+        let (m, p) = setup();
+        let perf = PerfModel::new(&m, &p);
+        let mut pl = plan(&p, &m);
+        pl.n_micro_global = 4; // dp=1 ⇒ mu = 4
+        let mut opts = ServeOptions::new(
+            TrafficSpec::parse("poisson:30000").unwrap(),
+            5,
+        );
+        opts.duration_s = 2.0;
+        let out = serve_plan(&perf, &plan(&p, &m), &opts).unwrap();
+        let router = &out.stages[0];
+        assert!(router.mean_batch <= pl.mu() as f64 + 1e-9);
+        assert!(
+            router.mean_batch > 1.2,
+            "a 500 req/s burst should actually batch, got mean {}",
+            router.mean_batch
+        );
+    }
+}
