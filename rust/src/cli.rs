@@ -65,6 +65,7 @@ pub fn flags_for(cmd: &str) -> Option<Vec<&'static str>> {
         "plan" => &[
             "out",
             "strategy",
+            "search",
             "robust-scenario",
             "robust-seeds",
             "robust-rank",
@@ -489,11 +490,23 @@ pub fn serve_options_from_flags(
 }
 
 /// Shape the session's [`PlanRequest`] from the `plan` flags (robust
-/// and SLO specs on top of the config-derived defaults).
+/// and SLO specs on top of the config-derived defaults, plus the
+/// `--search serial|parallel` branch-and-bound mode). `parallel` is
+/// the default; `serial` pins the exact single-threaded search (exact
+/// node counts, reproducible truncation under a binding node budget).
 pub fn apply_plan_flags(
     req: &mut PlanRequest,
     flags: &HashMap<String, String>,
 ) -> Result<()> {
+    if let Some(mode) = flags.get("search") {
+        match mode.as_str() {
+            "serial" => req.serial_search = true,
+            "parallel" => req.serial_search = false,
+            other => bail!(
+                "--search {other:?} (expected serial|parallel)"
+            ),
+        }
+    }
     if let Some(spec) = robust_from_flags(flags)? {
         req.robust = Some(spec);
     }
@@ -690,6 +703,38 @@ mod tests {
                 parse_flags(cmd, &argv(&["--strategy", "bnb"]), &allowed)
                     .is_err(),
                 "{cmd} accepted --strategy"
+            );
+        }
+    }
+
+    #[test]
+    fn search_flag_parses_and_rejects() {
+        let allowed = flags_for("plan").unwrap();
+        // default: parallel search
+        let mut req = PlanRequest::new(8);
+        apply_plan_flags(&mut req, &HashMap::new()).unwrap();
+        assert!(!req.serial_search);
+        for (mode, serial) in [("serial", true), ("parallel", false)] {
+            let flags =
+                parse_flags("plan", &argv(&["--search", mode]), &allowed)
+                    .unwrap();
+            let mut req = PlanRequest::new(8);
+            apply_plan_flags(&mut req, &flags).unwrap();
+            assert_eq!(req.serial_search, serial, "{mode}");
+        }
+        // unknown modes are hard errors (strict-flag contract)
+        let flags =
+            parse_flags("plan", &argv(&["--search", "threads"]), &allowed)
+                .unwrap();
+        let mut req = PlanRequest::new(8);
+        assert!(apply_plan_flags(&mut req, &flags).is_err());
+        // --search belongs to `plan` alone
+        for cmd in ["simulate", "train", "baseline", "profile", "serve"] {
+            let allowed = flags_for(cmd).unwrap();
+            assert!(
+                parse_flags(cmd, &argv(&["--search", "serial"]), &allowed)
+                    .is_err(),
+                "{cmd} accepted --search"
             );
         }
     }

@@ -39,8 +39,8 @@ use crate::config::ExperimentConfig;
 use crate::model::{zoo, ModelProfile};
 use crate::pipeline::{simulate_iteration, simulate_iteration_scenario};
 use crate::planner::{
-    race, solve_request, PerfModel, PlanCandidate, PlanOutcome, PlanRequest,
-    STRATEGIES,
+    race, solve_request, PerfModel, PlanCandidate, PlanKey, PlanOutcome,
+    PlanRequest, STRATEGIES,
 };
 use crate::platform::pricing::{C5_9XLARGE, R7_2XLARGE};
 use crate::platform::PlatformSpec;
@@ -257,12 +257,15 @@ impl Experiment {
         let outcomes = race(&perf, req, &STRATEGIES)?;
 
         // pool all candidates (deduped across strategies, registry
-        // order) and recommend over the pooled frontier
+        // order) and recommend over the pooled frontier; the hashed
+        // [`PlanKey`] makes the dedup O(1) per candidate instead of a
+        // linear scan with full plan comparisons
         let rank = req.robust.as_ref().map(|r| r.rank);
+        let mut seen = std::collections::HashSet::new();
         let mut pooled: Vec<(usize, &PlanCandidate)> = Vec::new();
         for (si, out) in outcomes.iter().enumerate() {
             for cand in &out.candidates {
-                if !pooled.iter().any(|(_, c)| c.plan == cand.plan) {
+                if seen.insert(PlanKey::of(&cand.plan)) {
                     pooled.push((si, cand));
                 }
             }
@@ -298,7 +301,6 @@ impl Experiment {
                     strategy: out.strategy.clone(),
                     candidates: out.candidates.len(),
                     frontier: out.frontier().len(),
-                    nodes: out.stats.nodes,
                     recommended: rec,
                 }
             })

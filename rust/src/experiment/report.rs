@@ -337,9 +337,14 @@ impl Report for PlanReport {
 /// pooled winner — the δ ≥ 0.8 recommendation over the union of every
 /// strategy's candidates, credited to the strategy that found it.
 ///
-/// Deliberately carries NO wall-clock columns: the race's output must
-/// byte-replay (a CI `cmp` pins this), and node/candidate counts are
-/// deterministic while solve times are not.
+/// Deliberately carries NO wall-clock columns and NO search-node
+/// counts: the race's output must byte-replay (a CI `cmp` pins this).
+/// Candidate/frontier counts and recommended plans are deterministic,
+/// but node counts under the parallel branch-and-bound depend on the
+/// timing of shared-bound tightening (see
+/// [`SolveStats`](crate::planner::SolveStats)), so they stay in
+/// [`PlanOutcome::stats`](crate::planner::PlanOutcome) as diagnostics
+/// and never reach a rendered report.
 #[derive(Debug, Clone)]
 pub struct StrategyRow {
     pub strategy: String,
@@ -347,8 +352,6 @@ pub struct StrategyRow {
     pub candidates: usize,
     /// Of those, on the strategy's own frontier.
     pub frontier: usize,
-    /// Search nodes visited (0 where a strategy does not count nodes).
-    pub nodes: u64,
     /// The strategy's own δ ≥ 0.8 recommendation.
     pub recommended: Option<PlanPoint>,
 }
@@ -372,7 +375,6 @@ impl Report for PlanCompareReport {
             "strategy".to_string(),
             "plans".to_string(),
             "front".to_string(),
-            "nodes".to_string(),
             "recommended plan".to_string(),
             "t_iter".to_string(),
             "c_iter".to_string(),
@@ -402,7 +404,6 @@ impl Report for PlanCompareReport {
                 row.strategy.clone(),
                 row.candidates.to_string(),
                 row.frontier.to_string(),
-                row.nodes.to_string(),
             ];
             match &row.recommended {
                 Some(p) => {
@@ -453,7 +454,6 @@ impl Report for PlanCompareReport {
                                     Json::Num(row.candidates as f64),
                                 ),
                                 ("frontier", Json::Num(row.frontier as f64)),
-                                ("nodes", Json::Num(row.nodes as f64)),
                             ];
                             if let Some(p) = &row.recommended {
                                 f.push(("recommended", point_json(p)));

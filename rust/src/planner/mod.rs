@@ -17,18 +17,25 @@
 //! | `sweep` | [`strategy`] | balanced-partition × uniform-tier × dp configuration grid under the closed-form model |
 //!
 //! Every strategy reads the same [`PerfModel`] (closed-form §3.4.2
-//! model + memoizing [`StageCache`]); `plan --strategy all` races them
-//! in parallel threads over ONE shared model so the cache warms once.
-//! [`pareto`] keeps the generic frontier/δ-rule plumbing (also used by
-//! the legacy sweep API the examples exercise), and
-//! [`perf_model`] the closed-form iteration time/cost model (§3.4.2 +
-//! App. B) every strategy shares.
+//! model + memoizing, hash-sharded [`StageCache`]); `plan --strategy
+//! all` races them in parallel threads over ONE shared model so the
+//! cache warms once. Robust/SLO re-scoring and the default `bnb`
+//! search are themselves parallel — [`score`] owns the
+//! byte-deterministic `(plan, seed)` scoring work-queue and the
+//! canonical [`PlanKey`], and [`optimizer::solve_parallel`] the
+//! work-sharing branch-and-bound — which is what makes a full
+//! `--strategy all` + robust + SLO plan cheap enough to invoke
+//! *mid-run* (the SMLT re-planning loop). [`pareto`] keeps the generic
+//! frontier/δ-rule plumbing (also used by the legacy sweep API the
+//! examples exercise), and [`perf_model`] the closed-form iteration
+//! time/cost model (§3.4.2 + App. B) every strategy shares.
 
 pub mod bayes;
 pub mod miqp;
 pub mod optimizer;
 pub mod pareto;
 pub mod perf_model;
+pub mod score;
 pub mod strategy;
 pub mod tpdmp;
 
@@ -37,6 +44,7 @@ pub use pareto::{
     pareto_flags, pareto_front, recommend, recommend_among, sweep, SweepPoint,
 };
 pub use perf_model::{PerfModel, PlanPerf, StageCache, StageTerms};
+pub use score::{robust_scores, slo_scores, PlanKey, PlanSet};
 pub use strategy::{
     race, solve_request, strategy_by_name, PlanCandidate, PlanOutcome,
     PlanRequest, Planner, RobustRank, RobustScore, RobustSpec, SloScore,

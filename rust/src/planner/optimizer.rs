@@ -14,6 +14,7 @@
 //!    per-layer fastest tier and cheapest memory (`J_lb ≤ J` because
 //!    `t_iter ≥ t_f + t_b^1 ≥ Σ(fwd+bwd)` and β, comm, (μ−1) lags ≥ 0).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use crate::model::{ModelProfile, Plan};
@@ -22,6 +23,14 @@ use crate::platform::PlatformSpec;
 
 /// Solver telemetry (§5.6 reports solution times; we report node counts
 /// too).
+///
+/// **Determinism caveat:** under [`solve_parallel`] the node/prune/leaf
+/// counts are *pruning-order-dependent* — work packets tighten each
+/// other's bound through a shared atomic, so how much of the tree each
+/// packet visits varies run to run. The recommended **plan** is still
+/// byte-identical to [`solve_with`] (see DESIGN.md §14), but stats are
+/// diagnostics only and MUST stay out of byte-compared report JSON.
+/// The serial path keeps exact, reproducible counts.
 #[derive(Debug, Clone, Default)]
 pub struct SolveStats {
     pub nodes: u64,
@@ -29,6 +38,52 @@ pub struct SolveStats {
     pub pruned_memory: u64,
     pub leaves: u64,
     pub solve_time_s: f64,
+}
+
+impl SolveStats {
+    fn absorb(&mut self, o: &SolveStats) {
+        self.nodes += o.nodes;
+        self.pruned_bound += o.pruned_bound;
+        self.pruned_memory += o.pruned_memory;
+        self.leaves += o.leaves;
+    }
+}
+
+/// Best-known feasible objective, shared across B&B work packets as
+/// `f64` bits in an atomic. Only ever *tightened* (monotone min of
+/// published leaf objectives, seeded with the greedy incumbent), so
+/// every value it holds is the objective of some feasible plan —
+/// pruning a node whose lower bound *strictly exceeds* it can never
+/// discard an optimal completion, and a packet containing the serial
+/// search's first optimum-achieving leaf always reaches that leaf
+/// (its ancestors bound ≤ J* ≤ shared, so the strict test never
+/// fires). See DESIGN.md §14 for the full admissibility argument.
+struct SharedBound(AtomicU64);
+
+impl SharedBound {
+    fn new(v: f64) -> Self {
+        Self(AtomicU64::new(v.to_bits()))
+    }
+
+    fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    /// Monotone CAS-min: publish `v` iff it beats the current bound.
+    fn tighten(&self, v: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        while v < f64::from_bits(cur) {
+            match self.0.compare_exchange_weak(
+                cur,
+                v.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+    }
 }
 
 /// Default DFS node cap (anytime behaviour; never hit in practice for
@@ -90,10 +145,106 @@ impl<'a> CoOptimizer<'a> {
     }
 }
 
+/// The fastest-tier suffix arrays of the admissible bound, shared by
+/// every `d` (and, in [`solve_parallel`], every work packet).
+struct BoundPre {
+    /// Suffix sums of per-layer minimum compute (fastest tier).
+    suffix_min_s: Vec<f64>,
+    /// Suffix maxes of per-layer fastest-tier fwd/bwd — the (μ−1)·Δ
+    /// part of the bound: every remaining layer ends up in some stage,
+    /// so Δ_f ≥ its fwd time (likewise backward).
+    suffix_max_fwd: Vec<f64>,
+    suffix_max_bwd: Vec<f64>,
+}
+
+impl BoundPre {
+    fn build(m: &ModelProfile, p: &PlatformSpec) -> Self {
+        let l = m.n_layers();
+        // per-layer minimum compute (fastest tier) for the bound
+        let fastest_tier = (0..p.n_tiers())
+            .max_by(|&a, &b| {
+                p.tier(a)
+                    .compute_speed
+                    .partial_cmp(&p.tier(b).compute_speed)
+                    .unwrap()
+            })
+            .unwrap();
+        let mut suffix_min_s = vec![0.0; l + 1];
+        let mut suffix_max_fwd = vec![0.0f64; l + 1];
+        let mut suffix_max_bwd = vec![0.0f64; l + 1];
+        for i in (0..l).rev() {
+            let fwd = m.layers[i].fwd_s[fastest_tier];
+            let bwd = m.layers[i].bwd_s[fastest_tier];
+            suffix_min_s[i] = suffix_min_s[i + 1] + fwd + bwd;
+            suffix_max_fwd[i] = suffix_max_fwd[i + 1].max(fwd);
+            suffix_max_bwd[i] = suffix_max_bwd[i + 1].max(bwd);
+        }
+        Self { suffix_min_s, suffix_max_fwd, suffix_max_bwd }
+    }
+}
+
+/// Per-layer minimal feasible tier memory (GB) given `(μ, d)`, as a
+/// suffix max: some stage must hold layer `i`, and that stage needs at
+/// least the memory layer `i` alone requires. `None` when a single
+/// layer cannot fit any tier (the whole `d` is infeasible).
+fn suffix_min_gb_for(
+    m: &ModelProfile,
+    p: &PlatformSpec,
+    mu: usize,
+    d: usize,
+) -> Option<Vec<f64>> {
+    let l = m.n_layers();
+    let copies = if d == 1 { 2u64 } else { 4u64 };
+    let mut suffix_min_gb = vec![0.0f64; l + 1];
+    for i in (0..l).rev() {
+        let need = (mu as u64) * m.layers[i].act_bytes
+            + copies * m.layers[i].param_bytes
+            + p.base_mem_mb * 1024 * 1024;
+        let tier_gb = p
+            .tiers
+            .iter()
+            .filter(|t| t.mem_bytes() >= need)
+            .map(|t| t.mem_gb())
+            .fold(f64::INFINITY, f64::min);
+        if !tier_gb.is_finite() {
+            return None; // a single layer cannot fit: skip d
+        }
+        suffix_min_gb[i] = suffix_min_gb[i + 1].max(tier_gb);
+    }
+    Some(suffix_min_gb)
+}
+
+/// The admissible `d` values of a request, in `dp_options` order (the
+/// serial traversal order), paired with their memory suffix bound.
+fn admissible_dps(
+    perf: &PerfModel<'_>,
+    dp_options: &[usize],
+    n_micro_global: usize,
+) -> Vec<(usize, usize, Vec<f64>)> {
+    let mut out = Vec::new();
+    for &d in dp_options {
+        if d == 0 || n_micro_global % d != 0 {
+            continue;
+        }
+        let mu = n_micro_global / d;
+        if mu == 0 {
+            continue;
+        }
+        if let Some(gb) =
+            suffix_min_gb_for(perf.model, perf.platform, mu, d)
+        {
+            out.push((d, mu, gb));
+        }
+    }
+    out
+}
+
 /// The branch-and-bound core, independent of the struct wrapper: solves
 /// against any (possibly shared) [`PerfModel`], which is what lets
 /// `plan --strategy all` race it in a thread against the other registry
-/// strategies over one warm [`StageCache`](super::StageCache).
+/// strategies over one warm [`StageCache`](super::StageCache). Strictly
+/// serial with exact, reproducible [`SolveStats`]; [`solve_parallel`]
+/// returns the byte-identical plan faster.
 pub fn solve_with(
     perf: &PerfModel<'_>,
     dp_options: &[usize],
@@ -105,73 +256,10 @@ pub fn solve_with(
     let mut stats = SolveStats::default();
     let mut best: Option<(f64, Plan)> = None;
 
-    let m = perf.model;
-    let p = perf.platform;
-    let l = m.n_layers();
-
-    // per-layer minimum compute (fastest tier) for the bound
-    let fastest_tier = (0..p.n_tiers())
-        .max_by(|&a, &b| {
-            p.tier(a)
-                .compute_speed
-                .partial_cmp(&p.tier(b).compute_speed)
-                .unwrap()
-        })
-        .unwrap();
-    let min_layer_s: Vec<f64> = (0..l)
-        .map(|i| m.layers[i].fwd_s[fastest_tier] + m.layers[i].bwd_s[fastest_tier])
-        .collect();
-    // suffix sums of the per-layer minima
-    let mut suffix_min_s = vec![0.0; l + 1];
-    for i in (0..l).rev() {
-        suffix_min_s[i] = suffix_min_s[i + 1] + min_layer_s[i];
-    }
-    // per-layer minimum fwd/bwd lag contributions (fastest tier) for
-    // the (μ-1)·Δ part of the bound: every remaining layer ends up in
-    // some stage, so Δ_f ≥ its fwd time (suffix max).
-    let mut suffix_max_fwd = vec![0.0f64; l + 1];
-    let mut suffix_max_bwd = vec![0.0f64; l + 1];
-    for i in (0..l).rev() {
-        suffix_max_fwd[i] =
-            suffix_max_fwd[i + 1].max(m.layers[i].fwd_s[fastest_tier]);
-        suffix_max_bwd[i] =
-            suffix_max_bwd[i + 1].max(m.layers[i].bwd_s[fastest_tier]);
-    }
-
-    for &d in dp_options {
-        if d == 0 || n_micro_global % d != 0 {
-            continue;
-        }
-        let mu = n_micro_global / d;
-        if mu == 0 {
-            continue;
-        }
-        // per-layer minimal feasible tier memory (GB) given (μ, d):
-        // some stage must hold layer i, and that stage needs at least
-        // the memory layer i alone requires — suffix max is a valid
-        // bound on the remaining layers' largest stage allocation.
-        let copies = if d == 1 { 2u64 } else { 4u64 };
-        let mut suffix_min_gb = vec![0.0f64; l + 1];
-        let mut infeasible_d = false;
-        for i in (0..l).rev() {
-            let need = (mu as u64) * m.layers[i].act_bytes
-                + copies * m.layers[i].param_bytes
-                + p.base_mem_mb * 1024 * 1024;
-            let tier_gb = p
-                .tiers
-                .iter()
-                .filter(|t| t.mem_bytes() >= need)
-                .map(|t| t.mem_gb())
-                .fold(f64::INFINITY, f64::min);
-            if !tier_gb.is_finite() {
-                infeasible_d = true; // a single layer cannot fit: skip d
-                break;
-            }
-            suffix_min_gb[i] = suffix_min_gb[i + 1].max(tier_gb);
-        }
-        if infeasible_d {
-            continue;
-        }
+    let pre = BoundPre::build(perf.model, perf.platform);
+    for (d, mu, suffix_min_gb) in
+        admissible_dps(perf, dp_options, n_micro_global)
+    {
         let mut ctx = Dfs {
             perf,
             node_budget,
@@ -179,9 +267,9 @@ pub fn solve_with(
             mu,
             n_micro_global,
             alpha,
-            suffix_min_s: &suffix_min_s,
-            suffix_max_fwd: &suffix_max_fwd,
-            suffix_max_bwd: &suffix_max_bwd,
+            suffix_min_s: &pre.suffix_min_s,
+            suffix_max_fwd: &pre.suffix_max_fwd,
+            suffix_max_bwd: &pre.suffix_max_bwd,
             suffix_min_gb: &suffix_min_gb,
             cuts: Vec::new(),
             tiers: Vec::new(),
@@ -193,8 +281,192 @@ pub fn solve_with(
             sync_lb: 0.0,
             stats: &mut stats,
             best: &mut best,
+            shared: None,
         };
         ctx.go(0);
+    }
+
+    stats.solve_time_s = start.elapsed().as_secs_f64();
+    best.map(|(_, plan)| {
+        let perf = perf.evaluate(&plan);
+        (plan, perf, stats)
+    })
+}
+
+/// A greedy feasible incumbent to seed the shared bound: balanced
+/// `s`-stage cuts at a uniform tier, over every admissible `(d, s,
+/// tier)`. Cheap (O(L·tiers·|D|) evaluations through the stage cache)
+/// and usually within a small factor of the optimum, so packets prune
+/// from the first node instead of waiting for their own first leaf.
+fn greedy_incumbent(
+    perf: &PerfModel<'_>,
+    dps: &[(usize, usize, Vec<f64>)],
+    n_micro_global: usize,
+    alpha: (f64, f64),
+) -> Option<(f64, Plan)> {
+    let m = perf.model;
+    let p = perf.platform;
+    let l = m.n_layers();
+    let mut best: Option<(f64, Plan)> = None;
+    for &(d, _mu, _) in dps {
+        for s in 1..=l {
+            let cuts = crate::planner::strategy::balanced_cuts(l, s);
+            for tier in (0..p.n_tiers()).rev() {
+                let plan = Plan {
+                    cuts: cuts.clone(),
+                    dp: d,
+                    stage_tiers: vec![tier; s],
+                    n_micro_global,
+                };
+                if plan.validate(m, p).is_err() {
+                    continue;
+                }
+                let (t_iter, c_iter) = perf.quick(&plan);
+                let j = alpha.0 * c_iter + alpha.1 * t_iter;
+                if best.as_ref().map(|(b, _)| j < *b).unwrap_or(true) {
+                    best = Some((j, plan));
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Work-sharing parallel branch-and-bound: the root frontier (first
+/// stage boundary × dp × tier) is split into packets fanned over the
+/// scoped worker pool, every packet prunes against the greedy-seeded
+/// [`SharedBound`], and packet results merge in packet-enumeration
+/// order with the serial tie-break (strict `<`), so the returned plan
+/// is **byte-identical** to [`solve_with`] — only [`SolveStats`] are
+/// pruning-order-dependent (see the type's caveat).
+///
+/// The node budget applies per packet: a *binding* budget truncates
+/// each packet at a point that depends on how fast other packets
+/// tightened the bound, making the anytime result timing-dependent
+/// (like `time_budget_s` already is). The default budget never binds;
+/// pass `serial_search` / use [`solve_with`] for exact anytime
+/// semantics.
+pub fn solve_parallel(
+    perf: &PerfModel<'_>,
+    dp_options: &[usize],
+    node_budget: u64,
+    n_micro_global: usize,
+    alpha: (f64, f64),
+) -> Option<(Plan, PlanPerf, SolveStats)> {
+    let start = Instant::now();
+    let m = perf.model;
+    let p = perf.platform;
+    let l = m.n_layers();
+    let pre = BoundPre::build(m, p);
+    let dps = admissible_dps(perf, dp_options, n_micro_global);
+    let greedy = greedy_incumbent(perf, &dps, n_micro_global, alpha);
+    let shared = SharedBound::new(
+        greedy.as_ref().map(|(j, _)| *j).unwrap_or(f64::INFINITY),
+    );
+
+    // Packets in the serial traversal order: d in dp_options order,
+    // then first-stage end ascending, then tier descending — the exact
+    // nesting of `Dfs::go(0)`'s branch loop.
+    let mut packets: Vec<(usize, usize, usize)> = Vec::new();
+    for (di, _) in dps.iter().enumerate() {
+        for hi0 in 0..l {
+            for tier0 in (0..p.n_tiers()).rev() {
+                packets.push((di, hi0, tier0));
+            }
+        }
+    }
+
+    let results: Vec<(SolveStats, Option<(f64, Plan)>)> =
+        crate::planner::score::run_jobs(packets.len(), |pi| {
+            let (di, hi0, tier0) = packets[pi];
+            let (d, mu) = (dps[di].0, dps[di].1);
+            let suffix_min_gb = &dps[di].2;
+            let mut stats = SolveStats::default();
+            let mut best: Option<(f64, Plan)> = None;
+            // Replicate one iteration of the serial root branch loop:
+            // commit stage [0..=hi0] on tier0, then DFS below it.
+            stats.nodes += 1;
+            let terms = perf.stage_terms(0, hi0, tier0);
+            let sync_copies = if d == 1 { 2 } else { 4 };
+            let need = (mu as u64) * terms.act_bytes
+                + terms.param_bytes * sync_copies
+                + p.base_mem_mb * 1024 * 1024;
+            if need > p.tier(tier0).mem_bytes() {
+                stats.pruned_memory += 1;
+                return (stats, None);
+            }
+            let mut cuts = Vec::new();
+            let mut committed_comm = 0.0;
+            if hi0 < l - 1 {
+                let w_best = p
+                    .tiers
+                    .iter()
+                    .map(|t| t.bandwidth_bps)
+                    .fold(0.0f64, f64::max);
+                let o = m.layers[hi0].out_bytes as f64;
+                let g = m.layers[hi0 + 1].grad_bytes as f64;
+                committed_comm =
+                    2.0 * (o + g) / w_best + 4.0 * p.storage.latency_s;
+                cuts.push(hi0);
+            }
+            let sync_lb = if d > 1 {
+                crate::collective::sync_time(
+                    perf.sync_alg,
+                    terms.param_bytes as f64,
+                    d,
+                    p.tier(tier0).bandwidth_bps,
+                    p.storage.latency_s,
+                )
+            } else {
+                0.0
+            };
+            let mut ctx = Dfs {
+                perf,
+                node_budget,
+                d,
+                mu,
+                n_micro_global,
+                alpha,
+                suffix_min_s: &pre.suffix_min_s,
+                suffix_max_fwd: &pre.suffix_max_fwd,
+                suffix_max_bwd: &pre.suffix_max_bwd,
+                suffix_min_gb,
+                cuts,
+                tiers: vec![tier0],
+                committed_s: terms.fwd_s + terms.bwd_s,
+                committed_gb: p.tier(tier0).mem_gb(),
+                max_fc: terms.fwd_s,
+                max_bc: terms.bwd_s,
+                committed_comm,
+                sync_lb,
+                stats: &mut stats,
+                best: &mut best,
+                shared: Some(&shared),
+            };
+            ctx.go(hi0 + 1);
+            (stats, best)
+        });
+
+    // Deterministic merge: packet order is the serial traversal order
+    // and strict `<` keeps the FIRST achiever of the minimum — exactly
+    // the leaf the serial DFS would have locked in. The greedy
+    // incumbent merges LAST (it only matters when a binding budget
+    // truncated every packet; on ties the packets' own leaves win, as
+    // they do serially).
+    let mut stats = SolveStats::default();
+    let mut best: Option<(f64, Plan)> = None;
+    for (s, b) in results {
+        stats.absorb(&s);
+        if let Some((j, plan)) = b {
+            if best.as_ref().map(|(bj, _)| j < *bj).unwrap_or(true) {
+                best = Some((j, plan));
+            }
+        }
+    }
+    if let Some((j, plan)) = greedy {
+        if best.as_ref().map(|(bj, _)| j < *bj).unwrap_or(true) {
+            best = Some((j, plan));
+        }
     }
 
     stats.solve_time_s = start.elapsed().as_secs_f64();
@@ -228,6 +500,11 @@ struct Dfs<'b, 'a> {
     sync_lb: f64,
     stats: &'b mut SolveStats,
     best: &'b mut Option<(f64, Plan)>,
+    /// Best-known bound shared across parallel packets (`None` on the
+    /// serial path). Pruned against with STRICT `>` — the shared value
+    /// is some feasible plan's objective, so a node whose bound merely
+    /// *equals* it may still lead to the tie the serial search keeps.
+    shared: Option<&'b SharedBound>,
 }
 
 impl Dfs<'_, '_> {
@@ -256,6 +533,9 @@ impl Dfs<'_, '_> {
             if self.best.as_ref().map(|(b, _)| j < *b).unwrap_or(true) {
                 *self.best = Some((j, plan));
             }
+            if let Some(shared) = self.shared {
+                shared.tighten(j);
+            }
             return;
         }
 
@@ -263,7 +543,8 @@ impl Dfs<'_, '_> {
         // t_iter ≥ t_f + max_s t_b^s ≥ Σ(fc+bc) + (μ-1)(Δ_f + Δ_b), and
         // Δ_f ≥ max(max committed stage fwd, any remaining layer's
         // fastest-tier fwd) (likewise backward).
-        if let Some((jbest, _)) = self.best.as_ref() {
+        let local = self.best.as_ref().map(|(b, _)| *b);
+        if local.is_some() || self.shared.is_some() {
             let delta_f = self.max_fc.max(self.suffix_max_fwd[lo]);
             let delta_b = self.max_bc.max(self.suffix_max_bwd[lo]);
             // β applies to every completion that has communication: any
@@ -287,7 +568,16 @@ impl Dfs<'_, '_> {
             let c_lb =
                 p.price_per_gb_s * (self.d as f64) * gb_lb * t_lb;
             let j_lb = self.alpha.0 * c_lb + self.alpha.1 * t_lb;
-            if j_lb >= *jbest {
+            // Local incumbents prune on `>=` (a tie already found in
+            // THIS subtree's past keeps serial first-wins semantics);
+            // the shared bound prunes on STRICT `>` only — see the
+            // field's invariant.
+            let prune_local = local.map(|b| j_lb >= b).unwrap_or(false);
+            let prune_shared = self
+                .shared
+                .map(|s| j_lb > s.get())
+                .unwrap_or(false);
+            if prune_local || prune_shared {
                 self.stats.pruned_bound += 1;
                 return;
             }
@@ -524,6 +814,46 @@ mod tests {
             "hit rate {:.2} too low",
             cache.hit_rate()
         );
+    }
+
+    #[test]
+    fn parallel_search_matches_serial_plan() {
+        let p = PlatformSpec::aws_lambda();
+        let m = merge_layers(
+            &zoo::resnet101(&p),
+            4,
+            MergeCriterion::Compute,
+        );
+        let perf = PerfModel::new(&m, &p);
+        let dp = vec![1usize, 2, 4];
+        for &alpha in &[(1.0, 0.0), (1.0, 1e-4), (0.0, 1.0)] {
+            let a =
+                solve_with(&perf, &dp, DEFAULT_NODE_BUDGET, 8, alpha);
+            let b = solve_parallel(
+                &perf,
+                &dp,
+                DEFAULT_NODE_BUDGET,
+                8,
+                alpha,
+            );
+            match (a, b) {
+                (Some((pa, fa, _)), Some((pb, fb, _))) => {
+                    assert_eq!(pa, pb, "plan diverged at {alpha:?}");
+                    assert_eq!(
+                        fa.t_iter.to_bits(),
+                        fb.t_iter.to_bits(),
+                        "perf diverged at {alpha:?}"
+                    );
+                }
+                (None, None) => {}
+                (a, b) => panic!(
+                    "feasibility diverged at {alpha:?}: serial={} \
+                     parallel={}",
+                    a.is_some(),
+                    b.is_some()
+                ),
+            }
+        }
     }
 
     #[test]

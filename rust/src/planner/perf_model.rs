@@ -32,6 +32,12 @@ pub struct StageTerms {
     pub act_bytes: u64,
 }
 
+/// Shard count of [`StageCache`]. A power of two comfortably above the
+/// worker-pool sizes we run (`exec::pool_size()` is ~cores), so racing
+/// strategies, scoring workers, and B&B packets rarely contend on the
+/// same lock.
+const CACHE_SHARDS: usize = 16;
+
 /// Memoization of [`StageTerms`] keyed by `(lo, hi, tier)`, with
 /// hit/miss counters.
 ///
@@ -41,23 +47,48 @@ pub struct StageTerms {
 /// layer sums from scratch. The `dp` dimension of the key collapses
 /// because every dp-dependent term (eq. (9) sync, replica memory) is
 /// O(1) arithmetic over the cached bytes. Interior-mutable so the hot
-/// path keeps its `&self` signature, and `Sync` (mutex-guarded map,
-/// atomic counters) so `plan --strategy all` can race every registry
-/// strategy in parallel threads over ONE shared warm cache: entries are
-/// pure functions of the key, so concurrent misses insert identical
-/// values and results never depend on thread interleaving (only the
-/// hit/miss counters can drift by the occasional double-miss).
-#[derive(Debug, Default)]
+/// path keeps its `&self` signature, and `Sync` so `plan --strategy
+/// all`, the parallel scoring work-queue, and B&B work packets can all
+/// share ONE warm cache: entries are pure functions of the key, so
+/// concurrent misses insert identical values and results never depend
+/// on thread interleaving (only the hit/miss counters can drift by the
+/// occasional double-miss). The map is **sharded by key hash** across
+/// [`CACHE_SHARDS`] mutexes — one global lock measurably serialized
+/// the racing strategies and the PR 8 worker pool.
+#[derive(Debug)]
 pub struct StageCache {
-    terms: Mutex<HashMap<(usize, usize, usize), StageTerms>>,
+    shards: [Mutex<HashMap<(usize, usize, usize), StageTerms>>; CACHE_SHARDS],
     hits: AtomicU64,
     misses: AtomicU64,
+}
+
+/// FNV-1a over the three key words — cheap, deterministic, and spreads
+/// the near-contiguous `(lo, hi, tier)` triples well across shards.
+fn shard_of(key: &(usize, usize, usize)) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for w in [key.0 as u64, key.1 as u64, key.2 as u64] {
+        h ^= w;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h as usize) % CACHE_SHARDS
+}
+
+impl Default for StageCache {
+    fn default() -> Self {
+        Self {
+            shards: std::array::from_fn(|_| Mutex::new(HashMap::new())),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
 }
 
 impl Clone for StageCache {
     fn clone(&self) -> Self {
         Self {
-            terms: Mutex::new(self.terms.lock().unwrap().clone()),
+            shards: std::array::from_fn(|i| {
+                Mutex::new(self.shards[i].lock().unwrap().clone())
+            }),
             hits: AtomicU64::new(self.hits.load(Ordering::Relaxed)),
             misses: AtomicU64::new(self.misses.load(Ordering::Relaxed)),
         }
@@ -85,16 +116,18 @@ impl StageCache {
 
     /// Distinct `(lo, hi, tier)` entries currently cached.
     pub fn len(&self) -> usize {
-        self.terms.lock().unwrap().len()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.terms.lock().unwrap().is_empty()
+        self.shards.iter().all(|s| s.lock().unwrap().is_empty())
     }
 
     /// Drop entries and counters (between unrelated sweeps in benches).
     pub fn clear(&self) {
-        self.terms.lock().unwrap().clear();
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
     }
@@ -104,13 +137,14 @@ impl StageCache {
         key: (usize, usize, usize),
         compute: impl FnOnce() -> StageTerms,
     ) -> StageTerms {
-        if let Some(t) = self.terms.lock().unwrap().get(&key) {
+        let shard = &self.shards[shard_of(&key)];
+        if let Some(t) = shard.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return *t;
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let t = compute();
-        self.terms.lock().unwrap().insert(key, t);
+        shard.lock().unwrap().insert(key, t);
         t
     }
 }

@@ -1,0 +1,390 @@
+//! Parallel, byte-deterministic scoring of plan finalists — the work
+//! queue behind robust and SLO re-scoring (PR 8).
+//!
+//! Every scoring replay is a pure function of `(plan, scenario|traffic,
+//! seed)`, so the `(plan, seed)` job grid can fan out over scoped
+//! worker threads (sized by [`exec::pool_size`](crate::exec::pool_size))
+//! with NO effect on the bytes of any report: workers claim jobs from an
+//! atomic counter in whatever order the scheduler allows, but results
+//! are merged back by job index and **reduced strictly in `(plan,
+//! seed)` order** — the exact accumulation order of the historical
+//! serial loops, so worst/mean aggregates are bit-identical to the
+//! serial reference no matter the interleaving.
+//!
+//! The module also owns [`PlanKey`] — the canonical, collision-free
+//! encoding of a [`Plan`] used everywhere a plan is a lookup key
+//! (dedup in the race scoring memo, candidate dedup in the strategies,
+//! cross-strategy pooling). It replaces the historical
+//! `Vec<(Plan, Score)>` linear scans (O(n²) with a whole-`Plan` clone
+//! per candidate) with a hash map over a `Box<[u64]>` key.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::Result;
+
+use crate::model::Plan;
+use crate::pipeline::simulate_iteration_scenario;
+use crate::planner::perf_model::PerfModel;
+use crate::planner::strategy::{
+    RobustScore, RobustSpec, SloScore, SloSpec, SLO_REPLAY_DURATION_S,
+};
+use crate::serve::{prepare_serve, serve_prepared, ServeOptions};
+
+/// Canonical hashed key of a [`Plan`]: the plan's decision variables
+/// packed into one `u64` slice. The encoding is *exact* (no hashing at
+/// construction, so no collisions — two plans share a key iff they are
+/// equal) and prefix-free: `dp`, `n_micro_global` and the cut count
+/// come first, so `cuts` and `stage_tiers` can never alias across
+/// plans with different shapes. `Ord` gives scoring reductions a
+/// deterministic plan order independent of hash-map iteration.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PlanKey(Box<[u64]>);
+
+impl PlanKey {
+    pub fn of(plan: &Plan) -> Self {
+        let mut v =
+            Vec::with_capacity(3 + plan.cuts.len() + plan.stage_tiers.len());
+        v.push(plan.dp as u64);
+        v.push(plan.n_micro_global as u64);
+        v.push(plan.cuts.len() as u64);
+        v.extend(plan.cuts.iter().map(|&c| c as u64));
+        v.extend(plan.stage_tiers.iter().map(|&t| t as u64));
+        PlanKey(v.into_boxed_slice())
+    }
+}
+
+/// Insertion-ordered dedup set of plans keyed by [`PlanKey`]: O(1)
+/// membership, one `Plan` clone per *distinct* plan (the historical
+/// memos cloned per candidate). The insertion order is the reduction
+/// order of the batch scorers, so it must be deterministic — callers
+/// insert in (strategy, candidate) order.
+#[derive(Debug, Default)]
+pub struct PlanSet {
+    idx: HashMap<PlanKey, usize>,
+    plans: Vec<Plan>,
+}
+
+impl PlanSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert (cloning only on first sight); returns the plan's index
+    /// and whether it was newly added.
+    pub fn insert(&mut self, plan: &Plan) -> (usize, bool) {
+        match self.idx.entry(PlanKey::of(plan)) {
+            Entry::Occupied(e) => (*e.get(), false),
+            Entry::Vacant(e) => {
+                let i = self.plans.len();
+                e.insert(i);
+                self.plans.push(plan.clone());
+                (i, true)
+            }
+        }
+    }
+
+    /// Index of a previously inserted plan.
+    pub fn index_of(&self, plan: &Plan) -> Option<usize> {
+        self.idx.get(&PlanKey::of(plan)).copied()
+    }
+
+    /// The distinct plans, in insertion order.
+    pub fn plans(&self) -> &[Plan] {
+        &self.plans
+    }
+
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+}
+
+/// Fan `n_jobs` independent evaluations of `f` over scoped worker
+/// threads (at most [`exec::pool_size`](crate::exec::pool_size), never
+/// more threads than jobs) and return the results **in job order**.
+/// Workers claim indices from one atomic counter, so load balances
+/// dynamically; each worker keeps `(index, result)` pairs privately and
+/// the merge sorts by index, so the output is independent of
+/// interleaving. With one job (or one core) this degrades to the plain
+/// serial loop — no threads spawned.
+pub(crate) fn run_jobs<T, F>(n_jobs: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = crate::exec::pool_size().min(n_jobs).max(1);
+    if threads <= 1 {
+        return (0..n_jobs).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let next = &next;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut mine = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n_jobs {
+                            break;
+                        }
+                        mine.push((i, f(i)));
+                    }
+                    mine
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("scoring worker panicked"))
+            .collect()
+    });
+    let mut all: Vec<(usize, T)> = parts.into_iter().flatten().collect();
+    all.sort_by_key(|(i, _)| *i);
+    debug_assert_eq!(all.len(), n_jobs);
+    all.into_iter().map(|(_, t)| t).collect()
+}
+
+/// Score every plan under `spec.seeds` seeded DES replays of the
+/// scenario, fanning the `(plan, seed)` grid over the worker pool.
+/// Returns one [`RobustScore`] per plan, in plan order. Each replay is
+/// the same `simulate_iteration_scenario` call the serial path made,
+/// and the per-plan reduction walks seeds `1..=n` in order, so every
+/// score is bit-identical to the serial reference.
+pub fn robust_scores(
+    perf: &PerfModel<'_>,
+    plans: &[Plan],
+    spec: &RobustSpec,
+) -> Vec<RobustScore> {
+    let seeds = spec.seeds;
+    let results: Vec<(f64, f64)> =
+        run_jobs(plans.len() * seeds, |job| {
+            let plan = &plans[job / seeds];
+            let seed = (job % seeds) as u64 + 1;
+            let sim = simulate_iteration_scenario(
+                perf.model,
+                perf.platform,
+                plan,
+                perf.sync_alg,
+                &spec.scenario,
+                seed,
+            );
+            (sim.t_iter, sim.c_iter)
+        });
+    results
+        .chunks(seeds)
+        .map(|per_seed| {
+            let (mut worst_t, mut worst_c) = (0.0f64, 0.0f64);
+            let (mut sum_t, mut sum_c) = (0.0f64, 0.0f64);
+            for &(t, c) in per_seed {
+                worst_t = worst_t.max(t);
+                worst_c = worst_c.max(c);
+                sum_t += t;
+                sum_c += c;
+            }
+            let n = seeds as f64;
+            RobustScore {
+                worst_t,
+                worst_c,
+                mean_t: sum_t / n,
+                mean_c: sum_c / n,
+            }
+        })
+        .collect()
+}
+
+/// Score every plan under `spec.seeds` seeded serving replays, fanning
+/// the `(plan, seed)` grid over the worker pool. The per-plan serving
+/// pipeline (stage byte terms, service times, batch cap) is derived
+/// ONCE via [`prepare_serve`] and shared by all of that plan's seeds —
+/// the serial path re-derived it per seed. Returns one [`SloScore`]
+/// per plan in plan order; on failure, the first error in `(plan,
+/// seed)` order (the serial loop's error).
+pub fn slo_scores(
+    perf: &PerfModel<'_>,
+    plans: &[Plan],
+    spec: &SloSpec,
+) -> Result<Vec<SloScore>> {
+    let preps = plans
+        .iter()
+        .map(|p| prepare_serve(perf, p))
+        .collect::<Result<Vec<_>>>()?;
+    let seeds = spec.seeds;
+    let results: Vec<Result<(f64, f64, bool)>> =
+        run_jobs(plans.len() * seeds, |job| {
+            let prep = &preps[job / seeds];
+            let seed = (job % seeds) as u64 + 1;
+            let mut opts = ServeOptions::new(spec.traffic.clone(), seed);
+            opts.duration_s = SLO_REPLAY_DURATION_S;
+            let out = serve_prepared(perf, prep, &opts)?;
+            Ok((out.p99_ms, out.cost_per_1k_usd, out.completed > 0))
+        });
+    results
+        .chunks(seeds)
+        .map(|per_seed| {
+            let mut worst_p99 = 0.0f64;
+            let mut sum_cost = 0.0f64;
+            let mut all_served = true;
+            for r in per_seed {
+                let &(p99, cost, served) = r.as_ref().map_err(|e| {
+                    anyhow::anyhow!("{e:#}")
+                })?;
+                worst_p99 = worst_p99.max(p99);
+                sum_cost += cost;
+                all_served &= served;
+            }
+            Ok(SloScore {
+                p99_ms: worst_p99,
+                cost_per_1k_usd: sum_cost / seeds as f64,
+                feasible: all_served && worst_p99 <= spec.p99_ms,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{merge_layers, zoo, MergeCriterion};
+    use crate::planner::strategy::RobustRank;
+    use crate::platform::PlatformSpec;
+    use crate::serve::{serve_plan, TrafficSpec};
+    use crate::simcore::ScenarioSpec;
+
+    fn fixture() -> (crate::model::ModelProfile, PlatformSpec) {
+        let p = PlatformSpec::aws_lambda();
+        let m = merge_layers(&zoo::resnet101(&p), 4, MergeCriterion::Compute);
+        (m, p)
+    }
+
+    fn some_plans(
+        perf: &PerfModel<'_>,
+    ) -> Vec<Plan> {
+        let mut req = crate::planner::strategy::PlanRequest::new(16);
+        req.dp_options = vec![1, 2];
+        let out =
+            crate::planner::strategy::solve_request("sweep", perf, &req)
+                .unwrap();
+        out.candidates.into_iter().map(|c| c.plan).collect()
+    }
+
+    #[test]
+    fn plan_key_is_exact_and_shape_safe() {
+        let a = Plan {
+            cuts: vec![3],
+            dp: 2,
+            stage_tiers: vec![1, 2],
+            n_micro_global: 8,
+        };
+        let b = Plan { cuts: vec![], dp: 2, stage_tiers: vec![3], n_micro_global: 8 };
+        assert_eq!(PlanKey::of(&a), PlanKey::of(&a.clone()));
+        assert_ne!(PlanKey::of(&a), PlanKey::of(&b));
+        // shape ambiguity: same flattened numbers, different split
+        let c = Plan {
+            cuts: vec![3, 1],
+            dp: 2,
+            stage_tiers: vec![2],
+            n_micro_global: 8,
+        };
+        assert_ne!(PlanKey::of(&a), PlanKey::of(&c));
+    }
+
+    #[test]
+    fn plan_set_dedups_in_insertion_order() {
+        let mk = |dp: usize| Plan {
+            cuts: vec![],
+            dp,
+            stage_tiers: vec![0],
+            n_micro_global: 8,
+        };
+        let mut set = PlanSet::new();
+        assert!(set.is_empty());
+        assert_eq!(set.insert(&mk(1)), (0, true));
+        assert_eq!(set.insert(&mk(2)), (1, true));
+        assert_eq!(set.insert(&mk(1)), (0, false));
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.index_of(&mk(2)), Some(1));
+        assert_eq!(set.index_of(&mk(4)), None);
+        assert_eq!(set.plans()[0].dp, 1);
+        assert_eq!(set.plans()[1].dp, 2);
+    }
+
+    #[test]
+    fn run_jobs_returns_results_in_job_order() {
+        let out = run_jobs(257, |i| i * i);
+        assert_eq!(out.len(), 257);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+        assert!(run_jobs(0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn robust_scores_match_the_serial_reference_bit_for_bit() {
+        let (m, p) = fixture();
+        let perf = PerfModel::new(&m, &p);
+        let plans = some_plans(&perf);
+        assert!(!plans.is_empty());
+        let spec = RobustSpec {
+            scenario: ScenarioSpec::parse("straggler+jitter").unwrap(),
+            seeds: 4,
+            rank: RobustRank::Worst,
+        };
+        let par = robust_scores(&perf, &plans, &spec);
+        for (plan, score) in plans.iter().zip(&par) {
+            // the serial reference: seeds 1..=n in order
+            let (mut worst_t, mut worst_c) = (0.0f64, 0.0f64);
+            let (mut sum_t, mut sum_c) = (0.0f64, 0.0f64);
+            for seed in 1..=spec.seeds as u64 {
+                let sim = simulate_iteration_scenario(
+                    &m, &p, plan, perf.sync_alg, &spec.scenario, seed,
+                );
+                worst_t = worst_t.max(sim.t_iter);
+                worst_c = worst_c.max(sim.c_iter);
+                sum_t += sim.t_iter;
+                sum_c += sim.c_iter;
+            }
+            let n = spec.seeds as f64;
+            assert_eq!(score.worst_t.to_bits(), worst_t.to_bits());
+            assert_eq!(score.worst_c.to_bits(), worst_c.to_bits());
+            assert_eq!(score.mean_t.to_bits(), (sum_t / n).to_bits());
+            assert_eq!(score.mean_c.to_bits(), (sum_c / n).to_bits());
+        }
+    }
+
+    #[test]
+    fn slo_scores_match_the_serial_reference_bit_for_bit() {
+        let (m, p) = fixture();
+        let perf = PerfModel::new(&m, &p);
+        let plans = some_plans(&perf);
+        let spec = SloSpec {
+            p99_ms: 120_000.0,
+            traffic: TrafficSpec::parse("poisson:300").unwrap(),
+            seeds: 2,
+        };
+        let par = slo_scores(&perf, &plans, &spec).unwrap();
+        for (plan, score) in plans.iter().zip(&par) {
+            let mut worst_p99 = 0.0f64;
+            let mut sum_cost = 0.0f64;
+            for seed in 1..=spec.seeds as u64 {
+                let mut opts =
+                    ServeOptions::new(spec.traffic.clone(), seed);
+                opts.duration_s = SLO_REPLAY_DURATION_S;
+                let out = serve_plan(&perf, plan, &opts).unwrap();
+                worst_p99 = worst_p99.max(out.p99_ms);
+                sum_cost += out.cost_per_1k_usd;
+            }
+            assert_eq!(score.p99_ms.to_bits(), worst_p99.to_bits());
+            assert_eq!(
+                score.cost_per_1k_usd.to_bits(),
+                (sum_cost / spec.seeds as f64).to_bits()
+            );
+        }
+    }
+}

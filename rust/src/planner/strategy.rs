@@ -35,19 +35,28 @@
 //! SMLT and MLLess flag for static serverless planners: a plan that is
 //! optimal in the deterministic model can be fragile under cold starts
 //! and stragglers).
+//!
+//! Robust and SLO re-scoring run through the
+//! [`score`](crate::planner::score) work-queue: distinct plans are
+//! collected under their canonical [`PlanKey`], and the `(plan, seed)`
+//! replay grid fans out over the scoped worker pool with results
+//! reduced in the serial order — reports stay byte-deterministic while
+//! scoring saturates the machine (the "fast re-plan" requirement of
+//! mid-run re-planning).
 
+use std::collections::HashSet;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::model::Plan;
-use crate::pipeline::simulate_iteration_scenario;
 use crate::planner::optimizer::SolveStats;
 use crate::planner::pareto::{pareto_flags, recommend_among};
 use crate::planner::perf_model::{PerfModel, PlanPerf};
+use crate::planner::score::{robust_scores, slo_scores, PlanKey, PlanSet};
 use crate::planner::{bayes, miqp, optimizer, tpdmp};
 use crate::platform::PlatformSpec;
-use crate::serve::{serve_plan, ServeOptions, TrafficSpec};
+use crate::serve::TrafficSpec;
 use crate::simcore::ScenarioSpec;
 
 /// How a robust request ranks candidates across its seeded replays.
@@ -192,6 +201,12 @@ pub struct PlanRequest {
     pub robust: Option<RobustSpec>,
     /// Optional SLO-aware serving selection (see [`SloSpec`]).
     pub slo: Option<SloSpec>,
+    /// Force the `bnb` strategy onto the single-threaded search
+    /// (`--search serial`). The parallel search returns the
+    /// byte-identical plan, but its [`SolveStats`] node counts are
+    /// pruning-order-dependent — serial mode keeps them exact, and
+    /// keeps a *binding* node budget's anytime truncation reproducible.
+    pub serial_search: bool,
 }
 
 impl PlanRequest {
@@ -204,6 +219,7 @@ impl PlanRequest {
             time_budget_s: None,
             robust: None,
             slo: None,
+            serial_search: false,
         }
     }
 
@@ -323,9 +339,10 @@ pub struct PlanOutcome {
     /// Registry key of the strategy that produced this outcome.
     pub strategy: String,
     pub candidates: Vec<PlanCandidate>,
-    /// Aggregated over the weight sweep. `solve_time_s` is wall time
-    /// and therefore excluded from every rendered report (reports must
-    /// byte-replay); node/leaf counts are deterministic.
+    /// Aggregated over the weight sweep. Diagnostics only: wall time is
+    /// machine-dependent and the parallel `bnb` search's node/prune
+    /// counts are pruning-order-dependent, so NOTHING in here may reach
+    /// a rendered report (reports must byte-replay).
     pub stats: SolveStats,
     pub robust: Option<RobustSpec>,
     pub slo: Option<SloSpec>,
@@ -517,36 +534,23 @@ pub fn race(
             .collect::<Result<Vec<_>>>()
     })?;
     if let Some(spec) = &req.robust {
-        let mut memo: Vec<(Plan, RobustScore)> = Vec::new();
+        let set = collect_distinct(&outcomes);
+        let scores = robust_scores(perf, set.plans(), spec);
         for out in &mut outcomes {
             for cand in &mut out.candidates {
-                let score = match memo.iter().find(|(p, _)| *p == cand.plan) {
-                    Some((_, s)) => *s,
-                    None => {
-                        let s = robust_score(perf, &cand.plan, spec);
-                        memo.push((cand.plan.clone(), s));
-                        s
-                    }
-                };
-                cand.robust = Some(score);
+                let i = set.index_of(&cand.plan).expect("plan collected");
+                cand.robust = Some(scores[i]);
             }
             out.robust = Some(spec.clone());
         }
     }
     if let Some(spec) = &req.slo {
-        let mut memo: Vec<(Plan, SloScore)> = Vec::new();
+        let set = collect_distinct(&outcomes);
+        let scores = slo_scores(perf, set.plans(), spec)?;
         for out in &mut outcomes {
             for cand in &mut out.candidates {
-                let hit = memo.iter().find(|(p, _)| *p == cand.plan);
-                let score = match hit {
-                    Some((_, s)) => *s,
-                    None => {
-                        let s = slo_score(perf, &cand.plan, spec)?;
-                        memo.push((cand.plan.clone(), s));
-                        s
-                    }
-                };
-                cand.slo = Some(score);
+                let i = set.index_of(&cand.plan).expect("plan collected");
+                cand.slo = Some(scores[i]);
             }
             out.slo = Some(spec.clone());
         }
@@ -554,110 +558,70 @@ pub fn race(
     Ok(outcomes)
 }
 
-/// One plan's scores across `spec.seeds` seeded DES replays of the
-/// scenario (seeds 1..=n, drawn in order — the same engine and streams
-/// `simulate --scenario` uses, so a robust pick is judged by exactly
-/// the noise the scenario lab replays).
-fn robust_score(
-    perf: &PerfModel<'_>,
-    plan: &Plan,
-    spec: &RobustSpec,
-) -> RobustScore {
-    let (mut worst_t, mut worst_c) = (0.0f64, 0.0f64);
-    let (mut sum_t, mut sum_c) = (0.0f64, 0.0f64);
-    for seed in 1..=spec.seeds as u64 {
-        let sim = simulate_iteration_scenario(
-            perf.model,
-            perf.platform,
-            plan,
-            perf.sync_alg,
-            &spec.scenario,
-            seed,
-        );
-        worst_t = worst_t.max(sim.t_iter);
-        worst_c = worst_c.max(sim.c_iter);
-        sum_t += sim.t_iter;
-        sum_c += sim.c_iter;
+/// The distinct plans across several outcomes, in (strategy, candidate)
+/// order — the deterministic job order of the scoring work-queue.
+fn collect_distinct(outcomes: &[PlanOutcome]) -> PlanSet {
+    let mut set = PlanSet::new();
+    for out in outcomes {
+        for cand in &out.candidates {
+            set.insert(&cand.plan);
+        }
     }
-    let n = spec.seeds as f64;
-    RobustScore {
-        worst_t,
-        worst_c,
-        mean_t: sum_t / n,
-        mean_c: sum_c / n,
-    }
+    set
 }
 
-/// Re-score every candidate of one outcome (the single-strategy path).
+/// Re-score every candidate of one outcome (the single-strategy path)
+/// through the parallel scoring work-queue — seeds 1..=n, reduced in
+/// order, the same engine and streams `simulate --scenario` uses, so a
+/// robust pick is judged by exactly the noise the scenario lab replays.
 fn apply_robustness(
     outcome: &mut PlanOutcome,
     perf: &PerfModel<'_>,
     spec: &RobustSpec,
 ) {
+    let mut set = PlanSet::new();
+    for cand in &outcome.candidates {
+        set.insert(&cand.plan);
+    }
+    let scores = robust_scores(perf, set.plans(), spec);
     for cand in &mut outcome.candidates {
-        cand.robust = Some(robust_score(perf, &cand.plan, spec));
+        let i = set.index_of(&cand.plan).expect("plan collected");
+        cand.robust = Some(scores[i]);
     }
     outcome.robust = Some(spec.clone());
 }
 
-/// One plan's scores across `spec.seeds` seeded serving replays (seeds
-/// 1..=n, in order — the same `serve` engine and arrival streams the
-/// `serve` subcommand replays, so an SLO pick is judged by exactly the
-/// deployment it will run as).
-fn slo_score(
-    perf: &PerfModel<'_>,
-    plan: &Plan,
-    spec: &SloSpec,
-) -> Result<SloScore> {
-    let mut worst_p99 = 0.0f64;
-    let mut sum_cost = 0.0f64;
-    let mut all_served = true;
-    for seed in 1..=spec.seeds as u64 {
-        let mut opts = ServeOptions::new(spec.traffic.clone(), seed);
-        opts.duration_s = SLO_REPLAY_DURATION_S;
-        let out = serve_plan(perf, plan, &opts)?;
-        worst_p99 = worst_p99.max(out.p99_ms);
-        sum_cost += out.cost_per_1k_usd;
-        all_served &= out.completed > 0;
-    }
-    Ok(SloScore {
-        p99_ms: worst_p99,
-        cost_per_1k_usd: sum_cost / spec.seeds as f64,
-        feasible: all_served && worst_p99 <= spec.p99_ms,
-    })
-}
-
 /// Re-score every candidate of one outcome under the SLO spec's
-/// serving replays (the single-strategy path).
+/// serving replays (the single-strategy path) — seeds 1..=n through
+/// the work-queue, the same `serve` engine and arrival streams the
+/// `serve` subcommand replays, so an SLO pick is judged by exactly the
+/// deployment it will run as.
 fn apply_slo(
     outcome: &mut PlanOutcome,
     perf: &PerfModel<'_>,
     spec: &SloSpec,
 ) -> Result<()> {
-    let mut memo: Vec<(Plan, SloScore)> = Vec::new();
+    let mut set = PlanSet::new();
+    for cand in &outcome.candidates {
+        set.insert(&cand.plan);
+    }
+    let scores = slo_scores(perf, set.plans(), spec)?;
     for cand in &mut outcome.candidates {
-        let hit = memo.iter().find(|(p, _)| *p == cand.plan);
-        let score = match hit {
-            Some((_, s)) => *s,
-            None => {
-                let s = slo_score(perf, &cand.plan, spec)?;
-                memo.push((cand.plan.clone(), s));
-                s
-            }
-        };
-        cand.slo = Some(score);
+        let i = set.index_of(&cand.plan).expect("plan collected");
+        cand.slo = Some(scores[i]);
     }
     outcome.slo = Some(spec.clone());
     Ok(())
 }
 
 fn push_dedup(
+    seen: &mut HashSet<PlanKey>,
     candidates: &mut Vec<PlanCandidate>,
     plan: Plan,
     perf: PlanPerf,
     weights: (f64, f64),
 ) {
-    if !candidates.iter().any(|c| c.plan == plan) {
+    if seen.insert(PlanKey::of(&plan)) {
         candidates.push(PlanCandidate {
             plan,
             perf,
@@ -700,23 +664,37 @@ impl Planner for Bnb {
         let start = Instant::now();
         let deadline = req.deadline();
         let mut stats = SolveStats::default();
+        let mut seen = HashSet::new();
         let mut candidates = Vec::new();
         for &w in &req.weights {
             if expired(&deadline) {
                 break;
             }
-            if let Some((plan, pf, s)) = optimizer::solve_with(
-                perf,
-                &req.dp_options,
-                req.node_budget,
-                req.n_micro_global,
-                w,
-            ) {
+            // Parallel by default — byte-identical plans, faster; the
+            // serial path keeps exact SolveStats (see PlanRequest).
+            let solved = if req.serial_search {
+                optimizer::solve_with(
+                    perf,
+                    &req.dp_options,
+                    req.node_budget,
+                    req.n_micro_global,
+                    w,
+                )
+            } else {
+                optimizer::solve_parallel(
+                    perf,
+                    &req.dp_options,
+                    req.node_budget,
+                    req.n_micro_global,
+                    w,
+                )
+            };
+            if let Some((plan, pf, s)) = solved {
                 stats.nodes += s.nodes;
                 stats.leaves += s.leaves;
                 stats.pruned_bound += s.pruned_bound;
                 stats.pruned_memory += s.pruned_memory;
-                push_dedup(&mut candidates, plan, pf, w);
+                push_dedup(&mut seen, &mut candidates, plan, pf, w);
             }
         }
         outcome("bnb", candidates, stats, start)
@@ -736,6 +714,7 @@ impl Planner for Miqp {
         let start = Instant::now();
         let deadline = req.deadline();
         let mut stats = SolveStats::default();
+        let mut seen = HashSet::new();
         let mut candidates = Vec::new();
         for &w in &req.weights {
             if expired(&deadline) {
@@ -751,7 +730,7 @@ impl Planner for Miqp {
                 stats.nodes += sol.nodes;
                 stats.leaves += 1;
                 let pf = perf.evaluate(&sol.plan);
-                push_dedup(&mut candidates, sol.plan, pf, w);
+                push_dedup(&mut seen, &mut candidates, sol.plan, pf, w);
             }
         }
         outcome("miqp", candidates, stats, start)
@@ -772,6 +751,7 @@ impl Planner for Bayes {
         let deadline = req.deadline();
         let params = bayes::BayesParams::default();
         let mut stats = SolveStats::default();
+        let mut seen = HashSet::new();
         let mut candidates = Vec::new();
         for &w in &req.weights {
             if expired(&deadline) {
@@ -786,7 +766,7 @@ impl Planner for Bayes {
             ) {
                 stats.nodes += params.total_rounds as u64;
                 stats.leaves += params.total_rounds as u64;
-                push_dedup(&mut candidates, plan, pf, w);
+                push_dedup(&mut seen, &mut candidates, plan, pf, w);
             }
         }
         outcome("bayes", candidates, stats, start)
@@ -806,6 +786,7 @@ impl Planner for TpdmpStrategy {
         let start = Instant::now();
         let deadline = req.deadline();
         let mut stats = SolveStats::default();
+        let mut seen = HashSet::new();
         let mut candidates = Vec::new();
         for &w in &req.weights {
             if expired(&deadline) {
@@ -815,7 +796,7 @@ impl Planner for TpdmpStrategy {
                 tpdmp::solve_with(perf, &req.dp_options, req.n_micro_global, w)
             {
                 stats.leaves += 1;
-                push_dedup(&mut candidates, plan, pf, w);
+                push_dedup(&mut seen, &mut candidates, plan, pf, w);
             }
         }
         outcome("tpdmp", candidates, stats, start)
@@ -831,7 +812,8 @@ struct GridSweep;
 
 /// Cut positions splitting `l` layers into `s` contiguous groups whose
 /// sizes differ by at most one (first `l % s` groups get the extra).
-fn balanced_cuts(l: usize, s: usize) -> Vec<usize> {
+/// `pub(crate)` so the parallel B&B's greedy incumbent reuses it.
+pub(crate) fn balanced_cuts(l: usize, s: usize) -> Vec<usize> {
     let base = l / s;
     let rem = l % s;
     let mut cuts = Vec::with_capacity(s - 1);
@@ -886,6 +868,7 @@ impl Planner for GridSweep {
             }
         }
 
+        let mut seen = HashSet::new();
         let mut candidates = Vec::new();
         for &w in &req.weights {
             let best = grid.iter().min_by(|(_, a), (_, b)| {
@@ -894,7 +877,13 @@ impl Planner for GridSweep {
                 ja.partial_cmp(&jb).unwrap()
             });
             if let Some((plan, pf)) = best {
-                push_dedup(&mut candidates, plan.clone(), pf.clone(), w);
+                push_dedup(
+                    &mut seen,
+                    &mut candidates,
+                    plan.clone(),
+                    pf.clone(),
+                    w,
+                );
             }
         }
         outcome("sweep", candidates, stats, start)
@@ -1024,7 +1013,9 @@ mod tests {
         for (i, name) in STRATEGIES.iter().enumerate() {
             assert_eq!(a[i].strategy, *name);
             assert_eq!(a[i].candidates.len(), b[i].candidates.len());
-            assert_eq!(a[i].stats.nodes, b[i].stats.nodes, "{name}");
+            // (node counts deliberately NOT compared: the parallel bnb
+            // search's stats are pruning-order-dependent — only plans
+            // and perf are byte-replay-pinned)
             for (ca, cb) in a[i].candidates.iter().zip(&b[i].candidates) {
                 assert_eq!(ca.plan, cb.plan, "{name}");
                 assert_eq!(

@@ -501,16 +501,21 @@ impl<'a> Sim<'a> {
     }
 }
 
-/// Run one serving replay of `plan` under `opts`. Pure function of its
-/// arguments — same inputs, byte-identical [`ServeOutcome`].
-pub fn serve_plan(
-    perf: &PerfModel,
-    plan: &Plan,
-    opts: &ServeOptions,
-) -> Result<ServeOutcome> {
-    opts.validate()?;
+/// Seed- and traffic-independent setup of one plan's serving pipeline:
+/// per-stage tier, service time, and boundary bytes, plus the router's
+/// batch cap. Deriving these walks the plan and the stage-term cache;
+/// N-seed SLO scoring does it ONCE per plan via [`prepare_serve`] and
+/// replays each seed with [`serve_prepared`].
+#[derive(Debug, Clone)]
+pub struct ServePrep {
+    stages: Vec<(usize, f64, f64)>, // (tier, fwd_s, out_bytes)
+    batch_cap: usize,
+}
+
+/// Derive the per-plan serving invariants (validating the plan's
+/// stage/tier shape against the model).
+pub fn prepare_serve(perf: &PerfModel, plan: &Plan) -> Result<ServePrep> {
     let m = perf.model;
-    let p = perf.platform;
     let ranges = plan.stage_ranges(m.n_layers());
     if ranges.len() != plan.stage_tiers.len() {
         bail!(
@@ -519,25 +524,52 @@ pub fn serve_plan(
             plan.stage_tiers.len()
         );
     }
-    let stages: Vec<StageRt> = ranges
+    let stages = ranges
         .iter()
         .zip(plan.stage_tiers.iter())
         .map(|(&(lo, hi), &tier)| {
             let terms = perf.stage_terms(lo, hi, tier);
-            StageRt {
-                tier,
-                fwd_s: terms.fwd_s,
-                out_bytes: m.layers[hi].out_bytes as f64,
-                queue: VecDeque::new(),
-                insts: Vec::new(),
-                alive_now: 0,
-                starting_now: 0,
-                launches: 0,
-                expiries: 0,
-                peak_alive: 0,
-                batches: 0,
-                batched_reqs: 0,
-            }
+            (tier, terms.fwd_s, m.layers[hi].out_bytes as f64)
+        })
+        .collect();
+    Ok(ServePrep { stages, batch_cap: plan.mu().max(1) })
+}
+
+/// Run one serving replay of `plan` under `opts`. Pure function of its
+/// arguments — same inputs, byte-identical [`ServeOutcome`].
+pub fn serve_plan(
+    perf: &PerfModel,
+    plan: &Plan,
+    opts: &ServeOptions,
+) -> Result<ServeOutcome> {
+    let prep = prepare_serve(perf, plan)?;
+    serve_prepared(perf, &prep, opts)
+}
+
+/// Run one serving replay from pre-derived plan invariants. Same bytes
+/// as [`serve_plan`] on the plan that produced `prep`.
+pub fn serve_prepared(
+    perf: &PerfModel,
+    prep: &ServePrep,
+    opts: &ServeOptions,
+) -> Result<ServeOutcome> {
+    opts.validate()?;
+    let stages: Vec<StageRt> = prep
+        .stages
+        .iter()
+        .map(|&(tier, fwd_s, out_bytes)| StageRt {
+            tier,
+            fwd_s,
+            out_bytes,
+            queue: VecDeque::new(),
+            insts: Vec::new(),
+            alive_now: 0,
+            starting_now: 0,
+            launches: 0,
+            expiries: 0,
+            peak_alive: 0,
+            batches: 0,
+            batched_reqs: 0,
         })
         .collect();
 
@@ -545,7 +577,7 @@ pub fn serve_plan(
     let requests = arrival.len();
     let lens_n = (stages.len() * opts.max_instances).max(1);
     let injector = Injector::new(&opts.scenario, opts.seed, lens_n);
-    let batch_cap = plan.mu().max(1);
+    let batch_cap = prep.batch_cap;
 
     let mut sim = Sim {
         perf,

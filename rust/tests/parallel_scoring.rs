@@ -1,0 +1,224 @@
+//! PR 8 determinism suite: the parallel scoring work-queue and the
+//! work-sharing branch-and-bound must be *invisible* in every rendered
+//! byte — parallel robust/SLO scores are bit-identical to the serial
+//! reference, `solve_parallel` recommends the exact plan `solve_with`
+//! does, two independent sessions render byte-identical race reports,
+//! and the sharded `StageCache` still earns its hit rate under a full
+//! registry race.
+
+use funcpipe::config::ExperimentConfig;
+use funcpipe::experiment::{Experiment, Format, Report};
+use funcpipe::model::{merge_layers, zoo, MergeCriterion, ModelProfile};
+use funcpipe::pipeline::simulate_iteration_scenario;
+use funcpipe::planner::{
+    optimizer, race, robust_scores, slo_scores, PerfModel, PlanRequest,
+    RobustRank, RobustSpec, SloSpec, DEFAULT_WEIGHTS, STRATEGIES,
+};
+use funcpipe::platform::PlatformSpec;
+use funcpipe::serve::TrafficSpec;
+use funcpipe::simcore::ScenarioSpec;
+
+fn small_model(name: &str, p: &PlatformSpec) -> ModelProfile {
+    merge_layers(&zoo::by_name(name, p).unwrap(), 4, MergeCriterion::Compute)
+}
+
+fn finalists(perf: &PerfModel<'_>) -> Vec<funcpipe::model::Plan> {
+    let mut req = PlanRequest::new(16);
+    req.dp_options = vec![1, 2];
+    let mut plans = Vec::new();
+    for name in STRATEGIES {
+        let out =
+            funcpipe::planner::solve_request(name, perf, &req).unwrap();
+        for c in out.candidates {
+            if !plans.contains(&c.plan) {
+                plans.push(c.plan);
+            }
+        }
+    }
+    plans
+}
+
+/// The work-queue scorers reproduce the historical serial loops bit for
+/// bit on a realistic finalist set (every distinct plan the whole
+/// registry produces), for both the robust DES replays and the SLO
+/// serving replays.
+#[test]
+fn parallel_scoring_is_bit_identical_to_the_serial_reference() {
+    let p = PlatformSpec::aws_lambda();
+    let m = small_model("resnet101", &p);
+    let perf = PerfModel::new(&m, &p);
+    let plans = finalists(&perf);
+    assert!(plans.len() >= 2, "need a real finalist set");
+
+    let rspec = RobustSpec {
+        scenario: ScenarioSpec::parse("straggler+jitter").unwrap(),
+        seeds: 8,
+        rank: RobustRank::Worst,
+    };
+    let scores = robust_scores(&perf, &plans, &rspec);
+    assert_eq!(scores.len(), plans.len());
+    for (plan, score) in plans.iter().zip(&scores) {
+        let (mut worst_t, mut worst_c) = (0.0f64, 0.0f64);
+        let (mut sum_t, mut sum_c) = (0.0f64, 0.0f64);
+        for seed in 1..=rspec.seeds as u64 {
+            let sim = simulate_iteration_scenario(
+                &m,
+                &p,
+                plan,
+                perf.sync_alg,
+                &rspec.scenario,
+                seed,
+            );
+            worst_t = worst_t.max(sim.t_iter);
+            worst_c = worst_c.max(sim.c_iter);
+            sum_t += sim.t_iter;
+            sum_c += sim.c_iter;
+        }
+        let n = rspec.seeds as f64;
+        assert_eq!(score.worst_t.to_bits(), worst_t.to_bits());
+        assert_eq!(score.worst_c.to_bits(), worst_c.to_bits());
+        assert_eq!(score.mean_t.to_bits(), (sum_t / n).to_bits());
+        assert_eq!(score.mean_c.to_bits(), (sum_c / n).to_bits());
+    }
+
+    let sspec = SloSpec {
+        p99_ms: 120_000.0,
+        traffic: TrafficSpec::parse("poisson:300").unwrap(),
+        seeds: 2,
+    };
+    let scores = slo_scores(&perf, &plans, &sspec).unwrap();
+    assert_eq!(scores.len(), plans.len());
+    for (plan, score) in plans.iter().zip(&scores) {
+        let mut worst_p99 = 0.0f64;
+        let mut sum_cost = 0.0f64;
+        let mut all_served = true;
+        for seed in 1..=sspec.seeds as u64 {
+            let mut opts = funcpipe::serve::ServeOptions::new(
+                sspec.traffic.clone(),
+                seed,
+            );
+            opts.duration_s = funcpipe::planner::strategy::SLO_REPLAY_DURATION_S;
+            let out =
+                funcpipe::serve::serve_plan(&perf, plan, &opts).unwrap();
+            worst_p99 = worst_p99.max(out.p99_ms);
+            sum_cost += out.cost_per_1k_usd;
+            all_served &= out.completed > 0;
+        }
+        assert_eq!(score.p99_ms.to_bits(), worst_p99.to_bits());
+        assert_eq!(
+            score.cost_per_1k_usd.to_bits(),
+            (sum_cost / sspec.seeds as f64).to_bits()
+        );
+        assert_eq!(
+            score.feasible,
+            all_served && worst_p99 <= sspec.p99_ms
+        );
+    }
+}
+
+/// Two *independent* sessions (fresh `Experiment`, fresh `PerfModel`,
+/// fresh caches, fresh thread pools) running the full `--strategy all`
+/// race with robust AND SLO scoring render byte-identical JSON — the
+/// in-process form of the CI two-run `cmp`.
+#[test]
+fn two_sessions_render_byte_identical_robust_slo_race_reports() {
+    let run = || {
+        let cfg = ExperimentConfig {
+            model: "resnet101".into(),
+            global_batch: 16,
+            merge_layers: 4,
+            ..ExperimentConfig::default()
+        };
+        let exp = Experiment::new(cfg).unwrap();
+        let mut req = exp.plan_request();
+        req.dp_options = vec![1, 2];
+        req.robust = Some(RobustSpec {
+            scenario: ScenarioSpec::parse("straggler+jitter").unwrap(),
+            seeds: 4,
+            rank: RobustRank::Worst,
+        });
+        req.slo = Some(SloSpec {
+            p99_ms: 300_000.0,
+            traffic: TrafficSpec::parse("poisson:240").unwrap(),
+            seeds: 2,
+        });
+        exp.plan_race(&req).unwrap().render(Format::Json)
+    };
+    let a = run();
+    let b = run();
+    assert!(a.contains("\"strategies\""), "{a}");
+    assert_eq!(a, b, "race JSON drifted between independent sessions");
+}
+
+/// The work-sharing branch-and-bound returns the exact plan (and the
+/// exact evaluated perf bits) of the serial DFS for every default
+/// weight pair on three zoo models — the packet ordering + strict
+/// shared-bound pruning argument, exercised end to end.
+#[test]
+fn parallel_bnb_recommends_the_serial_plan_everywhere() {
+    let p = PlatformSpec::aws_lambda();
+    for name in ["resnet101", "bert-large", "amoebanet-d18"] {
+        let m = small_model(name, &p);
+        let perf = PerfModel::new(&m, &p);
+        for &alpha in &DEFAULT_WEIGHTS {
+            let serial = optimizer::solve_with(
+                &perf,
+                &[1, 2, 4],
+                50_000_000,
+                16,
+                alpha,
+            );
+            let parallel = optimizer::solve_parallel(
+                &perf,
+                &[1, 2, 4],
+                50_000_000,
+                16,
+                alpha,
+            );
+            match (serial, parallel) {
+                (Some((ps, perf_s, _)), Some((pp, perf_p, _))) => {
+                    assert_eq!(ps, pp, "{name} α={alpha:?}");
+                    assert_eq!(
+                        perf_s.t_iter.to_bits(),
+                        perf_p.t_iter.to_bits(),
+                        "{name} α={alpha:?}"
+                    );
+                    assert_eq!(
+                        perf_s.c_iter.to_bits(),
+                        perf_p.c_iter.to_bits(),
+                        "{name} α={alpha:?}"
+                    );
+                }
+                (None, None) => {}
+                (s, q) => panic!(
+                    "{name} α={alpha:?}: feasibility diverged \
+                     (serial {:?}, parallel {:?})",
+                    s.is_some(),
+                    q.is_some()
+                ),
+            }
+        }
+    }
+}
+
+/// The hash-sharded `StageCache` keeps memoization effective under a
+/// full registry race: five strategies hammering the one shared model
+/// from parallel threads still hit warm entries most of the time.
+#[test]
+fn sharded_cache_keeps_its_hit_rate_under_a_full_race() {
+    let p = PlatformSpec::aws_lambda();
+    let m = small_model("resnet101", &p);
+    let perf = PerfModel::new(&m, &p);
+    let mut req = PlanRequest::new(16);
+    req.dp_options = vec![1, 2];
+    let outcomes = race(&perf, &req, &STRATEGIES).unwrap();
+    assert_eq!(outcomes.len(), STRATEGIES.len());
+    let cache = perf.cache();
+    assert!(!cache.is_empty());
+    assert!(
+        cache.hit_rate() > 0.5,
+        "sharded cache hit rate collapsed: {:.3} over {} entries",
+        cache.hit_rate(),
+        cache.len()
+    );
+}

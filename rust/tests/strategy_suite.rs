@@ -150,7 +150,9 @@ fn race_is_deterministic_with_and_without_robustness() {
     let b = race(&perf, &req, &STRATEGIES).unwrap();
     for (oa, ob) in a.iter().zip(&b) {
         assert_eq!(oa.strategy, ob.strategy);
-        assert_eq!(oa.stats.nodes, ob.stats.nodes, "{}", oa.strategy);
+        // (no stats.nodes comparison: node counts under the parallel
+        // branch-and-bound depend on shared-bound timing and are
+        // diagnostics only — plans and scores below are the contract)
         assert_eq!(oa.candidates.len(), ob.candidates.len());
         for (ca, cb) in oa.candidates.iter().zip(&ob.candidates) {
             assert_eq!(ca.plan, cb.plan);
