@@ -15,6 +15,7 @@ use crate::model::MergeCriterion;
 use crate::planner::{
     PlanRequest, RobustRank, RobustSpec, SloSpec, STRATEGIES,
 };
+use crate::replan::ReplanSpec;
 use crate::serve::{ServeOptions, TrafficSpec, TRAFFIC_SYNTAX};
 use crate::simcore::ScenarioSpec;
 
@@ -74,7 +75,16 @@ pub fn flags_for(cmd: &str) -> Option<Vec<&'static str>> {
             "slo-seeds",
         ],
         "simulate" => &["plan", "scenario", "seed"],
-        "train" => &["plan", "dp", "mu", "scenario", "seed"],
+        "train" => &[
+            "plan",
+            "dp",
+            "mu",
+            "scenario",
+            "seed",
+            "replan",
+            "replan-threshold",
+            "replan-window",
+        ],
         "baseline" => &[],
         // serve is artifact-driven like `simulate --plan`: the frozen
         // plan is the whole model/platform input, so the config-shaping
@@ -106,12 +116,17 @@ pub fn flags_for(cmd: &str) -> Option<Vec<&'static str>> {
     Some(all)
 }
 
-/// Minimal flag parser: `--key value` pairs, every flag takes a value.
-/// Strict on every failure mode that used to be a silent no-op: a flag
-/// not in `allowed` (the `--chunk-byte` typo class), a duplicated flag,
-/// a flag without a value, and stray positional arguments (a forgotten
-/// `--plan` must not silently run a different experiment) are all
-/// errors.
+/// Flags that are boolean switches: present = on, and they take NO
+/// value (a trailing word after one is a stray positional and errors,
+/// same strictness as everywhere else).
+pub const BOOL_FLAGS: &[&str] = &["replan"];
+
+/// Minimal flag parser: `--key value` pairs (boolean switches in
+/// [`BOOL_FLAGS`] take no value). Strict on every failure mode that
+/// used to be a silent no-op: a flag not in `allowed` (the
+/// `--chunk-byte` typo class), a duplicated flag, a flag without a
+/// value, and stray positional arguments (a forgotten `--plan` must not
+/// silently run a different experiment) are all errors.
 pub fn parse_flags(
     cmd: &str,
     args: &[String],
@@ -139,7 +154,10 @@ pub fn parse_flags(
         if map.contains_key(key) {
             bail!("flag --{key} given more than once");
         }
-        if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+        if BOOL_FLAGS.contains(&key) {
+            map.insert(key.to_string(), "true".to_string());
+            i += 1;
+        } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
             map.insert(key.to_string(), args[i + 1].clone());
             i += 2;
         } else {
@@ -351,6 +369,35 @@ pub fn train_overrides_from_flags(
         ov.artifacts_dir = Some(v.clone());
     }
     Ok(ov)
+}
+
+/// `train --replan [--replan-threshold x] [--replan-window k]` → the
+/// elastic re-planning spec. The strict-flag contract applies: the
+/// tuning knobs without `--replan` itself would be silent no-ops and
+/// are rejected, mirroring `--robust-seeds` without `--robust-scenario`.
+pub fn replan_from_flags(
+    flags: &HashMap<String, String>,
+) -> Result<Option<ReplanSpec>> {
+    if !flags.contains_key("replan") {
+        if flags.contains_key("replan-threshold")
+            || flags.contains_key("replan-window")
+        {
+            bail!(
+                "--replan-threshold/--replan-window have no effect without \
+                 --replan"
+            );
+        }
+        return Ok(None);
+    }
+    let mut spec = ReplanSpec::default();
+    if let Some(v) = flags.get("replan-threshold") {
+        spec.threshold = v.parse().context("--replan-threshold")?;
+    }
+    if let Some(v) = flags.get("replan-window") {
+        spec.window = v.parse().context("--replan-window")?;
+    }
+    spec.validate()?;
+    Ok(Some(spec))
 }
 
 /// `--format table|json` (default: table).
@@ -976,6 +1023,68 @@ mod tests {
         with_plan.insert("plan".to_string(), "p.json".to_string());
         with_plan.insert("dp-options".to_string(), "1,2".to_string());
         assert!(check_plan_conflicts(&with_plan).is_err());
+    }
+
+    #[test]
+    fn replan_flags_parse_and_reject() {
+        let allowed = flags_for("train").unwrap();
+        // --replan is a boolean switch: no value consumed
+        let flags = parse_flags(
+            "train",
+            &argv(&[
+                "--replan",
+                "--replan-threshold",
+                "1.5",
+                "--replan-window",
+                "2",
+                "--scenario",
+                "straggler",
+            ]),
+            &allowed,
+        )
+        .unwrap();
+        let spec = replan_from_flags(&flags).unwrap().unwrap();
+        assert_eq!(spec.threshold, 1.5);
+        assert_eq!(spec.window, 2);
+        // defaults when only the switch is given
+        let flags =
+            parse_flags("train", &argv(&["--replan"]), &allowed).unwrap();
+        let spec = replan_from_flags(&flags).unwrap().unwrap();
+        assert_eq!(spec, ReplanSpec::default());
+        // absent switch → no spec
+        assert!(replan_from_flags(&HashMap::new()).unwrap().is_none());
+        // a word after the switch is a stray positional, not its value
+        assert!(parse_flags(
+            "train",
+            &argv(&["--replan", "true"]),
+            &allowed
+        )
+        .is_err());
+        // tuning knobs without the switch are silent no-ops → hard error
+        for bad in [
+            vec!["--replan-threshold", "1.5"],
+            vec!["--replan-window", "2"],
+        ] {
+            let flags = parse_flags("train", &argv(&bad), &allowed).unwrap();
+            assert!(replan_from_flags(&flags).is_err(), "{bad:?} accepted");
+        }
+        // degenerate knob values are rejected through ReplanSpec
+        for bad in [
+            vec!["--replan", "--replan-threshold", "1.0"],
+            vec!["--replan", "--replan-threshold", "abc"],
+            vec!["--replan", "--replan-window", "0"],
+        ] {
+            let flags = parse_flags("train", &argv(&bad), &allowed).unwrap();
+            assert!(replan_from_flags(&flags).is_err(), "{bad:?} accepted");
+        }
+        // --replan belongs to `train` alone
+        for cmd in ["simulate", "plan", "baseline", "profile", "serve"] {
+            let allowed = flags_for(cmd).unwrap();
+            assert!(
+                parse_flags(cmd, &argv(&["--replan"]), &allowed).is_err(),
+                "{cmd} accepted --replan"
+            );
+        }
     }
 
     #[test]

@@ -16,23 +16,33 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::worker::{run_worker, IterMsg, WorkerCtx};
-use crate::platform::MemStore;
+use crate::platform::{MemStore, ObjectStore};
 use crate::runtime::Manifest;
 use crate::scenario::Injector;
 use crate::trainer::{IterLog, TrainConfig, TrainReport};
 
 /// Run a full training job: one executor task per worker
-/// (stage × replica).
+/// (stage × replica). A stage is a contiguous group of manifest layers
+/// (`TrainConfig::layer_groups`; empty = one layer per stage), so a
+/// post-migration segment can run the same manifest under a different
+/// partitioning.
 pub fn run_training(
     cfg: &TrainConfig,
     store: Arc<MemStore>,
 ) -> Result<TrainReport> {
     let manifest = Manifest::load(&cfg.artifacts_dir)
         .context("loading artifacts (run `make artifacts`?)")?;
-    let n_stages = manifest.n_stages;
+    let n_layers = manifest.n_stages;
     if cfg.dp == 0 || cfg.mu == 0 || cfg.steps == 0 {
         bail!("dp, mu and steps must be positive");
     }
+    let groups: Vec<(usize, usize)> = if cfg.layer_groups.is_empty() {
+        crate::replan::identity_groups(n_layers)
+    } else {
+        cfg.layer_groups.clone()
+    };
+    crate::replan::validate_groups(&groups, n_layers)?;
+    let n_groups = groups.len();
 
     // one injector for the whole job: every worker reads its lens (and
     // its cold-start draws) from the same seeded construction, so the
@@ -40,22 +50,44 @@ pub fn run_training(
     let injector = Arc::new(Injector::new(
         &cfg.scenario,
         cfg.scenario_seed,
-        n_stages * cfg.dp,
+        n_groups * cfg.dp,
     ));
+
+    // post-migration restore: read the previous generation's
+    // layer-addressed migration shards ONCE, before any worker spawns,
+    // and consume them — superseded shards must never accumulate in the
+    // bucket across repeated re-plans
+    let init_params: Option<Arc<Vec<Vec<f32>>>> = if cfg.plan_generation > 0 {
+        let mut layers = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let key = crate::replan::migration_key(cfg.plan_generation - 1, l);
+            let bytes = store.get(&key).with_context(|| {
+                format!("missing migration shard {key} for restore")
+            })?;
+            layers.push(crate::collective::bytes_to_f32s(&bytes));
+            store.delete(&key);
+        }
+        Some(Arc::new(layers))
+    } else {
+        None
+    };
 
     let start = Instant::now();
     let (tx, rx) = mpsc::channel::<IterMsg>();
 
     let mut handles = Vec::new();
-    for stage_idx in 0..n_stages {
+    for (stage_idx, &group) in groups.iter().enumerate() {
         for replica in 0..cfg.dp {
             let ctx = WorkerCtx {
                 cfg: cfg.clone(),
                 stage_idx,
+                group,
+                n_groups,
                 replica,
                 base_store: store.clone() as Arc<dyn crate::platform::ObjectStore>,
-                monitor: (stage_idx == n_stages - 1).then(|| tx.clone()),
+                monitor: (stage_idx == n_groups - 1).then(|| tx.clone()),
                 injector: injector.clone(),
+                init_params: init_params.clone(),
             };
             handles.push(crate::exec::spawn(run_worker(ctx)));
         }
@@ -94,9 +126,15 @@ pub fn run_training(
 
     // per-iteration durations: measured wall deltas, or — under the
     // deterministic virtual clock — the slowest worker's lens-stretched
-    // virtual iteration, which is what gates a pipelined step
-    let virtual_iter =
-        cfg.virtual_iter_s.map(|base| injector.max_iter_virtual_s(base));
+    // virtual iteration, which is what gates a pipelined step (a
+    // calibrated segment's base is already that gated tick)
+    let virtual_iter = cfg.virtual_iter_s.map(|base| {
+        if cfg.calibrated_tick {
+            base
+        } else {
+            injector.max_iter_virtual_s(base)
+        }
+    });
     let mut logs = Vec::with_capacity(cfg.steps);
     let mut prev_t = 0.0f64;
     for step in 0..cfg.steps {
@@ -115,7 +153,7 @@ pub fn run_training(
                 dt
             }
         };
-        logs.push(IterLog { step, loss, iter_s });
+        logs.push(IterLog { step: cfg.step_offset + step, loss, iter_s });
     }
 
     let wall_s = match cfg.virtual_iter_s {
@@ -127,12 +165,38 @@ pub fn run_training(
         None => start.elapsed().as_secs_f64(),
     };
 
+    // the drift detector's input: per-stage observed times, derived
+    // from the exact lens draws the virtual clock charged above — a
+    // pure function of (scenario, seed, grouping), so it replays
+    let observations = match (cfg.observe, cfg.virtual_iter_s) {
+        (Some(window), Some(base)) if !cfg.calibrated_tick => {
+            let mut obs = crate::replan::StageObservations::new(
+                groups.clone(),
+                n_layers,
+                window,
+                base,
+            );
+            for _ in 0..cfg.steps {
+                let (stage_obs, gated, bw_mult) = crate::replan::observe_step(
+                    &injector,
+                    &groups,
+                    cfg.dp,
+                    base,
+                );
+                obs.push_step(stage_obs, gated, bw_mult);
+            }
+            Some(obs)
+        }
+        _ => None,
+    };
+
     Ok(TrainReport {
         logs,
         restarts,
         wall_s,
         store_put_gets: (0, 0),
         workers,
+        observations,
     })
 }
 

@@ -15,11 +15,21 @@
 //! executables) runs inline on the pool, which is exactly the serverless
 //! model — one vCPU share per function.
 //!
+//! Since the elastic re-planning refactor a worker owns a contiguous
+//! **group** of manifest layers (`TrainConfig::layer_groups`), not
+//! exactly one: a mid-run migration can re-partition the same manifest
+//! into fewer, fatter stages, and the forward/backward waves below walk
+//! the group's layer executables in order. The historical one-layer-
+//! per-stage behaviour is the empty-grouping default and is
+//! byte-identical to the pre-refactor worker.
+//!
 //! The Function Manager half lives here too: after each iteration the
 //! worker checks its remaining lifetime and, if below the margin,
 //! checkpoints its parameters to storage, "restarts" (new generation,
 //! charging the tier's cold start), and restores — exercising the
 //! §3.1-step-8 path that real platforms force every 15 minutes.
+//! Checkpoints are **layer-addressed** (`ckpt/g{gen}/l{layer}[/r{rep}]`)
+//! so a different partitioning can restore them after a migration.
 //!
 //! The scenario [`Injector`] perturbs this path exactly where the
 //! simulator's lenses act: the worker's throttled store handle is
@@ -42,7 +52,7 @@ use crate::collective::sendrecv::{
 use crate::collective::{Chunking, CollectiveCtx};
 use crate::platform::function::FunctionInstance;
 use crate::platform::{ObjectStore, ThrottledStore};
-use crate::runtime::{Manifest, Runtime};
+use crate::runtime::{Manifest, Runtime, StageExec};
 use crate::scenario::{Injector, WorkerLens};
 use crate::trainer::data::Corpus;
 use crate::trainer::TrainConfig;
@@ -63,6 +73,8 @@ pub struct WorkerStats {
     pub worker_id: usize,
     pub stage: usize,
     pub replica: usize,
+    /// Plan generation this worker ran under (0 before any re-plan).
+    pub plan_generation: u64,
     /// Checkpoint/restart cycles performed.
     pub restarts: usize,
     /// Function generations launched (`restarts + 1`).
@@ -81,12 +93,21 @@ pub struct WorkerStats {
 
 pub struct WorkerCtx {
     pub cfg: TrainConfig,
+    /// Index of this worker's pipeline stage (its layer group).
     pub stage_idx: usize,
+    /// Contiguous manifest-layer range `[lo, hi)` this stage executes.
+    pub group: (usize, usize),
+    /// Total pipeline stages in this segment.
+    pub n_groups: usize,
     pub replica: usize,
     pub base_store: Arc<dyn ObjectStore>,
     pub monitor: Option<Sender<IterMsg>>,
     /// Shared seeded perturbation provider (identity when inactive).
     pub injector: Arc<Injector>,
+    /// Post-migration restore: per-manifest-layer parameters read (and
+    /// consumed) from the previous generation's migration shards by the
+    /// leader, shared across all workers.
+    pub init_params: Option<Arc<Vec<Vec<f32>>>>,
 }
 
 /// Boundary tensors ride the same chunking policy as the gradient
@@ -162,11 +183,21 @@ pub async fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
 
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
     let rt = Arc::new(Runtime::cpu()?);
-    let entry = &manifest.stages[ctx.stage_idx];
-    let mut stage = rt.load_stage(&manifest, entry)?;
-    let n_stages = manifest.n_stages;
-    let is_first = ctx.stage_idx == 0;
-    let is_last = ctx.stage_idx == n_stages - 1;
+    let (lo, hi) = ctx.group;
+    let n_layers = manifest.n_stages;
+    let mut stages: Vec<StageExec> = Vec::with_capacity(hi - lo);
+    for l in lo..hi {
+        stages.push(rt.load_stage(&manifest, &manifest.stages[l])?);
+    }
+    if let Some(init) = &ctx.init_params {
+        for (k, l) in (lo..hi).enumerate() {
+            stages[k]
+                .set_flat_params(&init[l])
+                .with_context(|| format!("migration restore of layer {l}"))?;
+        }
+    }
+    let is_first = lo == 0;
+    let is_last = hi == n_layers;
     let corpus = Corpus::new(
         manifest.vocab,
         manifest.seq_len,
@@ -185,6 +216,7 @@ pub async fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
         worker_id,
         stage: ctx.stage_idx,
         replica: ctx.replica,
+        plan_generation: cfg.plan_generation,
         restarts: 0,
         generations: 1,
         cold_start_s: 0.0,
@@ -197,7 +229,18 @@ pub async fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
     charge_cold_start(cfg, &ctx.injector, &mut func, &mut stats).await;
     func.mark_running();
 
-    let grad_len = stage.entry.flat_param_size;
+    // flat gradient layout: the group's layers concatenated in order
+    let grad_lens: Vec<usize> =
+        stages.iter().map(|s| s.entry.flat_param_size).collect();
+    let grad_offs: Vec<usize> = grad_lens
+        .iter()
+        .scan(0usize, |acc, &len| {
+            let off = *acc;
+            *acc += len;
+            Some(off)
+        })
+        .collect();
+    let grad_len_total: usize = grad_lens.iter().sum();
     let lr_scale = 1.0 / (cfg.mu * cfg.dp) as f32;
 
     // Persistent collective context for the intra-stage sync: its flow
@@ -219,82 +262,101 @@ pub async fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
     // by the slowest lens-stretched tick — the same duration the leader
     // logs per step, keeping the checkpoint schedule consistent with
     // the report's own timeline (a fast worker idles at the boundary,
-    // but its container keeps aging).
-    let virtual_tick =
-        cfg.virtual_iter_s.map(|base| ctx.injector.max_iter_virtual_s(base));
+    // but its container keeps aging). A calibrated (post-migration)
+    // segment's base is already the measured gated tick, so it is used
+    // verbatim instead of re-stretching by the lens.
+    let virtual_tick = cfg.virtual_iter_s.map(|base| {
+        if cfg.calibrated_tick {
+            base
+        } else {
+            ctx.injector.max_iter_virtual_s(base)
+        }
+    });
 
     for step in 0..cfg.steps {
-        let round = step as u64;
-        let mut grads_acc = vec![0.0f32; grad_len];
-        // saved inputs for the backward passes (stage-level remat keeps
-        // only the boundary input per micro-batch, §3.2 memory model)
-        let mut saved_f32: Vec<Vec<f32>> = Vec::with_capacity(cfg.mu);
+        // global step: corpus schedule, boundary keys and sync rounds
+        // stay continuous (and collision-free) across migrations
+        let gstep = cfg.step_offset + step;
+        let round = gstep as u64;
+        let mut grads_acc = vec![0.0f32; grad_len_total];
+        // saved inputs for the backward passes, per local layer per
+        // micro-batch (stage-level remat keeps only each layer's input,
+        // §3.2 memory model); the embed layer saves tokens instead
+        let mut saved: Vec<Vec<Vec<f32>>> = vec![Vec::new(); stages.len()];
         let mut saved_tok: Vec<Vec<i32>> = Vec::with_capacity(cfg.mu);
         let mut losses = 0.0f32;
 
         // ---- forward wave ------------------------------------------------
         for mb in 0..cfg.mu {
+            let mut cur: Option<Vec<f32>>;
+            let start_k;
             if is_first {
-                let (tokens, _) = corpus.batch(step, ctx.replica, mb);
-                let out = stage.fwd_tokens(&tokens).context("embed fwd")?;
+                let (tokens, _) = corpus.batch(gstep, ctx.replica, mb);
+                cur =
+                    Some(stages[0].fwd_tokens(&tokens).context("embed fwd")?);
+                saved_tok.push(tokens);
+                start_k = 1;
+            } else {
+                cur = Some(
+                    recv_boundary(
+                        &store,
+                        cfg.chunking,
+                        &boundary_key(
+                            "fwd",
+                            round,
+                            ctx.stage_idx - 1,
+                            ctx.replica,
+                            mb,
+                        ),
+                    )
+                    .await?,
+                );
+                start_k = 0;
+            }
+            for k in start_k..stages.len() {
+                let x = cur.take().expect("activation");
+                if lo + k == n_layers - 1 {
+                    // head: loss computed in backward; save input only
+                    saved[k].push(x);
+                } else {
+                    let out = stages[k].fwd_acts(&x).context("blocks fwd")?;
+                    saved[k].push(x);
+                    cur = Some(out);
+                }
+            }
+            if !is_last {
+                let out = cur.take().expect("boundary activation");
                 send_boundary(
                     &store,
                     cfg.chunking,
-                    &boundary_key("fwd", round, 0, ctx.replica, mb),
+                    &boundary_key("fwd", round, ctx.stage_idx, ctx.replica, mb),
                     &out,
                 )
                 .await?;
-                saved_tok.push(tokens);
-            } else {
-                let x = recv_boundary(
-                    &store,
-                    cfg.chunking,
-                    &boundary_key(
-                        "fwd",
-                        round,
-                        ctx.stage_idx - 1,
-                        ctx.replica,
-                        mb,
-                    ),
-                )
-                .await?;
-                if is_last {
-                    // loss computed in backward; save input only
-                    saved_f32.push(x);
-                } else {
-                    let out = stage.fwd_acts(&x).context("blocks fwd")?;
-                    send_boundary(
-                        &store,
-                        cfg.chunking,
-                        &boundary_key("fwd", round, ctx.stage_idx, ctx.replica, mb),
-                        &out,
-                    )
-                    .await?;
-                    saved_f32.push(x);
-                }
             }
         }
 
         // ---- backward wave (reverse micro order) ------------------------
         for mb in (0..cfg.mu).rev() {
+            let mut gy: Vec<f32>;
+            // highest local layer still owing a backward pass
+            let top_k: Option<usize>;
             if is_last {
-                let (_, targets) = corpus.batch(step, ctx.replica, mb);
-                let x = &saved_f32[mb];
+                let (_, targets) = corpus.batch(gstep, ctx.replica, mb);
+                let k_head = stages.len() - 1;
+                let x = &saved[k_head][mb];
                 let (g, gx, loss) =
-                    stage.bwd_loss(x, &targets).context("head bwd")?;
-                crate::collective::add_assign(&mut grads_acc, &g);
+                    stages[k_head].bwd_loss(x, &targets).context("head bwd")?;
+                crate::collective::add_assign(
+                    &mut grads_acc
+                        [grad_offs[k_head]..grad_offs[k_head] + grad_lens[k_head]],
+                    &g,
+                );
                 losses += loss;
-                if n_stages > 1 {
-                    send_boundary(
-                        &store,
-                        cfg.chunking,
-                        &boundary_key("bwd", round, ctx.stage_idx, ctx.replica, mb),
-                        &gx,
-                    )
-                    .await?;
-                }
+                gy = gx;
+                top_k = k_head.checked_sub(1);
             } else {
-                let gy = recv_boundary(
+                gy = recv_boundary(
                     &store,
                     cfg.chunking,
                     &boundary_key(
@@ -306,24 +368,40 @@ pub async fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
                     ),
                 )
                 .await?;
-                if is_first {
-                    let g = stage
-                        .bwd_tokens(&saved_tok[mb], &gy)
-                        .context("embed bwd")?;
-                    crate::collective::add_assign(&mut grads_acc, &g);
-                } else {
-                    let (g, gx) = stage
-                        .bwd_acts(&saved_f32[mb], &gy)
-                        .context("blocks bwd")?;
-                    crate::collective::add_assign(&mut grads_acc, &g);
-                    send_boundary(
-                        &store,
-                        cfg.chunking,
-                        &boundary_key("bwd", round, ctx.stage_idx, ctx.replica, mb),
-                        &gx,
-                    )
-                    .await?;
+                top_k = Some(stages.len() - 1);
+            }
+            if let Some(top) = top_k {
+                for k in (0..=top).rev() {
+                    if lo + k == 0 {
+                        let g = stages[0]
+                            .bwd_tokens(&saved_tok[mb], &gy)
+                            .context("embed bwd")?;
+                        crate::collective::add_assign(
+                            &mut grads_acc
+                                [grad_offs[0]..grad_offs[0] + grad_lens[0]],
+                            &g,
+                        );
+                    } else {
+                        let (g, gx) = stages[k]
+                            .bwd_acts(&saved[k][mb], &gy)
+                            .context("blocks bwd")?;
+                        crate::collective::add_assign(
+                            &mut grads_acc
+                                [grad_offs[k]..grad_offs[k] + grad_lens[k]],
+                            &g,
+                        );
+                        gy = gx;
+                    }
                 }
+            }
+            if !is_first {
+                send_boundary(
+                    &store,
+                    cfg.chunking,
+                    &boundary_key("bwd", round, ctx.stage_idx, ctx.replica, mb),
+                    &gy,
+                )
+                .await?;
             }
         }
 
@@ -331,10 +409,11 @@ pub async fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
         if let Some(sync) = &sync_ctx {
             // route the merge through the AOT merge2 executable (the L1
             // Pallas grad_merge kernel) when split sizes allow; fall back
-            // to the native add for partial splits/chunks.
+            // to the native add for partial splits/chunks and for
+            // multi-layer groups (their flat layout spans executables).
             let merge = |acc: &mut [f32], delta: &[f32]| {
-                if acc.len() == grad_len {
-                    if let Ok(merged) = stage.merge_grads(acc, delta) {
+                if stages.len() == 1 && acc.len() == grad_len_total {
+                    if let Ok(merged) = stages[0].merge_grads(acc, delta) {
                         acc.copy_from_slice(&merged);
                         return;
                     }
@@ -346,7 +425,9 @@ pub async fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
             // garbage-collect an older round's sync objects; cleanup's
             // done-marker barrier is already satisfied (every replica
             // passed round-2 to reach here), so this never suspends long
-            // and a straggler can never lose objects it still needs
+            // and a straggler can never lose objects it still needs.
+            // Bounded to this segment's rounds: a previous segment's dp
+            // may differ, so its leftovers are never touched here.
             if step >= 2 && ctx.replica == 0 {
                 crate::collective::scatter_reduce::cleanup_async(
                     &store,
@@ -359,11 +440,18 @@ pub async fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
             }
         }
 
-        // ---- SGD update through the AOT executable ------------------------
+        // ---- SGD update through the AOT executables -----------------------
         for g in grads_acc.iter_mut() {
             *g *= lr_scale;
         }
-        stage.sgd_step(&grads_acc, cfg.lr).context("sgd")?;
+        for k in 0..stages.len() {
+            stages[k]
+                .sgd_step(
+                    &grads_acc[grad_offs[k]..grad_offs[k] + grad_lens[k]],
+                    cfg.lr,
+                )
+                .context("sgd")?;
+        }
 
         // ---- monitor ------------------------------------------------------
         if is_last {
@@ -382,26 +470,36 @@ pub async fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
             stats.virtual_elapsed_s += dt;
         }
         if func.should_checkpoint(cfg.checkpoint_margin_s) {
-            let key = format!("ckpt/s{}/r{}", ctx.stage_idx, ctx.replica);
-            store
-                .put_async(
-                    &key,
-                    crate::collective::f32s_to_bytes(&stage.flat_params()),
-                )
-                .await?;
+            for (k, l) in (lo..hi).enumerate() {
+                let key =
+                    crate::replan::restart_key(cfg.plan_generation, l, ctx.replica);
+                store
+                    .put_async(
+                        &key,
+                        crate::collective::f32s_to_bytes(
+                            &stages[k].flat_params(),
+                        ),
+                    )
+                    .await?;
+            }
             func.restart();
             // cold start of the replacement container: the tier's
             // cold_start_s, scenario-scaled — charged once per generation
             charge_cold_start(cfg, &ctx.injector, &mut func, &mut stats).await;
-            let bytes = store
-                .get_async(&key, RECV_TIMEOUT)
-                .await
-                .context("checkpoint restore")?;
-            stage.set_flat_params(&crate::collective::bytes_to_f32s(&bytes))?;
-            // the checkpoint is consumed: leaving the object behind
-            // would grow the bucket (and its high-water mark) with
-            // every generation for the rest of the run
-            store.delete(&key);
+            for (k, l) in (lo..hi).enumerate() {
+                let key =
+                    crate::replan::restart_key(cfg.plan_generation, l, ctx.replica);
+                let bytes = store
+                    .get_async(&key, RECV_TIMEOUT)
+                    .await
+                    .context("checkpoint restore")?;
+                stages[k]
+                    .set_flat_params(&crate::collective::bytes_to_f32s(&bytes))?;
+                // the checkpoint is consumed: leaving the object behind
+                // would grow the bucket (and its high-water mark) with
+                // every generation for the rest of the run
+                store.delete(&key);
+            }
             func.mark_running();
             stats.restarts += 1;
             stats.generations += 1;
@@ -413,6 +511,22 @@ pub async fn run_worker(ctx: WorkerCtx) -> Result<WorkerStats> {
             );
         }
     }
+
+    // ---- migration quiesce: persist this stage's layers as shards -------
+    // Written once (replica 0 owns the synced parameters — replicas are
+    // identical after the final all-reduce) so the next generation's
+    // leader can restore an arbitrary re-partitioning from them.
+    if cfg.migrate_out && ctx.replica == 0 {
+        for (k, l) in (lo..hi).enumerate() {
+            store
+                .put_async(
+                    &crate::replan::migration_key(cfg.plan_generation, l),
+                    crate::collective::f32s_to_bytes(&stages[k].flat_params()),
+                )
+                .await?;
+        }
+    }
+
     if let Some(counter) = &flaky_counter {
         stats.flaky_timeouts =
             counter.load(std::sync::atomic::Ordering::Relaxed);

@@ -30,20 +30,25 @@ pub use report::{
 };
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::baselines::{evaluate_baseline, BaselineKind};
 use crate::collective::Chunking;
 use crate::config::ExperimentConfig;
-use crate::model::{zoo, ModelProfile};
+use crate::model::{zoo, ModelProfile, Plan};
 use crate::pipeline::{simulate_iteration, simulate_iteration_scenario};
 use crate::planner::{
     race, solve_request, PerfModel, PlanCandidate, PlanKey, PlanOutcome,
     PlanRequest, STRATEGIES,
 };
 use crate::platform::pricing::{C5_9XLARGE, R7_2XLARGE};
-use crate::platform::PlatformSpec;
+use crate::platform::{MemStore, PlatformSpec};
+use crate::replan::{
+    even_groups, identity_groups, observe_step, DriftDetector,
+    MeasuredProfile, ReplanEvent, ReplanSpec, StageObservations,
+};
 use crate::serve::{serve_plan, ServeOptions};
 use crate::trainer;
 
@@ -473,6 +478,248 @@ impl Experiment {
         Ok(TrainReport::from_raw(&tc, raw))
     }
 
+    /// Re-plan under a measured observation ring: project the observed
+    /// per-stage multipliers onto the planner's layer axis and race the
+    /// whole strategy registry over the overlaid perf model. The
+    /// returned artifact records `replan:<strategy>` provenance.
+    pub fn replan(&self, obs: &StageObservations) -> Result<PlanArtifact> {
+        let profile =
+            MeasuredProfile::from_observations(obs, self.model.n_layers(), 1);
+        self.replan_measured(&profile)
+    }
+
+    /// Like [`Experiment::replan`] but from an explicit
+    /// [`MeasuredProfile`] overlay (library callers that build their own
+    /// measurements).
+    pub fn replan_measured(
+        &self,
+        profile: &MeasuredProfile,
+    ) -> Result<PlanArtifact> {
+        let perf = self.perf_model().with_overlay(profile.clone());
+        let outcomes = race(&perf, &self.plan_request(), &STRATEGIES)?;
+        let (strategy, cand) = best_candidate(&outcomes).context(
+            "re-planning found no feasible plan under the measured profile",
+        )?;
+        Ok(PlanArtifact::new(
+            self.cfg.clone(),
+            cand.plan.clone(),
+            cand.weights,
+            cand.perf.t_iter,
+            cand.perf.c_iter,
+            format!("replan:{strategy}"),
+        ))
+    }
+
+    /// The plan the drift is measured against. A planless scenario run
+    /// ticks at the unit rate over the manifest's 1:1 staging, so its
+    /// equivalent plan is an even partition of the planner layers into
+    /// (up to) one stage per runtime layer at the top tier — the same
+    /// shape the trainer actually executes.
+    fn equivalent_plan(
+        &self,
+        artifact: Option<&PlanArtifact>,
+        n_rt: usize,
+        dp: usize,
+    ) -> Plan {
+        if let Some(a) = artifact {
+            return a.plan.clone();
+        }
+        let lp = self.model.n_layers();
+        let groups = even_groups(lp, n_rt.min(lp));
+        let cuts = groups[..groups.len() - 1]
+            .iter()
+            .map(|&(_, hi)| hi - 1)
+            .collect();
+        Plan {
+            cuts,
+            dp,
+            stage_tiers: vec![self.platform.max_tier(); groups.len()],
+            n_micro_global: self.cfg.n_micro_global(),
+        }
+    }
+
+    /// Elastic training: run on the virtual clock, detect sustained
+    /// drift between the observed and predicted iteration time, and —
+    /// when a measured re-plan wins back its migration cost over the
+    /// remaining steps — migrate to the new plan at a function-
+    /// generation boundary (quiesce, layer-addressed checkpoint,
+    /// re-partition, restore, continue). Every re-plan decision is
+    /// recorded in the report, adopted or not.
+    ///
+    /// The whole decision is a pure function of `(config, artifact,
+    /// scenario, seed, spec)`: the observations the detector consumes
+    /// are the deterministic lens draws, so the trigger step and the
+    /// adoption verdict are computed *before* any training runs and the
+    /// same invocation replays byte-identically.
+    pub fn train_replan(
+        &self,
+        artifact: Option<&PlanArtifact>,
+        overrides: &TrainOverrides,
+        spec: &ReplanSpec,
+    ) -> Result<TrainReport> {
+        spec.validate()?;
+        let tc0 = self.train_config(artifact, overrides)?;
+        if tc0.scenario.is_deterministic() {
+            bail!(
+                "--replan has no effect without a scenario lens: the \
+                 deterministic virtual-clock run matches the prediction \
+                 exactly, so drift can never trigger (pass --scenario)"
+            );
+        }
+        let base0 = tc0
+            .virtual_iter_s
+            .context("scenario runs tick on the virtual clock")?;
+        let manifest = crate::runtime::Manifest::load(&tc0.artifacts_dir)?;
+        let n_rt = manifest.n_stages;
+        let groups0 = identity_groups(n_rt);
+        let injector0 = crate::scenario::Injector::new(
+            &tc0.scenario,
+            tc0.scenario_seed,
+            n_rt * tc0.dp,
+        );
+        let tick0 = injector0.max_iter_virtual_s(base0);
+
+        // Drift pre-pass: the observations are the same pure function
+        // of the injector the coordinator records, so the trigger step
+        // falls out without running a single training step.
+        let mut obs =
+            StageObservations::new(groups0, n_rt, spec.window, base0);
+        let mut detector = DriftDetector::new(spec);
+        let mut trigger_step = None;
+        for step in 0..tc0.steps {
+            let (stage_obs, gated, bw) =
+                observe_step(&injector0, obs.groups(), tc0.dp, base0);
+            obs.push_step(stage_obs, gated, bw);
+            if detector.observe(obs.ewma_iter_s(), base0) {
+                trigger_step = Some(step);
+                break;
+            }
+        }
+        let Some(trigger) = trigger_step else {
+            // no sustained drift: the run IS the static run (observed,
+            // so the report still carries the ring)
+            let mut tc = tc0.clone();
+            tc.observe = Some(spec.window);
+            let raw = trainer::train(&tc)?;
+            let mut report = TrainReport::from_raw(&tc0, raw);
+            report.replan_enabled = true;
+            return Ok(report);
+        };
+
+        // Re-plan under the measured overlay and calibrate the new tick
+        // against the observed one: tick1 = tick0 × t̂(new)/t̂(old),
+        // where t̂ is the overlay-evaluated model — the lens stretch is
+        // subsumed by the measured multipliers, so the ratio transfers
+        // the observation onto the new plan.
+        let profile =
+            MeasuredProfile::from_observations(&obs, self.model.n_layers(), 1);
+        let perf = self.perf_model().with_overlay(profile.clone());
+        let old_plan = self.equivalent_plan(artifact, n_rt, tc0.dp);
+        let t_old = perf.evaluate(&old_plan).t_iter;
+        ensure!(
+            t_old.is_finite() && t_old > 0.0,
+            "overlay evaluation of the running plan degenerated ({t_old})"
+        );
+        let outcomes = race(&perf, &self.plan_request(), &STRATEGIES)?;
+        let (strategy, cand) = best_candidate(&outcomes).context(
+            "re-planning found no feasible plan under the measured profile",
+        )?;
+        let plan1 = cand.plan.clone();
+        let tick1 = tick0 * (cand.perf.t_iter / t_old);
+        ensure!(
+            tick1.is_finite() && tick1 > 0.0,
+            "calibrated re-plan tick degenerated ({tick1})"
+        );
+
+        // Migration cost: the new generation's workers all cold-start
+        // (worst worker gates, same virtual-clock arithmetic the
+        // trainer charges).
+        let n_groups1 = plan1.n_stages().min(n_rt);
+        let (dp1, mu1) = (plan1.dp, plan1.mu());
+        let cold1 = plan1
+            .stage_tiers
+            .iter()
+            .map(|&t| self.platform.tier(t).cold_start_s)
+            .fold(self.platform.cold_start_s, f64::max);
+        let injector1 = crate::scenario::Injector::new(
+            &tc0.scenario,
+            tc0.scenario_seed,
+            n_groups1 * dp1,
+        );
+        let migration_s = (0..n_groups1 * dp1)
+            .map(|w| injector1.cold_start_s(w, 0, cold1))
+            .fold(0.0, f64::max);
+
+        let seg_a_steps = trigger + 1;
+        let rem = tc0.steps - seg_a_steps;
+        let adopted =
+            tick1 * rem as f64 + migration_s < tick0 * rem as f64;
+        let event = ReplanEvent {
+            trigger_step: trigger,
+            observed_iter_s: obs.ewma_iter_s(),
+            predicted_iter_s: base0,
+            stage_mults: obs.stage_mults(),
+            old_stages: n_rt,
+            old_dp: tc0.dp,
+            old_mu: tc0.mu,
+            new_stages: n_groups1,
+            new_dp: dp1,
+            new_mu: mu1,
+            strategy: strategy.to_string(),
+            new_iter_s: tick1,
+            migration_s,
+            adopted,
+        };
+
+        if !adopted {
+            // the decision is recorded but the run stays static — wall
+            // clock identical to a plain `train` of the same session
+            let mut tc = tc0.clone();
+            tc.observe = Some(spec.window);
+            let raw = trainer::train(&tc)?;
+            let mut report = TrainReport::from_raw(&tc0, raw);
+            report.replan_enabled = true;
+            report.replan = vec![event];
+            return Ok(report);
+        }
+
+        // Segment A: the old plan up to the boundary, quiescing into
+        // layer-addressed migration shards. Segment B: the new plan
+        // over the remaining steps, restoring (and consuming) those
+        // shards, on the calibrated tick. One shared store carries the
+        // parameters across.
+        let store = Arc::new(MemStore::new());
+        let mut tc_a = tc0.clone();
+        tc_a.steps = seg_a_steps;
+        tc_a.migrate_out = true;
+        tc_a.observe = Some(spec.window);
+        let mut raw = trainer::train_with_store(&tc_a, store.clone())?;
+
+        let mut tc_b = tc0.clone();
+        tc_b.dp = dp1;
+        tc_b.mu = mu1;
+        tc_b.steps = rem;
+        tc_b.step_offset = seg_a_steps;
+        tc_b.plan_generation = 1;
+        tc_b.layer_groups = even_groups(n_rt, n_groups1);
+        tc_b.calibrated_tick = true;
+        tc_b.virtual_iter_s = Some(tick1);
+        tc_b.cold_start_s = cold1;
+        tc_b.migrate_out = false;
+        tc_b.observe = None;
+        let raw_b = trainer::train_with_store(&tc_b, store.clone())?;
+
+        raw.logs.extend(raw_b.logs);
+        raw.restarts += raw_b.restarts;
+        raw.wall_s += raw_b.wall_s;
+        raw.workers.extend(raw_b.workers);
+        raw.store_put_gets = store.stats();
+        let mut report = TrainReport::from_raw(&tc0, raw);
+        report.replan_enabled = true;
+        report.replan = vec![event];
+        Ok(report)
+    }
+
     /// Evaluate the §5.1 baselines on this session's (unmerged) model.
     /// The parameter-server VM matches the platform, as in the paper
     /// (c5.9xlarge on AWS, r7.2xlarge on Alibaba, §5.7).
@@ -576,6 +823,35 @@ impl Experiment {
                 .collect(),
         })
     }
+}
+
+/// The fastest deduped candidate across every strategy's outcome:
+/// minimal `t_iter` (tie: minimal `c_iter`; further ties keep the first
+/// finder in registry order, so the pick is deterministic).
+fn best_candidate(
+    outcomes: &[PlanOutcome],
+) -> Option<(&str, &PlanCandidate)> {
+    let mut seen = std::collections::HashSet::new();
+    let mut best: Option<(&str, &PlanCandidate)> = None;
+    for out in outcomes {
+        for cand in &out.candidates {
+            if !seen.insert(PlanKey::of(&cand.plan)) {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((_, b)) => {
+                    cand.perf.t_iter < b.perf.t_iter
+                        || (cand.perf.t_iter == b.perf.t_iter
+                            && cand.perf.c_iter < b.perf.c_iter)
+                }
+            };
+            if better {
+                best = Some((out.strategy.as_str(), cand));
+            }
+        }
+    }
+    best
 }
 
 #[cfg(test)]

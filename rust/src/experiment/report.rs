@@ -14,6 +14,7 @@ use crate::pipeline::{rel_err_pct, SimResult};
 use crate::planner::{
     PlanPerf, RobustRank, RobustScore, RobustSpec, SloScore, SloSpec,
 };
+use crate::replan::ReplanEvent;
 use crate::serve::ServeOutcome;
 use crate::simcore::ScenarioSpec;
 use crate::trainer::IterLog;
@@ -623,8 +624,17 @@ pub struct TrainReport {
     /// The deterministic virtual tick (scenario runs); `None` = the
     /// wall-clock lifecycle.
     pub virtual_iter_s: Option<f64>,
-    /// Per-worker lifecycle + lens stats, in worker-id order.
+    /// Per-worker lifecycle + lens stats, in worker-id order (plan
+    /// generation 0 first, then each migrated generation's workers).
     pub workers: Vec<WorkerStats>,
+    /// `--replan` was active: the report carries the re-plan event log
+    /// (possibly empty — no sustained drift).
+    pub replan_enabled: bool,
+    /// Mid-run re-plan decisions, in trigger order (adopted or not).
+    pub replan: Vec<ReplanEvent>,
+    /// `train --plan` reset the artifact's embedded scenario lens to
+    /// deterministic and no explicit `--scenario` opted back in.
+    pub lens_reset: bool,
 }
 
 impl TrainReport {
@@ -633,6 +643,9 @@ impl TrainReport {
         raw: crate::trainer::TrainReport,
     ) -> Self {
         Self {
+            replan_enabled: false,
+            replan: Vec::new(),
+            lens_reset: false,
             steps: cfg.steps,
             dp: cfg.dp,
             mu: cfg.mu,
@@ -721,17 +734,53 @@ impl Report for TrainReport {
                 self.flaky_timeouts_total().to_string(),
             ]);
         }
+        if self.replan_enabled {
+            t.row([
+                "re-plan".to_string(),
+                match self.replan.len() {
+                    0 => "enabled (no sustained drift)".to_string(),
+                    n => format!("{n} event(s)"),
+                },
+            ]);
+        }
         let mut tables = vec![t];
+        if !self.replan.is_empty() {
+            let mut ev = Table::new("re-plan events").header([
+                "trigger", "observed", "predicted", "old plan", "new plan",
+                "strategy", "new tick", "migration", "adopted",
+            ]);
+            for e in &self.replan {
+                ev.row([
+                    format!("step {}", e.trigger_step),
+                    secs(e.observed_iter_s),
+                    secs(e.predicted_iter_s),
+                    format!(
+                        "{}st d={} μ={}",
+                        e.old_stages, e.old_dp, e.old_mu
+                    ),
+                    format!(
+                        "{}st d={} μ={}",
+                        e.new_stages, e.new_dp, e.new_mu
+                    ),
+                    e.strategy.clone(),
+                    secs(e.new_iter_s),
+                    secs(e.migration_s),
+                    if e.adopted { "yes".into() } else { "no".into() },
+                ]);
+            }
+            tables.push(ev);
+        }
         if !self.scenario.is_deterministic() {
             let mut lens = Table::new("scenario lens (per worker)").header([
-                "worker", "stage", "rep", "gens", "cold", "compute×",
-                "bandwidth×", "flaky",
+                "worker", "stage", "rep", "plan", "gens", "cold",
+                "compute×", "bandwidth×", "flaky",
             ]);
             for w in &self.workers {
                 lens.row([
                     w.worker_id.to_string(),
                     w.stage.to_string(),
                     w.replica.to_string(),
+                    w.plan_generation.to_string(),
                     w.generations.to_string(),
                     secs(w.cold_start_s),
                     format!("{:.3}", w.lens.compute_mult),
@@ -772,6 +821,10 @@ impl Report for TrainReport {
                                 ("worker", Json::Num(w.worker_id as f64)),
                                 ("stage", Json::Num(w.stage as f64)),
                                 ("replica", Json::Num(w.replica as f64)),
+                                (
+                                    "plan_generation",
+                                    Json::Num(w.plan_generation as f64),
+                                ),
                                 ("restarts", Json::Num(w.restarts as f64)),
                                 (
                                     "generations",
@@ -800,7 +853,7 @@ impl Report for TrainReport {
                 ),
             ));
         }
-        Json::obj(vec![
+        let mut fields = vec![
             ("steps", Json::Num(self.steps as f64)),
             ("dp", Json::Num(self.dp as f64)),
             ("mu", Json::Num(self.mu as f64)),
@@ -832,8 +885,52 @@ impl Report for TrainReport {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        if self.replan_enabled {
+            fields.push((
+                "replan",
+                Json::Arr(self.replan.iter().map(replan_event_json).collect()),
+            ));
+        }
+        if self.lens_reset {
+            fields.push(("lens_reset", Json::Bool(true)));
+        }
+        Json::obj(fields)
     }
+}
+
+/// One re-plan decision as rendered into the report JSON — the full
+/// audit trail of a migration (or of the choice not to migrate).
+fn replan_event_json(e: &ReplanEvent) -> Json {
+    Json::obj(vec![
+        ("trigger_step", Json::Num(e.trigger_step as f64)),
+        ("observed_iter_s", Json::Num(e.observed_iter_s)),
+        ("predicted_iter_s", Json::Num(e.predicted_iter_s)),
+        (
+            "stage_mults",
+            Json::Arr(e.stage_mults.iter().map(|&m| Json::Num(m)).collect()),
+        ),
+        (
+            "old",
+            Json::obj(vec![
+                ("stages", Json::Num(e.old_stages as f64)),
+                ("dp", Json::Num(e.old_dp as f64)),
+                ("mu", Json::Num(e.old_mu as f64)),
+            ]),
+        ),
+        (
+            "new",
+            Json::obj(vec![
+                ("stages", Json::Num(e.new_stages as f64)),
+                ("dp", Json::Num(e.new_dp as f64)),
+                ("mu", Json::Num(e.new_mu as f64)),
+            ]),
+        ),
+        ("strategy", Json::str(e.strategy.as_str())),
+        ("new_iter_s", Json::Num(e.new_iter_s)),
+        ("migration_s", Json::Num(e.migration_s)),
+        ("adopted", Json::Bool(e.adopted)),
+    ])
 }
 
 // ---------------------------------------------------------------------------

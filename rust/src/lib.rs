@@ -37,6 +37,7 @@ pub mod pipeline;
 pub mod planner;
 pub mod platform;
 pub mod profiler;
+pub mod replan;
 pub mod runtime;
 pub mod scenario;
 pub mod serve;

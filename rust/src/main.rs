@@ -110,13 +110,22 @@ COMMANDS:
             per seed: cold starts, stragglers, bandwidth jitter)
   train     [--plan plan.json] [--dp n] [--mu n]
             [--scenario <name>] [--seed <n>]
+            [--replan] [--replan-threshold x] [--replan-window k]
             real end-to-end training over the AOT artifacts (or the
             built-in model: --artifacts builtin:tiny); --plan derives
             dp/μ/sync/chunking from the artifact, flags are explicit
             overrides; --scenario threads the same seeded draws the
             simulator uses into the real path (per-worker storage
             lens, scenario-scaled cold starts, deterministic virtual
-            lifecycle — the report replays byte-identically per seed)
+            lifecycle — the report replays byte-identically per seed);
+            --replan adds elastic mid-run re-planning: when the
+            observed iteration time exceeds the prediction by the
+            threshold ratio (default 1.2) for k consecutive steps
+            (default 3), the planner re-races under the measured
+            profile and — if the new plan wins back its migration
+            cost — the run migrates at a function-generation boundary
+            via layer-addressed checkpoints (requires a --scenario;
+            the report logs every re-plan decision)
   serve     --plan plan.json --traffic <spec> [--seed <n>]
             [--duration <s>] [--batch-window-ms <ms>]
             [--idle-timeout-s <s>] [--max-instances <n>]
@@ -207,17 +216,34 @@ fn cmd_simulate(flags: &HashMap<String, String>, format: Format) -> Result<()> {
 fn cmd_train(flags: &HashMap<String, String>, format: Format) -> Result<()> {
     cli::check_plan_conflicts(flags)?;
     let overrides = cli::train_overrides_from_flags(flags)?;
-    let (exp, artifact) = if let Some(path) = flags.get("plan") {
+    let replan = cli::replan_from_flags(flags)?;
+    let (exp, artifact, lens_reset) = if let Some(path) = flags.get("plan") {
         // same lens policy as `simulate --plan`: a plain `train --plan`
-        // runs unperturbed, only explicit flags opt into the injector
+        // runs unperturbed, only explicit flags opt into the injector —
+        // and when that drops a lens the artifact embedded, the reset
+        // is announced instead of silent (notice on the table path,
+        // `lens_reset` in the JSON)
         let a = PlanArtifact::load(path)?;
+        let lens_reset = !a.config.scenario.is_deterministic()
+            && !flags.contains_key("scenario");
         let exp =
             Experiment::new(cli::lens_config_from_artifact(&a, flags)?)?;
-        (exp, Some(a))
+        (exp, Some(a), lens_reset)
     } else {
-        (Experiment::new(cli::config_from_flags(flags)?)?, None)
+        (Experiment::new(cli::config_from_flags(flags)?)?, None, false)
     };
-    let report = exp.train(artifact.as_ref(), &overrides)?;
+    if lens_reset && format == Format::Table {
+        eprintln!(
+            "note: the plan artifact embeds scenario lens {:?}; it was \
+             reset to deterministic (pass --scenario/--seed to opt back in)",
+            artifact.as_ref().unwrap().config.scenario.name()
+        );
+    }
+    let mut report = match &replan {
+        Some(spec) => exp.train_replan(artifact.as_ref(), &overrides, spec)?,
+        None => exp.train(artifact.as_ref(), &overrides)?,
+    };
+    report.lens_reset = lens_reset;
     report.print(format);
     Ok(())
 }

@@ -14,6 +14,7 @@ use std::sync::Mutex;
 use crate::collective::{sync_time_chunked, SyncAlgorithm};
 use crate::model::{ModelProfile, Plan};
 use crate::platform::PlatformSpec;
+use crate::replan::MeasuredProfile;
 
 /// Per-stage terms the model derives from a `(layer-range, tier)` pair:
 /// compute times at that tier plus the byte totals every communication
@@ -38,8 +39,8 @@ pub struct StageTerms {
 /// same lock.
 const CACHE_SHARDS: usize = 16;
 
-/// Memoization of [`StageTerms`] keyed by `(lo, hi, tier)`, with
-/// hit/miss counters.
+/// Memoization of [`StageTerms`] keyed by `(lo, hi, tier, overlay
+/// epoch)`, with hit/miss counters.
 ///
 /// `Optimizer::solve`'s B&B loop evaluates thousands of candidate plans
 /// whose stages repeat the same few hundred `(layer-range, tier)`
@@ -55,18 +56,26 @@ const CACHE_SHARDS: usize = 16;
 /// occasional double-miss). The map is **sharded by key hash** across
 /// [`CACHE_SHARDS`] mutexes — one global lock measurably serialized
 /// the racing strategies and the PR 8 worker pool.
+///
+/// The fourth key word is the **overlay epoch**: 0 for the profile-only
+/// model, and the [`MeasuredProfile::epoch`] of a mid-run re-plan
+/// otherwise. Distinct epochs occupy disjoint key spaces, so a warm
+/// cache can be reused across re-plans without ever serving a term
+/// computed under a stale measured profile.
 #[derive(Debug)]
 pub struct StageCache {
-    shards: [Mutex<HashMap<(usize, usize, usize), StageTerms>>; CACHE_SHARDS],
+    shards:
+        [Mutex<HashMap<(usize, usize, usize, u64), StageTerms>>; CACHE_SHARDS],
     hits: AtomicU64,
     misses: AtomicU64,
 }
 
-/// FNV-1a over the three key words — cheap, deterministic, and spreads
-/// the near-contiguous `(lo, hi, tier)` triples well across shards.
-fn shard_of(key: &(usize, usize, usize)) -> usize {
+/// FNV-1a over the four key words — cheap, deterministic, and spreads
+/// the near-contiguous `(lo, hi, tier, epoch)` tuples well across
+/// shards.
+fn shard_of(key: &(usize, usize, usize, u64)) -> usize {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for w in [key.0 as u64, key.1 as u64, key.2 as u64] {
+    for w in [key.0 as u64, key.1 as u64, key.2 as u64, key.3] {
         h ^= w;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
@@ -114,7 +123,7 @@ impl StageCache {
         }
     }
 
-    /// Distinct `(lo, hi, tier)` entries currently cached.
+    /// Distinct `(lo, hi, tier, epoch)` entries currently cached.
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
@@ -134,7 +143,7 @@ impl StageCache {
 
     fn get_or_insert(
         &self,
-        key: (usize, usize, usize),
+        key: (usize, usize, usize, u64),
         compute: impl FnOnce() -> StageTerms,
     ) -> StageTerms {
         let shard = &self.shards[shard_of(&key)];
@@ -189,6 +198,10 @@ pub struct PerfModel<'a> {
     /// synchronization model, so plans are costed with the same knob the
     /// trainer runs with.
     pub chunk_bytes: usize,
+    /// Measured mid-run overrides (compute multipliers + link
+    /// bandwidth) substituted for the profiled values during an elastic
+    /// re-plan. `None` = plan purely from the profile.
+    overlay: Option<MeasuredProfile>,
     /// Memoized per-stage terms — the planner hot loop's cache.
     cache: StageCache,
 }
@@ -200,6 +213,7 @@ impl<'a> PerfModel<'a> {
             platform,
             sync_alg: SyncAlgorithm::PipelinedScatterReduce,
             chunk_bytes: 0,
+            overlay: None,
             cache: StageCache::default(),
         }
     }
@@ -207,19 +221,57 @@ impl<'a> PerfModel<'a> {
     /// The memoized per-stage terms of the range `[lo, hi]` at `tier`.
     /// First lookup computes the O(range) layer sums; every further
     /// plan sharing the stage is an O(1) hit (counters on
-    /// [`PerfModel::cache`]).
+    /// [`PerfModel::cache`]). Under a measured overlay each layer's
+    /// compute is scaled by its observed multiplier, and the cache key
+    /// carries the overlay epoch so profile-only and per-re-plan terms
+    /// never mix.
     pub fn stage_terms(&self, lo: usize, hi: usize, tier: usize) -> StageTerms {
-        self.cache.get_or_insert((lo, hi, tier), || StageTerms {
-            fwd_s: self.model.range_fwd_s(lo, hi, tier),
-            bwd_s: self.model.range_bwd_s(lo, hi, tier),
-            param_bytes: self.model.range_param_bytes(lo, hi),
-            act_bytes: self.model.range_act_bytes(lo, hi),
+        let epoch = self.overlay_epoch();
+        self.cache.get_or_insert((lo, hi, tier, epoch), || {
+            let (fwd_s, bwd_s) = match &self.overlay {
+                None => (
+                    self.model.range_fwd_s(lo, hi, tier),
+                    self.model.range_bwd_s(lo, hi, tier),
+                ),
+                Some(o) => {
+                    let mut fwd = 0.0;
+                    let mut bwd = 0.0;
+                    for (l, layer) in
+                        self.model.layers[lo..=hi].iter().enumerate()
+                    {
+                        let m = o.mult_for_layer(lo + l);
+                        fwd += layer.fwd_s[tier] * m;
+                        bwd += layer.bwd_s[tier] * m;
+                    }
+                    (fwd, bwd)
+                }
+            };
+            StageTerms {
+                fwd_s,
+                bwd_s,
+                param_bytes: self.model.range_param_bytes(lo, hi),
+                act_bytes: self.model.range_act_bytes(lo, hi),
+            }
         })
     }
 
     /// Cache telemetry (hit/miss counters, entry count).
     pub fn cache(&self) -> &StageCache {
         &self.cache
+    }
+
+    /// Substitute measured per-layer compute multipliers and link
+    /// bandwidth for the profiled values (elastic re-planning). Epoch 0
+    /// is reserved for the profile-only model and is normalized up.
+    pub fn with_overlay(mut self, mut overlay: MeasuredProfile) -> Self {
+        overlay.epoch = overlay.epoch.max(1);
+        self.overlay = Some(overlay);
+        self
+    }
+
+    /// The active overlay's epoch (0 = profile-only, no overlay).
+    pub fn overlay_epoch(&self) -> u64 {
+        self.overlay.as_ref().map(|o| o.epoch).unwrap_or(0)
     }
 
     pub fn with_sync(mut self, alg: SyncAlgorithm) -> Self {
@@ -282,11 +334,17 @@ impl<'a> PerfModel<'a> {
         let has_comm = !compute_only && (s_cnt > 1 || plan.dp > 1);
         let beta = if has_comm { p.beta } else { 1.0 };
 
+        // measured link bandwidth substitutes for the profiled value
+        // under an overlay (a straggling NIC slows every transfer term)
+        let link_mult = match (&self.overlay, compute_only) {
+            (Some(o), false) => o.bandwidth_mult,
+            _ => 1.0,
+        };
         let bw = |tier: usize| -> f64 {
             if compute_only {
                 f64::INFINITY
             } else {
-                p.effective_bandwidth(tier, n_workers)
+                p.effective_bandwidth(tier, n_workers) * link_mult
             }
         };
 
@@ -575,6 +633,82 @@ mod tests {
         assert!(pm.cache().is_empty());
         assert_eq!((pm.cache().hits(), pm.cache().misses()), (0, 0));
         assert_eq!(pm.cache().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn measured_overlay_scales_compute_and_bandwidth() {
+        let (m, p) = fixture();
+        let plan = Plan {
+            cuts: vec![8],
+            dp: 2,
+            stage_tiers: vec![7, 7],
+            n_micro_global: 16,
+        };
+        let base = PerfModel::new(&m, &p).evaluate(&plan);
+        // a 2x compute slowdown on every layer at least doubles compute
+        let slow = MeasuredProfile {
+            epoch: 1,
+            compute_mult: vec![2.0; m.n_layers()],
+            bandwidth_mult: 1.0,
+        };
+        let slowed =
+            PerfModel::new(&m, &p).with_overlay(slow).evaluate(&plan);
+        assert!(
+            (slowed.compute_s - 2.0 * base.compute_s).abs() < 1e-9,
+            "{} vs {}",
+            slowed.compute_s,
+            base.compute_s
+        );
+        assert!(slowed.t_iter > base.t_iter);
+        // halved link bandwidth slows sync, leaves compute untouched
+        let slow_net = MeasuredProfile {
+            epoch: 1,
+            compute_mult: vec![1.0; m.n_layers()],
+            bandwidth_mult: 0.5,
+        };
+        let netted =
+            PerfModel::new(&m, &p).with_overlay(slow_net).evaluate(&plan);
+        assert!((netted.compute_s - base.compute_s).abs() < 1e-9);
+        assert!(netted.sync_s > base.sync_s);
+    }
+
+    #[test]
+    fn overlay_epochs_never_leak_stale_cache_entries() {
+        let (m, p) = fixture();
+        let plan = Plan {
+            cuts: vec![5, 11],
+            dp: 2,
+            stage_tiers: vec![4, 5, 7],
+            n_micro_global: 16,
+        };
+        let pm = PerfModel::new(&m, &p);
+        let base = pm.evaluate(&plan);
+        // warm the cache under an epoch-1 overlay with a 3x slowdown
+        let pm_slow = pm.clone().with_overlay(MeasuredProfile {
+            epoch: 1,
+            compute_mult: vec![3.0; m.n_layers()],
+            bandwidth_mult: 1.0,
+        });
+        let slow = pm_slow.evaluate(&plan);
+        assert!(slow.t_iter > base.t_iter);
+        // an epoch-2 identity overlay over the SAME warm cache must
+        // reproduce the profile-only result exactly — stale epoch-1
+        // terms cannot leak across the epoch boundary
+        let pm_back = pm_slow.clone().with_overlay(MeasuredProfile {
+            epoch: 2,
+            compute_mult: vec![1.0; m.n_layers()],
+            bandwidth_mult: 1.0,
+        });
+        let back = pm_back.evaluate(&plan);
+        assert_eq!(back, base);
+        // epoch 0 is reserved: with_overlay normalizes it up so an
+        // overlay can never collide with the profile-only key space
+        let pm_zero = pm.clone().with_overlay(MeasuredProfile {
+            epoch: 0,
+            compute_mult: vec![2.0; m.n_layers()],
+            bandwidth_mult: 1.0,
+        });
+        assert_eq!(pm_zero.overlay_epoch(), 1);
     }
 
     #[test]

@@ -1,0 +1,508 @@
+//! Elastic mid-run re-planning (SMLT, arxiv 2205.01853): the drift
+//! observation layer, the measured-profile overlay fed back into the
+//! planner, and the layer-addressed checkpoint format that lets a
+//! *different* partitioning restore a run's parameters.
+//!
+//! Everything here lives on the deterministic virtual clock: the
+//! observed per-stage times are the exact lens-stretched durations the
+//! trainer charges (`Injector::iter_virtual_s`), so a re-plan decision
+//! is a pure function of `(scenario, seed, plan)` and replays
+//! byte-identically. The migration loop itself is driven by
+//! [`Experiment::train_replan`](crate::experiment::Experiment), which
+//! splits a run into per-plan segments over one shared store:
+//!
+//! ```text
+//! observe -> drift? -> quiesce at the generation boundary
+//!         -> checkpoint layer shards (ckpt/g{gen}/l{layer})
+//!         -> re-plan under the MeasuredProfile overlay
+//!         -> re-partition workers -> restore shards -> continue
+//! ```
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::scenario::Injector;
+
+/// Smoothing factor of the iteration-time EWMA (recent-biased: the
+/// detector should react within a handful of steps, not an epoch).
+pub const EWMA_ALPHA: f64 = 0.5;
+
+/// User-facing re-planning knobs (`train --replan --replan-threshold
+/// --replan-window`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplanSpec {
+    /// Drift trigger ratio: re-plan when the EWMA of the observed
+    /// iteration time exceeds `threshold ×` the plan's prediction.
+    pub threshold: f64,
+    /// Consecutive drifting steps required before triggering (K), and
+    /// the capacity of the observation ring.
+    pub window: usize,
+}
+
+impl Default for ReplanSpec {
+    fn default() -> Self {
+        Self { threshold: 1.2, window: 3 }
+    }
+}
+
+impl ReplanSpec {
+    pub fn validate(&self) -> Result<()> {
+        if !self.threshold.is_finite() || self.threshold <= 1.0 {
+            bail!(
+                "--replan-threshold must be a finite ratio > 1.0 (got {})",
+                self.threshold
+            );
+        }
+        if self.window == 0 {
+            bail!("--replan-window must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// One pipeline stage's observed times for one step (virtual seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageObs {
+    pub fwd_s: f64,
+    pub bwd_s: f64,
+    pub sync_s: f64,
+}
+
+impl StageObs {
+    pub fn total_s(&self) -> f64 {
+        self.fwd_s + self.bwd_s + self.sync_s
+    }
+}
+
+/// Ring of per-stage observed fwd/bwd/sync seconds plus an EWMA of the
+/// pipeline-gated iteration time — the drift detector's input and the
+/// measured-profile's source. Recorded by the coordinator when
+/// `TrainConfig::observe` is set (virtual-clock runs only).
+#[derive(Debug, Clone)]
+pub struct StageObservations {
+    /// The runtime layer range `[lo, hi)` each pipeline stage executes.
+    groups: Vec<(usize, usize)>,
+    /// Total runtime (manifest) layers across all groups.
+    n_layers: usize,
+    /// Ring capacity (= the drift window K).
+    window: usize,
+    /// The plan's predicted iteration time the observations are
+    /// measured against.
+    predicted_iter_s: f64,
+    ring: VecDeque<Vec<StageObs>>,
+    ewma_iter_s: f64,
+    steps_seen: usize,
+    /// Worst (smallest) bandwidth lens multiplier seen on any worker.
+    min_bandwidth_mult: f64,
+}
+
+impl StageObservations {
+    pub fn new(
+        groups: Vec<(usize, usize)>,
+        n_layers: usize,
+        window: usize,
+        predicted_iter_s: f64,
+    ) -> Self {
+        Self {
+            groups,
+            n_layers,
+            window: window.max(1),
+            predicted_iter_s,
+            ring: VecDeque::new(),
+            ewma_iter_s: predicted_iter_s,
+            steps_seen: 0,
+            min_bandwidth_mult: 1.0,
+        }
+    }
+
+    /// Record one step: per-stage observed times, the pipeline-gated
+    /// iteration time, and the worst bandwidth multiplier of the step.
+    pub fn push_step(
+        &mut self,
+        stage_obs: Vec<StageObs>,
+        gated_iter_s: f64,
+        bandwidth_mult: f64,
+    ) {
+        if self.ring.len() == self.window {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(stage_obs);
+        self.ewma_iter_s = if self.steps_seen == 0 {
+            gated_iter_s
+        } else {
+            EWMA_ALPHA * gated_iter_s + (1.0 - EWMA_ALPHA) * self.ewma_iter_s
+        };
+        self.steps_seen += 1;
+        if bandwidth_mult.is_finite() && bandwidth_mult > 0.0 {
+            self.min_bandwidth_mult = self.min_bandwidth_mult.min(bandwidth_mult);
+        }
+    }
+
+    pub fn groups(&self) -> &[(usize, usize)] {
+        &self.groups
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn steps_seen(&self) -> usize {
+        self.steps_seen
+    }
+
+    pub fn predicted_iter_s(&self) -> f64 {
+        self.predicted_iter_s
+    }
+
+    pub fn ewma_iter_s(&self) -> f64 {
+        self.ewma_iter_s
+    }
+
+    pub fn min_bandwidth_mult(&self) -> f64 {
+        self.min_bandwidth_mult
+    }
+
+    /// Mean observed-over-predicted compute multiplier per stage, from
+    /// the ring's window. The prediction apportions the plan's iteration
+    /// uniformly across stages (the same convention `observe_step`
+    /// records with, so an identity lens yields exactly 1.0).
+    pub fn stage_mults(&self) -> Vec<f64> {
+        let n = self.groups.len();
+        let share = self.predicted_iter_s / n as f64;
+        let mut mults = vec![1.0; n];
+        if self.ring.is_empty() || share <= 0.0 {
+            return mults;
+        }
+        for (g, m) in mults.iter_mut().enumerate() {
+            let mean: f64 = self
+                .ring
+                .iter()
+                .map(|step| step[g].total_s())
+                .sum::<f64>()
+                / self.ring.len() as f64;
+            *m = mean / share;
+        }
+        mults
+    }
+}
+
+/// Sustained-drift detector: fires once the (EWMA-smoothed) observed
+/// iteration time has exceeded `threshold × predicted` for `window`
+/// consecutive steps.
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    threshold: f64,
+    window: usize,
+    consecutive: usize,
+}
+
+impl DriftDetector {
+    pub fn new(spec: &ReplanSpec) -> Self {
+        Self {
+            threshold: spec.threshold,
+            window: spec.window.max(1),
+            consecutive: 0,
+        }
+    }
+
+    /// Feed one step's observation; returns `true` when the drift has
+    /// been sustained for the full window (trigger).
+    pub fn observe(&mut self, observed_iter_s: f64, predicted_iter_s: f64) -> bool {
+        if observed_iter_s > self.threshold * predicted_iter_s {
+            self.consecutive += 1;
+        } else {
+            self.consecutive = 0;
+        }
+        self.consecutive >= self.window
+    }
+}
+
+/// Measured overrides the planner's `PerfModel` substitutes for the
+/// profiled values: per-(merged)-layer compute multipliers and a global
+/// link-bandwidth multiplier, tagged with an overlay `epoch` so the
+/// stage cache can never serve a stale entry across re-plans (epoch 0
+/// is reserved for the profile-only model).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MeasuredProfile {
+    pub epoch: u64,
+    /// Observed/profiled compute ratio per planner layer (1.0 = on
+    /// profile). Layers beyond the vector default to 1.0.
+    pub compute_mult: Vec<f64>,
+    /// Observed/profiled link bandwidth ratio (< 1.0 = slower links).
+    pub bandwidth_mult: f64,
+}
+
+impl MeasuredProfile {
+    /// Project runtime-stage observations onto the planner's (merged)
+    /// layer axis: planner layer `l` maps to the runtime layer at the
+    /// same relative depth, and inherits its group's measured
+    /// multiplier.
+    pub fn from_observations(
+        obs: &StageObservations,
+        n_planner_layers: usize,
+        epoch: u64,
+    ) -> Self {
+        let stage_mults = obs.stage_mults();
+        let n_rt = obs.n_layers().max(1);
+        let mut compute_mult = Vec::with_capacity(n_planner_layers);
+        for l in 0..n_planner_layers {
+            let rl = (l * n_rt) / n_planner_layers.max(1);
+            let g = obs
+                .groups()
+                .iter()
+                .position(|&(lo, hi)| rl >= lo && rl < hi)
+                .unwrap_or(0);
+            compute_mult.push(stage_mults.get(g).copied().unwrap_or(1.0));
+        }
+        Self {
+            epoch: epoch.max(1),
+            compute_mult,
+            bandwidth_mult: obs.min_bandwidth_mult(),
+        }
+    }
+
+    pub fn mult_for_layer(&self, layer: usize) -> f64 {
+        self.compute_mult.get(layer).copied().unwrap_or(1.0)
+    }
+}
+
+/// One recorded re-plan decision, surfaced verbatim in `TrainReport`
+/// (table + JSON) so every migration is auditable and replayable.
+#[derive(Debug, Clone)]
+pub struct ReplanEvent {
+    /// Global step after which the migration boundary was placed.
+    pub trigger_step: usize,
+    /// EWMA-observed iteration time at the trigger (virtual seconds).
+    pub observed_iter_s: f64,
+    /// The old plan's predicted iteration time.
+    pub predicted_iter_s: f64,
+    /// Measured per-stage compute multipliers at the trigger.
+    pub stage_mults: Vec<f64>,
+    pub old_stages: usize,
+    pub old_dp: usize,
+    pub old_mu: usize,
+    pub new_stages: usize,
+    pub new_dp: usize,
+    pub new_mu: usize,
+    /// Winning strategy of the overlay re-plan race.
+    pub strategy: String,
+    /// Calibrated post-migration iteration time (virtual seconds).
+    pub new_iter_s: f64,
+    /// Migration cost charged on the virtual clock (worst worker
+    /// cold start of the new generation).
+    pub migration_s: f64,
+    /// Whether the new plan was adopted (it must win back its migration
+    /// cost over the remaining steps) or the run continued statically.
+    pub adopted: bool,
+}
+
+/// The deterministic per-step observation, derived from the same seeded
+/// lenses that drive the trainer's virtual clock: each stage's observed
+/// time is its uniform share of the base iteration stretched by the
+/// slowest lens among its replicas, and the gated iteration time is the
+/// global pipeline tick (`Injector::max_iter_virtual_s`). Returns
+/// `(per-stage observations, gated iteration seconds, min bandwidth
+/// multiplier across workers)`.
+pub fn observe_step(
+    injector: &Injector,
+    groups: &[(usize, usize)],
+    dp: usize,
+    base_iter_s: f64,
+) -> (Vec<StageObs>, f64, f64) {
+    let n_groups = groups.len().max(1);
+    let share = base_iter_s / n_groups as f64;
+    let mut stage_obs = Vec::with_capacity(n_groups);
+    let mut min_bw = 1.0f64;
+    for g in 0..groups.len() {
+        let mut mult = 1.0f64;
+        for r in 0..dp {
+            let lens = injector.worker(g * dp + r);
+            mult = mult.max(lens.compute_mult);
+            if lens.bandwidth_mult.is_finite() && lens.bandwidth_mult > 0.0 {
+                min_bw = min_bw.min(lens.bandwidth_mult);
+            }
+        }
+        let t = share * mult;
+        // fwd/bwd split by the 1:2 compute convention of the zoo
+        // profiles; sync time is folded into the gated tick, not
+        // attributed per stage.
+        stage_obs.push(StageObs {
+            fwd_s: t / 3.0,
+            bwd_s: 2.0 * t / 3.0,
+            sync_s: 0.0,
+        });
+    }
+    (stage_obs, injector.max_iter_virtual_s(base_iter_s), min_bw)
+}
+
+// ---- layer groups ------------------------------------------------------
+
+/// The historical 1:1 grouping: one runtime layer per pipeline stage.
+pub fn identity_groups(n_layers: usize) -> Vec<(usize, usize)> {
+    (0..n_layers).map(|i| (i, i + 1)).collect()
+}
+
+/// Split `n_layers` runtime layers into `n_groups` contiguous groups as
+/// evenly as possible (earlier groups take the remainder).
+pub fn even_groups(n_layers: usize, n_groups: usize) -> Vec<(usize, usize)> {
+    let k = n_groups.clamp(1, n_layers.max(1));
+    let base = n_layers / k;
+    let rem = n_layers % k;
+    let mut groups = Vec::with_capacity(k);
+    let mut lo = 0;
+    for g in 0..k {
+        let len = base + usize::from(g < rem);
+        groups.push((lo, lo + len));
+        lo += len;
+    }
+    groups
+}
+
+/// A valid grouping is a contiguous, non-empty partition of
+/// `0..n_layers`.
+pub fn validate_groups(groups: &[(usize, usize)], n_layers: usize) -> Result<()> {
+    if groups.is_empty() {
+        bail!("layer grouping is empty");
+    }
+    let mut expect = 0;
+    for &(lo, hi) in groups {
+        if lo != expect || hi <= lo {
+            bail!(
+                "layer grouping {groups:?} is not a contiguous partition of \
+                 0..{n_layers}"
+            );
+        }
+        expect = hi;
+    }
+    if expect != n_layers {
+        bail!("layer grouping {groups:?} does not cover 0..{n_layers}");
+    }
+    Ok(())
+}
+
+// ---- layer-addressed checkpoint keys -----------------------------------
+
+/// Migration shard: one layer's parameters at a plan-generation
+/// boundary, written once (by replica 0 of the owning stage) and
+/// consumed once by the next generation's leader.
+pub fn migration_key(generation: u64, layer: usize) -> String {
+    format!("ckpt/g{generation}/l{layer}")
+}
+
+/// Intra-generation restart shard: one layer's parameters for one
+/// replica's checkpoint/restart cycle (lifetime expiry). Consumed on
+/// restore like every other checkpoint.
+pub fn restart_key(generation: u64, layer: usize, replica: usize) -> String {
+    format!("ckpt/g{generation}/l{layer}/r{replica}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detector_requires_sustained_drift() {
+        let spec = ReplanSpec { threshold: 1.2, window: 3 };
+        let mut det = DriftDetector::new(&spec);
+        assert!(!det.observe(1.5, 1.0));
+        assert!(!det.observe(1.5, 1.0));
+        // a single on-prediction step resets the streak
+        assert!(!det.observe(1.0, 1.0));
+        assert!(!det.observe(1.5, 1.0));
+        assert!(!det.observe(1.5, 1.0));
+        assert!(det.observe(1.5, 1.0));
+    }
+
+    #[test]
+    fn detector_ignores_drift_below_threshold() {
+        let mut det = DriftDetector::new(&ReplanSpec::default());
+        for _ in 0..10 {
+            assert!(!det.observe(1.19, 1.0));
+        }
+    }
+
+    #[test]
+    fn even_groups_partition_all_layers() {
+        for n_layers in 1..12 {
+            for n_groups in 1..8 {
+                let g = even_groups(n_layers, n_groups);
+                validate_groups(&g, n_layers).unwrap();
+                assert_eq!(g.len(), n_groups.min(n_layers));
+            }
+        }
+    }
+
+    #[test]
+    fn validate_groups_rejects_gaps_and_overlaps() {
+        assert!(validate_groups(&[(0, 1), (2, 3)], 3).is_err());
+        assert!(validate_groups(&[(0, 2), (1, 3)], 3).is_err());
+        assert!(validate_groups(&[(0, 2)], 3).is_err());
+        assert!(validate_groups(&[], 3).is_err());
+        validate_groups(&identity_groups(3), 3).unwrap();
+    }
+
+    #[test]
+    fn observations_track_ewma_and_stage_mults() {
+        let groups = identity_groups(3);
+        let mut obs = StageObservations::new(groups, 3, 3, 1.0);
+        let step = vec![
+            StageObs { fwd_s: 1.0 / 9.0, bwd_s: 2.0 / 9.0, sync_s: 0.0 },
+            StageObs { fwd_s: 1.0 / 9.0, bwd_s: 2.0 / 9.0, sync_s: 0.0 },
+            StageObs { fwd_s: 2.0 / 9.0, bwd_s: 4.0 / 9.0, sync_s: 0.0 },
+        ];
+        for _ in 0..4 {
+            obs.push_step(step.clone(), 2.0, 0.5);
+        }
+        // ring is capped at the window
+        assert_eq!(obs.steps_seen(), 4);
+        let mults = obs.stage_mults();
+        assert!((mults[0] - 1.0).abs() < 1e-9);
+        assert!((mults[2] - 2.0).abs() < 1e-9, "{mults:?}");
+        // constant stream: EWMA converges onto the observation
+        assert!((obs.ewma_iter_s() - 2.0).abs() < 1e-6);
+        assert!((obs.min_bandwidth_mult() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measured_profile_projects_groups_onto_planner_layers() {
+        // 3 runtime layers grouped [0,2) + [2,3); 6 planner layers
+        let mut obs =
+            StageObservations::new(vec![(0, 2), (2, 3)], 3, 2, 1.0);
+        obs.push_step(
+            vec![
+                StageObs { fwd_s: 0.5 / 3.0, bwd_s: 1.0 / 3.0, sync_s: 0.0 },
+                StageObs { fwd_s: 1.0 / 3.0, bwd_s: 2.0 / 3.0, sync_s: 0.0 },
+            ],
+            2.0,
+            1.0,
+        );
+        let p = MeasuredProfile::from_observations(&obs, 6, 1);
+        // planner layers 0..4 map to runtime layers 0..2 (group 0,
+        // mult 1.0), layers 4..6 to runtime layer 2 (group 1, mult 2.0)
+        assert_eq!(p.compute_mult.len(), 6);
+        assert!((p.mult_for_layer(0) - 1.0).abs() < 1e-9);
+        assert!((p.mult_for_layer(3) - 1.0).abs() < 1e-9);
+        assert!((p.mult_for_layer(4) - 2.0).abs() < 1e-9);
+        assert!((p.mult_for_layer(5) - 2.0).abs() < 1e-9);
+        // epoch 0 is reserved: normalized up
+        let p0 = MeasuredProfile::from_observations(&obs, 6, 0);
+        assert_eq!(p0.epoch, 1);
+    }
+
+    #[test]
+    fn replan_spec_validation() {
+        assert!(ReplanSpec::default().validate().is_ok());
+        assert!(ReplanSpec { threshold: 1.0, window: 3 }.validate().is_err());
+        assert!(ReplanSpec { threshold: f64::NAN, window: 3 }
+            .validate()
+            .is_err());
+        assert!(ReplanSpec { threshold: 1.5, window: 0 }.validate().is_err());
+    }
+
+    #[test]
+    fn checkpoint_keys_are_layer_addressed() {
+        assert_eq!(migration_key(0, 2), "ckpt/g0/l2");
+        assert_eq!(restart_key(3, 1, 4), "ckpt/g3/l1/r4");
+    }
+}

@@ -69,6 +69,35 @@ pub struct TrainConfig {
     /// whenever a scenario is active, seeding it with the plan's
     /// predicted `t_iter`.
     pub virtual_iter_s: Option<f64>,
+    /// Contiguous manifest-layer range `[lo, hi)` each pipeline stage
+    /// executes. Empty = the historical 1:1 grouping (one manifest
+    /// layer per stage). An elastic migration re-groups layers here so
+    /// a new plan's stage count can differ from the manifest's.
+    pub layer_groups: Vec<(usize, usize)>,
+    /// Global step number of this segment's first local step. Elastic
+    /// re-planning splits a run into per-plan segments; the offset
+    /// keeps the corpus schedule, boundary keys and report step numbers
+    /// continuous across the migration.
+    pub step_offset: usize,
+    /// Plan generation of this segment (0 = the initial plan). Key
+    /// namespace of the layer-addressed checkpoint shards; a segment
+    /// with `plan_generation > 0` restores the previous generation's
+    /// migration shards before spawning workers (and consumes them).
+    pub plan_generation: u64,
+    /// When set, `virtual_iter_s` is already the calibrated
+    /// pipeline-gated tick (observed-time based): the per-step virtual
+    /// advance uses it verbatim instead of re-stretching the base by
+    /// the scenario lens. Post-migration segments run calibrated —
+    /// their tick came from measured times, which subsume the lens.
+    pub calibrated_tick: bool,
+    /// Quiesce for migration at the end of this segment: after the last
+    /// step, replica 0 of every stage writes its layers' parameters as
+    /// migration shards (`ckpt/g{plan_generation}/l{layer}`).
+    pub migrate_out: bool,
+    /// Record a [`StageObservations`](crate::replan::StageObservations)
+    /// ring of the given window into the report (virtual-clock,
+    /// non-calibrated runs only) — the drift detector's input.
+    pub observe: Option<usize>,
 }
 
 impl TrainConfig {
@@ -89,6 +118,12 @@ impl TrainConfig {
             scenario_seed: 0,
             cold_start_s: 0.01,
             virtual_iter_s: None,
+            layer_groups: Vec::new(),
+            step_offset: 0,
+            plan_generation: 0,
+            calibrated_tick: false,
+            migrate_out: false,
+            observe: None,
         }
     }
 
@@ -114,6 +149,9 @@ pub struct TrainReport {
     pub store_put_gets: (u64, u64),
     /// Per-worker lifecycle/lens stats, sorted by worker id.
     pub workers: Vec<WorkerStats>,
+    /// The coordinator's per-stage observation ring (recorded when
+    /// `TrainConfig::observe` is set on a virtual-clock run).
+    pub observations: Option<crate::replan::StageObservations>,
 }
 
 impl TrainReport {
