@@ -606,6 +606,73 @@ pub fn table3() -> Vec<Table> {
     vec![t]
 }
 
+/// Fleet demo (`funcpipe fig fleet` — no paper counterpart): a mixed
+/// multi-tenant roster of two training jobs and one serving deployment,
+/// all ResNet101 plans, contending for ONE shared AWS platform under
+/// the cold-start-storm lens. Shows queueing (staggered submits),
+/// cross-tenant bandwidth contention and per-tenant accounting through
+/// the same [`FleetReport`](crate::experiment::FleetReport) path the
+/// `fleet` subcommand renders; deterministic per (roster, scenario,
+/// seed) like every other table here.
+pub fn fleet_demo() -> Vec<Table> {
+    use crate::config::ExperimentConfig;
+    use crate::experiment::{Experiment, Report};
+    use crate::fleet::{FleetSpec, TenantKind, TenantSpec};
+    use crate::simcore::ScenarioSpec;
+
+    let artifact = |batch: usize| {
+        let cfg = ExperimentConfig {
+            model: "resnet101".into(),
+            global_batch: batch,
+            merge_layers: 4,
+            ..ExperimentConfig::default()
+        };
+        Experiment::new(cfg)
+            .expect("session")
+            .plan()
+            .expect("plan")
+            .recommended()
+            .expect("recommended plan")
+            .artifact
+            .clone()
+    };
+    let a16 = artifact(16);
+    let a64 = artifact(64);
+    let spec = FleetSpec {
+        tenants: vec![
+            TenantSpec {
+                name: "train-a".into(),
+                kind: TenantKind::Train { steps: 30 },
+                artifact: a16.clone(),
+                submit_s: 0.0,
+            },
+            TenantSpec {
+                name: "train-b".into(),
+                kind: TenantKind::Train { steps: 20 },
+                artifact: a64,
+                submit_s: 5.0,
+            },
+            TenantSpec {
+                name: "serve-a".into(),
+                kind: TenantKind::Serve {
+                    traffic: TrafficSpec::parse("poisson:600")
+                        .expect("traffic spec"),
+                    duration_s: 20.0,
+                    seed: 7,
+                },
+                artifact: a16,
+                submit_s: 10.0,
+            },
+        ],
+        max_concurrency: None,
+    };
+    let scenario =
+        ScenarioSpec::parse("cold-start-storm").expect("scenario spec");
+    Experiment::fleet(&spec, &scenario, 7)
+        .expect("fleet run")
+        .to_tables()
+}
+
 /// Quick sanity used by tests: the headline Fig 5 comparison for one case.
 pub fn headline_comparison(
     name: &str,

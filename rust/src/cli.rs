@@ -84,6 +84,7 @@ pub fn flags_for(cmd: &str) -> Option<Vec<&'static str>> {
             "replan",
             "replan-threshold",
             "replan-window",
+            "replan-max",
         ],
         "baseline" => &[],
         // serve is artifact-driven like `simulate --plan`: the frozen
@@ -109,6 +110,12 @@ pub fn flags_for(cmd: &str) -> Option<Vec<&'static str>> {
             return Some(vec!["artifacts", "format", "scenario", "seed"])
         }
         "fig" => return Some(vec!["format"]),
+        // fleet is config-file-driven: every tenant embeds its own
+        // session config via its plan artifact, so the config-shaping
+        // flags are deliberately absent
+        "fleet" => {
+            return Some(vec!["config", "scenario", "seed", "format"])
+        }
         _ => return None,
     };
     let mut all = extra.to_vec();
@@ -308,6 +315,18 @@ pub fn apply_scenario_flags(
     Ok(())
 }
 
+/// The standalone scenario lens for subcommands that have no
+/// [`ExperimentConfig`] of their own (`fleet`): same parse,
+/// bound-check and seed-without-scenario rules as
+/// [`apply_scenario_flags`], defaulting to (deterministic, 0).
+pub fn scenario_from_flags(
+    flags: &HashMap<String, String>,
+) -> Result<(ScenarioSpec, u64)> {
+    let mut cfg = ExperimentConfig::default();
+    apply_scenario_flags(&mut cfg, flags)?;
+    Ok((cfg.scenario, cfg.seed))
+}
+
 /// Parse and bound-check a `--seed` value. ONE validator for every
 /// flag surface that accepts a seed (the scenario lens on
 /// `simulate|train|profile` — including the `--plan` paths, which skip
@@ -371,7 +390,8 @@ pub fn train_overrides_from_flags(
     Ok(ov)
 }
 
-/// `train --replan [--replan-threshold x] [--replan-window k]` → the
+/// `train --replan [--replan-threshold x] [--replan-window k]
+/// [--replan-max n]` → the
 /// elastic re-planning spec. The strict-flag contract applies: the
 /// tuning knobs without `--replan` itself would be silent no-ops and
 /// are rejected, mirroring `--robust-seeds` without `--robust-scenario`.
@@ -381,10 +401,11 @@ pub fn replan_from_flags(
     if !flags.contains_key("replan") {
         if flags.contains_key("replan-threshold")
             || flags.contains_key("replan-window")
+            || flags.contains_key("replan-max")
         {
             bail!(
-                "--replan-threshold/--replan-window have no effect without \
-                 --replan"
+                "--replan-threshold/--replan-window/--replan-max have no \
+                 effect without --replan"
             );
         }
         return Ok(None);
@@ -395,6 +416,9 @@ pub fn replan_from_flags(
     }
     if let Some(v) = flags.get("replan-window") {
         spec.window = v.parse().context("--replan-window")?;
+    }
+    if let Some(v) = flags.get("replan-max") {
+        spec.max_replans = v.parse().context("--replan-max")?;
     }
     spec.validate()?;
     Ok(Some(spec))
@@ -1037,6 +1061,8 @@ mod tests {
                 "1.5",
                 "--replan-window",
                 "2",
+                "--replan-max",
+                "2",
                 "--scenario",
                 "straggler",
             ]),
@@ -1046,6 +1072,7 @@ mod tests {
         let spec = replan_from_flags(&flags).unwrap().unwrap();
         assert_eq!(spec.threshold, 1.5);
         assert_eq!(spec.window, 2);
+        assert_eq!(spec.max_replans, 2);
         // defaults when only the switch is given
         let flags =
             parse_flags("train", &argv(&["--replan"]), &allowed).unwrap();
@@ -1064,6 +1091,7 @@ mod tests {
         for bad in [
             vec!["--replan-threshold", "1.5"],
             vec!["--replan-window", "2"],
+            vec!["--replan-max", "2"],
         ] {
             let flags = parse_flags("train", &argv(&bad), &allowed).unwrap();
             assert!(replan_from_flags(&flags).is_err(), "{bad:?} accepted");
@@ -1073,6 +1101,8 @@ mod tests {
             vec!["--replan", "--replan-threshold", "1.0"],
             vec!["--replan", "--replan-threshold", "abc"],
             vec!["--replan", "--replan-window", "0"],
+            vec!["--replan", "--replan-max", "0"],
+            vec!["--replan", "--replan-max", "abc"],
         ] {
             let flags = parse_flags("train", &argv(&bad), &allowed).unwrap();
             assert!(replan_from_flags(&flags).is_err(), "{bad:?} accepted");
@@ -1083,6 +1113,40 @@ mod tests {
             assert!(
                 parse_flags(cmd, &argv(&["--replan"]), &allowed).is_err(),
                 "{cmd} accepted --replan"
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_allowlist_is_strict() {
+        let allowed = flags_for("fleet").unwrap();
+        let flags = parse_flags(
+            "fleet",
+            &argv(&[
+                "--config",
+                "fleet.json",
+                "--scenario",
+                "cold-start-storm",
+                "--seed",
+                "7",
+                "--format",
+                "json",
+            ]),
+            &allowed,
+        )
+        .unwrap();
+        assert_eq!(flags.get("config").unwrap(), "fleet.json");
+        // config-shaping and artifact flags are deliberately absent:
+        // the fleet config file owns the whole tenant roster
+        for bad in [
+            vec!["--model", "resnet101"],
+            vec!["--plan", "p.json"],
+            vec!["--batch", "16"],
+            vec!["--traffic", "poisson:600"],
+        ] {
+            assert!(
+                parse_flags("fleet", &argv(&bad), &allowed).is_err(),
+                "{bad:?} accepted"
             );
         }
     }

@@ -24,9 +24,9 @@ pub mod report;
 
 pub use artifact::{PlanArtifact, PLAN_SCHEMA_VERSION};
 pub use report::{
-    BaselineReport, BaselineRow, Format, PlanCompareReport, PlanPoint,
-    PlanReport, ProfileReport, ProfileRow, Report, ServeReport, SimReport,
-    StrategyRow, TableSet, TrainReport,
+    BaselineReport, BaselineRow, FleetReport, Format, PlanCompareReport,
+    PlanPoint, PlanReport, ProfileReport, ProfileRow, Report, ServeReport,
+    SimReport, StrategyRow, TableSet, TrainReport,
 };
 
 use std::path::Path;
@@ -47,7 +47,7 @@ use crate::platform::pricing::{C5_9XLARGE, R7_2XLARGE};
 use crate::platform::{MemStore, PlatformSpec};
 use crate::replan::{
     even_groups, identity_groups, observe_step, DriftDetector,
-    MeasuredProfile, ReplanEvent, ReplanSpec, StageObservations,
+    MeasuredProfile, ReplanEvent, ReplanSpec, StageObs, StageObservations,
 };
 use crate::serve::{serve_plan, ServeOptions};
 use crate::trainer;
@@ -543,14 +543,24 @@ impl Experiment {
     /// when a measured re-plan wins back its migration cost over the
     /// remaining steps — migrate to the new plan at a function-
     /// generation boundary (quiesce, layer-addressed checkpoint,
-    /// re-partition, restore, continue). Every re-plan decision is
-    /// recorded in the report, adopted or not.
+    /// re-partition, restore, continue). The detector RE-ARMS after
+    /// every adopted migration, so one run can chain g0 → g1 → g2 …
+    /// up to `spec.max_replans` migrations (`--replan-max`, default 4).
+    /// Every re-plan decision is recorded in the report, adopted or not;
+    /// a rejected re-plan ends the chain (the run stays on its current
+    /// plan — re-triggering on the same sustained drift would just
+    /// re-reject).
     ///
-    /// The whole decision is a pure function of `(config, artifact,
-    /// scenario, seed, spec)`: the observations the detector consumes
-    /// are the deterministic lens draws, so the trigger step and the
-    /// adoption verdict are computed *before* any training runs and the
-    /// same invocation replays byte-identically.
+    /// The whole decision chain is a pure function of `(config,
+    /// artifact, scenario, seed, spec)`: the observations the detector
+    /// consumes are the deterministic lens draws (static per-worker
+    /// draws plus the per-step time-varying stretch of lenses like
+    /// `bandwidth-decay` and `cold-start-storm`), so every trigger step
+    /// and adoption verdict is computed *before* any training runs and
+    /// the same invocation replays byte-identically. Under purely
+    /// static lenses a chain terminates after one migration: the
+    /// calibrated tick subsumes the static stretch, so generation ≥ 1
+    /// only drifts when a time-varying lens keeps stretching.
     pub fn train_replan(
         &self,
         artifact: Option<&PlanArtifact>,
@@ -571,152 +581,247 @@ impl Experiment {
             .context("scenario runs tick on the virtual clock")?;
         let manifest = crate::runtime::Manifest::load(&tc0.artifacts_dir)?;
         let n_rt = manifest.n_stages;
-        let groups0 = identity_groups(n_rt);
-        let injector0 = crate::scenario::Injector::new(
-            &tc0.scenario,
-            tc0.scenario_seed,
-            n_rt * tc0.dp,
-        );
-        let tick0 = injector0.max_iter_virtual_s(base0);
+        let total = tc0.steps;
 
-        // Drift pre-pass: the observations are the same pure function
-        // of the injector the coordinator records, so the trigger step
-        // falls out without running a single training step.
-        let mut obs =
-            StageObservations::new(groups0, n_rt, spec.window, base0);
-        let mut detector = DriftDetector::new(spec);
-        let mut trigger_step = None;
-        for step in 0..tc0.steps {
-            let (stage_obs, gated, bw) =
-                observe_step(&injector0, obs.groups(), tc0.dp, base0);
-            obs.push_step(stage_obs, gated, bw);
-            if detector.observe(obs.ewma_iter_s(), base0) {
-                trigger_step = Some(step);
+        // Per-generation state. `g_base` is the prediction drift is
+        // measured against: the plan's tick for generation 0, the
+        // calibrated tick afterwards (which already subsumes the static
+        // lens stretch — only time-varying drift can re-trigger).
+        let mut g_groups = identity_groups(n_rt);
+        let mut g_n_groups = n_rt;
+        let mut g_dp = tc0.dp;
+        let mut g_mu = tc0.mu;
+        let mut g_base = base0;
+        let mut g_tick = base0; // trainer tick of the current generation
+        let mut g_cold = tc0.cold_start_s;
+        let mut g_plan = self.equivalent_plan(artifact, n_rt, tc0.dp);
+        let mut step = 0usize;
+        let mut adopted_count = 0usize;
+        let mut events: Vec<ReplanEvent> = Vec::new();
+        let mut segments: Vec<trainer::TrainConfig> = Vec::new();
+
+        // Build one trainer segment covering [start, end) on the
+        // current generation; generation 0 keeps tc0's shape and
+        // records the observation ring, later generations run on the
+        // calibrated tick.
+        let seg = |start: usize,
+                   end: usize,
+                   migrate_out: bool,
+                   gen: usize,
+                   groups: &[(usize, usize)],
+                   dp: usize,
+                   mu: usize,
+                   tick: f64,
+                   cold: f64,
+                   tc0: &trainer::TrainConfig,
+                   window: usize| {
+            let mut tc = tc0.clone();
+            tc.steps = end - start;
+            tc.step_offset = start;
+            tc.migrate_out = migrate_out;
+            if gen == 0 {
+                tc.observe = Some(window);
+            } else {
+                tc.dp = dp;
+                tc.mu = mu;
+                tc.plan_generation = gen as u64;
+                tc.layer_groups = groups.to_vec();
+                tc.calibrated_tick = true;
+                tc.virtual_iter_s = Some(tick);
+                tc.cold_start_s = cold;
+                tc.observe = None;
+            }
+            tc
+        };
+
+        loop {
+            // Drift pre-pass for the current generation: the
+            // observations are the same pure function of the injector
+            // the coordinator records, so the trigger step falls out
+            // without running a single training step. A fresh detector
+            // per generation is what re-arms the chain.
+            let n_workers = g_n_groups * g_dp;
+            let injector = crate::scenario::Injector::new(
+                &tc0.scenario,
+                tc0.scenario_seed,
+                n_workers,
+            );
+            let mut obs = StageObservations::new(
+                g_groups.clone(),
+                n_rt,
+                spec.window,
+                g_base,
+            );
+            let mut detector = DriftDetector::new(spec);
+            let mut trigger_step = None;
+            for s in step..total {
+                let (tv_mult, extra_s) =
+                    injector.step_stretch(0, n_workers, s);
+                if adopted_count == 0 {
+                    let (stage_obs, gated, bw) =
+                        observe_step(&injector, obs.groups(), g_dp, g_base);
+                    obs.push_step(stage_obs, gated * tv_mult + extra_s, bw);
+                } else {
+                    // generation ≥ 1: the calibrated tick subsumes the
+                    // static draws; only the time-varying stretch is
+                    // observed, attributed uniformly across stages
+                    let t = (g_base * tv_mult + extra_s)
+                        / g_n_groups.max(1) as f64;
+                    let stage_obs = (0..g_n_groups)
+                        .map(|_| StageObs {
+                            fwd_s: t / 3.0,
+                            bwd_s: 2.0 * t / 3.0,
+                            sync_s: 0.0,
+                        })
+                        .collect();
+                    obs.push_step(stage_obs, g_base * tv_mult + extra_s, 1.0);
+                }
+                if detector.observe(obs.ewma_iter_s(), g_base) {
+                    trigger_step = Some(s);
+                    break;
+                }
+            }
+            let Some(trigger) = trigger_step else {
+                // no sustained drift: the generation runs to completion
+                segments.push(seg(
+                    step, total, false, adopted_count, &g_groups, g_dp,
+                    g_mu, g_tick, g_cold, &tc0, spec.window,
+                ));
+                break;
+            };
+
+            // Re-plan under the measured overlay and calibrate the new
+            // tick against the observed pace: tick' = pace × t̂(new)/
+            // t̂(old), where t̂ is the overlay-evaluated model and pace
+            // is the EWMA at the trigger (under static lenses exactly
+            // the lens-stretched tick) — the lens stretch is subsumed
+            // by the measured multipliers, so the ratio transfers the
+            // observation onto the new plan.
+            let pace = obs.ewma_iter_s();
+            let profile = MeasuredProfile::from_observations(
+                &obs,
+                self.model.n_layers(),
+                adopted_count as u64 + 1,
+            );
+            let perf = self.perf_model().with_overlay(profile.clone());
+            let t_old = perf.evaluate(&g_plan).t_iter;
+            ensure!(
+                t_old.is_finite() && t_old > 0.0,
+                "overlay evaluation of the running plan degenerated ({t_old})"
+            );
+            let outcomes = race(&perf, &self.plan_request(), &STRATEGIES)?;
+            let (strategy, cand) = best_candidate(&outcomes).context(
+                "re-planning found no feasible plan under the measured profile",
+            )?;
+            let plan1 = cand.plan.clone();
+            let tick1 = pace * (cand.perf.t_iter / t_old);
+            ensure!(
+                tick1.is_finite() && tick1 > 0.0,
+                "calibrated re-plan tick degenerated ({tick1})"
+            );
+
+            // Migration cost: the new generation's workers all
+            // cold-start (worst worker gates, same virtual-clock
+            // arithmetic the trainer charges).
+            let n_groups1 = plan1.n_stages().min(n_rt);
+            let (dp1, mu1) = (plan1.dp, plan1.mu());
+            let cold1 = plan1
+                .stage_tiers
+                .iter()
+                .map(|&t| self.platform.tier(t).cold_start_s)
+                .fold(self.platform.cold_start_s, f64::max);
+            let injector1 = crate::scenario::Injector::new(
+                &tc0.scenario,
+                tc0.scenario_seed,
+                n_groups1 * dp1,
+            );
+            let migration_s = (0..n_groups1 * dp1)
+                .map(|w| {
+                    injector1.cold_start_s(w, adopted_count as u32, cold1)
+                })
+                .fold(0.0, f64::max);
+
+            let boundary = trigger + 1;
+            let rem = total - boundary;
+            let adopted =
+                tick1 * rem as f64 + migration_s < pace * rem as f64;
+            events.push(ReplanEvent {
+                trigger_step: trigger,
+                observed_iter_s: pace,
+                predicted_iter_s: g_base,
+                stage_mults: obs.stage_mults(),
+                old_stages: g_n_groups,
+                old_dp: g_dp,
+                old_mu: g_mu,
+                new_stages: n_groups1,
+                new_dp: dp1,
+                new_mu: mu1,
+                strategy: strategy.to_string(),
+                new_iter_s: tick1,
+                migration_s,
+                adopted,
+            });
+
+            if !adopted {
+                // the decision is recorded but the chain ends — wall
+                // clock identical to the generation running statically
+                segments.push(seg(
+                    step, total, false, adopted_count, &g_groups, g_dp,
+                    g_mu, g_tick, g_cold, &tc0, spec.window,
+                ));
+                break;
+            }
+
+            // Adopted: the current generation quiesces at the boundary
+            // into layer-addressed migration shards; the next one
+            // restores them and continues on the calibrated tick.
+            segments.push(seg(
+                step, boundary, true, adopted_count, &g_groups, g_dp,
+                g_mu, g_tick, g_cold, &tc0, spec.window,
+            ));
+            adopted_count += 1;
+            step = boundary;
+            g_plan = plan1;
+            g_groups = even_groups(n_rt, n_groups1);
+            g_n_groups = n_groups1;
+            g_dp = dp1;
+            g_mu = mu1;
+            g_base = tick1;
+            g_tick = tick1;
+            g_cold = cold1;
+            if adopted_count >= spec.max_replans {
+                // cap reached: the final generation runs out the
+                // remaining steps un-observed
+                segments.push(seg(
+                    step, total, false, adopted_count, &g_groups, g_dp,
+                    g_mu, g_tick, g_cold, &tc0, spec.window,
+                ));
                 break;
             }
         }
-        let Some(trigger) = trigger_step else {
-            // no sustained drift: the run IS the static run (observed,
-            // so the report still carries the ring)
-            let mut tc = tc0.clone();
-            tc.observe = Some(spec.window);
-            let raw = trainer::train(&tc)?;
-            let mut report = TrainReport::from_raw(&tc0, raw);
-            report.replan_enabled = true;
-            return Ok(report);
+
+        // Execute the segments: a single segment is a plain (observed)
+        // run; a chain shares one store so the layer-addressed shards
+        // carry the parameters across every migration boundary.
+        let raw = if segments.len() == 1 {
+            trainer::train(&segments[0])?
+        } else {
+            let store = Arc::new(MemStore::new());
+            let mut raw =
+                trainer::train_with_store(&segments[0], store.clone())?;
+            for tc in &segments[1..] {
+                let raw_b = trainer::train_with_store(tc, store.clone())?;
+                raw.logs.extend(raw_b.logs);
+                raw.restarts += raw_b.restarts;
+                raw.wall_s += raw_b.wall_s;
+                raw.workers.extend(raw_b.workers);
+            }
+            raw.store_put_gets = store.stats();
+            raw
         };
-
-        // Re-plan under the measured overlay and calibrate the new tick
-        // against the observed one: tick1 = tick0 × t̂(new)/t̂(old),
-        // where t̂ is the overlay-evaluated model — the lens stretch is
-        // subsumed by the measured multipliers, so the ratio transfers
-        // the observation onto the new plan.
-        let profile =
-            MeasuredProfile::from_observations(&obs, self.model.n_layers(), 1);
-        let perf = self.perf_model().with_overlay(profile.clone());
-        let old_plan = self.equivalent_plan(artifact, n_rt, tc0.dp);
-        let t_old = perf.evaluate(&old_plan).t_iter;
-        ensure!(
-            t_old.is_finite() && t_old > 0.0,
-            "overlay evaluation of the running plan degenerated ({t_old})"
-        );
-        let outcomes = race(&perf, &self.plan_request(), &STRATEGIES)?;
-        let (strategy, cand) = best_candidate(&outcomes).context(
-            "re-planning found no feasible plan under the measured profile",
-        )?;
-        let plan1 = cand.plan.clone();
-        let tick1 = tick0 * (cand.perf.t_iter / t_old);
-        ensure!(
-            tick1.is_finite() && tick1 > 0.0,
-            "calibrated re-plan tick degenerated ({tick1})"
-        );
-
-        // Migration cost: the new generation's workers all cold-start
-        // (worst worker gates, same virtual-clock arithmetic the
-        // trainer charges).
-        let n_groups1 = plan1.n_stages().min(n_rt);
-        let (dp1, mu1) = (plan1.dp, plan1.mu());
-        let cold1 = plan1
-            .stage_tiers
-            .iter()
-            .map(|&t| self.platform.tier(t).cold_start_s)
-            .fold(self.platform.cold_start_s, f64::max);
-        let injector1 = crate::scenario::Injector::new(
-            &tc0.scenario,
-            tc0.scenario_seed,
-            n_groups1 * dp1,
-        );
-        let migration_s = (0..n_groups1 * dp1)
-            .map(|w| injector1.cold_start_s(w, 0, cold1))
-            .fold(0.0, f64::max);
-
-        let seg_a_steps = trigger + 1;
-        let rem = tc0.steps - seg_a_steps;
-        let adopted =
-            tick1 * rem as f64 + migration_s < tick0 * rem as f64;
-        let event = ReplanEvent {
-            trigger_step: trigger,
-            observed_iter_s: obs.ewma_iter_s(),
-            predicted_iter_s: base0,
-            stage_mults: obs.stage_mults(),
-            old_stages: n_rt,
-            old_dp: tc0.dp,
-            old_mu: tc0.mu,
-            new_stages: n_groups1,
-            new_dp: dp1,
-            new_mu: mu1,
-            strategy: strategy.to_string(),
-            new_iter_s: tick1,
-            migration_s,
-            adopted,
-        };
-
-        if !adopted {
-            // the decision is recorded but the run stays static — wall
-            // clock identical to a plain `train` of the same session
-            let mut tc = tc0.clone();
-            tc.observe = Some(spec.window);
-            let raw = trainer::train(&tc)?;
-            let mut report = TrainReport::from_raw(&tc0, raw);
-            report.replan_enabled = true;
-            report.replan = vec![event];
-            return Ok(report);
-        }
-
-        // Segment A: the old plan up to the boundary, quiescing into
-        // layer-addressed migration shards. Segment B: the new plan
-        // over the remaining steps, restoring (and consuming) those
-        // shards, on the calibrated tick. One shared store carries the
-        // parameters across.
-        let store = Arc::new(MemStore::new());
-        let mut tc_a = tc0.clone();
-        tc_a.steps = seg_a_steps;
-        tc_a.migrate_out = true;
-        tc_a.observe = Some(spec.window);
-        let mut raw = trainer::train_with_store(&tc_a, store.clone())?;
-
-        let mut tc_b = tc0.clone();
-        tc_b.dp = dp1;
-        tc_b.mu = mu1;
-        tc_b.steps = rem;
-        tc_b.step_offset = seg_a_steps;
-        tc_b.plan_generation = 1;
-        tc_b.layer_groups = even_groups(n_rt, n_groups1);
-        tc_b.calibrated_tick = true;
-        tc_b.virtual_iter_s = Some(tick1);
-        tc_b.cold_start_s = cold1;
-        tc_b.migrate_out = false;
-        tc_b.observe = None;
-        let raw_b = trainer::train_with_store(&tc_b, store.clone())?;
-
-        raw.logs.extend(raw_b.logs);
-        raw.restarts += raw_b.restarts;
-        raw.wall_s += raw_b.wall_s;
-        raw.workers.extend(raw_b.workers);
-        raw.store_put_gets = store.stats();
         let mut report = TrainReport::from_raw(&tc0, raw);
         report.replan_enabled = true;
-        report.replan = vec![event];
+        report.replan = events;
         Ok(report)
     }
 
@@ -783,6 +888,26 @@ impl Experiment {
             batch_cap: artifact.plan.mu().max(1),
             outcome,
         })
+    }
+
+    /// Run a multi-tenant fleet: every tenant's frozen plan (training
+    /// jobs and serving deployments alike) executes against ONE shared
+    /// simulated platform on a single virtual clock — FIFO admission
+    /// against `max_concurrency`, cross-tenant storage-bandwidth
+    /// contention, per-tenant cost/throughput accounting. Associated
+    /// function rather than a method: each tenant carries its own
+    /// embedded session config, which [`fleet::run`](crate::fleet::run)
+    /// re-resolves per tenant (the platform must agree across tenants).
+    /// The run is a pure function of `(spec, scenario, seed)` and the
+    /// report renders byte-identically across sessions
+    /// (`tests/fleet_replay.rs` and a CI `cmp` pin this).
+    pub fn fleet(
+        spec: &crate::fleet::FleetSpec,
+        scenario: &crate::simcore::ScenarioSpec,
+        seed: u64,
+    ) -> Result<FleetReport> {
+        let outcome = crate::fleet::run(spec, scenario, seed)?;
+        Ok(FleetReport { outcome })
     }
 
     /// Profile the AOT stages through PJRT (§3.1 step 3). When the

@@ -9,6 +9,7 @@ use anyhow::{bail, Result};
 
 use crate::baselines::BaselineResult;
 use crate::coordinator::WorkerStats;
+use crate::fleet::FleetOutcome;
 use crate::model::Plan;
 use crate::pipeline::{rel_err_pct, SimResult};
 use crate::planner::{
@@ -1241,6 +1242,125 @@ impl Report for ServeReport {
                                 ("utilization", Json::Num(s.utilization)),
                                 ("busy_s", Json::Num(s.busy_s)),
                                 ("alive_s", Json::Num(s.alive_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fleet
+// ---------------------------------------------------------------------------
+
+/// Result of [`Experiment::fleet`](super::Experiment::fleet): one
+/// multi-tenant run of several frozen plans against a shared platform.
+/// Carries NO wall-clock values — every number derives from the shared
+/// virtual clock and the seeded scenario streams, so the same
+/// (fleet config, scenario, seed) renders byte-identically
+/// (`tests/fleet_replay.rs` and a CI `cmp` pin this).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetReport {
+    /// The scheduler's raw accounting.
+    pub outcome: FleetOutcome,
+}
+
+impl Report for FleetReport {
+    fn to_tables(&self) -> Vec<Table> {
+        let o = &self.outcome;
+        let mut t = Table::new(format!(
+            "fleet — {} tenants on {} [{} seed={}]",
+            o.tenants.len(),
+            o.platform,
+            o.scenario,
+            o.seed
+        ))
+        .header(["metric", "value"]);
+        t.row([
+            "concurrency".to_string(),
+            format!("peak {} of {} workers", o.peak_workers, o.max_concurrency),
+        ]);
+        t.row([
+            "utilization".to_string(),
+            format!("{:.1}%", o.utilization * 100.0),
+        ]);
+        t.row([
+            "contention".to_string(),
+            format!("{:.3}x mean stretch", o.mean_contention),
+        ]);
+        t.row(["makespan".to_string(), secs(o.makespan_s)]);
+        t.row(["cost".to_string(), usd(o.total_cost_usd)]);
+        t.row(["admission order".to_string(), o.admissions.join(", ")]);
+        let mut tenants = Table::new("per-tenant accounting").header([
+            "tenant", "kind", "workers", "units", "submit", "wait", "busy",
+            "finish", "admits", "revokes", "contention", "cost",
+        ]);
+        for ten in &o.tenants {
+            tenants.row([
+                ten.name.clone(),
+                ten.kind.clone(),
+                ten.workers.to_string(),
+                ten.units.to_string(),
+                secs(ten.submit_s),
+                secs(ten.wait_s),
+                secs(ten.busy_s),
+                secs(ten.finish_s),
+                ten.admissions.to_string(),
+                ten.revocations.to_string(),
+                format!("{:.3}x", ten.mean_contention),
+                usd(ten.cost_usd),
+            ]);
+        }
+        vec![t, tenants]
+    }
+
+    fn to_json(&self) -> Json {
+        let o = &self.outcome;
+        Json::obj(vec![
+            ("platform", Json::str(o.platform.as_str())),
+            ("scenario", Json::str(o.scenario.as_str())),
+            ("seed", Json::Num(o.seed as f64)),
+            ("max_concurrency", Json::Num(o.max_concurrency as f64)),
+            ("peak_workers", Json::Num(o.peak_workers as f64)),
+            ("utilization", Json::Num(o.utilization)),
+            ("mean_contention", Json::Num(o.mean_contention)),
+            ("makespan_s", Json::Num(o.makespan_s)),
+            ("total_cost_usd", Json::Num(o.total_cost_usd)),
+            (
+                "admissions",
+                Json::Arr(
+                    o.admissions.iter().map(|n| Json::str(n.as_str())).collect(),
+                ),
+            ),
+            (
+                "tenants",
+                Json::Arr(
+                    o.tenants
+                        .iter()
+                        .map(|ten| {
+                            Json::obj(vec![
+                                ("name", Json::str(ten.name.as_str())),
+                                ("kind", Json::str(ten.kind.as_str())),
+                                ("workers", Json::Num(ten.workers as f64)),
+                                ("units", Json::Num(ten.units as f64)),
+                                ("submit_s", Json::Num(ten.submit_s)),
+                                ("admit_s", Json::Num(ten.admit_s)),
+                                ("wait_s", Json::Num(ten.wait_s)),
+                                ("busy_s", Json::Num(ten.busy_s)),
+                                ("finish_s", Json::Num(ten.finish_s)),
+                                ("admissions", Json::Num(ten.admissions as f64)),
+                                (
+                                    "revocations",
+                                    Json::Num(ten.revocations as f64),
+                                ),
+                                (
+                                    "mean_contention",
+                                    Json::Num(ten.mean_contention),
+                                ),
+                                ("cost_usd", Json::Num(ten.cost_usd)),
+                                ("units_per_s", Json::Num(ten.units_per_s)),
                             ])
                         })
                         .collect(),

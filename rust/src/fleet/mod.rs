@@ -1,0 +1,987 @@
+//! Fleet tier: multi-tenant scheduling over ONE shared simulated
+//! platform.
+//!
+//! FuncPipe sizes a single job against a platform's concurrency and
+//! bandwidth caps; real serverless platforms run many tenants at once,
+//! and characterization work ("Towards Demystifying Serverless ML
+//! Training") shows storage-bandwidth contention dominates exactly when
+//! jobs overlap. This module runs N *frozen* experiments — training
+//! jobs and MOPAR-style serving deployments, each a [`PlanArtifact`] +
+//! steps/traffic spec from one fleet config — against one shared
+//! [`PlatformSpec`] on a single virtual clock:
+//!
+//! * **Admission control** against `PlatformSpec::max_concurrency`
+//!   (optionally shrunk to a reserved pool via the fleet config's
+//!   `max_concurrency`): a tenant whose worker count exceeds the
+//!   remaining headroom waits in a FIFO queue (head-blocking — a big
+//!   job at the head is never starved by small jobs behind it). Ties
+//!   break deterministically by `(submit_s, config order)`. A tenant
+//!   that could never admit even on an empty platform is a hard config
+//!   error, not an infinite wait (see [`FleetSpec::validate`]).
+//! * **Cross-tenant storage contention**: every tenant's transfers run
+//!   through the platform's one shared bandwidth model —
+//!   [`PlatformSpec::effective_bandwidth`] evaluated at the *fleet's*
+//!   total active worker count, not the tenant's own. The
+//!   communication share of each unit stretches by
+//!   `eff(tier, own) / eff(tier, total_active)` (≥ 1, monotone in the
+//!   number of co-running workers), so two concurrent tenants each
+//!   observe at most the solo tenant's effective bandwidth.
+//! * **Per-tenant accounting** rolled into a typed
+//!   [`FleetReport`](crate::experiment::FleetReport): $ (GB-seconds
+//!   actually held × platform price), wall clock, wait-in-queue,
+//!   revocation count — plus platform-level peak concurrency,
+//!   worker-second utilization and mean contention.
+//!
+//! The time-varying scenario lenses (`bandwidth-decay`,
+//! `cold-start-storm`, `spot-revocation`) drive the fleet through the
+//! [`Injector`]'s per-step methods: every draw is a pure function of
+//! the `(tenant, worker, step)` coordinate (plus seed and lens tag),
+//! so draws are consumed in strict (tenant, worker, step) order no
+//! matter how the scheduler interleaves tenants, and a `fleet` run
+//! replays byte-identically. Static lenses compose: each tenant views
+//! them through its own tenant-mixed stream, and `cold-start-storm` in
+//! particular draws its step window from the seed *alone*, so the
+//! burst hits all tenants in the same window (that is the
+//! correlation).
+//!
+//! Execution model (deliberately coarser than the per-op `simcore`
+//! DES): a training tenant is a sequence of `steps` units of its
+//! plan's predicted `t_iter`, split into compute and communication by
+//! the perf model's own breakdown (`(flush_s + sync_s) / t_iter`); a
+//! serving tenant replays its deployment *solo* once (the existing
+//! byte-deterministic [`serve_plan`] path, static lenses composed) and
+//! then occupies its replayed peak instance count for its makespan,
+//! sliced into 1 s units with a fixed activation hand-off share
+//! ([`ACT_HANDOFF_SHARE`]) charged to the shared store. Contention is
+//! sampled at each unit's dispatch. `spot-revocation` fires at unit
+//! granularity: the tenant releases its workers, re-enters the FIFO
+//! queue at the tail, pays a fresh (generation-keyed) cold start on
+//! re-admission and re-runs the interrupted unit — each `(tenant,
+//! unit)` coordinate revokes at most once, which bounds the chain and
+//! keeps the run terminating.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashSet, VecDeque};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::validate_seed;
+use crate::experiment::{Experiment, PlanArtifact};
+use crate::platform::PlatformSpec;
+use crate::scenario::Injector;
+use crate::serve::{serve_plan, ServeOptions, TrafficSpec};
+use crate::simcore::ScenarioSpec;
+use crate::util::json::Json;
+
+/// Length of one serving occupancy slice on the fleet clock, seconds.
+pub const SLICE_S: f64 = 1.0;
+
+/// Share of a serving slice charged to the shared store (activation
+/// hand-off between pipeline stages); the rest is stage compute, which
+/// cross-tenant storage contention cannot stretch.
+pub const ACT_HANDOFF_SHARE: f64 = 0.25;
+
+/// Default arrival horizon of a serving tenant, seconds.
+pub const DEFAULT_SERVE_DURATION_S: f64 = 30.0;
+
+/// What a tenant runs: a fixed-step training job or a traffic-driven
+/// serving deployment.
+#[derive(Debug, Clone)]
+pub enum TenantKind {
+    Train { steps: usize },
+    Serve { traffic: TrafficSpec, duration_s: f64, seed: u64 },
+}
+
+impl TenantKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TenantKind::Train { .. } => "train",
+            TenantKind::Serve { .. } => "serve",
+        }
+    }
+}
+
+/// One tenant of the fleet: a frozen plan plus its workload spec.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    pub kind: TenantKind,
+    pub artifact: PlanArtifact,
+    /// Virtual submission time, seconds. Admission is FIFO by
+    /// `(submit_s, config order)`.
+    pub submit_s: f64,
+}
+
+/// The whole fleet: every tenant shares one platform (cross-checked by
+/// [`FleetSpec::validate`]).
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub tenants: Vec<TenantSpec>,
+    /// Optional reserved-pool cap: admission control runs against
+    /// `min(platform.max_concurrency, pool)`. Real accounts rarely see
+    /// the platform's headline concurrency; this models a reserved
+    /// slice of it (and makes queueing observable in small fleets).
+    pub max_concurrency: Option<usize>,
+}
+
+const TENANT_KEYS: [&str; 8] = [
+    "name",
+    "kind",
+    "plan",
+    "steps",
+    "traffic",
+    "duration_s",
+    "seed",
+    "submit_s",
+];
+
+impl FleetSpec {
+    /// Parse a fleet config file: `{"tenants": [{"name": ..., "kind":
+    /// "train"|"serve", "plan": "plan.json", ...}]}`. Plan paths are
+    /// resolved relative to the working directory; unknown keys are
+    /// rejected like unknown CLI flags.
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing fleet config JSON")?;
+        j.check_keys(&["tenants", "max_concurrency"])
+            .context("fleet config")?;
+        let max_concurrency = match j.get("max_concurrency") {
+            None => None,
+            Some(v) => {
+                let n = v
+                    .as_f64()
+                    .context("fleet max_concurrency must be a number")?;
+                if n < 1.0 || n.fract() != 0.0 {
+                    bail!(
+                        "fleet max_concurrency must be a positive integer (got {n})"
+                    );
+                }
+                Some(n as usize)
+            }
+        };
+        let raw = j.field_arr("tenants").context("fleet config")?;
+        if raw.is_empty() {
+            bail!("fleet config has no tenants");
+        }
+        let mut tenants = Vec::with_capacity(raw.len());
+        for (i, tj) in raw.iter().enumerate() {
+            tenants.push(
+                Self::tenant_from_json(tj)
+                    .with_context(|| format!("fleet tenant #{i}"))?,
+            );
+        }
+        Ok(Self { tenants, max_concurrency })
+    }
+
+    fn tenant_from_json(j: &Json) -> Result<TenantSpec> {
+        j.check_keys(&TENANT_KEYS)?;
+        let name = j.field_str("name")?.to_string();
+        let kind_s = j.field_str("kind")?;
+        let plan_path = j.field_str("plan")?;
+        let submit_s = match j.get("submit_s") {
+            None => 0.0,
+            Some(v) => v
+                .as_f64()
+                .context("fleet tenant submit_s must be a number")?,
+        };
+        let kind = match kind_s {
+            "train" => {
+                for k in ["traffic", "duration_s", "seed"] {
+                    if j.get(k).is_some() {
+                        bail!("fleet tenant {name:?}: {k:?} only applies to kind \"serve\"");
+                    }
+                }
+                TenantKind::Train { steps: j.field_usize("steps")? }
+            }
+            "serve" => {
+                if j.get("steps").is_some() {
+                    bail!(
+                        "fleet tenant {name:?}: \"steps\" only applies to kind \"train\""
+                    );
+                }
+                let traffic = TrafficSpec::parse(j.field_str("traffic")?)?;
+                let duration_s = match j.get("duration_s") {
+                    None => DEFAULT_SERVE_DURATION_S,
+                    Some(v) => v
+                        .as_f64()
+                        .context("fleet tenant duration_s must be a number")?,
+                };
+                let seed = match j.get("seed") {
+                    None => 0,
+                    Some(v) => {
+                        let s = v
+                            .as_f64()
+                            .context("fleet tenant seed must be a number")?;
+                        if s < 0.0 || s.fract() != 0.0 {
+                            bail!("fleet tenant {name:?}: seed must be a non-negative integer");
+                        }
+                        let s = s as u64;
+                        validate_seed(s)?;
+                        s
+                    }
+                };
+                TenantKind::Serve { traffic, duration_s, seed }
+            }
+            other => bail!(
+                "fleet tenant {name:?}: unknown kind {other:?} (expected \"train\" or \"serve\")"
+            ),
+        };
+        let artifact = PlanArtifact::load(plan_path)
+            .with_context(|| format!("fleet tenant {name:?}"))?;
+        Ok(TenantSpec { name, kind, artifact, submit_s })
+    }
+
+    /// Structural validation; returns the one shared [`PlatformSpec`].
+    ///
+    /// Beyond shape checks (non-empty fleet, unique non-empty names,
+    /// finite submit times, positive steps/durations, one platform
+    /// across all tenants), this is where the admission-control
+    /// truncation hazard is closed: a training tenant whose worker
+    /// count exceeds `max_concurrency` could never admit even on an
+    /// empty platform, so it is rejected here *by name* instead of
+    /// waiting in the queue forever. (Serving tenants get the same
+    /// check in [`run`], once their replayed peak concurrency is
+    /// known.)
+    pub fn validate(&self) -> Result<PlatformSpec> {
+        if self.tenants.is_empty() {
+            bail!("fleet config has no tenants");
+        }
+        let mut seen = HashSet::new();
+        for t in &self.tenants {
+            if t.name.is_empty() {
+                bail!("fleet tenant with empty name");
+            }
+            if !seen.insert(t.name.as_str()) {
+                bail!("duplicate fleet tenant name {:?}", t.name);
+            }
+            if !t.submit_s.is_finite() || t.submit_s < 0.0 {
+                bail!(
+                    "fleet tenant {:?}: submit_s must be finite and >= 0 (got {})",
+                    t.name,
+                    t.submit_s
+                );
+            }
+            match &t.kind {
+                TenantKind::Train { steps } => {
+                    if *steps == 0 {
+                        bail!("fleet tenant {:?}: steps must be >= 1", t.name);
+                    }
+                }
+                TenantKind::Serve { duration_s, .. } => {
+                    if !duration_s.is_finite() || *duration_s <= 0.0 {
+                        bail!(
+                            "fleet tenant {:?}: duration_s must be finite and > 0 (got {duration_s})",
+                            t.name
+                        );
+                    }
+                }
+            }
+        }
+        let mut platform = self.tenants[0]
+            .artifact
+            .config
+            .resolve_platform()
+            .with_context(|| {
+                format!("fleet tenant {:?}", self.tenants[0].name)
+            })?;
+        if let Some(pool) = self.max_concurrency {
+            if pool == 0 {
+                bail!("fleet max_concurrency must be >= 1");
+            }
+            // A reserved pool can only shrink the platform's cap.
+            platform.max_concurrency = platform.max_concurrency.min(pool);
+        }
+        for t in &self.tenants[1..] {
+            let p = t
+                .resolve_platform()
+                .with_context(|| format!("fleet tenant {:?}", t.name))?;
+            if p.name != platform.name {
+                bail!(
+                    "fleet tenants disagree on the platform: {:?} runs on {} but {:?} runs on {}",
+                    self.tenants[0].name,
+                    platform.name,
+                    t.name,
+                    p.name
+                );
+            }
+        }
+        for t in &self.tenants {
+            if let TenantKind::Train { .. } = t.kind {
+                let workers = t.artifact.plan.n_workers();
+                check_admittable(&t.name, workers, &platform)?;
+            }
+        }
+        Ok(platform)
+    }
+}
+
+impl TenantSpec {
+    fn resolve_platform(&self) -> Result<PlatformSpec> {
+        self.artifact.config.resolve_platform()
+    }
+}
+
+/// The satellite-2 hard error: never-admittable tenants are config
+/// errors naming the tenant, not an infinite queue wait.
+fn check_admittable(
+    name: &str,
+    workers: usize,
+    platform: &PlatformSpec,
+) -> Result<()> {
+    if workers > platform.max_concurrency {
+        bail!(
+            "fleet tenant {name:?} needs {workers} concurrent workers but platform {} admits at most {} — it could never leave the admission queue",
+            platform.name,
+            platform.max_concurrency
+        );
+    }
+    Ok(())
+}
+
+/// One tenant's accounting after a fleet run. Every value lives on the
+/// virtual clock (no wall-clock anywhere), so the whole outcome is a
+/// pure function of `(spec, scenario, seed)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantOutcome {
+    pub name: String,
+    /// `"train"` or `"serve"`.
+    pub kind: String,
+    /// Concurrent workers the tenant holds while admitted (plan workers
+    /// for training; replayed peak instances for serving).
+    pub workers: usize,
+    /// Scheduling units: training steps, or 1 s serving slices.
+    pub units: usize,
+    pub submit_s: f64,
+    /// First admission time.
+    pub admit_s: f64,
+    /// Total time spent in the admission queue (including re-queues
+    /// after revocations).
+    pub wait_s: f64,
+    /// Time actually holding workers (billed time).
+    pub busy_s: f64,
+    pub finish_s: f64,
+    /// Admissions granted (1 + re-admissions after revocations).
+    pub admissions: usize,
+    /// `spot-revocation` hits that forced a queued re-admission.
+    pub revocations: usize,
+    /// Mean communication stretch from cross-tenant bandwidth sharing
+    /// (≥ 1; exactly 1 when the tenant only ever ran alone).
+    pub mean_contention: f64,
+    /// GB-seconds held × platform price (serving: the solo replay's
+    /// cost scaled to the time actually held).
+    pub cost_usd: f64,
+    /// Units completed per busy second.
+    pub units_per_s: f64,
+}
+
+/// Raw numbers of one fleet run; the typed
+/// [`FleetReport`](crate::experiment::FleetReport) renders these.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetOutcome {
+    pub platform: String,
+    pub scenario: String,
+    pub seed: u64,
+    pub max_concurrency: usize,
+    /// High-water mark of simultaneously admitted workers.
+    pub peak_workers: usize,
+    /// Worker-seconds held / (makespan × max_concurrency).
+    pub utilization: f64,
+    /// Dispatch-weighted mean contention stretch across all tenants.
+    pub mean_contention: f64,
+    /// First submission to last completion, seconds.
+    pub makespan_s: f64,
+    pub total_cost_usd: f64,
+    /// Every admission grant in order (re-admissions repeat the name) —
+    /// the FIFO audit trail the replay tests pin.
+    pub admissions: Vec<String>,
+    /// Per-tenant accounting, in config order.
+    pub tenants: Vec<TenantOutcome>,
+}
+
+// ---- the scheduler ------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Ev {
+    /// Tenant `i` reaches the admission queue.
+    Submit(usize),
+    /// Tenant `i`'s in-flight unit completes.
+    UnitDone(usize),
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Scheduled {
+    t: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for Scheduled {}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .partial_cmp(&other.t)
+            .expect("event times are never NaN")
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Per-tenant runtime state, derived once at prepare time.
+struct TenantRt {
+    name: String,
+    kind: &'static str,
+    workers: usize,
+    units: usize,
+    submit_s: f64,
+    /// Base seconds of one unit: the plan's `t_iter` (training) or the
+    /// slice length (serving; the last slice is the remainder).
+    unit_base: UnitBase,
+    /// Communication share of a unit — the part shared contention and
+    /// `bandwidth-decay` stretch.
+    comm_frac: f64,
+    /// The plan's bandwidth-bottleneck tier (smallest `bandwidth_bps`
+    /// among its stage tiers) — where shared contention is evaluated.
+    tier: usize,
+    /// Worst-worker static lens stretch (straggler/jitter), from this
+    /// tenant's own tenant-mixed stream.
+    static_mult: f64,
+    /// $ per busy second.
+    cost_per_s: f64,
+    /// This tenant's static-lens injector (generation-keyed cold-start
+    /// draws for admissions and re-admissions).
+    injector: Injector,
+    // -- dynamic state --
+    next_unit: usize,
+    admitted: bool,
+    enqueue_t: f64,
+    admit_t: f64,
+    wait_s: f64,
+    busy_s: f64,
+    finish_t: f64,
+    admissions: usize,
+    revocations: usize,
+    revoked_units: HashSet<usize>,
+    pending_cold: bool,
+    contention_sum: f64,
+    dispatches: usize,
+}
+
+enum UnitBase {
+    Train { t_iter: f64 },
+    Serve { makespan_s: f64 },
+}
+
+impl TenantRt {
+    fn unit_s(&self, unit: usize) -> f64 {
+        match self.unit_base {
+            UnitBase::Train { t_iter } => t_iter,
+            UnitBase::Serve { makespan_s } => {
+                if unit + 1 < self.units {
+                    SLICE_S
+                } else {
+                    (makespan_s - (self.units - 1) as f64 * SLICE_S).max(0.0)
+                }
+            }
+        }
+    }
+
+    /// Cold-start seconds of admission number `generation` (0-based):
+    /// the worst worker's generation-keyed draw over the platform base.
+    fn cold_s(&self, generation: u32, base_s: f64) -> f64 {
+        (0..self.workers)
+            .map(|w| self.injector.cold_start_s(w, generation, base_s))
+            .fold(base_s, f64::max)
+    }
+}
+
+/// Mix a tenant index into a static-lens stream so concurrent tenants
+/// draw distinct straggler/jitter/cold-start patterns while one
+/// tenant's draws stay independent of every other tenant's existence.
+fn tenant_seed(seed: u64, tenant: usize) -> u64 {
+    seed ^ (tenant as u64).wrapping_mul(0xA24B_AED4_963E_E407)
+}
+
+struct FleetSim {
+    platform: PlatformSpec,
+    /// The fleet-level injector: per-step time-varying draws keyed on
+    /// the full (tenant, worker, step) coordinate, and the seed-only
+    /// storm window shared by every tenant.
+    injector: Injector,
+    tenants: Vec<TenantRt>,
+    heap: BinaryHeap<Reverse<Scheduled>>,
+    queue: VecDeque<usize>,
+    now: f64,
+    seq: u64,
+    active: usize,
+    peak: usize,
+    /// ∫ active dt, for the utilization figure.
+    area: f64,
+    last_t: f64,
+    admissions: Vec<String>,
+}
+
+impl FleetSim {
+    fn push(&mut self, t: f64, ev: Ev) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Scheduled { t, seq, ev }));
+    }
+
+    fn accrue(&mut self) {
+        self.area += self.active as f64 * (self.now - self.last_t);
+        self.last_t = self.now;
+    }
+
+    fn release(&mut self, i: usize) {
+        self.accrue();
+        self.active -= self.tenants[i].workers;
+    }
+
+    /// Dispatch tenant `i`'s next unit. Returns `false` when
+    /// `spot-revocation` fires instead: the tenant has released its
+    /// workers and re-entered the queue at the tail.
+    fn dispatch(&mut self, i: usize) -> bool {
+        let unit = self.tenants[i].next_unit;
+        let workers = self.tenants[i].workers;
+        let revoked = !self.tenants[i].revoked_units.contains(&unit)
+            && (0..workers).any(|w| self.injector.step_revoked(i, w, unit));
+        if revoked {
+            let now = self.now;
+            self.release(i);
+            let t = &mut self.tenants[i];
+            t.revoked_units.insert(unit);
+            t.revocations += 1;
+            t.pending_cold = true;
+            t.enqueue_t = now;
+            self.queue.push_back(i);
+            return false;
+        }
+        let eff_solo = self.platform.effective_bandwidth(
+            self.tenants[i].tier,
+            workers,
+        );
+        let eff_shared = self
+            .platform
+            .effective_bandwidth(self.tenants[i].tier, self.active);
+        let contention = if eff_shared > 0.0 && eff_solo.is_finite() {
+            (eff_solo / eff_shared).max(1.0)
+        } else {
+            1.0
+        };
+        let (tv_mult, storm_extra) = self.injector.step_stretch(i, workers, unit);
+        let base_cold = self.platform.cold_start_s;
+        let t = &mut self.tenants[i];
+        let base = t.unit_s(unit);
+        let mut d = base
+            * t.static_mult
+            * ((1.0 - t.comm_frac) + t.comm_frac * contention * tv_mult)
+            + storm_extra;
+        if t.pending_cold {
+            t.pending_cold = false;
+            d += t.cold_s(t.admissions.saturating_sub(1) as u32, base_cold);
+        }
+        t.busy_s += d;
+        t.contention_sum += contention;
+        t.dispatches += 1;
+        let due = self.now + d;
+        self.push(due, Ev::UnitDone(i));
+        true
+    }
+
+    /// Admit from the queue head while headroom lasts — strict FIFO
+    /// with head-blocking.
+    fn try_admit(&mut self) {
+        while let Some(&head) = self.queue.front() {
+            let workers = self.tenants[head].workers;
+            if self.active + workers > self.platform.max_concurrency {
+                break;
+            }
+            self.queue.pop_front();
+            self.accrue();
+            self.active += workers;
+            self.peak = self.peak.max(self.active);
+            let now = self.now;
+            let t = &mut self.tenants[head];
+            t.wait_s += now - t.enqueue_t;
+            if !t.admitted {
+                t.admitted = true;
+                t.admit_t = now;
+            }
+            t.admissions += 1;
+            t.pending_cold = true;
+            self.admissions.push(self.tenants[head].name.clone());
+            // the first unit may itself be revoked, in which case the
+            // tenant is already back at the queue tail — keep admitting
+            // either way
+            self.dispatch(head);
+        }
+    }
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::Submit(i) => {
+                self.tenants[i].enqueue_t = self.now;
+                self.queue.push_back(i);
+            }
+            Ev::UnitDone(i) => {
+                self.tenants[i].next_unit += 1;
+                if self.tenants[i].next_unit >= self.tenants[i].units {
+                    self.tenants[i].finish_t = self.now;
+                    self.release(i);
+                } else {
+                    self.dispatch(i);
+                }
+            }
+        }
+    }
+}
+
+/// Run the fleet: a pure function of `(spec, scenario, seed)` — same
+/// inputs, byte-identical [`FleetOutcome`].
+pub fn run(
+    spec: &FleetSpec,
+    scenario: &ScenarioSpec,
+    seed: u64,
+) -> Result<FleetOutcome> {
+    validate_seed(seed)?;
+    let platform = spec.validate()?;
+    let mut tenants = Vec::with_capacity(spec.tenants.len());
+    for (i, ts) in spec.tenants.iter().enumerate() {
+        tenants.push(
+            prepare_tenant(ts, i, &platform, scenario, seed)
+                .with_context(|| format!("fleet tenant {:?}", ts.name))?,
+        );
+    }
+    let mut sim = FleetSim {
+        platform,
+        injector: Injector::new(scenario, seed, 0),
+        tenants,
+        heap: BinaryHeap::new(),
+        queue: VecDeque::new(),
+        now: 0.0,
+        seq: 0,
+        active: 0,
+        peak: 0,
+        area: 0.0,
+        last_t: 0.0,
+        admissions: Vec::new(),
+    };
+    for i in 0..sim.tenants.len() {
+        let at = sim.tenants[i].submit_s;
+        sim.push(at, Ev::Submit(i));
+    }
+    while let Some(Reverse(sch)) = sim.heap.pop() {
+        sim.now = sch.t;
+        sim.handle(sch.ev);
+        sim.try_admit();
+    }
+    debug_assert!(sim.queue.is_empty(), "queued tenants at drain");
+    debug_assert_eq!(sim.active, 0, "active workers at drain");
+
+    let makespan_s = sim.tenants.iter().map(|t| t.finish_t).fold(0.0, f64::max);
+    let denom = makespan_s * sim.platform.max_concurrency as f64;
+    let utilization = if denom > 0.0 { sim.area / denom } else { 0.0 };
+    let (mut contention_sum, mut dispatches) = (0.0, 0usize);
+    let mut total_cost_usd = 0.0;
+    let outcomes = sim
+        .tenants
+        .iter()
+        .map(|t| {
+            contention_sum += t.contention_sum;
+            dispatches += t.dispatches;
+            let cost_usd = t.cost_per_s * t.busy_s;
+            total_cost_usd += cost_usd;
+            TenantOutcome {
+                name: t.name.clone(),
+                kind: t.kind.to_string(),
+                workers: t.workers,
+                units: t.units,
+                submit_s: t.submit_s,
+                admit_s: t.admit_t,
+                wait_s: t.wait_s,
+                busy_s: t.busy_s,
+                finish_s: t.finish_t,
+                admissions: t.admissions,
+                revocations: t.revocations,
+                mean_contention: if t.dispatches > 0 {
+                    t.contention_sum / t.dispatches as f64
+                } else {
+                    1.0
+                },
+                cost_usd,
+                units_per_s: if t.busy_s > 0.0 {
+                    t.units as f64 / t.busy_s
+                } else {
+                    0.0
+                },
+            }
+        })
+        .collect();
+    Ok(FleetOutcome {
+        platform: sim.platform.name.clone(),
+        scenario: scenario.name(),
+        seed,
+        max_concurrency: sim.platform.max_concurrency,
+        peak_workers: sim.peak,
+        utilization,
+        mean_contention: if dispatches > 0 {
+            contention_sum / dispatches as f64
+        } else {
+            1.0
+        },
+        makespan_s,
+        total_cost_usd,
+        admissions: sim.admissions,
+        tenants: outcomes,
+    })
+}
+
+/// Derive a tenant's runtime invariants: perf-model breakdown for
+/// training, one solo serving replay for serving, static-lens stretch
+/// and the per-tenant injector.
+fn prepare_tenant(
+    ts: &TenantSpec,
+    idx: usize,
+    platform: &PlatformSpec,
+    scenario: &ScenarioSpec,
+    seed: u64,
+) -> Result<TenantRt> {
+    let exp = Experiment::from_artifact(&ts.artifact)?;
+    let perf = exp.perf_model();
+    let plan = &ts.artifact.plan;
+    // bandwidth bottleneck: the stage tier with the smallest link
+    let tier = plan
+        .stage_tiers
+        .iter()
+        .copied()
+        .min_by(|&a, &b| {
+            platform.tiers[a]
+                .bandwidth_bps
+                .partial_cmp(&platform.tiers[b].bandwidth_bps)
+                .expect("tier bandwidths are never NaN")
+        })
+        .unwrap_or(0);
+    let (workers, units, unit_base, comm_frac, cost_per_s) = match &ts.kind {
+        TenantKind::Train { steps } => {
+            let pp = perf.evaluate(plan);
+            if !pp.t_iter.is_finite() || pp.t_iter <= 0.0 {
+                bail!("plan evaluates to a non-positive iteration time");
+            }
+            let comm_frac =
+                ((pp.flush_s + pp.sync_s) / pp.t_iter).clamp(0.0, 1.0);
+            (
+                plan.n_workers(),
+                *steps,
+                UnitBase::Train { t_iter: pp.t_iter },
+                comm_frac,
+                pp.total_mem_gb * platform.price_per_gb_s,
+            )
+        }
+        TenantKind::Serve { traffic, duration_s, seed: serve_seed } => {
+            let mut opts = ServeOptions::new(traffic.clone(), *serve_seed);
+            opts.duration_s = *duration_s;
+            opts.scenario = scenario.clone();
+            let solo = serve_plan(&perf, plan, &opts)?;
+            let workers = solo
+                .stages
+                .iter()
+                .map(|s| s.peak_instances)
+                .sum::<usize>()
+                .max(1);
+            let units = (solo.makespan_s / SLICE_S).ceil().max(1.0) as usize;
+            let cost_per_s = if solo.makespan_s > 0.0 {
+                solo.cost_usd / solo.makespan_s
+            } else {
+                0.0
+            };
+            (
+                workers,
+                units,
+                UnitBase::Serve { makespan_s: solo.makespan_s },
+                ACT_HANDOFF_SHARE,
+                cost_per_s,
+            )
+        }
+    };
+    check_admittable(&ts.name, workers, platform)?;
+    let injector = Injector::new(scenario, tenant_seed(seed, idx), workers);
+    let static_mult = injector.max_iter_virtual_s(1.0);
+    Ok(TenantRt {
+        name: ts.name.clone(),
+        kind: ts.kind.as_str(),
+        workers,
+        units,
+        submit_s: ts.submit_s,
+        unit_base,
+        comm_frac,
+        tier,
+        static_mult,
+        cost_per_s,
+        injector,
+        next_unit: 0,
+        admitted: false,
+        enqueue_t: 0.0,
+        admit_t: 0.0,
+        wait_s: 0.0,
+        busy_s: 0.0,
+        finish_t: 0.0,
+        admissions: 0,
+        revocations: 0,
+        revoked_units: HashSet::new(),
+        pending_cold: false,
+        contention_sum: 0.0,
+        dispatches: 0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::model::Plan;
+
+    fn artifact_with_dp(dp: usize) -> PlanArtifact {
+        let cfg = ExperimentConfig::default();
+        let plan = Plan::data_parallel(dp, 0, 2 * dp);
+        PlanArtifact::new(cfg, plan, (1.0, 0.0), 1.0, 0.001, "bnb")
+    }
+
+    fn train_tenant(name: &str, dp: usize) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            kind: TenantKind::Train { steps: 4 },
+            artifact: artifact_with_dp(dp),
+            submit_s: 0.0,
+        }
+    }
+
+    fn fleet_of(tenants: Vec<TenantSpec>) -> FleetSpec {
+        FleetSpec { tenants, max_concurrency: None }
+    }
+
+    #[test]
+    fn validate_rejects_never_admittable_tenant_by_name() {
+        // aws-lambda admits 1000 concurrent functions; a dp=2000 plan
+        // could never leave the queue
+        let spec = fleet_of(vec![
+            train_tenant("ok", 2),
+            train_tenant("whale", 2000),
+        ]);
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("whale"), "{err}");
+        assert!(err.contains("1000"), "{err}");
+        assert!(!err.contains("\"ok\""), "{err}");
+        // the small fleet passes
+        fleet_of(vec![train_tenant("ok", 2)]).validate().unwrap();
+    }
+
+    #[test]
+    fn pool_override_shrinks_admission_cap() {
+        // a dp=8 tenant fits aws-lambda (1000) but not a 4-worker pool
+        let mut spec = fleet_of(vec![train_tenant("pooled", 8)]);
+        spec.max_concurrency = Some(4);
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("pooled"), "{err}");
+        assert!(err.contains("at most 4"), "{err}");
+        // a pool larger than the platform cap is clamped, not an error
+        spec.max_concurrency = Some(5000);
+        let p = spec.validate().unwrap();
+        assert_eq!(p.max_concurrency, 1000);
+    }
+
+    #[test]
+    fn validate_rejects_shape_errors() {
+        assert!(fleet_of(vec![]).validate().is_err());
+        let dup = fleet_of(vec![train_tenant("a", 1), train_tenant("a", 1)]);
+        assert!(dup.validate().unwrap_err().to_string().contains("duplicate"));
+        let mut bad_submit = train_tenant("a", 1);
+        bad_submit.submit_s = -1.0;
+        assert!(fleet_of(vec![bad_submit]).validate().is_err());
+        let mut zero_steps = train_tenant("a", 1);
+        zero_steps.kind = TenantKind::Train { steps: 0 };
+        assert!(fleet_of(vec![zero_steps]).validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_platform_mismatch() {
+        let mut other = train_tenant("b", 1);
+        other.artifact.config.platform = "alibaba".to_string();
+        let spec = fleet_of(vec![train_tenant("a", 1), other]);
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("disagree"), "{err}");
+    }
+
+    #[test]
+    fn config_parsing_is_strict() {
+        // unknown root key
+        assert!(FleetSpec::from_json_text(r#"{"tenant": []}"#).is_err());
+        // degenerate pool cap
+        assert!(FleetSpec::from_json_text(
+            r#"{"max_concurrency": 0, "tenants": []}"#
+        )
+        .is_err());
+        assert!(FleetSpec::from_json_text(
+            r#"{"max_concurrency": 2.5, "tenants": []}"#
+        )
+        .is_err());
+        // empty fleet
+        assert!(FleetSpec::from_json_text(r#"{"tenants": []}"#).is_err());
+        // unknown tenant key fails before any file I/O
+        let err = FleetSpec::from_json_text(
+            r#"{"tenants": [{"name": "a", "kind": "train",
+                "plan": "nope.json", "steps": 2, "stepz": 3}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("stepz"), "{err}");
+        // serve-only keys are rejected on a train tenant
+        let err = FleetSpec::from_json_text(
+            r#"{"tenants": [{"name": "a", "kind": "train",
+                "plan": "nope.json", "steps": 2, "traffic": "poisson:60"}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("traffic"), "{err}");
+        // unknown kind
+        let err = FleetSpec::from_json_text(
+            r#"{"tenants": [{"name": "a", "kind": "batch",
+                "plan": "nope.json"}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("batch"), "{err}");
+    }
+
+    #[test]
+    fn scheduled_orders_by_time_then_seq() {
+        let a = Scheduled { t: 1.0, seq: 5, ev: Ev::Submit(0) };
+        let b = Scheduled { t: 1.0, seq: 6, ev: Ev::Submit(1) };
+        let c = Scheduled { t: 0.5, seq: 9, ev: Ev::Submit(2) };
+        assert!(c < a && a < b);
+        let mut heap = BinaryHeap::new();
+        for s in [a, b, c] {
+            heap.push(Reverse(s));
+        }
+        assert_eq!(heap.pop().unwrap().0.ev, Ev::Submit(2));
+        assert_eq!(heap.pop().unwrap().0.ev, Ev::Submit(0));
+        assert_eq!(heap.pop().unwrap().0.ev, Ev::Submit(1));
+    }
+
+    #[test]
+    fn tenant_seed_mixing_separates_tenants() {
+        assert_ne!(tenant_seed(7, 0), tenant_seed(7, 1));
+        assert_eq!(tenant_seed(7, 0), 7);
+        assert_ne!(tenant_seed(7, 2), tenant_seed(8, 2));
+    }
+}

@@ -32,6 +32,7 @@ pub mod config;
 pub mod coordinator;
 pub mod exec;
 pub mod experiment;
+pub mod fleet;
 pub mod model;
 pub mod pipeline;
 pub mod planner;

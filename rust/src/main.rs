@@ -8,6 +8,9 @@
 //!              dp/μ/chunking (flags remain as explicit overrides)
 //!   serve    — replay a frozen plan as a pipelined serving deployment
 //!              under a seeded arrival trace (`--plan` + `--traffic`)
+//!   fleet    — run a multi-tenant roster of frozen plans (train and
+//!              serve tenants) against ONE shared platform with FIFO
+//!              admission and bandwidth contention (`--config`)
 //!   profile  — profile the AOT stages through PJRT
 //!   baseline — evaluate the §5.1 baselines
 //!   fig      — regenerate a paper figure/table (fig1 fig5 ... table3)
@@ -59,6 +62,7 @@ fn run() -> Result<()> {
         "simulate" => cmd_simulate(&flags, format),
         "train" => cmd_train(&flags, format),
         "serve" => cmd_serve(&flags, format),
+        "fleet" => cmd_fleet(&flags, format),
         "profile" => cmd_profile(&flags, format),
         "baseline" => cmd_baseline(&flags, format),
         _ => unreachable!("flags_for gated the command set"),
@@ -78,11 +82,12 @@ the unified config flags (--config file.json --model <name>
 --merge-layers <n> --merge-criterion compute|params|activations
 --sync pipelined|scatter-reduce --bandwidth-scale <x>
 --dp-options 1,2,4 --chunk-bytes <n> --chunks-in-flight <n>
---steps <n> --lr <x> --lifetime <s> --artifacts <dir>); simulate and
-train add the scenario lens (--scenario
-deterministic|cold-start|straggler|bandwidth-jitter|flaky-network,
-composable as e.g. cold-start+jitter, --seed <n>); profile takes just
---artifacts, fig just --format. Unknown flags are errors.
+--steps <n> --lr <x> --lifetime <s> --artifacts <dir>); simulate,
+train and fleet add the scenario lens (--scenario
+deterministic|cold-start|straggler|bandwidth-jitter|flaky-network
+|bandwidth-decay|cold-start-storm|spot-revocation, composable as e.g.
+cold-start+jitter, --seed <n>); profile takes just --artifacts, fig
+just --format. Unknown flags are errors.
 
 COMMANDS:
   plan      [--strategy bnb|miqp|bayes|tpdmp|sweep|all] [--out plan.json]
@@ -111,6 +116,7 @@ COMMANDS:
   train     [--plan plan.json] [--dp n] [--mu n]
             [--scenario <name>] [--seed <n>]
             [--replan] [--replan-threshold x] [--replan-window k]
+            [--replan-max n]
             real end-to-end training over the AOT artifacts (or the
             built-in model: --artifacts builtin:tiny); --plan derives
             dp/μ/sync/chunking from the artifact, flags are explicit
@@ -124,8 +130,11 @@ COMMANDS:
             (default 3), the planner re-races under the measured
             profile and — if the new plan wins back its migration
             cost — the run migrates at a function-generation boundary
-            via layer-addressed checkpoints (requires a --scenario;
-            the report logs every re-plan decision)
+            via layer-addressed checkpoints; the detector re-arms
+            after every adopted migration, chaining up to
+            --replan-max migrations (default 4) when a time-varying
+            lens keeps drifting (requires a --scenario; the report
+            logs every re-plan decision)
   serve     --plan plan.json --traffic <spec> [--seed <n>]
             [--duration <s>] [--batch-window-ms <ms>]
             [--idle-timeout-s <s>] [--max-instances <n>]
@@ -138,11 +147,22 @@ COMMANDS:
             latency, throughput, cold-start rate, per-stage
             utilization and $/1k-requests, byte-identical per
             (plan, traffic, seed)
+  fleet     --config fleet.json [--scenario <name>] [--seed <n>]
+            run a multi-tenant roster (train jobs and serve
+            deployments, each a frozen plan artifact) against ONE
+            shared platform on a single virtual clock: FIFO admission
+            against max_concurrency, cross-tenant storage-bandwidth
+            contention, per-tenant cost/wait/throughput accounting;
+            the time-varying lenses (bandwidth-decay,
+            cold-start-storm, spot-revocation) draw per
+            (tenant, worker, step) and replay byte-identically
   profile   [--artifacts dir]
             profile AOT stages through PJRT
   baseline  evaluate LambdaML / HybridPS (+GA) baselines
-  fig       <fig1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table3>
-            regenerate a paper figure/table (also: cargo bench)
+  fig       <fig1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table3|fleet>
+            regenerate a paper figure/table (also: cargo bench);
+            `fleet` is the multi-tenant demo roster, no paper
+            counterpart
 
 The plan artifact closes the paper's §3.1 loop in one file, and one
 frozen plan replays under both engines through an identical lens:
@@ -263,6 +283,26 @@ fn cmd_serve(flags: &HashMap<String, String>, format: Format) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fleet(flags: &HashMap<String, String>, format: Format) -> Result<()> {
+    // config-file-driven: the roster file names every tenant's frozen
+    // plan artifact; the scenario lens and seed stay CLI-selectable so
+    // one roster replays under many conditions
+    let Some(path) = flags.get("config") else {
+        bail!(
+            "fleet requires --config fleet.json (a tenant roster; see \
+             the README quickstart and examples/fleet.json)"
+        );
+    };
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading fleet config {path}"))?;
+    let spec = funcpipe::fleet::FleetSpec::from_json_text(&text)
+        .with_context(|| format!("fleet config {path}"))?;
+    let (scenario, seed) = cli::scenario_from_flags(flags)?;
+    let report = Experiment::fleet(&spec, &scenario, seed)?;
+    report.print(format);
+    Ok(())
+}
+
 fn cmd_profile(flags: &HashMap<String, String>, format: Format) -> Result<()> {
     let mut cfg = funcpipe::config::ExperimentConfig::default();
     if let Some(dir) = flags.get("artifacts") {
@@ -290,7 +330,7 @@ fn cmd_fig(args: &[String]) -> Result<()> {
     if which.is_empty() || which.starts_with("--") {
         bail!(
             "missing figure id (usage: funcpipe fig \
-             <fig1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table3> \
+             <fig1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table3|fleet> \
              [--format table|json])"
         );
     }
@@ -307,6 +347,7 @@ fn cmd_fig(args: &[String]) -> Result<()> {
         "fig10" => funcpipe::bench::fig10(),
         "fig11" => funcpipe::bench::fig11(),
         "table3" => funcpipe::bench::table3(),
+        "fleet" => funcpipe::bench::fleet_demo(),
         other => bail!("unknown figure {other:?}"),
     };
     TableSet(tables).print(format);

@@ -29,7 +29,7 @@ use crate::scenario::Injector;
 pub const EWMA_ALPHA: f64 = 0.5;
 
 /// User-facing re-planning knobs (`train --replan --replan-threshold
-/// --replan-window`).
+/// --replan-window --replan-max`).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ReplanSpec {
     /// Drift trigger ratio: re-plan when the EWMA of the observed
@@ -38,11 +38,18 @@ pub struct ReplanSpec {
     /// Consecutive drifting steps required before triggering (K), and
     /// the capacity of the observation ring.
     pub window: usize,
+    /// Maximum number of migrations in one run: the [`DriftDetector`]
+    /// re-arms after each adopted migration, so checkpoint generations
+    /// can chain `g0 → g1 → g2 …` up to this cap. Static lenses drift
+    /// once and stabilize on the calibrated tick (one boundary); the
+    /// time-varying lenses can keep drifting, which is what the cap
+    /// bounds.
+    pub max_replans: usize,
 }
 
 impl Default for ReplanSpec {
     fn default() -> Self {
-        Self { threshold: 1.2, window: 3 }
+        Self { threshold: 1.2, window: 3, max_replans: 4 }
     }
 }
 
@@ -56,6 +63,9 @@ impl ReplanSpec {
         }
         if self.window == 0 {
             bail!("--replan-window must be >= 1");
+        }
+        if self.max_replans == 0 {
+            bail!("--replan-max must be >= 1");
         }
         Ok(())
     }
@@ -403,7 +413,7 @@ mod tests {
 
     #[test]
     fn detector_requires_sustained_drift() {
-        let spec = ReplanSpec { threshold: 1.2, window: 3 };
+        let spec = ReplanSpec { threshold: 1.2, window: 3, max_replans: 4 };
         let mut det = DriftDetector::new(&spec);
         assert!(!det.observe(1.5, 1.0));
         assert!(!det.observe(1.5, 1.0));
@@ -493,11 +503,12 @@ mod tests {
     #[test]
     fn replan_spec_validation() {
         assert!(ReplanSpec::default().validate().is_ok());
-        assert!(ReplanSpec { threshold: 1.0, window: 3 }.validate().is_err());
-        assert!(ReplanSpec { threshold: f64::NAN, window: 3 }
-            .validate()
-            .is_err());
-        assert!(ReplanSpec { threshold: 1.5, window: 0 }.validate().is_err());
+        assert_eq!(ReplanSpec::default().max_replans, 4);
+        let ok = ReplanSpec::default();
+        assert!(ReplanSpec { threshold: 1.0, ..ok }.validate().is_err());
+        assert!(ReplanSpec { threshold: f64::NAN, ..ok }.validate().is_err());
+        assert!(ReplanSpec { window: 0, ..ok }.validate().is_err());
+        assert!(ReplanSpec { max_replans: 0, ..ok }.validate().is_err());
     }
 
     #[test]

@@ -51,8 +51,9 @@ use anyhow::{bail, Result};
 
 use crate::platform::{ObjectStore, StoreFuture};
 use crate::simcore::{
-    cold_start_delays, straggler_factors, ScenarioModel, ScenarioSpec,
-    BANDWIDTH_JITTER_TAG, COLD_START_TAG, FLAKY_NETWORK_TAG,
+    cold_start_delays, decay_curve, straggler_factors, ScenarioModel,
+    ScenarioSpec, BANDWIDTH_DECAY_TAG, BANDWIDTH_JITTER_TAG, COLD_START_TAG,
+    COLD_START_STORM_TAG, FLAKY_NETWORK_TAG, SPOT_REVOCATION_TAG,
 };
 use crate::util::rng::Rng;
 
@@ -90,6 +91,32 @@ pub struct Injector {
     /// active: each worker's store handle drops `get_blocking` attempts
     /// with per-(worker, key) seeded decisions (see [`FlakyStore`]).
     flaky: Option<(f64, f64)>,
+    /// `(rate, floor)` when the `bandwidth-decay` component is active:
+    /// step `t`'s store bandwidth multiplier is `decay_curve(rate,
+    /// floor, t)` plus a seeded per-(tenant, worker, step) wobble.
+    decay: Option<(f64, f64)>,
+    /// `(start_step, end_step, mean_s)` when the `cold-start-storm`
+    /// component is active. The half-open step window `[start, end)` is
+    /// drawn at construction from the seed *alone*, so every tenant of
+    /// a fleet sees the identical storm window (that is the
+    /// correlation).
+    storm: Option<(usize, usize, f64)>,
+    /// Revocation probability when the `spot-revocation` component is
+    /// active: each (tenant, worker, step) is revoked independently.
+    revoke: Option<f64>,
+}
+
+/// Mix a `(tenant, worker, step)` coordinate into one stream key. The
+/// draws keyed off this are pure functions of the coordinate (plus the
+/// seed and the lens tag), so they are order-independent: any
+/// scheduler interleaving replays byte-identically, and the strict
+/// (tenant, worker, step) draw order of the fleet contract is
+/// trivially satisfied.
+fn step_key(tenant: usize, worker: usize, step: usize) -> u64 {
+    (tenant as u64)
+        .wrapping_mul(0xA24B_AED4_963E_E407)
+        ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ ((step as u64) << 21)
 }
 
 impl Injector {
@@ -101,6 +128,9 @@ impl Injector {
         let mut cold_gen0 = Vec::new();
         let mut cold_mean_s = None;
         let mut flaky = None;
+        let mut decay = None;
+        let mut storm = None;
+        let mut revoke = None;
         for component in spec.components() {
             match *component {
                 ScenarioModel::Deterministic => {}
@@ -140,9 +170,39 @@ impl Injector {
                         lens.compute_mult *= c;
                     }
                 }
+                ScenarioModel::BandwidthDecay { rate, floor } => {
+                    // no static per-worker lens: the multiplier is a
+                    // pure function of (seed, tenant, worker, step),
+                    // drawn lazily by step_bandwidth_mult
+                    decay = Some((rate, floor));
+                }
+                ScenarioModel::ColdStartStorm { mean_s } => {
+                    // the storm window depends on the seed alone —
+                    // NOT on n_workers or the tenant — so concurrent
+                    // tenants are hit by the same burst
+                    let mut rng = Rng::new(seed ^ COLD_START_STORM_TAG);
+                    let start = rng.index(32);
+                    let len = 4 + rng.index(8);
+                    storm = Some((start, start + len, mean_s));
+                }
+                ScenarioModel::SpotRevocation { prob } => {
+                    // per-(tenant, worker, step) decisions drawn lazily
+                    // by step_revoked
+                    revoke = Some(prob);
+                }
             }
         }
-        Self { spec: spec.clone(), seed, lenses, cold_gen0, cold_mean_s, flaky }
+        Self {
+            spec: spec.clone(),
+            seed,
+            lenses,
+            cold_gen0,
+            cold_mean_s,
+            flaky,
+            decay,
+            storm,
+            revoke,
+        }
     }
 
     /// An inactive injector (identity lenses, base cold starts only).
@@ -214,6 +274,95 @@ impl Injector {
     /// active.
     pub fn flaky(&self) -> Option<(f64, f64)> {
         self.flaky
+    }
+
+    /// Whether any per-*step* time-varying component is active
+    /// (`bandwidth-decay`, `cold-start-storm` or `spot-revocation`).
+    pub fn is_time_varying(&self) -> bool {
+        self.decay.is_some() || self.storm.is_some() || self.revoke.is_some()
+    }
+
+    /// The `cold-start-storm` step window `[start, end)`, when active.
+    /// A pure function of the seed — identical for every tenant.
+    pub fn storm_window(&self) -> Option<(usize, usize)> {
+        self.storm.map(|(lo, hi, _)| (lo, hi))
+    }
+
+    /// Store-bandwidth multiplier of virtual step `step` for `tenant`'s
+    /// `worker` under `bandwidth-decay`: the deterministic decay curve
+    /// times a small seeded wobble keyed on the full (tenant, worker,
+    /// step) coordinate. `1.0` when the component is inactive.
+    pub fn step_bandwidth_mult(
+        &self,
+        tenant: usize,
+        worker: usize,
+        step: usize,
+    ) -> f64 {
+        match self.decay {
+            None => 1.0,
+            Some((rate, floor)) => {
+                let key = step_key(tenant, worker, step) ^ BANDWIDTH_DECAY_TAG;
+                decay_curve(rate, floor, step)
+                    * Rng::new(self.seed ^ key).uniform(0.97, 1.0)
+            }
+        }
+    }
+
+    /// Extra start latency (seconds) `cold-start-storm` charges
+    /// `tenant`'s `worker` at virtual step `step`: an exponential draw
+    /// keyed on the full coordinate when the step falls inside the
+    /// seeded storm window, else `0.0`.
+    pub fn storm_extra_s(&self, tenant: usize, worker: usize, step: usize) -> f64 {
+        match self.storm {
+            None => 0.0,
+            Some((lo, hi, mean_s)) => {
+                if step < lo || step >= hi {
+                    return 0.0;
+                }
+                let key = step_key(tenant, worker, step) ^ COLD_START_STORM_TAG;
+                Rng::new(self.seed ^ key).exponential(1.0 / mean_s)
+            }
+        }
+    }
+
+    /// Whether `spot-revocation` revokes `tenant`'s `worker` at virtual
+    /// step `step` (a pure function of the coordinate). A revoked
+    /// tenant releases its workers and re-queues for admission.
+    pub fn step_revoked(&self, tenant: usize, worker: usize, step: usize) -> bool {
+        match self.revoke {
+            None => false,
+            Some(prob) => {
+                let key = step_key(tenant, worker, step) ^ SPOT_REVOCATION_TAG;
+                Rng::new(self.seed ^ key).chance(prob)
+            }
+        }
+    }
+
+    /// The slowest worker's time-varying iteration stretch at `step`:
+    /// the reciprocal of the worst per-step bandwidth multiplier across
+    /// `tenant`'s workers (a decayed store stretches the communication
+    /// the tick gates on), plus the worst storm delay as an additive
+    /// term. Returns `(mult, extra_s)` — `(1.0, 0.0)` when no
+    /// time-varying component is active.
+    pub fn step_stretch(
+        &self,
+        tenant: usize,
+        n_workers: usize,
+        step: usize,
+    ) -> (f64, f64) {
+        if !self.is_time_varying() {
+            return (1.0, 0.0);
+        }
+        let mut mult = 1.0f64;
+        let mut extra = 0.0f64;
+        for w in 0..n_workers {
+            let bw = self.step_bandwidth_mult(tenant, w, step);
+            if bw.is_finite() && bw > 0.0 {
+                mult = mult.max(1.0 / bw);
+            }
+            extra = extra.max(self.storm_extra_s(tenant, w, step));
+        }
+        (mult, extra)
     }
 }
 
@@ -558,6 +707,98 @@ mod tests {
         let d = drops.load(std::sync::atomic::Ordering::Relaxed);
         assert!(d > 0, "no drops at prob 0.3 over 100 keys");
         assert_eq!(retries.load(std::sync::atomic::Ordering::Relaxed), d);
+    }
+
+    #[test]
+    fn time_varying_draws_are_pure_functions_of_the_coordinate() {
+        let inj = Injector::new(
+            &spec("bandwidth-decay+cold-start-storm+spot-revocation"),
+            7,
+            4,
+        );
+        assert!(inj.is_time_varying());
+        // static lenses stay identity: time variation is per-step only
+        for w in 0..4 {
+            assert_eq!(inj.worker(w), WorkerLens::IDENTITY);
+        }
+        let again = Injector::new(
+            &spec("bandwidth-decay+cold-start-storm+spot-revocation"),
+            7,
+            4,
+        );
+        let (lo, hi) = inj.storm_window().unwrap();
+        assert_eq!(again.storm_window(), Some((lo, hi)));
+        assert!(lo < hi && hi <= 32 + 12);
+        for tenant in 0..3 {
+            for w in 0..4 {
+                for step in 0..40 {
+                    assert_eq!(
+                        inj.step_bandwidth_mult(tenant, w, step).to_bits(),
+                        again.step_bandwidth_mult(tenant, w, step).to_bits()
+                    );
+                    assert_eq!(
+                        inj.storm_extra_s(tenant, w, step).to_bits(),
+                        again.storm_extra_s(tenant, w, step).to_bits()
+                    );
+                    assert_eq!(
+                        inj.step_revoked(tenant, w, step),
+                        again.step_revoked(tenant, w, step)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bandwidth_decay_follows_the_curve_with_bounded_wobble() {
+        let inj = Injector::new(&spec("bandwidth-decay"), 3, 2);
+        for step in 0..120 {
+            let m = inj.step_bandwidth_mult(0, 0, step);
+            let base = crate::simcore::decay_curve(0.02, 0.3, step);
+            assert!(m <= base + 1e-12, "step {step}: {m} above the curve");
+            assert!(m >= 0.97 * base - 1e-12, "step {step}: wobble too deep");
+        }
+        // inactive components are exact identity, consuming no draws
+        let det = Injector::inactive(2);
+        assert_eq!(det.step_bandwidth_mult(0, 0, 5), 1.0);
+        assert_eq!(det.storm_extra_s(0, 0, 5), 0.0);
+        assert!(!det.step_revoked(0, 0, 5));
+        assert_eq!(det.step_stretch(0, 2, 5), (1.0, 0.0));
+    }
+
+    #[test]
+    fn storm_window_is_shared_but_draws_are_per_coordinate() {
+        let inj = Injector::new(&spec("cold-start-storm"), 11, 3);
+        let (lo, hi) = inj.storm_window().unwrap();
+        // outside the window: no charge, for any tenant
+        assert_eq!(inj.storm_extra_s(0, 0, hi), 0.0);
+        assert_eq!(inj.storm_extra_s(5, 2, hi + 3), 0.0);
+        // inside: every tenant pays, but with its own draw
+        let a = inj.storm_extra_s(0, 0, lo);
+        let b = inj.storm_extra_s(1, 0, lo);
+        assert!(a > 0.0 && b > 0.0);
+        assert_ne!(a.to_bits(), b.to_bits());
+        // a different n_workers does not move the window (seed-only)
+        let wide = Injector::new(&spec("cold-start-storm"), 11, 64);
+        assert_eq!(wide.storm_window(), Some((lo, hi)));
+    }
+
+    #[test]
+    fn spot_revocation_hits_some_but_not_all_coordinates() {
+        let inj = Injector::new(&spec("spot-revocation"), 7, 4);
+        let mut hits = 0;
+        let mut total = 0;
+        for tenant in 0..4 {
+            for w in 0..4 {
+                for step in 0..40 {
+                    total += 1;
+                    hits += usize::from(inj.step_revoked(tenant, w, step));
+                }
+            }
+        }
+        // prob 0.08 over 640 coordinates: all-or-nothing means a broken
+        // stream
+        assert!(hits > 0 && hits < total, "revocations {hits}/{total}");
     }
 
     #[test]

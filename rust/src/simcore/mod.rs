@@ -38,6 +38,8 @@ pub mod scenario;
 pub use engine::{allocate_rates, execute, execute_full, SimOutcome};
 pub use graph::{FlowGraph, Node, NodeId, OpKind, Resource};
 pub use scenario::{
-    cold_start_delays, straggler_factors, ScenarioModel, ScenarioSpec,
-    BANDWIDTH_JITTER_TAG, COLD_START_TAG, FLAKY_NETWORK_TAG, STRAGGLER_TAG,
+    cold_start_delays, decay_curve, straggler_factors, ScenarioModel,
+    ScenarioSpec, BANDWIDTH_DECAY_TAG, BANDWIDTH_JITTER_TAG, COLD_START_TAG,
+    COLD_START_STORM_TAG, DECAY_PROBE_STEP, FLAKY_NETWORK_TAG,
+    SPOT_REVOCATION_TAG, STRAGGLER_TAG,
 };

@@ -47,6 +47,31 @@ pub enum ScenarioModel {
     /// drop into the real trainer's store handle and the retry layer
     /// absorbs it (see [`Injector`](crate::scenario::Injector)).
     FlakyNetwork { prob: f64, timeout_s: f64 },
+    /// Time-varying: store bandwidth degrades over the virtual run —
+    /// step `t`'s multiplier is `max(floor, (1-rate)^t)` plus a small
+    /// seeded per-(tenant, worker, step) wobble
+    /// ([`Injector::step_bandwidth_mult`](crate::scenario::Injector::step_bandwidth_mult)).
+    /// A single-iteration graph has no step axis, so [`apply`] projects
+    /// the fixed probe step [`DECAY_PROBE_STEP`] onto every transfer
+    /// (with the per-worker wobble drawn in worker order).
+    ///
+    /// [`apply`]: ScenarioModel::apply
+    BandwidthDecay { rate: f64, floor: f64 },
+    /// Time-varying: a correlated cold-start storm. One seeded window
+    /// of steps (drawn from the seed alone, so every tenant of a fleet
+    /// sees the *same* window) during which each (tenant, worker, step)
+    /// draws `Exp(1/mean_s)` seconds of extra start latency. The graph
+    /// projection treats the whole iteration as inside the window and
+    /// delays every worker like `cold-start` does, from this lens's own
+    /// tagged stream.
+    ColdStartStorm { mean_s: f64 },
+    /// Time-varying: spot-style capacity revocation. Each (tenant,
+    /// worker, step) is revoked with probability `prob`
+    /// ([`Injector::step_revoked`](crate::scenario::Injector::step_revoked));
+    /// a revoked tenant loses its workers and re-queues for admission.
+    /// The graph projection delays each hit worker by a seeded restart
+    /// penalty, drawn in worker order.
+    SpotRevocation { prob: f64 },
 }
 
 /// Stream tags: each scenario draws from `Rng::new(seed ^ TAG)`. Shared
@@ -57,6 +82,23 @@ pub const COLD_START_TAG: u64 = 0xC01D_57A7;
 pub const STRAGGLER_TAG: u64 = 0x57A6_61E6;
 pub const BANDWIDTH_JITTER_TAG: u64 = 0xBA2D_317E;
 pub const FLAKY_NETWORK_TAG: u64 = 0xF1A2_4E71;
+pub const BANDWIDTH_DECAY_TAG: u64 = 0xDECA_BA2D;
+pub const COLD_START_STORM_TAG: u64 = 0x5702_C01D;
+pub const SPOT_REVOCATION_TAG: u64 = 0x5B07_4EF0;
+
+/// The step the `bandwidth-decay` graph projection probes: a
+/// single-iteration simulation has no step axis, so [`ScenarioModel::
+/// apply`] evaluates the decay curve at this fixed virtual step (chosen
+/// mid-run for the default 20-step training config).
+pub const DECAY_PROBE_STEP: usize = 10;
+
+/// The `bandwidth-decay` step multiplier every consumer shares: the
+/// deterministic decay curve `max(floor, (1-rate)^step)` — the seeded
+/// per-(tenant, worker, step) wobble lives in the injector, on top of
+/// this.
+pub fn decay_curve(rate: f64, floor: f64, step: usize) -> f64 {
+    (1.0 - rate).powi(step as i32).max(floor.clamp(0.0, 1.0))
+}
 
 /// The cold-start scenario's per-worker start delays, in worker-id
 /// order — the one stream both the simulator's graph perturbation and
@@ -101,6 +143,9 @@ impl ScenarioModel {
             ScenarioModel::Straggler { .. } => "straggler",
             ScenarioModel::BandwidthJitter { .. } => "bandwidth-jitter",
             ScenarioModel::FlakyNetwork { .. } => "flaky-network",
+            ScenarioModel::BandwidthDecay { .. } => "bandwidth-decay",
+            ScenarioModel::ColdStartStorm { .. } => "cold-start-storm",
+            ScenarioModel::SpotRevocation { .. } => "spot-revocation",
         }
     }
 
@@ -119,17 +164,29 @@ impl ScenarioModel {
             "flaky-network" => {
                 Some(ScenarioModel::FlakyNetwork { prob: 0.15, timeout_s: 0.5 })
             }
+            "bandwidth-decay" => {
+                Some(ScenarioModel::BandwidthDecay { rate: 0.02, floor: 0.3 })
+            }
+            "cold-start-storm" => {
+                Some(ScenarioModel::ColdStartStorm { mean_s: 2.0 })
+            }
+            "spot-revocation" => {
+                Some(ScenarioModel::SpotRevocation { prob: 0.08 })
+            }
             _ => None,
         }
     }
 
     /// Every accepted wire name (error messages, CLI help).
-    pub const NAMES: [&'static str; 5] = [
+    pub const NAMES: [&'static str; 8] = [
         "deterministic",
         "cold-start",
         "straggler",
         "bandwidth-jitter",
         "flaky-network",
+        "bandwidth-decay",
+        "cold-start-storm",
+        "spot-revocation",
     ];
 
     pub fn is_deterministic(&self) -> bool {
@@ -178,6 +235,46 @@ impl ScenarioModel {
                     }
                 }
             }
+            ScenarioModel::BandwidthDecay { rate, floor } => {
+                // single-iteration projection at the fixed probe step:
+                // one per-worker wobble draw in worker-id order, then
+                // every transfer of that worker is stretched by the
+                // reciprocal of its decayed bandwidth
+                let mut rng = Rng::new(seed ^ BANDWIDTH_DECAY_TAG);
+                let base = decay_curve(rate, floor, DECAY_PROBE_STEP);
+                let mults: Vec<f64> = (0..graph.n_workers())
+                    .map(|_| base * rng.uniform(0.97, 1.0))
+                    .collect();
+                for node in &mut graph.nodes {
+                    if node.kind == OpKind::Transfer {
+                        node.work /= mults[node.worker].max(1e-9);
+                    }
+                }
+            }
+            ScenarioModel::ColdStartStorm { mean_s } => {
+                // the whole projected iteration sits inside the storm
+                // window: every worker boots late, from this lens's own
+                // tagged stream (composes with plain cold-start)
+                let mut rng = Rng::new(seed ^ COLD_START_STORM_TAG);
+                for w in 0..graph.n_workers() {
+                    let d = rng.exponential(1.0 / mean_s);
+                    graph.delay_worker(w, d);
+                }
+            }
+            ScenarioModel::SpotRevocation { prob } => {
+                // per-worker hit draw in worker-id order; a revoked
+                // worker pays a seeded restart penalty before its ops
+                // run (both uniforms drawn unconditionally so the
+                // stream per worker is fixed, like `straggler`)
+                let mut rng = Rng::new(seed ^ SPOT_REVOCATION_TAG);
+                for w in 0..graph.n_workers() {
+                    let hit = rng.chance(prob);
+                    let penalty = rng.uniform(1.0, 3.0);
+                    if hit {
+                        graph.delay_worker(w, penalty);
+                    }
+                }
+            }
         }
     }
 }
@@ -215,6 +312,9 @@ impl ScenarioSpec {
             ScenarioModel::Straggler { .. } => 2,
             ScenarioModel::BandwidthJitter { .. } => 3,
             ScenarioModel::FlakyNetwork { .. } => 4,
+            ScenarioModel::BandwidthDecay { .. } => 5,
+            ScenarioModel::ColdStartStorm { .. } => 6,
+            ScenarioModel::SpotRevocation { .. } => 7,
         }
     }
 
@@ -290,7 +390,8 @@ impl ScenarioSpec {
 
     /// Human-readable list of accepted forms (error messages, help).
     pub const SYNTAX: &'static str =
-        "deterministic|cold-start|straggler|bandwidth-jitter|flaky-network, \
+        "deterministic|cold-start|straggler|bandwidth-jitter|flaky-network|\
+         bandwidth-decay|cold-start-storm|spot-revocation, \
          or a `+`-joined composite like cold-start+jitter";
 }
 
@@ -328,9 +429,15 @@ mod tests {
 
     #[test]
     fn same_seed_replays_bit_identically() {
-        for name in
-            ["cold-start", "straggler", "bandwidth-jitter", "flaky-network"]
-        {
+        for name in [
+            "cold-start",
+            "straggler",
+            "bandwidth-jitter",
+            "flaky-network",
+            "bandwidth-decay",
+            "cold-start-storm",
+            "spot-revocation",
+        ] {
             let s = ScenarioModel::parse(name).unwrap();
             let mut a = demo_graph();
             let mut b = demo_graph();
@@ -343,10 +450,17 @@ mod tests {
 
     #[test]
     fn different_seeds_differ() {
-        for name in ["cold-start", "straggler", "bandwidth-jitter"] {
-            // flaky-network is excluded here: its draws are discrete, so
-            // two seeds CAN coincide on a small demo graph (the larger
-            // pipeline replay tests cover its seed sensitivity)
+        for name in [
+            "cold-start",
+            "straggler",
+            "bandwidth-jitter",
+            "bandwidth-decay",
+            "cold-start-storm",
+        ] {
+            // flaky-network and spot-revocation are excluded here: their
+            // draws are discrete, so two seeds CAN coincide on a small
+            // demo graph (the larger replay tests cover seed
+            // sensitivity)
             let s = ScenarioModel::parse(name).unwrap();
             let mut a = demo_graph();
             let mut b = demo_graph();
@@ -500,6 +614,38 @@ mod tests {
         assert_eq!(
             execute(&composite).makespan.to_bits(),
             execute(&again).makespan.to_bits()
+        );
+    }
+
+    #[test]
+    fn decay_curve_is_monotone_and_floored() {
+        let mut prev = 1.0;
+        for step in 0..400 {
+            let m = decay_curve(0.02, 0.3, step);
+            assert!(m <= prev + 1e-12, "step {step}: {m} > {prev}");
+            assert!(m >= 0.3, "step {step}: {m} fell through the floor");
+            prev = m;
+        }
+        assert!((decay_curve(0.02, 0.3, 0) - 1.0).abs() < 1e-12);
+        // far past the knee the floor holds exactly
+        assert_eq!(decay_curve(0.02, 0.3, 399), 0.3);
+    }
+
+    #[test]
+    fn time_varying_lenses_compose_with_static_ones() {
+        let spec =
+            ScenarioSpec::parse("cold-start+bandwidth-decay+spot-revocation")
+                .unwrap();
+        assert_eq!(
+            spec.name(),
+            "cold-start+bandwidth-decay+spot-revocation"
+        );
+        assert_eq!(ScenarioSpec::parse(&spec.name()).unwrap(), spec);
+        // storm is a distinct lens from plain cold-start, and they mix
+        let storm = ScenarioSpec::parse("cold-start-storm+cold-start").unwrap();
+        assert_eq!(storm.name(), "cold-start+cold-start-storm");
+        assert!(
+            ScenarioSpec::parse("cold-start-storm+cold-start-storm").is_none()
         );
     }
 
